@@ -1,0 +1,52 @@
+//! GPS advisor: the Figure-1 guideline generator.
+//!
+//! Calibrates the predictor zoo on the three dataset emulators, sweeps a
+//! (skewness × interconnect-bandwidth) grid, and prints the decision map +
+//! prose guideline that Figure 1 of the paper summarises.
+//!
+//! Run: `cargo run --release --example gps_advisor [-- --fast]`
+
+use moe_gps::gps::{calibrate, guidelines, CalibrationOptions};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+use moe_gps::trace::datasets;
+use moe_gps::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["fast"]);
+    let model = ModelConfig::by_name(args.opt_or("model", "mixtral-8x7b"))?;
+    let opts = CalibrationOptions {
+        fast: args.flag("fast"),
+        ..Default::default()
+    };
+    // Overheads are priced per-system inside the sweep; calibrate the
+    // accuracies once on the reference system.
+    let reference = SystemSpec::four_a100_nvlink();
+    println!("calibrating predictor zoo on 3 dataset emulators...");
+    let cals: Vec<_> = datasets::all(args.opt_u64("seed", 7)?)
+        .into_iter()
+        .map(|spec| {
+            let c = calibrate(spec, &model, &reference, &opts);
+            println!(
+                "  {:<12} skew {:.2}  DOP err {:.2}%  TEP accuracies {:?}",
+                c.workload,
+                c.skewness,
+                c.dop_error * 100.0,
+                c.points
+                    .iter()
+                    .map(|p| (p.accuracy * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            );
+            c
+        })
+        .collect();
+
+    let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
+    let bandwidths =
+        args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0, 32.0])?;
+    let cells = guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512);
+    println!();
+    println!("{}", guidelines::render_map(&cells, &skews, &bandwidths));
+    println!("{}", guidelines::summarize(&cells));
+    Ok(())
+}

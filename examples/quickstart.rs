@@ -1,0 +1,52 @@
+//! Quickstart: the MoE-GPS core loop in ~40 lines.
+//!
+//! Simulates one Mixtral 8×7B layer on 4×A100/NVLink at the paper's main
+//! operating point (batch 1, seq 512, skew 1.4) and asks the framework
+//! which prediction strategy to use.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use moe_gps::gps::{self, calibrate, CalibrationOptions};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{LayerSim, SystemSpec};
+use moe_gps::trace::datasets;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+
+    // 1. Price the baseline (no prediction) at MMLU-like skewness.
+    let sim = LayerSim::new(model.clone(), system.clone());
+    let skew = 1.4;
+    let baseline = sim.breakdown(skew, Strategy::NoPrediction);
+    println!("baseline single-layer prefill latency @ skew {skew}:");
+    println!("{}", baseline.to_json().to_string_pretty());
+
+    // 2. Calibrate the predictor zoo on an MMLU-like trace (fast mode).
+    let opts = CalibrationOptions { fast: true, ..Default::default() };
+    let cal = calibrate(datasets::mmlu_like(7), &model, &system, &opts);
+    println!(
+        "\nMMLU-like calibration: skew {:.2}, DOP error {:.2}%",
+        cal.skewness,
+        cal.dop_error * 100.0
+    );
+
+    // 3. Compare strategies and print the recommendation.
+    let cmp = gps::strategy_savings(&model, &system, &[cal], skew, 1, 512);
+    println!(
+        "\nDistribution-Only saves {:.3} ms; best Token-to-Expert (acc {:.2}) saves {:.3} ms",
+        cmp.dop_saving_s * 1e3,
+        cmp.tep_best_accuracy,
+        cmp.tep_best_saving_s * 1e3,
+    );
+    let rec = gps::select::recommend(&cmp);
+    println!("MoE-GPS recommends: {}", rec.name());
+    let improvement = (cmp.dop_saving_s - cmp.tep_best_saving_s)
+        / (cmp.baseline_s - cmp.dop_saving_s);
+    println!(
+        "Distribution-Only end-to-end advantage over best Token-to-Expert: {:.1}%",
+        improvement * 100.0
+    );
+    Ok(())
+}

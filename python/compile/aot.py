@@ -1,0 +1,209 @@
+"""AOT compilation: lower every model piece to HLO **text** + pack weights.
+
+Run once by ``make artifacts``; the rust binary is self-contained after.
+
+Interchange format is HLO text, NOT ``lowered.compile()``/``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs (artifacts/):
+  manifest.json           artifact + weight index (shapes, offsets, dtypes)
+  weights.bin             all weights, little-endian f32, concatenated
+  embed.hlo.txt           (ids i32[1,S], embed f32[V,D]) -> x f32[S,D]
+  attention.hlo.txt       (x, ln, wq, wk, wv, wo) -> h (residual inside)
+  router.hlo.txt          (h, ln, w_router) -> (xn, logits)   [Pallas]
+  expert_ffn_b{N}.hlo.txt (xn[N,D], w_gate, w_up, w_down) -> out  [Pallas]
+  predictor.hlo.txt       (x0, w1, b1, head0..headL) -> logits [L,S,E]
+  oracle.json             reference inputs/outputs for rust integration
+                          tests (prefix values of each artifact's output
+                          plus the full-model forward).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(fn, *specs):
+    """Lower a jax function to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument(
+        "--predictor-steps", type=int, default=200,
+        help="Adam steps for the token-to-expert predictor",
+    )
+    parser.add_argument("--skip-predictor-training", action="store_true")
+    args = parser.parse_args()
+    cfg = M.TINY_CONFIG
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    d, s, v = cfg["d_model"], cfg["seq_len"], cfg["vocab_size"]
+    nh, nkv, hd = cfg["n_heads"], cfg["n_kv_heads"], cfg["head_dim"]
+    ff, e, n_layers = cfg["d_ff"], cfg["n_experts"], cfg["n_layers"]
+
+    print(f"[aot] initialising weights (seed {args.seed})")
+    weights = M.init_weights(seed=args.seed, cfg=cfg)
+
+    print("[aot] training token-to-expert predictor "
+          f"({args.predictor_steps} steps)")
+    if args.skip_predictor_training:
+        pweights, pred_acc = M.init_predictor_weights(cfg=cfg), 0.0
+    else:
+        pweights, pred_acc = M.train_predictor(
+            weights, steps=args.predictor_steps, cfg=cfg, verbose=True
+        )
+        print(f"[aot] predictor held-out top-1 accuracy: {pred_acc:.3f}")
+    weights.update(pweights)
+
+    artifacts = {}
+
+    def emit(name, fn, *specs):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = to_hlo_text(fn, *specs)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(sp.shape) for sp in specs],
+        }
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    # --- model pieces -----------------------------------------------------
+    emit("embed", M.embed_fn, i32((1, s)), f32((v, d)))
+    emit(
+        "attention",
+        lambda x, ln, wq, wk, wv, wo: M.attention_block_fn(
+            x, ln, wq, wk, wv, wo, cfg
+        ),
+        f32((s, d)), f32((d,)), f32((d, nh * hd)), f32((d, nkv * hd)),
+        f32((d, nkv * hd)), f32((nh * hd, d)),
+    )
+    emit(
+        "router",
+        M.router_block_fn,
+        f32((s, d)), f32((d,)), f32((d, e)),
+    )
+    for bucket in cfg["ffn_buckets"]:
+        emit(
+            f"expert_ffn_b{bucket}",
+            M.expert_ffn_fn,
+            f32((bucket, d)), f32((d, ff)), f32((d, ff)), f32((ff, d)),
+        )
+    emit(
+        "predictor",
+        M.predictor_fn,
+        f32((s, d)), f32((d, M.PREDICTOR_HIDDEN)), f32((M.PREDICTOR_HIDDEN,)),
+        *[f32((M.PREDICTOR_HIDDEN, e)) for _ in range(n_layers)],
+    )
+
+    # --- weights ----------------------------------------------------------
+    print("[aot] packing weights.bin")
+    manifest_weights = {}
+    offset = 0
+    with open(os.path.join(outdir, "weights.bin"), "wb") as f:
+        for name in sorted(weights.keys()):
+            arr = np.ascontiguousarray(weights[name], dtype="<f4")
+            f.write(arr.tobytes())
+            manifest_weights[name] = {
+                "offset": offset,
+                "shape": list(arr.shape),
+            }
+            offset += arr.nbytes
+    print(f"[aot] weights.bin: {offset / 1e6:.1f} MB, "
+          f"{len(manifest_weights)} tensors")
+
+    # --- oracle -----------------------------------------------------------
+    print("[aot] computing oracle outputs")
+    rng = np.random.default_rng(12345)
+    oracle_ids = rng.integers(0, v, size=(1, s)).astype(np.int32)
+    hidden, routes = M.model_forward_ref(jnp.array(oracle_ids), weights, cfg)
+    x0 = M.embed_fn(jnp.array(oracle_ids), jnp.array(weights["embed"]))
+    # Per-artifact probes (prefix of flattened outputs).
+    h_attn = M.attention_block_fn(
+        x0,
+        *(jnp.array(weights[f"layers.0.attn.{k}"]) for k in
+          ("ln", "wq", "wk", "wv", "wo")),
+        cfg,
+    )
+    xn, logits = M.router_block_fn(
+        h_attn,
+        jnp.array(weights["layers.0.moe.ln"]),
+        jnp.array(weights["layers.0.moe.router"]),
+    )
+    bucket0 = cfg["ffn_buckets"][0]
+    ffn_out = M.expert_ffn_fn(
+        xn[:bucket0],
+        jnp.array(weights["layers.0.experts.0.w_gate"]),
+        jnp.array(weights["layers.0.experts.0.w_up"]),
+        jnp.array(weights["layers.0.experts.0.w_down"]),
+    )
+    pred_logits = M.predictor_fn(
+        x0,
+        jnp.array(weights["predictor.w1"]),
+        jnp.array(weights["predictor.b1"]),
+        *[jnp.array(weights[f"predictor.head.{l}"]) for l in range(n_layers)],
+    )
+
+    def prefix(arr, n=16):
+        return [float(x) for x in np.asarray(arr).reshape(-1)[:n]]
+
+    oracle = {
+        "ids": oracle_ids[0].tolist(),
+        "embed_prefix": prefix(x0),
+        "attention_prefix": prefix(h_attn),
+        "router_xn_prefix": prefix(xn),
+        "router_logits_prefix": prefix(logits),
+        "expert_ffn_b%d_prefix" % bucket0: prefix(ffn_out),
+        "predictor_prefix": prefix(pred_logits),
+        "model_hidden_prefix": prefix(hidden),
+        "routes_layer0_first32": np.asarray(routes[0, :32, 0]).tolist(),
+        "predictor_accuracy": pred_acc,
+    }
+    with open(os.path.join(outdir, "oracle.json"), "w") as f:
+        json.dump(oracle, f, indent=1)
+
+    # --- manifest ---------------------------------------------------------
+    manifest = {
+        "config": cfg,
+        "predictor_hidden": M.PREDICTOR_HIDDEN,
+        "predictor_accuracy": pred_acc,
+        "artifacts": artifacts,
+        "weights": manifest_weights,
+        "weights_file": "weights.bin",
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written; done.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""Layer 1 — Pallas SwiGLU expert-FFN kernel.
+
+The compute hot-spot of the serving path: every routed token slice runs
+through one expert's SwiGLU FFN. The paper's systems run this as a CUDA
+GEMM pipeline; per DESIGN.md §Hardware-Adaptation we re-think it for TPU:
+
+* the (tokens x d_model x d_ff) loop nest is tiled into MXU-aligned blocks
+  expressed with ``BlockSpec`` — the HBM<->VMEM schedule that CUDA code
+  writes with threadblocks;
+* the grid iterates (token-tile, ff-tile) with an accumulator pattern for
+  the down-projection: the output block is indexed only by the token tile,
+  so the ff grid axis is a reduction that accumulates in place and the full
+  [T, F] activation never materialises in VMEM;
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; real-TPU perf is *estimated* from the VMEM footprint + MXU
+  utilisation in DESIGN.md §Perf.
+
+VMEM budget at the default tiles (T_TILE=64, F_TILE=256, D<=512, fp32):
+x 64*D + w_gate/w_up D*256*2 + w_down 256*D + out 64*D ~= 1.6 MB << 16 MB,
+leaving room for the pipeline's double buffers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles (128-aligned where the model dims allow).
+T_TILE = 64
+F_TILE = 256
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One (token-tile, ff-tile) grid step.
+
+    Computes this ff-tile's partial SwiGLU contribution and accumulates
+    ``silu(x@wg) * (x@wu) @ wd`` into the output block (which is the same
+    VMEM block for every step of the ff axis — a revisited reduction).
+    """
+    ff_step = pl.program_id(1)
+
+    @pl.when(ff_step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [T_TILE, D]
+    gate = x @ wg_ref[...]  # [T_TILE, F_TILE] on the MXU
+    up = x @ wu_ref[...]
+    act = gate * jax.lax.logistic(gate)  # SiLU
+    o_ref[...] += (act * up) @ wd_ref[...]  # [T_TILE, D]
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "f_tile"))
+def swiglu_ffn(x, w_gate, w_up, w_down, *, t_tile=T_TILE, f_tile=F_TILE):
+    """SwiGLU expert FFN via the Pallas kernel.
+
+    x [T, D]; w_gate/w_up [D, F]; w_down [F, D] -> [T, D].
+    T must be a multiple of ``t_tile`` and F of ``f_tile`` (the AOT path
+    pads token counts to bucket sizes, see rust runtime/bucket.rs).
+    """
+    t, d = x.shape
+    d2, f = w_gate.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert w_up.shape == (d, f), w_up.shape
+    assert w_down.shape == (f, d), w_down.shape
+    assert t % t_tile == 0, f"tokens {t} not a multiple of {t_tile}"
+    assert f % f_tile == 0, f"d_ff {f} not a multiple of {f_tile}"
+
+    grid = (t // t_tile, f // f_tile)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            # x: one token tile, full D, re-read for every ff step.
+            pl.BlockSpec((t_tile, d), lambda ti, fi: (ti, 0)),
+            # w_gate / w_up: full D x one ff tile.
+            pl.BlockSpec((d, f_tile), lambda ti, fi: (0, fi)),
+            pl.BlockSpec((d, f_tile), lambda ti, fi: (0, fi)),
+            # w_down: one ff tile x full D.
+            pl.BlockSpec((f_tile, d), lambda ti, fi: (fi, 0)),
+        ],
+        # Output indexed by the token tile only: the ff axis reduces.
+        out_specs=pl.BlockSpec((t_tile, d), lambda ti, fi: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+
+
+def vmem_bytes(t_tile=T_TILE, f_tile=F_TILE, d=256, dtype_bytes=4):
+    """Static VMEM-footprint estimate for one grid step (DESIGN.md §Perf)."""
+    x = t_tile * d
+    wg = d * f_tile
+    wu = d * f_tile
+    wd = f_tile * d
+    out = t_tile * d
+    return (x + wg + wu + wd + out) * dtype_bytes

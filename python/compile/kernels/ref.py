@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every kernel in this
+package must match its reference here to float tolerance under pytest
+(including hypothesis sweeps over shapes/dtypes/seeds in
+``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def silu_ref(x):
+    """SiLU / swish: ``x * sigmoid(x)``."""
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def swiglu_ffn_ref(x, w_gate, w_up, w_down):
+    """SwiGLU expert FFN: ``silu(x @ w_gate) * (x @ w_up) @ w_down``.
+
+    Shapes: x [T, D], w_gate [D, F], w_up [D, F], w_down [F, D] -> [T, D].
+    """
+    return (silu_ref(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def router_logits_ref(x, w_router):
+    """Router projection: ``x @ w_router``. x [T, D], w [D, E] -> [T, E]."""
+    return x @ w_router
+
+
+def rmsnorm_ref(x, weight, eps=1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(var + eps)) * weight

@@ -1,0 +1,61 @@
+"""Layer 1 — Pallas router kernel: RMSNorm + router-logit GEMM.
+
+The router is the point where the paper's whole mechanism triggers (the
+token->expert mapping whose skew everything hinges on), so it is kept as a
+fused Pallas kernel: per token tile, normalise then project to expert
+logits. Top-k selection itself happens in the rust coordinator — routing
+*policy* is Layer-3 territory (the coordinator may override dispatch based
+on the duplication plan).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 64
+
+
+def _router_kernel(x_ref, lnw_ref, wr_ref, xn_ref, logits_ref, *, eps):
+    x = x_ref[...]  # [T_TILE, D]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * lnw_ref[...]
+    xn_ref[...] = xn
+    logits_ref[...] = xn @ wr_ref[...]  # [T_TILE, E]
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "eps"))
+def router(x, ln_weight, w_router, *, t_tile=T_TILE, eps=1e-5):
+    """Fused RMSNorm + router projection.
+
+    x [T, D]; ln_weight [D]; w_router [D, E] -> (xn [T, D], logits [T, E]).
+    Returns the normalised activations too — the expert FFN consumes them,
+    so the coordinator never re-runs the norm.
+    """
+    t, d = x.shape
+    d2, e = w_router.shape
+    assert d == d2
+    assert ln_weight.shape == (d,)
+    assert t % t_tile == 0, f"tokens {t} not a multiple of {t_tile}"
+
+    grid = (t // t_tile,)
+    kernel = functools.partial(_router_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_tile, d), lambda ti: (ti, 0)),
+            pl.BlockSpec((d,), lambda ti: (0,)),
+            pl.BlockSpec((d, e), lambda ti: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_tile, d), lambda ti: (ti, 0)),
+            pl.BlockSpec((t_tile, e), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((t, e), x.dtype),
+        ],
+        interpret=True,
+    )(x, ln_weight, w_router)

@@ -1,0 +1,294 @@
+"""Layer 2 — the tiny Mixtral-style MoE transformer served end-to-end.
+
+Build-time only: this module defines the model pieces (embedding, GQA
+attention block, fused router kernel, Pallas expert FFN), the weight
+initialiser, a dense full-model reference (the numerics oracle for the
+rust integration tests), and the token-to-expert FFN *predictor* that the
+paper's Token-to-Expert strategy needs — trained here, AOT-compiled by
+``aot.py``, executed from rust through PJRT. Python never runs on the
+request path.
+
+Must stay in sync with ``rust/src/model/mod.rs::ModelConfig::tiny_serve``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.moe_ffn import swiglu_ffn
+from .kernels.ref import rmsnorm_ref, swiglu_ffn_ref
+from .kernels.router_topk import router as router_kernel
+
+TINY_CONFIG = {
+    "name": "tiny-moe-serve",
+    "d_model": 256,
+    "n_heads": 8,
+    "n_kv_heads": 2,
+    "head_dim": 32,
+    "d_ff": 512,
+    "n_experts": 8,
+    "top_k": 2,
+    "n_layers": 4,
+    "vocab_size": 4096,
+    # Fixed prefill bucket the attention/router artifacts are compiled for.
+    "seq_len": 256,
+    # Token-count buckets the expert-FFN artifact is compiled for.
+    "ffn_buckets": [16, 32, 64, 128, 256, 512],
+}
+
+# Predictor architecture (a scaled-down version of the paper's Appendix-B
+# FFN predictor: token embedding -> 128 -> ReLU -> per-layer expert heads).
+PREDICTOR_HIDDEN = 128
+
+
+# --------------------------------------------------------------------------
+# Weights
+# --------------------------------------------------------------------------
+
+def init_weights(seed=0, cfg=TINY_CONFIG):
+    """Deterministic weight set as a flat {name: np.float32 array} dict.
+
+    The rust runtime loads these from artifacts/weights.bin via the
+    manifest; names are the contract.
+    """
+    rng = np.random.default_rng(seed)
+    d = cfg["d_model"]
+    hd = cfg["head_dim"]
+    nh = cfg["n_heads"]
+    nkv = cfg["n_kv_heads"]
+    ff = cfg["d_ff"]
+    e = cfg["n_experts"]
+
+    def normal(shape, scale):
+        return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+    w = {"embed": normal((cfg["vocab_size"], d), 0.3)}
+    # Routers are *embedding-anchored*: each expert's router column points
+    # toward the embeddings of a cluster of anchor tokens, and columns get
+    # a mild geometric scale. This gives the tiny model the two properties
+    # the paper observes in real MoEs and everything downstream relies on:
+    # token-identity-driven routing (predictable — Figure 4) and a skewed
+    # expert distribution (imbalanced — skewness ≈ 1.4–2).
+    col_scale = (1.15 ** -np.arange(e)).astype(np.float32)
+    for l in range(cfg["n_layers"]):
+        p = f"layers.{l}"
+        w[f"{p}.attn.ln"] = np.ones((d,), np.float32)
+        w[f"{p}.attn.wq"] = normal((d, nh * hd), d**-0.5)
+        w[f"{p}.attn.wk"] = normal((d, nkv * hd), d**-0.5)
+        w[f"{p}.attn.wv"] = normal((d, nkv * hd), d**-0.5)
+        w[f"{p}.attn.wo"] = normal((nh * hd, d), 0.1 * (nh * hd) ** -0.5)
+        w[f"{p}.moe.ln"] = np.ones((d,), np.float32)
+        anchor_ids = rng.integers(0, cfg["vocab_size"], size=e)
+        anchors = w["embed"][anchor_ids].T.copy()  # [d, e]
+        anchors /= np.linalg.norm(anchors, axis=0, keepdims=True) + 1e-8
+        w[f"{p}.moe.router"] = (
+            (anchors * 4.0 + normal((d, e), 0.02)) * col_scale[None, :]
+        ).astype(np.float32)
+        for x in range(e):
+            w[f"{p}.experts.{x}.w_gate"] = normal((d, ff), d**-0.5)
+            w[f"{p}.experts.{x}.w_up"] = normal((d, ff), d**-0.5)
+            w[f"{p}.experts.{x}.w_down"] = normal((ff, d), ff**-0.5)
+    w["final.ln"] = np.ones((d,), np.float32)
+    return w
+
+
+# --------------------------------------------------------------------------
+# Model pieces (each becomes one AOT artifact; weights are arguments)
+# --------------------------------------------------------------------------
+
+def embed_fn(ids, embed):
+    """ids [1, S] int32, embed [V, D] -> activations [S, D]."""
+    return embed[ids[0]]
+
+
+def attention_block_fn(x, ln, wq, wk, wv, wo, cfg=TINY_CONFIG):
+    """Pre-norm causal GQA attention with residual: ``x + attn(norm(x))``.
+
+    x [S, D] -> [S, D].
+    """
+    nh, nkv, hd = cfg["n_heads"], cfg["n_kv_heads"], cfg["head_dim"]
+    s, d = x.shape
+    xn = rmsnorm_ref(x, ln)
+    q = (xn @ wq).reshape(s, nh, hd)
+    k = (xn @ wk).reshape(s, nkv, hd)
+    v = (xn @ wv).reshape(s, nkv, hd)
+    # GQA: repeat kv heads across the query groups.
+    group = nh // nkv
+    k = jnp.repeat(k, group, axis=1)  # [S, nh, hd]
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,khd->qhd", probs, v).reshape(s, nh * hd)
+    return x + ctx @ wo
+
+
+def router_block_fn(h, ln, w_router):
+    """Fused RMSNorm + router logits via the Pallas kernel.
+
+    h [S, D] -> (normed [S, D], logits [S, E]). Top-k selection happens in
+    the rust coordinator.
+    """
+    return router_kernel(h, ln, w_router)
+
+
+def expert_ffn_fn(xn, w_gate, w_up, w_down):
+    """One expert's SwiGLU FFN over a routed token slice (Pallas kernel).
+
+    xn [T, D] -> [T, D] (no residual — the coordinator gates and combines).
+    Small buckets (< the default 64-row tile) shrink the token tile to the
+    bucket size — still MXU-shaped on the reduction/ff axes.
+    """
+    t_tile = min(64, xn.shape[0])
+    return swiglu_ffn(xn, w_gate, w_up, w_down, t_tile=t_tile)
+
+
+# --------------------------------------------------------------------------
+# Dense reference forward (numerics oracle; all experts computed densely)
+# --------------------------------------------------------------------------
+
+def moe_block_ref(h, weights, layer, cfg=TINY_CONFIG):
+    """Dense-MoE reference: softmax top-k gating over all experts."""
+    p = f"layers.{layer}"
+    xn = rmsnorm_ref(h, weights[f"{p}.moe.ln"])
+    logits = xn @ weights[f"{p}.moe.router"]
+    k = cfg["top_k"]
+    # Top-k gates (softmax over the selected logits, Mixtral-style).
+    top_vals, top_idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)  # [S, k]
+    out = h
+    for e in range(cfg["n_experts"]):
+        expert_out = swiglu_ffn_ref(
+            xn,
+            weights[f"{p}.experts.{e}.w_gate"],
+            weights[f"{p}.experts.{e}.w_up"],
+            weights[f"{p}.experts.{e}.w_down"],
+        )
+        weight_e = jnp.sum(jnp.where(top_idx == e, gates, 0.0), axis=-1)
+        out = out + weight_e[:, None] * expert_out
+    return out, top_idx
+
+
+def model_forward_ref(ids, weights, cfg=TINY_CONFIG):
+    """Full-model reference prefill.
+
+    ids [1, S] -> (hidden [S, D], routing [L, S, k] expert indices).
+    """
+    h = embed_fn(ids, weights["embed"])
+    routes = []
+    for l in range(cfg["n_layers"]):
+        p = f"layers.{l}"
+        h = attention_block_fn(
+            h,
+            weights[f"{p}.attn.ln"],
+            weights[f"{p}.attn.wq"],
+            weights[f"{p}.attn.wk"],
+            weights[f"{p}.attn.wv"],
+            weights[f"{p}.attn.wo"],
+            cfg,
+        )
+        h, top_idx = moe_block_ref(h, weights, l, cfg)
+        routes.append(top_idx)
+    h = rmsnorm_ref(h, weights["final.ln"])
+    return h, jnp.stack(routes)
+
+
+# --------------------------------------------------------------------------
+# Token-to-expert predictor (paper Appendix B, FFN variant)
+# --------------------------------------------------------------------------
+
+def init_predictor_weights(seed=1, cfg=TINY_CONFIG):
+    rng = np.random.default_rng(seed)
+    d = cfg["d_model"]
+    h = PREDICTOR_HIDDEN
+    w = {
+        "predictor.w1": rng.normal(0, (2.0 / d) ** 0.5, (d, h)).astype(np.float32),
+        "predictor.b1": np.zeros((h,), np.float32),
+    }
+    for l in range(cfg["n_layers"]):
+        w[f"predictor.head.{l}"] = rng.normal(
+            0, (2.0 / h) ** 0.5, (h, cfg["n_experts"])
+        ).astype(np.float32)
+    return w
+
+
+def predictor_fn(x0, w1, b1, *heads):
+    """Predict every layer's expert logits from the embedded tokens.
+
+    x0 [S, D] (embedding output, pre-attention) -> [L, S, E]. This is what
+    lets the coordinator plan duplication for *all* layers before the first
+    attention runs (paper §3.1 inserts the predictor before Attention).
+    """
+    hidden = jax.nn.relu(x0 @ w1 + b1)
+    return jnp.stack([hidden @ h for h in heads])
+
+
+def train_predictor(weights, steps=300, batch_seqs=8, seed=3, lr=3e-3,
+                    cfg=TINY_CONFIG, verbose=False):
+    """Train the predictor on the tiny model's own routing decisions.
+
+    Generates random token batches, runs the reference model to obtain the
+    ground-truth top-1 expert per (layer, token), and fits the predictor
+    with plain Adam on cross-entropy (the paper's Appendix-B recipe).
+    Returns (predictor weight dict, final accuracy on a held-out batch).
+    """
+    rng = np.random.default_rng(seed)
+    pw = init_predictor_weights(seed=seed + 1, cfg=cfg)
+    names = sorted(pw.keys())
+    s = cfg["seq_len"]
+    n_layers = cfg["n_layers"]
+
+    jweights = {k: jnp.asarray(val) for k, val in weights.items()}
+    fwd = jax.jit(lambda ids: model_forward_ref(ids, jweights, cfg))
+
+    def make_batch():
+        ids = rng.integers(0, cfg["vocab_size"], size=(batch_seqs, 1, s)).astype(
+            np.int32
+        )
+        xs, labels = [], []
+        for b in range(batch_seqs):
+            _, routes = fwd(jnp.array(ids[b]))
+            xs.append(weights["embed"][ids[b, 0]])
+            labels.append(np.array(routes[:, :, 0]))  # top-1 expert [L, S]
+        return (
+            jnp.array(np.stack(xs)),  # [B, S, D]
+            jnp.array(np.stack(labels)),  # [B, L, S]
+        )
+
+    def loss_fn(params, x0, labels):
+        w1, b1 = params["predictor.w1"], params["predictor.b1"]
+        heads = [params[f"predictor.head.{l}"] for l in range(n_layers)]
+        hidden = jax.nn.relu(x0 @ w1 + b1)  # [B, S, H]
+        logits = jnp.stack([hidden @ h for h in heads], axis=1)  # [B, L, S, E]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, cfg["n_experts"])
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    # Plain Adam (optax is unavailable offline).
+    m = {k: np.zeros_like(v) for k, v in pw.items()}
+    v = {k: np.zeros_like(val) for k, val in pw.items()}
+    b1m, b2m = 0.9, 0.999
+    x_val, y_val = make_batch()
+    x_tr, y_tr = make_batch()
+    for t in range(1, steps + 1):
+        if t % 50 == 0:
+            x_tr, y_tr = make_batch()
+        loss, grads = grad_fn(pw, x_tr, y_tr)
+        for k in names:
+            g = np.array(grads[k])
+            m[k] = b1m * m[k] + (1 - b1m) * g
+            v[k] = b2m * v[k] + (1 - b2m) * g * g
+            mh = m[k] / (1 - b1m**t)
+            vh = v[k] / (1 - b2m**t)
+            pw[k] = np.asarray(pw[k] - lr * mh / (np.sqrt(vh) + 1e-8), np.float32)
+        if verbose and t % 50 == 0:
+            print(f"  predictor step {t}: loss {float(loss):.4f}")
+
+    # Held-out accuracy.
+    heads = [pw[f"predictor.head.{l}"] for l in range(n_layers)]
+    hidden = jax.nn.relu(x_val @ pw["predictor.w1"] + pw["predictor.b1"])
+    logits = jnp.stack([hidden @ h for h in heads], axis=1)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == y_val))
+    return pw, acc

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+The hypothesis sweeps cover shapes/dtypes/seeds as DESIGN.md §7 requires;
+the fixed-shape tests pin the exact configurations the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.moe_ffn import swiglu_ffn, vmem_bytes, T_TILE, F_TILE
+from compile.kernels.ref import (
+    rmsnorm_ref,
+    router_logits_ref,
+    silu_ref,
+    swiglu_ffn_ref,
+)
+from compile.kernels.router_topk import router
+
+
+def rand(rng, shape, scale=0.05, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN kernel
+# ---------------------------------------------------------------------------
+
+class TestSwigluKernel:
+    @pytest.mark.parametrize("tokens", [64, 128, 256, 512])
+    def test_matches_ref_at_artifact_buckets(self, tokens):
+        rng = np.random.default_rng(tokens)
+        d, f = 256, 512
+        x = rand(rng, (tokens, d), 1.0)
+        wg, wu = rand(rng, (d, f)), rand(rng, (d, f))
+        wd = rand(rng, (f, d))
+        out = swiglu_ffn(x, wg, wu, wd)
+        assert_allclose(out, swiglu_ffn_ref(x, wg, wu, wd), rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t_mult=st.integers(1, 4),
+        f_mult=st.integers(1, 3),
+        d=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.02, 0.3, 1.5]),
+    )
+    def test_hypothesis_shape_sweep(self, t_mult, f_mult, d, seed, scale):
+        rng = np.random.default_rng(seed)
+        t, f = t_mult * T_TILE, f_mult * F_TILE
+        x = rand(rng, (t, d), scale)
+        wg, wu = rand(rng, (d, f), scale), rand(rng, (d, f), scale)
+        wd = rand(rng, (f, d), scale)
+        out = swiglu_ffn(x, wg, wu, wd)
+        ref = swiglu_ffn_ref(x, wg, wu, wd)
+        tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(ref))))
+        assert_allclose(out, ref, rtol=1e-4, atol=tol)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        t_tile=st.sampled_from([32, 64, 128]),
+        f_tile=st.sampled_from([128, 256, 512]),
+    )
+    def test_tile_size_invariance(self, t_tile, f_tile):
+        """Any legal tiling must produce identical results (the perf pass
+        tunes tiles; numerics must not change)."""
+        rng = np.random.default_rng(9)
+        t, d, f = 128, 128, 512
+        x = rand(rng, (t, d), 0.5)
+        wg, wu, wd = rand(rng, (d, f)), rand(rng, (d, f)), rand(rng, (f, d))
+        base = swiglu_ffn(x, wg, wu, wd, t_tile=64, f_tile=256)
+        other = swiglu_ffn(x, wg, wu, wd, t_tile=t_tile, f_tile=f_tile)
+        assert_allclose(base, other, rtol=2e-5, atol=2e-5)
+
+    def test_rejects_unaligned_tokens(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            swiglu_ffn(
+                rand(rng, (65, 256)),
+                rand(rng, (256, 512)),
+                rand(rng, (256, 512)),
+                rand(rng, (512, 256)),
+            )
+
+    def test_vmem_estimate_under_budget(self):
+        # DESIGN.md §Perf: one grid step must fit VMEM (≈16 MiB) with room
+        # for double buffering.
+        assert vmem_bytes() < 8 * 1024 * 1024
+
+    def test_zero_input_gives_zero_output(self):
+        d, f = 256, 512
+        x = jnp.zeros((64, d))
+        rng = np.random.default_rng(1)
+        out = swiglu_ffn(x, rand(rng, (d, f)), rand(rng, (d, f)), rand(rng, (f, d)))
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Router kernel
+# ---------------------------------------------------------------------------
+
+class TestRouterKernel:
+    def test_matches_ref_at_artifact_shape(self):
+        rng = np.random.default_rng(3)
+        s, d, e = 256, 256, 8
+        x = rand(rng, (s, d), 1.0)
+        lnw = jnp.asarray(rng.uniform(0.5, 1.5, d), jnp.float32)
+        wr = rand(rng, (d, e), 0.2)
+        xn, logits = router(x, lnw, wr)
+        xn_ref = rmsnorm_ref(x, lnw)
+        assert_allclose(xn, xn_ref, rtol=2e-5, atol=2e-5)
+        assert_allclose(logits, router_logits_ref(xn_ref, wr), rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s_mult=st.integers(1, 4),
+        d=st.sampled_from([64, 128, 256]),
+        e=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, s_mult, d, e, seed):
+        rng = np.random.default_rng(seed)
+        s = 64 * s_mult
+        x = rand(rng, (s, d), 0.7)
+        lnw = jnp.ones((d,), jnp.float32)
+        wr = rand(rng, (d, e), 0.3)
+        xn, logits = router(x, lnw, wr)
+        xn_ref = rmsnorm_ref(x, lnw)
+        assert_allclose(xn, xn_ref, rtol=1e-4, atol=1e-5)
+        assert_allclose(logits, xn_ref @ wr, rtol=1e-4, atol=1e-5)
+
+    def test_argmax_agrees_with_ref(self):
+        """Routing decisions (what the coordinator consumes) must agree."""
+        rng = np.random.default_rng(5)
+        s, d, e = 256, 256, 8
+        x = rand(rng, (s, d), 1.0)
+        lnw = jnp.ones((d,), jnp.float32)
+        wr = rand(rng, (d, e), 0.3)
+        _, logits = router(x, lnw, wr)
+        ref_logits = rmsnorm_ref(x, lnw) @ wr
+        assert (jnp.argmax(logits, -1) == jnp.argmax(ref_logits, -1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Reference self-checks
+# ---------------------------------------------------------------------------
+
+def test_silu_matches_jax_nn():
+    x = jnp.linspace(-6, 6, 101)
+    assert_allclose(silu_ref(x), jax.nn.silu(x), rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_unit_variance():
+    rng = np.random.default_rng(11)
+    x = rand(rng, (32, 128), 3.0)
+    out = rmsnorm_ref(x, jnp.ones(128))
+    ms = jnp.mean(jnp.square(out), axis=-1)
+    assert_allclose(ms, jnp.ones_like(ms), rtol=1e-3)

@@ -1,0 +1,86 @@
+//! Bench: **§5 movement-cost arithmetic** (expert duplication's
+//! communication overhead) + Algorithm-1 micro-benchmarks.
+//!
+//! Paper: a Mixtral 8×7B fp16 expert ≈ 4096·14336·2·2 bytes; one expert
+//! per GPU per layer over NVLink 3.0 (2 TB/s) ≈ 0.1 ms, hidden under
+//! attention at bs 1 / seq 512; PCIe 4.0 needs a larger workload.
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::duplication::algorithm::{balance, balance_fractional};
+use moe_gps::duplication::cost::{min_hiding_batch, movement_report};
+use moe_gps::duplication::dispatch::dispatch_tokens;
+use moe_gps::duplication::Placement;
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+use moe_gps::util::rng::Rng;
+use moe_gps::util::tablefmt::{f, Align, Table};
+
+fn main() {
+    let model = ModelConfig::mixtral_8x7b();
+
+    group("§5 — expert-movement cost vs attention hiding window");
+    let mut t = Table::new(&[
+        "interconnect",
+        "batch",
+        "seq",
+        "transfer (ms)",
+        "attention (ms)",
+        "exposed (ms)",
+        "hidden",
+    ])
+    .align(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    for sys in [SystemSpec::four_a100_nvlink(), SystemSpec::four_a100_pcie()] {
+        for (b, s) in [(1usize, 512usize), (4, 512), (16, 2048), (64, 2048)] {
+            let r = movement_report(&model, &sys, b, s, 1);
+            t.row(&[
+                sys.interconnect.name.clone(),
+                b.to_string(),
+                s.to_string(),
+                f(r.transfer_s * 1e3, 3),
+                f(r.attention_compute_s * 1e3, 3),
+                f(r.exposed_s * 1e3, 3),
+                r.hidden.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let pcie = SystemSpec::four_a100_pcie();
+    println!(
+        "min batch hiding PCIe movement at seq 2048: {:?} (paper: 'modest' — their \
+         conservative attention estimate hides at 16)",
+        min_hiding_batch(&model, &pcie, 2048, 1, 128)
+    );
+
+    group("Algorithm 1 micro-benchmarks");
+    let b = Bencher::default();
+    let mut rng = Rng::new(5);
+    let counts_small: Vec<usize> = (0..8).map(|_| rng.range(0, 400)).collect();
+    let counts_large: Vec<usize> = (0..64).map(|_| rng.range(0, 4000)).collect();
+    let init8 = Placement::initial(8, 4, 8, 4);
+    let init64 = Placement::initial(64, 16, 8, 16);
+    b.run("balance_8experts_4gpus", || {
+        balance(black_box(&counts_small), &init8).max_load()
+    });
+    b.run("balance_64experts_16gpus", || {
+        balance(black_box(&counts_large), &init64).max_load()
+    });
+    let probs: Vec<f64> = moe_gps::util::stats::normalize(
+        &counts_small.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+    );
+    b.run("balance_fractional_dop", || {
+        balance_fractional(black_box(&probs), &init8).1.len()
+    });
+    let experts: Vec<u8> = (0..2048).map(|_| rng.range(0, 8) as u8).collect();
+    let balanced = balance(&counts_small, &init8);
+    b.run("dispatch_2048_slots", || {
+        dispatch_tokens(black_box(&experts), &balanced.placement).1
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: **Figure 1** — the MoE-GPS guideline chart: which prediction
+//! strategy minimises end-to-end latency per (skewness × interconnect)
+//! region. This is the framework's *output*; the chart is derived from the
+//! same sweeps as Figures 6/7.
+
+use moe_gps::bench::group;
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::guidelines;
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::mixtral_8x7b();
+
+    group("Figure 1 — guideline decision map");
+    let reference = SystemSpec::four_a100_nvlink();
+    let cals = calibrate_all(&model, &reference, fast, 7);
+    let skews = [1.0, 1.4, 2.0, 3.0, 4.0];
+    let bandwidths = [600.0, 300.0, 128.0, 64.0, 32.0];
+    let cells = guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512);
+    println!("{}", guidelines::render_map(&cells, &skews, &bandwidths));
+    println!("{}", guidelines::summarize(&cells));
+    println!(
+        "\npaper Figure 1 shape: Distribution-Only in the fast-interconnect /\n\
+         low-skew region; Token-to-Expert toward slow interconnects and high skew."
+    );
+}

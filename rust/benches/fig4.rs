@@ -1,0 +1,63 @@
+//! Bench: **Figure 4** — Token-to-Expert predictor accuracy vs overhead vs
+//! end-to-end normalized performance, on (a) MMLU/Alpaca-like skew ≈ 1.4
+//! and (b) SST2-like skew ≈ 2.0 (paper §3.2.2).
+//!
+//! Expected shape: overhead grows ~exponentially in accuracy; normalized
+//! performance peaks at an intermediate accuracy; at higher skewness the
+//! same accuracy is cheaper (fit's exponent shrinks / accuracies rise).
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::gps::calibrate::{calibrate, CalibrationOptions};
+use moe_gps::gps::report;
+use moe_gps::model::ModelConfig;
+use moe_gps::predictor::neural::{MlpConfig, MlpPredictor};
+use moe_gps::predictor::TokenPredictor;
+use moe_gps::sim::SystemSpec;
+use moe_gps::trace::{datasets, Trace};
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let opts = CalibrationOptions {
+        fast,
+        ..Default::default()
+    };
+
+    group("Figure 4a — MMLU/Alpaca-like (skew ≈ 1.4)");
+    for spec in [datasets::mmlu_like(7), datasets::alpaca_like(8)] {
+        let cal = calibrate(spec, &model, &system, &opts);
+        println!("{}", report::figure4(&cal));
+    }
+
+    group("Figure 4b — SST2-like (skew ≈ 2.0)");
+    let cal_b = calibrate(datasets::sst2_like(9), &model, &system, &opts);
+    println!("{}", report::figure4(&cal_b));
+    println!(
+        "paper check: higher skew → cheaper accuracy (smaller exponential \
+         growth / higher accuracies at same predictor class)"
+    );
+
+    group("Figure 4 micro-benchmarks — predictor train/infer hot paths");
+    let b = Bencher::default();
+    let mut spec = datasets::mmlu_like(11);
+    spec.n_batches = 8;
+    spec.sequences_per_batch = 2;
+    spec.seq_len = 128;
+    spec.vocab_size = 512;
+    let trace = Trace::generate(spec);
+    let (train, test) = trace.split(0.8);
+    b.run("mlp_fit_small_trace", || {
+        let mut mlp = MlpPredictor::new(MlpConfig {
+            epochs: 1,
+            ..Default::default()
+        });
+        mlp.fit(black_box(&train));
+        mlp.n_params()
+    });
+    let mut mlp = MlpPredictor::new(MlpConfig::default());
+    mlp.fit(&train);
+    b.run("mlp_predict_batch", || {
+        mlp.predict_batch(black_box(&test.batches[0]))
+    });
+}

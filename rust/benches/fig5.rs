@@ -1,0 +1,59 @@
+//! Bench: **Figure 5** — prediction-error distribution scenarios
+//! (optimistic / typical / pessimistic, paper §3.3) as an ablation: how the
+//! same error rate ε maps to end-to-end latency under each scenario.
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{ErrorModel, LayerSim, SystemSpec};
+use moe_gps::util::tablefmt::{f, Align, Table};
+
+fn main() {
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+
+    group("Figure 5 — error-model scenarios (DOP, skew 1.4, NVLink)");
+    let mut table = Table::new(&[
+        "ε",
+        "optimistic (ms)",
+        "typical (ms)",
+        "pessimistic (ms)",
+        "baseline (ms)",
+    ])
+    .align(&[Align::Right; 5]);
+    let skew = 1.4;
+    for &eps in &[0.0, 0.05, 0.1, 0.2, 0.3, 0.5] {
+        let mut cells = vec![f(eps, 2)];
+        for em in [
+            ErrorModel::Optimistic,
+            ErrorModel::Typical,
+            ErrorModel::Pessimistic,
+        ] {
+            let mut sim = LayerSim::new(model.clone(), system.clone());
+            sim.error_model = em;
+            let total = sim
+                .breakdown(skew, Strategy::DistributionOnly { error_rate: eps })
+                .total();
+            cells.push(f(total * 1e3, 3));
+        }
+        let baseline = LayerSim::new(model.clone(), system.clone()).baseline_total(skew);
+        cells.push(f(baseline * 1e3, 3));
+        table.row(&cells);
+    }
+    println!("{}", table.render());
+    println!(
+        "shape check: optimistic ≤ typical ≤ pessimistic; pessimistic is an \
+         upper bound that can exceed the baseline (paper §3.3)."
+    );
+
+    group("Figure 5 micro-benchmarks");
+    let b = Bencher::default();
+    let sim = LayerSim::new(model, system);
+    b.run("layer_breakdown_eval", || {
+        sim.breakdown(
+            black_box(1.4),
+            Strategy::DistributionOnly { error_rate: 0.1 },
+        )
+        .total()
+    });
+}

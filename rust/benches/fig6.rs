@@ -1,0 +1,55 @@
+//! Bench: **Figure 6** — single-layer Mixtral 8×7B prefill latency under
+//! each prediction strategy, across skewness levels, on NVLink (a, b) and
+//! PCIe (c, d) (paper §4). The headline: at skew 1.4 on NVLink,
+//! Distribution-Only beats the best Token-to-Expert configuration by >23%.
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::sweep::{figure6_skews, skew_sweep};
+use moe_gps::gps::{report, strategy_savings};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::mixtral_8x7b();
+
+    for (title, system) in [
+        ("Figure 6a/6b — NVLink", SystemSpec::four_a100_nvlink()),
+        ("Figure 6c/6d — PCIe", SystemSpec::four_a100_pcie()),
+    ] {
+        group(title);
+        let cals = calibrate_all(&model, &system, fast, 7);
+        let points = skew_sweep(&model, &system, &cals, &figure6_skews(), 1, 512);
+        println!("{}", report::figure6(&points, title));
+
+        // Headline check at skew 1.4.
+        let cmp = strategy_savings(&model, &system, &cals, 1.4, 1, 512);
+        let dop_total = cmp.baseline_s - cmp.dop_saving_s;
+        let tep_total = cmp.baseline_s - cmp.tep_best_saving_s;
+        println!(
+            "skew 1.4 on {}: DOP total {:.3} ms vs best-TEP total {:.3} ms \
+             → DOP advantage {:.1}% (paper claims >23% on NVLink/MMLU)",
+            system.interconnect.name,
+            dop_total * 1e3,
+            tep_total * 1e3,
+            (tep_total / dop_total - 1.0) * 100.0,
+        );
+    }
+
+    group("Figure 6 micro-benchmarks");
+    let b = Bencher::default();
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = calibrate_all(&model, &system, true, 13);
+    b.run("full_skew_sweep", || {
+        skew_sweep(
+            black_box(&model),
+            &system,
+            &cals,
+            &figure6_skews(),
+            1,
+            512,
+        )
+        .len()
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench: **Figure 7** — difference between Distribution-Only's saving and
+//! the best Token-to-Expert saving, per interconnect bandwidth
+//! (600/300/128/64 GB/s) × skewness (paper §4). Bars above zero mean
+//! Distribution-Only wins; TEP catches up as bandwidth drops / skew rises.
+
+use moe_gps::bench::group;
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::{report, strategy_savings};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::mixtral_8x7b();
+
+    group("Figure 7 — DOP saving − best-TEP saving across interconnects");
+    let mut rows = Vec::new();
+    for bw in [600.0, 300.0, 128.0, 64.0] {
+        let system = SystemSpec::four_a100_custom_bw(bw);
+        let cals = calibrate_all(&model, &system, fast, 7);
+        for skew in [1.4, 2.0, 3.0, 4.0] {
+            rows.push(strategy_savings(&model, &system, &cals, skew, 1, 512));
+        }
+    }
+    println!("{}", report::figure7(&rows));
+
+    // Shape check: the minimum (most TEP-favourable) difference should be
+    // at the lowest bandwidth + highest skew corner.
+    let rel = |r: &moe_gps::gps::SavingsComparison| r.difference_s / r.baseline_s;
+    let at = |bw: f64, sk: f64| {
+        rows.iter()
+            .find(|r| r.interconnect_gbs == bw && r.skewness == sk)
+            .map(rel)
+            .unwrap()
+    };
+    println!(
+        "relative difference: (600 GB/s, skew 1.4) = {:+.3}  →  (64 GB/s, skew 4.0) = {:+.3}",
+        at(600.0, 1.4),
+        at(64.0, 4.0)
+    );
+    println!(
+        "shape check: TEP gains (difference shrinks) toward low bandwidth / high skew: {}",
+        if at(64.0, 4.0) < at(600.0, 1.4) { "OK" } else { "MISMATCH" }
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench: **Figure 8** — the Figure-6 experiment on LLaMA-MoE [37]
+//! (paper Appendix C). Same workload and hardware; the traces run higher
+//! skew and near-perfect prediction gets exponentially expensive, so
+//! high-overhead TEP points are omitted (the paper omits overhead > 0.5×).
+
+use moe_gps::bench::group;
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::sweep::{figure6_skews, skew_sweep};
+use moe_gps::gps::{report, strategy_savings};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::llama_moe();
+
+    for (title, system) in [
+        ("Figure 8a/8b — LLaMA-MoE, NVLink", SystemSpec::four_a100_nvlink()),
+        ("Figure 8c/8d — LLaMA-MoE, PCIe", SystemSpec::four_a100_pcie()),
+    ] {
+        group(title);
+        let cals = calibrate_all(&model, &system, fast, 21);
+        let points = skew_sweep(&model, &system, &cals, &figure6_skews(), 1, 512);
+        // Omit points whose overhead exceeds 0.5× the baseline, as the
+        // paper does for illustration.
+        let kept: Vec<_> = points
+            .into_iter()
+            .filter(|p| {
+                p.breakdown.overhead_s
+                    <= 0.5 * p.total_s.max(p.breakdown.overhead_s + 1e-12)
+            })
+            .collect();
+        println!("{}", report::figure6(&kept, title));
+        let cmp = strategy_savings(&model, &system, &cals, 2.0, 1, 512);
+        println!(
+            "skew 2.0 on {}: DOP saving {:.3} ms vs best-TEP saving {:.3} ms",
+            system.interconnect.name,
+            cmp.dop_saving_s * 1e3,
+            cmp.tep_best_saving_s * 1e3,
+        );
+    }
+}

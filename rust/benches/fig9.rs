@@ -1,0 +1,38 @@
+//! Bench: **Figure 9** — the Figure-6 experiment on Switch Transformer [7]
+//! (paper Appendix C): ReLU experts, top-1 switch routing, MHA (no GQA).
+
+use moe_gps::bench::group;
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::sweep::{figure6_skews, skew_sweep};
+use moe_gps::gps::{report, strategy_savings};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+
+fn main() {
+    let fast = std::env::var("MOE_GPS_FAST").is_ok();
+    let model = ModelConfig::switch_transformer();
+
+    for (title, system) in [
+        ("Figure 9a/9b — Switch Transformer, NVLink", SystemSpec::four_a100_nvlink()),
+        ("Figure 9c/9d — Switch Transformer, PCIe", SystemSpec::four_a100_pcie()),
+    ] {
+        group(title);
+        let cals = calibrate_all(&model, &system, fast, 31);
+        let points = skew_sweep(&model, &system, &cals, &figure6_skews(), 1, 512);
+        let kept: Vec<_> = points
+            .into_iter()
+            .filter(|p| {
+                p.breakdown.overhead_s
+                    <= 0.5 * p.total_s.max(p.breakdown.overhead_s + 1e-12)
+            })
+            .collect();
+        println!("{}", report::figure6(&kept, title));
+        let cmp = strategy_savings(&model, &system, &cals, 2.0, 1, 512);
+        println!(
+            "skew 2.0 on {}: DOP saving {:.3} ms vs best-TEP saving {:.3} ms",
+            system.interconnect.name,
+            cmp.dop_saving_s * 1e3,
+            cmp.tep_best_saving_s * 1e3,
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Bench: **E2E serving hot path** — the real coordinator over PJRT
+//! (requires `make artifacts`; prints a skip message otherwise). This is
+//! the §Perf measurement target: round latency per strategy, plus the
+//! coordinator-side micro hot paths (top-k routing, gather/pad, combine).
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::router::route_sequence;
+use moe_gps::coordinator::{Coordinator, ServeStrategy};
+use moe_gps::runtime::HostTensor;
+use moe_gps::util::rng::Rng;
+
+fn main() {
+    group("coordinator micro hot paths (no PJRT)");
+    let b = Bencher::default();
+    let mut rng = Rng::new(3);
+    let logits: Vec<f32> = (0..256 * 8).map(|_| rng.normal() as f32).collect();
+    b.run("top2_route_256_tokens", || {
+        route_sequence(0, black_box(&logits), 8, 256, 2).len()
+    });
+    let tensor = HostTensor::new(
+        (0..256 * 256).map(|i| i as f32).collect(),
+        vec![256, 256],
+    );
+    let rows: Vec<usize> = (0..200).map(|i| (i * 7) % 256).collect();
+    b.run("gather_200_rows_d256", || {
+        tensor.gather_rows(black_box(&rows)).rows()
+    });
+    b.run("pad_200_to_256", || {
+        tensor
+            .gather_rows(&rows)
+            .pad_rows_to(black_box(256))
+            .rows()
+    });
+
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\nskipping PJRT serving benches: run `make artifacts` first");
+        return;
+    }
+
+    group("E2E serving rounds (4 virtual GPUs, 2 seqs/round)");
+    let quick = Bencher::quick();
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        let mut coord = Coordinator::new(&artifacts, 4, strategy).unwrap();
+        let mut gen = RequestGen::new(11, coord.vocab());
+        let max_len = coord.seq_len();
+        // Warmup: compile + teach estimators.
+        let warm: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
+        coord.serve_round(&warm).unwrap();
+        let reqs: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
+        let summary = quick.bench(&format!("serve_round_{}", strategy.name()), || {
+            coord.serve_round(black_box(&reqs)).unwrap().0.n_tokens
+        });
+        summary.print();
+        // Strategy-specific stats from one measured round.
+        let (m, _) = coord.serve_round(&reqs).unwrap();
+        println!(
+            "    breakdown: embed {} | predict+plan {} | attention {} | router {} | ffn {} \
+             | slot imbalance {:.3}",
+            moe_gps::util::human_time(m.embed_s),
+            moe_gps::util::human_time(m.predictor_s),
+            moe_gps::util::human_time(m.attention_s),
+            moe_gps::util::human_time(m.router_s),
+            moe_gps::util::human_time(m.ffn_wall_s),
+            m.slot_imbalance(),
+        );
+    }
+}

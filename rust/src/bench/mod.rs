@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! A criterion-like runner used by every file in `rust/benches/` (which are
+//! declared with `harness = false`): warmup, adaptive iteration count to hit
+//! a target measurement time, and a summary with mean / median / p95 /
+//! stddev. Also provides `black_box` to defeat constant folding.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Prevent the optimizer from eliminating a value/computation.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iterations: u64,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "bench {:<48} {:>12}/iter  (median {:>12}, p95 {:>12}, ±{:>10}, n={})",
+            self.name,
+            crate::util::human_time(self.mean_s),
+            crate::util::human_time(self.median_s),
+            crate::util::human_time(self.p95_s),
+            crate::util::human_time(self.stddev_s),
+            self.iterations,
+        );
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 2000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick settings for CI-style smoke benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+
+    /// Benchmark a closure. The closure should produce a value which the
+    /// harness black-boxes (preventing dead-code elimination).
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Summary {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose batch size so each sample takes ≈ measure/min_samples but at
+        // least 1 iteration.
+        let target_sample_s =
+            self.measure.as_secs_f64() / self.min_samples.max(1) as f64;
+        let batch = ((target_sample_s / per_iter.max(1e-9)).round() as u64).clamp(1, 1 << 24);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let run_start = Instant::now();
+        let mut total_iters: u64 = 0;
+        while (run_start.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64() / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+        }
+
+        Summary {
+            name: name.to_string(),
+            iterations: total_iters,
+            mean_s: stats::mean(&samples),
+            median_s: stats::median(&samples),
+            p95_s: stats::percentile(&samples, 95.0),
+            stddev_s: stats::stddev(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// Benchmark and print immediately; returns the summary for further use.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, f: F) -> Summary {
+        let s = self.bench(name, f);
+        s.print();
+        s
+    }
+}
+
+/// Group header printer used by the bench binaries so `cargo bench` output
+/// is organised per paper table/figure.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let b = Bencher::quick();
+        let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(s.iterations > 0);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s <= s.max_s + 1e-12);
+        assert!(s.p95_s >= s.median_s - 1e-12);
+    }
+
+    #[test]
+    fn slower_closure_measures_slower() {
+        let b = Bencher::quick();
+        let fast = b.bench("fast", || black_box(1u64) + 1);
+        let slow = b.bench("slow", || {
+            let mut acc = 0u64;
+            for i in 0..20_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(
+            slow.median_s > fast.median_s * 5.0,
+            "slow={} fast={}",
+            slow.median_s,
+            fast.median_s
+        );
+    }
+}

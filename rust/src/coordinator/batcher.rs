@@ -1,0 +1,119 @@
+//! Dynamic batcher: groups queued requests into serving rounds.
+//!
+//! A round is up to `max_seqs` sequences processed together — attention
+//! runs per sequence, but all sequences' routed tokens share one expert
+//! dispatch (bigger FFN batches, better bucket utilisation — the batching
+//! benefit EP serving actually gets). Rounds close on size or deadline,
+//! vLLM-style.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub max_seqs: usize,
+    pub max_wait: Duration,
+    oldest_enqueue: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(max_seqs: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            max_seqs,
+            max_wait,
+            oldest_enqueue: None,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        if self.queue.is_empty() {
+            self.oldest_enqueue = Some(Instant::now());
+        }
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a round should close now.
+    pub fn ready(&self) -> bool {
+        if self.queue.len() >= self.max_seqs {
+            return true;
+        }
+        match self.oldest_enqueue {
+            Some(t) => !self.queue.is_empty() && t.elapsed() >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop the next round (up to `max_seqs` requests, FIFO — arrival order
+    /// is preserved within and across rounds).
+    pub fn next_round(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.max_seqs);
+        let round: Vec<Request> = self.queue.drain(..n).collect();
+        self.oldest_enqueue = if self.queue.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        round
+    }
+
+    /// Drain everything in FIFO rounds (offline/driver mode).
+    pub fn drain_rounds(&mut self) -> Vec<Vec<Request>> {
+        let mut rounds = Vec::new();
+        while !self.queue.is_empty() {
+            rounds.push(self.next_round());
+        }
+        rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3])
+    }
+
+    #[test]
+    fn closes_on_size() {
+        let mut b = Batcher::new(2, Duration::from_secs(100));
+        b.push(req(0));
+        assert!(!b.ready());
+        b.push(req(1));
+        assert!(b.ready());
+        let round = b.next_round();
+        assert_eq!(round.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let mut b = Batcher::new(100, Duration::from_millis(1));
+        b.push(req(0));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let rounds = b.drain_rounds();
+        assert_eq!(rounds.len(), 3);
+        let order: Vec<u64> = rounds.iter().flatten().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+}

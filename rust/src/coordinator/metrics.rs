@@ -1,0 +1,169 @@
+//! Serving metrics: per-round phase timings, per-worker load, and the
+//! aggregate report the E2E example prints (latency / throughput /
+//! imbalance — the quantities the paper's evaluation is about).
+
+use crate::util::stats;
+
+/// Metrics for one serving round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundMetrics {
+    pub n_seqs: usize,
+    pub n_tokens: usize,
+    pub n_slots: usize,
+    pub embed_s: f64,
+    pub predictor_s: f64,
+    pub attention_s: f64,
+    pub router_s: f64,
+    pub plan_s: f64,
+    pub ffn_wall_s: f64,
+    pub combine_s: f64,
+    pub total_s: f64,
+    /// Busy seconds per worker (summed across layers).
+    pub worker_busy_s: Vec<f64>,
+    /// Token-slots processed per worker.
+    pub worker_slots: Vec<usize>,
+    /// Duplication-transfer bytes per worker.
+    pub upload_bytes: u64,
+    /// Replicas added by the planner this round.
+    pub replicas_added: usize,
+    /// Observed routing skewness averaged over layers.
+    pub routing_skew: f64,
+}
+
+impl RoundMetrics {
+    /// Load imbalance of the FFN phase: max worker busy / mean busy
+    /// (1.0 = perfectly balanced — the paper's skewness, measured on the
+    /// executed system rather than the trace).
+    pub fn busy_imbalance(&self) -> f64 {
+        let mean = stats::mean(&self.worker_busy_s);
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        self.worker_busy_s.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Slot imbalance: max slots / mean slots per worker.
+    pub fn slot_imbalance(&self) -> f64 {
+        stats::skewness_of_counts(&self.worker_slots)
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        self.n_tokens as f64 / self.total_s
+    }
+}
+
+/// Aggregate over a whole serve run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub strategy: String,
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl ServeReport {
+    pub fn total_tokens(&self) -> usize {
+        self.rounds.iter().map(|r| r.n_tokens).sum()
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.total_s).sum()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_s();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens() as f64 / t
+        }
+    }
+
+    pub fn mean_round_latency_s(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.total_s).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn p95_round_latency_s(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.total_s).collect();
+        stats::percentile(&xs, 95.0)
+    }
+
+    pub fn mean_busy_imbalance(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.busy_imbalance()).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn mean_slot_imbalance(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.slot_imbalance()).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn mean_ffn_wall_s(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.ffn_wall_s).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn total_upload_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.upload_bytes).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "strategy={:<18} rounds={:<3} tokens={:<6} throughput={:>9.1} tok/s  \
+             mean latency={}  p95={}  ffn wall={}  slot imbalance={:.3}  \
+             busy imbalance={:.3}  dup transfer={}",
+            self.strategy,
+            self.rounds.len(),
+            self.total_tokens(),
+            self.throughput(),
+            crate::util::human_time(self.mean_round_latency_s()),
+            crate::util::human_time(self.p95_round_latency_s()),
+            crate::util::human_time(self.mean_ffn_wall_s()),
+            self.mean_slot_imbalance(),
+            self.mean_busy_imbalance(),
+            crate::util::human_bytes(self.total_upload_bytes() as f64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_math() {
+        let m = RoundMetrics {
+            worker_busy_s: vec![2.0, 1.0, 1.0, 0.0],
+            worker_slots: vec![100, 50, 50, 0],
+            n_tokens: 200,
+            total_s: 0.5,
+            ..Default::default()
+        };
+        assert!((m.busy_imbalance() - 2.0).abs() < 1e-9);
+        assert!((m.slot_imbalance() - 2.0).abs() < 1e-9);
+        assert!((m.tokens_per_s() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut rep = ServeReport {
+            strategy: "test".into(),
+            rounds: Vec::new(),
+        };
+        for i in 1..=4 {
+            rep.rounds.push(RoundMetrics {
+                n_tokens: 100 * i,
+                total_s: 0.1,
+                worker_busy_s: vec![1.0; 4],
+                worker_slots: vec![25; 4],
+                ..Default::default()
+            });
+        }
+        assert_eq!(rep.total_tokens(), 1000);
+        assert!((rep.throughput() - 2500.0).abs() < 1e-9);
+        assert!((rep.mean_busy_imbalance() - 1.0).abs() < 1e-9);
+        assert!(rep.summary().contains("tok/s"));
+    }
+}

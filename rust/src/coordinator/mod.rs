@@ -1,0 +1,22 @@
+//! The serving coordinator (Layer 3): a leader thread driving embed /
+//! attention / routing through PJRT, plus N "virtual GPU" worker threads
+//! each owning their own PJRT engine and executing expert-FFN artifacts
+//! under Expert Parallelism. The paper's machinery — prediction, dynamic
+//! expert duplication (Algorithm 1), quota dispatch — runs on the batch
+//! hot path in [`placement_mgr`] and [`server`].
+//!
+//! Python never appears here: every tensor op goes through AOT-compiled
+//! HLO (see `runtime`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod placement_mgr;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use batcher::Batcher;
+pub use metrics::{RoundMetrics, ServeReport};
+pub use request::Request;
+pub use server::{Coordinator, ServeStrategy};

@@ -1,0 +1,177 @@
+//! Predictor-driven expert placement: the paper's mechanism on the live
+//! serving path.
+//!
+//! Before each round's FFN phases, the manager produces a per-layer
+//! duplication plan from whichever prediction strategy is active:
+//!
+//! * **NoPrediction** — the static initial placement; dispatch follows the
+//!   expert's home GPU (the baseline whose load imbalance the paper
+//!   quantifies).
+//! * **DistributionOnly** — a multinomial-MLE estimate of each layer's
+//!   expert distribution (updated online from every observed batch — the
+//!   "moving average" of §3.2.1) feeds Algorithm 1 with *expected* counts.
+//! * **TokenToExpert** — the AOT-compiled FFN predictor (trained in
+//!   python, executed through PJRT) predicts every token's expert per
+//!   layer *before attention runs* (§3.1), giving Algorithm 1 exact
+//!   predicted counts and the dispatcher per-(expert, GPU) quotas.
+
+use crate::duplication::algorithm::{balance, BalanceResult};
+use crate::duplication::placement::Placement;
+use crate::predictor::distribution::DistributionEstimator;
+
+/// Per-layer plan for one round.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub placement: Placement,
+    /// Per-(expert, gpu) token quotas (empty for NoPrediction).
+    pub share: Vec<Vec<usize>>,
+    /// Predicted per-expert counts the plan was built from.
+    pub predicted_counts: Vec<usize>,
+    /// Replicas added vs the static placement (duplication transfers).
+    pub added: Vec<(usize, usize)>,
+}
+
+pub struct PlacementManager {
+    pub n_experts: usize,
+    pub n_workers: usize,
+    /// Expert-slot capacity per worker (memory constraint M_g).
+    pub capacity: usize,
+    /// Maximum copies per expert (C_max).
+    pub max_copies: usize,
+    /// Online estimators, one per layer (Distribution-Only state).
+    pub estimators: Vec<DistributionEstimator>,
+    static_placement: Placement,
+}
+
+impl PlacementManager {
+    pub fn new(
+        n_experts: usize,
+        n_workers: usize,
+        n_layers: usize,
+        capacity: usize,
+        max_copies: usize,
+    ) -> PlacementManager {
+        PlacementManager {
+            n_experts,
+            n_workers,
+            capacity,
+            max_copies,
+            estimators: (0..n_layers)
+                .map(|_| DistributionEstimator::new(n_experts))
+                .collect(),
+            static_placement: Placement::initial(n_experts, n_workers, capacity, max_copies),
+        }
+    }
+
+    pub fn static_plan(&self) -> LayerPlan {
+        LayerPlan {
+            placement: self.static_placement.clone(),
+            share: Vec::new(),
+            predicted_counts: Vec::new(),
+            added: Vec::new(),
+        }
+    }
+
+    /// Plan from predicted per-expert counts (both strategies reduce to
+    /// this: DOP converts its probability estimate into expected counts,
+    /// TEP counts its per-token predictions).
+    pub fn plan_from_counts(&self, counts: &[usize]) -> LayerPlan {
+        let result: BalanceResult = balance(counts, &self.static_placement);
+        LayerPlan {
+            added: self.static_placement.added_replicas(&result.placement),
+            placement: result.placement,
+            share: result.share,
+            predicted_counts: counts.to_vec(),
+            // `loads`/`iterations` are derivable; keep the plan lean.
+        }
+    }
+
+    /// DOP plan for a layer: expected counts = p̂ · total_slots.
+    pub fn plan_distribution_only(&self, layer: usize, total_slots: usize) -> LayerPlan {
+        let probs = self.estimators[layer].mle();
+        let mut counts: Vec<usize> = probs
+            .iter()
+            .map(|p| (p * total_slots as f64).round() as usize)
+            .collect();
+        // Fix rounding so counts sum to total_slots (conservation).
+        let mut diff = total_slots as i64 - counts.iter().sum::<usize>() as i64;
+        let mut i = 0;
+        while diff != 0 && !counts.is_empty() {
+            let idx = i % counts.len();
+            if diff > 0 {
+                counts[idx] += 1;
+                diff -= 1;
+            } else if counts[idx] > 0 {
+                counts[idx] -= 1;
+                diff += 1;
+            }
+            i += 1;
+        }
+        self.plan_from_counts(&counts)
+    }
+
+    /// Feed observed routing back into the estimators (the moving average
+    /// keeps improving while serving — §3.2.1).
+    pub fn observe(&mut self, layer: usize, actual_counts: &[usize]) {
+        self.estimators[layer].update(actual_counts);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> PlacementManager {
+        PlacementManager::new(8, 4, 4, 8, 4)
+    }
+
+    #[test]
+    fn static_plan_has_no_duplicates() {
+        let m = mgr();
+        let plan = m.static_plan();
+        for e in 0..8 {
+            assert_eq!(plan.placement.copies(e), 1);
+        }
+        assert!(plan.added.is_empty());
+    }
+
+    #[test]
+    fn skewed_counts_trigger_duplication() {
+        let m = mgr();
+        let plan = m.plan_from_counts(&[600, 40, 40, 40, 40, 40, 40, 40]);
+        assert!(plan.placement.copies(0) > 1, "hot expert must replicate");
+        assert!(!plan.added.is_empty());
+        // Quotas conserve tokens.
+        let total: usize = plan.share.iter().flat_map(|r| r.iter()).sum();
+        assert_eq!(total, 880);
+        plan.placement.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dop_plan_tracks_estimator() {
+        let mut m = mgr();
+        // Feed a heavy skew toward expert 2 for layer 1.
+        for _ in 0..20 {
+            m.observe(1, &[10, 10, 300, 10, 10, 10, 10, 10]);
+        }
+        let plan = m.plan_distribution_only(1, 512);
+        assert_eq!(plan.predicted_counts.iter().sum::<usize>(), 512);
+        let max_idx = plan
+            .predicted_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 2);
+        assert!(plan.placement.copies(2) > 1);
+    }
+
+    #[test]
+    fn fresh_estimator_plans_uniform() {
+        let m = mgr();
+        let plan = m.plan_distribution_only(0, 512);
+        assert_eq!(plan.predicted_counts.iter().sum::<usize>(), 512);
+        assert!(plan.added.is_empty(), "uniform estimate needs no replicas");
+    }
+}

@@ -1,0 +1,113 @@
+//! Serving requests and synthetic request generation.
+
+use std::time::Instant;
+
+use crate::util::rng::Rng;
+
+/// One prefill request: a token sequence to run through the model.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<u32>) -> Request {
+        Request {
+            id,
+            tokens,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+/// Synthetic request generator: token ids drawn from a Zipf-ish
+/// distribution (natural-language-like reuse of frequent tokens, which is
+/// what gives conditional/neural predictors something to learn).
+pub struct RequestGen {
+    rng: Rng,
+    vocab: usize,
+    next_id: u64,
+    /// Zipf exponent; 0 = uniform.
+    pub zipf_s: f64,
+}
+
+impl RequestGen {
+    pub fn new(seed: u64, vocab: usize) -> RequestGen {
+        RequestGen {
+            rng: Rng::new(seed),
+            vocab,
+            next_id: 0,
+            zipf_s: 0.8,
+        }
+    }
+
+    fn sample_token(&mut self) -> u32 {
+        if self.zipf_s <= 0.0 {
+            return self.rng.below(self.vocab as u64) as u32;
+        }
+        // Inverse-CDF Zipf approximation via rejection-free power sampling.
+        let u = self.rng.f64().max(1e-12);
+        let v = self.vocab as f64;
+        let rank = (v.powf(1.0 - self.zipf_s) * u + 1.0 - u)
+            .powf(1.0 / (1.0 - self.zipf_s))
+            .min(v);
+        (rank as u32).saturating_sub(1).min(self.vocab as u32 - 1)
+    }
+
+    /// Generate a request with the given length.
+    pub fn request(&mut self, len: usize) -> Request {
+        let tokens = (0..len).map(|_| self.sample_token()).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, tokens)
+    }
+
+    /// Generate a request with length uniform in [lo, hi].
+    pub fn request_varlen(&mut self, lo: usize, hi: usize) -> Request {
+        let len = self.rng.range(lo, hi + 1);
+        self.request(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_in_vocab() {
+        let mut g = RequestGen::new(3, 4096);
+        for _ in 0..50 {
+            let r = g.request_varlen(8, 256);
+            assert!(!r.tokens.is_empty() && r.tokens.len() <= 256);
+            assert!(r.tokens.iter().all(|&t| (t as usize) < 4096));
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let mut g = RequestGen::new(4, 100);
+        let a = g.request(4);
+        let b = g.request(4);
+        assert!(b.id > a.id);
+    }
+
+    #[test]
+    fn zipf_skews_token_frequency() {
+        let mut g = RequestGen::new(5, 1000);
+        g.zipf_s = 1.1;
+        let mut low = 0usize;
+        let mut n = 0usize;
+        for _ in 0..50 {
+            for &t in &g.request(128).tokens {
+                n += 1;
+                if t < 100 {
+                    low += 1;
+                }
+            }
+        }
+        // With a Zipf tail, the first 10% of ids get far more than 10%.
+        assert!(low as f64 / n as f64 > 0.3, "{low}/{n}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Top-k routing policy (rust side — the router *logits* come from the
+//! AOT Pallas kernel; selection and gate computation are coordinator
+//! policy, so they live here where the duplication plan can see them).
+
+/// One routed token slot: token `token_idx` of sequence `seq_idx` goes to
+/// `expert` with combine weight `gate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slot {
+    pub seq_idx: usize,
+    pub token_idx: usize,
+    pub expert: u8,
+    pub gate: f32,
+}
+
+/// Mixtral-style top-k: pick the k largest logits per token, softmax over
+/// just those to produce gates.
+pub fn top_k_route(
+    logits_row: &[f32],
+    k: usize,
+) -> Vec<(u8, f32)> {
+    debug_assert!(k >= 1 && k <= logits_row.len());
+    let mut idx: Vec<usize> = (0..logits_row.len()).collect();
+    idx.sort_by(|&a, &b| logits_row[b].partial_cmp(&logits_row[a]).unwrap());
+    let top = &idx[..k];
+    let max = logits_row[top[0]];
+    let exps: Vec<f32> = top.iter().map(|&i| (logits_row[i] - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    top.iter()
+        .zip(&exps)
+        .map(|(&i, &e)| (i as u8, e / sum))
+        .collect()
+}
+
+/// Route a whole sequence's logits ([tokens × experts] row-major, only the
+/// first `n_real` tokens) into slots.
+pub fn route_sequence(
+    seq_idx: usize,
+    logits: &[f32],
+    n_experts: usize,
+    n_real: usize,
+    k: usize,
+) -> Vec<Slot> {
+    let mut slots = Vec::with_capacity(n_real * k);
+    for t in 0..n_real {
+        let row = &logits[t * n_experts..(t + 1) * n_experts];
+        for (expert, gate) in top_k_route(row, k) {
+            slots.push(Slot {
+                seq_idx,
+                token_idx: t,
+                expert,
+                gate,
+            });
+        }
+    }
+    slots
+}
+
+/// Per-expert slot counts (the input to Algorithm 1 at serving time).
+pub fn expert_counts(slots: &[Slot], n_experts: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_experts];
+    for s in slots {
+        counts[s.expert as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_picks_largest_and_normalises() {
+        let logits = [0.1, 2.0, -1.0, 1.5];
+        let picks = top_k_route(&logits, 2);
+        assert_eq!(picks[0].0, 1);
+        assert_eq!(picks[1].0, 3);
+        let gate_sum: f32 = picks.iter().map(|p| p.1).sum();
+        assert!((gate_sum - 1.0).abs() < 1e-6);
+        assert!(picks[0].1 > picks[1].1);
+    }
+
+    #[test]
+    fn top_1_gate_is_one() {
+        let picks = top_k_route(&[0.0, 5.0, 1.0], 1);
+        assert_eq!(picks, vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn route_sequence_only_real_tokens() {
+        let n_experts = 4;
+        // 3 tokens, only 2 real.
+        let logits = vec![
+            1.0, 0.0, 0.0, 0.0, // t0 -> e0
+            0.0, 0.0, 3.0, 0.0, // t1 -> e2
+            9.0, 9.0, 9.0, 9.0, // t2 padding, must be ignored
+        ];
+        let slots = route_sequence(7, &logits, n_experts, 2, 2);
+        assert_eq!(slots.len(), 4);
+        assert!(slots.iter().all(|s| s.seq_idx == 7 && s.token_idx < 2));
+        assert_eq!(slots[0].expert, 0);
+        assert_eq!(slots[2].expert, 2);
+        let counts = expert_counts(&slots, n_experts);
+        assert_eq!(counts.iter().sum::<usize>(), 4);
+    }
+}

@@ -1,0 +1,470 @@
+//! The serving leader: drives a full prefill round through the AOT model
+//! under Expert Parallelism with predictor-driven dynamic duplication.
+//!
+//! Round pipeline (per paper Figure 3):
+//!
+//! 1. embed every sequence (leader engine);
+//! 2. *Token-to-Expert*: run the AOT predictor on the embeddings — before
+//!    attention, §3.1 — and build per-layer duplication plans;
+//!    *Distribution-Only*: build plans from the online MLE estimators;
+//! 3. per layer: attention (leader), fused router kernel, rust top-k;
+//! 4. dispatch routed token-slots to virtual-GPU workers per the plan
+//!    (quota dispatch for TEP, least-loaded over replicas for DOP, home
+//!    GPU for the baseline);
+//! 5. workers execute the Pallas expert-FFN artifact; leader gates and
+//!    combines outputs into the residual stream;
+//! 6. estimators observe the actual routing (the §3.2.1 moving average).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::metrics::{RoundMetrics, ServeReport};
+use super::placement_mgr::{LayerPlan, PlacementManager};
+use super::request::Request;
+use super::router::{expert_counts, route_sequence, Slot};
+use super::worker::{pad_to_bucket, WorkerHandle, WorkerMsg, WorkerResult};
+use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
+use crate::runtime::{Engine, HostTensor, In};
+use crate::runtime::tensor::IntTensor;
+use crate::util::stats;
+
+/// Which prediction strategy drives placement (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeStrategy {
+    NoPrediction,
+    DistributionOnly,
+    TokenToExpert,
+}
+
+impl ServeStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeStrategy::NoPrediction => "none",
+            ServeStrategy::DistributionOnly => "distribution-only",
+            ServeStrategy::TokenToExpert => "token-to-expert",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Result<ServeStrategy> {
+        match s {
+            "none" | "baseline" => Ok(ServeStrategy::NoPrediction),
+            "distribution-only" | "dop" => Ok(ServeStrategy::DistributionOnly),
+            "token-to-expert" | "tep" => Ok(ServeStrategy::TokenToExpert),
+            other => anyhow::bail!("unknown strategy `{other}`"),
+        }
+    }
+}
+
+/// Model dims read from the artifact manifest.
+#[derive(Clone, Debug)]
+struct Dims {
+    d_model: usize,
+    n_experts: usize,
+    n_layers: usize,
+    top_k: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+pub struct Coordinator {
+    leader: Engine,
+    workers: Vec<WorkerHandle>,
+    pub placement: PlacementManager,
+    pub strategy: ServeStrategy,
+    dims: Dims,
+    buckets: Vec<usize>,
+    round_tag: u64,
+    /// §Perf iteration 2: fan per-sequence attention out to the workers
+    /// (the TP analogue). Measured neutral on this substrate — the PJRT
+    /// CPU client already saturates all cores per execution, so parallel
+    /// clients contend; on real multi-device hardware this is the right
+    /// topology. Default off (leader attention); kept selectable + tested.
+    pub parallel_attention: bool,
+}
+
+impl Coordinator {
+    /// Build a coordinator with `n_workers` virtual GPUs over the
+    /// artifacts directory.
+    pub fn new(
+        artifacts_dir: &Path,
+        n_workers: usize,
+        strategy: ServeStrategy,
+    ) -> Result<Coordinator> {
+        let mut leader = Engine::new(artifacts_dir).context("leader engine")?;
+        let cfg = leader.manifest().config.clone();
+        let dims = Dims {
+            d_model: cfg.req_usize("d_model")?,
+            n_experts: cfg.req_usize("n_experts")?,
+            n_layers: cfg.req_usize("n_layers")?,
+            top_k: cfg.req_usize("top_k")?,
+            seq_len: cfg.req_usize("seq_len")?,
+            vocab: cfg.req_usize("vocab_size")?,
+        };
+        let buckets = leader.manifest().ffn_buckets();
+        anyhow::ensure!(!buckets.is_empty(), "no expert_ffn buckets in manifest");
+
+        // Pre-compile the leader path.
+        for name in ["embed", "attention", "router", "predictor"] {
+            leader.load(name)?;
+        }
+
+        let workers: Vec<WorkerHandle> = (0..n_workers)
+            .map(|i| WorkerHandle::spawn(i, PathBuf::from(artifacts_dir)))
+            .collect::<Result<_>>()?;
+
+        // Capacity: up to all experts can fit (CPU memory is not the
+        // constraint here); C_max = n_workers mirrors "replicate at most
+        // once per GPU".
+        let placement = PlacementManager::new(
+            dims.n_experts,
+            n_workers,
+            dims.n_layers,
+            dims.n_experts,
+            n_workers,
+        );
+
+        Ok(Coordinator {
+            leader,
+            workers,
+            placement,
+            strategy,
+            dims,
+            buckets,
+            round_tag: 0,
+            parallel_attention: false,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.dims.seq_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.dims.vocab
+    }
+
+    /// Serve one round of requests; returns metrics and the final hidden
+    /// states (per sequence, real tokens only).
+    pub fn serve_round(&mut self, requests: &[Request]) -> Result<(RoundMetrics, Vec<HostTensor>)> {
+        let round_start = Instant::now();
+        self.round_tag += 1;
+        let s_max = self.dims.seq_len;
+        let d = self.dims.d_model;
+        let e = self.dims.n_experts;
+
+        let mut metrics = RoundMetrics {
+            n_seqs: requests.len(),
+            worker_busy_s: vec![0.0; self.workers.len()],
+            worker_slots: vec![0; self.workers.len()],
+            ..Default::default()
+        };
+
+        // ---- 1. embed ---------------------------------------------------
+        let t0 = Instant::now();
+        let mut hidden: Vec<HostTensor> = Vec::with_capacity(requests.len());
+        let mut n_real: Vec<usize> = Vec::with_capacity(requests.len());
+        for req in requests {
+            anyhow::ensure!(!req.tokens.is_empty(), "empty request {}", req.id);
+            let n = req.tokens.len().min(s_max);
+            let mut ids: Vec<i32> = req.tokens[..n].iter().map(|&t| t as i32).collect();
+            ids.resize(s_max, 0);
+            let ids = IntTensor::new(ids, vec![1, s_max]);
+            let x0 = self
+                .leader
+                .call("embed", &[In::I(&ids), In::W("embed")])?
+                .remove(0);
+            hidden.push(x0);
+            n_real.push(n);
+            metrics.n_tokens += n;
+        }
+        metrics.embed_s = t0.elapsed().as_secs_f64();
+
+        // ---- 2. predict + plan ------------------------------------------
+        let t0 = Instant::now();
+        let plans: Vec<LayerPlan> = match self.strategy {
+            ServeStrategy::NoPrediction => {
+                (0..self.dims.n_layers).map(|_| self.placement.static_plan()).collect()
+            }
+            ServeStrategy::DistributionOnly => {
+                let total_slots: usize =
+                    n_real.iter().map(|&n| n * self.dims.top_k).sum();
+                (0..self.dims.n_layers)
+                    .map(|l| self.placement.plan_distribution_only(l, total_slots))
+                    .collect()
+            }
+            ServeStrategy::TokenToExpert => {
+                // AOT predictor on every sequence's embeddings (§3.1:
+                // before attention).
+                let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
+                let head_names: Vec<String> = (0..self.dims.n_layers)
+                    .map(|l| format!("predictor.head.{l}"))
+                    .collect();
+                for (seq, &n) in hidden.iter().zip(&n_real) {
+                    let mut ins: Vec<In<'_>> = vec![
+                        In::T(seq),
+                        In::W("predictor.w1"),
+                        In::W("predictor.b1"),
+                    ];
+                    for name in &head_names {
+                        ins.push(In::W(name));
+                    }
+                    let logits = self.leader.call("predictor", &ins)?.remove(0);
+                    // logits [L, S, E]: argmax per (layer, real token).
+                    for l in 0..self.dims.n_layers {
+                        for t in 0..n {
+                            let base = (l * s_max + t) * e;
+                            let row = &logits.data[base..base + e];
+                            let arg = row
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                                .unwrap()
+                                .0;
+                            // Each token occupies top_k slots; scale the
+                            // predicted count accordingly.
+                            counts[l][arg] += self.dims.top_k;
+                        }
+                    }
+                }
+                counts
+                    .iter()
+                    .map(|c| self.placement.plan_from_counts(c))
+                    .collect()
+            }
+        };
+        metrics.predictor_s = t0.elapsed().as_secs_f64();
+        metrics.replicas_added = plans.iter().map(|p| p.added.len()).sum();
+        metrics.plan_s = 0.0; // planning time folded into predictor_s
+
+        // ---- 3..5 per-layer pipeline ------------------------------------
+        let mut skews: Vec<f64> = Vec::new();
+        for layer in 0..self.dims.n_layers {
+            // Attention: sequences of the round spread across the virtual
+            // GPUs and run in parallel (the serving analogue of the paper's
+            // TP attention — §Perf iteration 2; single-sequence rounds fall
+            // back to the leader to avoid a round-trip).
+            let t0 = Instant::now();
+            if !self.parallel_attention || hidden.len() == 1 {
+                let attn_names = [
+                    format!("layers.{layer}.attn.ln"),
+                    format!("layers.{layer}.attn.wq"),
+                    format!("layers.{layer}.attn.wk"),
+                    format!("layers.{layer}.attn.wv"),
+                    format!("layers.{layer}.attn.wo"),
+                ];
+                for h in hidden.iter_mut() {
+                    let out = self
+                        .leader
+                        .call(
+                            "attention",
+                            &[
+                                In::T(h),
+                                In::W(&attn_names[0]),
+                                In::W(&attn_names[1]),
+                                In::W(&attn_names[2]),
+                                In::W(&attn_names[3]),
+                                In::W(&attn_names[4]),
+                            ],
+                        )?
+                        .remove(0);
+                    *h = out;
+                }
+            } else {
+                let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
+                for (seq_idx, h) in hidden.iter().enumerate() {
+                    let worker = seq_idx % self.workers.len();
+                    self.workers[worker].send(WorkerMsg::Attention {
+                        tag: seq_idx as u64,
+                        layer,
+                        x: h.clone(),
+                        reply: attn_tx.clone(),
+                    });
+                }
+                drop(attn_tx);
+                for _ in 0..hidden.len() {
+                    let r = attn_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("attention worker channel closed"))?;
+                    if let Some(err) = &r.error {
+                        anyhow::bail!("attention on worker {} failed: {err}", r.worker);
+                    }
+                    let shape = hidden[r.tag as usize].shape.clone();
+                    hidden[r.tag as usize] = HostTensor::new(r.out, shape);
+                }
+            }
+            metrics.attention_s += t0.elapsed().as_secs_f64();
+
+            // Router (fused Pallas RMSNorm + logits) + rust top-k.
+            let t0 = Instant::now();
+            let ln = format!("layers.{layer}.moe.ln");
+            let wr = format!("layers.{layer}.moe.router");
+            let mut normed: Vec<HostTensor> = Vec::with_capacity(hidden.len());
+            let mut slots: Vec<Slot> = Vec::new();
+            for (seq_idx, h) in hidden.iter().enumerate() {
+                let mut out = self
+                    .leader
+                    .call("router", &[In::T(h), In::W(&ln), In::W(&wr)])?;
+                let logits = out.remove(1);
+                let xn = out.remove(0);
+                slots.extend(route_sequence(
+                    seq_idx,
+                    &logits.data,
+                    e,
+                    n_real[seq_idx],
+                    self.dims.top_k,
+                ));
+                normed.push(xn);
+            }
+            let actual_counts = expert_counts(&slots, e);
+            skews.push(stats::skewness_of_counts(&actual_counts));
+            metrics.n_slots += slots.len();
+            metrics.router_s += t0.elapsed().as_secs_f64();
+
+            // Dispatch: assign every slot a worker under the plan.
+            let plan = &plans[layer];
+            let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
+            let (assignment, _loads) = if plan.share.is_empty() {
+                dispatch_tokens(&experts, &plan.placement)
+            } else {
+                dispatch_with_quota(&experts, &plan.placement, &plan.share)
+            };
+
+            // Group slots per (worker, expert), gather activations, run.
+            let t0 = Instant::now();
+            let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            for (slot_idx, (&slot_worker, slot)) in
+                assignment.iter().zip(&slots).enumerate()
+            {
+                groups
+                    .entry((slot_worker as usize, slot.expert as usize))
+                    .or_default()
+                    .push(slot_idx);
+            }
+            // §Perf: merge runt groups. Splitting an expert across workers
+            // for a handful of slots costs a whole padded-bucket FFN call
+            // (and possibly a weight transfer) for negligible balance gain;
+            // fold any group smaller than MIN_GROUP into the largest group
+            // of the same expert.
+            const MIN_GROUP: usize = 16;
+            let expert_ids: Vec<usize> =
+                groups.keys().map(|&(_, e)| e).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+            for expert in expert_ids {
+                let mut keys: Vec<(usize, usize)> = groups
+                    .keys()
+                    .filter(|&&(_, ge)| ge == expert)
+                    .cloned()
+                    .collect();
+                if keys.len() < 2 {
+                    continue;
+                }
+                keys.sort_by_key(|k| groups[k].len());
+                let biggest = *keys.last().unwrap();
+                for key in &keys[..keys.len() - 1] {
+                    if groups[key].len() < MIN_GROUP {
+                        let moved = groups.remove(key).unwrap();
+                        groups.get_mut(&biggest).unwrap().extend(moved);
+                    }
+                }
+            }
+            let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
+            let mut outstanding = 0usize;
+            // slot order metadata for combining.
+            let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+            let mut msg_tag = 0u64;
+            for ((worker, expert), slot_indices) in &groups {
+                // Gather the normed activations for these slots.
+                let mut data = Vec::with_capacity(slot_indices.len() * d);
+                for &si in slot_indices {
+                    let slot = &slots[si];
+                    data.extend_from_slice(
+                        &normed[slot.seq_idx].row(slot.token_idx),
+                    );
+                }
+                let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
+                // Oversized groups split across bucket-sized chunks.
+                let mut offset = 0usize;
+                for (chunk, _bucket) in
+                    crate::runtime::bucket::split_into_buckets(&self.buckets, xn.rows())
+                {
+                    let rows: Vec<usize> = (offset..offset + chunk).collect();
+                    let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
+                    msg_tag += 1;
+                    group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
+                    self.workers[*worker].send(WorkerMsg::Run {
+                        tag: msg_tag,
+                        layer,
+                        expert: *expert,
+                        xn: tile,
+                        n_real: chunk,
+                        reply: reply_tx.clone(),
+                    });
+                    outstanding += 1;
+                    metrics.worker_slots[*worker] += chunk;
+                    offset += chunk;
+                }
+            }
+            drop(reply_tx);
+
+            // Combine: h += gate * expert_out at each slot.
+            let mut received = 0usize;
+            while received < outstanding {
+                let result = reply_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+                received += 1;
+                if let Some(err) = &result.error {
+                    anyhow::bail!("worker {} failed: {err}", result.worker);
+                }
+                metrics.worker_busy_s[result.worker] += result.exec_s;
+                metrics.upload_bytes += result.upload_bytes;
+                let slot_indices = &group_slots[&result.tag];
+                debug_assert_eq!(result.n_real, slot_indices.len());
+                for (row, &si) in slot_indices.iter().enumerate() {
+                    let slot = &slots[si];
+                    let out_row = &result.out[row * d..(row + 1) * d];
+                    let h = &mut hidden[slot.seq_idx];
+                    let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
+                    for (a, &b) in dst.iter_mut().zip(out_row) {
+                        *a += slot.gate * b;
+                    }
+                }
+            }
+            metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
+
+            // Online learning for the DOP estimators.
+            self.placement.observe(layer, &actual_counts);
+        }
+
+        metrics.routing_skew = stats::mean(&skews);
+        metrics.total_s = round_start.elapsed().as_secs_f64();
+
+        // Trim outputs to real tokens.
+        let outputs = hidden
+            .iter()
+            .zip(&n_real)
+            .map(|(h, &n)| h.gather_rows(&(0..n).collect::<Vec<_>>()))
+            .collect();
+        Ok((metrics, outputs))
+    }
+
+    /// Serve many rounds and aggregate a report.
+    pub fn serve(&mut self, rounds: Vec<Vec<Request>>) -> Result<ServeReport> {
+        let mut report = ServeReport {
+            strategy: self.strategy.name().to_string(),
+            rounds: Vec::new(),
+        };
+        for round in rounds {
+            let (metrics, _) = self.serve_round(&round)?;
+            report.rounds.push(metrics);
+        }
+        Ok(report)
+    }
+}

@@ -1,0 +1,284 @@
+//! Virtual-GPU workers: one thread per simulated device, each owning its
+//! own PJRT engine (the `xla` client is not `Send`) with the expert-FFN
+//! executables compiled locally. Expert weights become device-resident on
+//! first use — that upload is exactly the duplication transfer Algorithm 1
+//! triggers, and is accounted per worker.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{bucket, Engine, HostTensor, In};
+
+/// Work sent to a worker.
+pub enum WorkerMsg {
+    /// Run one expert's FFN over a padded token tile.
+    Run {
+        tag: u64,
+        layer: usize,
+        expert: usize,
+        /// Padded to a compiled bucket; first `n_real` rows are real.
+        xn: HostTensor,
+        n_real: usize,
+        reply: mpsc::Sender<WorkerResult>,
+    },
+    /// Run one sequence's attention block for a layer (the serving
+    /// analogue of Tensor-Parallel attention: sequences of a round spread
+    /// across the virtual GPUs — §Perf iteration 2).
+    Attention {
+        tag: u64,
+        layer: usize,
+        x: HostTensor,
+        reply: mpsc::Sender<WorkerResult>,
+    },
+    /// Pre-warm an expert's weights (duplication ahead of the FFN phase,
+    /// i.e. the transfer the paper hides under attention).
+    Prefetch {
+        layer: usize,
+        expert: usize,
+        reply: mpsc::Sender<WorkerResult>,
+    },
+    /// Evict an expert's weights (placement shrink between batches).
+    Evict { layer: usize, expert: usize },
+    Shutdown,
+}
+
+/// Worker reply.
+pub struct WorkerResult {
+    pub tag: u64,
+    pub worker: usize,
+    pub layer: usize,
+    pub expert: usize,
+    /// FFN output rows (only the first `n_real` are meaningful); empty for
+    /// prefetch replies.
+    pub out: Vec<f32>,
+    pub n_real: usize,
+    /// Wall time the worker spent executing (busy time).
+    pub exec_s: f64,
+    /// Weight bytes uploaded for this message (duplication transfer).
+    pub upload_bytes: u64,
+    pub error: Option<String>,
+}
+
+/// Handle owned by the coordinator.
+pub struct WorkerHandle {
+    pub index: usize,
+    sender: mpsc::Sender<WorkerMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn a worker over the artifacts directory.
+    pub fn spawn(index: usize, artifacts_dir: PathBuf) -> Result<WorkerHandle> {
+        let (sender, receiver) = mpsc::channel::<WorkerMsg>();
+        let join = std::thread::Builder::new()
+            .name(format!("vgpu-{index}"))
+            .spawn(move || worker_main(index, &artifacts_dir, receiver))?;
+        Ok(WorkerHandle {
+            index,
+            sender,
+            join: Some(join),
+        })
+    }
+
+    pub fn send(&self, msg: WorkerMsg) {
+        // A dead worker surfaces as a recv error on the reply channel.
+        let _ = self.sender.send(msg);
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.sender.send(WorkerMsg::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn expert_weight_names(layer: usize, expert: usize) -> [String; 3] {
+    [
+        format!("layers.{layer}.experts.{expert}.w_gate"),
+        format!("layers.{layer}.experts.{expert}.w_up"),
+        format!("layers.{layer}.experts.{expert}.w_down"),
+    ]
+}
+
+fn worker_main(index: usize, artifacts_dir: &std::path::Path, rx: mpsc::Receiver<WorkerMsg>) {
+    let mut engine = match Engine::new(artifacts_dir) {
+        Ok(e) => e,
+        Err(err) => {
+            crate::util::logging::log(
+                crate::util::logging::Level::Error,
+                "coordinator::worker",
+                format_args!("vgpu-{index}: engine init failed: {err:#}"),
+            );
+            // Drain messages, replying with errors, until shutdown.
+            for msg in rx {
+                match msg {
+                    WorkerMsg::Run { tag, layer, expert, n_real, reply, .. } => {
+                        let _ = reply.send(WorkerResult {
+                            tag, worker: index, layer, expert,
+                            out: Vec::new(), n_real,
+                            exec_s: 0.0, upload_bytes: 0,
+                            error: Some("engine init failed".into()),
+                        });
+                    }
+                    WorkerMsg::Prefetch { layer, expert, reply } => {
+                        let _ = reply.send(WorkerResult {
+                            tag: 0, worker: index, layer, expert,
+                            out: Vec::new(), n_real: 0,
+                            exec_s: 0.0, upload_bytes: 0,
+                            error: Some("engine init failed".into()),
+                        });
+                    }
+                    WorkerMsg::Attention { tag, layer, reply, .. } => {
+                        let _ = reply.send(WorkerResult {
+                            tag, worker: index, layer, expert: 0,
+                            out: Vec::new(), n_real: 0,
+                            exec_s: 0.0, upload_bytes: 0,
+                            error: Some("engine init failed".into()),
+                        });
+                    }
+                    WorkerMsg::Evict { .. } => {}
+                    WorkerMsg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let buckets = engine.manifest().ffn_buckets();
+
+    for msg in rx {
+        match msg {
+            WorkerMsg::Run {
+                tag,
+                layer,
+                expert,
+                xn,
+                n_real,
+                reply,
+            } => {
+                let t0 = Instant::now();
+                let names = expert_weight_names(layer, expert);
+                let mut upload_bytes = 0u64;
+                let mut error = None;
+                let mut out = Vec::new();
+                // Ensure this expert's weights are resident (duplication
+                // transfer if they weren't).
+                for n in &names {
+                    match engine.upload_weight(n) {
+                        Ok(b) => upload_bytes += b,
+                        Err(e) => error = Some(format!("{e:#}")),
+                    }
+                }
+                if error.is_none() {
+                    debug_assert!(buckets.contains(&xn.rows()), "xn must be padded");
+                    let artifact = format!("expert_ffn_b{}", xn.rows());
+                    match engine.call(
+                        &artifact,
+                        &[In::T(&xn), In::W(&names[0]), In::W(&names[1]), In::W(&names[2])],
+                    ) {
+                        Ok(mut tensors) => out = tensors.remove(0).data,
+                        Err(e) => error = Some(format!("{e:#}")),
+                    }
+                }
+                let _ = reply.send(WorkerResult {
+                    tag,
+                    worker: index,
+                    layer,
+                    expert,
+                    out,
+                    n_real,
+                    exec_s: t0.elapsed().as_secs_f64(),
+                    upload_bytes,
+                    error,
+                });
+            }
+            WorkerMsg::Attention { tag, layer, x, reply } => {
+                let t0 = Instant::now();
+                let names = [
+                    format!("layers.{layer}.attn.ln"),
+                    format!("layers.{layer}.attn.wq"),
+                    format!("layers.{layer}.attn.wk"),
+                    format!("layers.{layer}.attn.wv"),
+                    format!("layers.{layer}.attn.wo"),
+                ];
+                let mut error = None;
+                let mut upload_bytes = 0u64;
+                for n in &names {
+                    match engine.upload_weight(n) {
+                        Ok(b) => upload_bytes += b,
+                        Err(e) => error = Some(format!("{e:#}")),
+                    }
+                }
+                let mut out = Vec::new();
+                let n_real = x.rows();
+                if error.is_none() {
+                    match engine.call(
+                        "attention",
+                        &[
+                            In::T(&x),
+                            In::W(&names[0]),
+                            In::W(&names[1]),
+                            In::W(&names[2]),
+                            In::W(&names[3]),
+                            In::W(&names[4]),
+                        ],
+                    ) {
+                        Ok(mut tensors) => out = tensors.remove(0).data,
+                        Err(e) => error = Some(format!("{e:#}")),
+                    }
+                }
+                let _ = reply.send(WorkerResult {
+                    tag,
+                    worker: index,
+                    layer,
+                    expert: 0,
+                    out,
+                    n_real,
+                    exec_s: t0.elapsed().as_secs_f64(),
+                    upload_bytes,
+                    error,
+                });
+            }
+            WorkerMsg::Prefetch { layer, expert, reply } => {
+                let t0 = Instant::now();
+                let mut upload_bytes = 0u64;
+                let mut error = None;
+                for n in &expert_weight_names(layer, expert) {
+                    match engine.upload_weight(n) {
+                        Ok(b) => upload_bytes += b,
+                        Err(e) => error = Some(format!("{e:#}")),
+                    }
+                }
+                let _ = reply.send(WorkerResult {
+                    tag: 0,
+                    worker: index,
+                    layer,
+                    expert,
+                    out: Vec::new(),
+                    n_real: 0,
+                    exec_s: t0.elapsed().as_secs_f64(),
+                    upload_bytes,
+                    error,
+                });
+            }
+            WorkerMsg::Evict { layer, expert } => {
+                for n in &expert_weight_names(layer, expert) {
+                    engine.evict_weight(n);
+                }
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Pad a gathered token tile to the smallest compiled bucket.
+pub fn pad_to_bucket(xn: HostTensor, buckets: &[usize]) -> HostTensor {
+    let b = bucket::pick_bucket(buckets, xn.rows());
+    xn.pad_rows_to(b)
+}

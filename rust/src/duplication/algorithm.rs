@@ -1,0 +1,384 @@
+//! Algorithm 1 — Expert Duplication in MoE Load Balancing (paper §3.1).
+//!
+//! ```text
+//! Input:  token-expert map f, per-GPU capacities M, initial placement P,
+//!         max copies per expert C_max
+//! Output: balanced placement P and dispatch d: tokens → GPUs
+//! 1  d(t) ← min{ g | (f(t), g) ∈ P }
+//! 2  L_g ← |{t | d(t) = g}|
+//! 3  while max L − min L > 1:
+//! 4      g_h ← argmax L;  g_c ← argmin L
+//! 5      Δ ← ⌈(L_h − L_c) / 2⌉
+//! 6      e* ← the expert with the most tokens dispatched to g_h
+//! 7      if (e*, g_c) ∉ P and copies(e*) < C_max and params(e*) ≤ M_gc:
+//! 8          P ← P ∪ {(e*, g_c)}
+//! 9      reassign the first Δ tokens of e* on g_h to g_c
+//! 10     update L
+//! ```
+//!
+//! Implementation notes (guards the paper's pseudocode leaves implicit):
+//! * line 9 is only valid when `(e*, g_c) ∈ P` after line 7/8 — if the
+//!   guard rejected the new replica, moving tokens there would route them
+//!   to a GPU without the expert. We skip the move in that case and try the
+//!   next-hottest (expert, cold-GPU) combination; if no combination admits
+//!   progress, we terminate (capacity/copy limits bound achievable balance).
+//! * Δ is additionally capped by the number of tokens of `e*` on `g_h`.
+//! * Tokens are tracked as counts per (expert, gpu) — "the first Δ tokens"
+//!   only needs cardinality for balance; `dispatch` materialises per-token
+//!   assignments.
+
+use super::placement::Placement;
+
+/// Result of a balancing run.
+#[derive(Clone, Debug)]
+pub struct BalanceResult {
+    pub placement: Placement,
+    /// Tokens of expert `e` dispatched to gpu `g`: `share[e][g]`.
+    pub share: Vec<Vec<usize>>,
+    /// Per-GPU loads after balancing.
+    pub loads: Vec<usize>,
+    /// Iterations of the while loop executed.
+    pub iterations: usize,
+    /// True if the loop reached `max − min ≤ 1`; false if it stopped on a
+    /// capacity/copy-limit wall.
+    pub converged: bool,
+}
+
+impl BalanceResult {
+    pub fn max_load(&self) -> usize {
+        self.loads.iter().copied().max().unwrap_or(0)
+    }
+    pub fn min_load(&self) -> usize {
+        self.loads.iter().copied().min().unwrap_or(0)
+    }
+    /// Post-balancing skewness: max load / average load.
+    pub fn skewness(&self) -> f64 {
+        crate::util::stats::skewness_of_counts(&self.loads)
+    }
+}
+
+/// Run Algorithm 1 on per-expert token counts.
+///
+/// `expert_tokens[e]` is the number of tokens routed to expert `e`
+/// (predicted or actual — the algorithm is agnostic, which is exactly why
+/// both prediction strategies can drive it).
+pub fn balance(expert_tokens: &[usize], initial: &Placement) -> BalanceResult {
+    let n_experts = initial.n_experts();
+    let n_gpus = initial.n_gpus();
+    assert_eq!(expert_tokens.len(), n_experts);
+
+    let mut placement = initial.clone();
+    // share[e][g]: tokens of expert e dispatched to gpu g.
+    let mut share = vec![vec![0usize; n_gpus]; n_experts];
+    // Line 1: initial dispatch to the lowest-indexed hosting GPU.
+    for (e, &count) in expert_tokens.iter().enumerate() {
+        let g = *placement
+            .gpus_of(e)
+            .first()
+            .expect("placement must host every expert");
+        share[e][g] = count;
+    }
+    let mut loads = compute_loads(&share, n_gpus);
+
+    let mut iterations = 0;
+    // The loop must terminate: each useful iteration strictly reduces
+    // max−min; `max_iters` is a safety net for adversarial capacity walls.
+    let max_iters = 4 * (n_experts + n_gpus) * (n_gpus + 1);
+    let mut converged = false;
+
+    while iterations < max_iters {
+        let (g_h, g_c) = hot_cold(&loads);
+        if loads[g_h] - loads[g_c] <= 1 {
+            converged = true;
+            break;
+        }
+        iterations += 1;
+        let delta_target = (loads[g_h] - loads[g_c]).div_ceil(2);
+
+        // Line 6: hottest expert on g_h (by tokens dispatched there);
+        // fall back to the next-hottest if the hottest cannot progress.
+        let mut experts_by_share: Vec<usize> = (0..n_experts)
+            .filter(|&e| share[e][g_h] > 0)
+            .collect();
+        experts_by_share.sort_by_key(|&e| std::cmp::Reverse(share[e][g_h]));
+
+        let mut moved = false;
+        for &e_star in &experts_by_share {
+            // Line 7/8: duplicate if the guards admit it.
+            if !placement.hosts(e_star, g_c) {
+                placement.add(e_star, g_c); // no-op if guards reject
+            }
+            if placement.hosts(e_star, g_c) {
+                // Line 9: move up to Δ tokens of e* from g_h to g_c.
+                let delta = delta_target.min(share[e_star][g_h]);
+                if delta > 0 {
+                    share[e_star][g_h] -= delta;
+                    share[e_star][g_c] += delta;
+                    loads[g_h] -= delta;
+                    loads[g_c] += delta;
+                    moved = true;
+                    break;
+                }
+            }
+        }
+
+        if !moved {
+            // Try moving to any under-average GPU, not just the argmin.
+            let avg = loads.iter().sum::<usize>() as f64 / n_gpus as f64;
+            let mut cold_gpus: Vec<usize> = (0..n_gpus)
+                .filter(|&g| (loads[g] as f64) < avg && g != g_h)
+                .collect();
+            cold_gpus.sort_by_key(|&g| loads[g]);
+            'outer: for &g_c2 in &cold_gpus {
+                for &e_star in &experts_by_share {
+                    if !placement.hosts(e_star, g_c2) {
+                        placement.add(e_star, g_c2);
+                    }
+                    if placement.hosts(e_star, g_c2) && loads[g_h] > loads[g_c2] + 1 {
+                        let delta = ((loads[g_h] - loads[g_c2]).div_ceil(2))
+                            .min(share[e_star][g_h]);
+                        if delta > 0 {
+                            share[e_star][g_h] -= delta;
+                            share[e_star][g_c2] += delta;
+                            loads[g_h] -= delta;
+                            loads[g_c2] += delta;
+                            moved = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+
+        if !moved {
+            break; // capacity / copy-limit wall: no further progress possible
+        }
+    }
+
+    if !converged {
+        let (g_h, g_c) = hot_cold(&loads);
+        converged = loads[g_h] - loads[g_c] <= 1;
+    }
+
+    BalanceResult {
+        placement,
+        share,
+        loads,
+        iterations,
+        converged,
+    }
+}
+
+/// Fractional balancing for Distribution-Only prediction: only the aggregate
+/// shares `p[e]` are known, so the planner splits *expected* load across
+/// replicas. Returns per-(expert,gpu) fractional shares summing to 1.
+///
+/// Greedy water-filling: process experts by descending share; give each GPU
+/// at most `1/G` total. Mirrors §3.1's "keep duplicating experts on GPUs
+/// with > 1/N tokens to GPUs with < 1/N tokens".
+pub fn balance_fractional(probs: &[f64], initial: &Placement) -> (Placement, Vec<Vec<f64>>) {
+    let n_experts = initial.n_experts();
+    let n_gpus = initial.n_gpus();
+    assert_eq!(probs.len(), n_experts);
+    let mut placement = initial.clone();
+    let mut share = vec![vec![0.0f64; n_gpus]; n_experts];
+    let mut loads = vec![0.0f64; n_gpus];
+    let cap = 1.0 / n_gpus as f64 + 1e-12;
+
+    let mut order: Vec<usize> = (0..n_experts).collect();
+    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+
+    for &e in &order {
+        let mut remaining = probs[e];
+        // Fill the home GPUs first, then duplicate to the least-loaded.
+        let mut hosts = placement.gpus_of(e);
+        hosts.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+        for g in hosts {
+            if remaining <= 0.0 {
+                break;
+            }
+            let take = remaining.min((cap - loads[g]).max(0.0));
+            share[e][g] += take;
+            loads[g] += take;
+            remaining -= take;
+        }
+        while remaining > 1e-12 {
+            // Need a new replica on the least-loaded GPU with room.
+            let mut candidates: Vec<usize> = (0..n_gpus)
+                .filter(|&g| loads[g] < cap && !placement.hosts(e, g))
+                .collect();
+            candidates.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+            let mut placed = false;
+            for g in candidates {
+                if placement.add(e, g) {
+                    let take = remaining.min(cap - loads[g]);
+                    share[e][g] += take;
+                    loads[g] += take;
+                    remaining -= take;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // Guards exhausted: dump the remainder on the least-loaded
+                // hosting GPU (imbalance persists — mirrors the real wall).
+                let g = placement
+                    .gpus_of(e)
+                    .into_iter()
+                    .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+                    .unwrap();
+                share[e][g] += remaining;
+                loads[g] += remaining;
+                remaining = 0.0;
+            }
+        }
+    }
+    (placement, share)
+}
+
+fn hot_cold(loads: &[usize]) -> (usize, usize) {
+    let mut g_h = 0;
+    let mut g_c = 0;
+    for g in 1..loads.len() {
+        if loads[g] > loads[g_h] {
+            g_h = g;
+        }
+        if loads[g] < loads[g_c] {
+            g_c = g;
+        }
+    }
+    (g_h, g_c)
+}
+
+fn compute_loads(share: &[Vec<usize>], n_gpus: usize) -> Vec<usize> {
+    let mut loads = vec![0usize; n_gpus];
+    for per_gpu in share {
+        for (g, &c) in per_gpu.iter().enumerate() {
+            loads[g] += c;
+        }
+    }
+    loads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(share: &[Vec<usize>]) -> usize {
+        share.iter().flat_map(|row| row.iter()).sum()
+    }
+
+    #[test]
+    fn paper_figure2_example_balances() {
+        // 4 experts, 4 GPUs; expert 0 has 75% of 1024 tokens (skew 3).
+        let tokens = [768usize, 96, 80, 80];
+        let initial = Placement::initial(4, 4, 4, 4);
+        let r = balance(&tokens, &initial);
+        assert!(r.converged);
+        assert!(r.max_load() - r.min_load() <= 1);
+        assert_eq!(total(&r.share), 1024);
+        assert!(r.skewness() < 1.01, "skew={}", r.skewness());
+        // Expert 0 must have been duplicated.
+        assert!(r.placement.copies(0) >= 3);
+        r.placement.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn balanced_input_is_noop() {
+        let tokens = [128usize, 128, 128, 128, 128, 128, 128, 128];
+        let initial = Placement::initial(8, 4, 4, 4);
+        let r = balance(&tokens, &initial);
+        assert!(r.converged);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.placement, initial, "no duplication needed");
+    }
+
+    #[test]
+    fn copy_limit_bounds_balance() {
+        // One expert holds everything but C_max=1: no duplication possible,
+        // algorithm must terminate without converging.
+        let tokens = [1000usize, 0, 0, 0];
+        let initial = Placement::initial(4, 4, 4, 1);
+        let r = balance(&tokens, &initial);
+        assert!(!r.converged);
+        assert_eq!(r.max_load(), 1000);
+        r.placement.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_wall_respected() {
+        // Capacity 2/GPU with 8 experts: every GPU is full, no replicas fit.
+        let tokens = [800usize, 50, 50, 20, 20, 20, 20, 20];
+        let initial = Placement::initial(8, 4, 2, 4);
+        let r = balance(&tokens, &initial);
+        r.placement.check_invariants().unwrap();
+        for g in 0..4 {
+            assert!(r.placement.used_slots(g) <= 2);
+        }
+    }
+
+    #[test]
+    fn token_conservation_random_cases() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let n_experts = rng.range(2, 17);
+            let n_gpus = rng.range(2, 9);
+            let cap = (n_experts.div_ceil(n_gpus)) + rng.range(0, 3);
+            let tokens: Vec<usize> = (0..n_experts).map(|_| rng.range(0, 500)).collect();
+            let initial = Placement::initial(n_experts, n_gpus, cap, n_gpus);
+            let sum: usize = tokens.iter().sum();
+            let r = balance(&tokens, &initial);
+            assert_eq!(total(&r.share), sum, "token conservation");
+            assert_eq!(r.loads.iter().sum::<usize>(), sum);
+            r.placement.check_invariants().unwrap();
+            // Balance must never be worse than the starting dispatch.
+            let start_max = {
+                let mut loads = vec![0usize; n_gpus];
+                for (e, &c) in tokens.iter().enumerate() {
+                    let g = *initial.gpus_of(e).first().unwrap();
+                    loads[g] += c;
+                }
+                *loads.iter().max().unwrap()
+            };
+            assert!(r.max_load() <= start_max);
+        }
+    }
+
+    #[test]
+    fn fractional_balances_dop_distribution() {
+        // Skewed distribution, generous capacity → near-perfect balance.
+        let probs = [0.75, 0.05, 0.05, 0.05, 0.025, 0.025, 0.025, 0.025];
+        let initial = Placement::initial(8, 4, 8, 4);
+        let (placement, share) = balance_fractional(&probs, &initial);
+        placement.check_invariants().unwrap();
+        let mut loads = vec![0.0; 4];
+        for e in 0..8 {
+            for g in 0..4 {
+                loads[g] += share[e][g];
+            }
+        }
+        let sum: f64 = loads.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(max <= 0.25 + 1e-6, "max load {max}");
+    }
+
+    #[test]
+    fn fractional_respects_copy_limits() {
+        let probs = [0.97, 0.01, 0.01, 0.01];
+        let initial = Placement::initial(4, 4, 4, 2); // expert 0 limited to 2 copies
+        let (placement, share) = balance_fractional(&probs, &initial);
+        placement.check_invariants().unwrap();
+        assert!(placement.copies(0) <= 2);
+        // With only 2 copies of a 97% expert, the best max-load is 0.485.
+        let mut loads = vec![0.0; 4];
+        for e in 0..4 {
+            for g in 0..4 {
+                loads[g] += share[e][g];
+            }
+        }
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 0.4, "copy limit must keep imbalance, max={max}");
+    }
+}

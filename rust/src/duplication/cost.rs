@@ -1,0 +1,111 @@
+//! Expert-movement cost analysis (paper §5, "Expert duplication's
+//! communication overhead").
+//!
+//! The paper's back-of-envelope: a Mixtral 8×7B fp16 expert is
+//! `4096 × 14336 × 2 × 2` bytes; sending one expert per GPU per layer over
+//! NVLink 3.0 (2 TB/s) takes ~0.1 ms, which hides under the attention
+//! compute at batch 1 / seq 512. Over PCIe 4.0 (32 GB/s) it needs larger
+//! workloads (e.g. batch 16 / seq 2K) to hide.
+
+use crate::model::ModelConfig;
+use crate::sim::attention;
+use crate::sim::hardware::SystemSpec;
+
+/// Movement-cost report for one duplication round.
+#[derive(Clone, Debug)]
+pub struct MovementReport {
+    pub expert_bytes: f64,
+    pub transfer_s: f64,
+    pub attention_compute_s: f64,
+    /// Movement time exceeding the attention window (0 = fully hidden).
+    pub exposed_s: f64,
+    pub hidden: bool,
+}
+
+/// Analyse whether moving `experts_moved` experts per GPU hides under the
+/// attention phase of a `batch × seq` workload.
+pub fn movement_report(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    batch: usize,
+    seq: usize,
+    experts_moved: usize,
+) -> MovementReport {
+    let expert_bytes = model.expert_bytes();
+    let transfer_s = experts_moved as f64
+        * crate::sim::collective::p2p_time(&system.interconnect, expert_bytes);
+    let attn = attention::attention_cost(model, system, batch, seq);
+    let exposed = (transfer_s - attn.compute()).max(0.0);
+    MovementReport {
+        expert_bytes,
+        transfer_s,
+        attention_compute_s: attn.compute(),
+        exposed_s: exposed,
+        hidden: exposed <= 0.0,
+    }
+}
+
+/// Smallest batch size (at the given seq) where movement hides fully —
+/// the §5 claim is that PCIe hides at "batch 16, seq 2K"-ish workloads.
+pub fn min_hiding_batch(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    seq: usize,
+    experts_moved: usize,
+    max_batch: usize,
+) -> Option<usize> {
+    (1..=max_batch).find(|&b| movement_report(model, system, b, seq, experts_moved).hidden)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_movement_negligible_at_paper_workload() {
+        // Paper §5: one expert over NVLink (2 TB/s striped) ≈ 0.1 ms for
+        // the 2-matrix accounting; our full 3-matrix SwiGLU expert is
+        // ~0.18 ms. The paper hides this entirely under its (conservative,
+        // no-FlashAttention) attention estimate; our leaner roofline
+        // attention leaves a small exposure — assert it is negligible
+        // (<15%) relative to the baseline layer latency, which is the
+        // claim that matters for Figure 6.
+        let m = ModelConfig::mixtral_8x7b();
+        let sys = SystemSpec::four_a100_nvlink();
+        let r = movement_report(&m, &sys, 1, 512, 1);
+        assert!(r.transfer_s < 0.5e-3, "transfer={}", r.transfer_s);
+        let layer = crate::sim::LayerSim::new(m, sys).baseline_total(1.4);
+        assert!(
+            r.exposed_s < 0.15 * layer,
+            "exposed={} layer={layer}",
+            r.exposed_s
+        );
+    }
+
+    #[test]
+    fn pcie_exposed_at_small_workload_hidden_at_larger() {
+        let m = ModelConfig::mixtral_8x7b();
+        let sys = SystemSpec::four_a100_pcie();
+        let small = movement_report(&m, &sys, 1, 512, 1);
+        assert!(!small.hidden, "PCIe should NOT hide at bs=1/seq=512");
+        assert!(small.exposed_s > 0.5 * small.transfer_s);
+        // Paper §5: hides with "modest increases in batch size or sequence
+        // length (e.g. batch 16, seq 2K)". Their attention estimate is
+        // conservative (no FlashAttention); with our leaner roofline the
+        // crossover lands at a somewhat larger batch — assert it exists
+        // and is still a modest workload.
+        let min_b = min_hiding_batch(&m, &sys, 2048, 1, 128).unwrap();
+        assert!(min_b <= 64, "min hiding batch {min_b}");
+        let big = movement_report(&m, &sys, min_b, 2048, 1);
+        assert!(big.hidden);
+    }
+
+    #[test]
+    fn transfer_scales_with_experts_moved() {
+        let m = ModelConfig::mixtral_8x7b();
+        let sys = SystemSpec::four_a100_nvlink();
+        let one = movement_report(&m, &sys, 1, 512, 1);
+        let four = movement_report(&m, &sys, 1, 512, 4);
+        assert!((four.transfer_s / one.transfer_s - 4.0).abs() < 0.01);
+    }
+}

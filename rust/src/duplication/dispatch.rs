@@ -1,0 +1,170 @@
+//! Token→GPU dispatch under a placement.
+//!
+//! Materialises the `d : tokens → GPUs` map of Algorithm 1: given each
+//! token's expert and the (possibly duplicated) placement, assign every
+//! token to a hosting GPU, least-loaded first. Used by the serving
+//! coordinator on the hot path.
+
+use super::placement::Placement;
+
+/// Assign each token (by its expert id) to a GPU hosting that expert,
+/// balancing load greedily (least-loaded compatible GPU, ties broken by
+/// GPU index for determinism). Returns (assignment, per-GPU loads).
+pub fn dispatch_tokens(experts: &[u8], placement: &Placement) -> (Vec<u32>, Vec<usize>) {
+    let n_gpus = placement.n_gpus();
+    let mut loads = vec![0usize; n_gpus];
+    let mut out = Vec::with_capacity(experts.len());
+    // Pre-compute host lists per expert (placement queries are O(E·G)).
+    let hosts: Vec<Vec<usize>> = (0..placement.n_experts())
+        .map(|e| placement.gpus_of(e))
+        .collect();
+    for &e in experts {
+        let candidates = &hosts[e as usize];
+        debug_assert!(!candidates.is_empty(), "expert {e} unplaced");
+        let g = *candidates
+            .iter()
+            .min_by_key(|&&g| (loads[g], g))
+            .expect("expert must have at least one host");
+        loads[g] += 1;
+        out.push(g as u32);
+    }
+    (out, loads)
+}
+
+/// Dispatch with per-(expert,gpu) quotas from Algorithm 1's share matrix:
+/// tokens of expert `e` fill `share[e][g]` slots in GPU order, overflowing
+/// to the least-loaded host if quotas were under-provisioned (prediction
+/// error at serving time).
+pub fn dispatch_with_quota(
+    experts: &[u8],
+    placement: &Placement,
+    share: &[Vec<usize>],
+) -> (Vec<u32>, Vec<usize>) {
+    let n_gpus = placement.n_gpus();
+    let mut remaining: Vec<Vec<usize>> = share.to_vec();
+    let mut loads = vec![0usize; n_gpus];
+    let mut out = Vec::with_capacity(experts.len());
+    let hosts: Vec<Vec<usize>> = (0..placement.n_experts())
+        .map(|e| placement.gpus_of(e))
+        .collect();
+    for &e in experts {
+        let ei = e as usize;
+        // Prefer a GPU with remaining quota for this expert.
+        let quota_gpu = (0..n_gpus)
+            .filter(|&g| remaining[ei][g] > 0 && placement.hosts(ei, g))
+            .min_by_key(|&g| (loads[g], g));
+        let g = match quota_gpu {
+            Some(g) => {
+                remaining[ei][g] -= 1;
+                g
+            }
+            None => *hosts[ei]
+                .iter()
+                .min_by_key(|&&g| (loads[g], g))
+                .expect("expert must have at least one host"),
+        };
+        loads[g] += 1;
+        out.push(g as u32);
+    }
+    (out, loads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn dispatch_only_to_hosting_gpus() {
+        let placement = Placement::initial(8, 4, 4, 4);
+        let experts: Vec<u8> = (0..64).map(|i| (i % 8) as u8).collect();
+        let (assign, loads) = dispatch_tokens(&experts, &placement);
+        for (tok, &g) in assign.iter().enumerate() {
+            assert!(placement.hosts(experts[tok] as usize, g as usize));
+        }
+        assert_eq!(loads.iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn duplication_reduces_dispatch_skew() {
+        // Hot expert 0: without duplication GPU 0 takes it all.
+        let mut experts = vec![0u8; 96];
+        experts.extend([1, 2, 3, 4, 5, 6, 7].iter().flat_map(|&e| vec![e; 4]));
+        let single = Placement::initial(8, 4, 4, 1);
+        let (_, loads1) = dispatch_tokens(&experts, &single);
+        let skew1 = stats::skewness_of_counts(&loads1);
+
+        let mut dup = Placement::initial(8, 4, 4, 4);
+        dup.add(0, 1);
+        dup.add(0, 2);
+        dup.add(0, 3);
+        let (_, loads2) = dispatch_tokens(&experts, &dup);
+        let skew2 = stats::skewness_of_counts(&loads2);
+        assert!(skew2 < skew1 * 0.5, "skew {skew1} -> {skew2}");
+    }
+
+    #[test]
+    fn quota_dispatch_follows_shares_then_overflows() {
+        let mut placement = Placement::initial(4, 4, 4, 4);
+        placement.add(0, 1);
+        // Quota: expert 0 split 3 on gpu0 / 3 on gpu1 — but 8 tokens arrive.
+        let mut share = vec![vec![0usize; 4]; 4];
+        share[0][0] = 3;
+        share[0][1] = 3;
+        let experts = vec![0u8; 8];
+        let (assign, loads) = dispatch_with_quota(&experts, &placement, &share);
+        assert_eq!(loads[0] + loads[1], 8);
+        // First six follow quota evenly, overflow least-loaded.
+        assert!((loads[0] as i64 - loads[1] as i64).abs() <= 2);
+        for &g in &assign {
+            assert!(g == 0 || g == 1);
+        }
+    }
+
+    #[test]
+    fn property_dispatch_conserves_and_respects_placement() {
+        testing::forall_config(
+            testing::Config {
+                cases: 64,
+                ..Default::default()
+            },
+            |rng: &mut Rng| {
+                let n_experts = rng.range(2, 12);
+                let n_gpus = rng.range(2, 6);
+                let cap = n_experts.div_ceil(n_gpus) + rng.range(0, 3);
+                let mut placement =
+                    Placement::initial(n_experts, n_gpus, cap, n_gpus);
+                // Random extra replicas.
+                for _ in 0..rng.range(0, 6) {
+                    let e = rng.range(0, n_experts);
+                    let g = rng.range(0, n_gpus);
+                    placement.add(e, g);
+                }
+                let experts: Vec<u8> = (0..rng.range(1, 400))
+                    .map(|_| rng.range(0, n_experts) as u8)
+                    .collect();
+                (placement, experts)
+            },
+            |(placement, experts)| {
+                let (assign, loads) = dispatch_tokens(experts, placement);
+                if assign.len() != experts.len() {
+                    return Err("length mismatch".into());
+                }
+                if loads.iter().sum::<usize>() != experts.len() {
+                    return Err("token loss".into());
+                }
+                for (tok, &g) in assign.iter().enumerate() {
+                    if !placement.hosts(experts[tok] as usize, g as usize) {
+                        return Err(format!(
+                            "token {tok} sent to gpu {g} without expert {}",
+                            experts[tok]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Dynamic expert duplication (paper §3.1, Algorithm 1).
+//!
+//! Given a token→expert map (actual or predicted) and a current expert
+//! placement, duplicate popular experts onto under-loaded GPUs and dispatch
+//! tokens so per-GPU loads equalise. Three pieces:
+//!
+//! * [`placement`] — the expert→GPU placement state (replicas, per-GPU
+//!   capacity, copy limits);
+//! * [`algorithm`] — Algorithm 1 itself (iterative hot→cold shifting),
+//!   plus a fractional variant for Distribution-Only prediction where only
+//!   aggregate shares are known;
+//! * [`dispatch`] — token→GPU assignment under a placement;
+//! * [`cost`] — the §5 movement-cost arithmetic (can duplication hide under
+//!   attention?).
+
+pub mod algorithm;
+pub mod cost;
+pub mod dispatch;
+pub mod placement;
+
+pub use algorithm::{balance, BalanceResult};
+pub use placement::Placement;

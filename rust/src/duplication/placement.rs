@@ -1,0 +1,223 @@
+//! Expert→GPU placement state.
+
+use std::collections::BTreeSet;
+
+/// Placement `P ⊆ experts × gpus` with the constraints Algorithm 1 enforces:
+/// a per-GPU expert-slot capacity `M_g` (memory, in units of experts) and a
+/// per-expert maximum copy count `C_max`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    n_experts: usize,
+    n_gpus: usize,
+    /// pairs (expert, gpu), kept sorted for deterministic iteration.
+    pairs: BTreeSet<(usize, usize)>,
+    /// Per-GPU expert-slot capacity.
+    capacity: Vec<usize>,
+    /// Maximum copies of any single expert.
+    max_copies: usize,
+}
+
+impl Placement {
+    /// The canonical initial placement: expert `e` on GPU `e * G / E`
+    /// (round-robin block assignment, experts evenly spread).
+    pub fn initial(n_experts: usize, n_gpus: usize, capacity_per_gpu: usize, max_copies: usize) -> Placement {
+        assert!(n_experts >= 1 && n_gpus >= 1);
+        assert!(
+            capacity_per_gpu * n_gpus >= n_experts,
+            "capacity too small to host all experts"
+        );
+        let mut pairs = BTreeSet::new();
+        for e in 0..n_experts {
+            let g = e * n_gpus / n_experts;
+            pairs.insert((e, g));
+        }
+        Placement {
+            n_experts,
+            n_gpus,
+            pairs,
+            capacity: vec![capacity_per_gpu; n_gpus],
+            max_copies,
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.n_gpus
+    }
+
+    pub fn max_copies(&self) -> usize {
+        self.max_copies
+    }
+
+    pub fn hosts(&self, expert: usize, gpu: usize) -> bool {
+        self.pairs.contains(&(expert, gpu))
+    }
+
+    /// GPUs hosting an expert (sorted).
+    pub fn gpus_of(&self, expert: usize) -> Vec<usize> {
+        self.pairs
+            .iter()
+            .filter(|(e, _)| *e == expert)
+            .map(|&(_, g)| g)
+            .collect()
+    }
+
+    /// Experts hosted on a GPU (sorted).
+    pub fn experts_on(&self, gpu: usize) -> Vec<usize> {
+        self.pairs
+            .iter()
+            .filter(|(_, g)| *g == gpu)
+            .map(|&(e, _)| e)
+            .collect()
+    }
+
+    pub fn copies(&self, expert: usize) -> usize {
+        self.pairs.iter().filter(|(e, _)| *e == expert).count()
+    }
+
+    pub fn used_slots(&self, gpu: usize) -> usize {
+        self.pairs.iter().filter(|(_, g)| *g == gpu).count()
+    }
+
+    pub fn capacity(&self, gpu: usize) -> usize {
+        self.capacity[gpu]
+    }
+
+    /// Whether the Algorithm-1 guard admits `(expert, gpu)`.
+    pub fn can_add(&self, expert: usize, gpu: usize) -> bool {
+        !self.hosts(expert, gpu)
+            && self.copies(expert) < self.max_copies
+            && self.used_slots(gpu) < self.capacity[gpu]
+    }
+
+    /// Add a replica; returns false (and leaves state unchanged) if the
+    /// guard rejects it.
+    pub fn add(&mut self, expert: usize, gpu: usize) -> bool {
+        if !self.can_add(expert, gpu) {
+            return false;
+        }
+        self.pairs.insert((expert, gpu));
+        true
+    }
+
+    /// Drop replicas not in `keep`, never dropping the last copy of an
+    /// expert (used between batches to reclaim slots).
+    pub fn retain_with(&mut self, keep: &BTreeSet<(usize, usize)>) {
+        let pairs: Vec<(usize, usize)> = self.pairs.iter().cloned().collect();
+        for pair in pairs {
+            if !keep.contains(&pair) && self.copies(pair.0) > 1 {
+                self.pairs.remove(&pair);
+            }
+        }
+    }
+
+    /// All (expert, gpu) pairs, sorted.
+    pub fn pairs(&self) -> impl Iterator<Item = &(usize, usize)> {
+        self.pairs.iter()
+    }
+
+    /// Replicas added in `after` relative to `self` (what must be moved
+    /// over the interconnect).
+    pub fn added_replicas(&self, after: &Placement) -> Vec<(usize, usize)> {
+        after
+            .pairs
+            .iter()
+            .filter(|p| !self.pairs.contains(p))
+            .cloned()
+            .collect()
+    }
+
+    /// Every expert has ≥1 replica and every GPU is within capacity —
+    /// the invariant property tests assert.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for e in 0..self.n_experts {
+            let c = self.copies(e);
+            if c == 0 {
+                return Err(format!("expert {e} has no replica"));
+            }
+            if c > self.max_copies {
+                return Err(format!("expert {e} has {c} > C_max copies"));
+            }
+        }
+        for g in 0..self.n_gpus {
+            if self.used_slots(g) > self.capacity[g] {
+                return Err(format!(
+                    "gpu {g} over capacity: {} > {}",
+                    self.used_slots(g),
+                    self.capacity[g]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_spreads_experts() {
+        let p = Placement::initial(8, 4, 4, 4);
+        for g in 0..4 {
+            assert_eq!(p.experts_on(g).len(), 2);
+        }
+        assert!(p.hosts(0, 0));
+        assert!(p.hosts(7, 3));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn initial_more_gpus_than_experts() {
+        let p = Placement::initial(2, 4, 1, 4);
+        assert_eq!(p.copies(0), 1);
+        assert_eq!(p.copies(1), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn add_respects_guards() {
+        let mut p = Placement::initial(8, 4, 2, 2);
+        // GPU 0 already hosts 2 experts at capacity 2 → reject.
+        assert!(!p.add(5, 0));
+        // Duplicate to a GPU with room after raising capacity.
+        let mut p = Placement::initial(8, 4, 3, 2);
+        assert!(p.add(0, 1));
+        assert_eq!(p.copies(0), 2);
+        // Copy limit.
+        assert!(!p.add(0, 2), "C_max=2 reached");
+        // Already hosted.
+        assert!(!p.add(0, 1));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity too small")]
+    fn capacity_must_fit_all_experts() {
+        Placement::initial(8, 2, 3, 4);
+    }
+
+    #[test]
+    fn added_replicas_diff() {
+        let before = Placement::initial(8, 4, 3, 2);
+        let mut after = before.clone();
+        after.add(0, 1);
+        after.add(3, 0);
+        let moved = before.added_replicas(&after);
+        assert_eq!(moved, vec![(0, 1), (3, 0)]);
+    }
+
+    #[test]
+    fn retain_never_drops_last_copy() {
+        let mut p = Placement::initial(4, 4, 2, 2);
+        p.add(0, 1);
+        let keep = BTreeSet::new(); // ask to drop everything
+        p.retain_with(&keep);
+        for e in 0..4 {
+            assert_eq!(p.copies(e), 1, "expert {e}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! The Figure-1 guideline output: a decision map over (skewness ×
+//! interconnect bandwidth) telling a system designer which prediction
+//! strategy minimises end-to-end latency.
+
+use super::calibrate::WorkloadCalibration;
+use super::select::{recommend, strategy_savings, Recommendation};
+use crate::model::ModelConfig;
+use crate::sim::hardware::SystemSpec;
+
+/// One cell of the guideline decision map.
+#[derive(Clone, Debug)]
+pub struct GuidelineCell {
+    pub skewness: f64,
+    pub bandwidth_gbs: f64,
+    pub recommendation: Recommendation,
+    /// Relative saving of the winning strategy vs baseline.
+    pub saving_frac: f64,
+}
+
+/// Compute the decision map over a (skew × bandwidth) grid.
+pub fn decision_map(
+    model: &ModelConfig,
+    cals: &[WorkloadCalibration],
+    skews: &[f64],
+    bandwidths_gbs: &[f64],
+    batch: usize,
+    seq: usize,
+) -> Vec<GuidelineCell> {
+    let mut cells = Vec::new();
+    for &bw in bandwidths_gbs {
+        let system = SystemSpec::four_a100_custom_bw(bw);
+        for &skew in skews {
+            let cmp = strategy_savings(model, &system, cals, skew, batch, seq);
+            let rec = recommend(&cmp);
+            let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
+            cells.push(GuidelineCell {
+                skewness: skew,
+                bandwidth_gbs: bw,
+                recommendation: rec,
+                saving_frac: best_saving / cmp.baseline_s,
+            });
+        }
+    }
+    cells
+}
+
+/// Render the decision map as the Figure-1-style ASCII chart
+/// (rows = bandwidth, columns = skewness; D = Distribution-Only,
+/// T = Token-to-Expert, - = no prediction).
+pub fn render_map(cells: &[GuidelineCell], skews: &[f64], bandwidths: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str("MoE-GPS guideline (D = Distribution-Only, T = Token-to-Expert, . = none)\n");
+    out.push_str("bandwidth \\ skew |");
+    for s in skews {
+        out.push_str(&format!("{s:>6.1}"));
+    }
+    out.push('\n');
+    for &bw in bandwidths {
+        out.push_str(&format!("{bw:>9.0} GB/s   |"));
+        for &s in skews {
+            let cell = cells
+                .iter()
+                .find(|c| c.bandwidth_gbs == bw && c.skewness == s)
+                .expect("cell must exist");
+            let ch = match cell.recommendation {
+                Recommendation::DistributionOnly => 'D',
+                Recommendation::TokenToExpert => 'T',
+                Recommendation::NoPrediction => '.',
+            };
+            out.push_str(&format!("{ch:>6}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The paper's Figure-1 prose guidance, derived from the map: where each
+/// strategy dominates.
+pub fn summarize(cells: &[GuidelineCell]) -> String {
+    let dop: Vec<&GuidelineCell> = cells
+        .iter()
+        .filter(|c| c.recommendation == Recommendation::DistributionOnly)
+        .collect();
+    let tep: Vec<&GuidelineCell> = cells
+        .iter()
+        .filter(|c| c.recommendation == Recommendation::TokenToExpert)
+        .collect();
+    let mean = |xs: &[&GuidelineCell], f: fn(&GuidelineCell) -> f64| -> f64 {
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        xs.iter().map(|c| f(c)).sum::<f64>() / xs.len() as f64
+    };
+    format!(
+        "Distribution-Only wins in {}/{} cells (mean skew {:.2}, mean bw {:.0} GB/s);\n\
+         Token-to-Expert wins in {}/{} cells (mean skew {:.2}, mean bw {:.0} GB/s).\n\
+         Guideline: prefer Distribution-Only when communication is fast or skew is low;\n\
+         prefer Token-to-Expert under slow interconnects and high skew (paper Figure 1).",
+        dop.len(),
+        cells.len(),
+        mean(&dop, |c| c.skewness),
+        mean(&dop, |c| c.bandwidth_gbs),
+        tep.len(),
+        cells.len(),
+        mean(&tep, |c| c.skewness),
+        mean(&tep, |c| c.bandwidth_gbs),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gps::calibrate::{calibrate, CalibrationOptions};
+    use crate::trace::datasets;
+
+    #[test]
+    fn map_covers_grid_and_renders() {
+        let model = ModelConfig::mixtral_8x7b();
+        let opts = CalibrationOptions {
+            fast: true,
+            ..Default::default()
+        };
+        let system = SystemSpec::four_a100_nvlink();
+        let cals = vec![
+            calibrate(datasets::mmlu_like(91), &model, &system, &opts),
+            calibrate(datasets::sst2_like(92), &model, &system, &opts),
+        ];
+        let skews = [1.0, 2.0, 4.0];
+        let bws = [600.0, 64.0];
+        let cells = decision_map(&model, &cals, &skews, &bws, 1, 512);
+        assert_eq!(cells.len(), 6);
+        let chart = render_map(&cells, &skews, &bws);
+        assert!(chart.contains("600 GB/s"));
+        assert!(chart.contains('D') || chart.contains('T'));
+        let summary = summarize(&cells);
+        assert!(summary.contains("Distribution-Only wins"));
+    }
+}

@@ -1,0 +1,25 @@
+//! The MoE-GPS framework proper (paper §1, §4): given a model architecture,
+//! a hardware system and a workload, quantify the end-to-end runtime of each
+//! prediction strategy and select the best one.
+//!
+//! * [`calibrate`] — run the full predictor pipeline on a dataset-like
+//!   trace: train every Token-to-Expert predictor, measure accuracy, price
+//!   overhead on the simulated hardware, fit the paper's exponential
+//!   accuracy→overhead curve, and measure the Distribution-Only error rate
+//!   (Figure 4 / Table 1 machinery).
+//! * [`sweep`] — Figure 6/8/9 grids: per (skewness, strategy, accuracy)
+//!   latency breakdowns.
+//! * [`select`] — best-configuration selection and the Figure 7
+//!   savings-difference series.
+//! * [`guidelines`] — the Figure 1 decision output.
+//! * [`report`] — table/CSV emitters shared by the benches and the CLI.
+
+pub mod calibrate;
+pub mod guidelines;
+pub mod report;
+pub mod select;
+pub mod sweep;
+
+pub use calibrate::{calibrate, CalibrationOptions, PredictorPoint, WorkloadCalibration};
+pub use select::{best_tep, strategy_savings, SavingsComparison};
+pub use sweep::{skew_sweep, SweepPoint};

@@ -1,0 +1,183 @@
+//! Table/figure emitters shared by the benches and the CLI `bench-report`
+//! subcommand. Each function renders the paper's rows/series as an aligned
+//! ASCII table plus a CSV block.
+
+use super::calibrate::WorkloadCalibration;
+use super::select::SavingsComparison;
+use super::sweep::SweepPoint;
+use crate::util::tablefmt::{f, pct, Align, Table};
+
+/// Table 1: dataset × skewness × DOP error rate.
+pub fn table1(cals: &[WorkloadCalibration]) -> String {
+    let mut t = Table::new(&["Dataset", "Skewness", "Error rate (%)"]).align(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+    ]);
+    for c in cals {
+        t.row(&[
+            c.workload.clone(),
+            f(c.skewness, 2),
+            f(c.dop_error * 100.0, 2),
+        ]);
+    }
+    format!("{}\nCSV:\n{}", t.render(), t.render_csv())
+}
+
+/// Figure 4: per-predictor accuracy / overhead / normalized performance,
+/// plus the fitted curves.
+pub fn figure4(cal: &WorkloadCalibration) -> String {
+    let mut t = Table::new(&[
+        "Predictor",
+        "Accuracy",
+        "Overhead (ratio)",
+        "Norm. perf",
+    ])
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for p in &cal.points {
+        t.row(&[
+            p.name.clone(),
+            f(p.accuracy, 3),
+            f(p.overhead_ratio, 4),
+            f(p.normalized_perf, 3),
+        ]);
+    }
+    format!(
+        "{} (skew {:.2}, DOP err {})\n{}\nfits: overhead(a) = {:.4}·exp({:.2}·a); \
+         perf(a) = {:.3} + {:.3}a + {:.3}a²\nCSV:\n{}",
+        cal.workload,
+        cal.skewness,
+        pct(cal.dop_error),
+        t.render(),
+        cal.overhead_fit.0,
+        cal.overhead_fit.1,
+        cal.perf_fit.first().copied().unwrap_or(0.0),
+        cal.perf_fit.get(1).copied().unwrap_or(0.0),
+        cal.perf_fit.get(2).copied().unwrap_or(0.0),
+        t.render_csv()
+    )
+}
+
+/// Figure 6/8/9: latency breakdown per (skew, strategy, accuracy).
+pub fn figure6(points: &[SweepPoint], title: &str) -> String {
+    let mut t = Table::new(&[
+        "Skew",
+        "Strategy",
+        "Acc",
+        "Attn (ms)",
+        "Comm (ms)",
+        "FFN (ms)",
+        "Ovh (ms)",
+        "Total (ms)",
+        "Norm perf",
+    ])
+    .align(&[
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for p in points {
+        let b = &p.breakdown;
+        t.row(&[
+            f(p.skewness, 1),
+            p.strategy_name.clone(),
+            if p.accuracy.is_nan() {
+                "-".into()
+            } else {
+                f(p.accuracy, 2)
+            },
+            f((b.attention_s + b.router_s) * 1e3, 3),
+            f(b.comm_s() * 1e3, 3),
+            f(b.ffn_s * 1e3, 3),
+            f((b.overhead_s + b.movement_s) * 1e3, 3),
+            f(p.total_s * 1e3, 3),
+            f(p.normalized_perf, 3),
+        ]);
+    }
+    format!("{title}\n{}\nCSV:\n{}", t.render(), t.render_csv())
+}
+
+/// Figure 7: savings difference per (interconnect, skew).
+pub fn figure7(rows: &[SavingsComparison]) -> String {
+    let mut t = Table::new(&[
+        "BW (GB/s)",
+        "Skew",
+        "Baseline (ms)",
+        "DOP saving (ms)",
+        "TEP best saving (ms)",
+        "TEP acc",
+        "Diff (ms)",
+        "Winner",
+    ])
+    .align(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    for r in rows {
+        t.row(&[
+            f(r.interconnect_gbs, 0),
+            f(r.skewness, 1),
+            f(r.baseline_s * 1e3, 3),
+            f(r.dop_saving_s * 1e3, 3),
+            f(r.tep_best_saving_s * 1e3, 3),
+            f(r.tep_best_accuracy, 2),
+            f(r.difference_s * 1e3, 3),
+            if r.difference_s >= 0.0 {
+                "distribution-only".into()
+            } else {
+                "token-to-expert".into()
+            },
+        ]);
+    }
+    format!("{}\nCSV:\n{}", t.render(), t.render_csv())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gps::calibrate::{calibrate, CalibrationOptions};
+    use crate::gps::sweep::skew_sweep;
+    use crate::model::ModelConfig;
+    use crate::sim::hardware::SystemSpec;
+    use crate::trace::datasets;
+
+    #[test]
+    fn reports_render_nonempty() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let opts = CalibrationOptions {
+            fast: true,
+            ..Default::default()
+        };
+        let cals = vec![
+            calibrate(datasets::mmlu_like(95), &model, &system, &opts),
+            calibrate(datasets::sst2_like(96), &model, &system, &opts),
+        ];
+        let t1 = table1(&cals);
+        assert!(t1.contains("mmlu-like"));
+        assert!(t1.contains("CSV:"));
+        let f4 = figure4(&cals[0]);
+        assert!(f4.contains("probability"));
+        assert!(f4.contains("exp("));
+        let points = skew_sweep(&model, &system, &cals, &[1.4], 1, 512);
+        let f6 = figure6(&points, "fig6 test");
+        assert!(f6.contains("distribution-only"));
+        let rows = vec![crate::gps::select::strategy_savings(
+            &model, &system, &cals, 1.4, 1, 512,
+        )];
+        let f7 = figure7(&rows);
+        assert!(f7.contains("Winner"));
+    }
+}

@@ -1,0 +1,170 @@
+//! Strategy selection (the decision MoE-GPS exists to make) and the
+//! Figure-7 savings-difference series.
+
+use super::calibrate::{interpolate_for_skew, WorkloadCalibration};
+use super::sweep::accuracy_grid;
+use crate::model::ModelConfig;
+use crate::sim::hardware::SystemSpec;
+use crate::sim::moe::Strategy;
+use crate::sim::LayerSim;
+
+/// Best Token-to-Expert configuration at a skewness: the bottom of the
+/// U-shape over the accuracy grid. Returns (accuracy, total_s).
+pub fn best_tep(
+    sim: &LayerSim,
+    skew: f64,
+    overhead_fit: (f64, f64),
+    baseline_s: f64,
+) -> (f64, f64) {
+    accuracy_grid()
+        .into_iter()
+        .map(|acc| {
+            let overhead_s = overhead_fit.0 * (overhead_fit.1 * acc).exp() * baseline_s;
+            let total = sim
+                .breakdown(
+                    skew,
+                    Strategy::TokenToExpert {
+                        accuracy: acc,
+                        overhead_s,
+                    },
+                )
+                .total();
+            (acc, total)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+/// Figure-7 row: savings of each strategy vs baseline, and their difference
+/// (positive ⇒ Distribution-Only wins).
+#[derive(Clone, Debug)]
+pub struct SavingsComparison {
+    pub skewness: f64,
+    pub interconnect_gbs: f64,
+    pub baseline_s: f64,
+    pub dop_saving_s: f64,
+    pub tep_best_saving_s: f64,
+    pub tep_best_accuracy: f64,
+    /// `dop_saving − tep_saving` (the paper's Figure 7 bar height).
+    pub difference_s: f64,
+}
+
+/// Compute the savings comparison for one (system, skew).
+pub fn strategy_savings(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    seq: usize,
+) -> SavingsComparison {
+    let sim = LayerSim::new(model.clone(), system.clone()).with_workload(batch, seq);
+    let baseline_s = sim.baseline_total(skew);
+    let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
+    let dop_s = sim
+        .breakdown(skew, Strategy::DistributionOnly { error_rate: dop_error })
+        .total();
+    let (tep_acc, tep_s) = best_tep(&sim, skew, overhead_fit, baseline_s);
+    SavingsComparison {
+        skewness: skew,
+        interconnect_gbs: system.interconnect.link_bw_gbs,
+        baseline_s,
+        dop_saving_s: baseline_s - dop_s,
+        tep_best_saving_s: baseline_s - tep_s,
+        tep_best_accuracy: tep_acc,
+        difference_s: (baseline_s - dop_s) - (baseline_s - tep_s),
+    }
+}
+
+/// Which strategy MoE-GPS recommends for a configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recommendation {
+    DistributionOnly,
+    TokenToExpert,
+    /// Neither beats the baseline (rare; e.g. skew 1 with costly predictor).
+    NoPrediction,
+}
+
+impl Recommendation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Recommendation::DistributionOnly => "distribution-only",
+            Recommendation::TokenToExpert => "token-to-expert",
+            Recommendation::NoPrediction => "no-prediction",
+        }
+    }
+}
+
+/// The selection rule: the strategy with the largest positive saving.
+pub fn recommend(cmp: &SavingsComparison) -> Recommendation {
+    let eps = 1e-12;
+    if cmp.dop_saving_s <= eps && cmp.tep_best_saving_s <= eps {
+        Recommendation::NoPrediction
+    } else if cmp.dop_saving_s >= cmp.tep_best_saving_s {
+        Recommendation::DistributionOnly
+    } else {
+        Recommendation::TokenToExpert
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gps::calibrate::{calibrate, CalibrationOptions};
+    use crate::trace::datasets;
+
+    fn cals(model: &ModelConfig, system: &SystemSpec) -> Vec<WorkloadCalibration> {
+        let opts = CalibrationOptions {
+            fast: true,
+            ..Default::default()
+        };
+        vec![
+            calibrate(datasets::mmlu_like(81), model, system, &opts),
+            calibrate(datasets::sst2_like(82), model, system, &opts),
+        ]
+    }
+
+    #[test]
+    fn dop_recommended_on_nvlink_low_skew() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        let cmp = strategy_savings(&model, &system, &c, 1.4, 1, 512);
+        assert!(cmp.dop_saving_s > 0.0);
+        assert_eq!(recommend(&cmp), Recommendation::DistributionOnly);
+        assert!(cmp.difference_s > 0.0, "Figure 7 bar must be positive");
+    }
+
+    #[test]
+    fn tep_gains_ground_on_slow_interconnect() {
+        // Paper §4 takeaway: TEP becomes more effective when communication
+        // is expensive. Its *relative* position vs DOP must improve when
+        // moving from NVLink to PCIe (at high skew where accuracy is cheap).
+        let model = ModelConfig::mixtral_8x7b();
+        let nv = SystemSpec::four_a100_nvlink();
+        let pcie = SystemSpec::four_a100_pcie();
+        let c_nv = cals(&model, &nv);
+        let c_pcie = cals(&model, &pcie);
+        let skew = 4.0;
+        let on_nv = strategy_savings(&model, &nv, &c_nv, skew, 1, 512);
+        let on_pcie = strategy_savings(&model, &pcie, &c_pcie, skew, 1, 512);
+        // Normalised difference (relative to baseline) must shrink or flip.
+        let rel_nv = on_nv.difference_s / on_nv.baseline_s;
+        let rel_pcie = on_pcie.difference_s / on_pcie.baseline_s;
+        assert!(
+            rel_pcie < rel_nv,
+            "TEP should gain on PCIe: nv={rel_nv} pcie={rel_pcie}"
+        );
+    }
+
+    #[test]
+    fn best_tep_is_on_grid_and_finite() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let sim = LayerSim::new(model.clone(), system.clone());
+        let baseline = sim.baseline_total(2.0);
+        let (acc, total) = best_tep(&sim, 2.0, (0.01, 3.0), baseline);
+        assert!(accuracy_grid().contains(&acc));
+        assert!(total.is_finite() && total > 0.0);
+    }
+}

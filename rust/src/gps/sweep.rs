@@ -1,0 +1,153 @@
+//! Figure 6/8/9 sweep machinery: per-(skew, strategy, accuracy) latency
+//! breakdowns from the simulator, using calibrated DOP error and TEP
+//! overhead fits.
+
+use super::calibrate::{interpolate_for_skew, WorkloadCalibration};
+use crate::model::ModelConfig;
+use crate::sim::hardware::SystemSpec;
+use crate::sim::moe::Strategy;
+use crate::sim::{LayerBreakdown, LayerSim};
+
+/// One evaluated configuration in the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub skewness: f64,
+    pub strategy_name: String,
+    /// Accuracy for TEP points; NaN otherwise.
+    pub accuracy: f64,
+    pub breakdown: LayerBreakdown,
+    pub total_s: f64,
+    /// baseline_total / total (≥ 1 means the strategy helps).
+    pub normalized_perf: f64,
+}
+
+/// The accuracy grid the TEP curves are evaluated on (Figure 6's x points).
+pub fn accuracy_grid() -> Vec<f64> {
+    vec![0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99]
+}
+
+/// Produce the Figure-6 family for one (model, system): for each skewness,
+/// the baseline, the Distribution-Only point, and the TEP accuracy curve
+/// (with overhead from the calibrated exponential fit, interpolated in
+/// skew exactly as the paper does, §4).
+pub fn skew_sweep(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skews: &[f64],
+    batch: usize,
+    seq: usize,
+) -> Vec<SweepPoint> {
+    let sim = LayerSim::new(model.clone(), system.clone()).with_workload(batch, seq);
+    let mut out = Vec::new();
+    for &skew in skews {
+        let baseline = sim.breakdown(skew, Strategy::NoPrediction);
+        let baseline_total = baseline.total();
+        out.push(SweepPoint {
+            skewness: skew,
+            strategy_name: "baseline".into(),
+            accuracy: f64::NAN,
+            total_s: baseline_total,
+            normalized_perf: 1.0,
+            breakdown: baseline,
+        });
+
+        let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
+        let dop = sim.breakdown(skew, Strategy::DistributionOnly { error_rate: dop_error });
+        out.push(SweepPoint {
+            skewness: skew,
+            strategy_name: "distribution-only".into(),
+            accuracy: f64::NAN,
+            total_s: dop.total(),
+            normalized_perf: baseline_total / dop.total(),
+            breakdown: dop,
+        });
+
+        for &acc in &accuracy_grid() {
+            let overhead_ratio = overhead_fit.0 * (overhead_fit.1 * acc).exp();
+            let overhead_s = overhead_ratio * baseline_total;
+            let tep = sim.breakdown(
+                skew,
+                Strategy::TokenToExpert {
+                    accuracy: acc,
+                    overhead_s,
+                },
+            );
+            out.push(SweepPoint {
+                skewness: skew,
+                strategy_name: "token-to-expert".into(),
+                accuracy: acc,
+                total_s: tep.total(),
+                normalized_perf: baseline_total / tep.total(),
+                breakdown: tep,
+            });
+        }
+    }
+    out
+}
+
+/// The skewness levels Figure 6 plots.
+pub fn figure6_skews() -> Vec<f64> {
+    vec![1.0, 1.4, 2.0, 3.0, 4.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gps::calibrate::{calibrate, CalibrationOptions};
+    use crate::trace::datasets;
+
+    fn fast_cals(model: &ModelConfig, system: &SystemSpec) -> Vec<WorkloadCalibration> {
+        let opts = CalibrationOptions {
+            fast: true,
+            ..Default::default()
+        };
+        vec![
+            calibrate(datasets::mmlu_like(71), model, system, &opts),
+            calibrate(datasets::sst2_like(72), model, system, &opts),
+        ]
+    }
+
+    #[test]
+    fn sweep_has_expected_shape() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let cals = fast_cals(&model, &system);
+        let points = skew_sweep(&model, &system, &cals, &[1.4, 2.0], 1, 512);
+        // Per skew: 1 baseline + 1 DOP + |grid| TEP points.
+        assert_eq!(points.len(), 2 * (2 + accuracy_grid().len()));
+        let baselines: Vec<&SweepPoint> = points
+            .iter()
+            .filter(|p| p.strategy_name == "baseline")
+            .collect();
+        assert!(baselines.iter().all(|p| p.normalized_perf == 1.0));
+        // Higher skew → slower baseline.
+        assert!(baselines[1].total_s > baselines[0].total_s);
+    }
+
+    #[test]
+    fn dop_wins_at_low_skew_on_nvlink() {
+        // The paper's headline: at skew ~1.4 on NVLink, Distribution-Only
+        // beats the best Token-to-Expert configuration.
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let cals = fast_cals(&model, &system);
+        let points = skew_sweep(&model, &system, &cals, &[1.4], 1, 512);
+        let dop = points
+            .iter()
+            .find(|p| p.strategy_name == "distribution-only")
+            .unwrap();
+        let best_tep = points
+            .iter()
+            .filter(|p| p.strategy_name == "token-to-expert")
+            .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+            .unwrap();
+        assert!(
+            dop.total_s < best_tep.total_s,
+            "dop={} best_tep={} (acc={})",
+            dop.total_s,
+            best_tep.total_s,
+            best_tep.accuracy
+        );
+    }
+}

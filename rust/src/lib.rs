@@ -1,0 +1,50 @@
+//! # MoE-GPS
+//!
+//! Reproduction of *"MoE-GPS: Guidelines for Prediction Strategy for Dynamic
+//! Expert Duplication in MoE Load Balancing"* (Ma, Du, Chen — cs.LG 2025) as a
+//! three-layer rust + JAX + Pallas serving stack.
+//!
+//! The crate is organised as:
+//!
+//! * [`util`] / [`testing`] / [`bench`] — dependency-free substrates (PRNG,
+//!   JSON, CLI args, stats, property testing, micro-benchmark harness). The
+//!   build environment only ships the `xla` and `anyhow` crates, so everything
+//!   else is implemented here.
+//! * [`sim`] — an LLMCompass-like block-level performance simulator for
+//!   transformer inference (roofline compute costs, collective communication,
+//!   attention/FFN/MoE layer models, prediction-error models).
+//! * [`model`] — model architecture configurations (Mixtral 8×7B / 8×22B,
+//!   LLaMA-MoE, Switch Transformer, and the tiny serving model).
+//! * [`trace`] — synthetic routing-trace generation calibrated to the paper's
+//!   measured dataset skewness (MMLU ≈ 1.39, Alpaca Eval ≈ 1.40, SST2 ≈ 1.99).
+//! * [`predictor`] — the paper's prediction strategies: Distribution-Only
+//!   (multinomial MLE) and Token-to-Expert (probability, conditional
+//!   probability, neural network predictors) plus the accuracy↔overhead model.
+//! * [`duplication`] — Algorithm 1 (dynamic expert duplication) and token
+//!   dispatch.
+//! * [`gps`] — the MoE-GPS framework proper: sweeps, strategy selection and
+//!   the Figure-1 guideline output.
+//! * [`runtime`] — PJRT engine: loads AOT-compiled HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the request
+//!   path (python is never on the request path).
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   virtual-GPU expert-parallel workers, and the predictor-driven expert
+//!   placement manager.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment index
+//! mapping every table and figure of the paper to a bench target.
+
+pub mod bench;
+pub mod coordinator;
+pub mod duplication;
+pub mod gps;
+pub mod model;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod trace;
+pub mod util;
+
+/// Crate version, re-exported for the CLI `--version` flag.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,270 @@
+//! `moe-gps` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate      one (model, system, skew, strategy) → latency breakdown
+//!   sweep         Figure-6-style grid over skew × strategy × accuracy
+//!   advise        Figure-1 guideline decision map
+//!   trace         generate + inspect a synthetic routing trace
+//!   predict       train/evaluate the predictor zoo on a dataset emulator
+//!   serve         run the real tiny-MoE serving driver (requires artifacts)
+//!   bench-report  regenerate a paper table/figure (table1, fig4, fig6, fig7)
+
+use anyhow::Result;
+
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, ServeStrategy};
+use moe_gps::gps::{self, calibrate, CalibrationOptions};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{LayerSim, SystemSpec};
+use moe_gps::trace::{datasets, Trace};
+use moe_gps::util::args::Args;
+
+fn main() {
+    let args = Args::from_env(&["fast", "csv", "help", "version"]);
+    if args.flag("version") {
+        println!("moe-gps {}", moe_gps::VERSION);
+        return;
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("advise") => cmd_advise(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-report") => cmd_bench_report(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(err) = result {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "moe-gps {} — prediction-strategy selection for MoE expert duplication
+
+USAGE: moe-gps <subcommand> [options]
+
+  simulate     --model mixtral-8x7b --system nvlink|pcie|<GB/s> --skew 1.4
+               [--strategy none|dop|tep --accuracy 0.9 --batch 1 --seq 512
+                --error-model typical]
+  sweep        --model ... --system ... [--skews 1.0,1.4,2.0,3.0,4.0 --fast]
+  advise       --model ... [--skews ... --bandwidths 600,300,128,64 --fast]
+  trace        --dataset mmlu|alpaca|sst2 [--seed 7]
+  predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
+  serve        --strategy none|dop|tep [--workers 4 --rounds 8 --seqs 4
+                --artifacts artifacts]
+  bench-report table1|fig4|fig6|fig7 [--fast]
+",
+        moe_gps::VERSION
+    );
+}
+
+fn parse_system(args: &Args) -> Result<SystemSpec> {
+    Ok(match args.opt_or("system", "nvlink") {
+        "nvlink" => SystemSpec::four_a100_nvlink(),
+        "pcie" => SystemSpec::four_a100_pcie(),
+        other => SystemSpec::four_a100_custom_bw(
+            other
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--system expects nvlink|pcie|<GB/s>"))?,
+        ),
+    })
+}
+
+fn parse_model(args: &Args) -> Result<ModelConfig> {
+    ModelConfig::by_name(args.opt_or("model", "mixtral-8x7b"))
+}
+
+fn dataset_spec(name: &str, seed: u64) -> Result<moe_gps::trace::TraceSpec> {
+    Ok(match name {
+        "mmlu" => datasets::mmlu_like(seed),
+        "alpaca" => datasets::alpaca_like(seed),
+        "sst2" => datasets::sst2_like(seed),
+        other => anyhow::bail!("unknown dataset `{other}` (mmlu|alpaca|sst2)"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let system = parse_system(args)?;
+    let skew = args.opt_f64("skew", 1.4)?;
+    let batch = args.opt_usize("batch", 1)?;
+    let seq = args.opt_usize("seq", 512)?;
+    let mut sim = LayerSim::new(model, system).with_workload(batch, seq);
+    sim.error_model =
+        moe_gps::sim::ErrorModel::by_name(args.opt_or("error-model", "typical"))?;
+    let strategy = match args.opt_or("strategy", "none") {
+        "none" => Strategy::NoPrediction,
+        "dop" | "distribution-only" => Strategy::DistributionOnly {
+            error_rate: args.opt_f64("error-rate", 0.018)?,
+        },
+        "tep" | "token-to-expert" => Strategy::TokenToExpert {
+            accuracy: args.opt_f64("accuracy", 0.9)?,
+            overhead_s: args.opt_f64("overhead-ms", 0.1)? * 1e-3,
+        },
+        other => anyhow::bail!("unknown strategy `{other}`"),
+    };
+    let b = sim.breakdown(skew, strategy);
+    println!("{}", b.to_json().to_string_pretty());
+    println!(
+        "normalized performance vs baseline: {:.3}",
+        sim.normalized_performance(skew, strategy)
+    );
+    Ok(())
+}
+
+fn calibrations(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    fast: bool,
+    seed: u64,
+) -> Vec<gps::WorkloadCalibration> {
+    let opts = CalibrationOptions {
+        fast,
+        ..Default::default()
+    };
+    datasets::all(seed)
+        .into_iter()
+        .map(|spec| calibrate(spec, model, system, &opts))
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let system = parse_system(args)?;
+    let skews = args.opt_f64_list("skews", &gps::sweep::figure6_skews())?;
+    let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
+    let points = gps::skew_sweep(&model, &system, &cals, &skews, 1, 512);
+    println!(
+        "{}",
+        gps::report::figure6(
+            &points,
+            &format!("{} on {}", model.name, system.interconnect.name)
+        )
+    );
+    Ok(())
+}
+
+fn cmd_advise(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
+    let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
+    let cells =
+        gps::guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512);
+    println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
+    println!("{}", gps::guidelines::summarize(&cells));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let spec = dataset_spec(args.opt_or("dataset", "mmlu"), args.opt_u64("seed", 7)?)?;
+    let trace = Trace::generate(spec);
+    println!("trace: {}", trace.spec.name);
+    println!(
+        "  batches: {}   tokens: {}",
+        trace.batches.len(),
+        trace.n_tokens()
+    );
+    println!("  avg skewness: {:.3}", trace.avg_skewness());
+    let counts = trace.expert_counts();
+    println!("  expert counts: {counts:?}");
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let system = parse_system(args)?;
+    let spec = dataset_spec(args.opt_or("dataset", "mmlu"), args.opt_u64("seed", 7)?)?;
+    let opts = CalibrationOptions {
+        fast: args.flag("fast"),
+        ..Default::default()
+    };
+    let cal = calibrate(spec, &model, &system, &opts);
+    println!("{}", gps::report::figure4(&cal));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let strategy = ServeStrategy::by_name(args.opt_or("strategy", "dop"))?;
+    let artifacts = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let workers = args.opt_usize("workers", 4)?;
+    let rounds = args.opt_usize("rounds", 8)?;
+    let seqs = args.opt_usize("seqs", 4)?;
+    let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
+    let mut gen = RequestGen::new(args.opt_u64("seed", 11)?, coord.vocab());
+    let max_len = coord.seq_len();
+    let batches: Vec<Vec<_>> = (0..rounds)
+        .map(|_| {
+            (0..seqs)
+                .map(|_| gen.request_varlen(max_len / 4, max_len))
+                .collect()
+        })
+        .collect();
+    let report = coord.serve(batches)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    let what = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table1");
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let fast = args.flag("fast");
+    match what {
+        "table1" => {
+            let cals = calibrations(&model, &system, fast, 7);
+            println!("{}", gps::report::table1(&cals));
+        }
+        "fig4" => {
+            for cal in calibrations(&model, &system, fast, 7) {
+                println!("{}", gps::report::figure4(&cal));
+            }
+        }
+        "fig6" => {
+            for sys in [SystemSpec::four_a100_nvlink(), SystemSpec::four_a100_pcie()] {
+                let cals = calibrations(&model, &sys, fast, 7);
+                let points = gps::skew_sweep(
+                    &model,
+                    &sys,
+                    &cals,
+                    &gps::sweep::figure6_skews(),
+                    1,
+                    512,
+                );
+                println!(
+                    "{}",
+                    gps::report::figure6(
+                        &points,
+                        &format!("Figure 6 — {}", sys.interconnect.name)
+                    )
+                );
+            }
+        }
+        "fig7" => {
+            let mut rows = Vec::new();
+            for bw in [600.0, 300.0, 128.0, 64.0] {
+                let sys = SystemSpec::four_a100_custom_bw(bw);
+                let cals = calibrations(&model, &sys, fast, 7);
+                for skew in [1.4, 2.0, 3.0, 4.0] {
+                    rows.push(gps::strategy_savings(&model, &sys, &cals, skew, 1, 512));
+                }
+            }
+            println!("{}", gps::report::figure7(&rows));
+        }
+        other => anyhow::bail!("unknown report `{other}` (table1|fig4|fig6|fig7)"),
+    }
+    Ok(())
+}

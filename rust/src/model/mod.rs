@@ -1,0 +1,418 @@
+//! Model architecture configurations.
+//!
+//! The paper evaluates Mixtral 8×7B (main), Mixtral 8×22B (scaling
+//! discussion), LLaMA-MoE (Appendix C / Figure 8) and Switch Transformer
+//! (Appendix C / Figure 9). We also define the tiny MoE used by the real
+//! serving driver (`examples/serve_moe.rs`), whose weights are generated and
+//! AOT-compiled by `python/compile/aot.py`.
+
+use crate::sim::hardware::Dtype;
+use crate::util::json::Value;
+
+/// Attention flavour (paper §5 "Generality across model architectures").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionKind {
+    /// Multi-head attention (Switch Transformer).
+    Mha,
+    /// Grouped-query attention (Mixtral, LLaMA).
+    Gqa,
+    /// Multi-head latent attention (DeepSeek) — modelled via a KV
+    /// compression rank.
+    Mla,
+}
+
+/// FFN activation (paper §5: Mixtral/LLaMA SwiGLU, Switch ReLU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FfnActivation {
+    /// Gated SiLU: three weight matrices (gate, up, down).
+    SwiGlu,
+    /// Plain ReLU MLP: two weight matrices.
+    Relu,
+    /// Gated GELU: three matrices.
+    GeGlu,
+}
+
+impl FfnActivation {
+    /// Number of `d_model × d_ff`-sized weight matrices per expert.
+    pub fn n_matrices(self) -> usize {
+        match self {
+            FfnActivation::SwiGlu | FfnActivation::GeGlu => 3,
+            FfnActivation::Relu => 2,
+        }
+    }
+}
+
+/// One transformer layer's architecture (the simulator works per layer,
+/// matching the paper's single-layer latency figures).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    /// Query heads.
+    pub n_heads: usize,
+    /// KV heads (== n_heads for MHA; fewer for GQA).
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Expert hidden dimension.
+    pub d_ff: usize,
+    /// Number of experts per layer.
+    pub n_experts: usize,
+    /// Experts activated per token (top-k routing).
+    pub top_k: usize,
+    /// Number of transformer layers (full-model scaling; the per-layer
+    /// simulator multiplies by this only when asked).
+    pub n_layers: usize,
+    /// Sliding-window size; `None` = full causal attention.
+    pub sliding_window: Option<usize>,
+    pub attention: AttentionKind,
+    /// KV compression rank for MLA; ignored otherwise.
+    pub mla_kv_rank: usize,
+    pub activation: FfnActivation,
+    pub vocab_size: usize,
+    pub dtype: Dtype,
+}
+
+impl ModelConfig {
+    /// Mixtral 8×7B [14]: d=4096, 32 q-heads / 8 kv-heads (GQA), head 128,
+    /// d_ff=14336, 8 experts top-2, 32 layers, 4K sliding window, SwiGLU.
+    pub fn mixtral_8x7b() -> ModelConfig {
+        ModelConfig {
+            name: "mixtral-8x7b".into(),
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14336,
+            n_experts: 8,
+            top_k: 2,
+            n_layers: 32,
+            sliding_window: Some(4096),
+            attention: AttentionKind::Gqa,
+            mla_kv_rank: 0,
+            activation: FfnActivation::SwiGlu,
+            vocab_size: 32000,
+            dtype: Dtype::Fp16,
+        }
+    }
+
+    /// Mixtral 8×22B: d=6144, 48/8 heads, d_ff=16384, 56 layers.
+    pub fn mixtral_8x22b() -> ModelConfig {
+        ModelConfig {
+            name: "mixtral-8x22b".into(),
+            d_model: 6144,
+            n_heads: 48,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 16384,
+            n_experts: 8,
+            top_k: 2,
+            n_layers: 56,
+            sliding_window: None,
+            attention: AttentionKind::Gqa,
+            mla_kv_rank: 0,
+            activation: FfnActivation::SwiGlu,
+            vocab_size: 32768,
+            dtype: Dtype::Fp16,
+        }
+    }
+
+    /// LLaMA-MoE-3.5B [37] (Figure 8): LLaMA-2-7B re-sliced into 16 experts
+    /// with top-4 routing, SwiGLU, no sliding window, MHA-style (32/32).
+    pub fn llama_moe() -> ModelConfig {
+        ModelConfig {
+            name: "llama-moe-3.5b".into(),
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            d_ff: 2752, // 11008 / 16 * 4 — expert slices of the dense FFN
+            n_experts: 16,
+            top_k: 4,
+            n_layers: 32,
+            sliding_window: None,
+            attention: AttentionKind::Gqa, // n_kv == n_heads → effectively MHA
+            mla_kv_rank: 0,
+            activation: FfnActivation::SwiGlu,
+            vocab_size: 32000,
+            dtype: Dtype::Fp16,
+        }
+    }
+
+    /// Switch Transformer (base) [7] (Figure 9): d=768, 12 heads MHA,
+    /// d_ff=3072 ReLU, 8 experts top-1 (switch routing), no GQA.
+    pub fn switch_transformer() -> ModelConfig {
+        ModelConfig {
+            name: "switch-base-8".into(),
+            d_model: 768,
+            n_heads: 12,
+            n_kv_heads: 12,
+            head_dim: 64,
+            d_ff: 3072,
+            n_experts: 8,
+            top_k: 1,
+            n_layers: 12,
+            sliding_window: None,
+            attention: AttentionKind::Mha,
+            mla_kv_rank: 0,
+            activation: FfnActivation::Relu,
+            vocab_size: 32128,
+            dtype: Dtype::Fp16,
+        }
+    }
+
+    /// DeepSeek-style MLA variant used by the §5 generality discussion.
+    pub fn deepseek_like() -> ModelConfig {
+        ModelConfig {
+            name: "deepseek-like".into(),
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            d_ff: 1408,
+            n_experts: 64,
+            top_k: 6,
+            n_layers: 27,
+            sliding_window: None,
+            attention: AttentionKind::Mla,
+            mla_kv_rank: 512,
+            activation: FfnActivation::SwiGlu,
+            vocab_size: 102400,
+            dtype: Dtype::Fp16,
+        }
+    }
+
+    /// The tiny MoE actually served end-to-end by the coordinator
+    /// (weights generated + AOT-compiled by `python/compile/aot.py`).
+    /// Must stay in sync with `python/compile/model.py::TINY_CONFIG`.
+    pub fn tiny_serve() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-moe-serve".into(),
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 512,
+            n_experts: 8,
+            top_k: 2,
+            n_layers: 4,
+            sliding_window: None,
+            attention: AttentionKind::Gqa,
+            mla_kv_rank: 0,
+            activation: FfnActivation::SwiGlu,
+            vocab_size: 4096,
+            dtype: Dtype::Fp32,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn by_name(name: &str) -> anyhow::Result<ModelConfig> {
+        match name {
+            "mixtral-8x7b" | "mixtral" => Ok(Self::mixtral_8x7b()),
+            "mixtral-8x22b" => Ok(Self::mixtral_8x22b()),
+            "llama-moe" | "llama-moe-3.5b" => Ok(Self::llama_moe()),
+            "switch" | "switch-base-8" | "switch-transformer" => {
+                Ok(Self::switch_transformer())
+            }
+            "deepseek-like" => Ok(Self::deepseek_like()),
+            "tiny" | "tiny-moe-serve" => Ok(Self::tiny_serve()),
+            other => anyhow::bail!(
+                "unknown model `{other}` (try mixtral-8x7b, mixtral-8x22b, \
+                 llama-moe, switch, deepseek-like, tiny)"
+            ),
+        }
+    }
+
+    /// Bytes of one expert's weights (the unit moved by duplication).
+    /// Mixtral 8×7B: 3 × 4096 × 14336 × 2 B ≈ 352 MB; the paper's §5
+    /// back-of-envelope uses 2 matrices (`4096·14336·2·2`) ≈ 235 MB.
+    pub fn expert_bytes(&self) -> f64 {
+        self.activation.n_matrices() as f64
+            * self.d_model as f64
+            * self.d_ff as f64
+            * self.dtype.bytes() as f64
+    }
+
+    /// Total parameter count of one layer (attention + all experts).
+    pub fn layer_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let attn = match self.attention {
+            AttentionKind::Mla => {
+                // q proj + compressed kv projections + out proj (coarse).
+                d * (self.n_heads * self.head_dim) as f64 * 2.0
+                    + d * self.mla_kv_rank as f64 * 2.0
+            }
+            _ => {
+                let q = d * (self.n_heads * self.head_dim) as f64;
+                let kv = 2.0 * d * (self.n_kv_heads * self.head_dim) as f64;
+                let o = (self.n_heads * self.head_dim) as f64 * d;
+                q + kv + o
+            }
+        };
+        attn + self.n_experts as f64 * self.expert_bytes() / self.dtype.bytes() as f64
+            + d * self.n_experts as f64 // router
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", Value::Str(self.name.clone()))
+            .set("d_model", Value::Num(self.d_model as f64))
+            .set("n_heads", Value::Num(self.n_heads as f64))
+            .set("n_kv_heads", Value::Num(self.n_kv_heads as f64))
+            .set("head_dim", Value::Num(self.head_dim as f64))
+            .set("d_ff", Value::Num(self.d_ff as f64))
+            .set("n_experts", Value::Num(self.n_experts as f64))
+            .set("top_k", Value::Num(self.top_k as f64))
+            .set("n_layers", Value::Num(self.n_layers as f64))
+            .set(
+                "sliding_window",
+                match self.sliding_window {
+                    Some(w) => Value::Num(w as f64),
+                    None => Value::Null,
+                },
+            )
+            .set(
+                "attention",
+                Value::Str(
+                    match self.attention {
+                        AttentionKind::Mha => "mha",
+                        AttentionKind::Gqa => "gqa",
+                        AttentionKind::Mla => "mla",
+                    }
+                    .into(),
+                ),
+            )
+            .set("mla_kv_rank", Value::Num(self.mla_kv_rank as f64))
+            .set(
+                "activation",
+                Value::Str(
+                    match self.activation {
+                        FfnActivation::SwiGlu => "swiglu",
+                        FfnActivation::Relu => "relu",
+                        FfnActivation::GeGlu => "geglu",
+                    }
+                    .into(),
+                ),
+            )
+            .set("vocab_size", Value::Num(self.vocab_size as f64))
+            .set(
+                "dtype",
+                Value::Str(
+                    match self.dtype {
+                        Dtype::Fp16 => "fp16",
+                        Dtype::Bf16 => "bf16",
+                        Dtype::Fp32 => "fp32",
+                    }
+                    .into(),
+                ),
+            );
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<ModelConfig> {
+        let attention = match v.req_str("attention")? {
+            "mha" => AttentionKind::Mha,
+            "gqa" => AttentionKind::Gqa,
+            "mla" => AttentionKind::Mla,
+            other => anyhow::bail!("unknown attention kind `{other}`"),
+        };
+        let activation = match v.req_str("activation")? {
+            "swiglu" => FfnActivation::SwiGlu,
+            "relu" => FfnActivation::Relu,
+            "geglu" => FfnActivation::GeGlu,
+            other => anyhow::bail!("unknown activation `{other}`"),
+        };
+        let dtype = match v.req_str("dtype")? {
+            "fp16" => Dtype::Fp16,
+            "bf16" => Dtype::Bf16,
+            "fp32" => Dtype::Fp32,
+            other => anyhow::bail!("unknown dtype `{other}`"),
+        };
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            d_model: v.req_usize("d_model")?,
+            n_heads: v.req_usize("n_heads")?,
+            n_kv_heads: v.req_usize("n_kv_heads")?,
+            head_dim: v.req_usize("head_dim")?,
+            d_ff: v.req_usize("d_ff")?,
+            n_experts: v.req_usize("n_experts")?,
+            top_k: v.req_usize("top_k")?,
+            n_layers: v.req_usize("n_layers")?,
+            sliding_window: match v.get("sliding_window") {
+                Some(Value::Null) | None => None,
+                Some(x) => Some(
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("bad sliding_window"))?,
+                ),
+            },
+            attention,
+            mla_kv_rank: v.req_usize("mla_kv_rank")?,
+            activation,
+            vocab_size: v.req_usize("vocab_size")?,
+            dtype,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in [
+            "mixtral-8x7b",
+            "mixtral-8x22b",
+            "llama-moe",
+            "switch",
+            "deepseek-like",
+            "tiny",
+        ] {
+            let m = ModelConfig::by_name(name).unwrap();
+            assert!(m.n_experts >= 8);
+            assert!(m.top_k >= 1 && m.top_k <= m.n_experts);
+        }
+        assert!(ModelConfig::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn mixtral_expert_bytes_matches_paper_scale() {
+        // Paper §5 counts 2 matrices: 4096*14336*2*2 ≈ 235 MB. With the
+        // full 3-matrix SwiGLU expert we get 1.5×that ≈ 352 MB.
+        let m = ModelConfig::mixtral_8x7b();
+        let paper_two_matrices = 4096.0 * 14336.0 * 2.0 * 2.0;
+        assert!((m.expert_bytes() / paper_two_matrices - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn switch_uses_two_matrices() {
+        let m = ModelConfig::switch_transformer();
+        assert_eq!(m.activation.n_matrices(), 2);
+        assert_eq!(m.top_k, 1);
+    }
+
+    #[test]
+    fn json_round_trip_all_presets() {
+        for mk in [
+            ModelConfig::mixtral_8x7b,
+            ModelConfig::mixtral_8x22b,
+            ModelConfig::llama_moe,
+            ModelConfig::switch_transformer,
+            ModelConfig::deepseek_like,
+            ModelConfig::tiny_serve,
+        ] {
+            let m = mk();
+            let text = m.to_json().to_string_pretty();
+            let parsed =
+                ModelConfig::from_json(&Value::parse(&text).unwrap()).unwrap();
+            assert_eq!(m, parsed);
+        }
+    }
+
+    #[test]
+    fn layer_params_mixtral_magnitude() {
+        // Mixtral 8x7B total params ≈ 46.7B over 32 layers → ~1.4B/layer.
+        let m = ModelConfig::mixtral_8x7b();
+        let p = m.layer_params();
+        assert!(p > 1.0e9 && p < 2.0e9, "p={p}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Predictor evaluation harness: accuracy, per-expert confusion, and the
+//! predicted-vs-actual load comparison the duplication planner consumes.
+
+use super::TokenPredictor;
+use crate::trace::Trace;
+
+/// Top-1 prediction accuracy over every token of the test trace.
+pub fn accuracy(predictor: &dyn TokenPredictor, test: &Trace) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for batch in &test.batches {
+        let preds = predictor.predict_batch(batch);
+        for (seq, pred_seq) in batch.sequences.iter().zip(&preds) {
+            for (tok, &pred) in seq.iter().zip(pred_seq) {
+                total += 1;
+                if tok.expert == pred {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Confusion matrix `confusion[actual][predicted]`.
+pub fn confusion(predictor: &dyn TokenPredictor, test: &Trace) -> Vec<Vec<usize>> {
+    let e = test.spec.n_experts;
+    let mut m = vec![vec![0usize; e]; e];
+    for batch in &test.batches {
+        let preds = predictor.predict_batch(batch);
+        for (seq, pred_seq) in batch.sequences.iter().zip(&preds) {
+            for (tok, &pred) in seq.iter().zip(pred_seq) {
+                m[tok.expert as usize][pred as usize] += 1;
+            }
+        }
+    }
+    m
+}
+
+/// Predicted per-expert loads for one batch — what the placement manager
+/// feeds to Algorithm 1 under Token-to-Expert prediction.
+pub fn predicted_loads(
+    predictor: &dyn TokenPredictor,
+    batch: &crate::trace::Batch,
+    n_experts: usize,
+) -> Vec<usize> {
+    let mut counts = vec![0usize; n_experts];
+    for pred_seq in predictor.predict_batch(batch) {
+        for &e in &pred_seq {
+            counts[e as usize] += 1;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::probability::ProbabilityModel;
+    use crate::trace::{datasets, Trace};
+
+    #[test]
+    fn accuracy_bounds() {
+        let trace = Trace::generate(datasets::mmlu_like(51));
+        let (train, test) = trace.split(0.8);
+        let mut m = ProbabilityModel::new();
+        m.fit(&train);
+        let acc = accuracy(&m, &test);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn confusion_sums_to_token_count() {
+        let trace = Trace::generate(datasets::mmlu_like(52));
+        let (train, test) = trace.split(0.8);
+        let mut m = ProbabilityModel::new();
+        m.fit(&train);
+        let c = confusion(&m, &test);
+        let sum: usize = c.iter().flat_map(|r| r.iter()).sum();
+        assert_eq!(sum, test.n_tokens());
+        // Diagonal fraction equals accuracy.
+        let diag: usize = (0..8).map(|i| c[i][i]).sum();
+        let acc = accuracy(&m, &test);
+        assert!((diag as f64 / sum as f64 - acc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predicted_loads_conserve_tokens() {
+        let trace = Trace::generate(datasets::mmlu_like(53));
+        let (train, test) = trace.split(0.8);
+        let mut m = ProbabilityModel::new();
+        m.fit(&train);
+        let loads = predicted_loads(&m, &test.batches[0], 8);
+        assert_eq!(
+            loads.iter().sum::<usize>(),
+            test.batches[0].n_tokens()
+        );
+    }
+}

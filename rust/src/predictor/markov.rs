@@ -1,0 +1,162 @@
+//! Bigram (context-conditioned) model — the sequence-context predictor.
+//!
+//! The paper's LSTM predictor exploits temporal dependencies between tokens
+//! (Appendix B). We cannot train an LSTM in torch here, so — per DESIGN.md
+//! §3 — the *context-capturing* predictor is a bigram frequency model: it
+//! conditions the expert frequency table on the (previous-token, token)
+//! pair, backed off to the unigram conditional, backed off to the global
+//! argmax. This captures exactly the context signal (`mu`) the trace
+//! generator injects, the same way an LSTM captures context in the paper's
+//! real traces. Its *runtime overhead* is priced separately in `overhead`
+//! (where the paper's actual LSTM serial-scan cost is modelled).
+
+use std::collections::HashMap;
+
+use super::conditional::{ConditionalModel, Conditioning};
+use super::TokenPredictor;
+use crate::trace::{Batch, Trace};
+
+#[derive(Clone, Debug)]
+pub struct BigramModel {
+    n_experts: usize,
+    /// (prev_id, id) → per-expert counts.
+    counts: HashMap<(u32, u32), Vec<u32>>,
+    /// Minimum observations before the bigram row is trusted.
+    pub min_support: u32,
+    fallback: ConditionalModel,
+}
+
+impl BigramModel {
+    pub fn new() -> BigramModel {
+        BigramModel {
+            n_experts: 0,
+            counts: HashMap::new(),
+            min_support: 2,
+            fallback: ConditionalModel::new(Conditioning::TokenId),
+        }
+    }
+
+    /// Number of bigram rows learned (used by the overhead model).
+    pub fn table_rows(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+impl Default for BigramModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TokenPredictor for BigramModel {
+    fn name(&self) -> String {
+        "bigram-context".into()
+    }
+
+    fn fit(&mut self, train: &Trace) {
+        self.n_experts = train.spec.n_experts;
+        self.counts.clear();
+        for batch in &train.batches {
+            for seq in &batch.sequences {
+                for pair in seq.windows(2) {
+                    let key = (pair[0].id, pair[1].id);
+                    let row = self
+                        .counts
+                        .entry(key)
+                        .or_insert_with(|| vec![0u32; self.n_experts]);
+                    row[pair[1].expert as usize] += 1;
+                }
+            }
+        }
+        self.fallback.fit(train);
+    }
+
+    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
+        let fallback_preds = self.fallback.predict_batch(batch);
+        batch
+            .sequences
+            .iter()
+            .zip(fallback_preds)
+            .map(|(seq, fb)| {
+                seq.iter()
+                    .enumerate()
+                    .map(|(pos, tok)| {
+                        if pos == 0 {
+                            return fb[pos];
+                        }
+                        let key = (seq[pos - 1].id, tok.id);
+                        match self.counts.get(&key) {
+                            Some(row) if row.iter().sum::<u32>() >= self.min_support => {
+                                row.iter()
+                                    .enumerate()
+                                    .max_by_key(|&(_, c)| *c)
+                                    .map(|(i, _)| i as u8)
+                                    .unwrap_or(fb[pos])
+                            }
+                            _ => fb[pos],
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::accuracy::accuracy;
+    use crate::trace::{datasets, generator::TraceSpec, Trace};
+
+    /// A spec with strong context signal so the bigram model shows its
+    /// advantage clearly.
+    fn contextual_spec(seed: u64) -> TraceSpec {
+        TraceSpec {
+            mu: 0.5,
+            lambda: 0.3,
+            vocab_size: 64, // small vocab → bigram rows well supported
+            drift: 0.0,
+            ..datasets::mmlu_like(seed)
+        }
+    }
+
+    #[test]
+    fn bigram_beats_unigram_on_contextual_traces() {
+        let trace = Trace::generate(contextual_spec(31));
+        let (train, test) = trace.split(0.8);
+        let mut bigram = BigramModel::new();
+        bigram.fit(&train);
+        let mut unigram = ConditionalModel::new(Conditioning::TokenId);
+        unigram.fit(&train);
+        let acc_bi = accuracy(&bigram, &test);
+        let acc_uni = accuracy(&unigram, &test);
+        assert!(
+            acc_bi > acc_uni + 0.05,
+            "bigram={acc_bi} unigram={acc_uni}"
+        );
+    }
+
+    #[test]
+    fn falls_back_gracefully_without_context_signal() {
+        let mut spec = datasets::mmlu_like(32);
+        spec.mu = 0.0;
+        let trace = Trace::generate(spec);
+        let (train, test) = trace.split(0.8);
+        let mut bigram = BigramModel::new();
+        bigram.fit(&train);
+        let mut unigram = ConditionalModel::new(Conditioning::TokenId);
+        unigram.fit(&train);
+        let acc_bi = accuracy(&bigram, &test);
+        let acc_uni = accuracy(&unigram, &test);
+        // Without context signal the bigram should not be much worse.
+        assert!(acc_bi > acc_uni - 0.06, "bigram={acc_bi} unigram={acc_uni}");
+    }
+
+    #[test]
+    fn table_grows_with_data() {
+        let trace = Trace::generate(contextual_spec(33));
+        let mut bigram = BigramModel::new();
+        bigram.fit(&trace);
+        assert!(bigram.table_rows() > 1000);
+    }
+}

@@ -1,0 +1,48 @@
+//! Prediction strategies for dynamic expert duplication (paper §3.2).
+//!
+//! Two families:
+//!
+//! * **Distribution-Only** ([`distribution`]) — a multinomial MLE over
+//!   observed routing history (Appendix A): predicts per-expert token
+//!   *shares*, maintained as a moving average offline, zero request-path
+//!   overhead.
+//! * **Token-to-Expert** — per-token expert classification (Appendix B):
+//!   [`probability`] (global argmax), [`conditional`] (token- or
+//!   position-conditioned argmax), [`markov`] (bigram/context model — our
+//!   stand-in for the sequence context the paper's LSTM exploits, see
+//!   DESIGN.md §3), and [`neural`] (an MLP with learned token embeddings,
+//!   trained in rust with Adam; the AOT/PJRT-served variant lives in
+//!   `runtime`/`coordinator`).
+//!
+//! [`overhead`] prices each predictor's request-path runtime on the
+//! simulated hardware, and [`accuracy`] is the shared evaluation harness.
+
+pub mod accuracy;
+pub mod conditional;
+pub mod distribution;
+pub mod markov;
+pub mod neural;
+pub mod overhead;
+pub mod probability;
+
+use crate::trace::{Batch, Trace};
+
+/// A token-to-expert predictor: fits on a training trace, then predicts the
+/// expert for every token of a batch *before routing runs* (it sees only
+/// token ids/positions, never the routing labels of the batch it predicts).
+pub trait TokenPredictor {
+    fn name(&self) -> String;
+    fn fit(&mut self, train: &Trace);
+    /// Predict experts for every sequence in the batch.
+    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>>;
+}
+
+/// Fit + evaluate helper: returns accuracy on the test trace.
+pub fn fit_and_evaluate(
+    predictor: &mut dyn TokenPredictor,
+    train: &Trace,
+    test: &Trace,
+) -> f64 {
+    predictor.fit(train);
+    accuracy::accuracy(predictor, test)
+}

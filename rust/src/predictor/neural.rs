@@ -1,0 +1,460 @@
+//! Neural token-to-expert predictor (Appendix B "Neural Networks"),
+//! implemented and trained natively in rust (no torch offline; the
+//! AOT-compiled JAX predictor that the serving path executes through PJRT
+//! is produced by `python/compile/` — this in-crate trainer powers the
+//! Figure-4 sweeps, which need many train/eval cycles inside benches).
+//!
+//! Architecture (mirrors the paper's FFN predictor, scaled to our traces):
+//! learned token embeddings for the current and previous token
+//! (concatenated — giving the MLP a slice of the context an LSTM would
+//! see), one ReLU hidden layer, and an expert-logit head; trained with
+//! Adam on cross-entropy, exactly as Appendix B prescribes.
+
+use super::TokenPredictor;
+use crate::trace::{Batch, Trace};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub d_emb: usize,
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig {
+            d_emb: 16,
+            hidden: 64,
+            epochs: 3,
+            lr: 1e-3,
+            seed: 1234,
+        }
+    }
+}
+
+/// Flat-parameter MLP with Adam state.
+#[derive(Clone, Debug)]
+pub struct MlpPredictor {
+    pub config: MlpConfig,
+    n_experts: usize,
+    vocab: usize,
+    // Parameters.
+    emb: Vec<f32>, // vocab × d_emb
+    w1: Vec<f32>,  // (2·d_emb) × hidden
+    b1: Vec<f32>,  // hidden
+    w2: Vec<f32>,  // hidden × n_experts
+    b2: Vec<f32>,  // n_experts
+    // Adam first/second moments, same layout as the parameters.
+    m: Vec<f32>,
+    v: Vec<f32>,
+    adam_t: u64,
+    fitted: bool,
+}
+
+impl MlpPredictor {
+    pub fn new(config: MlpConfig) -> MlpPredictor {
+        MlpPredictor {
+            config,
+            n_experts: 0,
+            vocab: 0,
+            emb: Vec::new(),
+            w1: Vec::new(),
+            b1: Vec::new(),
+            w2: Vec::new(),
+            b2: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            adam_t: 0,
+            fitted: false,
+        }
+    }
+
+    /// Total parameter count (used by the overhead model).
+    pub fn n_params(&self) -> usize {
+        self.emb.len() + self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len()
+    }
+
+    fn init(&mut self, vocab: usize, n_experts: usize) {
+        let mut rng = Rng::new(self.config.seed);
+        self.vocab = vocab;
+        self.n_experts = n_experts;
+        let d = self.config.d_emb;
+        let h = self.config.hidden;
+        let input = 2 * d;
+        let normal = |rng: &mut Rng, scale: f64, n: usize| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        self.emb = normal(&mut rng, 0.1, vocab * d);
+        self.w1 = normal(&mut rng, (2.0 / input as f64).sqrt(), input * h);
+        self.b1 = vec![0.0; h];
+        self.w2 = normal(&mut rng, (2.0 / h as f64).sqrt(), h * n_experts);
+        self.b2 = vec![0.0; n_experts];
+        let total = self.n_params();
+        self.m = vec![0.0; total];
+        self.v = vec![0.0; total];
+        self.adam_t = 0;
+    }
+
+    /// Parameter-index offsets into the flat Adam state.
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let o_w1 = self.emb.len();
+        let o_b1 = o_w1 + self.w1.len();
+        let o_w2 = o_b1 + self.b1.len();
+        let o_b2 = o_w2 + self.w2.len();
+        (o_w1, o_b1, o_w2, o_b2)
+    }
+
+    /// Forward pass writing hidden activations into `hid`, logits into
+    /// `logits`. Inputs: embeddings of (prev, cur).
+    fn forward(&self, prev_id: u32, cur_id: u32, hid: &mut [f32], logits: &mut [f32]) {
+        let d = self.config.d_emb;
+        let h = self.config.hidden;
+        let e_prev = &self.emb[prev_id as usize * d..(prev_id as usize + 1) * d];
+        let e_cur = &self.emb[cur_id as usize * d..(cur_id as usize + 1) * d];
+        for j in 0..h {
+            let mut acc = self.b1[j];
+            // w1 layout: [input][hidden]
+            for (i, &x) in e_prev.iter().enumerate() {
+                acc += x * self.w1[i * h + j];
+            }
+            for (i, &x) in e_cur.iter().enumerate() {
+                acc += x * self.w1[(d + i) * h + j];
+            }
+            hid[j] = acc.max(0.0);
+        }
+        for k in 0..self.n_experts {
+            let mut acc = self.b2[k];
+            for (j, &hj) in hid.iter().enumerate() {
+                acc += hj * self.w2[j * self.n_experts + k];
+            }
+            logits[k] = acc;
+        }
+    }
+
+    /// One Adam update for a single scalar parameter.
+    #[inline]
+    fn adam_step(
+        param: &mut f32,
+        m: &mut f32,
+        v: &mut f32,
+        grad: f32,
+        lr: f64,
+        bias1: f64,
+        bias2: f64,
+    ) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        *m = B1 * *m + (1.0 - B1) * grad;
+        *v = B2 * *v + (1.0 - B2) * grad * grad;
+        let m_hat = *m as f64 / bias1;
+        let v_hat = *v as f64 / bias2;
+        *param -= (lr * m_hat / (v_hat.sqrt() + EPS as f64)) as f32;
+    }
+
+    /// Train on one (prev, cur, label) example; returns the CE loss.
+    fn train_example(&mut self, prev_id: u32, cur_id: u32, label: u8) -> f32 {
+        let d = self.config.d_emb;
+        let h = self.config.hidden;
+        let e = self.n_experts;
+        let mut hid = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; e];
+        self.forward(prev_id, cur_id, &mut hid, &mut logits);
+
+        // Softmax + CE gradient: dlogits = softmax - onehot.
+        let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let mut dlogits: Vec<f32> = exps.iter().map(|&x| x / sum).collect();
+        let loss = -dlogits[label as usize].max(1e-12).ln();
+        dlogits[label as usize] -= 1.0;
+
+        self.adam_t += 1;
+        let lr = self.config.lr;
+        let bias1 = 1.0 - 0.9f64.powi(self.adam_t.min(1_000_000) as i32);
+        let bias2 = 1.0 - 0.999f64.powi(self.adam_t.min(1_000_000) as i32);
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+
+        // Grad wrt hidden, then backprop through ReLU.
+        let mut dhid = vec![0.0f32; h];
+        for j in 0..h {
+            let mut acc = 0.0;
+            for k in 0..e {
+                acc += dlogits[k] * self.w2[j * e + k];
+            }
+            dhid[j] = if hid[j] > 0.0 { acc } else { 0.0 };
+        }
+
+        // Update w2 / b2.
+        for j in 0..h {
+            for k in 0..e {
+                let g = dlogits[k] * hid[j];
+                let idx = o_w2 + j * e + k;
+                Self::adam_step(
+                    &mut self.w2[j * e + k],
+                    &mut self.m[idx],
+                    &mut self.v[idx],
+                    g,
+                    lr,
+                    bias1,
+                    bias2,
+                );
+            }
+        }
+        for k in 0..e {
+            let idx = o_b2 + k;
+            Self::adam_step(
+                &mut self.b2[k],
+                &mut self.m[idx],
+                &mut self.v[idx],
+                dlogits[k],
+                lr,
+                bias1,
+                bias2,
+            );
+        }
+
+        // Grad wrt input embeddings via w1, and w1/b1 updates.
+        let prev_base = prev_id as usize * d;
+        let cur_base = cur_id as usize * d;
+        // Cache the input vector before updating emb.
+        let x_prev: Vec<f32> = self.emb[prev_base..prev_base + d].to_vec();
+        let x_cur: Vec<f32> = self.emb[cur_base..cur_base + d].to_vec();
+
+        let mut dx = vec![0.0f32; 2 * d];
+        for j in 0..h {
+            let g = dhid[j];
+            if g == 0.0 {
+                continue;
+            }
+            for i in 0..d {
+                dx[i] += g * self.w1[i * h + j];
+                dx[d + i] += g * self.w1[(d + i) * h + j];
+            }
+        }
+        for j in 0..h {
+            let g = dhid[j];
+            if g != 0.0 {
+                for i in 0..d {
+                    let idx1 = i * h + j;
+                    let gw = g * x_prev[i];
+                    let flat = o_w1 + idx1;
+                    Self::adam_step(
+                        &mut self.w1[idx1],
+                        &mut self.m[flat],
+                        &mut self.v[flat],
+                        gw,
+                        lr,
+                        bias1,
+                        bias2,
+                    );
+                    let idx2 = (d + i) * h + j;
+                    let gw2 = g * x_cur[i];
+                    let flat2 = o_w1 + idx2;
+                    Self::adam_step(
+                        &mut self.w1[idx2],
+                        &mut self.m[flat2],
+                        &mut self.v[flat2],
+                        gw2,
+                        lr,
+                        bias1,
+                        bias2,
+                    );
+                }
+            }
+            let idx = o_b1 + j;
+            Self::adam_step(
+                &mut self.b1[j],
+                &mut self.m[idx],
+                &mut self.v[idx],
+                g,
+                lr,
+                bias1,
+                bias2,
+            );
+        }
+
+        // Embedding rows (lazy Adam: only touched rows).
+        for i in 0..d {
+            let idx = prev_base + i;
+            Self::adam_step(
+                &mut self.emb[idx],
+                &mut self.m[idx],
+                &mut self.v[idx],
+                dx[i],
+                lr,
+                bias1,
+                bias2,
+            );
+            let idx = cur_base + i;
+            Self::adam_step(
+                &mut self.emb[idx],
+                &mut self.m[idx],
+                &mut self.v[idx],
+                dx[d + i],
+                lr,
+                bias1,
+                bias2,
+            );
+        }
+
+        loss
+    }
+}
+
+impl TokenPredictor for MlpPredictor {
+    fn name(&self) -> String {
+        format!("mlp-h{}", self.config.hidden)
+    }
+
+    fn fit(&mut self, train: &Trace) {
+        self.init(train.spec.vocab_size, train.spec.n_experts);
+        // Flatten (prev, cur, label) triples; prev of the first token is
+        // the token itself (a BOS-like convention).
+        let mut examples: Vec<(u32, u32, u8)> = Vec::with_capacity(train.n_tokens());
+        for batch in &train.batches {
+            for seq in &batch.sequences {
+                for (pos, tok) in seq.iter().enumerate() {
+                    let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
+                    examples.push((prev, tok.id, tok.expert));
+                }
+            }
+        }
+        let mut rng = Rng::new(self.config.seed ^ 0x5EED);
+        for _epoch in 0..self.config.epochs {
+            rng.shuffle(&mut examples);
+            for &(prev, cur, label) in &examples {
+                self.train_example(prev, cur, label);
+            }
+        }
+        self.fitted = true;
+    }
+
+    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
+        assert!(self.fitted, "predict before fit");
+        let h = self.config.hidden;
+        let mut hid = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; self.n_experts];
+        batch
+            .sequences
+            .iter()
+            .map(|seq| {
+                seq.iter()
+                    .enumerate()
+                    .map(|(pos, tok)| {
+                        let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
+                        self.forward(prev, tok.id, &mut hid, &mut logits);
+                        logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i as u8)
+                            .unwrap()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::accuracy::accuracy;
+    use crate::predictor::probability::ProbabilityModel;
+    use crate::trace::{datasets, Trace};
+
+    /// Small trace so debug-mode tests stay fast.
+    fn small_trace(seed: u64) -> Trace {
+        let mut spec = datasets::mmlu_like(seed);
+        spec.vocab_size = 128;
+        spec.seq_len = 64;
+        spec.sequences_per_batch = 4;
+        spec.n_batches = 12;
+        spec.lambda = 0.7;
+        spec.mu = 0.0;
+        Trace::generate(spec)
+    }
+
+    fn fast_config() -> MlpConfig {
+        MlpConfig {
+            d_emb: 8,
+            hidden: 16,
+            epochs: 4,
+            lr: 3e-3,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn mlp_learns_token_affinities() {
+        let trace = small_trace(41);
+        let (train, test) = trace.split(0.8);
+        let mut mlp = MlpPredictor::new(fast_config());
+        mlp.fit(&train);
+        let acc_mlp = accuracy(&mlp, &test);
+        let mut prob = ProbabilityModel::new();
+        prob.fit(&train);
+        let acc_prob = accuracy(&prob, &test);
+        assert!(
+            acc_mlp > acc_prob + 0.15,
+            "mlp={acc_mlp} prob={acc_prob}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let trace = small_trace(42);
+        let (train, test) = trace.split(0.8);
+        let mut a = MlpPredictor::new(fast_config());
+        a.fit(&train);
+        let mut b = MlpPredictor::new(fast_config());
+        b.fit(&train);
+        assert_eq!(
+            a.predict_batch(&test.batches[0]),
+            b.predict_batch(&test.batches[0])
+        );
+    }
+
+    #[test]
+    fn loss_decreases_during_training() {
+        let trace = small_trace(43);
+        let mut mlp = MlpPredictor::new(fast_config());
+        mlp.init(trace.spec.vocab_size, trace.spec.n_experts);
+        let batch = &trace.batches[0];
+        let mut first_pass = 0.0;
+        let mut last_pass = 0.0;
+        for epoch in 0..6 {
+            let mut total = 0.0;
+            let mut n = 0;
+            for seq in &batch.sequences {
+                for (pos, tok) in seq.iter().enumerate() {
+                    let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
+                    total += mlp.train_example(prev, tok.id, tok.expert);
+                    n += 1;
+                }
+            }
+            let avg = total / n as f32;
+            if epoch == 0 {
+                first_pass = avg;
+            }
+            last_pass = avg;
+        }
+        assert!(
+            last_pass < first_pass * 0.9,
+            "loss {first_pass} -> {last_pass}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "predict before fit")]
+    fn predict_requires_fit() {
+        let trace = small_trace(44);
+        let mlp = MlpPredictor::new(fast_config());
+        mlp.predict_batch(&trace.batches[0]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Predictor runtime-overhead model (paper §3.2.2 / Figure 4).
+//!
+//! The paper measures each predictor's inference overhead on A100s and
+//! reports it as a *ratio to the simulated model runtime* (§5 "Kernel
+//! underutilization": "we report and analyze prediction overhead as a ratio
+//! to the simulated inference runtime"). We price each predictor's
+//! arithmetic on the same roofline the simulator uses:
+//!
+//! * lookup-family predictors (probability / conditional / bigram):
+//!   memory-bound gathers over their tables;
+//! * the FFN predictor (paper Appendix B): GEMMs `d_model→128→64→E` per
+//!   token, per MoE layer head;
+//! * the LSTM predictor: a *serial* scan over the sequence — per-step
+//!   small matvecs that cannot batch across time, which is what makes it
+//!   expensive (the paper's §5 "LSTM-based predictors … suffer from poor
+//!   parallelism");
+//! * the in-crate MLP (for the rust-trained sweeps): embedding gathers +
+//!   two small GEMMs.
+
+use crate::model::ModelConfig;
+use crate::sim::hardware::{Dtype, SystemSpec};
+use crate::sim::roofline;
+
+/// Predictor families with their cost-relevant parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PredictorKind {
+    /// Global argmax broadcast.
+    Probability,
+    /// Table gather conditioned on token id (table ≈ vocab × E).
+    ConditionalToken,
+    /// Table gather conditioned on position (table ≈ seq × E).
+    ConditionalPosition,
+    /// Two-level gather with hashing over bigram table.
+    BigramContext,
+    /// The paper's FFN predictor: d_model → 128 → 64 → E per token.
+    PaperFfn,
+    /// The paper's LSTM (+sparse attention): serial scan, 2 layers,
+    /// hidden 64, input compressed d_model → 128.
+    PaperLstm,
+    /// Our rust MLP: 2 embeddings (d_emb) → hidden → E.
+    RustMlp { d_emb: usize, hidden: usize },
+}
+
+impl PredictorKind {
+    pub fn name(&self) -> String {
+        match self {
+            PredictorKind::Probability => "probability".into(),
+            PredictorKind::ConditionalToken => "conditional-token".into(),
+            PredictorKind::ConditionalPosition => "conditional-position".into(),
+            PredictorKind::BigramContext => "bigram-context".into(),
+            PredictorKind::PaperFfn => "ffn-net".into(),
+            PredictorKind::PaperLstm => "lstm-net".into(),
+            PredictorKind::RustMlp { hidden, .. } => format!("mlp-h{hidden}"),
+        }
+    }
+}
+
+/// Request-path overhead (seconds) of running the predictor on a
+/// `batch × seq` token batch, for *one* MoE layer's prediction.
+pub fn overhead_s(
+    kind: PredictorKind,
+    model: &ModelConfig,
+    system: &SystemSpec,
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let dev = &system.device;
+    let tokens = batch * seq;
+    let dt = Dtype::Fp16;
+    match kind {
+        PredictorKind::Probability => {
+            // One broadcasted write of the argmax expert id.
+            roofline::elementwise_time(dev, tokens, 1.0, 0, dt)
+        }
+        PredictorKind::ConditionalToken | PredictorKind::ConditionalPosition => {
+            // Gather one table row per token + argmax over E.
+            roofline::elementwise_time(dev, tokens * model.n_experts, 2.0, 1, dt)
+        }
+        PredictorKind::BigramContext => {
+            // Hash + two gathers + fallback row.
+            2.0 * roofline::elementwise_time(dev, tokens * model.n_experts, 3.0, 2, dt)
+        }
+        PredictorKind::PaperFfn => {
+            // d_model → 128 → 64 → E (+ one head per MoE layer, amortised:
+            // the paper predicts layer-by-layer; we price one layer).
+            roofline::gemm_time(dev, tokens, 128, model.d_model, dt)
+                + roofline::gemm_time(dev, tokens, 64, 128, dt)
+                + roofline::gemm_time(dev, tokens, model.n_experts, 64, dt)
+        }
+        PredictorKind::PaperLstm => {
+            // Input compression is parallel over tokens...
+            let compress = roofline::gemm_time(dev, tokens, 128, model.d_model, dt);
+            // ...but the 2-layer LSTM scan is serial in time: `seq` steps of
+            // small matvecs over the whole batch. Each step is launch- and
+            // latency-bound (tiny GEMMs), which is the poor parallelism the
+            // paper calls out.
+            let per_step_flops =
+                2.0 * batch as f64 * (4.0 * 64.0 * (128.0 + 64.0)) * 2.0; // 2 layers
+            let step_util = 0.02; // tiny serial matvec utilisation
+            let per_step_s = (per_step_flops
+                / (dev.peak_matrix_tflops * 1e12 * step_util))
+                .max(dev.kernel_launch_s);
+            let scan = seq as f64 * per_step_s;
+            // Sparse attention over LSTM outputs + heads.
+            let attn = roofline::gemm_time(dev, tokens, 64, 64, dt);
+            let head = roofline::gemm_time(dev, tokens, model.n_experts, 64, dt);
+            compress + scan + attn + head
+        }
+        PredictorKind::RustMlp { d_emb, hidden } => {
+            roofline::gemm_time(dev, tokens, hidden, 2 * d_emb, dt)
+                + roofline::gemm_time(dev, tokens, model.n_experts, hidden, dt)
+                + roofline::elementwise_time(dev, tokens * 2 * d_emb, 1.0, 1, dt)
+        }
+    }
+}
+
+/// Overhead expressed as a ratio to a reference layer runtime (how the
+/// paper's Figure 4 y-axis is defined).
+pub fn overhead_ratio(
+    kind: PredictorKind,
+    model: &ModelConfig,
+    system: &SystemSpec,
+    batch: usize,
+    seq: usize,
+    layer_runtime_s: f64,
+) -> f64 {
+    overhead_s(kind, model, system, batch, seq) / layer_runtime_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SystemSpec;
+
+    fn setup() -> (ModelConfig, SystemSpec) {
+        (ModelConfig::mixtral_8x7b(), SystemSpec::four_a100_nvlink())
+    }
+
+    #[test]
+    fn overhead_ordering_matches_complexity() {
+        let (m, s) = setup();
+        let o = |k| overhead_s(k, &m, &s, 1, 512);
+        let prob = o(PredictorKind::Probability);
+        let cond = o(PredictorKind::ConditionalToken);
+        let bigram = o(PredictorKind::BigramContext);
+        let ffn = o(PredictorKind::PaperFfn);
+        let lstm = o(PredictorKind::PaperLstm);
+        assert!(prob <= cond, "prob={prob} cond={cond}");
+        assert!(cond < bigram);
+        assert!(bigram < ffn, "bigram={bigram} ffn={ffn}");
+        assert!(ffn < lstm, "ffn={ffn} lstm={lstm}");
+    }
+
+    #[test]
+    fn lstm_scan_dominated_by_sequence_length() {
+        let (m, s) = setup();
+        let short = overhead_s(PredictorKind::PaperLstm, &m, &s, 1, 128);
+        let long = overhead_s(PredictorKind::PaperLstm, &m, &s, 1, 1024);
+        // Serial scan: ~linear in seq.
+        let ratio = long / short;
+        assert!(ratio > 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn ffn_predictor_cheaper_than_model_layer() {
+        // Paper Figure 4: overhead is a modest fraction of layer runtime.
+        let (m, s) = setup();
+        let sim = crate::sim::LayerSim::new(m.clone(), s.clone());
+        let layer = sim.baseline_total(1.4);
+        let ratio =
+            overhead_ratio(PredictorKind::PaperFfn, &m, &s, 1, 512, layer);
+        assert!(ratio > 0.001 && ratio < 0.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn rust_mlp_overhead_scales_with_hidden() {
+        let (m, s) = setup();
+        let small = overhead_s(
+            PredictorKind::RustMlp { d_emb: 16, hidden: 32 },
+            &m,
+            &s,
+            1,
+            512,
+        );
+        let big = overhead_s(
+            PredictorKind::RustMlp { d_emb: 16, hidden: 256 },
+            &m,
+            &s,
+            1,
+            512,
+        );
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,104 @@
+//! Probability-based model (Appendix B): assign every token to the expert
+//! most frequently activated in the training data — a static rule that
+//! ignores token identity. Its accuracy equals the global frequency of the
+//! most popular expert, so it *improves with skewness* (paper §4: higher
+//! skew makes accurate prediction cheaper).
+
+use super::TokenPredictor;
+use crate::trace::{Batch, Trace};
+
+#[derive(Clone, Debug, Default)]
+pub struct ProbabilityModel {
+    /// argmax_i p̂_i after fitting.
+    best_expert: u8,
+    /// Fitted global distribution (kept for inspection).
+    pub probs: Vec<f64>,
+}
+
+impl ProbabilityModel {
+    pub fn new() -> ProbabilityModel {
+        ProbabilityModel::default()
+    }
+}
+
+impl TokenPredictor for ProbabilityModel {
+    fn name(&self) -> String {
+        "probability".into()
+    }
+
+    fn fit(&mut self, train: &Trace) {
+        let counts = train.expert_counts();
+        let total: usize = counts.iter().sum();
+        self.probs = counts
+            .iter()
+            .map(|&c| if total == 0 { 0.0 } else { c as f64 / total as f64 })
+            .collect();
+        self.best_expert = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .map(|(i, _)| i as u8)
+            .unwrap_or(0);
+    }
+
+    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
+        batch
+            .sequences
+            .iter()
+            .map(|seq| vec![self.best_expert; seq.len()])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::accuracy::accuracy;
+    use crate::trace::{datasets, Trace};
+
+    #[test]
+    fn predicts_global_argmax() {
+        let trace = Trace::generate(datasets::sst2_like(3));
+        let counts = trace.expert_counts();
+        let argmax = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .unwrap()
+            .0;
+        let mut m = ProbabilityModel::new();
+        m.fit(&trace);
+        let preds = m.predict_batch(&trace.batches[0]);
+        assert!(preds
+            .iter()
+            .flat_map(|s| s.iter())
+            .all(|&e| e as usize == argmax));
+    }
+
+    #[test]
+    fn accuracy_close_to_top_expert_frequency() {
+        let trace = Trace::generate(datasets::sst2_like(9));
+        let (train, test) = trace.split(0.8);
+        let mut m = ProbabilityModel::new();
+        m.fit(&train);
+        let acc = accuracy(&m, &test);
+        let counts = test.expert_counts();
+        let total: usize = counts.iter().sum();
+        let top_freq = *counts.iter().max().unwrap() as f64 / total as f64;
+        assert!((acc - top_freq).abs() < 0.05, "acc={acc} top={top_freq}");
+    }
+
+    #[test]
+    fn higher_skew_higher_accuracy() {
+        let mk = |spec| {
+            let t = Trace::generate(spec);
+            let (train, test) = t.split(0.8);
+            let mut m = ProbabilityModel::new();
+            m.fit(&train);
+            accuracy(&m, &test)
+        };
+        let low = mk(datasets::mmlu_like(4)); // skew ~1.39
+        let high = mk(datasets::sst2_like(4)); // skew ~1.99
+        assert!(high > low, "high={high} low={low}");
+    }
+}

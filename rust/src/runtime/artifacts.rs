@@ -1,0 +1,204 @@
+//! Artifact manifest + weight store.
+//!
+//! `python/compile/aot.py` writes `manifest.json` (artifact index, weight
+//! offsets/shapes, model config) and `weights.bin` (little-endian f32,
+//! concatenated in manifest order). This module loads both.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::HostTensor;
+use crate::util::json::Value;
+
+/// One artifact entry (an HLO-text file).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// name → (offset_bytes, shape)
+    pub weights: BTreeMap<String, (usize, Vec<usize>)>,
+    pub weights_file: PathBuf,
+    /// Model config as raw JSON (mirrors python TINY_CONFIG).
+    pub config: Value,
+    pub predictor_accuracy: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(Value::Obj(map)) = v.get("artifacts") {
+            for (name, entry) in map {
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactEntry {
+                        name: name.clone(),
+                        file: dir.join(entry.req_str("file")?),
+                    },
+                );
+            }
+        }
+
+        let mut weights = BTreeMap::new();
+        if let Some(Value::Obj(map)) = v.get("weights") {
+            for (name, entry) in map {
+                let offset = entry.req_usize("offset")?;
+                let shape: Vec<usize> = entry
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("weight {name}: missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect();
+                weights.insert(name.clone(), (offset, shape));
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            weights,
+            weights_file: dir.join(
+                v.get("weights_file")
+                    .and_then(Value::as_str)
+                    .unwrap_or("weights.bin"),
+            ),
+            config: v
+                .get("config")
+                .cloned()
+                .unwrap_or_else(Value::obj),
+            predictor_accuracy: v
+                .get("predictor_accuracy")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<&Path> {
+        self.artifacts
+            .get(name)
+            .map(|a| a.file.as_path())
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Expert-FFN bucket sizes available, ascending.
+    pub fn ffn_buckets(&self) -> Vec<usize> {
+        let mut buckets: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("expert_ffn_b"))
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        buckets.sort_unstable();
+        buckets
+    }
+}
+
+/// All weights resident in host memory; hands out `HostTensor` copies.
+#[derive(Clone)]
+pub struct WeightStore {
+    blob: std::sync::Arc<Vec<f32>>,
+    index: BTreeMap<String, (usize, Vec<usize>)>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let bytes = std::fs::read(&manifest.weights_file)
+            .with_context(|| format!("reading {}", manifest.weights_file.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights.bin not a multiple of 4 bytes");
+        let mut blob = Vec::with_capacity(bytes.len() / 4);
+        for chunk in bytes.chunks_exact(4) {
+            blob.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(WeightStore {
+            blob: std::sync::Arc::new(blob),
+            index: manifest.weights.clone(),
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    pub fn get(&self, name: &str) -> Result<HostTensor> {
+        let (offset, shape) = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight `{name}` not found"))?;
+        let n: usize = shape.iter().product();
+        let start = offset / 4;
+        anyhow::ensure!(
+            start + n <= self.blob.len(),
+            "weight `{name}` out of bounds"
+        );
+        Ok(HostTensor::new(
+            self.blob[start..start + n].to_vec(),
+            shape.clone(),
+        ))
+    }
+
+    /// Bytes of one tensor (what a duplication transfer moves).
+    pub fn nbytes(&self, name: &str) -> Result<usize> {
+        let (_, shape) = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight `{name}` not found"))?;
+        Ok(shape.iter().product::<usize>() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn with_manifest(f: impl FnOnce(Manifest)) {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        f(Manifest::load(&dir).unwrap());
+    }
+
+    #[test]
+    fn manifest_lists_expected_artifacts() {
+        with_manifest(|m| {
+            for name in ["embed", "attention", "router", "predictor"] {
+                assert!(m.artifacts.contains_key(name), "{name}");
+                assert!(m.artifact_path(name).unwrap().exists());
+            }
+            assert!(!m.ffn_buckets().is_empty());
+            assert!(m.ffn_buckets().windows(2).all(|w| w[0] < w[1]));
+            assert!(m.config.req_usize("d_model").unwrap() == 256);
+        });
+    }
+
+    #[test]
+    fn weight_store_loads_and_indexes() {
+        with_manifest(|m| {
+            let ws = WeightStore::load(&m).unwrap();
+            let embed = ws.get("embed").unwrap();
+            assert_eq!(embed.shape, vec![4096, 256]);
+            let router = ws.get("layers.0.moe.router").unwrap();
+            assert_eq!(router.shape, vec![256, 8]);
+            assert!(ws.get("nonexistent").is_err());
+            assert_eq!(ws.nbytes("layers.0.experts.0.w_gate").unwrap(), 256 * 512 * 4);
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Token-count shape buckets.
+//!
+//! HLO executables are static-shaped; variable routed-token counts are
+//! served by padding up to the nearest compiled bucket (standard serving
+//! practice — the waste is the price of AOT compilation, and the bucket
+//! ladder bounds it).
+
+/// Smallest bucket ≥ `n`, or the largest bucket if `n` exceeds all
+/// (callers must then split the batch — see [`split_into_buckets`]).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    debug_assert!(!buckets.is_empty());
+    debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets sorted");
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    *buckets.last().unwrap()
+}
+
+/// Split `n` tokens into chunks, each assigned a bucket: greedy largest-
+/// bucket-first so a 700-token slice over buckets [64,256,512] becomes
+/// [512, 256] rather than many small calls.
+pub fn split_into_buckets(buckets: &[usize], n: usize) -> Vec<(usize, usize)> {
+    // Returns (chunk_tokens, bucket) pairs.
+    let max = *buckets.last().unwrap();
+    let mut out = Vec::new();
+    let mut remaining = n;
+    while remaining > max {
+        out.push((max, max));
+        remaining -= max;
+    }
+    if remaining > 0 {
+        out.push((remaining, pick_bucket(buckets, remaining)));
+    }
+    out
+}
+
+/// Fraction of compute wasted on padding for `n` tokens.
+pub fn padding_waste(buckets: &[usize], n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let padded: usize = split_into_buckets(buckets, n).iter().map(|&(_, b)| b).sum();
+    (padded - n) as f64 / padded as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: [usize; 4] = [64, 128, 256, 512];
+
+    #[test]
+    fn picks_smallest_fitting() {
+        assert_eq!(pick_bucket(&BUCKETS, 1), 64);
+        assert_eq!(pick_bucket(&BUCKETS, 64), 64);
+        assert_eq!(pick_bucket(&BUCKETS, 65), 128);
+        assert_eq!(pick_bucket(&BUCKETS, 512), 512);
+        assert_eq!(pick_bucket(&BUCKETS, 9999), 512);
+    }
+
+    #[test]
+    fn splits_oversized() {
+        assert_eq!(split_into_buckets(&BUCKETS, 700), vec![(512, 512), (188, 256)]);
+        assert_eq!(split_into_buckets(&BUCKETS, 1200), vec![(512, 512), (512, 512), (176, 256)]);
+        assert_eq!(split_into_buckets(&BUCKETS, 64), vec![(64, 64)]);
+        assert_eq!(split_into_buckets(&BUCKETS, 0), vec![]);
+    }
+
+    #[test]
+    fn split_conserves_tokens() {
+        for n in [1usize, 63, 64, 65, 511, 512, 513, 2000] {
+            let total: usize = split_into_buckets(&BUCKETS, n).iter().map(|&(c, _)| c).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn waste_bounded() {
+        for n in 1..600 {
+            let w = padding_waste(&BUCKETS, n);
+            assert!((0.0..1.0).contains(&w));
+        }
+        assert_eq!(padding_waste(&BUCKETS, 512), 0.0);
+        assert!(padding_waste(&BUCKETS, 1) > 0.9);
+    }
+}

@@ -1,0 +1,220 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! One `Engine` wraps one `PjRtClient` (CPU). Executables are compiled from
+//! HLO text on first use and cached; weights are uploaded to device-resident
+//! buffers once and referenced by name afterwards, so the request path only
+//! moves activations (`execute_b`).
+//!
+//! `PjRtClient` is not `Send` — each coordinator worker thread owns its own
+//! `Engine`, which is exactly the "one engine per virtual GPU" topology the
+//! serving driver simulates.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Manifest, WeightStore};
+use super::tensor::{HostTensor, IntTensor};
+
+/// An input to [`Engine::call`]: a named device-resident weight, a host
+/// activation tensor, or host int tensor (token ids).
+pub enum In<'a> {
+    /// Device-resident weight, uploaded once via [`Engine::upload_weight`].
+    W(&'a str),
+    /// Host activation (uploaded per call).
+    T(&'a HostTensor),
+    /// Host int32 tensor (uploaded per call).
+    I(&'a IntTensor),
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    device_weights: HashMap<String, xla::PjRtBuffer>,
+    manifest: Manifest,
+    weights: WeightStore,
+    /// Bytes uploaded as weights (duplication-transfer accounting).
+    pub weight_bytes_uploaded: u64,
+}
+
+impl Engine {
+    /// Create an engine over the artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = WeightStore::load(&manifest)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            executables: HashMap::new(),
+            device_weights: HashMap::new(),
+            manifest,
+            weights,
+            weight_bytes_uploaded: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn weight_store(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for `{name}`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{name}`"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Upload a weight tensor to the device (no-op if already resident).
+    /// Returns the bytes moved (0 if cached) — the coordinator charges this
+    /// as the duplication transfer.
+    pub fn upload_weight(&mut self, name: &str) -> Result<u64> {
+        if self.device_weights.contains_key(name) {
+            return Ok(0);
+        }
+        let host = self.weights.get(name)?;
+        // NOTE: buffer_from_host_buffer copies synchronously
+        // (kImmutableOnlyDuringCall); buffer_from_host_literal transfers
+        // asynchronously and would read the literal after we drop it.
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&host.data, &host.shape, None)?;
+        self.device_weights.insert(name.to_string(), buf);
+        let bytes = (host.data.len() * 4) as u64;
+        self.weight_bytes_uploaded += bytes;
+        Ok(bytes)
+    }
+
+    /// Drop a device-resident weight (capacity eviction).
+    pub fn evict_weight(&mut self, name: &str) -> bool {
+        self.device_weights.remove(name).is_some()
+    }
+
+    pub fn resident_weights(&self) -> usize {
+        self.device_weights.len()
+    }
+
+    /// Execute an artifact. Outputs are returned as host tensors (the AOT
+    /// path lowers with `return_tuple=True`, so the single result buffer is
+    /// a tuple that we decompose).
+    pub fn call(&mut self, name: &str, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        self.load(name)?;
+        // First pass: make sure every referenced weight is resident.
+        for input in inputs {
+            if let In::W(weight_name) = input {
+                self.upload_weight(weight_name)?;
+            }
+        }
+        // Second pass: upload activations, then assemble &PjRtBuffer args
+        // (weights by reference — zero copies on the steady-state path).
+        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (i, input) in inputs.iter().enumerate() {
+            let buf = match input {
+                In::W(_) => continue,
+                In::T(t) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?,
+                In::I(t) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
+            };
+            owned.push((i, buf));
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut owned_iter = owned.iter().peekable();
+        for (i, input) in inputs.iter().enumerate() {
+            match input {
+                In::W(weight_name) => args.push(&self.device_weights[*weight_name]),
+                _ => {
+                    let (idx, buf) = owned_iter.next().expect("owned buffer");
+                    debug_assert_eq!(*idx, i);
+                    args.push(buf);
+                }
+            }
+        }
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe.execute_b(&args)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn with_engine(f: impl FnOnce(Engine)) {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        f(Engine::new(&dir).unwrap());
+    }
+
+    #[test]
+    fn engine_loads_and_runs_expert_ffn() {
+        with_engine(|mut engine| {
+            let bucket = engine.manifest().ffn_buckets()[0];
+            let name = format!("expert_ffn_b{bucket}");
+            let x = HostTensor::zeros(&[bucket, 256]);
+            let out = engine
+                .call(
+                    &name,
+                    &[
+                        In::T(&x),
+                        In::W("layers.0.experts.0.w_gate"),
+                        In::W("layers.0.experts.0.w_up"),
+                        In::W("layers.0.experts.0.w_down"),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].shape, vec![bucket, 256]);
+            // Zero input → zero output for SwiGLU.
+            assert!(out[0].data.iter().all(|&v| v == 0.0));
+            // Weight upload accounting: 3 expert matrices resident.
+            assert_eq!(engine.resident_weights(), 3);
+            assert!(engine.weight_bytes_uploaded > 0);
+        });
+    }
+
+    #[test]
+    fn weight_upload_is_cached() {
+        with_engine(|mut engine| {
+            let first = engine.upload_weight("layers.0.experts.0.w_gate").unwrap();
+            assert_eq!(first as usize, 256 * 512 * 4);
+            let second = engine.upload_weight("layers.0.experts.0.w_gate").unwrap();
+            assert_eq!(second, 0, "second upload must be a cache hit");
+            assert!(engine.evict_weight("layers.0.experts.0.w_gate"));
+            assert!(!engine.evict_weight("layers.0.experts.0.w_gate"));
+        });
+    }
+}

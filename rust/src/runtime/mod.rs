@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! produced (`make artifacts`) and executes them on the request path.
+//!
+//! Python is build-time only; after artifacts exist, this module plus the
+//! `xla` crate (PJRT C API, CPU plugin) is the entire execution stack:
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute_b` with device-resident weights.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serialised protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod bucket;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{Manifest, WeightStore};
+pub use engine::{Engine, In};
+pub use tensor::HostTensor;

@@ -1,0 +1,134 @@
+//! Host-side tensors bridging rust data and XLA literals.
+
+use anyhow::Result;
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> HostTensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length must match shape"
+        );
+        HostTensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Borrow row `i` (first-axis slice).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather a sub-tensor of the given first-axis rows.
+    pub fn gather_rows(&self, rows: &[usize]) -> HostTensor {
+        let w = self.row_len();
+        let mut data = Vec::with_capacity(rows.len() * w);
+        for &r in rows {
+            data.extend_from_slice(self.row(r));
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = rows.len();
+        HostTensor::new(data, shape)
+    }
+
+    /// Pad the first axis with zero rows up to `n` (bucket padding).
+    pub fn pad_rows_to(&self, n: usize) -> HostTensor {
+        assert!(n >= self.rows());
+        let w = self.row_len();
+        let mut data = self.data.clone();
+        data.resize(n * w, 0.0);
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        HostTensor::new(data, shape)
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor::new(data, dims))
+    }
+}
+
+/// An int32 host tensor (token ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub data: Vec<i32>,
+    pub shape: Vec<usize>,
+}
+
+impl IntTensor {
+    pub fn new(data: Vec<i32>, shape: Vec<usize>) -> IntTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        IntTensor { data, shape }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accessors() {
+        let t = HostTensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.row_len(), 4);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn gather_and_pad() {
+        let t = HostTensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.shape, vec![2, 4]);
+        assert_eq!(g.row(0), &[8.0, 9.0, 10.0, 11.0]);
+        let p = g.pad_rows_to(4);
+        assert_eq!(p.shape, vec![4, 4]);
+        assert_eq!(p.row(3), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![1.0; 5], vec![2, 3]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,215 @@
+//! Attention cost model (prefill) under Tensor Parallelism.
+//!
+//! The paper runs Attention with TP across all N devices (§2): heads are
+//! split N ways, each device computes its shard, and a ring all-reduce
+//! combines the output projections. Supports MHA, GQA (Mixtral), MLA
+//! (DeepSeek discussion) and sliding-window attention (Mixtral's 4K window).
+//! LLMCompass does not model FlashAttention, so — like the paper — the
+//! score/softmax/PV phases are priced as materialised operations
+//! ("conservatively overestimated", §3.4).
+
+use super::hardware::{DeviceSpec, SystemSpec};
+use super::roofline;
+use crate::model::{AttentionKind, ModelConfig};
+
+/// Per-phase attention latency breakdown for one layer on one device shard
+/// (the slowest shard — shards are symmetric under TP).
+#[derive(Clone, Debug, Default)]
+pub struct AttentionCost {
+    pub qkv_proj_s: f64,
+    pub rope_s: f64,
+    pub scores_s: f64,
+    pub softmax_s: f64,
+    pub pv_s: f64,
+    pub out_proj_s: f64,
+    pub allreduce_s: f64,
+}
+
+impl AttentionCost {
+    /// Total attention-phase latency (compute + TP all-reduce).
+    pub fn total(&self) -> f64 {
+        self.compute() + self.allreduce_s
+    }
+
+    /// Compute-only portion (used by the duplication-hiding analysis, §5).
+    pub fn compute(&self) -> f64 {
+        self.qkv_proj_s
+            + self.rope_s
+            + self.scores_s
+            + self.softmax_s
+            + self.pv_s
+            + self.out_proj_s
+    }
+}
+
+/// Average attended key length per query token for causal attention with an
+/// optional sliding window: token `i` attends `min(i+1, window)` keys.
+pub fn avg_attended_len(seq: usize, window: Option<usize>) -> f64 {
+    if seq == 0 {
+        return 0.0;
+    }
+    let w = window.unwrap_or(usize::MAX);
+    let mut total: u64 = 0;
+    // Closed form: sum over i in 1..=seq of min(i, w)
+    //   = w*(w+1)/2 + (seq-w)*w when seq > w, else seq*(seq+1)/2.
+    if seq <= w {
+        total += (seq as u64 * (seq as u64 + 1)) / 2;
+    } else {
+        total += (w as u64 * (w as u64 + 1)) / 2;
+        total += ((seq - w) as u64) * w as u64;
+    }
+    total as f64 / seq as f64
+}
+
+/// Price one layer's attention phase for `batch × seq` tokens on `system`
+/// (TP over all devices).
+pub fn attention_cost(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    batch: usize,
+    seq: usize,
+) -> AttentionCost {
+    let dev = &system.device;
+    let n = system.n_devices;
+    let tokens = batch * seq;
+    let dtype = model.dtype;
+
+    // TP splits query heads evenly; KV heads are split as far as possible
+    // (GQA shards KV when n_kv_heads >= n, replicates otherwise).
+    let heads_local = div_at_least_one(model.n_heads, n);
+    let kv_heads_local = div_at_least_one(model.n_kv_heads, n);
+    let q_width = heads_local * model.head_dim;
+
+    let mut cost = AttentionCost::default();
+
+    match model.attention {
+        AttentionKind::Mha | AttentionKind::Gqa => {
+            let kv_width = 2 * kv_heads_local * model.head_dim;
+            cost.qkv_proj_s =
+                roofline::gemm_time(dev, tokens, q_width + kv_width, model.d_model, dtype);
+        }
+        AttentionKind::Mla => {
+            // Query proj + joint KV down-projection to the latent rank +
+            // up-projection back to per-head keys/values.
+            let rank = model.mla_kv_rank.max(1);
+            cost.qkv_proj_s = roofline::gemm_time(dev, tokens, q_width, model.d_model, dtype)
+                + roofline::gemm_time(dev, tokens, rank, model.d_model, dtype)
+                + roofline::gemm_time(dev, tokens, 2 * kv_heads_local * model.head_dim, rank, dtype);
+        }
+    }
+
+    cost.rope_s = roofline::rope_time(dev, tokens, q_width, dtype);
+
+    // Scores + PV: per local head, per query token, attend `attended` keys.
+    let attended = avg_attended_len(seq, model.sliding_window);
+    let score_flops =
+        2.0 * batch as f64 * heads_local as f64 * seq as f64 * attended * model.head_dim as f64;
+    cost.scores_s = matrix_flops_time(dev, score_flops, seq, attended, model.head_dim);
+    cost.softmax_s = roofline::softmax_time(
+        dev,
+        batch * heads_local * seq,
+        attended.ceil() as usize,
+        dtype,
+    );
+    cost.pv_s = cost.scores_s; // PV has identical flop count and shape class.
+
+    cost.out_proj_s = roofline::gemm_time(dev, tokens, model.d_model, q_width, dtype);
+
+    // Ring all-reduce of the output activations across the TP group.
+    let bytes = tokens as f64 * model.d_model as f64 * dtype.bytes() as f64;
+    cost.allreduce_s = super::collective::ring_allreduce_time(&system.interconnect, n, bytes);
+
+    cost
+}
+
+/// Price `flops` of batched attention matmul with utilisation derived from
+/// its effective GEMM shape (seq × attended × head_dim).
+fn matrix_flops_time(dev: &DeviceSpec, flops: f64, m: usize, n_f: f64, k: usize) -> f64 {
+    if flops <= 0.0 {
+        return 0.0;
+    }
+    let util = roofline::gemm_utilization(m, n_f.ceil().max(1.0) as usize, k);
+    flops / (dev.peak_matrix_tflops * 1e12 * util) + dev.kernel_launch_s
+}
+
+fn div_at_least_one(a: usize, b: usize) -> usize {
+    (a / b).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_attended_without_window_is_half() {
+        // Causal: mean of 1..=L = (L+1)/2.
+        assert_eq!(avg_attended_len(512, None), 256.5);
+        assert_eq!(avg_attended_len(0, None), 0.0);
+    }
+
+    #[test]
+    fn avg_attended_with_window_saturates() {
+        // window ≥ seq: same as causal.
+        assert_eq!(avg_attended_len(512, Some(4096)), 256.5);
+        // tiny window: approaches the window size.
+        let v = avg_attended_len(8192, Some(64));
+        assert!(v < 64.0 && v > 63.0, "v={v}");
+    }
+
+    #[test]
+    fn mixtral_attention_breakdown_positive() {
+        let m = ModelConfig::mixtral_8x7b();
+        let sys = crate::sim::SystemSpec::four_a100_nvlink();
+        let c = attention_cost(&m, &sys, 1, 512);
+        assert!(c.qkv_proj_s > 0.0);
+        assert!(c.scores_s > 0.0);
+        assert!(c.softmax_s > 0.0);
+        assert!(c.out_proj_s > 0.0);
+        assert!(c.allreduce_s > 0.0);
+        assert!(c.total() > c.compute());
+        // Sanity: single-layer prefill attention at bs=1/seq=512 should be
+        // sub-millisecond-to-few-ms on 4×A100.
+        assert!(c.total() > 10e-6 && c.total() < 20e-3, "total={}", c.total());
+    }
+
+    #[test]
+    fn sliding_window_reduces_long_seq_cost() {
+        let mut m = ModelConfig::mixtral_8x7b();
+        let sys = crate::sim::SystemSpec::four_a100_nvlink();
+        m.sliding_window = None;
+        let full = attention_cost(&m, &sys, 1, 16384);
+        m.sliding_window = Some(4096);
+        let windowed = attention_cost(&m, &sys, 1, 16384);
+        assert!(windowed.scores_s < full.scores_s * 0.6);
+    }
+
+    #[test]
+    fn gqa_cheaper_than_mha_on_qkv() {
+        let sys = crate::sim::SystemSpec::four_a100_nvlink();
+        let gqa = ModelConfig::mixtral_8x7b(); // 32q/8kv
+        let mut mha = gqa.clone();
+        mha.n_kv_heads = 32;
+        let c_gqa = attention_cost(&gqa, &sys, 1, 512);
+        let c_mha = attention_cost(&mha, &sys, 1, 512);
+        assert!(c_gqa.qkv_proj_s < c_mha.qkv_proj_s);
+    }
+
+    #[test]
+    fn mla_runs_and_is_positive() {
+        let m = ModelConfig::deepseek_like();
+        let sys = crate::sim::SystemSpec::four_a100_nvlink();
+        let c = attention_cost(&m, &sys, 1, 512);
+        assert!(c.total() > 0.0);
+    }
+
+    #[test]
+    fn pcie_allreduce_dominates() {
+        let m = ModelConfig::mixtral_8x7b();
+        let nv = crate::sim::SystemSpec::four_a100_nvlink();
+        let pcie = crate::sim::SystemSpec::four_a100_pcie();
+        let c_nv = attention_cost(&m, &nv, 1, 512);
+        let c_pcie = attention_cost(&m, &pcie, 1, 512);
+        assert!(c_pcie.allreduce_s > c_nv.allreduce_s * 10.0);
+        assert_eq!(c_pcie.compute(), c_nv.compute());
+    }
+}

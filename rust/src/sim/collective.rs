@@ -1,0 +1,194 @@
+//! Communication cost models for the collectives the paper's pipeline uses.
+//!
+//! Topology assumption (paper §2/§5): fully-connected GPUs with identical
+//! per-link bandwidth. Formulas:
+//!
+//! * **Ring all-reduce** (after TP attention, [23]):
+//!   `2 (N−1)/N · bytes / bw` plus per-step latency.
+//! * **EP all-to-all scatter** (token shuffle to expert GPUs): with a
+//!   balanced random distribution each GPU moves `(N−1)/N` of its `T/N`
+//!   tokens → `(N−1)/N² · T` per GPU; the GPU hosting the most popular
+//!   expert receives `skewness ×` that, and bottlenecks the phase:
+//!   `(N−1) · skew / N² · T · bytes_per_token / bw`. The same volume moves
+//!   back in the post-FFN gather.
+//! * **Point-to-point expert transfer** (dynamic duplication, §5):
+//!   `expert_bytes / bw + latency`.
+
+use super::hardware::InterconnectSpec;
+
+/// Contention factor for collectives: on a shared fabric (PCIe through the
+/// host root complex) the N concurrent per-GPU flows serialise, so
+/// effective per-flow bandwidth is `link_bw / N`.
+fn contention(ic: &InterconnectSpec, n: usize) -> f64 {
+    if ic.shared {
+        n as f64
+    } else {
+        1.0
+    }
+}
+
+/// Ring all-reduce of `bytes` over `n` devices.
+pub fn ring_allreduce_time(ic: &InterconnectSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    let transfer = 2.0 * (n as f64 - 1.0) / n as f64 * bytes * contention(ic, n)
+        / (ic.link_bw_gbs * 1e9);
+    transfer + steps as f64 * ic.latency_s
+}
+
+/// EP all-to-all token shuffle (scatter **or** gather — the paper prices them
+/// identically): `total_tokens` tokens of `bytes_per_token` across `n`
+/// devices, with the receiving hot GPU scaled by `skewness ≥ 1`.
+pub fn ep_all_to_all_time(
+    ic: &InterconnectSpec,
+    n: usize,
+    total_tokens: f64,
+    bytes_per_token: f64,
+    skewness: f64,
+) -> f64 {
+    if n <= 1 || total_tokens <= 0.0 {
+        return 0.0;
+    }
+    debug_assert!(skewness >= 1.0 - 1e-9, "skewness must be >= 1, got {skewness}");
+    let bottleneck_tokens = (n as f64 - 1.0) * skewness / (n as f64).powi(2) * total_tokens;
+    bottleneck_tokens * bytes_per_token * contention(ic, n) / (ic.link_bw_gbs * 1e9)
+        + (n - 1) as f64 * ic.latency_s
+}
+
+/// Tree all-reduce of `bytes` over `n` devices (paper §5 lists Tree among
+/// the alternative topologies; it trades the ring's bandwidth-optimality
+/// for ~log(n) latency steps — better for small payloads, worse for large).
+pub fn tree_allreduce_time(ic: &InterconnectSpec, n: usize, bytes: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let levels = (n as f64).log2().ceil() as usize;
+    // Reduce up + broadcast down: each level moves the full payload once.
+    let transfer =
+        2.0 * levels as f64 * bytes * contention(ic, n) / (ic.link_bw_gbs * 1e9);
+    transfer + 2.0 * levels as f64 * ic.latency_s
+}
+
+/// 2-D mesh all-to-all (paper §5's Mesh/Torus discussion): without full
+/// connectivity each token crosses ~√N hops on average, multiplying the
+/// bandwidth term relative to the fully-connected case.
+pub fn mesh_all_to_all_time(
+    ic: &InterconnectSpec,
+    n: usize,
+    total_tokens: f64,
+    bytes_per_token: f64,
+    skewness: f64,
+) -> f64 {
+    let hops = (n as f64).sqrt();
+    let base = ep_all_to_all_time(ic, n, total_tokens, bytes_per_token, skewness);
+    let latency = (n - 1) as f64 * ic.latency_s;
+    (base - latency) * hops + latency * hops
+}
+
+/// Point-to-point transfer of one expert's weights (dynamic duplication).
+/// Uses the striped p2p bandwidth; movements are staggered across the layer
+/// pipeline, so no contention factor applies (paper §5 arithmetic).
+pub fn p2p_time(ic: &InterconnectSpec, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    bytes / (ic.p2p_bw_gbs * 1e9) + ic.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::hardware::InterconnectSpec;
+
+    #[test]
+    fn allreduce_matches_closed_form() {
+        let ic = InterconnectSpec {
+            name: "t".into(),
+            link_bw_gbs: 100.0,
+            p2p_bw_gbs: 100.0,
+            latency_s: 0.0,
+            shared: false,
+        };
+        // 4 GPUs, 1 GB: 2*(3/4)*1GB / 100GB/s = 15 ms.
+        let t = ring_allreduce_time(&ic, 4, 1e9);
+        assert!((t - 0.015).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn allreduce_trivial_cases() {
+        let ic = InterconnectSpec::nvlink3();
+        assert_eq!(ring_allreduce_time(&ic, 1, 1e9), 0.0);
+        assert_eq!(ring_allreduce_time(&ic, 4, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ep_scatter_matches_paper_formula() {
+        let ic = InterconnectSpec {
+            name: "t".into(),
+            link_bw_gbs: 100.0,
+            p2p_bw_gbs: 100.0,
+            latency_s: 0.0,
+            shared: false,
+        };
+        // N=4, T=1024 tokens, 1 MB/token, skew=1:
+        // (3/16)*1024 tokens * 1e6 B / 100e9 B/s = 1.92 ms.
+        let t = ep_all_to_all_time(&ic, 4, 1024.0, 1e6, 1.0);
+        assert!((t - 1.92e-3).abs() < 1e-9, "t={t}");
+        // Skew 3 triples it (paper Figure 2 example).
+        let t3 = ep_all_to_all_time(&ic, 4, 1024.0, 1e6, 3.0);
+        assert!((t3 / t - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ep_scatter_latency_term() {
+        let ic = InterconnectSpec {
+            name: "t".into(),
+            link_bw_gbs: 1e9, // effectively infinite bandwidth
+            p2p_bw_gbs: 1e9,
+            latency_s: 1e-6,
+            shared: false,
+        };
+        let t = ep_all_to_all_time(&ic, 4, 1.0, 1.0, 1.0);
+        assert!((t - 3e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2p_expert_transfer_mixtral_example() {
+        // Paper §5: one Mixtral expert ≈ 4096*14336*2*2 bytes over NVLink
+        // at the 2 TB/s striped p2p bandwidth ≈ 0.1 ms.
+        let bytes = 4096.0 * 14336.0 * 2.0 * 2.0;
+        let t = p2p_time(&InterconnectSpec::nvlink3(), bytes);
+        assert!(t > 0.8e-4 && t < 1.5e-4, "t={t}");
+    }
+
+    #[test]
+    fn tree_beats_ring_for_tiny_payloads_loses_for_large() {
+        let ic = InterconnectSpec::nvlink3();
+        // Tiny payload: latency-dominated → tree's 2·log2(4)=4 steps beat
+        // the ring's 2·(4−1)=6 steps.
+        assert!(tree_allreduce_time(&ic, 4, 64.0) < ring_allreduce_time(&ic, 4, 64.0));
+        // Large payload: bandwidth-dominated → ring's (N−1)/N factor wins
+        // over the tree's log2(N) full-payload hops.
+        assert!(tree_allreduce_time(&ic, 4, 1e9) > ring_allreduce_time(&ic, 4, 1e9));
+    }
+
+    #[test]
+    fn mesh_all_to_all_pays_hop_factor() {
+        let ic = InterconnectSpec::nvlink3();
+        let full = ep_all_to_all_time(&ic, 16, 4096.0, 8192.0, 1.5);
+        let mesh = mesh_all_to_all_time(&ic, 16, 4096.0, 8192.0, 1.5);
+        assert!(mesh > full * 2.0, "mesh={mesh} full={full}");
+    }
+
+    #[test]
+    fn pcie_much_slower_than_nvlink() {
+        let nv = InterconnectSpec::nvlink3();
+        let pcie = InterconnectSpec::pcie4();
+        let t_nv = ep_all_to_all_time(&nv, 4, 512.0, 8192.0, 1.4);
+        let t_pcie = ep_all_to_all_time(&pcie, 4, 512.0, 8192.0, 1.4);
+        // PCIe is both ~19x slower per link and shared (x4 contention).
+        assert!(t_pcie / t_nv > 10.0, "ratio={}", t_pcie / t_nv);
+    }
+}

@@ -1,0 +1,93 @@
+//! Prediction-error distribution scenarios (paper §3.3, Figure 5).
+//!
+//! For a prediction error rate ε (= 1 − accuracy for Token-to-Expert, or the
+//! normalised L1 distribution distance for Distribution-Only), the effect on
+//! the post-duplication FFN load depends on *where* the errors land:
+//!
+//! * **Optimistic** — errors happen to preserve perfect balance (e.g.
+//!   predicting 85% instead of 75% for an already-duplicated expert):
+//!   bottleneck load = `avg_tokens`.
+//! * **Typical** — errors are uniformly distributed across GPUs: bottleneck
+//!   load = `(1 + ε) · avg_tokens`. This is the paper's default and ours.
+//! * **Pessimistic** — all errors concentrate on one GPU: bottleneck load =
+//!   `N · (1 + ε) · avg_tokens` — an upper bound on degradation.
+
+/// Error-distribution scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ErrorModel {
+    Optimistic,
+    #[default]
+    Typical,
+    Pessimistic,
+}
+
+impl ErrorModel {
+    /// Multiplier on the *balanced* bottleneck FFN load for error rate
+    /// `epsilon ∈ [0, 1]` on an `n`-device system.
+    pub fn load_multiplier(self, epsilon: f64, n: usize) -> f64 {
+        let eps = epsilon.clamp(0.0, 1.0);
+        match self {
+            ErrorModel::Optimistic => 1.0,
+            ErrorModel::Typical => 1.0 + eps,
+            ErrorModel::Pessimistic => n as f64 * (1.0 + eps),
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<ErrorModel> {
+        match name.to_ascii_lowercase().as_str() {
+            "optimistic" => Ok(ErrorModel::Optimistic),
+            "typical" => Ok(ErrorModel::Typical),
+            "pessimistic" => Ok(ErrorModel::Pessimistic),
+            other => anyhow::bail!("unknown error model `{other}`"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorModel::Optimistic => "optimistic",
+            ErrorModel::Typical => "typical",
+            ErrorModel::Pessimistic => "pessimistic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multipliers_match_paper() {
+        let eps = 0.1;
+        assert_eq!(ErrorModel::Optimistic.load_multiplier(eps, 4), 1.0);
+        assert!((ErrorModel::Typical.load_multiplier(eps, 4) - 1.1).abs() < 1e-12);
+        assert!((ErrorModel::Pessimistic.load_multiplier(eps, 4) - 4.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epsilon_is_clamped() {
+        assert_eq!(ErrorModel::Typical.load_multiplier(-0.5, 4), 1.0);
+        assert_eq!(ErrorModel::Typical.load_multiplier(2.0, 4), 2.0);
+    }
+
+    #[test]
+    fn ordering_optimistic_typical_pessimistic() {
+        for &eps in &[0.0, 0.05, 0.3, 1.0] {
+            let o = ErrorModel::Optimistic.load_multiplier(eps, 4);
+            let t = ErrorModel::Typical.load_multiplier(eps, 4);
+            let p = ErrorModel::Pessimistic.load_multiplier(eps, 4);
+            assert!(o <= t && t <= p);
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for m in [
+            ErrorModel::Optimistic,
+            ErrorModel::Typical,
+            ErrorModel::Pessimistic,
+        ] {
+            assert_eq!(ErrorModel::by_name(m.name()).unwrap(), m);
+        }
+        assert!(ErrorModel::by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Hardware descriptions: device (GPU) specs and interconnect specs.
+//!
+//! Numbers mirror the configurations used by the paper: NVIDIA A100 (SXM)
+//! devices, connected either with NVLink 3.0 (high-end) or PCIe 4.0
+//! (low-end), plus the two intermediate bandwidth points of Figure 7.
+//! These are simulation *parameters* — see DESIGN.md §Hardware-Adaptation.
+
+use crate::util::json::Value;
+
+/// Numeric datatype width used for weights/activations in the cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    Fp16,
+    Bf16,
+    Fp32,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::Fp16 | Dtype::Bf16 => 2,
+            Dtype::Fp32 => 4,
+        }
+    }
+}
+
+/// A single accelerator device (per-GPU peak numbers).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak dense matrix TFLOP/s at 16-bit (tensor-core / MXU path).
+    pub peak_matrix_tflops: f64,
+    /// Peak vector TFLOP/s (CUDA-core / VPU path) for elementwise & softmax.
+    pub peak_vector_tflops: f64,
+    /// HBM bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// HBM capacity in GiB (used by the duplication memory constraint).
+    pub mem_capacity_gib: f64,
+    /// Fixed kernel-launch overhead per fused op, seconds.
+    pub kernel_launch_s: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A100 SXM 80GB: 312 TFLOP/s fp16 tensor core, 19.5 TFLOP/s
+    /// fp32 CUDA core, 2039 GB/s HBM2e.
+    pub fn a100() -> DeviceSpec {
+        DeviceSpec {
+            name: "A100-SXM-80GB".to_string(),
+            peak_matrix_tflops: 312.0,
+            peak_vector_tflops: 19.5,
+            mem_bw_gbs: 2039.0,
+            mem_capacity_gib: 80.0,
+            kernel_launch_s: 4e-6,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", Value::Str(self.name.clone()))
+            .set("peak_matrix_tflops", Value::Num(self.peak_matrix_tflops))
+            .set("peak_vector_tflops", Value::Num(self.peak_vector_tflops))
+            .set("mem_bw_gbs", Value::Num(self.mem_bw_gbs))
+            .set("mem_capacity_gib", Value::Num(self.mem_capacity_gib))
+            .set("kernel_launch_s", Value::Num(self.kernel_launch_s));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<DeviceSpec> {
+        Ok(DeviceSpec {
+            name: v.req_str("name")?.to_string(),
+            peak_matrix_tflops: v.req_f64("peak_matrix_tflops")?,
+            peak_vector_tflops: v.req_f64("peak_vector_tflops")?,
+            mem_bw_gbs: v.req_f64("mem_bw_gbs")?,
+            mem_capacity_gib: v.req_f64("mem_capacity_gib")?,
+            kernel_launch_s: v.req_f64("kernel_launch_s")?,
+        })
+    }
+}
+
+/// Interconnect between devices. The paper assumes a fully-connected
+/// topology with identical per-link bandwidth; PCIe systems additionally
+/// share the host root complex, so concurrent flows contend (`shared`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InterconnectSpec {
+    pub name: String,
+    /// Per-GPU unidirectional link bandwidth, GB/s.
+    pub link_bw_gbs: f64,
+    /// Point-to-point bandwidth for a single bulk transfer, GB/s (NVLink
+    /// can stripe one transfer over all links — the paper's §5 expert-move
+    /// arithmetic uses the 2 TB/s aggregate figure).
+    pub p2p_bw_gbs: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+    /// True when all devices share one fabric (PCIe through the host):
+    /// concurrent collective flows serialise, scaling collective time by N.
+    pub shared: bool,
+}
+
+impl InterconnectSpec {
+    /// NVLink 3.0: 600 GB/s per-GPU link bandwidth for collectives (the
+    /// paper's Figure 7 NVLink point), 2 TB/s striped point-to-point
+    /// (the paper's §5 expert-movement arithmetic).
+    pub fn nvlink3() -> InterconnectSpec {
+        InterconnectSpec {
+            name: "NVLink-3.0".to_string(),
+            link_bw_gbs: 600.0,
+            p2p_bw_gbs: 2000.0,
+            latency_s: 2e-6,
+            shared: false,
+        }
+    }
+
+    /// PCIe 4.0 x16: 32 GB/s unidirectional per the paper's Figure 6d
+    /// (Figure 7's low-end point is 64 GB/s, bidirectional accounting).
+    /// All GPUs share the host root complex → `shared`.
+    pub fn pcie4() -> InterconnectSpec {
+        InterconnectSpec {
+            name: "PCIe-4.0".to_string(),
+            link_bw_gbs: 32.0,
+            p2p_bw_gbs: 32.0,
+            latency_s: 5e-6,
+            shared: true,
+        }
+    }
+
+    /// Arbitrary bandwidth point (Figure 7 sweeps 600/300/128/64 GB/s).
+    /// Dedicated links, p2p equals link bandwidth.
+    pub fn custom(gbs: f64) -> InterconnectSpec {
+        InterconnectSpec {
+            name: format!("custom-{gbs:.0}GBs"),
+            link_bw_gbs: gbs,
+            p2p_bw_gbs: gbs,
+            latency_s: 3e-6,
+            shared: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", Value::Str(self.name.clone()))
+            .set("link_bw_gbs", Value::Num(self.link_bw_gbs))
+            .set("p2p_bw_gbs", Value::Num(self.p2p_bw_gbs))
+            .set("latency_s", Value::Num(self.latency_s))
+            .set("shared", Value::Bool(self.shared));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<InterconnectSpec> {
+        Ok(InterconnectSpec {
+            name: v.req_str("name")?.to_string(),
+            link_bw_gbs: v.req_f64("link_bw_gbs")?,
+            p2p_bw_gbs: v.req_f64("p2p_bw_gbs")?,
+            latency_s: v.req_f64("latency_s")?,
+            shared: v
+                .get("shared")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// A multi-device system: N identical devices, fully connected.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemSpec {
+    pub device: DeviceSpec,
+    pub interconnect: InterconnectSpec,
+    pub n_devices: usize,
+}
+
+impl SystemSpec {
+    /// The paper's main testbed: 4×A100 fully connected via NVLink.
+    pub fn four_a100_nvlink() -> SystemSpec {
+        SystemSpec {
+            device: DeviceSpec::a100(),
+            interconnect: InterconnectSpec::nvlink3(),
+            n_devices: 4,
+        }
+    }
+
+    /// The paper's low-end testbed: 4×A100 over PCIe 4.0.
+    pub fn four_a100_pcie() -> SystemSpec {
+        SystemSpec {
+            device: DeviceSpec::a100(),
+            interconnect: InterconnectSpec::pcie4(),
+            n_devices: 4,
+        }
+    }
+
+    /// Same devices, arbitrary interconnect bandwidth (Figure 7 sweep).
+    pub fn four_a100_custom_bw(gbs: f64) -> SystemSpec {
+        SystemSpec {
+            device: DeviceSpec::a100(),
+            interconnect: InterconnectSpec::custom(gbs),
+            n_devices: 4,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("device", self.device.to_json())
+            .set("interconnect", self.interconnect.to_json())
+            .set("n_devices", Value::Num(self.n_devices as f64));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<SystemSpec> {
+        Ok(SystemSpec {
+            device: DeviceSpec::from_json(
+                v.get("device").ok_or_else(|| anyhow::anyhow!("missing device"))?,
+            )?,
+            interconnect: InterconnectSpec::from_json(
+                v.get("interconnect")
+                    .ok_or_else(|| anyhow::anyhow!("missing interconnect"))?,
+            )?,
+            n_devices: v.req_usize("n_devices")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_constants() {
+        let d = DeviceSpec::a100();
+        assert_eq!(d.peak_matrix_tflops, 312.0);
+        assert_eq!(d.mem_bw_gbs, 2039.0);
+    }
+
+    #[test]
+    fn interconnect_presets() {
+        assert_eq!(InterconnectSpec::nvlink3().link_bw_gbs, 600.0);
+        assert_eq!(InterconnectSpec::pcie4().link_bw_gbs, 32.0);
+        assert_eq!(InterconnectSpec::custom(128.0).link_bw_gbs, 128.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let sys = SystemSpec::four_a100_nvlink();
+        let json = sys.to_json().to_string_pretty();
+        let parsed = SystemSpec::from_json(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(sys, parsed);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::Fp16.bytes(), 2);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::Fp32.bytes(), 4);
+    }
+}

@@ -1,0 +1,251 @@
+//! Whole-transformer-layer latency simulation — the unit the paper reports
+//! (Figure 6/8/9 show "simulated prefill latency for a single layer").
+//!
+//! A layer is: [predictor] → Attention (TP, incl. ring all-reduce) → router
+//! → all-to-all scatter → expert FFN (EP) → all-to-all gather. The
+//! breakdown mirrors the paper's stacked bars: attention / FFN /
+//! communication / overhead.
+
+use super::attention::{self, AttentionCost};
+use super::hardware::SystemSpec;
+use super::moe::{self, MoeCost, MoeParams, Strategy};
+use super::roofline;
+use super::ErrorModel;
+use crate::model::ModelConfig;
+use crate::util::json::Value;
+
+/// Per-component latency breakdown for one transformer layer.
+#[derive(Clone, Debug)]
+pub struct LayerBreakdown {
+    pub attention_s: f64,
+    pub allreduce_s: f64,
+    pub router_s: f64,
+    pub ffn_s: f64,
+    pub scatter_s: f64,
+    pub gather_s: f64,
+    pub overhead_s: f64,
+    pub movement_s: f64,
+}
+
+impl LayerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.attention_s
+            + self.allreduce_s
+            + self.router_s
+            + self.ffn_s
+            + self.scatter_s
+            + self.gather_s
+            + self.overhead_s
+            + self.movement_s
+    }
+
+    /// Total communication (all-reduce + both all-to-alls).
+    pub fn comm_s(&self) -> f64 {
+        self.allreduce_s + self.scatter_s + self.gather_s
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("attention_s", Value::Num(self.attention_s))
+            .set("allreduce_s", Value::Num(self.allreduce_s))
+            .set("router_s", Value::Num(self.router_s))
+            .set("ffn_s", Value::Num(self.ffn_s))
+            .set("scatter_s", Value::Num(self.scatter_s))
+            .set("gather_s", Value::Num(self.gather_s))
+            .set("overhead_s", Value::Num(self.overhead_s))
+            .set("movement_s", Value::Num(self.movement_s))
+            .set("total_s", Value::Num(self.total()));
+        v
+    }
+}
+
+/// A configured single-layer simulation.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub model: ModelConfig,
+    pub system: SystemSpec,
+    pub batch: usize,
+    pub seq: usize,
+    pub error_model: ErrorModel,
+    pub hide_duplication: bool,
+}
+
+impl LayerSim {
+    /// The paper's main setup: batch 1, sequence 512.
+    pub fn new(model: ModelConfig, system: SystemSpec) -> LayerSim {
+        LayerSim {
+            model,
+            system,
+            batch: 1,
+            seq: 512,
+            error_model: ErrorModel::Typical,
+            hide_duplication: true,
+        }
+    }
+
+    pub fn with_workload(mut self, batch: usize, seq: usize) -> LayerSim {
+        self.batch = batch;
+        self.seq = seq;
+        self
+    }
+
+    pub fn attention(&self) -> AttentionCost {
+        attention::attention_cost(&self.model, &self.system, self.batch, self.seq)
+    }
+
+    /// Router cost: one `[tokens, d_model] × [d_model, E]` GEMM + top-k
+    /// selection (elementwise-ish).
+    pub fn router_time(&self) -> f64 {
+        let tokens = self.batch * self.seq;
+        let gemm = roofline::gemm_time(
+            &self.system.device,
+            tokens,
+            self.model.n_experts,
+            self.model.d_model,
+            self.model.dtype,
+        );
+        let topk = roofline::elementwise_time(
+            &self.system.device,
+            tokens * self.model.n_experts,
+            3.0,
+            1,
+            self.model.dtype,
+        );
+        gemm + topk
+    }
+
+    fn moe(&self, skewness: f64, strategy: Strategy, attention_compute_s: f64) -> MoeCost {
+        let mut p = MoeParams::new(self.batch, self.seq, skewness, strategy);
+        p.error_model = self.error_model;
+        p.hide_duplication = self.hide_duplication;
+        p.attention_compute_s = attention_compute_s;
+        moe::moe_cost(&self.model, &self.system, &p)
+    }
+
+    /// Full-layer breakdown for a given workload skewness and strategy.
+    pub fn breakdown(&self, skewness: f64, strategy: Strategy) -> LayerBreakdown {
+        let attn = self.attention();
+        let moe = self.moe(skewness, strategy, attn.compute());
+        LayerBreakdown {
+            attention_s: attn.compute(),
+            allreduce_s: attn.allreduce_s,
+            router_s: self.router_time(),
+            ffn_s: moe.ffn_s,
+            scatter_s: moe.scatter_s,
+            gather_s: moe.gather_s,
+            overhead_s: moe.overhead_s,
+            movement_s: moe.movement_s,
+        }
+    }
+
+    /// Baseline (no prediction) total latency at a skewness.
+    pub fn baseline_total(&self, skewness: f64) -> f64 {
+        self.breakdown(skewness, Strategy::NoPrediction).total()
+    }
+
+    /// Normalised performance as the paper plots it: baseline_time / time
+    /// (higher is better; 1.0 = baseline).
+    pub fn normalized_performance(&self, skewness: f64, strategy: Strategy) -> f64 {
+        self.baseline_total(skewness) / self.breakdown(skewness, strategy).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SystemSpec;
+
+    fn sim() -> LayerSim {
+        LayerSim::new(
+            ModelConfig::mixtral_8x7b(),
+            SystemSpec::four_a100_nvlink(),
+        )
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let b = sim().breakdown(1.4, Strategy::NoPrediction);
+        assert!(b.attention_s > 0.0);
+        assert!(b.allreduce_s > 0.0);
+        assert!(b.router_s > 0.0);
+        assert!(b.ffn_s > 0.0);
+        assert!(b.scatter_s > 0.0);
+        assert!(b.gather_s > 0.0);
+        assert_eq!(b.overhead_s, 0.0);
+        let total = b.total();
+        assert!(
+            (total
+                - (b.attention_s
+                    + b.allreduce_s
+                    + b.router_s
+                    + b.ffn_s
+                    + b.scatter_s
+                    + b.gather_s))
+                .abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn dop_beats_baseline_at_moderate_skew() {
+        let s = sim();
+        let perf = s.normalized_performance(
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.018 },
+        );
+        assert!(perf > 1.0, "perf={perf}");
+    }
+
+    #[test]
+    fn tep_u_shape_in_accuracy() {
+        // With an overhead that grows steeply in accuracy, total latency is
+        // U-shaped: too-low accuracy wastes comm/compute, too-high accuracy
+        // pays overhead (paper Figure 4/6).
+        let s = sim();
+        let overhead = |acc: f64| 15e-6 * (4.0 * acc).exp();
+        let total = |acc: f64| {
+            s.breakdown(
+                1.4,
+                Strategy::TokenToExpert {
+                    accuracy: acc,
+                    overhead_s: overhead(acc),
+                },
+            )
+            .total()
+        };
+        let lo = total(0.3);
+        let mid = total(0.7);
+        let hi = total(0.999);
+        assert!(mid < lo, "mid={mid} lo={lo}");
+        assert!(mid < hi, "mid={mid} hi={hi}");
+    }
+
+    #[test]
+    fn normalized_perf_of_baseline_is_one() {
+        let s = sim();
+        let p = s.normalized_performance(2.0, Strategy::NoPrediction);
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pcie_comm_dominates_breakdown() {
+        let s = LayerSim::new(
+            ModelConfig::mixtral_8x7b(),
+            SystemSpec::four_a100_pcie(),
+        );
+        let b = s.breakdown(1.4, Strategy::NoPrediction);
+        assert!(
+            b.comm_s() > b.attention_s + b.ffn_s,
+            "comm={} compute={}",
+            b.comm_s(),
+            b.attention_s + b.ffn_s
+        );
+    }
+
+    #[test]
+    fn json_breakdown_has_total() {
+        let b = sim().breakdown(1.4, Strategy::NoPrediction);
+        let v = b.to_json();
+        assert!((v.req_f64("total_s").unwrap() - b.total()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,34 @@
+//! LLMCompass-like block-level performance simulator.
+//!
+//! The paper evaluates everything through an augmented LLMCompass [36]: a
+//! throughput-oriented analytical simulator that prices each transformer
+//! block operation (GEMM, elementwise, softmax, communication) on a
+//! parametric hardware description and sums a per-layer latency breakdown.
+//! This module is our rust reimplementation of the slice of LLMCompass the
+//! paper uses, plus the paper's own extensions (§3.4):
+//!
+//! * MoE + Expert Parallelism: EP-specific all-to-all communication and
+//!   skew-scaled expert FFN workloads ([`moe`]).
+//! * Mixtral support: Grouped-Query Attention, SwiGLU, sliding-window
+//!   attention ([`attention`], [`ffn`]).
+//! * Prediction-strategy modeling: Distribution-Only and Token-to-Expert
+//!   with tunable accuracy and overhead, and the optimistic / typical /
+//!   pessimistic error-distribution scenarios of Figure 5 ([`error_model`],
+//!   [`moe`]).
+//!
+//! The simulator is *analytical*: `simulate` functions return seconds, not
+//! samples. Fidelity target (DESIGN.md §5): relative behaviour — breakdown
+//! shape, crossover points, who-wins — not absolute A100 milliseconds.
+
+pub mod attention;
+pub mod collective;
+pub mod error_model;
+pub mod ffn;
+pub mod hardware;
+pub mod layer;
+pub mod moe;
+pub mod roofline;
+
+pub use error_model::ErrorModel;
+pub use hardware::{DeviceSpec, InterconnectSpec, SystemSpec};
+pub use layer::{LayerBreakdown, LayerSim};

@@ -1,0 +1,370 @@
+//! EP-MoE stage model: FFN compute + all-to-all communication under
+//! skewness, for each prediction strategy (paper §3.2–§3.3).
+//!
+//! Strategy semantics (paper Figure 3):
+//!
+//! * **NoPrediction** — baseline. Hot GPU's FFN time and both all-to-all
+//!   phases scale by the workload skewness.
+//! * **DistributionOnly** — duplication driven by the predicted aggregate
+//!   distribution balances *compute* (up to the estimation error ε fed
+//!   through the error model), but "communication time remains unchanged"
+//!   (§4): tokens are still randomly scattered post-all-reduce, so both
+//!   all-to-all phases keep the baseline skew scaling. Zero overhead — the
+//!   estimate is a moving average maintained offline.
+//! * **TokenToExpert** — tokens are sent directly to their predicted GPU,
+//!   eliminating the scatter for correctly-predicted tokens; misrouted
+//!   tokens (fraction ε = 1 − accuracy) need a correction transfer, and —
+//!   unlike compute — "communication costs always increase with prediction
+//!   errors … optimistic cases do not exist in this context" (§3.3), so
+//!   the comm term always uses the typical uniform-misroute model. Adds
+//!   the predictor's runtime as overhead.
+
+use super::collective;
+use super::error_model::ErrorModel;
+use super::ffn;
+use super::hardware::SystemSpec;
+use crate::model::ModelConfig;
+
+/// Prediction strategy with its quality knobs (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    NoPrediction,
+    /// `error_rate` is the paper's normalised distribution error
+    /// `|p̂ − p| / (1/E)` averaged over layers (Table 1).
+    DistributionOnly { error_rate: f64 },
+    /// `accuracy` ∈ [0,1]; `overhead_s` is the predictor runtime for this
+    /// batch (from `predictor::overhead`).
+    TokenToExpert { accuracy: f64, overhead_s: f64 },
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::NoPrediction => "none",
+            Strategy::DistributionOnly { .. } => "distribution-only",
+            Strategy::TokenToExpert { .. } => "token-to-expert",
+        }
+    }
+}
+
+/// MoE-stage latency breakdown for the bottleneck device.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MoeCost {
+    /// Pre-FFN all-to-all token scatter.
+    pub scatter_s: f64,
+    /// Expert FFN compute on the bottleneck GPU.
+    pub ffn_s: f64,
+    /// Post-FFN all-to-all gather.
+    pub gather_s: f64,
+    /// Prediction overhead (TEP only).
+    pub overhead_s: f64,
+    /// Expert-movement time *not* hidden under attention (0 by default,
+    /// see [`MoeParams::hide_duplication`]).
+    pub movement_s: f64,
+}
+
+impl MoeCost {
+    pub fn total(&self) -> f64 {
+        self.scatter_s + self.ffn_s + self.gather_s + self.overhead_s + self.movement_s
+    }
+
+    pub fn comm_s(&self) -> f64 {
+        self.scatter_s + self.gather_s
+    }
+}
+
+/// Inputs to the MoE-stage simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeParams {
+    pub batch: usize,
+    pub seq: usize,
+    /// Workload skewness (≥ 1).
+    pub skewness: f64,
+    pub strategy: Strategy,
+    pub error_model: ErrorModel,
+    /// If true (default, paper §5) expert-duplication transfers are hidden
+    /// under the attention phase; if false their excess over the attention
+    /// compute time is charged (ablation).
+    pub hide_duplication: bool,
+    /// Attention compute time available for hiding (only read when
+    /// `hide_duplication` is false).
+    pub attention_compute_s: f64,
+    /// Prediction/placement frequency (paper §3.1): predict every
+    /// `prediction_interval` batches and amortise the TEP overhead across
+    /// them (existing systems range from every batch [8, 34] to every
+    /// ~10 min [18]). 1 = the paper's default single-batch setting.
+    /// Staleness is not modelled (the paper's simulator doesn't either).
+    pub prediction_interval: usize,
+    /// Ablation (DESIGN.md §3): the paper states DOP leaves communication
+    /// unchanged (skew-scaled); if true, model the alternative where
+    /// duplication also balances the all-to-all destinations (skew → 1).
+    pub dop_balanced_comm: bool,
+}
+
+impl MoeParams {
+    pub fn new(batch: usize, seq: usize, skewness: f64, strategy: Strategy) -> MoeParams {
+        MoeParams {
+            batch,
+            seq,
+            skewness,
+            strategy,
+            error_model: ErrorModel::Typical,
+            hide_duplication: true,
+            attention_compute_s: 0.0,
+            prediction_interval: 1,
+            dop_balanced_comm: false,
+        }
+    }
+}
+
+/// Simulate the MoE stage (scatter → expert FFN → gather) of one layer.
+pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeCost {
+    let n = system.n_devices;
+    let tokens = p.batch * p.seq;
+    // Token-slots: each token occupies top_k expert slots.
+    let slots = tokens * model.top_k;
+    let bytes_per_token = model.d_model as f64 * model.dtype.bytes() as f64;
+    let skew = p.skewness.max(1.0);
+
+    // Balanced per-device FFN reference (perfect distribution).
+    let balanced_ffn = ffn::balanced_device_ffn_time(model, &system.device, slots, n);
+    // Balanced all-to-all reference (skew = 1).
+    let balanced_a2a = collective::ep_all_to_all_time(
+        &system.interconnect,
+        n,
+        slots as f64,
+        bytes_per_token,
+        1.0,
+    );
+    let skewed_a2a = collective::ep_all_to_all_time(
+        &system.interconnect,
+        n,
+        slots as f64,
+        bytes_per_token,
+        skew,
+    );
+
+    let mut cost = MoeCost::default();
+    match p.strategy {
+        Strategy::NoPrediction => {
+            // Paper §2: bottleneck FFN and both shuffles scale by skewness.
+            cost.ffn_s = balanced_ffn * skew;
+            cost.scatter_s = skewed_a2a;
+            cost.gather_s = skewed_a2a;
+        }
+        Strategy::DistributionOnly { error_rate } => {
+            let mult = p.error_model.load_multiplier(error_rate, n);
+            cost.ffn_s = balanced_ffn * mult;
+            // Communication unchanged vs baseline (§4) — unless the
+            // balanced-destination ablation is enabled.
+            let a2a = if p.dop_balanced_comm { balanced_a2a } else { skewed_a2a };
+            cost.scatter_s = a2a;
+            cost.gather_s = a2a;
+            cost.movement_s = movement_cost(model, system, p);
+        }
+        Strategy::TokenToExpert { accuracy, overhead_s } => {
+            let eps = (1.0 - accuracy).clamp(0.0, 1.0);
+            let mult = p.error_model.load_multiplier(eps, n);
+            cost.ffn_s = balanced_ffn * mult;
+            // Correct predictions skip the shuffle entirely; mispredicted
+            // tokens take a correction hop. Always the typical model (§3.3).
+            cost.scatter_s = balanced_a2a * eps;
+            cost.gather_s = balanced_a2a * eps;
+            // §3.1: amortise predictor overhead over the prediction interval.
+            cost.overhead_s = overhead_s / p.prediction_interval.max(1) as f64;
+            cost.movement_s = movement_cost(model, system, p);
+        }
+    }
+    cost
+}
+
+/// Expert-movement (duplication) cost not hidden under attention. The paper
+/// assumes one expert sent + received per GPU per layer (§5).
+fn movement_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> f64 {
+    if p.hide_duplication {
+        return 0.0;
+    }
+    let transfer = collective::p2p_time(&system.interconnect, model.expert_bytes());
+    (transfer - p.attention_compute_s).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SystemSpec;
+
+    fn mixtral_nvlink() -> (ModelConfig, SystemSpec) {
+        (ModelConfig::mixtral_8x7b(), SystemSpec::four_a100_nvlink())
+    }
+
+    #[test]
+    fn baseline_scales_with_skew() {
+        let (m, s) = mixtral_nvlink();
+        let at = |skew| {
+            moe_cost(
+                &m,
+                &s,
+                &MoeParams::new(1, 512, skew, Strategy::NoPrediction),
+            )
+        };
+        let c1 = at(1.0);
+        let c2 = at(2.0);
+        assert!((c2.ffn_s / c1.ffn_s - 2.0).abs() < 1e-9);
+        assert!(c2.scatter_s > c1.scatter_s);
+        assert!(c2.total() > c1.total());
+    }
+
+    #[test]
+    fn dop_balances_compute_but_not_comm() {
+        let (m, s) = mixtral_nvlink();
+        let skew = 2.0;
+        let base = moe_cost(&m, &s, &MoeParams::new(1, 512, skew, Strategy::NoPrediction));
+        let dop = moe_cost(
+            &m,
+            &s,
+            &MoeParams::new(1, 512, skew, Strategy::DistributionOnly { error_rate: 0.02 }),
+        );
+        assert!(dop.ffn_s < base.ffn_s * 0.6, "compute should rebalance");
+        assert_eq!(dop.scatter_s, base.scatter_s, "comm unchanged (paper §4)");
+        assert_eq!(dop.gather_s, base.gather_s);
+        assert_eq!(dop.overhead_s, 0.0, "DOP has zero overhead");
+    }
+
+    #[test]
+    fn tep_perfect_prediction_eliminates_comm() {
+        let (m, s) = mixtral_nvlink();
+        let tep = moe_cost(
+            &m,
+            &s,
+            &MoeParams::new(
+                1,
+                512,
+                2.0,
+                Strategy::TokenToExpert {
+                    accuracy: 1.0,
+                    overhead_s: 0.0,
+                },
+            ),
+        );
+        // Only the latency terms (ε=0 kills the bandwidth terms).
+        assert!(tep.scatter_s < 1e-9);
+        assert!(tep.gather_s < 1e-9);
+        // Compute balanced.
+        let balanced = ffn::balanced_device_ffn_time(&m, &s.device, 1024, 4);
+        assert!((tep.ffn_s - balanced).abs() / balanced < 1e-9);
+    }
+
+    #[test]
+    fn tep_comm_grows_with_error() {
+        let (m, s) = mixtral_nvlink();
+        let at = |acc| {
+            moe_cost(
+                &m,
+                &s,
+                &MoeParams::new(
+                    1,
+                    512,
+                    1.4,
+                    Strategy::TokenToExpert {
+                        accuracy: acc,
+                        overhead_s: 0.0,
+                    },
+                ),
+            )
+        };
+        assert!(at(0.7).comm_s() > at(0.9).comm_s());
+        assert!(at(0.9).comm_s() > at(1.0).comm_s());
+    }
+
+    #[test]
+    fn error_models_order_ffn_time() {
+        let (m, s) = mixtral_nvlink();
+        let mk = |em| {
+            let mut p = MoeParams::new(
+                1,
+                512,
+                1.4,
+                Strategy::DistributionOnly { error_rate: 0.1 },
+            );
+            p.error_model = em;
+            moe_cost(&m, &s, &p).ffn_s
+        };
+        let o = mk(ErrorModel::Optimistic);
+        let t = mk(ErrorModel::Typical);
+        let pess = mk(ErrorModel::Pessimistic);
+        assert!(o < t && t < pess);
+    }
+
+    #[test]
+    fn movement_hidden_by_default_charged_when_exposed() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(
+            1,
+            512,
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.0 },
+        );
+        assert_eq!(moe_cost(&m, &s, &p).movement_s, 0.0);
+        p.hide_duplication = false;
+        p.attention_compute_s = 0.0;
+        let exposed = moe_cost(&m, &s, &p).movement_s;
+        assert!(exposed > 0.0);
+        // With enough attention time it hides again.
+        p.attention_compute_s = 1.0;
+        assert_eq!(moe_cost(&m, &s, &p).movement_s, 0.0);
+    }
+
+    #[test]
+    fn prediction_interval_amortises_overhead() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(
+            1,
+            512,
+            1.4,
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: 1e-3,
+            },
+        );
+        let every_batch = moe_cost(&m, &s, &p).overhead_s;
+        p.prediction_interval = 10;
+        let every_ten = moe_cost(&m, &s, &p).overhead_s;
+        assert!((every_batch / every_ten - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dop_balanced_comm_ablation() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(
+            1,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        let unchanged = moe_cost(&m, &s, &p);
+        p.dop_balanced_comm = true;
+        let balanced = moe_cost(&m, &s, &p);
+        assert!(balanced.comm_s() < unchanged.comm_s());
+        assert_eq!(balanced.ffn_s, unchanged.ffn_s);
+    }
+
+    #[test]
+    fn overhead_passed_through() {
+        let (m, s) = mixtral_nvlink();
+        let c = moe_cost(
+            &m,
+            &s,
+            &MoeParams::new(
+                1,
+                512,
+                1.4,
+                Strategy::TokenToExpert {
+                    accuracy: 0.9,
+                    overhead_s: 1.5e-3,
+                },
+            ),
+        );
+        assert_eq!(c.overhead_s, 1.5e-3);
+        assert!(c.total() >= 1.5e-3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dataset emulators calibrated to the paper's measurements (§3.2, Table 1).
+//!
+//! | dataset     | paper skew | paper DOP error |
+//! |-------------|-----------:|----------------:|
+//! | MMLU        |      1.388 |           1.80% |
+//! | Alpaca Eval |      1.402 |           0.98% |
+//! | SST2        |      1.990 |          16.00% |
+//!
+//! Knob mapping (see `trace::generator`):
+//! * `target_skew` → the reported skewness;
+//! * `concentration` → batch heterogeneity → the Table-1 error rate (SST2 is
+//!   a short-utterance sentiment set whose batches differ a lot, hence the
+//!   16% error; MMLU/Alpaca are broad-domain and much more stable);
+//! * `lambda`/`mu` → token- and context-level predictability, which bounds
+//!   the accuracy the Token-to-Expert predictors can reach (Figure 4). The
+//!   paper observes prediction is *easier* at higher skew — SST2 gets a
+//!   higher floor via its skewed base distribution, and we give MMLU/Alpaca
+//!   moderate predictability so the Figure-4 accuracy range matches.
+
+use super::generator::TraceSpec;
+
+/// Standard trace dimensions used across the benches: 8 experts (Mixtral),
+/// sequence length 512 (the paper's setting).
+pub const N_EXPERTS: usize = 8;
+pub const SEQ_LEN: usize = 512;
+pub const VOCAB: usize = 4096;
+
+/// MMLU-like: skew ≈ 1.39, very homogeneous batches (error ≈ 1.8%).
+pub fn mmlu_like(seed: u64) -> TraceSpec {
+    TraceSpec {
+        name: "mmlu-like".into(),
+        n_experts: N_EXPERTS,
+        vocab_size: VOCAB,
+        seq_len: SEQ_LEN,
+        sequences_per_batch: 8,
+        n_batches: 50,
+        target_skew: 1.40,
+        concentration: 2500.0,
+        lambda: 0.55,
+        mu: 0.15,
+        drift: 0.13,
+        seed,
+    }
+}
+
+/// Alpaca-Eval-like: skew ≈ 1.40, the most homogeneous batches (0.98%).
+pub fn alpaca_like(seed: u64) -> TraceSpec {
+    TraceSpec {
+        name: "alpaca-like".into(),
+        n_experts: N_EXPERTS,
+        vocab_size: VOCAB,
+        seq_len: SEQ_LEN,
+        sequences_per_batch: 8,
+        n_batches: 50,
+        target_skew: 1.402,
+        concentration: 9000.0,
+        lambda: 0.55,
+        mu: 0.15,
+        drift: 0.034,
+        seed,
+    }
+}
+
+/// SST2-like: skew ≈ 1.99, strong train→test distribution shift (16%
+/// error — SST2 has a dedicated test split in the paper), higher
+/// predictability (high skew makes accurate prediction cheaper, §4).
+pub fn sst2_like(seed: u64) -> TraceSpec {
+    TraceSpec {
+        name: "sst2-like".into(),
+        n_experts: N_EXPERTS,
+        vocab_size: VOCAB,
+        seq_len: SEQ_LEN,
+        sequences_per_batch: 8,
+        n_batches: 50,
+        target_skew: 1.99,
+        concentration: 300.0,
+        lambda: 0.70,
+        mu: 0.12,
+        drift: 0.56,
+        seed,
+    }
+}
+
+/// A spec at an arbitrary target skewness (Figure 6/8/9 sweep points that
+/// have no matching dataset — the paper interpolates; we generate).
+pub fn at_skew(target_skew: f64, seed: u64) -> TraceSpec {
+    // Interpolate predictability/heterogeneity between the measured
+    // datasets: higher skew → easier prediction (paper §4 takeaway) and
+    // noisier estimation (Table 1 trend).
+    let t = ((target_skew - 1.4) / (2.0 - 1.4)).clamp(0.0, 2.0);
+    TraceSpec {
+        name: format!("skew-{target_skew:.2}"),
+        n_experts: N_EXPERTS,
+        vocab_size: VOCAB,
+        seq_len: SEQ_LEN,
+        sequences_per_batch: 8,
+        n_batches: 50,
+        target_skew,
+        concentration: (2500.0 * (1.0 - t) + 300.0 * t).max(100.0),
+        lambda: 0.55 + 0.15 * t.min(1.5),
+        mu: (0.15 - 0.02 * t.min(1.0)).max(0.0),
+        drift: (0.10 + 0.65 * t).min(0.9),
+        seed,
+    }
+}
+
+/// All three dataset emulators.
+pub fn all(seed: u64) -> Vec<TraceSpec> {
+    vec![mmlu_like(seed), alpaca_like(seed + 1), sst2_like(seed + 2)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    #[test]
+    fn dataset_skews_match_paper() {
+        let cases = [
+            (mmlu_like(7), 1.388, 0.12),
+            (alpaca_like(7), 1.402, 0.12),
+            (sst2_like(7), 1.990, 0.15),
+        ];
+        for (spec, target, tol) in cases {
+            let name = spec.name.clone();
+            let t = Trace::generate(spec);
+            let skew = t.avg_skewness();
+            assert!(
+                (skew - target).abs() < tol,
+                "{name}: measured skew {skew} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn at_skew_interpolates() {
+        for &s in &[1.0, 1.4, 2.0, 3.0, 4.0] {
+            let spec = at_skew(s, 3);
+            let t = Trace::generate(spec);
+            let measured = t.avg_skewness();
+            let tol = 0.1 * s + 0.12;
+            assert!(
+                (measured - s).abs() < tol,
+                "target={s} measured={measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_returns_three() {
+        assert_eq!(all(1).len(), 3);
+    }
+}

@@ -1,0 +1,415 @@
+//! The synthetic routing-trace generator (see module docs in `trace`).
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One routed token: vocabulary id + the expert the (simulated) router
+/// assigned it to. The paper's predictors classify the top-1 expert; top-k
+/// load accounting replicates slots downstream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Token {
+    pub id: u32,
+    pub expert: u8,
+}
+
+/// One batch: `sequences × seq_len` tokens routed under one per-batch
+/// expert distribution.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub sequences: Vec<Vec<Token>>,
+}
+
+impl Batch {
+    /// Per-expert token counts in this batch.
+    pub fn expert_counts(&self, n_experts: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_experts];
+        for seq in &self.sequences {
+            for tok in seq {
+                counts[tok.expert as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.sequences.iter().map(Vec::len).sum()
+    }
+
+    pub fn skewness(&self, n_experts: usize) -> f64 {
+        stats::skewness_of_counts(&self.expert_counts(n_experts))
+    }
+}
+
+/// Generator specification for one dataset-like workload.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub name: String,
+    pub n_experts: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    /// Sequences per batch (the paper uses batch 1 × seq 512 for the
+    /// simulator; predictor training uses many batches).
+    pub sequences_per_batch: usize,
+    pub n_batches: usize,
+    /// Target average per-batch skewness.
+    pub target_skew: f64,
+    /// Dirichlet concentration for per-batch distributions (higher = more
+    /// homogeneous batches = lower Table-1 error rate).
+    pub concentration: f64,
+    /// Probability a token routes to its unigram affinity expert.
+    pub lambda: f64,
+    /// Probability a token routes to its bigram (context) affinity expert.
+    pub mu: f64,
+    /// Total L1 distance the expert distribution drifts across the trace
+    /// (skew-preserving rotation of the non-top experts). An 80/20
+    /// train/test split then sees a systematic shift of ≈ `drift / 2` —
+    /// this is what produces SST2's 16% Table-1 error in the paper, where
+    /// the test split comes from a genuinely different distribution.
+    pub drift: f64,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    pub fn tokens_per_batch(&self) -> usize {
+        self.seq_len * self.sequences_per_batch
+    }
+}
+
+/// A generated routing trace plus the ground-truth base distribution.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub spec: TraceSpec,
+    pub base_probs: Vec<f64>,
+    pub batches: Vec<Batch>,
+    /// Unigram affinity expert per vocab id (ground truth — predictors must
+    /// *learn* it from the batches, never read it).
+    affinity: Vec<u8>,
+}
+
+impl Trace {
+    /// Generate a trace from a spec.
+    pub fn generate(spec: TraceSpec) -> Trace {
+        let mut rng = Rng::new(spec.seed);
+        // The `mu` fraction routes via the (uniform-ish) bigram hash, which
+        // flattens the aggregate distribution; compensate so the *measured*
+        // skew hits the target: max_eff = (1−mu)·s_base/E + mu/E = target/E.
+        let base_skew = if spec.mu < 1.0 {
+            ((spec.target_skew - spec.mu) / (1.0 - spec.mu)).max(1.0)
+        } else {
+            1.0
+        };
+        let base_probs = base_distribution(spec.n_experts, base_skew);
+
+        // Skew-preserving drift target: a permuted copy of `base_probs`
+        // with the argmax fixed (max stays put → skewness preserved).
+        let drift_target = drift_permutation(&base_probs, &mut rng);
+        let drift = spec.drift.clamp(0.0, 1.0);
+
+        // Unigram affinities: a start table sampled from the base
+        // distribution, an end table from the drift target, and a per-token
+        // switch threshold — by the end of the trace a `drift` fraction of
+        // the vocabulary has re-routed. This models the "expert load
+        // distribution fluctuates" regime that makes SST2's Table-1 error
+        // large: the test split genuinely differs from the train split.
+        let affinity: Vec<u8> = (0..spec.vocab_size)
+            .map(|_| rng.categorical(&base_probs) as u8)
+            .collect();
+        let affinity_end: Vec<u8> = (0..spec.vocab_size)
+            .map(|_| rng.categorical(&drift_target) as u8)
+            .collect();
+        let thresholds: Vec<f64> = (0..spec.vocab_size).map(|_| rng.f64()).collect();
+
+        let mut batches = Vec::with_capacity(spec.n_batches);
+        for b in 0..spec.n_batches {
+            let u = if spec.n_batches > 1 {
+                b as f64 / (spec.n_batches - 1) as f64
+            } else {
+                0.0
+            };
+            let t = u * drift;
+            // Per-batch distribution: drifted base + Dirichlet jitter
+            // (heterogeneity across batches).
+            let drifted: Vec<f64> = base_probs
+                .iter()
+                .zip(&drift_target)
+                .map(|(&p, &q)| (1.0 - t) * p + t * q)
+                .collect();
+            let alphas: Vec<f64> = drifted
+                .iter()
+                .map(|&p| (p * spec.concentration).max(1e-3))
+                .collect();
+            let batch_probs = rng.dirichlet(&alphas);
+            let mut batch = Batch::default();
+            for _ in 0..spec.sequences_per_batch {
+                let mut seq = Vec::with_capacity(spec.seq_len);
+                let mut prev_id: u32 = 0;
+                for pos in 0..spec.seq_len {
+                    let id = rng.below(spec.vocab_size as u64) as u32;
+                    let r = rng.f64();
+                    let expert = if r < spec.lambda {
+                        let idx = id as usize;
+                        if thresholds[idx] < t {
+                            affinity_end[idx]
+                        } else {
+                            affinity[idx]
+                        }
+                    } else if r < spec.lambda + spec.mu && pos > 0 {
+                        bigram_affinity(prev_id, id, spec.n_experts)
+                    } else {
+                        rng.categorical(&batch_probs) as u8
+                    };
+                    seq.push(Token { id, expert });
+                    prev_id = id;
+                }
+                batch.sequences.push(seq);
+            }
+            batches.push(batch);
+        }
+
+        Trace {
+            spec,
+            base_probs,
+            batches,
+            affinity,
+        }
+    }
+
+    /// Average per-batch skewness (the number the paper reports per dataset).
+    pub fn avg_skewness(&self) -> f64 {
+        let skews: Vec<f64> = self
+            .batches
+            .iter()
+            .map(|b| b.skewness(self.spec.n_experts))
+            .collect();
+        stats::mean(&skews)
+    }
+
+    /// Aggregate expert counts over all batches.
+    pub fn expert_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.spec.n_experts];
+        for b in &self.batches {
+            for (i, c) in b.expert_counts(self.spec.n_experts).iter().enumerate() {
+                counts[i] += c;
+            }
+        }
+        counts
+    }
+
+    /// 80/20-style split by batches (the paper randomly partitions; we split
+    /// deterministically after generation order is already random).
+    pub fn split(&self, train_frac: f64) -> (Trace, Trace) {
+        let n_train = ((self.batches.len() as f64) * train_frac).round() as usize;
+        let n_train = n_train.clamp(1, self.batches.len().saturating_sub(1).max(1));
+        let mk = |batches: Vec<Batch>| Trace {
+            spec: self.spec.clone(),
+            base_probs: self.base_probs.clone(),
+            batches,
+            affinity: self.affinity.clone(),
+        };
+        (
+            mk(self.batches[..n_train].to_vec()),
+            mk(self.batches[n_train..].to_vec()),
+        )
+    }
+
+    /// Total number of tokens across all batches.
+    pub fn n_tokens(&self) -> usize {
+        self.batches.iter().map(Batch::n_tokens).sum()
+    }
+}
+
+/// A permuted copy of `probs` with the argmax fixed: rotating the non-top
+/// components preserves the max (hence the skewness) while moving L1 mass.
+fn drift_permutation(probs: &[f64], rng: &mut Rng) -> Vec<f64> {
+    let argmax = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut rest: Vec<usize> = (0..probs.len()).filter(|&i| i != argmax).collect();
+    rng.shuffle(&mut rest);
+    let mut out = probs.to_vec();
+    let original: Vec<usize> = (0..probs.len()).filter(|&i| i != argmax).collect();
+    for (dst, src) in original.iter().zip(&rest) {
+        out[*dst] = probs[*src];
+    }
+    out
+}
+
+/// Deterministic bigram affinity via a mixing hash (stand-in for the
+/// context-dependent routing the paper's LSTM predictor captures).
+pub fn bigram_affinity(prev_id: u32, id: u32, n_experts: usize) -> u8 {
+    let mut h = (prev_id as u64) << 32 | id as u64;
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    (h % n_experts as u64) as u8
+}
+
+/// Construct a probability vector over `n` experts with
+/// `max(p) / (1/n) == skew` using a geometric family `p_i ∝ r^i`
+/// (bisection on the ratio `r`). `skew = 1` → uniform; `skew = n` →
+/// one-hot (approached asymptotically).
+pub fn base_distribution(n: usize, skew: f64) -> Vec<f64> {
+    assert!(n >= 1);
+    let skew = skew.clamp(1.0, n as f64 * 0.999);
+    if (skew - 1.0).abs() < 1e-9 {
+        return vec![1.0 / n as f64; n];
+    }
+    // For ratio r ∈ (0,1): p_0 = (1−r)/(1−r^n), skewness = n·p_0.
+    let skew_of = |r: f64| -> f64 {
+        if (r - 1.0).abs() < 1e-12 {
+            1.0
+        } else {
+            n as f64 * (1.0 - r) / (1.0 - r.powi(n as i32))
+        }
+    };
+    let (mut lo, mut hi) = (1e-9, 1.0 - 1e-9); // r→0: skew→n; r→1: skew→1
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if skew_of(mid) > skew {
+            lo = mid; // too skewed → raise r
+        } else {
+            hi = mid;
+        }
+    }
+    let r = 0.5 * (lo + hi);
+    let mut p: Vec<f64> = (0..n).map(|i| r.powi(i as i32)).collect();
+    let sum: f64 = p.iter().sum();
+    for x in &mut p {
+        *x /= sum;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> TraceSpec {
+        TraceSpec {
+            name: "test".into(),
+            n_experts: 8,
+            vocab_size: 512,
+            seq_len: 128,
+            sequences_per_batch: 4,
+            n_batches: 10,
+            target_skew: 1.4,
+            concentration: 500.0,
+            lambda: 0.5,
+            mu: 0.1,
+            drift: 0.0,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn base_distribution_hits_target_skew() {
+        for &skew in &[1.0, 1.4, 2.0, 3.0, 5.0] {
+            let p = base_distribution(8, skew);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            let measured = stats::skewness_of_probs(&p);
+            assert!(
+                (measured - skew).abs() < 0.01,
+                "target={skew} measured={measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn base_distribution_clamps_extremes() {
+        let p = base_distribution(8, 0.5); // below 1 → uniform
+        assert!((p[0] - 0.125).abs() < 1e-9);
+        let p = base_distribution(8, 100.0); // above n → near one-hot
+        assert!(p[0] > 0.98);
+    }
+
+    #[test]
+    fn trace_shape_matches_spec() {
+        let t = Trace::generate(small_spec());
+        assert_eq!(t.batches.len(), 10);
+        assert_eq!(t.batches[0].sequences.len(), 4);
+        assert_eq!(t.batches[0].sequences[0].len(), 128);
+        assert_eq!(t.n_tokens(), 10 * 4 * 128);
+        assert!(t.batches[0].sequences[0]
+            .iter()
+            .all(|tok| (tok.expert as usize) < 8 && (tok.id as usize) < 512));
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = Trace::generate(small_spec());
+        let b = Trace::generate(small_spec());
+        assert_eq!(a.batches[3].sequences[1], b.batches[3].sequences[1]);
+    }
+
+    #[test]
+    fn measured_skew_tracks_target() {
+        for &target in &[1.4, 2.0] {
+            let mut spec = small_spec();
+            spec.target_skew = target;
+            spec.seq_len = 512;
+            spec.n_batches = 20;
+            let t = Trace::generate(spec);
+            let measured = t.avg_skewness();
+            // Finite-sample noise adds a little skew on top of the base.
+            assert!(
+                (measured - target).abs() < 0.25,
+                "target={target} measured={measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_preserves_batches() {
+        let t = Trace::generate(small_spec());
+        let (train, test) = t.split(0.8);
+        assert_eq!(train.batches.len(), 8);
+        assert_eq!(test.batches.len(), 2);
+        assert_eq!(
+            train.n_tokens() + test.n_tokens(),
+            t.n_tokens()
+        );
+    }
+
+    #[test]
+    fn aggregate_counts_track_base_probs() {
+        let mut spec = small_spec();
+        spec.n_batches = 40;
+        spec.seq_len = 512;
+        let t = Trace::generate(spec);
+        let counts = t.expert_counts();
+        let total: usize = counts.iter().sum();
+        let freq0 = counts[0] as f64 / total as f64;
+        assert!(
+            (freq0 - t.base_probs[0]).abs() < 0.05,
+            "freq0={freq0} base={}",
+            t.base_probs[0]
+        );
+    }
+
+    #[test]
+    fn higher_lambda_means_more_predictable() {
+        // With lambda=1 every token routes to its affinity expert: a
+        // perfect conditional predictor would be 100% accurate.
+        let mut spec = small_spec();
+        spec.lambda = 1.0;
+        spec.mu = 0.0;
+        let t = Trace::generate(spec);
+        for b in &t.batches {
+            for s in &b.sequences {
+                for tok in s {
+                    assert_eq!(tok.expert, t.affinity_for_test(tok.id));
+                }
+            }
+        }
+    }
+
+    impl Trace {
+        /// Test-only accessor.
+        fn affinity_for_test(&self, id: u32) -> u8 {
+            self.affinity[id as usize]
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the shapes the `moe-gps` CLI needs: a leading subcommand,
+//! `--key value` options, `--flag` booleans, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, named options, flags and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        out.options.insert(name.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{s}`")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    /// Parse a comma-separated list of floats, e.g. `--skews 1.0,1.4,2.0`.
+    pub fn opt_f64_list(&self, name: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    part.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad number `{part}`"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str], flags: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(
+            &["simulate", "--model", "mixtral-8x7b", "--skew", "1.4"],
+            &[],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("model"), Some("mixtral-8x7b"));
+        assert_eq!(a.opt_f64("skew", 1.0).unwrap(), 1.4);
+        assert_eq!(a.opt_f64("missing", 2.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["sweep", "--fast", "--seq=512", "--verbose"], &["fast"]);
+        assert!(a.flag("fast"));
+        assert!(a.flag("verbose")); // trailing --flag with no value
+        assert_eq!(a.opt_usize("seq", 0).unwrap(), 512);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "val"], &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("val"));
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse(&["trace", "out.json", "extra"], &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("trace"));
+        assert_eq!(a.positionals, vec!["out.json", "extra"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--skews", "1.0, 1.4,2.0"], &[]);
+        assert_eq!(
+            a.opt_f64_list("skews", &[]).unwrap(),
+            vec![1.0, 1.4, 2.0]
+        );
+        assert_eq!(a.opt_f64_list("other", &[9.0]).unwrap(), vec![9.0]);
+        let bad = parse(&["x", "--skews", "1.0,zzz"], &[]);
+        assert!(bad.opt_f64_list("skews", &[]).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--n", "abc"], &[]);
+        assert!(a.opt_usize("n", 0).is_err());
+        assert!(a.opt_f64("n", 0.0).is_err());
+        assert!(a.opt_u64("n", 0).is_err());
+    }
+}

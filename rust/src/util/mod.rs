@@ -1,0 +1,63 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline build environment ships only the `xla` and `anyhow` crates, so
+//! the usual ecosystem crates (rand, serde, clap, …) are re-implemented here
+//! at the scale this project needs. Each submodule is unit-tested in place.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{:.0} {}", v, UNITS[unit])
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds with an auto-selected unit (ns/µs/ms/s).
+pub fn human_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+        assert_eq!(human_bytes(1024f64.powi(3)), "1.00 GiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(5e-9), "5.0 ns");
+        assert_eq!(human_time(1.5e-5), "15.00 µs");
+        assert_eq!(human_time(0.25), "250.000 ms");
+        assert_eq!(human_time(2.0), "2.000 s");
+    }
+}

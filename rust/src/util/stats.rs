@@ -1,0 +1,342 @@
+//! Small statistics toolkit: summary statistics, percentiles, online
+//! accumulators, distance metrics and curve fitting used across the
+//! simulator, the predictor-evaluation harness and the bench reports.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for slices shorter than 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile in `[0, 100]` with linear interpolation between order
+/// statistics. Sorts a copy of the input.
+pub fn percentile(xs: &[f64], pct: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&pct));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// L1 distance between two vectors of equal length.
+pub fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Normalise a non-negative vector to sum to 1. Uniform if the sum is 0.
+pub fn normalize(xs: &[f64]) -> Vec<f64> {
+    let sum: f64 = xs.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / xs.len() as f64; xs.len()];
+    }
+    xs.iter().map(|x| x / sum).collect()
+}
+
+/// The paper's skewness metric over a token-count histogram:
+/// `max_count / (total / n_bins)`. Returns 1.0 for empty input.
+pub fn skewness_of_counts(counts: &[usize]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 || counts.is_empty() {
+        return 1.0;
+    }
+    let max = *counts.iter().max().unwrap() as f64;
+    let avg = total as f64 / counts.len() as f64;
+    max / avg
+}
+
+/// Skewness over a probability vector (counts already normalised).
+pub fn skewness_of_probs(probs: &[f64]) -> f64 {
+    if probs.is_empty() {
+        return 1.0;
+    }
+    let max = probs.iter().cloned().fold(f64::MIN, f64::max);
+    let sum: f64 = probs.iter().sum();
+    if sum <= 0.0 {
+        return 1.0;
+    }
+    max / (sum / probs.len() as f64)
+}
+
+/// Online mean/min/max/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Least-squares fit of `y = a * exp(b * x)` (by linear regression on ln y).
+/// Used for the paper's accuracy→overhead curves (Figure 4). All `y` must be
+/// positive. Returns `(a, b)`.
+pub fn fit_exponential(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let log_ys: Vec<f64> = ys
+        .iter()
+        .map(|&y| {
+            assert!(y > 0.0, "fit_exponential requires positive y");
+            y.ln()
+        })
+        .collect();
+    let (b, ln_a) = linear_regression(xs, &log_ys);
+    (ln_a.exp(), b)
+}
+
+/// Ordinary least squares `y = slope * x + intercept`; returns
+/// `(slope, intercept)`.
+pub fn linear_regression(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let slope = sxy / sxx;
+    (slope, my - slope * mx)
+}
+
+/// Least-squares polynomial fit of given degree via normal equations with
+/// Gaussian elimination. Returns coefficients `c[0] + c[1] x + ... + c[d] x^d`.
+/// Used for the paper's accuracy→performance curves (Figure 4).
+pub fn fit_polynomial(xs: &[f64], ys: &[f64], degree: usize) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() > degree, "need more points than degree");
+    let n = degree + 1;
+    // Build normal equations A c = b where A[i][j] = sum x^(i+j).
+    let mut pow_sums = vec![0.0; 2 * degree + 1];
+    for &x in xs {
+        let mut p = 1.0;
+        for s in pow_sums.iter_mut() {
+            *s += p;
+            p *= x;
+        }
+    }
+    let mut a = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            a[i][j] = pow_sums[i + j];
+        }
+    }
+    let mut b = vec![0.0; n];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut p = 1.0;
+        for bi in b.iter_mut() {
+            *bi += p * y;
+            p *= x;
+        }
+    }
+    gaussian_solve(&mut a, &mut b);
+    b
+}
+
+/// Solve `A x = b` in place via Gaussian elimination with partial pivoting;
+/// the solution is written into `b`.
+fn gaussian_solve(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-12, "singular normal equations");
+        for row in col + 1..n {
+            let factor = a[row][col] / diag;
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for k in col + 1..n {
+            acc -= a[col][k] * b[k];
+        }
+        b[col] = acc / a[col][col];
+    }
+}
+
+/// Evaluate a polynomial given coefficients in ascending-degree order.
+pub fn eval_polynomial(coeffs: &[f64], x: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(median(&xs), 25.0);
+        assert!((percentile(&xs, 25.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_matches_paper_example() {
+        // Figure 2: expert 1 has 75% of tokens over 4 experts → skewness 3.
+        let counts = [75, 9, 8, 8];
+        let s = skewness_of_counts(&counts);
+        assert!((s - 3.0).abs() < 0.01, "s={s}");
+        let probs = [0.75, 0.0833, 0.0833, 0.0834];
+        assert!((skewness_of_probs(&probs) - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn skewness_balanced_is_one() {
+        assert_eq!(skewness_of_counts(&[25, 25, 25, 25]), 1.0);
+        assert_eq!(skewness_of_counts(&[]), 1.0);
+    }
+
+    #[test]
+    fn accumulator_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!((acc.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((acc.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 9.0);
+        assert_eq!(acc.count(), 8);
+    }
+
+    #[test]
+    fn exponential_fit_recovers_params() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 / 20.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 0.5 * (3.0 * x).exp()).collect();
+        let (a, b) = fit_exponential(&xs, &ys);
+        assert!((a - 0.5).abs() < 1e-9, "a={a}");
+        assert!((b - 3.0).abs() < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn polynomial_fit_recovers_coeffs() {
+        let xs: Vec<f64> = (0..30).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 1.0 - 2.0 * x + 0.5 * x * x).collect();
+        let c = fit_polynomial(&xs, &ys, 2);
+        assert!((c[0] - 1.0).abs() < 1e-8);
+        assert!((c[1] + 2.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+        let y = eval_polynomial(&c, 2.0);
+        assert!((y - (1.0 - 4.0 + 2.0)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn l1_and_normalize() {
+        assert_eq!(l1_distance(&[1.0, 2.0], &[0.0, 4.0]), 3.0);
+        let p = normalize(&[2.0, 2.0, 4.0]);
+        assert_eq!(p, vec![0.25, 0.25, 0.5]);
+        let u = normalize(&[0.0, 0.0]);
+        assert_eq!(u, vec![0.5, 0.5]);
+    }
+}

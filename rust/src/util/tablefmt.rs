@@ -1,0 +1,175 @@
+//! ASCII table formatting for bench reports (the paper's tables/figures are
+//! regenerated as aligned text tables and CSV blocks).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: set headers, push rows, render aligned text.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignment per column (defaults to right-aligned).
+    pub fn align(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width must match header width"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: build a row from displayable values.
+    pub fn row_display<D: std::fmt::Display>(&mut self, cells: &[D]) -> &mut Self {
+        let strings: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&strings)
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(if i == 0 { "+" } else { "+" });
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        let emit_row = |out: &mut String, cells: &[String], aligns: &[Align]| {
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                out.push_str("| ");
+                match aligns[i] {
+                    Align::Left => {
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(pad));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(pad));
+                        out.push_str(cell);
+                    }
+                }
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        sep(&mut out);
+        emit_row(&mut out, &self.headers, &vec![Align::Left; ncols]);
+        sep(&mut out);
+        for row in &self.rows {
+            emit_row(&mut out, row, &self.aligns);
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// Render as CSV (headers + rows), for machine-readable bench output.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |cell: &str| {
+            if cell.contains(',') || cell.contains('"') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+/// Format a ratio as a percentage string.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(&["dataset", "skew", "err%"]).align(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+        ]);
+        t.row(&["MMLU".into(), "1.39".into(), "1.80".into()]);
+        t.row(&["SST2".into(), "1.99".into(), "16.00".into()]);
+        let s = t.render();
+        assert!(s.contains("| dataset |"));
+        assert!(s.contains("|    16.00 |") || s.contains("| 16.00 |"));
+        // All lines equal width.
+        let widths: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["name", "note"]);
+        t.row(&["x,y".into(), "say \"hi\"".into()]);
+        let csv = t.render_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.235), "23.5%");
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration: the full MoE-GPS pipeline (trace → predictors → calibration
+//! → sweep → selection → guidelines) and its paper-shape assertions.
+
+use moe_gps::gps::calibrate::{calibrate, calibrate_all, CalibrationOptions};
+use moe_gps::gps::select::{recommend, strategy_savings, Recommendation};
+use moe_gps::gps::sweep::{figure6_skews, skew_sweep};
+use moe_gps::gps::{guidelines, report};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::SystemSpec;
+use moe_gps::trace::datasets;
+
+fn fast() -> CalibrationOptions {
+    CalibrationOptions {
+        fast: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_pipeline_produces_consistent_reports() {
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = calibrate_all(&model, &system, true, 7);
+    assert_eq!(cals.len(), 3);
+
+    // Table 1 shape: SST2-like error rate far above MMLU/Alpaca-like.
+    let sst2 = cals.iter().find(|c| c.workload == "sst2-like").unwrap();
+    let mmlu = cals.iter().find(|c| c.workload == "mmlu-like").unwrap();
+    assert!(sst2.skewness > mmlu.skewness);
+    assert!(sst2.dop_error > mmlu.dop_error);
+
+    // Sweeps cover every strategy at every skew and keep normalized
+    // performance consistent with totals.
+    let points = skew_sweep(&model, &system, &cals, &figure6_skews(), 1, 512);
+    for p in &points {
+        assert!(p.total_s > 0.0);
+        let base = points
+            .iter()
+            .find(|q| q.skewness == p.skewness && q.strategy_name == "baseline")
+            .unwrap();
+        assert!((p.normalized_perf - base.total_s / p.total_s).abs() < 1e-9);
+    }
+
+    // Reports render.
+    assert!(report::table1(&cals).contains("sst2-like"));
+    assert!(report::figure6(&points, "t").contains("token-to-expert"));
+}
+
+#[test]
+fn headline_dop_beats_best_tep_on_nvlink_skew14() {
+    // The paper's abstract claim, via the full pipeline (fast calibration).
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = calibrate_all(&model, &system, true, 7);
+    let cmp = strategy_savings(&model, &system, &cals, 1.4, 1, 512);
+    assert_eq!(recommend(&cmp), Recommendation::DistributionOnly);
+    let dop_total = cmp.baseline_s - cmp.dop_saving_s;
+    let tep_total = cmp.baseline_s - cmp.tep_best_saving_s;
+    let advantage = tep_total / dop_total - 1.0;
+    assert!(
+        advantage > 0.10,
+        "DOP advantage should be large on NVLink at skew 1.4, got {advantage}"
+    );
+}
+
+#[test]
+fn guideline_map_matches_paper_figure1_shape() {
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = calibrate_all(&model, &system, true, 7);
+    let skews = [1.4, 4.0];
+    let bws = [600.0, 32.0];
+    let cells = guidelines::decision_map(&model, &cals, &skews, &bws, 1, 512);
+    let rec_at = |bw: f64, sk: f64| {
+        cells
+            .iter()
+            .find(|c| c.bandwidth_gbs == bw && c.skewness == sk)
+            .unwrap()
+            .recommendation
+    };
+    // Fast interconnect + low skew → Distribution-Only (paper Figure 1).
+    assert_eq!(rec_at(600.0, 1.4), Recommendation::DistributionOnly);
+    // Slow interconnect + high skew → Token-to-Expert.
+    assert_eq!(rec_at(32.0, 4.0), Recommendation::TokenToExpert);
+}
+
+#[test]
+fn tep_accuracy_is_cheaper_at_higher_skew() {
+    // Paper §4: "for scenarios with higher skewness, it costs less for the
+    // predictor to acquire higher accuracy" — the probability model alone
+    // gets more accurate as skew rises, shifting the whole accuracy range.
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let lo = calibrate(datasets::mmlu_like(7), &model, &system, &fast());
+    let hi = calibrate(datasets::sst2_like(9), &model, &system, &fast());
+    let min_acc = |c: &moe_gps::gps::WorkloadCalibration| {
+        c.points
+            .iter()
+            .map(|p| p.accuracy)
+            .fold(f64::INFINITY, f64::min)
+    };
+    assert!(
+        min_acc(&hi) > min_acc(&lo),
+        "accuracy floor should rise with skew: {} vs {}",
+        min_acc(&hi),
+        min_acc(&lo)
+    );
+}
+
+#[test]
+fn other_architectures_preserve_the_trends() {
+    // Paper §5 / Appendix C: LLaMA-MoE and Switch keep the same qualitative
+    // behaviour — DOP competitive at NVLink, TEP gaining on PCIe.
+    for model in [ModelConfig::llama_moe(), ModelConfig::switch_transformer()] {
+        let nv = SystemSpec::four_a100_nvlink();
+        let pcie = SystemSpec::four_a100_pcie();
+        let cals_nv = calibrate_all(&model, &nv, true, 21);
+        let cals_pcie = calibrate_all(&model, &pcie, true, 21);
+        let on_nv = strategy_savings(&model, &nv, &cals_nv, 2.0, 1, 512);
+        let on_pcie = strategy_savings(&model, &pcie, &cals_pcie, 2.0, 1, 512);
+        let rel_nv = on_nv.difference_s / on_nv.baseline_s;
+        let rel_pcie = on_pcie.difference_s / on_pcie.baseline_s;
+        assert!(
+            rel_pcie < rel_nv,
+            "{}: TEP must gain ground on PCIe ({rel_pcie} !< {rel_nv})",
+            model.name
+        );
+        // Prediction (some strategy) must help at skew 2 in all cases.
+        assert!(on_nv.dop_saving_s > 0.0 || on_nv.tep_best_saving_s > 0.0);
+    }
+}

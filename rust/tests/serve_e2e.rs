@@ -1,0 +1,303 @@
+//! End-to-end integration: the full three-layer stack.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise). Verifies:
+//! * the PJRT runtime reproduces the python oracle's numbers (the AOT
+//!   round-trip is numerically faithful);
+//! * the serving coordinator produces identical hidden states under all
+//!   three strategies (duplication must never change results);
+//! * Distribution-Only prediction reduces slot imbalance vs the baseline.
+
+use std::path::PathBuf;
+
+use moe_gps::coordinator::{Coordinator, Request, ServeStrategy};
+use moe_gps::runtime::tensor::IntTensor;
+use moe_gps::runtime::{Engine, HostTensor, In};
+use moe_gps::util::json::Value;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn artifacts_ready() -> bool {
+    let ok = artifacts_dir().join("oracle.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn oracle() -> Value {
+    let text = std::fs::read_to_string(artifacts_dir().join("oracle.json")).unwrap();
+    Value::parse(&text).unwrap()
+}
+
+fn prefix_f64(v: &Value, key: &str) -> Vec<f64> {
+    v.get(key)
+        .and_then(Value::as_arr)
+        .unwrap_or_else(|| panic!("oracle missing {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect()
+}
+
+fn assert_close(actual: &[f32], expected: &[f64], tol: f64, what: &str) {
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        assert!(
+            (a as f64 - e).abs() <= tol * (1.0 + e.abs()),
+            "{what}[{i}]: {a} vs {e}"
+        );
+    }
+}
+
+/// The exact embed→attention→router→expert-FFN→predictor chain the python
+/// oracle recorded, replayed through rust PJRT.
+#[test]
+fn runtime_matches_python_oracle() {
+    if !artifacts_ready() {
+        return;
+    }
+    let oracle = oracle();
+    let ids: Vec<i32> = oracle
+        .get("ids")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    let s = ids.len();
+
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let ids_t = IntTensor::new(ids, vec![1, s]);
+    let x0 = engine
+        .call("embed", &[In::I(&ids_t), In::W("embed")])
+        .unwrap()
+        .remove(0);
+    assert_close(
+        &x0.data[..16],
+        &prefix_f64(&oracle, "embed_prefix"),
+        1e-5,
+        "embed",
+    );
+
+    let h = engine
+        .call(
+            "attention",
+            &[
+                In::T(&x0),
+                In::W("layers.0.attn.ln"),
+                In::W("layers.0.attn.wq"),
+                In::W("layers.0.attn.wk"),
+                In::W("layers.0.attn.wv"),
+                In::W("layers.0.attn.wo"),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+    assert_close(
+        &h.data[..16],
+        &prefix_f64(&oracle, "attention_prefix"),
+        1e-4,
+        "attention",
+    );
+
+    let mut router_out = engine
+        .call(
+            "router",
+            &[In::T(&h), In::W("layers.0.moe.ln"), In::W("layers.0.moe.router")],
+        )
+        .unwrap();
+    let logits = router_out.remove(1);
+    let xn = router_out.remove(0);
+    assert_close(
+        &xn.data[..16],
+        &prefix_f64(&oracle, "router_xn_prefix"),
+        1e-4,
+        "router.xn",
+    );
+    assert_close(
+        &logits.data[..16],
+        &prefix_f64(&oracle, "router_logits_prefix"),
+        1e-4,
+        "router.logits",
+    );
+
+    // Expert FFN over the first bucket (the Pallas kernel's artifact).
+    let bucket = engine.manifest().ffn_buckets()[0];
+    let slice = xn.gather_rows(&(0..bucket).collect::<Vec<_>>());
+    let ffn = engine
+        .call(
+            &format!("expert_ffn_b{bucket}"),
+            &[
+                In::T(&slice),
+                In::W("layers.0.experts.0.w_gate"),
+                In::W("layers.0.experts.0.w_up"),
+                In::W("layers.0.experts.0.w_down"),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+    assert_close(
+        &ffn.data[..16],
+        &prefix_f64(&oracle, &format!("expert_ffn_b{bucket}_prefix")),
+        1e-4,
+        "expert_ffn",
+    );
+
+    // Predictor artifact.
+    let n_layers = engine.manifest().config.req_usize("n_layers").unwrap();
+    let mut ins: Vec<In<'_>> = vec![In::T(&x0), In::W("predictor.w1"), In::W("predictor.b1")];
+    let head_names: Vec<String> = (0..n_layers)
+        .map(|l| format!("predictor.head.{l}"))
+        .collect();
+    for name in &head_names {
+        ins.push(In::W(name));
+    }
+    let pred = engine.call("predictor", &ins).unwrap().remove(0);
+    assert_close(
+        &pred.data[..16],
+        &prefix_f64(&oracle, "predictor_prefix"),
+        1e-4,
+        "predictor",
+    );
+}
+
+/// Routing decisions through the rust top-k must match the python oracle.
+#[test]
+fn routing_matches_oracle_layer0() {
+    if !artifacts_ready() {
+        return;
+    }
+    let oracle = oracle();
+    let ids: Vec<i32> = oracle
+        .get("ids")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    let expected: Vec<usize> = oracle
+        .get("routes_layer0_first32")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let s = ids.len();
+    let ids_t = IntTensor::new(ids, vec![1, s]);
+    let x0 = engine
+        .call("embed", &[In::I(&ids_t), In::W("embed")])
+        .unwrap()
+        .remove(0);
+    let h = engine
+        .call(
+            "attention",
+            &[
+                In::T(&x0),
+                In::W("layers.0.attn.ln"),
+                In::W("layers.0.attn.wq"),
+                In::W("layers.0.attn.wk"),
+                In::W("layers.0.attn.wv"),
+                In::W("layers.0.attn.wo"),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+    let logits = engine
+        .call(
+            "router",
+            &[In::T(&h), In::W("layers.0.moe.ln"), In::W("layers.0.moe.router")],
+        )
+        .unwrap()
+        .remove(1);
+    let slots = moe_gps::coordinator::router::route_sequence(0, &logits.data, 8, 32, 2);
+    // slots alternate top1/top2 per token; take top-1 per token.
+    let top1: Vec<usize> = (0..32).map(|t| slots[t * 2].expert as usize).collect();
+    assert_eq!(top1, expected);
+}
+
+/// All strategies must produce the same final hidden states — duplication
+/// and dispatch are performance mechanisms, never numerics changes.
+#[test]
+fn strategies_agree_on_outputs_and_dop_balances() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mk_requests = || {
+        let mut gen = moe_gps::coordinator::request::RequestGen::new(99, 4096);
+        // Two warmup rounds (teach the DOP estimator) + one measured round.
+        (0..3)
+            .map(|_| (0..2).map(|_| gen.request_varlen(48, 200)).collect::<Vec<Request>>())
+            .collect::<Vec<_>>()
+    };
+
+    let run = |strategy: ServeStrategy| -> (Vec<HostTensor>, f64, f64) {
+        let mut coord = Coordinator::new(&artifacts_dir(), 4, strategy).unwrap();
+        let rounds = mk_requests();
+        let mut last_outputs = Vec::new();
+        let mut last_metrics = None;
+        for round in rounds {
+            let (m, out) = coord.serve_round(&round).unwrap();
+            last_outputs = out;
+            last_metrics = Some(m);
+        }
+        let m = last_metrics.unwrap();
+        (last_outputs, m.slot_imbalance(), m.routing_skew)
+    };
+
+    let (base_out, base_imb, skew) = run(ServeStrategy::NoPrediction);
+    let (dop_out, dop_imb, _) = run(ServeStrategy::DistributionOnly);
+    let (tep_out, _tep_imb, _) = run(ServeStrategy::TokenToExpert);
+
+    // Numerics identical across strategies.
+    for (a, b) in base_out.iter().zip(&dop_out) {
+        assert_eq!(a.shape, b.shape);
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4, "dop numerics diverged: {x} vs {y}");
+        }
+    }
+    for (a, b) in base_out.iter().zip(&tep_out) {
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4, "tep numerics diverged: {x} vs {y}");
+        }
+    }
+
+    // The tiny model routes skewed (that's the point)...
+    assert!(skew > 1.2, "routing skew {skew}");
+    // ...and DOP duplication must reduce dispatch imbalance vs baseline.
+    assert!(
+        dop_imb < base_imb,
+        "DOP should balance: baseline {base_imb} vs dop {dop_imb}"
+    );
+}
+
+/// The worker-offloaded (TP-analogue) attention path must be numerically
+/// identical to leader attention.
+#[test]
+fn parallel_attention_matches_leader_attention() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mk_requests = || {
+        let mut gen = moe_gps::coordinator::request::RequestGen::new(5, 4096);
+        (0..3)
+            .map(|_| gen.request_varlen(40, 180))
+            .collect::<Vec<Request>>()
+    };
+    let run = |parallel: bool| -> Vec<HostTensor> {
+        let mut coord =
+            Coordinator::new(&artifacts_dir(), 4, ServeStrategy::NoPrediction).unwrap();
+        coord.parallel_attention = parallel;
+        let (_, out) = coord.serve_round(&mk_requests()).unwrap();
+        out
+    };
+    let leader = run(false);
+    let parallel = run(true);
+    for (a, b) in leader.iter().zip(&parallel) {
+        assert_eq!(a.shape, b.shape);
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+}

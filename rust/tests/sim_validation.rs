@@ -1,0 +1,196 @@
+//! Simulator validation: closed-form checks and paper-shape invariants
+//! over broad parameter grids (DESIGN.md §7 "integration").
+
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::collective::{ep_all_to_all_time, ring_allreduce_time};
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{ErrorModel, LayerSim, SystemSpec};
+use moe_gps::testing;
+use moe_gps::util::rng::Rng;
+
+fn all_models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::mixtral_8x7b(),
+        ModelConfig::mixtral_8x22b(),
+        ModelConfig::llama_moe(),
+        ModelConfig::switch_transformer(),
+        ModelConfig::deepseek_like(),
+    ]
+}
+
+#[test]
+fn baseline_latency_is_monotone_in_skew_for_all_models() {
+    for model in all_models() {
+        for system in [SystemSpec::four_a100_nvlink(), SystemSpec::four_a100_pcie()] {
+            let sim = LayerSim::new(model.clone(), system);
+            let mut prev = 0.0;
+            for &skew in &[1.0, 1.5, 2.0, 3.0, 4.0, 6.0] {
+                let total = sim.baseline_total(skew);
+                assert!(
+                    total > prev,
+                    "{}: baseline must grow with skew ({total} !> {prev})",
+                    model.name
+                );
+                prev = total;
+            }
+        }
+    }
+}
+
+#[test]
+fn dop_never_loses_to_baseline_under_typical_errors() {
+    // With the measured (small) error rates, DOP must never be slower than
+    // no-prediction for skew > 1 — it has zero overhead by construction.
+    for model in all_models() {
+        let sim = LayerSim::new(model.clone(), SystemSpec::four_a100_nvlink());
+        for &skew in &[1.1, 1.4, 2.0, 4.0] {
+            for &err in &[0.0, 0.02, 0.1] {
+                let dop = sim
+                    .breakdown(skew, Strategy::DistributionOnly { error_rate: err })
+                    .total();
+                let base = sim.baseline_total(skew);
+                assert!(
+                    dop <= base + 1e-12,
+                    "{} skew {skew} err {err}: dop {dop} > baseline {base}",
+                    model.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn perfect_tep_with_zero_overhead_dominates_everything() {
+    for model in all_models() {
+        let sim = LayerSim::new(model.clone(), SystemSpec::four_a100_pcie());
+        for &skew in &[1.0, 2.0, 4.0] {
+            let perfect = sim
+                .breakdown(
+                    skew,
+                    Strategy::TokenToExpert {
+                        accuracy: 1.0,
+                        overhead_s: 0.0,
+                    },
+                )
+                .total();
+            let base = sim.baseline_total(skew);
+            let dop = sim
+                .breakdown(skew, Strategy::DistributionOnly { error_rate: 0.0 })
+                .total();
+            assert!(perfect <= base && perfect <= dop, "{}", model.name);
+        }
+    }
+}
+
+#[test]
+fn property_breakdowns_are_finite_positive_and_consistent() {
+    testing::forall_config(
+        testing::Config {
+            cases: 128,
+            ..Default::default()
+        },
+        |rng: &mut Rng| {
+            let models = all_models();
+            let model = models[rng.range(0, models.len())].clone();
+            let bw = 16.0 + rng.f64() * 1000.0;
+            let skew = 1.0 + rng.f64() * (model.n_experts as f64 - 1.0) * 0.9;
+            let batch = 1 << rng.range(0, 5);
+            let seq = 128 << rng.range(0, 4);
+            let acc = rng.f64();
+            let overhead = rng.f64() * 5e-3;
+            (model, bw, skew, batch, seq, acc, overhead)
+        },
+        |(model, bw, skew, batch, seq, acc, overhead)| {
+            let sim = LayerSim::new(
+                model.clone(),
+                SystemSpec::four_a100_custom_bw(*bw),
+            )
+            .with_workload(*batch, *seq);
+            for strategy in [
+                Strategy::NoPrediction,
+                Strategy::DistributionOnly { error_rate: 1.0 - acc },
+                Strategy::TokenToExpert {
+                    accuracy: *acc,
+                    overhead_s: *overhead,
+                },
+            ] {
+                let b = sim.breakdown(*skew, strategy);
+                let total = b.total();
+                if !total.is_finite() || total <= 0.0 {
+                    return Err(format!("bad total {total} for {strategy:?}"));
+                }
+                let sum = b.attention_s
+                    + b.allreduce_s
+                    + b.router_s
+                    + b.ffn_s
+                    + b.scatter_s
+                    + b.gather_s
+                    + b.overhead_s
+                    + b.movement_s;
+                if (sum - total).abs() > 1e-12 {
+                    return Err("breakdown does not sum to total".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn collectives_scale_linearly_in_volume() {
+    let ic = SystemSpec::four_a100_nvlink().interconnect;
+    let base_ar = ring_allreduce_time(&ic, 4, 1e6) - 6.0 * ic.latency_s;
+    let double_ar = ring_allreduce_time(&ic, 4, 2e6) - 6.0 * ic.latency_s;
+    assert!((double_ar / base_ar - 2.0).abs() < 1e-9);
+    let base_a2a = ep_all_to_all_time(&ic, 4, 1000.0, 8192.0, 1.5) - 3.0 * ic.latency_s;
+    let double_a2a =
+        ep_all_to_all_time(&ic, 4, 2000.0, 8192.0, 1.5) - 3.0 * ic.latency_s;
+    assert!((double_a2a / base_a2a - 2.0).abs() < 1e-9);
+}
+
+#[test]
+fn error_model_orderings_hold_across_grid() {
+    let model = ModelConfig::mixtral_8x7b();
+    for &skew in &[1.2, 2.0, 3.5] {
+        for &eps in &[0.01, 0.1, 0.4] {
+            let total_for = |em: ErrorModel| {
+                let mut sim =
+                    LayerSim::new(model.clone(), SystemSpec::four_a100_nvlink());
+                sim.error_model = em;
+                sim.breakdown(skew, Strategy::DistributionOnly { error_rate: eps })
+                    .total()
+            };
+            let o = total_for(ErrorModel::Optimistic);
+            let t = total_for(ErrorModel::Typical);
+            let p = total_for(ErrorModel::Pessimistic);
+            assert!(o <= t && t <= p, "skew {skew} eps {eps}: {o} {t} {p}");
+        }
+    }
+}
+
+#[test]
+fn switch_transformer_layer_is_much_cheaper_than_mixtral() {
+    // Absolute-scale sanity: switch-base (d=768, ReLU, top-1) is a far
+    // smaller layer than Mixtral 8x7B.
+    let nv = SystemSpec::four_a100_nvlink();
+    let mixtral = LayerSim::new(ModelConfig::mixtral_8x7b(), nv.clone());
+    let switch = LayerSim::new(ModelConfig::switch_transformer(), nv);
+    assert!(switch.baseline_total(1.4) < mixtral.baseline_total(1.4) * 0.3);
+}
+
+#[test]
+fn mixtral_8x22b_scales_up_but_preserves_dop_win() {
+    // Paper §5: scaling model size changes absolute latency, not the
+    // qualitative trend.
+    let nv = SystemSpec::four_a100_nvlink();
+    let small = LayerSim::new(ModelConfig::mixtral_8x7b(), nv.clone());
+    let large = LayerSim::new(ModelConfig::mixtral_8x22b(), nv);
+    assert!(large.baseline_total(1.4) > small.baseline_total(1.4));
+    for sim in [small, large] {
+        let perf = sim.normalized_performance(
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.018 },
+        );
+        assert!(perf > 1.0);
+    }
+}
