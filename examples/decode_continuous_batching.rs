@@ -1,0 +1,57 @@
+//! Decode-phase continuous batching — the serving scenario production MoE
+//! traffic actually lives in (DESIGN.md §4).
+//!
+//! Spins up the coordinator (AOT artifacts if built, else the synthetic
+//! tiny model), queues a stream of requests, and serves them with
+//! iteration-level admission/eviction under each prediction strategy:
+//! one generated token per active sequence per step, per-step
+//! Distribution-Only estimator updates, and Algorithm-1 replanning every
+//! `--replan` steps (see docs/adr/001-decode-prediction-cadence.md).
+//!
+//! Run: `cargo run --release --example decode_continuous_batching`
+//! Options: --workers 4 --seqs 8 --max-active 8 --prompt 32 --max-new 32
+//!          --replan 4 --arrival-every 0 --seed 11 --artifacts <dir>
+
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, DecodeOptions, ServeStrategy};
+use moe_gps::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let artifacts = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let workers = args.opt_usize("workers", 4)?;
+    let seqs = args.opt_usize("seqs", 8)?;
+    let max_active = args.opt_usize("max-active", 8)?;
+    let max_new = args.opt_usize("max-new", 32)?;
+    let replan = args.opt_usize("replan", 4)?;
+    let seed = args.opt_u64("seed", 11)?;
+
+    println!(
+        "continuous-batching decode: {seqs} requests, max {max_active} active, \
+         {max_new} new tokens each, replan every {replan} steps\n"
+    );
+
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
+        coord.placement.replan_interval = replan;
+        let prompt = args.opt_usize("prompt", (coord.seq_len() / 8).max(4))?;
+        let mut gen = RequestGen::new(seed, coord.vocab());
+        let requests: Vec<_> = (0..seqs)
+            .map(|_| gen.decode_request(prompt, max_new))
+            .collect();
+        let opts = DecodeOptions {
+            max_active,
+            max_steps: args.opt_usize("steps", 512)?,
+            temperature: args.opt_f64("temperature", 1.0)?,
+            seed,
+            arrival_interval: args.opt_usize("arrival-every", 0)?,
+        };
+        let report = coord.serve_decode(requests, &opts)?;
+        println!("{}", report.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Bench: **decode-phase continuous batching** — steady-state tokens/sec
+//! for none / Distribution-Only / Token-to-Expert on the real coordinator
+//! (DESIGN.md §8; the decode acceptance target: DOP ≥ baseline).
+//!
+//! Runs against on-disk artifacts when present, otherwise the synthetic
+//! tiny model (reference backend) — so this bench works in every build
+//! environment. Also micro-benchmarks the scheduler hot paths and the
+//! decode-regime analytical model.
+
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, DecodeOptions, Scheduler, ServeStrategy};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{DecodeSim, SystemSpec};
+
+fn main() {
+    group("scheduler micro hot paths");
+    let b = Bencher::default();
+    b.run("admit_evict_64_requests", || {
+        let mut sched = Scheduler::new(8);
+        let mut gen = RequestGen::new(3, 4096);
+        for _ in 0..64 {
+            sched.push(gen.decode_request(16, 1));
+        }
+        let mut steps = 0usize;
+        while !sched.is_idle() {
+            for req in sched.admit(steps) {
+                black_box(req.id);
+            }
+            let ids: Vec<u64> = sched.active().iter().map(|s| s.id).collect();
+            for id in ids {
+                sched.record_token(id);
+            }
+            sched.evict_finished();
+            steps += 1;
+        }
+        steps
+    });
+
+    group("decode-regime analytical model (Mixtral 8x7B, 4xA100)");
+    let sim = DecodeSim::new(
+        ModelConfig::mixtral_8x7b(),
+        SystemSpec::four_a100_nvlink(),
+    );
+    b.run("decode_step_breakdown", || {
+        sim.step_breakdown(
+            black_box(1.4),
+            Strategy::DistributionOnly { error_rate: 0.018 },
+        )
+        .total()
+    });
+    for (name, strategy) in [
+        ("none", Strategy::NoPrediction),
+        ("dop", Strategy::DistributionOnly { error_rate: 0.018 }),
+        (
+            "tep",
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: 50e-6,
+            },
+        ),
+    ] {
+        println!(
+            "    model: {name:<5} step={}  throughput={:>9.1} tok/s",
+            moe_gps::util::human_time(sim.step_total(1.4, strategy)),
+            sim.tokens_per_s(1.4, strategy),
+        );
+    }
+
+    group("E2E continuous-batching decode (4 virtual GPUs, 8 seqs)");
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let mut results: Vec<(&str, f64)> = Vec::new();
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        let mut coord = Coordinator::new(&artifacts, 4, strategy).unwrap();
+        coord.placement.replan_interval = 4;
+        let mut gen = RequestGen::new(11, coord.vocab());
+        // Warmup run: compile ops, upload weights, teach the estimators.
+        let warm: Vec<_> = (0..4).map(|_| gen.decode_request(16, 8)).collect();
+        coord.serve_decode(warm, &DecodeOptions::default()).unwrap();
+        // Measured run: 8 sequences, all admitted up front → after the
+        // prefill step every step is pure decode (steady state).
+        let requests: Vec<_> = (0..8).map(|_| gen.decode_request(16, 24)).collect();
+        let opts = DecodeOptions {
+            max_active: 8,
+            max_steps: 64,
+            temperature: 1.0,
+            seed: 17,
+            arrival_interval: 0,
+        };
+        let report = coord.serve_decode(requests, &opts).unwrap();
+        println!("  {}", report.summary());
+        results.push((strategy.name(), report.steady_state_tokens_per_s()));
+    }
+    let baseline = results
+        .iter()
+        .find(|(n, _)| *n == "none")
+        .map(|&(_, t)| t)
+        .unwrap_or(0.0);
+    let dop = results
+        .iter()
+        .find(|(n, _)| *n == "distribution-only")
+        .map(|&(_, t)| t)
+        .unwrap_or(0.0);
+    if baseline > 0.0 {
+        let ratio = dop / baseline;
+        println!(
+            "\n  steady-state DOP vs baseline: {ratio:.3}x  [{}]",
+            if ratio >= 1.0 { "PASS: DOP >= baseline" } else { "WARN: below baseline this run" }
+        );
+    }
+}

@@ -128,6 +128,146 @@ impl ServeReport {
     }
 }
 
+/// Metrics for one continuous-batching decode step (prefill rows of newly
+/// admitted sequences + one decode row per active sequence).
+#[derive(Clone, Debug, Default)]
+pub struct DecodeStepMetrics {
+    pub step: usize,
+    pub n_seqs: usize,
+    /// Prompt tokens processed this step (admitted sequences' prefill).
+    pub n_prefill_tokens: usize,
+    /// Decode rows this step (= sequences past prefill).
+    pub n_decode_tokens: usize,
+    pub n_slots: usize,
+    pub embed_s: f64,
+    pub predictor_s: f64,
+    pub attention_s: f64,
+    pub router_s: f64,
+    pub ffn_wall_s: f64,
+    pub lm_head_s: f64,
+    pub total_s: f64,
+    pub worker_busy_s: Vec<f64>,
+    pub worker_slots: Vec<usize>,
+    pub upload_bytes: u64,
+    pub replicas_added: usize,
+    pub routing_skew: f64,
+    /// Whether the duplication plan was rebuilt this step (replan cadence).
+    pub replanned: bool,
+}
+
+impl DecodeStepMetrics {
+    pub fn busy_imbalance(&self) -> f64 {
+        let mean = stats::mean(&self.worker_busy_s);
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        self.worker_busy_s.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    pub fn slot_imbalance(&self) -> f64 {
+        stats::skewness_of_counts(&self.worker_slots)
+    }
+
+    /// A step is steady-state when it carries no prefill work.
+    pub fn is_steady_state(&self) -> bool {
+        self.n_prefill_tokens == 0 && self.n_decode_tokens > 0
+    }
+}
+
+/// Aggregate over a continuous-batching decode run.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeReport {
+    pub strategy: String,
+    pub steps: Vec<DecodeStepMetrics>,
+}
+
+impl DecodeReport {
+    pub fn total_decode_tokens(&self) -> usize {
+        self.steps.iter().map(|s| s.n_decode_tokens).sum()
+    }
+
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.steps.iter().map(|s| s.n_prefill_tokens).sum()
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.total_s).sum()
+    }
+
+    /// Decoded tokens per second over the whole run (prefill included in
+    /// the denominator — the serving-level number).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        let t = self.total_s();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.total_decode_tokens() as f64 / t
+        }
+    }
+
+    /// Steady-state throughput: decode tokens per second over the steps
+    /// that carried no prefill work (the number `benches/decode_serve.rs`
+    /// reports — what the system sustains once admission settles).
+    pub fn steady_state_tokens_per_s(&self) -> f64 {
+        let (mut tokens, mut time) = (0usize, 0.0f64);
+        for s in self.steps.iter().filter(|s| s.is_steady_state()) {
+            tokens += s.n_decode_tokens;
+            time += s.total_s;
+        }
+        if time <= 0.0 {
+            0.0
+        } else {
+            tokens as f64 / time
+        }
+    }
+
+    pub fn steady_state_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.is_steady_state()).count()
+    }
+
+    pub fn mean_step_latency_s(&self) -> f64 {
+        let xs: Vec<f64> = self.steps.iter().map(|s| s.total_s).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn p95_step_latency_s(&self) -> f64 {
+        let xs: Vec<f64> = self.steps.iter().map(|s| s.total_s).collect();
+        stats::percentile(&xs, 95.0)
+    }
+
+    pub fn mean_slot_imbalance(&self) -> f64 {
+        let xs: Vec<f64> = self.steps.iter().map(|s| s.slot_imbalance()).collect();
+        stats::mean(&xs)
+    }
+
+    pub fn total_upload_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.upload_bytes).sum()
+    }
+
+    pub fn replan_count(&self) -> usize {
+        self.steps.iter().filter(|s| s.replanned).count()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "strategy={:<18} steps={:<4} decoded={:<6} throughput={:>8.1} tok/s  \
+             steady={:>8.1} tok/s ({} steps)  mean step={}  p95={}  \
+             slot imbalance={:.3}  replans={}  dup transfer={}",
+            self.strategy,
+            self.steps.len(),
+            self.total_decode_tokens(),
+            self.decode_tokens_per_s(),
+            self.steady_state_tokens_per_s(),
+            self.steady_state_steps(),
+            crate::util::human_time(self.mean_step_latency_s()),
+            crate::util::human_time(self.p95_step_latency_s()),
+            self.mean_slot_imbalance(),
+            self.replan_count(),
+            crate::util::human_bytes(self.total_upload_bytes() as f64),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +305,34 @@ mod tests {
         assert!((rep.throughput() - 2500.0).abs() < 1e-9);
         assert!((rep.mean_busy_imbalance() - 1.0).abs() < 1e-9);
         assert!(rep.summary().contains("tok/s"));
+    }
+
+    #[test]
+    fn decode_report_steady_state_excludes_prefill_steps() {
+        let mut rep = DecodeReport {
+            strategy: "test".into(),
+            steps: Vec::new(),
+        };
+        // Step 0: mixed prefill + decode; steps 1-2: pure decode.
+        rep.steps.push(DecodeStepMetrics {
+            step: 0,
+            n_prefill_tokens: 32,
+            n_decode_tokens: 4,
+            total_s: 1.0,
+            ..Default::default()
+        });
+        for step in 1..3 {
+            rep.steps.push(DecodeStepMetrics {
+                step,
+                n_decode_tokens: 4,
+                total_s: 0.1,
+                ..Default::default()
+            });
+        }
+        assert_eq!(rep.total_decode_tokens(), 12);
+        assert_eq!(rep.steady_state_steps(), 2);
+        assert!((rep.steady_state_tokens_per_s() - 40.0).abs() < 1e-9);
+        assert!((rep.decode_tokens_per_s() - 10.0).abs() < 1e-9);
+        assert!(rep.summary().contains("steady"));
     }
 }

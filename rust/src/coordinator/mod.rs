@@ -1,22 +1,36 @@
 //! The serving coordinator (Layer 3): a leader thread driving embed /
-//! attention / routing through PJRT, plus N "virtual GPU" worker threads
-//! each owning their own PJRT engine and executing expert-FFN artifacts
-//! under Expert Parallelism. The paper's machinery — prediction, dynamic
-//! expert duplication (Algorithm 1), quota dispatch — runs on the batch
-//! hot path in [`placement_mgr`] and [`server`].
+//! attention / routing through the runtime engine, plus N "virtual GPU"
+//! worker threads each owning their own engine and executing expert-FFN
+//! artifacts under Expert Parallelism. The paper's machinery — prediction,
+//! dynamic expert duplication (Algorithm 1), quota dispatch — runs on the
+//! batch hot path in [`placement_mgr`] and [`server`].
 //!
-//! Python never appears here: every tensor op goes through AOT-compiled
-//! HLO (see `runtime`).
+//! Two serving modes (DESIGN.md §4):
+//!
+//! * **prefill rounds** — [`Batcher`] closes rounds of whole sequences;
+//!   one `serve_round` call runs everything once (the paper's Figure-3
+//!   setting);
+//! * **continuous-batching decode** — [`scheduler::Scheduler`] admits and
+//!   evicts requests per step; `serve_decode` generates one token per
+//!   active sequence per step over per-sequence KV caches, with per-step
+//!   Distribution-Only estimator updates and cadenced replanning
+//!   (`docs/adr/001-decode-prediction-cadence.md`).
+//!
+//! Python never appears here: every tensor op goes through the runtime
+//! engine (AOT-compiled HLO under `--features pjrt`, the pure-rust
+//! reference backend otherwise — see `runtime`).
 
 pub mod batcher;
 pub mod metrics;
 pub mod placement_mgr;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod worker;
 
 pub use batcher::Batcher;
-pub use metrics::{RoundMetrics, ServeReport};
+pub use metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 pub use request::Request;
-pub use server::{Coordinator, ServeStrategy};
+pub use scheduler::Scheduler;
+pub use server::{Coordinator, DecodeOptions, ServeStrategy};

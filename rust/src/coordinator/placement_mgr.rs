@@ -41,6 +41,14 @@ pub struct PlacementManager {
     /// Online estimators, one per layer (Distribution-Only state).
     pub estimators: Vec<DistributionEstimator>,
     static_placement: Placement,
+    /// Decode-phase replan cadence: rebuild the Algorithm-1 plans every
+    /// `replan_interval` steps and reuse them in between, amortising the
+    /// planning cost and the duplication transfers it triggers (expert
+    /// load is near-stationary across decode iterations — see
+    /// `docs/adr/001-decode-prediction-cadence.md`). 1 = replan per step.
+    pub replan_interval: usize,
+    /// Cached decode plans: (step they were built at, per-layer plans).
+    cached_decode_plans: Option<(usize, Vec<LayerPlan>)>,
 }
 
 impl PlacementManager {
@@ -60,6 +68,8 @@ impl PlacementManager {
                 .map(|_| DistributionEstimator::new(n_experts))
                 .collect(),
             static_placement: Placement::initial(n_experts, n_workers, capacity, max_copies),
+            replan_interval: 1,
+            cached_decode_plans: None,
         }
     }
 
@@ -114,6 +124,37 @@ impl PlacementManager {
     /// keeps improving while serving — §3.2.1).
     pub fn observe(&mut self, layer: usize, actual_counts: &[usize]) {
         self.estimators[layer].update(actual_counts);
+    }
+
+    /// Whether the decode cadence rebuilds plans at `step`.
+    pub fn replans_at(&self, step: usize) -> bool {
+        match &self.cached_decode_plans {
+            None => true,
+            Some((built_at, _)) => step >= built_at + self.replan_interval.max(1),
+        }
+    }
+
+    /// Distribution-Only plans for one decode step, under the replan
+    /// cadence: every `replan_interval` steps the per-layer plans are
+    /// rebuilt from the current estimators; in between the cached plans are
+    /// reused (their quotas scale by least-loaded overflow in dispatch, so
+    /// a slightly stale `total_slots` only softens the quota split).
+    pub fn decode_plans(&mut self, step: usize, total_slots: usize) -> Vec<LayerPlan> {
+        if !self.replans_at(step) {
+            if let Some((_, plans)) = &self.cached_decode_plans {
+                return plans.clone();
+            }
+        }
+        let plans: Vec<LayerPlan> = (0..self.estimators.len())
+            .map(|l| self.plan_distribution_only(l, total_slots))
+            .collect();
+        self.cached_decode_plans = Some((step, plans.clone()));
+        plans
+    }
+
+    /// Drop cached decode plans (start of a new serving run).
+    pub fn reset_decode_plans(&mut self) {
+        self.cached_decode_plans = None;
     }
 }
 
@@ -173,5 +214,53 @@ mod tests {
         let plan = m.plan_distribution_only(0, 512);
         assert_eq!(plan.predicted_counts.iter().sum::<usize>(), 512);
         assert!(plan.added.is_empty(), "uniform estimate needs no replicas");
+    }
+
+    #[test]
+    fn decode_cadence_reuses_plans_between_replans() {
+        let mut m = mgr();
+        m.replan_interval = 4;
+        for layer in 0..4 {
+            m.observe(layer, &[200, 10, 10, 10, 10, 10, 10, 10]);
+        }
+        assert!(m.replans_at(0));
+        let p0 = m.decode_plans(0, 64);
+        assert_eq!(p0.len(), 4);
+        // Drift the estimators hard between steps; cached plans must not
+        // move until the next replan boundary.
+        for layer in 0..4 {
+            for _ in 0..50 {
+                m.observe(layer, &[10, 10, 10, 10, 10, 10, 10, 400]);
+            }
+        }
+        for step in 1..4 {
+            assert!(!m.replans_at(step));
+            let p = m.decode_plans(step, 64);
+            assert_eq!(p[0].predicted_counts, p0[0].predicted_counts);
+        }
+        assert!(m.replans_at(4));
+        let p4 = m.decode_plans(4, 64);
+        assert_ne!(
+            p4[0].predicted_counts, p0[0].predicted_counts,
+            "replan must pick up the drifted estimate"
+        );
+        let hot = p4[0]
+            .predicted_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .unwrap()
+            .0;
+        assert_eq!(hot, 7);
+    }
+
+    #[test]
+    fn reset_forces_replan() {
+        let mut m = mgr();
+        m.replan_interval = 100;
+        m.decode_plans(0, 64);
+        assert!(!m.replans_at(1));
+        m.reset_decode_plans();
+        assert!(m.replans_at(1));
     }
 }

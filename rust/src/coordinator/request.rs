@@ -4,12 +4,17 @@ use std::time::Instant;
 
 use crate::util::rng::Rng;
 
-/// One prefill request: a token sequence to run through the model.
+/// One serving request: a prompt token sequence, plus (for the decode
+/// phase) a generation budget. `max_new_tokens == 0` means prefill-only —
+/// under continuous batching such a request finishes right after its first
+/// sampled token.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub arrival: Instant,
+    /// Tokens to generate after the prompt (decode-phase budget).
+    pub max_new_tokens: usize,
 }
 
 impl Request {
@@ -18,7 +23,14 @@ impl Request {
             id,
             tokens,
             arrival: Instant::now(),
+            max_new_tokens: 0,
         }
+    }
+
+    /// Builder-style decode budget.
+    pub fn with_max_new_tokens(mut self, n: usize) -> Request {
+        self.max_new_tokens = n;
+        self
     }
 }
 
@@ -68,6 +80,12 @@ impl RequestGen {
     pub fn request_varlen(&mut self, lo: usize, hi: usize) -> Request {
         let len = self.rng.range(lo, hi + 1);
         self.request(len)
+    }
+
+    /// Generate a decode-phase request: `prompt_len` prompt tokens plus a
+    /// generation budget.
+    pub fn decode_request(&mut self, prompt_len: usize, max_new_tokens: usize) -> Request {
+        self.request(prompt_len).with_max_new_tokens(max_new_tokens)
     }
 }
 

@@ -1,0 +1,243 @@
+//! Continuous-batching scheduler: per-step request admission and eviction
+//! (the vLLM-style iteration-level lifecycle on top of [`Request`]).
+//!
+//! Each serving *step* decodes one token for every active sequence; newly
+//! admitted sequences contribute their whole prompt to the same step (their
+//! prefill), so steps naturally mix prefill and decode work. The scheduler
+//! owns only the lifecycle bookkeeping — FIFO admission up to `max_active`,
+//! generation budgets, and eviction of finished sequences — while the
+//! coordinator owns the tensors (hidden states, KV caches). See
+//! `docs/adr/001-decode-prediction-cadence.md` for why the prediction
+//! machinery runs per step rather than per request.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// Lifecycle phase of an active sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Admitted this step; its prompt runs through the model this step.
+    Prefill,
+    /// Generating one token per step.
+    Decode,
+    /// Budget spent; will be evicted at the end of the step.
+    Finished,
+}
+
+/// Scheduler-side state of one active sequence.
+#[derive(Clone, Debug)]
+pub struct ActiveSeq {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub generated: usize,
+    pub phase: SeqPhase,
+    /// Step index at which the sequence was admitted.
+    pub admitted_step: usize,
+}
+
+pub struct Scheduler {
+    waiting: VecDeque<Request>,
+    active: Vec<ActiveSeq>,
+    pub max_active: usize,
+    admitted_order: Vec<u64>,
+    finished_order: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(max_active: usize) -> Scheduler {
+        assert!(max_active >= 1, "max_active must be at least 1");
+        Scheduler {
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            max_active,
+            admitted_order: Vec::new(),
+            finished_order: Vec::new(),
+        }
+    }
+
+    /// Enqueue an arriving request.
+    pub fn push(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// No work left: nothing waiting, nothing active.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.active.is_empty()
+    }
+
+    /// FIFO admission up to the free capacity. Returns the admitted
+    /// requests — the caller runs their prefill as part of this step.
+    /// Invariant: `active_len() <= max_active` always holds afterwards.
+    pub fn admit(&mut self, step: usize) -> Vec<Request> {
+        let mut admitted = Vec::new();
+        while self.active.len() < self.max_active {
+            let Some(req) = self.waiting.pop_front() else {
+                break;
+            };
+            self.active.push(ActiveSeq {
+                id: req.id,
+                prompt_len: req.tokens.len(),
+                max_new_tokens: req.max_new_tokens,
+                generated: 0,
+                phase: SeqPhase::Prefill,
+                admitted_step: step,
+            });
+            self.admitted_order.push(req.id);
+            admitted.push(req);
+        }
+        admitted
+    }
+
+    /// Active sequences in admission order (the step's workload order).
+    pub fn active(&self) -> &[ActiveSeq] {
+        &self.active
+    }
+
+    /// Record one generated token for a sequence; transitions Prefill →
+    /// Decode, and → Finished once the budget is spent. Returns true when
+    /// the sequence just finished.
+    pub fn record_token(&mut self, id: u64) -> bool {
+        let seq = self
+            .active
+            .iter_mut()
+            .find(|s| s.id == id)
+            .unwrap_or_else(|| panic!("record_token on unknown sequence {id}"));
+        seq.generated += 1;
+        if seq.generated >= seq.max_new_tokens.max(1) {
+            seq.phase = SeqPhase::Finished;
+            true
+        } else {
+            seq.phase = SeqPhase::Decode;
+            false
+        }
+    }
+
+    /// Evict finished sequences, freeing capacity for the next step's
+    /// admission. Returns their ids (in admission order).
+    pub fn evict_finished(&mut self) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        self.active.retain(|s| {
+            if s.phase == SeqPhase::Finished {
+                evicted.push(s.id);
+                false
+            } else {
+                true
+            }
+        });
+        self.finished_order.extend(evicted.iter().copied());
+        evicted
+    }
+
+    pub fn admitted_order(&self) -> &[u64] {
+        &self.admitted_order
+    }
+
+    pub fn finished_order(&self) -> &[u64] {
+        &self.finished_order
+    }
+
+    /// Upper bound on the token-slots one step can route: every decoding
+    /// sequence contributes one row, every prefilling sequence its prompt,
+    /// each row occupying `top_k` expert slots. The FFN dispatcher pads
+    /// each (worker, expert) group to a compiled bucket, so this bound is
+    /// what the bucket-padding invariant tests check against. Exact
+    /// because the coordinator caps prompts at the compiled prefill bucket
+    /// *before* scheduling, so `prompt_len` is what the step will route.
+    pub fn step_slot_bound(&self, top_k: usize) -> usize {
+        self.active
+            .iter()
+            .map(|s| match s.phase {
+                SeqPhase::Prefill => s.prompt_len,
+                _ => 1,
+            })
+            .sum::<usize>()
+            * top_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, max_new: usize) -> Request {
+        Request::new(id, vec![1; prompt]).with_max_new_tokens(max_new)
+    }
+
+    #[test]
+    fn admits_fifo_up_to_capacity() {
+        let mut s = Scheduler::new(2);
+        for i in 0..4 {
+            s.push(req(i, 4, 2));
+        }
+        let admitted = s.admit(0);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.active_len(), 2);
+        assert_eq!(s.waiting_len(), 2);
+        // Full: admitting again is a no-op.
+        assert!(s.admit(1).is_empty());
+    }
+
+    #[test]
+    fn eviction_frees_capacity_in_order() {
+        let mut s = Scheduler::new(2);
+        for i in 0..3 {
+            s.push(req(i, 4, 1));
+        }
+        s.admit(0);
+        // One token each: budget of 1 → both finish.
+        assert!(s.record_token(0));
+        assert!(s.record_token(1));
+        assert_eq!(s.evict_finished(), vec![0, 1]);
+        assert_eq!(s.active_len(), 0);
+        let admitted = s.admit(1);
+        assert_eq!(admitted[0].id, 2);
+        assert_eq!(s.admitted_order(), &[0, 1, 2]);
+        assert_eq!(s.finished_order(), &[0, 1]);
+    }
+
+    #[test]
+    fn phases_progress_prefill_decode_finished() {
+        let mut s = Scheduler::new(1);
+        s.push(req(7, 3, 2));
+        s.admit(0);
+        assert_eq!(s.active()[0].phase, SeqPhase::Prefill);
+        assert!(!s.record_token(7));
+        assert_eq!(s.active()[0].phase, SeqPhase::Decode);
+        assert!(s.record_token(7));
+        assert_eq!(s.active()[0].phase, SeqPhase::Finished);
+        assert_eq!(s.evict_finished(), vec![7]);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn zero_budget_finishes_after_first_token() {
+        let mut s = Scheduler::new(1);
+        s.push(req(1, 4, 0));
+        s.admit(0);
+        assert!(s.record_token(1), "prefill-only request finishes immediately");
+    }
+
+    #[test]
+    fn slot_bound_counts_prefill_and_decode_rows() {
+        let mut s = Scheduler::new(4);
+        s.push(req(0, 10, 4));
+        s.push(req(1, 6, 4));
+        s.admit(0);
+        // Both in prefill: (10 + 6) * top_k.
+        assert_eq!(s.step_slot_bound(2), 32);
+        s.record_token(0);
+        s.record_token(1);
+        // Both decoding: 2 rows * top_k.
+        assert_eq!(s.step_slot_bound(2), 4);
+    }
+}

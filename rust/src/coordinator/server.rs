@@ -1,7 +1,8 @@
-//! The serving leader: drives a full prefill round through the AOT model
-//! under Expert Parallelism with predictor-driven dynamic duplication.
+//! The serving leader: drives prefill rounds and continuous-batching
+//! decode steps through the AOT model under Expert Parallelism with
+//! predictor-driven dynamic duplication.
 //!
-//! Round pipeline (per paper Figure 3):
+//! Prefill round pipeline (per paper Figure 3):
 //!
 //! 1. embed every sequence (leader engine);
 //! 2. *Token-to-Expert*: run the AOT predictor on the embeddings — before
@@ -11,25 +12,36 @@
 //! 4. dispatch routed token-slots to virtual-GPU workers per the plan
 //!    (quota dispatch for TEP, least-loaded over replicas for DOP, home
 //!    GPU for the baseline);
-//! 5. workers execute the Pallas expert-FFN artifact; leader gates and
-//!    combines outputs into the residual stream;
+//! 5. workers execute the expert-FFN artifact; leader gates and combines
+//!    outputs into the residual stream;
 //! 6. estimators observe the actual routing (the §3.2.1 moving average).
+//!
+//! Decode step pipeline ([`Coordinator::serve_decode`], DESIGN.md §4):
+//! every step carries one token per decoding sequence plus the full prompt
+//! of each newly admitted sequence (continuous batching — admission and
+//! eviction are iteration-level, per [`super::scheduler`]). Attention runs
+//! incrementally over per-sequence KV caches; routing, dispatch and expert
+//! FFN reuse the same machinery as prefill; the DOP estimators update
+//! every step while Algorithm-1 replanning follows the
+//! `PlacementManager::replan_interval` cadence (ADR 001).
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::metrics::{RoundMetrics, ServeReport};
+use super::metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 use super::placement_mgr::{LayerPlan, PlacementManager};
 use super::request::Request;
 use super::router::{expert_counts, route_sequence, Slot};
+use super::scheduler::{Scheduler, SeqPhase};
 use super::worker::{pad_to_bucket, WorkerHandle, WorkerMsg, WorkerResult};
 use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
-use crate::runtime::{Engine, HostTensor, In};
 use crate::runtime::tensor::IntTensor;
+use crate::runtime::{Engine, EngineSource, HostTensor, In};
+use crate::util::rng::Rng;
 use crate::util::stats;
 
 /// Which prediction strategy drives placement (paper §3.2).
@@ -70,6 +82,58 @@ struct Dims {
     vocab: usize,
 }
 
+/// Knobs for a continuous-batching decode run.
+#[derive(Clone, Debug)]
+pub struct DecodeOptions {
+    /// Maximum concurrently active sequences (the continuous batch size).
+    pub max_active: usize,
+    /// Hard step budget for the run.
+    pub max_steps: usize,
+    /// Sampling temperature; `<= 0` = greedy argmax.
+    pub temperature: f64,
+    /// Sampling seed (the run is deterministic given it).
+    pub seed: u64,
+    /// 0 = all requests arrive up front (pure decode after warmup);
+    /// N > 0 = one queued request arrives every N steps (`--phase mixed`).
+    pub arrival_interval: usize,
+}
+
+impl Default for DecodeOptions {
+    fn default() -> Self {
+        DecodeOptions {
+            max_active: 8,
+            max_steps: 512,
+            temperature: 1.0,
+            seed: 17,
+            arrival_interval: 0,
+        }
+    }
+}
+
+/// Per-sequence tensors the decode path keeps across steps.
+struct SeqSession {
+    /// Prompt plus generated tokens.
+    tokens: Vec<u32>,
+    /// Per-layer (K, V) caches, `[t, n_kv_heads * head_dim]`.
+    kv: Vec<Option<(HostTensor, HostTensor)>>,
+}
+
+/// One sequence's share of a decode step.
+struct StepSeq {
+    id: u64,
+    rows: usize,
+    prefill: bool,
+}
+
+/// What one FFN dispatch phase produced (shared by prefill rounds and
+/// decode steps).
+struct FfnPhaseOutcome {
+    wall_s: f64,
+    worker_busy_s: Vec<f64>,
+    worker_slots: Vec<usize>,
+    upload_bytes: u64,
+}
+
 pub struct Coordinator {
     leader: Engine,
     workers: Vec<WorkerHandle>,
@@ -83,18 +147,43 @@ pub struct Coordinator {
     /// CPU client already saturates all cores per execution, so parallel
     /// clients contend; on real multi-device hardware this is the right
     /// topology. Default off (leader attention); kept selectable + tested.
+    /// Applies to prefill rounds; decode attention always runs on the
+    /// leader (single-row matvecs — a worker round-trip costs more than
+    /// the op).
     pub parallel_attention: bool,
 }
 
 impl Coordinator {
     /// Build a coordinator with `n_workers` virtual GPUs over the
-    /// artifacts directory.
+    /// artifacts directory, falling back to the synthetic tiny model when
+    /// no artifacts exist (so serving works in every build environment).
     pub fn new(
         artifacts_dir: &Path,
         n_workers: usize,
         strategy: ServeStrategy,
     ) -> Result<Coordinator> {
-        let mut leader = Engine::new(artifacts_dir).context("leader engine")?;
+        let source = EngineSource::detect(artifacts_dir);
+        if source.is_synthetic() {
+            crate::util::logging::log(
+                crate::util::logging::Level::Info,
+                "coordinator::server",
+                format_args!(
+                    "no artifacts at {}; serving the synthetic tiny model \
+                     (reference backend)",
+                    artifacts_dir.display()
+                ),
+            );
+        }
+        Coordinator::with_source(&source, n_workers, strategy)
+    }
+
+    /// Build a coordinator over an explicit engine source.
+    pub fn with_source(
+        source: &EngineSource,
+        n_workers: usize,
+        strategy: ServeStrategy,
+    ) -> Result<Coordinator> {
+        let mut leader = Engine::from_source(source).context("leader engine")?;
         let cfg = leader.manifest().config.clone();
         let dims = Dims {
             d_model: cfg.req_usize("d_model")?,
@@ -113,7 +202,7 @@ impl Coordinator {
         }
 
         let workers: Vec<WorkerHandle> = (0..n_workers)
-            .map(|i| WorkerHandle::spawn(i, PathBuf::from(artifacts_dir)))
+            .map(|i| WorkerHandle::spawn(i, source.clone()))
             .collect::<Result<_>>()?;
 
         // Capacity: up to all experts can fit (CPU memory is not the
@@ -157,7 +246,6 @@ impl Coordinator {
         let round_start = Instant::now();
         self.round_tag += 1;
         let s_max = self.dims.seq_len;
-        let d = self.dims.d_model;
         let e = self.dims.n_experts;
 
         let mut metrics = RoundMetrics {
@@ -201,39 +289,7 @@ impl Coordinator {
                     .collect()
             }
             ServeStrategy::TokenToExpert => {
-                // AOT predictor on every sequence's embeddings (§3.1:
-                // before attention).
-                let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
-                let head_names: Vec<String> = (0..self.dims.n_layers)
-                    .map(|l| format!("predictor.head.{l}"))
-                    .collect();
-                for (seq, &n) in hidden.iter().zip(&n_real) {
-                    let mut ins: Vec<In<'_>> = vec![
-                        In::T(seq),
-                        In::W("predictor.w1"),
-                        In::W("predictor.b1"),
-                    ];
-                    for name in &head_names {
-                        ins.push(In::W(name));
-                    }
-                    let logits = self.leader.call("predictor", &ins)?.remove(0);
-                    // logits [L, S, E]: argmax per (layer, real token).
-                    for l in 0..self.dims.n_layers {
-                        for t in 0..n {
-                            let base = (l * s_max + t) * e;
-                            let row = &logits.data[base..base + e];
-                            let arg = row
-                                .iter()
-                                .enumerate()
-                                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                                .unwrap()
-                                .0;
-                            // Each token occupies top_k slots; scale the
-                            // predicted count accordingly.
-                            counts[l][arg] += self.dims.top_k;
-                        }
-                    }
-                }
+                let counts = self.predict_counts(&hidden, &n_real)?;
                 counts
                     .iter()
                     .map(|c| self.placement.plan_from_counts(c))
@@ -253,13 +309,7 @@ impl Coordinator {
             // back to the leader to avoid a round-trip).
             let t0 = Instant::now();
             if !self.parallel_attention || hidden.len() == 1 {
-                let attn_names = [
-                    format!("layers.{layer}.attn.ln"),
-                    format!("layers.{layer}.attn.wq"),
-                    format!("layers.{layer}.attn.wk"),
-                    format!("layers.{layer}.attn.wv"),
-                    format!("layers.{layer}.attn.wo"),
-                ];
+                let attn_names = attn_weight_names(layer);
                 for h in hidden.iter_mut() {
                     let out = self
                         .leader
@@ -302,7 +352,7 @@ impl Coordinator {
             }
             metrics.attention_s += t0.elapsed().as_secs_f64();
 
-            // Router (fused Pallas RMSNorm + logits) + rust top-k.
+            // Router (fused RMSNorm + logits) + rust top-k.
             let t0 = Instant::now();
             let ln = format!("layers.{layer}.moe.ln");
             let wr = format!("layers.{layer}.moe.router");
@@ -328,116 +378,16 @@ impl Coordinator {
             metrics.n_slots += slots.len();
             metrics.router_s += t0.elapsed().as_secs_f64();
 
-            // Dispatch: assign every slot a worker under the plan.
-            let plan = &plans[layer];
-            let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
-            let (assignment, _loads) = if plan.share.is_empty() {
-                dispatch_tokens(&experts, &plan.placement)
-            } else {
-                dispatch_with_quota(&experts, &plan.placement, &plan.share)
-            };
-
-            // Group slots per (worker, expert), gather activations, run.
-            let t0 = Instant::now();
-            let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
-            for (slot_idx, (&slot_worker, slot)) in
-                assignment.iter().zip(&slots).enumerate()
-            {
-                groups
-                    .entry((slot_worker as usize, slot.expert as usize))
-                    .or_default()
-                    .push(slot_idx);
+            // Dispatch + expert FFN + combine (shared with decode).
+            let outcome = self.ffn_phase(layer, &plans[layer], &slots, &normed, &mut hidden)?;
+            for (w, &b) in outcome.worker_busy_s.iter().enumerate() {
+                metrics.worker_busy_s[w] += b;
             }
-            // §Perf: merge runt groups. Splitting an expert across workers
-            // for a handful of slots costs a whole padded-bucket FFN call
-            // (and possibly a weight transfer) for negligible balance gain;
-            // fold any group smaller than MIN_GROUP into the largest group
-            // of the same expert.
-            const MIN_GROUP: usize = 16;
-            let expert_ids: Vec<usize> =
-                groups.keys().map(|&(_, e)| e).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
-            for expert in expert_ids {
-                let mut keys: Vec<(usize, usize)> = groups
-                    .keys()
-                    .filter(|&&(_, ge)| ge == expert)
-                    .cloned()
-                    .collect();
-                if keys.len() < 2 {
-                    continue;
-                }
-                keys.sort_by_key(|k| groups[k].len());
-                let biggest = *keys.last().unwrap();
-                for key in &keys[..keys.len() - 1] {
-                    if groups[key].len() < MIN_GROUP {
-                        let moved = groups.remove(key).unwrap();
-                        groups.get_mut(&biggest).unwrap().extend(moved);
-                    }
-                }
+            for (w, &s) in outcome.worker_slots.iter().enumerate() {
+                metrics.worker_slots[w] += s;
             }
-            let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
-            let mut outstanding = 0usize;
-            // slot order metadata for combining.
-            let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-            let mut msg_tag = 0u64;
-            for ((worker, expert), slot_indices) in &groups {
-                // Gather the normed activations for these slots.
-                let mut data = Vec::with_capacity(slot_indices.len() * d);
-                for &si in slot_indices {
-                    let slot = &slots[si];
-                    data.extend_from_slice(
-                        &normed[slot.seq_idx].row(slot.token_idx),
-                    );
-                }
-                let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
-                // Oversized groups split across bucket-sized chunks.
-                let mut offset = 0usize;
-                for (chunk, _bucket) in
-                    crate::runtime::bucket::split_into_buckets(&self.buckets, xn.rows())
-                {
-                    let rows: Vec<usize> = (offset..offset + chunk).collect();
-                    let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
-                    msg_tag += 1;
-                    group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
-                    self.workers[*worker].send(WorkerMsg::Run {
-                        tag: msg_tag,
-                        layer,
-                        expert: *expert,
-                        xn: tile,
-                        n_real: chunk,
-                        reply: reply_tx.clone(),
-                    });
-                    outstanding += 1;
-                    metrics.worker_slots[*worker] += chunk;
-                    offset += chunk;
-                }
-            }
-            drop(reply_tx);
-
-            // Combine: h += gate * expert_out at each slot.
-            let mut received = 0usize;
-            while received < outstanding {
-                let result = reply_rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-                received += 1;
-                if let Some(err) = &result.error {
-                    anyhow::bail!("worker {} failed: {err}", result.worker);
-                }
-                metrics.worker_busy_s[result.worker] += result.exec_s;
-                metrics.upload_bytes += result.upload_bytes;
-                let slot_indices = &group_slots[&result.tag];
-                debug_assert_eq!(result.n_real, slot_indices.len());
-                for (row, &si) in slot_indices.iter().enumerate() {
-                    let slot = &slots[si];
-                    let out_row = &result.out[row * d..(row + 1) * d];
-                    let h = &mut hidden[slot.seq_idx];
-                    let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
-                    for (a, &b) in dst.iter_mut().zip(out_row) {
-                        *a += slot.gate * b;
-                    }
-                }
-            }
-            metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
+            metrics.upload_bytes += outcome.upload_bytes;
+            metrics.ffn_wall_s += outcome.wall_s;
 
             // Online learning for the DOP estimators.
             self.placement.observe(layer, &actual_counts);
@@ -466,5 +416,562 @@ impl Coordinator {
             report.rounds.push(metrics);
         }
         Ok(report)
+    }
+
+    /// Serve requests with continuous batching: admit up to
+    /// `opts.max_active` sequences, run prefill-then-decode per sequence,
+    /// one token per active sequence per step, until every request's
+    /// generation budget is spent (or `opts.max_steps` is hit).
+    pub fn serve_decode(
+        &mut self,
+        requests: Vec<Request>,
+        opts: &DecodeOptions,
+    ) -> Result<DecodeReport> {
+        // The AOT pipeline does not compile the decode artifacts yet, so
+        // the decode pipeline needs the reference backend (which resolves
+        // these ops lazily — load is a no-op there). Fail fast with
+        // guidance instead of erroring mid-step under PJRT (DESIGN.md §6).
+        for name in ["attention_prefill", "attention_step", "lm_head"] {
+            self.leader.load(name).with_context(|| {
+                format!(
+                    "decode op `{name}` unavailable: AOT artifacts do not \
+                     include decode ops yet, so `serve --phase decode` \
+                     requires the reference backend (build without \
+                     `--features pjrt`) — see DESIGN.md §6"
+                )
+            })?;
+        }
+        let mut report = DecodeReport {
+            strategy: self.strategy.name().to_string(),
+            steps: Vec::new(),
+        };
+        let mut sched = Scheduler::new(opts.max_active);
+        // Cap prompts at the compiled prefill bucket up front, so the
+        // scheduler's bookkeeping (prompt_len, step_slot_bound) matches
+        // exactly what the steps will route.
+        let mut pending: VecDeque<Request> = requests
+            .into_iter()
+            .map(|mut r| {
+                r.tokens.truncate(self.dims.seq_len.max(1));
+                r
+            })
+            .collect();
+        if opts.arrival_interval == 0 {
+            while let Some(r) = pending.pop_front() {
+                sched.push(r);
+            }
+        }
+        let mut sessions: BTreeMap<u64, SeqSession> = BTreeMap::new();
+        let mut rng = Rng::new(opts.seed ^ 0x00DE_C0DE);
+        self.placement.reset_decode_plans();
+
+        for step in 0..opts.max_steps {
+            if opts.arrival_interval > 0 && step % opts.arrival_interval == 0 {
+                if let Some(r) = pending.pop_front() {
+                    sched.push(r);
+                }
+            }
+            let admitted = sched.admit(step);
+            if sched.active_len() == 0 {
+                if pending.is_empty() {
+                    break;
+                }
+                continue; // idle step waiting for the next arrival
+            }
+            let metrics =
+                self.decode_step(step, admitted, &mut sched, &mut sessions, opts, &mut rng)?;
+            report.steps.push(metrics);
+            for id in sched.evict_finished() {
+                sessions.remove(&id);
+            }
+        }
+        Ok(report)
+    }
+
+    /// One continuous-batching step (see module docs for the pipeline).
+    fn decode_step(
+        &mut self,
+        step: usize,
+        admitted: Vec<Request>,
+        sched: &mut Scheduler,
+        sessions: &mut BTreeMap<u64, SeqSession>,
+        opts: &DecodeOptions,
+        rng: &mut Rng,
+    ) -> Result<DecodeStepMetrics> {
+        let step_start = Instant::now();
+        let e = self.dims.n_experts;
+        let n_layers = self.dims.n_layers;
+        let top_k = self.dims.top_k;
+
+        // Sessions for newly admitted requests (prompt capped at the
+        // compiled prefill bucket).
+        for req in &admitted {
+            anyhow::ensure!(!req.tokens.is_empty(), "empty request {}", req.id);
+            let mut tokens = req.tokens.clone();
+            tokens.truncate(self.dims.seq_len);
+            sessions.insert(
+                req.id,
+                SeqSession {
+                    tokens,
+                    kv: (0..n_layers).map(|_| None).collect(),
+                },
+            );
+        }
+
+        // Step workload in admission order: whole prompt for prefill
+        // sequences, one row for decoding sequences.
+        let workload: Vec<StepSeq> = sched
+            .active()
+            .iter()
+            .map(|s| {
+                let rows = match s.phase {
+                    SeqPhase::Prefill => sessions[&s.id].tokens.len(),
+                    _ => 1,
+                };
+                StepSeq {
+                    id: s.id,
+                    rows,
+                    prefill: s.phase == SeqPhase::Prefill,
+                }
+            })
+            .collect();
+
+        let mut metrics = DecodeStepMetrics {
+            step,
+            n_seqs: workload.len(),
+            worker_busy_s: vec![0.0; self.workers.len()],
+            worker_slots: vec![0; self.workers.len()],
+            ..Default::default()
+        };
+
+        // ---- 1. embed ---------------------------------------------------
+        let t0 = Instant::now();
+        let mut hidden: Vec<HostTensor> = Vec::with_capacity(workload.len());
+        for ws in &workload {
+            let sess = &sessions[&ws.id];
+            let ids: Vec<i32> = if ws.prefill {
+                sess.tokens.iter().map(|&t| t as i32).collect()
+            } else {
+                vec![*sess.tokens.last().expect("non-empty session") as i32]
+            };
+            let n = ids.len();
+            let ids = IntTensor::new(ids, vec![1, n]);
+            let x0 = self
+                .leader
+                .call("embed", &[In::I(&ids), In::W("embed")])?
+                .remove(0);
+            hidden.push(x0);
+            if ws.prefill {
+                metrics.n_prefill_tokens += n;
+            } else {
+                metrics.n_decode_tokens += 1;
+            }
+        }
+        metrics.embed_s = t0.elapsed().as_secs_f64();
+
+        // ---- 2. predict + plan ------------------------------------------
+        // DOP follows the replan cadence; TEP is re-priced every step
+        // (its prediction covers exactly this step's new tokens — ADR 001).
+        let t0 = Instant::now();
+        let total_slots: usize = workload.iter().map(|w| w.rows * top_k).sum();
+        let plans: Vec<LayerPlan> = match self.strategy {
+            ServeStrategy::NoPrediction => {
+                (0..n_layers).map(|_| self.placement.static_plan()).collect()
+            }
+            ServeStrategy::DistributionOnly => {
+                metrics.replanned = self.placement.replans_at(step);
+                self.placement.decode_plans(step, total_slots)
+            }
+            ServeStrategy::TokenToExpert => {
+                metrics.replanned = true;
+                let n_real: Vec<usize> = workload.iter().map(|w| w.rows).collect();
+                let counts = self.predict_counts(&hidden, &n_real)?;
+                counts
+                    .iter()
+                    .map(|c| self.placement.plan_from_counts(c))
+                    .collect()
+            }
+        };
+        metrics.predictor_s = t0.elapsed().as_secs_f64();
+        metrics.replicas_added = plans.iter().map(|p| p.added.len()).sum();
+
+        // ---- 3. per-layer pipeline --------------------------------------
+        let mut skews: Vec<f64> = Vec::new();
+        for layer in 0..n_layers {
+            let attn_names = attn_weight_names(layer);
+
+            // Attention: full-sequence for prefill rows (seeding the KV
+            // cache), incremental over the cache for decode rows.
+            let t0 = Instant::now();
+            for (i, ws) in workload.iter().enumerate() {
+                let sess = sessions.get_mut(&ws.id).expect("session exists");
+                if ws.prefill {
+                    let mut out = self.leader.call(
+                        "attention_prefill",
+                        &[
+                            In::T(&hidden[i]),
+                            In::W(&attn_names[0]),
+                            In::W(&attn_names[1]),
+                            In::W(&attn_names[2]),
+                            In::W(&attn_names[3]),
+                            In::W(&attn_names[4]),
+                        ],
+                    )?;
+                    let v = out.remove(2);
+                    let k = out.remove(1);
+                    hidden[i] = out.remove(0);
+                    sess.kv[layer] = Some((k, v));
+                } else {
+                    let (k_cache, v_cache) =
+                        sess.kv[layer].as_ref().expect("decode sequence has KV");
+                    let mut out = self.leader.call(
+                        "attention_step",
+                        &[
+                            In::T(&hidden[i]),
+                            In::T(k_cache),
+                            In::T(v_cache),
+                            In::W(&attn_names[0]),
+                            In::W(&attn_names[1]),
+                            In::W(&attn_names[2]),
+                            In::W(&attn_names[3]),
+                            In::W(&attn_names[4]),
+                        ],
+                    )?;
+                    let v_new = out.remove(2);
+                    let k_new = out.remove(1);
+                    hidden[i] = out.remove(0);
+                    let (k_cache, v_cache) =
+                        sess.kv[layer].as_mut().expect("decode sequence has KV");
+                    k_cache.append_rows(&k_new);
+                    v_cache.append_rows(&v_new);
+                }
+            }
+            metrics.attention_s += t0.elapsed().as_secs_f64();
+
+            // Router + top-k.
+            let t0 = Instant::now();
+            let ln = format!("layers.{layer}.moe.ln");
+            let wr = format!("layers.{layer}.moe.router");
+            let mut normed: Vec<HostTensor> = Vec::with_capacity(workload.len());
+            let mut slots: Vec<Slot> = Vec::new();
+            for (i, ws) in workload.iter().enumerate() {
+                let mut out = self
+                    .leader
+                    .call("router", &[In::T(&hidden[i]), In::W(&ln), In::W(&wr)])?;
+                let logits = out.remove(1);
+                let xn = out.remove(0);
+                slots.extend(route_sequence(i, &logits.data, e, ws.rows, top_k));
+                normed.push(xn);
+            }
+            let actual_counts = expert_counts(&slots, e);
+            skews.push(stats::skewness_of_counts(&actual_counts));
+            metrics.n_slots += slots.len();
+            metrics.router_s += t0.elapsed().as_secs_f64();
+
+            // Dispatch + expert FFN + combine (shared with prefill).
+            let outcome = self.ffn_phase(layer, &plans[layer], &slots, &normed, &mut hidden)?;
+            for (w, &b) in outcome.worker_busy_s.iter().enumerate() {
+                metrics.worker_busy_s[w] += b;
+            }
+            for (w, &s) in outcome.worker_slots.iter().enumerate() {
+                metrics.worker_slots[w] += s;
+            }
+            metrics.upload_bytes += outcome.upload_bytes;
+            metrics.ffn_wall_s += outcome.wall_s;
+
+            // Per-step moving-average estimator update (§3.2.1: decode
+            // steps keep teaching DOP while it serves).
+            self.placement.observe(layer, &actual_counts);
+        }
+
+        // ---- 4. lm head + sampling --------------------------------------
+        let t0 = Instant::now();
+        for (i, ws) in workload.iter().enumerate() {
+            let last = hidden[i].gather_rows(&[ws.rows - 1]);
+            let logits = self
+                .leader
+                .call("lm_head", &[In::T(&last), In::W("final.ln"), In::W("embed")])?
+                .remove(0);
+            let token = sample_token(&logits.data, opts.temperature, rng);
+            sessions
+                .get_mut(&ws.id)
+                .expect("session exists")
+                .tokens
+                .push(token);
+            sched.record_token(ws.id);
+        }
+        metrics.lm_head_s = t0.elapsed().as_secs_f64();
+
+        metrics.routing_skew = stats::mean(&skews);
+        metrics.total_s = step_start.elapsed().as_secs_f64();
+        Ok(metrics)
+    }
+
+    /// Run the AOT Token-to-Expert predictor on every sequence's
+    /// embeddings (§3.1: before attention) and count predicted slots per
+    /// (layer, expert). `hidden[i]` holds `≥ n_real[i]` embedded rows.
+    fn predict_counts(
+        &mut self,
+        hidden: &[HostTensor],
+        n_real: &[usize],
+    ) -> Result<Vec<Vec<usize>>> {
+        let e = self.dims.n_experts;
+        let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
+        let head_names: Vec<String> = (0..self.dims.n_layers)
+            .map(|l| format!("predictor.head.{l}"))
+            .collect();
+        for (seq, &n) in hidden.iter().zip(n_real) {
+            let s_rows = seq.rows();
+            let mut ins: Vec<In<'_>> = vec![
+                In::T(seq),
+                In::W("predictor.w1"),
+                In::W("predictor.b1"),
+            ];
+            for name in &head_names {
+                ins.push(In::W(name));
+            }
+            let logits = self.leader.call("predictor", &ins)?.remove(0);
+            // logits [L, S, E]: argmax per (layer, real token).
+            for l in 0..self.dims.n_layers {
+                for t in 0..n.min(s_rows) {
+                    let base = (l * s_rows + t) * e;
+                    let row = &logits.data[base..base + e];
+                    let arg = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    // Each token occupies top_k slots; scale the predicted
+                    // count accordingly.
+                    counts[l][arg] += self.dims.top_k;
+                }
+            }
+        }
+        Ok(counts)
+    }
+
+    /// Dispatch routed slots to the virtual-GPU workers under `plan`, run
+    /// the expert FFNs, and combine `gate * expert_out` into `hidden`.
+    /// Shared by prefill rounds and decode steps.
+    fn ffn_phase(
+        &mut self,
+        layer: usize,
+        plan: &LayerPlan,
+        slots: &[Slot],
+        normed: &[HostTensor],
+        hidden: &mut [HostTensor],
+    ) -> Result<FfnPhaseOutcome> {
+        let d = self.dims.d_model;
+        let mut outcome = FfnPhaseOutcome {
+            wall_s: 0.0,
+            worker_busy_s: vec![0.0; self.workers.len()],
+            worker_slots: vec![0; self.workers.len()],
+            upload_bytes: 0,
+        };
+        if slots.is_empty() {
+            return Ok(outcome);
+        }
+
+        let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
+        let (assignment, _loads) = if plan.share.is_empty() {
+            dispatch_tokens(&experts, &plan.placement)
+        } else {
+            dispatch_with_quota(&experts, &plan.placement, &plan.share)
+        };
+
+        // Group slots per (worker, expert), gather activations, run.
+        let t0 = Instant::now();
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (slot_idx, (&slot_worker, slot)) in assignment.iter().zip(slots).enumerate() {
+            groups
+                .entry((slot_worker as usize, slot.expert as usize))
+                .or_default()
+                .push(slot_idx);
+        }
+        // §Perf: merge runt groups. Splitting an expert across workers
+        // for a handful of slots costs a whole padded-bucket FFN call
+        // (and possibly a weight transfer) for negligible balance gain;
+        // fold any group smaller than MIN_GROUP into the largest group
+        // of the same expert.
+        const MIN_GROUP: usize = 16;
+        let expert_ids: Vec<usize> = groups
+            .keys()
+            .map(|&(_, e)| e)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        for expert in expert_ids {
+            let mut keys: Vec<(usize, usize)> = groups
+                .keys()
+                .filter(|&&(_, ge)| ge == expert)
+                .cloned()
+                .collect();
+            if keys.len() < 2 {
+                continue;
+            }
+            keys.sort_by_key(|k| groups[k].len());
+            let biggest = *keys.last().unwrap();
+            for key in &keys[..keys.len() - 1] {
+                if groups[key].len() < MIN_GROUP {
+                    let moved = groups.remove(key).unwrap();
+                    groups.get_mut(&biggest).unwrap().extend(moved);
+                }
+            }
+        }
+        // §Perf (decode serving): greedy LPT placement of merged groups.
+        // The dispatcher's slot-level least-loaded choice ignores bucket
+        // padding — a 3-slot and a 14-slot group cost the same padded FFN
+        // call, and on decode-scale batches the padded call count per
+        // worker IS the critical path. Re-assign each group to the least-
+        // loaded worker hosting a replica (largest group first, load
+        // measured in padded rows; ties prefer the original worker, whose
+        // weights are more likely resident). Without replicas (baseline)
+        // every expert has one host and this is the identity.
+        let mut items: Vec<((usize, usize), Vec<usize>)> = groups.into_iter().collect();
+        items.sort_by_key(|(key, v)| (std::cmp::Reverse(v.len()), *key));
+        let mut lpt_load = vec![0usize; self.workers.len()];
+        let mut placed: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for ((orig_worker, expert), slot_indices) in items {
+            let padded: usize =
+                crate::runtime::bucket::split_into_buckets(&self.buckets, slot_indices.len())
+                    .iter()
+                    .map(|&(_, b)| b)
+                    .sum();
+            let hosts = plan.placement.gpus_of(expert);
+            let target = hosts
+                .iter()
+                .copied()
+                .min_by_key(|&g| (lpt_load[g], (g != orig_worker) as usize, g))
+                .unwrap_or(orig_worker);
+            lpt_load[target] += padded;
+            placed.entry((target, expert)).or_default().extend(slot_indices);
+        }
+
+        let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
+        let mut outstanding = 0usize;
+        // Slot-order metadata for combining.
+        let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut msg_tag = 0u64;
+        for ((worker, expert), slot_indices) in &placed {
+            // Gather the normed activations for these slots.
+            let mut data = Vec::with_capacity(slot_indices.len() * d);
+            for &si in slot_indices {
+                let slot = &slots[si];
+                data.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
+            }
+            let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
+            // Oversized groups split across bucket-sized chunks.
+            let mut offset = 0usize;
+            for (chunk, _bucket) in
+                crate::runtime::bucket::split_into_buckets(&self.buckets, xn.rows())
+            {
+                let rows: Vec<usize> = (offset..offset + chunk).collect();
+                let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
+                msg_tag += 1;
+                group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
+                self.workers[*worker].send(WorkerMsg::Run {
+                    tag: msg_tag,
+                    layer,
+                    expert: *expert,
+                    xn: tile,
+                    n_real: chunk,
+                    reply: reply_tx.clone(),
+                });
+                outstanding += 1;
+                outcome.worker_slots[*worker] += chunk;
+                offset += chunk;
+            }
+        }
+        drop(reply_tx);
+
+        // Combine: h += gate * expert_out at each slot.
+        let mut received = 0usize;
+        while received < outstanding {
+            let result = reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+            received += 1;
+            if let Some(err) = &result.error {
+                anyhow::bail!("worker {} failed: {err}", result.worker);
+            }
+            outcome.worker_busy_s[result.worker] += result.exec_s;
+            outcome.upload_bytes += result.upload_bytes;
+            let slot_indices = &group_slots[&result.tag];
+            debug_assert_eq!(result.n_real, slot_indices.len());
+            for (row, &si) in slot_indices.iter().enumerate() {
+                let slot = &slots[si];
+                let out_row = &result.out[row * d..(row + 1) * d];
+                let h = &mut hidden[slot.seq_idx];
+                let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
+                for (a, &b) in dst.iter_mut().zip(out_row) {
+                    *a += slot.gate * b;
+                }
+            }
+        }
+        outcome.wall_s = t0.elapsed().as_secs_f64();
+        Ok(outcome)
+    }
+}
+
+fn attn_weight_names(layer: usize) -> [String; 5] {
+    [
+        format!("layers.{layer}.attn.ln"),
+        format!("layers.{layer}.attn.wq"),
+        format!("layers.{layer}.attn.wk"),
+        format!("layers.{layer}.attn.wv"),
+        format!("layers.{layer}.attn.wo"),
+    ]
+}
+
+/// Sample the next token from lm-head logits: greedy when `temperature <=
+/// 0`, else softmax sampling at the given temperature (deterministic given
+/// the run's seeded RNG).
+fn sample_token(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32;
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let probs: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) as f64) / temperature).exp())
+        .collect();
+    rng.categorical(&probs) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_token_greedy_is_argmax() {
+        let mut rng = Rng::new(1);
+        let logits = [0.1f32, 3.0, -2.0, 1.0];
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_token_tracks_distribution() {
+        let mut rng = Rng::new(2);
+        // One dominant logit: sampling should pick it most of the time.
+        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample_token(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 150, "hits={hits}");
+    }
+
+    #[test]
+    fn decode_options_defaults_sane() {
+        let opts = DecodeOptions::default();
+        assert!(opts.max_active >= 1);
+        assert!(opts.max_steps > 0);
+        assert_eq!(opts.arrival_interval, 0);
     }
 }

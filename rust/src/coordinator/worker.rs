@@ -4,14 +4,13 @@
 //! first use — that upload is exactly the duplication transfer Algorithm 1
 //! triggers, and is accounted per worker.
 
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{bucket, Engine, HostTensor, In};
+use crate::runtime::{bucket, Engine, EngineSource, HostTensor, In};
 
 /// Work sent to a worker.
 pub enum WorkerMsg {
@@ -71,12 +70,14 @@ pub struct WorkerHandle {
 }
 
 impl WorkerHandle {
-    /// Spawn a worker over the artifacts directory.
-    pub fn spawn(index: usize, artifacts_dir: PathBuf) -> Result<WorkerHandle> {
+    /// Spawn a worker over an engine source (artifacts directory or the
+    /// synthetic weight set — the synthetic store is shared via `Arc`, so
+    /// per-worker construction is cheap).
+    pub fn spawn(index: usize, source: EngineSource) -> Result<WorkerHandle> {
         let (sender, receiver) = mpsc::channel::<WorkerMsg>();
         let join = std::thread::Builder::new()
             .name(format!("vgpu-{index}"))
-            .spawn(move || worker_main(index, &artifacts_dir, receiver))?;
+            .spawn(move || worker_main(index, &source, receiver))?;
         Ok(WorkerHandle {
             index,
             sender,
@@ -107,8 +108,8 @@ fn expert_weight_names(layer: usize, expert: usize) -> [String; 3] {
     ]
 }
 
-fn worker_main(index: usize, artifacts_dir: &std::path::Path, rx: mpsc::Receiver<WorkerMsg>) {
-    let mut engine = match Engine::new(artifacts_dir) {
+fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg>) {
+    let mut engine = match Engine::from_source(source) {
         Ok(e) => e,
         Err(err) => {
             crate::util::logging::log(

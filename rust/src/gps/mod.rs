@@ -21,5 +21,8 @@ pub mod select;
 pub mod sweep;
 
 pub use calibrate::{calibrate, CalibrationOptions, PredictorPoint, WorkloadCalibration};
-pub use select::{best_tep, strategy_savings, SavingsComparison};
+pub use select::{
+    best_tep, decode_strategy_savings, strategy_savings, strategy_savings_for_phase,
+    SavingsComparison, ServePhase,
+};
 pub use sweep::{skew_sweep, SweepPoint};

@@ -1,12 +1,43 @@
 //! Strategy selection (the decision MoE-GPS exists to make) and the
-//! Figure-7 savings-difference series.
+//! Figure-7 savings-difference series — for both serving phases: the
+//! paper's prefill setting and the decode (autoregressive) regime, where
+//! the trade-off tilts (DESIGN.md §5: memory-bound FFN, per-step TEP
+//! overhead).
 
 use super::calibrate::{interpolate_for_skew, WorkloadCalibration};
 use super::sweep::accuracy_grid;
 use crate::model::ModelConfig;
+use crate::predictor::overhead::{self, PredictorKind};
 use crate::sim::hardware::SystemSpec;
 use crate::sim::moe::Strategy;
-use crate::sim::LayerSim;
+use crate::sim::{DecodeSim, LayerSim};
+
+/// Which serving phase a recommendation is for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePhase {
+    /// The paper's setting: whole-prompt batches, compute-bound FFN.
+    Prefill,
+    /// Continuous-batching autoregressive generation: one token per
+    /// sequence per step, memory-bound FFN, prediction re-priced per step.
+    Decode,
+}
+
+impl ServePhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServePhase::Prefill => "prefill",
+            ServePhase::Decode => "decode",
+        }
+    }
+
+    pub fn by_name(s: &str) -> anyhow::Result<ServePhase> {
+        match s {
+            "prefill" => Ok(ServePhase::Prefill),
+            "decode" => Ok(ServePhase::Decode),
+            other => anyhow::bail!("unknown phase `{other}` (prefill|decode)"),
+        }
+    }
+}
 
 /// Best Token-to-Expert configuration at a skewness: the bottom of the
 /// U-shape over the accuracy grid. Returns (accuracy, total_s).
@@ -73,6 +104,81 @@ pub fn strategy_savings(
         tep_best_saving_s: baseline_s - tep_s,
         tep_best_accuracy: tep_acc,
         difference_s: (baseline_s - dop_s) - (baseline_s - tep_s),
+    }
+}
+
+/// Decode-phase savings comparison: the same contract as
+/// [`strategy_savings`], priced on the decode-step simulator instead
+/// (memory-bound FFN regime, per-step Token-to-Expert overhead — ADR 001).
+///
+/// TEP's per-step predictor cost is derived from the workload calibration:
+/// the exponential fit prices the predictor on the prefill batch
+/// (`1 × 512` tokens), so the bandwidth-bound part scales down to the
+/// decode batch's token count — but never below the physical floor of
+/// running the paper's FFN predictor on `batch` tokens (launch-bound
+/// matvecs that do not shrink with the batch).
+pub fn decode_strategy_savings(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    ctx_len: usize,
+) -> SavingsComparison {
+    let sim = DecodeSim::new(model.clone(), system.clone()).with_workload(batch, ctx_len);
+    let baseline_s = sim.baseline_step(skew);
+    let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
+    let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
+
+    let prefill_sim = LayerSim::new(model.clone(), system.clone());
+    let prefill_baseline = prefill_sim.baseline_total(skew);
+    let prefill_tokens = (prefill_sim.batch * prefill_sim.seq) as f64;
+    let floor = overhead::overhead_s(PredictorKind::PaperFfn, model, system, batch, 1);
+    let (tep_acc, tep_s) = accuracy_grid()
+        .into_iter()
+        .map(|acc| {
+            let scaled = overhead_fit.0 * (overhead_fit.1 * acc).exp() * prefill_baseline
+                * (batch as f64 / prefill_tokens);
+            let overhead_s = scaled.max(floor);
+            let total = sim.step_total(
+                skew,
+                Strategy::TokenToExpert {
+                    accuracy: acc,
+                    overhead_s,
+                },
+            );
+            (acc, total)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+
+    SavingsComparison {
+        skewness: skew,
+        interconnect_gbs: system.interconnect.link_bw_gbs,
+        baseline_s,
+        dop_saving_s: baseline_s - dop_s,
+        tep_best_saving_s: baseline_s - tep_s,
+        tep_best_accuracy: tep_acc,
+        difference_s: (baseline_s - dop_s) - (baseline_s - tep_s),
+    }
+}
+
+/// Phase-dispatching wrapper: `seq_or_ctx` is the prefill sequence length
+/// or the decode context depth.
+pub fn strategy_savings_for_phase(
+    phase: ServePhase,
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    seq_or_ctx: usize,
+) -> SavingsComparison {
+    match phase {
+        ServePhase::Prefill => strategy_savings(model, system, cals, skew, batch, seq_or_ctx),
+        ServePhase::Decode => {
+            decode_strategy_savings(model, system, cals, skew, batch, seq_or_ctx)
+        }
     }
 }
 
@@ -166,5 +272,54 @@ mod tests {
         let (acc, total) = best_tep(&sim, 2.0, (0.01, 3.0), baseline);
         assert!(accuracy_grid().contains(&acc));
         assert!(total.is_finite() && total > 0.0);
+    }
+
+    #[test]
+    fn decode_savings_well_formed() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        let cmp = decode_strategy_savings(&model, &system, &c, 2.0, 16, 512);
+        assert!(cmp.baseline_s > 0.0);
+        // DOP can never lose to the decode baseline: communication is
+        // unchanged, compute only rebalances, movement hides.
+        assert!(cmp.dop_saving_s >= -1e-12, "dop_saving={}", cmp.dop_saving_s);
+        assert!(accuracy_grid().contains(&cmp.tep_best_accuracy));
+        assert_eq!(
+            ServePhase::by_name("decode").unwrap(),
+            ServePhase::Decode
+        );
+        assert!(ServePhase::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn decode_penalises_tep_relative_to_prefill() {
+        // The decode regime's headline: per-step prediction overhead plus
+        // a memory-bound FFN (no compute leverage for exact routing) means
+        // TEP's relative saving shrinks vs its prefill showing — even on
+        // the slow interconnect where prefill-TEP is strongest (§4).
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_pcie();
+        let c = cals(&model, &system);
+        let skew = 3.0;
+        let prefill = strategy_savings(&model, &system, &c, skew, 1, 512);
+        let decode = decode_strategy_savings(&model, &system, &c, skew, 16, 512);
+        let rel_prefill = prefill.tep_best_saving_s / prefill.baseline_s;
+        let rel_decode = decode.tep_best_saving_s / decode.baseline_s;
+        assert!(
+            rel_decode < rel_prefill,
+            "TEP should lose ground in decode: prefill={rel_prefill} decode={rel_decode}"
+        );
+        // And the phase dispatcher routes to the same numbers.
+        let via_phase = strategy_savings_for_phase(
+            ServePhase::Decode,
+            &model,
+            &system,
+            &c,
+            skew,
+            16,
+            512,
+        );
+        assert_eq!(via_phase.baseline_s, decode.baseline_s);
     }
 }

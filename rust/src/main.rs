@@ -12,8 +12,9 @@
 use anyhow::Result;
 
 use moe_gps::coordinator::request::RequestGen;
-use moe_gps::coordinator::{Coordinator, ServeStrategy};
-use moe_gps::gps::{self, calibrate, CalibrationOptions};
+use moe_gps::coordinator::{Coordinator, DecodeOptions, ServeStrategy};
+use moe_gps::gps::select::recommend;
+use moe_gps::gps::{self, calibrate, CalibrationOptions, ServePhase};
 use moe_gps::model::ModelConfig;
 use moe_gps::sim::moe::Strategy;
 use moe_gps::sim::{LayerSim, SystemSpec};
@@ -55,11 +56,17 @@ USAGE: moe-gps <subcommand> [options]
                [--strategy none|dop|tep --accuracy 0.9 --batch 1 --seq 512
                 --error-model typical]
   sweep        --model ... --system ... [--skews 1.0,1.4,2.0,3.0,4.0 --fast]
-  advise       --model ... [--skews ... --bandwidths 600,300,128,64 --fast]
+  advise       --model ... [--phase prefill|decode --skews ...
+                --bandwidths 600,300,128,64 --batch 16 --ctx 512 --fast]
   trace        --dataset mmlu|alpaca|sst2 [--seed 7]
   predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
-  serve        --strategy none|dop|tep [--workers 4 --rounds 8 --seqs 4
-                --artifacts artifacts]
+  serve        --strategy none|dop|tep [--phase prefill|decode|mixed
+                --workers 4 --artifacts artifacts]
+               prefill: [--rounds 8 --seqs 4]
+               decode/mixed (continuous batching): [--steps 256 --seqs 8
+                --max-active 8 --prompt 32 --max-new 32 --replan 4
+                --temperature 1.0 --arrival-every 2]
+               (without artifacts the synthetic tiny model is served)
   bench-report table1|fig4|fig6|fig7 [--fast]
 ",
         moe_gps::VERSION
@@ -154,12 +161,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_advise(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
+    let phase = ServePhase::by_name(args.opt_or("phase", "prefill"))?;
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
     let system = SystemSpec::four_a100_nvlink();
     let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
-    let cells =
-        gps::guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512);
+    let cells = match phase {
+        ServePhase::Prefill => {
+            gps::guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512)
+        }
+        ServePhase::Decode => {
+            // Decode regime: decision map over the same grid, priced on
+            // the decode-step simulator (memory-bound FFN, per-step TEP
+            // overhead — ADR 001).
+            let batch = args.opt_usize("batch", 16)?;
+            let ctx = args.opt_usize("ctx", 512)?;
+            let mut cells = Vec::new();
+            for &bw in &bandwidths {
+                let sys = SystemSpec::four_a100_custom_bw(bw);
+                for &skew in &skews {
+                    let cmp =
+                        gps::decode_strategy_savings(&model, &sys, &cals, skew, batch, ctx);
+                    let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
+                    cells.push(gps::guidelines::GuidelineCell {
+                        skewness: skew,
+                        bandwidth_gbs: bw,
+                        recommendation: recommend(&cmp),
+                        saving_frac: best_saving / cmp.baseline_s,
+                    });
+                }
+            }
+            cells
+        }
+    };
+    println!("phase: {}", phase.name());
     println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
     println!("{}", gps::guidelines::summarize(&cells));
     Ok(())
@@ -197,20 +232,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let strategy = ServeStrategy::by_name(args.opt_or("strategy", "dop"))?;
     let artifacts = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
     let workers = args.opt_usize("workers", 4)?;
-    let rounds = args.opt_usize("rounds", 8)?;
-    let seqs = args.opt_usize("seqs", 4)?;
+    let phase = args.opt_or("phase", "prefill");
+    let seed = args.opt_u64("seed", 11)?;
     let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
-    let mut gen = RequestGen::new(args.opt_u64("seed", 11)?, coord.vocab());
-    let max_len = coord.seq_len();
-    let batches: Vec<Vec<_>> = (0..rounds)
-        .map(|_| {
-            (0..seqs)
-                .map(|_| gen.request_varlen(max_len / 4, max_len))
-                .collect()
-        })
-        .collect();
-    let report = coord.serve(batches)?;
-    println!("{}", report.summary());
+    let mut gen = RequestGen::new(seed, coord.vocab());
+    match phase {
+        "prefill" => {
+            let rounds = args.opt_usize("rounds", 8)?;
+            let seqs = args.opt_usize("seqs", 4)?;
+            let max_len = coord.seq_len();
+            let batches: Vec<Vec<_>> = (0..rounds)
+                .map(|_| {
+                    (0..seqs)
+                        .map(|_| gen.request_varlen(max_len / 4, max_len))
+                        .collect()
+                })
+                .collect();
+            let report = coord.serve(batches)?;
+            println!("{}", report.summary());
+        }
+        "decode" | "mixed" => {
+            let seqs = args.opt_usize("seqs", 8)?;
+            let prompt = args.opt_usize("prompt", (coord.seq_len() / 8).max(4))?;
+            let max_new = args.opt_usize("max-new", 32)?;
+            coord.placement.replan_interval = args.opt_usize("replan", 4)?;
+            let requests: Vec<_> = (0..seqs)
+                .map(|_| gen.decode_request(prompt, max_new))
+                .collect();
+            let opts = DecodeOptions {
+                max_active: args.opt_usize("max-active", seqs.clamp(1, 8))?,
+                max_steps: args.opt_usize("steps", 256)?,
+                temperature: args.opt_f64("temperature", 1.0)?,
+                seed,
+                // mixed: requests trickle in so steps interleave prefill
+                // and decode work; decode: everything queued up front.
+                arrival_interval: if phase == "mixed" {
+                    args.opt_usize("arrival-every", 2)?
+                } else {
+                    0
+                },
+            };
+            let report = coord.serve_decode(requests, &opts)?;
+            println!("{}", report.summary());
+        }
+        other => anyhow::bail!("unknown --phase `{other}` (prefill|decode|mixed)"),
+    }
     Ok(())
 }
 

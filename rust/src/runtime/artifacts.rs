@@ -3,6 +3,14 @@
 //! `python/compile/aot.py` writes `manifest.json` (artifact index, weight
 //! offsets/shapes, model config) and `weights.bin` (little-endian f32,
 //! concatenated in manifest order). This module loads both.
+//!
+//! When no artifacts directory exists (no python toolchain in the build
+//! environment), [`synthetic_artifacts`] generates an equivalent in-memory
+//! manifest + weight set for the tiny serving model, mirroring
+//! `python/compile/model.py::init_weights` — including the
+//! embedding-anchored routers that give the tiny model its skewed,
+//! token-identity-driven routing. The reference backend executes directly
+//! against these (DESIGN.md §6).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -11,6 +19,7 @@ use anyhow::{Context, Result};
 
 use super::tensor::HostTensor;
 use crate::util::json::Value;
+use crate::util::rng::Rng;
 
 /// One artifact entry (an HLO-text file).
 #[derive(Clone, Debug)]
@@ -159,6 +168,253 @@ impl WeightStore {
     }
 }
 
+/// Dimensions and seed of a synthetically-generated artifact set. `tiny()`
+/// matches `python/compile/model.py::TINY_CONFIG` / `ModelConfig::tiny_serve`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SyntheticSpec {
+    pub seed: u64,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_layers: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub predictor_hidden: usize,
+    pub ffn_buckets: Vec<usize>,
+}
+
+impl SyntheticSpec {
+    /// The tiny serving model (TINY_CONFIG dims).
+    pub fn tiny() -> SyntheticSpec {
+        SyntheticSpec {
+            seed: 0,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 512,
+            n_experts: 8,
+            top_k: 2,
+            n_layers: 4,
+            vocab_size: 4096,
+            seq_len: 256,
+            predictor_hidden: 128,
+            ffn_buckets: vec![16, 32, 64, 128, 256, 512],
+        }
+    }
+
+    /// A scaled-down spec for fast integration tests (same topology,
+    /// ~30× fewer parameters).
+    pub fn small_test() -> SyntheticSpec {
+        SyntheticSpec {
+            seed: 0,
+            d_model: 64,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            d_ff: 128,
+            n_experts: 8,
+            top_k: 2,
+            n_layers: 2,
+            vocab_size: 512,
+            seq_len: 64,
+            predictor_hidden: 32,
+            ffn_buckets: vec![8, 16, 32, 64],
+        }
+    }
+}
+
+/// Generate a synthetic (manifest, weight store) pair for `spec`.
+///
+/// Weight initialisation mirrors `python/compile/model.py::init_weights`:
+/// normal embeddings, per-layer attention projections, and
+/// *embedding-anchored* routers (each expert's router column points toward
+/// the embeddings of an anchor token, with a mild geometric column scale) —
+/// the two properties everything downstream relies on: predictable routing
+/// and a skewed expert distribution.
+pub fn synthetic_artifacts(spec: &SyntheticSpec) -> (Manifest, WeightStore) {
+    assert_eq!(
+        spec.d_model,
+        spec.n_heads * spec.head_dim,
+        "d_model must equal n_heads * head_dim"
+    );
+    let d = spec.d_model;
+    let ff = spec.d_ff;
+    let e = spec.n_experts;
+    let kvw = spec.n_kv_heads * spec.head_dim;
+    let qw = spec.n_heads * spec.head_dim;
+    let h = spec.predictor_hidden;
+
+    let mut rng = Rng::new(spec.seed ^ 0x5EED_A21F);
+    let mut blob: Vec<f32> = Vec::new();
+    let mut index: BTreeMap<String, (usize, Vec<usize>)> = BTreeMap::new();
+
+    let push = |name: &str,
+                shape: Vec<usize>,
+                data: Vec<f32>,
+                blob: &mut Vec<f32>,
+                index: &mut BTreeMap<String, (usize, Vec<usize>)>| {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        index.insert(name.to_string(), (blob.len() * 4, shape));
+        blob.extend(data);
+    };
+    let normal = |rng: &mut Rng, n: usize, scale: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    };
+
+    let embed = normal(&mut rng, spec.vocab_size * d, 0.3);
+    push("embed", vec![spec.vocab_size, d], embed.clone(), &mut blob, &mut index);
+
+    for l in 0..spec.n_layers {
+        let p = format!("layers.{l}");
+        push(&format!("{p}.attn.ln"), vec![d], vec![1.0; d], &mut blob, &mut index);
+        push(
+            &format!("{p}.attn.wq"),
+            vec![d, qw],
+            normal(&mut rng, d * qw, (d as f64).powf(-0.5)),
+            &mut blob,
+            &mut index,
+        );
+        push(
+            &format!("{p}.attn.wk"),
+            vec![d, kvw],
+            normal(&mut rng, d * kvw, (d as f64).powf(-0.5)),
+            &mut blob,
+            &mut index,
+        );
+        push(
+            &format!("{p}.attn.wv"),
+            vec![d, kvw],
+            normal(&mut rng, d * kvw, (d as f64).powf(-0.5)),
+            &mut blob,
+            &mut index,
+        );
+        push(
+            &format!("{p}.attn.wo"),
+            vec![qw, d],
+            normal(&mut rng, qw * d, 0.1 * (qw as f64).powf(-0.5)),
+            &mut blob,
+            &mut index,
+        );
+        push(&format!("{p}.moe.ln"), vec![d], vec![1.0; d], &mut blob, &mut index);
+
+        // Embedding-anchored router [d, e], row-major.
+        let mut router = vec![0.0f32; d * e];
+        for x in 0..e {
+            let anchor_id = rng.range(0, spec.vocab_size);
+            let row = &embed[anchor_id * d..(anchor_id + 1) * d];
+            let norm = (row.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()).sqrt() + 1e-8;
+            let col_scale = 1.15f64.powi(-(x as i32));
+            for i in 0..d {
+                let anchored = row[i] as f64 / norm * 4.0 + rng.normal() * 0.02;
+                router[i * e + x] = (anchored * col_scale) as f32;
+            }
+        }
+        push(&format!("{p}.moe.router"), vec![d, e], router, &mut blob, &mut index);
+
+        for x in 0..e {
+            push(
+                &format!("{p}.experts.{x}.w_gate"),
+                vec![d, ff],
+                normal(&mut rng, d * ff, (d as f64).powf(-0.5)),
+                &mut blob,
+                &mut index,
+            );
+            push(
+                &format!("{p}.experts.{x}.w_up"),
+                vec![d, ff],
+                normal(&mut rng, d * ff, (d as f64).powf(-0.5)),
+                &mut blob,
+                &mut index,
+            );
+            push(
+                &format!("{p}.experts.{x}.w_down"),
+                vec![ff, d],
+                normal(&mut rng, ff * d, (ff as f64).powf(-0.5)),
+                &mut blob,
+                &mut index,
+            );
+        }
+    }
+    push("final.ln", vec![d], vec![1.0; d], &mut blob, &mut index);
+    push(
+        "predictor.w1",
+        vec![d, h],
+        normal(&mut rng, d * h, (2.0 / d as f64).sqrt()),
+        &mut blob,
+        &mut index,
+    );
+    push("predictor.b1", vec![h], vec![0.0; h], &mut blob, &mut index);
+    for l in 0..spec.n_layers {
+        push(
+            &format!("predictor.head.{l}"),
+            vec![h, e],
+            normal(&mut rng, h * e, (2.0 / h as f64).sqrt()),
+            &mut blob,
+            &mut index,
+        );
+    }
+
+    let dir = PathBuf::from("synthetic://");
+    let mut artifacts = BTreeMap::new();
+    let mut artifact_names: Vec<String> = [
+        "embed",
+        "attention",
+        "attention_prefill",
+        "attention_step",
+        "router",
+        "predictor",
+        "lm_head",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    for b in &spec.ffn_buckets {
+        artifact_names.push(format!("expert_ffn_b{b}"));
+    }
+    for name in artifact_names {
+        artifacts.insert(
+            name.clone(),
+            ArtifactEntry {
+                file: dir.join(format!("{name}.hlo")),
+                name,
+            },
+        );
+    }
+
+    let mut config = Value::obj();
+    config
+        .set("name", Value::Str("synthetic-tiny-moe".into()))
+        .set("d_model", Value::Num(d as f64))
+        .set("n_heads", Value::Num(spec.n_heads as f64))
+        .set("n_kv_heads", Value::Num(spec.n_kv_heads as f64))
+        .set("head_dim", Value::Num(spec.head_dim as f64))
+        .set("d_ff", Value::Num(ff as f64))
+        .set("n_experts", Value::Num(e as f64))
+        .set("top_k", Value::Num(spec.top_k as f64))
+        .set("n_layers", Value::Num(spec.n_layers as f64))
+        .set("vocab_size", Value::Num(spec.vocab_size as f64))
+        .set("seq_len", Value::Num(spec.seq_len as f64));
+
+    let manifest = Manifest {
+        dir: dir.clone(),
+        artifacts,
+        weights: index.clone(),
+        weights_file: dir.join("weights.bin"),
+        config,
+        predictor_accuracy: 0.0,
+    };
+    let store = WeightStore {
+        blob: std::sync::Arc::new(blob),
+        index,
+    };
+    (manifest, store)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +443,31 @@ mod tests {
             assert!(m.ffn_buckets().windows(2).all(|w| w[0] < w[1]));
             assert!(m.config.req_usize("d_model").unwrap() == 256);
         });
+    }
+
+    #[test]
+    fn synthetic_artifacts_consistent() {
+        let spec = SyntheticSpec::small_test();
+        let (m, ws) = synthetic_artifacts(&spec);
+        assert_eq!(m.ffn_buckets(), spec.ffn_buckets);
+        assert_eq!(m.config.req_usize("d_model").unwrap(), 64);
+        assert_eq!(m.config.req_usize("seq_len").unwrap(), 64);
+        let embed = ws.get("embed").unwrap();
+        assert_eq!(embed.shape, vec![512, 64]);
+        let router = ws.get("layers.0.moe.router").unwrap();
+        assert_eq!(router.shape, vec![64, 8]);
+        assert!(ws.get("layers.1.experts.7.w_down").is_ok());
+        assert_eq!(ws.nbytes("layers.0.experts.0.w_gate").unwrap(), 64 * 128 * 4);
+        // Routers must not be all-zero (anchored init).
+        assert!(router.data.iter().any(|&v| v.abs() > 0.1));
+    }
+
+    #[test]
+    fn synthetic_generation_is_deterministic() {
+        let spec = SyntheticSpec::small_test();
+        let (_, a) = synthetic_artifacts(&spec);
+        let (_, b) = synthetic_artifacts(&spec);
+        assert_eq!(a.get("embed").unwrap(), b.get("embed").unwrap());
     }
 
     #[test]

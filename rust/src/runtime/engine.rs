@@ -1,24 +1,34 @@
-//! The PJRT execution engine: compile-once, execute-many.
+//! The execution engine: compile-once, execute-many.
 //!
-//! One `Engine` wraps one `PjRtClient` (CPU). Executables are compiled from
-//! HLO text on first use and cached; weights are uploaded to device-resident
-//! buffers once and referenced by name afterwards, so the request path only
-//! moves activations (`execute_b`).
+//! One `Engine` wraps one execution backend plus the manifest/weight store:
 //!
-//! `PjRtClient` is not `Send` — each coordinator worker thread owns its own
-//! `Engine`, which is exactly the "one engine per virtual GPU" topology the
-//! serving driver simulates.
+//! * **Reference** (default) — the pure-rust op implementations in
+//!   [`super::reference`], executing directly against host weights. Works
+//!   with on-disk artifacts *or* the in-memory synthetic weight set, which
+//!   is what lets serving run in environments without PJRT or python.
+//! * **PJRT** (`--features pjrt`) — compiles the AOT HLO-text artifacts
+//!   through the `xla` crate and executes them on device buffers
+//!   (`runtime::pjrt`). `PjRtClient` is not `Send` — each coordinator
+//!   worker thread owns its own `Engine`, which is exactly the "one engine
+//!   per virtual GPU" topology the serving driver simulates.
+//!
+//! Weight-residency accounting is backend-independent: `upload_weight`
+//! returns the bytes moved on a cold upload (0 on a cache hit) — the
+//! coordinator charges this as the paper's duplication transfer.
 
-use std::collections::HashMap;
-use std::path::Path;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::artifacts::{Manifest, WeightStore};
+use super::artifacts::{synthetic_artifacts, Manifest, SyntheticSpec, WeightStore};
+use super::reference::ReferenceBackend;
 use super::tensor::{HostTensor, IntTensor};
 
 /// An input to [`Engine::call`]: a named device-resident weight, a host
 /// activation tensor, or host int tensor (token ids).
+#[derive(Clone, Copy)]
 pub enum In<'a> {
     /// Device-resident weight, uploaded once via [`Engine::upload_weight`].
     W(&'a str),
@@ -28,28 +38,108 @@ pub enum In<'a> {
     I(&'a IntTensor),
 }
 
+/// Where an engine's model comes from. Cheap to clone and `Send`, so the
+/// coordinator can hand one to every worker thread.
+#[derive(Clone, Debug)]
+pub enum EngineSource {
+    /// An AOT artifacts directory (PJRT backend when the `pjrt` feature is
+    /// enabled, reference backend otherwise).
+    Artifacts(PathBuf),
+    /// In-memory synthetic weights (always the reference backend).
+    Synthetic(SyntheticSpec),
+}
+
+impl EngineSource {
+    /// Prefer on-disk artifacts; fall back to the synthetic tiny model when
+    /// `dir` holds no manifest (no python/PJRT toolchain in this build).
+    pub fn detect(dir: &Path) -> EngineSource {
+        if dir.join("manifest.json").exists() {
+            EngineSource::Artifacts(dir.to_path_buf())
+        } else {
+            EngineSource::Synthetic(SyntheticSpec::tiny())
+        }
+    }
+
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self, EngineSource::Synthetic(_))
+    }
+}
+
+enum Backend {
+    Reference(ReferenceBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtBackend),
+}
+
 pub struct Engine {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    device_weights: HashMap<String, xla::PjRtBuffer>,
     manifest: Manifest,
     weights: WeightStore,
+    backend: Backend,
+    /// Weight names currently device-resident (duplication accounting).
+    resident: HashSet<String>,
+    /// Artifact names already compiled/validated.
+    loaded: HashSet<String>,
     /// Bytes uploaded as weights (duplication-transfer accounting).
     pub weight_bytes_uploaded: u64,
 }
 
+/// The default tiny synthetic weight set, generated once per process and
+/// shared by every engine (leader + all virtual-GPU workers) via `Arc`.
+static TINY_SYNTH: OnceLock<(Manifest, WeightStore)> = OnceLock::new();
+
 impl Engine {
-    /// Create an engine over the artifacts directory.
+    /// Create an engine over an artifacts directory.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let weights = WeightStore::load(&manifest)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Engine::assemble_for_artifacts(manifest, weights)
+    }
+
+    /// Create a reference-backend engine over synthetic weights.
+    pub fn synthetic(spec: &SyntheticSpec) -> Result<Engine> {
+        let (manifest, weights) = if *spec == SyntheticSpec::tiny() {
+            TINY_SYNTH
+                .get_or_init(|| synthetic_artifacts(spec))
+                .clone()
+        } else {
+            synthetic_artifacts(spec)
+        };
+        Engine::assemble_reference(manifest, weights)
+    }
+
+    /// Create an engine from a resolved source.
+    pub fn from_source(source: &EngineSource) -> Result<Engine> {
+        match source {
+            EngineSource::Artifacts(dir) => Engine::new(dir),
+            EngineSource::Synthetic(spec) => Engine::synthetic(spec),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn assemble_for_artifacts(manifest: Manifest, weights: WeightStore) -> Result<Engine> {
         Ok(Engine {
-            client,
-            executables: HashMap::new(),
-            device_weights: HashMap::new(),
             manifest,
             weights,
+            backend: Backend::Pjrt(super::pjrt::PjrtBackend::new()?),
+            resident: HashSet::new(),
+            loaded: HashSet::new(),
+            weight_bytes_uploaded: 0,
+        })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn assemble_for_artifacts(manifest: Manifest, weights: WeightStore) -> Result<Engine> {
+        Engine::assemble_reference(manifest, weights)
+    }
+
+    fn assemble_reference(manifest: Manifest, weights: WeightStore) -> Result<Engine> {
+        let backend = Backend::Reference(ReferenceBackend::new(&manifest)?);
+        Ok(Engine {
+            manifest,
+            weights,
+            backend,
+            resident: HashSet::new(),
+            loaded: HashSet::new(),
             weight_bytes_uploaded: 0,
         })
     }
@@ -62,102 +152,71 @@ impl Engine {
         &self.weights
     }
 
-    /// Compile (and cache) an artifact by name.
+    /// Compile (and cache) an artifact by name. The reference backend
+    /// resolves ops lazily, so this only validates eagerly under PJRT.
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
+        if self.loaded.contains(name) {
             return Ok(());
         }
-        let path = self.manifest.artifact_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text for `{name}`"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling `{name}`"))?;
-        self.executables.insert(name.to_string(), exe);
+        match &mut self.backend {
+            Backend::Reference(_) => {}
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.load(&self.manifest, name)?,
+        }
+        self.loaded.insert(name.to_string());
         Ok(())
     }
 
     pub fn is_loaded(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        self.loaded.contains(name)
     }
 
     /// Upload a weight tensor to the device (no-op if already resident).
     /// Returns the bytes moved (0 if cached) — the coordinator charges this
     /// as the duplication transfer.
     pub fn upload_weight(&mut self, name: &str) -> Result<u64> {
-        if self.device_weights.contains_key(name) {
+        if self.resident.contains(name) {
             return Ok(0);
         }
-        let host = self.weights.get(name)?;
-        // NOTE: buffer_from_host_buffer copies synchronously
-        // (kImmutableOnlyDuringCall); buffer_from_host_literal transfers
-        // asynchronously and would read the literal after we drop it.
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(&host.data, &host.shape, None)?;
-        self.device_weights.insert(name.to_string(), buf);
-        let bytes = (host.data.len() * 4) as u64;
+        let bytes = match &mut self.backend {
+            Backend::Reference(_) => self.weights.nbytes(name)? as u64,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.upload_weight(&self.weights, name)?,
+        };
+        self.resident.insert(name.to_string());
         self.weight_bytes_uploaded += bytes;
         Ok(bytes)
     }
 
     /// Drop a device-resident weight (capacity eviction).
     pub fn evict_weight(&mut self, name: &str) -> bool {
-        self.device_weights.remove(name).is_some()
+        let was_resident = self.resident.remove(name);
+        #[cfg(feature = "pjrt")]
+        if let Backend::Pjrt(p) = &mut self.backend {
+            p.evict(name);
+        }
+        was_resident
     }
 
     pub fn resident_weights(&self) -> usize {
-        self.device_weights.len()
+        self.resident.len()
     }
 
-    /// Execute an artifact. Outputs are returned as host tensors (the AOT
-    /// path lowers with `return_tuple=True`, so the single result buffer is
-    /// a tuple that we decompose).
+    /// Execute an artifact. Outputs are returned as host tensors.
     pub fn call(&mut self, name: &str, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
         self.load(name)?;
-        // First pass: make sure every referenced weight is resident.
+        // Make sure every referenced weight is resident first (this is the
+        // duplication transfer when the planner routed a replica here).
         for input in inputs {
             if let In::W(weight_name) = input {
                 self.upload_weight(weight_name)?;
             }
         }
-        // Second pass: upload activations, then assemble &PjRtBuffer args
-        // (weights by reference — zero copies on the steady-state path).
-        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
-        for (i, input) in inputs.iter().enumerate() {
-            let buf = match input {
-                In::W(_) => continue,
-                In::T(t) => self
-                    .client
-                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?,
-                In::I(t) => self
-                    .client
-                    .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
-            };
-            owned.push((i, buf));
+        match &mut self.backend {
+            Backend::Reference(r) => r.call(&self.weights, name, inputs),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.call(name, inputs),
         }
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        let mut owned_iter = owned.iter().peekable();
-        for (i, input) in inputs.iter().enumerate() {
-            match input {
-                In::W(weight_name) => args.push(&self.device_weights[*weight_name]),
-                _ => {
-                    let (idx, buf) = owned_iter.next().expect("owned buffer");
-                    debug_assert_eq!(*idx, i);
-                    args.push(buf);
-                }
-            }
-        }
-        let exe = self.executables.get(name).expect("loaded above");
-        let result = exe.execute_b(&args)?;
-        let out_lit = result[0][0].to_literal_sync()?;
-        let parts = out_lit.to_tuple()?;
-        parts.iter().map(HostTensor::from_literal).collect()
     }
 }
 
@@ -216,5 +275,51 @@ mod tests {
             assert!(engine.evict_weight("layers.0.experts.0.w_gate"));
             assert!(!engine.evict_weight("layers.0.experts.0.w_gate"));
         });
+    }
+
+    #[test]
+    fn synthetic_engine_serves_the_op_set() {
+        let mut engine = Engine::synthetic(&SyntheticSpec::small_test()).unwrap();
+        assert_eq!(engine.manifest().ffn_buckets(), vec![8, 16, 32, 64]);
+        let ids = crate::runtime::tensor::IntTensor::new(vec![1, 2, 3], vec![1, 3]);
+        let x0 = engine
+            .call("embed", &[In::I(&ids), In::W("embed")])
+            .unwrap()
+            .remove(0);
+        assert_eq!(x0.shape, vec![3, 64]);
+        let h = engine
+            .call(
+                "attention",
+                &[
+                    In::T(&x0),
+                    In::W("layers.0.attn.ln"),
+                    In::W("layers.0.attn.wq"),
+                    In::W("layers.0.attn.wk"),
+                    In::W("layers.0.attn.wv"),
+                    In::W("layers.0.attn.wo"),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        assert_eq!(h.shape, vec![3, 64]);
+        let out = engine
+            .call(
+                "router",
+                &[In::T(&h), In::W("layers.0.moe.ln"), In::W("layers.0.moe.router")],
+            )
+            .unwrap();
+        assert_eq!(out[1].shape, vec![3, 8]);
+        // Upload accounting works for the reference backend too.
+        assert!(engine.weight_bytes_uploaded > 0);
+        let again = engine.upload_weight("embed").unwrap();
+        assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn engine_source_detection_falls_back_to_synthetic() {
+        let src = EngineSource::detect(Path::new("definitely/not/a/real/dir"));
+        assert!(src.is_synthetic());
+        let engine = Engine::from_source(&src).unwrap();
+        assert_eq!(engine.manifest().config.req_usize("d_model").unwrap(), 256);
     }
 }

@@ -1,21 +1,30 @@
-//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
-//! produced (`make artifacts`) and executes them on the request path.
+//! Model execution runtime: artifact manifest + weights, and two
+//! interchangeable backends behind one [`Engine`] facade (DESIGN.md §6):
 //!
-//! Python is build-time only; after artifacts exist, this module plus the
-//! `xla` crate (PJRT C API, CPU plugin) is the entire execution stack:
+//! * **reference** (default) — pure-rust ops matching the python oracle's
+//!   semantics, executing against on-disk artifacts *or* the in-memory
+//!   synthetic weight set ([`artifacts::synthetic_artifacts`]). No PJRT,
+//!   no python, no artifacts directory required.
+//! * **pjrt** (`--features pjrt`) — loads the HLO-text artifacts that
+//!   `python/compile/aot.py` produced (`make artifacts`) and executes them
+//!   through the `xla` crate (PJRT C API, CPU plugin):
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `PjRtClient::compile` → `execute_b` with device-resident weights.
+//!   HLO **text** is the interchange format — jax ≥ 0.5 serialised protos
+//!   use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids (see DESIGN.md §6).
 //!
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute_b` with device-resident weights.
-//!
-//! HLO **text** is the interchange format — jax ≥ 0.5 serialised protos
-//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//! Python is build-time only in either case: it never runs on the request
+//! path.
 
 pub mod artifacts;
 pub mod bucket;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 
-pub use artifacts::{Manifest, WeightStore};
-pub use engine::{Engine, In};
+pub use artifacts::{synthetic_artifacts, Manifest, SyntheticSpec, WeightStore};
+pub use engine::{Engine, EngineSource, In};
 pub use tensor::HostTensor;

@@ -1,0 +1,124 @@
+//! PJRT execution backend (`--features pjrt`): compiles the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` through the `xla` crate
+//! and executes them with device-resident weights:
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute_b`.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serialised protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (DESIGN.md §6). The vendored `xla` crate is a
+//! compile-only stub; swap it for the real bindings to execute artifacts.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Manifest, WeightStore};
+use super::engine::In;
+use super::tensor::HostTensor;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    device_weights: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            executables: HashMap::new(),
+            device_weights: HashMap::new(),
+        })
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for `{name}`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{name}`"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a weight tensor to a device buffer; returns the bytes moved.
+    /// Residency caching happens in the `Engine` facade.
+    pub fn upload_weight(&mut self, store: &WeightStore, name: &str) -> Result<u64> {
+        if self.device_weights.contains_key(name) {
+            return Ok(0);
+        }
+        let host = store.get(name)?;
+        // NOTE: buffer_from_host_buffer copies synchronously
+        // (kImmutableOnlyDuringCall); buffer_from_host_literal transfers
+        // asynchronously and would read the literal after we drop it.
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&host.data, &host.shape, None)?;
+        self.device_weights.insert(name.to_string(), buf);
+        Ok((host.data.len() * 4) as u64)
+    }
+
+    pub fn evict(&mut self, name: &str) -> bool {
+        self.device_weights.remove(name).is_some()
+    }
+
+    /// Execute a loaded artifact. Referenced weights must already be
+    /// resident (the `Engine` facade uploads them before dispatching here).
+    /// The AOT path lowers with `return_tuple=True`, so the single result
+    /// buffer is a tuple that we decompose.
+    pub fn call(&mut self, name: &str, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        // Upload activations, then assemble &PjRtBuffer args (weights by
+        // reference — zero copies on the steady-state path).
+        let mut owned: Vec<(usize, xla::PjRtBuffer)> = Vec::new();
+        for (i, input) in inputs.iter().enumerate() {
+            let buf = match input {
+                In::W(_) => continue,
+                In::T(t) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?,
+                In::I(t) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
+            };
+            owned.push((i, buf));
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut owned_iter = owned.iter().peekable();
+        for (i, input) in inputs.iter().enumerate() {
+            match input {
+                In::W(weight_name) => {
+                    let buf = self.device_weights.get(*weight_name).ok_or_else(|| {
+                        anyhow::anyhow!("weight `{weight_name}` not resident")
+                    })?;
+                    args.push(buf);
+                }
+                _ => {
+                    let (idx, buf) = owned_iter.next().expect("owned buffer");
+                    debug_assert_eq!(*idx, i);
+                    args.push(buf);
+                }
+            }
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not loaded"))?;
+        let result = exe.execute_b(&args)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

@@ -1,0 +1,631 @@
+//! Pure-rust reference backend: executes the tiny serving model's artifact
+//! ops directly against the [`WeightStore`], with semantics matching
+//! `python/compile/model.py` (the numerics oracle) to float tolerance.
+//!
+//! This is the default execution backend: it needs no PJRT, no artifacts
+//! directory and no python toolchain, which is what lets `moe-gps serve`
+//! and the decode-serving benches run in any build environment (DESIGN.md
+//! §6). The op set is the prefill set the AOT pipeline compiles (`embed`,
+//! `attention`, `router`, `predictor`, `expert_ffn_b*`) plus the
+//! decode-phase ops the coordinator's continuous-batching path needs
+//! (`attention_prefill` / `attention_step` with explicit KV tensors, and
+//! `lm_head` with tied embeddings).
+
+use anyhow::Result;
+
+use super::artifacts::{Manifest, WeightStore};
+use super::engine::In;
+use super::tensor::HostTensor;
+
+/// Model geometry the attention ops need, read once from the manifest.
+#[derive(Clone, Copy, Debug)]
+struct RefDims {
+    d_model: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+}
+
+pub struct ReferenceBackend {
+    dims: RefDims,
+}
+
+const RMSNORM_EPS: f32 = 1e-5;
+
+impl ReferenceBackend {
+    pub fn new(manifest: &Manifest) -> Result<ReferenceBackend> {
+        let cfg = &manifest.config;
+        let dims = RefDims {
+            d_model: cfg.req_usize("d_model")?,
+            n_heads: cfg.req_usize("n_heads")?,
+            n_kv_heads: cfg.req_usize("n_kv_heads")?,
+            head_dim: cfg.req_usize("head_dim")?,
+        };
+        anyhow::ensure!(
+            dims.d_model == dims.n_heads * dims.head_dim,
+            "reference backend requires d_model == n_heads * head_dim"
+        );
+        Ok(ReferenceBackend { dims })
+    }
+
+    /// Execute one artifact op. Input layout matches what the coordinator
+    /// sends to the PJRT backend for the same artifact name.
+    pub fn call(
+        &self,
+        weights: &WeightStore,
+        name: &str,
+        inputs: &[In<'_>],
+    ) -> Result<Vec<HostTensor>> {
+        match name {
+            "embed" => self.op_embed(weights, inputs),
+            "attention" => {
+                let (h, _, _) = self.op_attention_prefill(weights, inputs)?;
+                Ok(vec![h])
+            }
+            "attention_prefill" => {
+                let (h, k, v) = self.op_attention_prefill(weights, inputs)?;
+                Ok(vec![h, k, v])
+            }
+            "attention_step" => self.op_attention_step(weights, inputs),
+            "router" => self.op_router(weights, inputs),
+            "predictor" => self.op_predictor(weights, inputs),
+            "lm_head" => self.op_lm_head(weights, inputs),
+            other if other.starts_with("expert_ffn_b") => self.op_expert_ffn(weights, inputs),
+            other => anyhow::bail!("reference backend: unknown artifact `{other}`"),
+        }
+    }
+
+    fn op_embed(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        let ids = int_arg(inputs, 0, "embed.ids")?;
+        let table = weight_arg(weights, inputs, 1, "embed.table")?;
+        let d = self.dims.d_model;
+        let vocab = table.rows();
+        let mut data = Vec::with_capacity(ids.len() * d);
+        for &id in ids {
+            let id = (id.max(0) as usize).min(vocab - 1);
+            data.extend_from_slice(table.row(id));
+        }
+        Ok(vec![HostTensor::new(data, vec![ids.len(), d])])
+    }
+
+    /// Full-sequence causal GQA attention with residual; also returns the
+    /// K/V projections so decode can seed its cache.
+    fn op_attention_prefill(
+        &self,
+        weights: &WeightStore,
+        inputs: &[In<'_>],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let x = tensor_arg(inputs, 0, "attention.x")?;
+        let ln = weight_arg(weights, inputs, 1, "attention.ln")?;
+        let wq = weight_arg(weights, inputs, 2, "attention.wq")?;
+        let wk = weight_arg(weights, inputs, 3, "attention.wk")?;
+        let wv = weight_arg(weights, inputs, 4, "attention.wv")?;
+        let wo = weight_arg(weights, inputs, 5, "attention.wo")?;
+        let s = x.rows();
+        let d = self.dims.d_model;
+        let qw = self.dims.n_heads * self.dims.head_dim;
+        let kvw = self.dims.n_kv_heads * self.dims.head_dim;
+
+        let xn = rmsnorm(&x.data, s, d, &ln.data);
+        let q = matmul(&xn, s, d, &wq.data, qw);
+        let k = matmul(&xn, s, d, &wk.data, kvw);
+        let v = matmul(&xn, s, d, &wv.data, kvw);
+        // Queries at absolute positions 0..s over the same keys.
+        let ctx = self.attend(&q, s, &k, &v, s, 0);
+        let proj = matmul(&ctx, s, qw, &wo.data, d);
+        let mut h = x.data.clone();
+        for (a, &b) in h.iter_mut().zip(&proj) {
+            *a += b;
+        }
+        Ok((
+            HostTensor::new(h, vec![s, d]),
+            HostTensor::new(k, vec![s, kvw]),
+            HostTensor::new(v, vec![s, kvw]),
+        ))
+    }
+
+    /// Single-token decode attention over an explicit KV cache. Inputs:
+    /// `x [1,D], k_cache [T,KV], v_cache [T,KV], ln, wq, wk, wv, wo`;
+    /// outputs `(h [1,D], k_new [1,KV], v_new [1,KV])` — the caller appends
+    /// the new rows to its cache.
+    fn op_attention_step(
+        &self,
+        weights: &WeightStore,
+        inputs: &[In<'_>],
+    ) -> Result<Vec<HostTensor>> {
+        let x = tensor_arg(inputs, 0, "attention_step.x")?;
+        let k_cache = tensor_arg(inputs, 1, "attention_step.k_cache")?;
+        let v_cache = tensor_arg(inputs, 2, "attention_step.v_cache")?;
+        let ln = weight_arg(weights, inputs, 3, "attention_step.ln")?;
+        let wq = weight_arg(weights, inputs, 4, "attention_step.wq")?;
+        let wk = weight_arg(weights, inputs, 5, "attention_step.wk")?;
+        let wv = weight_arg(weights, inputs, 6, "attention_step.wv")?;
+        let wo = weight_arg(weights, inputs, 7, "attention_step.wo")?;
+        anyhow::ensure!(x.rows() == 1, "attention_step expects a single token row");
+        let d = self.dims.d_model;
+        let qw = self.dims.n_heads * self.dims.head_dim;
+        let kvw = self.dims.n_kv_heads * self.dims.head_dim;
+        let t_prev = k_cache.rows();
+
+        let xn = rmsnorm(&x.data, 1, d, &ln.data);
+        let q = matmul(&xn, 1, d, &wq.data, qw);
+        let k_new = matmul(&xn, 1, d, &wk.data, kvw);
+        let v_new = matmul(&xn, 1, d, &wv.data, kvw);
+        // Keys = cache plus the new token's own row — attended as two
+        // segments, so the cache is never copied (the naive concat would
+        // make per-token cost quadratic in context length).
+        let ctx = self.attend_step(&q, &k_cache.data, &v_cache.data, &k_new, &v_new, t_prev);
+        let proj = matmul(&ctx, 1, qw, &wo.data, d);
+        let mut h = x.data.clone();
+        for (a, &b) in h.iter_mut().zip(&proj) {
+            *a += b;
+        }
+        Ok(vec![
+            HostTensor::new(h, vec![1, d]),
+            HostTensor::new(k_new, vec![1, kvw]),
+            HostTensor::new(v_new, vec![1, kvw]),
+        ])
+    }
+
+    /// Causal GQA attention core: `sq` query rows at absolute positions
+    /// `offset..offset+sq` over `tk` key/value rows. Query row `i` attends
+    /// keys `0..=offset+i`.
+    fn attend(
+        &self,
+        q: &[f32],
+        sq: usize,
+        k_all: &[f32],
+        v_all: &[f32],
+        tk: usize,
+        offset: usize,
+    ) -> Vec<f32> {
+        let nh = self.dims.n_heads;
+        let nkv = self.dims.n_kv_heads;
+        let hd = self.dims.head_dim;
+        let group = nh / nkv;
+        let qw = nh * hd;
+        let kvw = nkv * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut ctx = vec![0.0f32; sq * qw];
+        let mut scores: Vec<f32> = Vec::with_capacity(tk);
+        for i in 0..sq {
+            let attended = (offset + i + 1).min(tk);
+            for h in 0..nh {
+                let kvh = h / group;
+                let q_vec = &q[i * qw + h * hd..i * qw + (h + 1) * hd];
+                scores.clear();
+                let mut max = f32::NEG_INFINITY;
+                for j in 0..attended {
+                    let k_vec = &k_all[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd];
+                    let dot: f32 = q_vec.iter().zip(k_vec).map(|(&a, &b)| a * b).sum();
+                    let sc = dot * scale;
+                    max = max.max(sc);
+                    scores.push(sc);
+                }
+                let mut denom = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                }
+                let out = &mut ctx[i * qw + h * hd..i * qw + (h + 1) * hd];
+                for (j, &p) in scores.iter().enumerate() {
+                    let weight = p / denom;
+                    let v_vec = &v_all[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd];
+                    for (o, &vv) in out.iter_mut().zip(v_vec) {
+                        *o += weight * vv;
+                    }
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Single-query causal GQA attention over a segmented key/value store:
+    /// `t_prev` cached rows plus the new token's own K/V row, without
+    /// materialising their concatenation.
+    fn attend_step(
+        &self,
+        q: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        k_new: &[f32],
+        v_new: &[f32],
+        t_prev: usize,
+    ) -> Vec<f32> {
+        let nh = self.dims.n_heads;
+        let nkv = self.dims.n_kv_heads;
+        let hd = self.dims.head_dim;
+        let group = nh / nkv;
+        let qw = nh * hd;
+        let kvw = nkv * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let k_row = |j: usize, kvh: usize| -> &[f32] {
+            if j < t_prev {
+                &k_cache[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd]
+            } else {
+                &k_new[kvh * hd..(kvh + 1) * hd]
+            }
+        };
+        let v_row = |j: usize, kvh: usize| -> &[f32] {
+            if j < t_prev {
+                &v_cache[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd]
+            } else {
+                &v_new[kvh * hd..(kvh + 1) * hd]
+            }
+        };
+
+        let mut ctx = vec![0.0f32; qw];
+        let mut scores: Vec<f32> = Vec::with_capacity(t_prev + 1);
+        for h in 0..nh {
+            let kvh = h / group;
+            let q_vec = &q[h * hd..(h + 1) * hd];
+            scores.clear();
+            let mut max = f32::NEG_INFINITY;
+            for j in 0..=t_prev {
+                let k_vec = k_row(j, kvh);
+                let dot: f32 = q_vec.iter().zip(k_vec).map(|(&a, &b)| a * b).sum();
+                let sc = dot * scale;
+                max = max.max(sc);
+                scores.push(sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            let out = &mut ctx[h * hd..(h + 1) * hd];
+            for (j, &p) in scores.iter().enumerate() {
+                let weight = p / denom;
+                let v_vec = v_row(j, kvh);
+                for (o, &vv) in out.iter_mut().zip(v_vec) {
+                    *o += weight * vv;
+                }
+            }
+        }
+        ctx
+    }
+
+    fn op_router(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        let h = tensor_arg(inputs, 0, "router.h")?;
+        let ln = weight_arg(weights, inputs, 1, "router.ln")?;
+        let wr = weight_arg(weights, inputs, 2, "router.w")?;
+        let s = h.rows();
+        let d = self.dims.d_model;
+        let e = wr.shape[1];
+        let xn = rmsnorm(&h.data, s, d, &ln.data);
+        let logits = matmul(&xn, s, d, &wr.data, e);
+        Ok(vec![
+            HostTensor::new(xn, vec![s, d]),
+            HostTensor::new(logits, vec![s, e]),
+        ])
+    }
+
+    fn op_predictor(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        let x0 = tensor_arg(inputs, 0, "predictor.x0")?;
+        let w1 = weight_arg(weights, inputs, 1, "predictor.w1")?;
+        let b1 = weight_arg(weights, inputs, 2, "predictor.b1")?;
+        anyhow::ensure!(inputs.len() > 3, "predictor needs at least one head");
+        let s = x0.rows();
+        let d = self.dims.d_model;
+        let hid = w1.shape[1];
+        let mut hidden = matmul(&x0.data, s, d, &w1.data, hid);
+        for i in 0..s {
+            for (hv, &bv) in hidden[i * hid..(i + 1) * hid].iter_mut().zip(&b1.data) {
+                *hv = (*hv + bv).max(0.0);
+            }
+        }
+        let n_heads = inputs.len() - 3;
+        let mut e = 0;
+        let mut out = Vec::new();
+        for l in 0..n_heads {
+            let head = weight_arg(weights, inputs, 3 + l, "predictor.head")?;
+            e = head.shape[1];
+            out.extend(matmul(&hidden, s, hid, &head.data, e));
+        }
+        Ok(vec![HostTensor::new(out, vec![n_heads, s, e])])
+    }
+
+    fn op_lm_head(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        let h = tensor_arg(inputs, 0, "lm_head.h")?;
+        let ln = weight_arg(weights, inputs, 1, "lm_head.final_ln")?;
+        let embed = weight_arg(weights, inputs, 2, "lm_head.embed")?;
+        let n = h.rows();
+        let d = self.dims.d_model;
+        let vocab = embed.rows();
+        let xn = rmsnorm(&h.data, n, d, &ln.data);
+        // Tied embeddings: logits = xn @ embed^T.
+        let mut logits = vec![0.0f32; n * vocab];
+        for i in 0..n {
+            let xrow = &xn[i * d..(i + 1) * d];
+            let orow = &mut logits[i * vocab..(i + 1) * vocab];
+            for (v, o) in orow.iter_mut().enumerate() {
+                let erow = embed.row(v);
+                *o = xrow.iter().zip(erow).map(|(&a, &b)| a * b).sum();
+            }
+        }
+        Ok(vec![HostTensor::new(logits, vec![n, vocab])])
+    }
+
+    fn op_expert_ffn(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
+        let xn = tensor_arg(inputs, 0, "expert_ffn.xn")?;
+        let wg = weight_arg(weights, inputs, 1, "expert_ffn.w_gate")?;
+        let wu = weight_arg(weights, inputs, 2, "expert_ffn.w_up")?;
+        let wd = weight_arg(weights, inputs, 3, "expert_ffn.w_down")?;
+        let t = xn.rows();
+        let d = self.dims.d_model;
+        let ff = wg.shape[1];
+        let mut gate = matmul(&xn.data, t, d, &wg.data, ff);
+        let up = matmul(&xn.data, t, d, &wu.data, ff);
+        for (g, &u) in gate.iter_mut().zip(&up) {
+            *g = silu(*g) * u;
+        }
+        let out = matmul(&gate, t, ff, &wd.data, d);
+        Ok(vec![HostTensor::new(out, vec![t, d])])
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RMSNorm over the last axis of a row-major `[m, d]` buffer.
+fn rmsnorm(x: &[f32], m: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * d];
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let scale = 1.0 / (ms + RMSNORM_EPS).sqrt();
+        for (o, (&v, &gv)) in out[i * d..(i + 1) * d].iter_mut().zip(row.iter().zip(g)) {
+            *o = v * scale * gv;
+        }
+    }
+    out
+}
+
+/// Row-major `[m,k] @ [k,n] -> [m,n]` (ikj loop order for cache locality).
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn tensor_arg<'a>(inputs: &'a [In<'_>], i: usize, what: &str) -> Result<&'a HostTensor> {
+    match inputs.get(i) {
+        Some(In::T(t)) => Ok(t),
+        _ => anyhow::bail!("reference backend: input {i} ({what}) must be a host tensor"),
+    }
+}
+
+fn int_arg<'a>(inputs: &'a [In<'_>], i: usize, what: &str) -> Result<&'a [i32]> {
+    match inputs.get(i) {
+        Some(In::I(t)) => Ok(&t.data),
+        _ => anyhow::bail!("reference backend: input {i} ({what}) must be an int tensor"),
+    }
+}
+
+fn weight_arg(
+    weights: &WeightStore,
+    inputs: &[In<'_>],
+    i: usize,
+    what: &str,
+) -> Result<HostTensor> {
+    match inputs.get(i) {
+        Some(In::W(name)) => weights.get(name),
+        _ => anyhow::bail!("reference backend: input {i} ({what}) must be a weight name"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{synthetic_artifacts, SyntheticSpec};
+    use crate::runtime::tensor::IntTensor;
+
+    fn backend() -> (ReferenceBackend, WeightStore) {
+        let (manifest, weights) = synthetic_artifacts(&SyntheticSpec::small_test());
+        (ReferenceBackend::new(&manifest).unwrap(), weights)
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        // [2,3] @ [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, 2, 3, &b, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let g = [1.0f32, 1.0];
+        let out = rmsnorm(&x, 1, 2, &g);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn expert_ffn_zero_in_zero_out() {
+        let (be, ws) = backend();
+        let x = HostTensor::zeros(&[8, 64]);
+        let out = be
+            .call(
+                &ws,
+                "expert_ffn_b8",
+                &[
+                    In::T(&x),
+                    In::W("layers.0.experts.0.w_gate"),
+                    In::W("layers.0.experts.0.w_up"),
+                    In::W("layers.0.experts.0.w_down"),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.shape, vec![8, 64]);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let (be, ws) = backend();
+        let ids = IntTensor::new(vec![5, 5, 9], vec![1, 3]);
+        let out = be
+            .call(&ws, "embed", &[In::I(&ids), In::W("embed")])
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.shape, vec![3, 64]);
+        assert_eq!(out.row(0), out.row(1));
+        assert_ne!(out.row(0), out.row(2));
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // Changing a later token must not change earlier outputs.
+        let (be, ws) = backend();
+        let args = |x: &HostTensor| {
+            vec![
+                In::T(x),
+                In::W("layers.0.attn.ln"),
+                In::W("layers.0.attn.wq"),
+                In::W("layers.0.attn.wk"),
+                In::W("layers.0.attn.wv"),
+                In::W("layers.0.attn.wo"),
+            ]
+        };
+        let mut data: Vec<f32> = (0..4 * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let x1 = HostTensor::new(data.clone(), vec![4, 64]);
+        let h1 = {
+            let a = args(&x1);
+            be.call(&ws, "attention", &a).unwrap().remove(0)
+        };
+        // Perturb the last token only.
+        for v in data[3 * 64..].iter_mut() {
+            *v += 1.0;
+        }
+        let x2 = HostTensor::new(data, vec![4, 64]);
+        let h2 = {
+            let a = args(&x2);
+            be.call(&ws, "attention", &a).unwrap().remove(0)
+        };
+        for t in 0..3 {
+            for (a, b) in h1.row(t).iter().zip(h2.row(t)) {
+                assert!((a - b).abs() < 1e-6, "token {t} leaked future info");
+            }
+        }
+        assert!(h1.row(3).iter().zip(h2.row(3)).any(|(a, b)| (a - b).abs() > 1e-4));
+    }
+
+    #[test]
+    fn decode_step_matches_prefill() {
+        // attention_prefill over [t0..t3] row 3 must equal: prefill [t0..t2]
+        // to seed the cache, then attention_step on t3.
+        let (be, ws) = backend();
+        let data: Vec<f32> = (0..4 * 64).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let x_full = HostTensor::new(data.clone(), vec![4, 64]);
+        let weight_args = [
+            In::W("layers.1.attn.ln"),
+            In::W("layers.1.attn.wq"),
+            In::W("layers.1.attn.wk"),
+            In::W("layers.1.attn.wv"),
+            In::W("layers.1.attn.wo"),
+        ];
+        let mut full_args = vec![In::T(&x_full)];
+        full_args.extend(weight_args.clone());
+        let full = be.call(&ws, "attention_prefill", &full_args).unwrap();
+        let h_full = &full[0];
+
+        let x_prefix = x_full.gather_rows(&[0, 1, 2]);
+        let mut prefix_args = vec![In::T(&x_prefix)];
+        prefix_args.extend(weight_args.clone());
+        let mut prefix = be.call(&ws, "attention_prefill", &prefix_args).unwrap();
+        let v_cache = prefix.remove(2);
+        let k_cache = prefix.remove(1);
+
+        let x_last = x_full.gather_rows(&[3]);
+        let mut step_args = vec![In::T(&x_last), In::T(&k_cache), In::T(&v_cache)];
+        step_args.extend(weight_args);
+        let step = be.call(&ws, "attention_step", &step_args).unwrap();
+        let h_step = &step[0];
+        for (a, b) in h_full.row(3).iter().zip(h_step.row(0)) {
+            assert!((a - b).abs() < 1e-5, "decode step diverged: {a} vs {b}");
+        }
+        // The returned K row must match the full-prefill K at position 3.
+        for (a, b) in full[1].row(3).iter().zip(step[1].row(0)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn router_outputs_norm_and_logits() {
+        let (be, ws) = backend();
+        let x = HostTensor::new((0..2 * 64).map(|i| i as f32 * 0.01).collect(), vec![2, 64]);
+        let out = be
+            .call(
+                &ws,
+                "router",
+                &[In::T(&x), In::W("layers.0.moe.ln"), In::W("layers.0.moe.router")],
+            )
+            .unwrap();
+        assert_eq!(out[0].shape, vec![2, 64]);
+        assert_eq!(out[1].shape, vec![2, 8]);
+    }
+
+    #[test]
+    fn predictor_shape_is_layers_tokens_experts() {
+        let (be, ws) = backend();
+        let x = HostTensor::new(vec![0.1; 3 * 64], vec![3, 64]);
+        let out = be
+            .call(
+                &ws,
+                "predictor",
+                &[
+                    In::T(&x),
+                    In::W("predictor.w1"),
+                    In::W("predictor.b1"),
+                    In::W("predictor.head.0"),
+                    In::W("predictor.head.1"),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.shape, vec![2, 3, 8]);
+    }
+
+    #[test]
+    fn lm_head_prefers_embedding_aligned_token() {
+        let (be, ws) = backend();
+        // Hidden state equal to a token's embedding row should score that
+        // token highly (tied embeddings).
+        let embed = ws.get("embed").unwrap();
+        let target = 17usize;
+        let h = HostTensor::new(embed.row(target).to_vec(), vec![1, 64]);
+        let logits = be
+            .call(&ws, "lm_head", &[In::T(&h), In::W("final.ln"), In::W("embed")])
+            .unwrap()
+            .remove(0);
+        assert_eq!(logits.shape, vec![1, 512]);
+        let argmax = logits
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, target);
+    }
+}

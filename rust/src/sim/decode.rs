@@ -1,0 +1,448 @@
+//! Decode-phase (autoregressive) cost model — the serving regime the
+//! paper's prefill figures do not cover, and where production MoE traffic
+//! actually lives (DESIGN.md §5).
+//!
+//! A decode step routes **one token per active sequence**, so the expert
+//! FFN runs in the *memory-bound* regime: with a handful of tokens per
+//! expert, each expert GEMM's time is dominated by streaming its weight
+//! matrices from HBM, not by arithmetic — so skew barely moves FFN time
+//! (compare the compute-bound prefill roofline, where the hot GPU's FFN
+//! scales linearly with skew). What skew still scales is the all-to-all,
+//! and what hurts Token-to-Expert is that its predictor runs on **every
+//! step's brand-new tokens**: the per-step overhead has a launch-bound
+//! floor that does not shrink with the tiny decode batch, while the step
+//! itself is short. Distribution-Only's estimate is free to read and its
+//! replanning amortises across `replan_interval` steps
+//! (`docs/adr/001-decode-prediction-cadence.md`), which is why "Prediction
+//! Is All MoE Needs" (arXiv 2404.16914) observes decode-phase load
+//! stabilise — the regime favours DOP even more than prefill.
+
+use super::attention::AttentionCost;
+use super::collective;
+use super::error_model::ErrorModel;
+use super::ffn;
+use super::hardware::SystemSpec;
+use super::layer::LayerBreakdown;
+use super::moe::{MoeCost, Strategy};
+use super::roofline;
+use crate::model::ModelConfig;
+
+/// Inputs to the decode-step MoE simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeParams {
+    /// Concurrently decoding sequences (1 new token each per step).
+    pub batch: usize,
+    /// Mean context length (KV-cache depth) across the batch.
+    pub ctx_len: usize,
+    /// Workload skewness (≥ 1).
+    pub skewness: f64,
+    pub strategy: Strategy,
+    pub error_model: ErrorModel,
+    /// Algorithm-1 replanning cadence in steps (ADR 001): duplication
+    /// transfers amortise across it for Distribution-Only. Token-to-Expert
+    /// replans per step (its predictions cover only this step's tokens),
+    /// so its movement never amortises — and its predictor overhead is
+    /// charged in full every step regardless of this knob.
+    pub replan_interval: usize,
+    /// If true (default) expert-duplication transfers are hidden under
+    /// attention; if false their excess is charged (ablation, as prefill).
+    pub hide_duplication: bool,
+    pub attention_compute_s: f64,
+}
+
+impl DecodeParams {
+    pub fn new(batch: usize, ctx_len: usize, skewness: f64, strategy: Strategy) -> DecodeParams {
+        DecodeParams {
+            batch,
+            ctx_len,
+            skewness,
+            strategy,
+            error_model: ErrorModel::Typical,
+            replan_interval: 1,
+            hide_duplication: true,
+            attention_compute_s: 0.0,
+        }
+    }
+}
+
+/// Simulate the MoE stage of one decode step for one layer.
+pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParams) -> MoeCost {
+    let n = system.n_devices;
+    // One token per sequence; each occupies top_k expert slots.
+    let slots = p.batch * model.top_k;
+    let bytes_per_token = model.d_model as f64 * model.dtype.bytes() as f64;
+    let skew = p.skewness.max(1.0);
+
+    // Balanced reference: slots spread evenly over experts; every local
+    // expert with work streams its full weights (the memory-bound floor).
+    let balanced_ffn = ffn::balanced_device_ffn_time(model, &system.device, slots, n);
+    // Hot device under skew: its experts hold `skew ×` the balanced token
+    // share. In this regime the weight-stream term dominates, so this is
+    // nearly flat in skew — the decode-phase contrast with prefill.
+    let experts_local = (model.n_experts / n).max(1);
+    let per_expert_balanced = slots / model.n_experts.max(1);
+    let per_expert_hot =
+        ((per_expert_balanced as f64 * skew).ceil() as usize).max(per_expert_balanced);
+    let skewed_ffn =
+        ffn::device_ffn_time(model, &system.device, &vec![per_expert_hot; experts_local]);
+
+    let balanced_a2a = collective::ep_all_to_all_time(
+        &system.interconnect,
+        n,
+        slots as f64,
+        bytes_per_token,
+        1.0,
+    );
+    let skewed_a2a = collective::ep_all_to_all_time(
+        &system.interconnect,
+        n,
+        slots as f64,
+        bytes_per_token,
+        skew,
+    );
+
+    let mut cost = MoeCost::default();
+    match p.strategy {
+        Strategy::NoPrediction => {
+            cost.ffn_s = skewed_ffn;
+            cost.scatter_s = skewed_a2a;
+            cost.gather_s = skewed_a2a;
+        }
+        Strategy::DistributionOnly { error_rate } => {
+            let mult = p.error_model.load_multiplier(error_rate, n);
+            // Token counts rebalance; residual error inflates the hot
+            // expert's token count, but stays on the memory-bound floor.
+            let per_expert_dop = ((per_expert_balanced as f64 * mult).ceil() as usize)
+                .max(per_expert_balanced.max(1));
+            cost.ffn_s =
+                ffn::device_ffn_time(model, &system.device, &vec![per_expert_dop; experts_local])
+                    .min(skewed_ffn)
+                    .max(balanced_ffn);
+            // Communication unchanged vs baseline (§4), as in prefill.
+            cost.scatter_s = skewed_a2a;
+            cost.gather_s = skewed_a2a;
+            cost.movement_s = movement_cost(model, system, p, p.replan_interval);
+        }
+        Strategy::TokenToExpert { accuracy, overhead_s } => {
+            let eps = (1.0 - accuracy).clamp(0.0, 1.0);
+            let mult = p.error_model.load_multiplier(eps, n);
+            let per_expert_tep = ((per_expert_balanced as f64 * mult).ceil() as usize)
+                .max(per_expert_balanced.max(1));
+            cost.ffn_s =
+                ffn::device_ffn_time(model, &system.device, &vec![per_expert_tep; experts_local])
+                    .min(skewed_ffn)
+                    .max(balanced_ffn);
+            // Correct predictions skip the shuffle; mispredictions take a
+            // correction hop (always the typical model, §3.3).
+            cost.scatter_s = balanced_a2a * eps;
+            cost.gather_s = balanced_a2a * eps;
+            // The decode-phase crux: every step routes brand-new tokens,
+            // so the predictor runs — and is paid — every step.
+            cost.overhead_s = overhead_s;
+            // TEP replans per step: movement never amortises.
+            cost.movement_s = movement_cost(model, system, p, 1);
+        }
+    }
+    cost
+}
+
+/// Expert-movement cost not hidden under attention, amortised over the
+/// replanning cadence.
+fn movement_cost(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    p: &DecodeParams,
+    amortise_steps: usize,
+) -> f64 {
+    if p.hide_duplication {
+        return 0.0;
+    }
+    let transfer = collective::p2p_time(&system.interconnect, model.expert_bytes());
+    (transfer - p.attention_compute_s).max(0.0) / amortise_steps.max(1) as f64
+}
+
+/// Decode-step attention for one layer: tiny matvec projections plus a
+/// KV-cache sweep that is memory-bandwidth-bound (the decode regime's
+/// second memory wall, alongside expert-weight streaming).
+pub fn decode_attention_cost(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    batch: usize,
+    ctx_len: usize,
+) -> AttentionCost {
+    let dev = &system.device;
+    let n = system.n_devices;
+    let dtype = model.dtype;
+    let heads_local = (model.n_heads / n).max(1);
+    let kv_heads_local = (model.n_kv_heads / n).max(1);
+    let q_width = heads_local * model.head_dim;
+    let kv_width = 2 * kv_heads_local * model.head_dim;
+
+    let mut cost = AttentionCost::default();
+    cost.qkv_proj_s = roofline::gemm_time(dev, batch, q_width + kv_width, model.d_model, dtype);
+    cost.rope_s = roofline::rope_time(dev, batch, q_width, dtype);
+
+    // Scores: each new token attends its whole context. Compute is a
+    // matvec per head (vector units — no MXU tiles at m=1); memory is the
+    // K-cache read. The max of the two is the roofline.
+    let score_flops =
+        2.0 * batch as f64 * heads_local as f64 * ctx_len as f64 * model.head_dim as f64;
+    let k_bytes = batch as f64
+        * ctx_len as f64
+        * (kv_heads_local * model.head_dim) as f64
+        * dtype.bytes() as f64;
+    let sweep = |flops: f64, bytes: f64| -> f64 {
+        let compute_s = flops / (dev.peak_vector_tflops * 1e12);
+        let memory_s = bytes / (dev.mem_bw_gbs * 1e9);
+        compute_s.max(memory_s) + dev.kernel_launch_s
+    };
+    cost.scores_s = sweep(score_flops, k_bytes);
+    cost.softmax_s = roofline::softmax_time(dev, batch * heads_local, ctx_len, dtype);
+    // PV: identical flop count over the V cache.
+    cost.pv_s = sweep(score_flops, k_bytes);
+    cost.out_proj_s = roofline::gemm_time(dev, batch, model.d_model, q_width, dtype);
+
+    let bytes = batch as f64 * model.d_model as f64 * dtype.bytes() as f64;
+    cost.allreduce_s = super::collective::ring_allreduce_time(&system.interconnect, n, bytes);
+    cost
+}
+
+/// A configured decode-step simulation (the decode analogue of
+/// [`super::LayerSim`]).
+#[derive(Clone, Debug)]
+pub struct DecodeSim {
+    pub model: ModelConfig,
+    pub system: SystemSpec,
+    /// Concurrently decoding sequences.
+    pub batch: usize,
+    /// Mean context length.
+    pub ctx_len: usize,
+    pub error_model: ErrorModel,
+    pub hide_duplication: bool,
+    pub replan_interval: usize,
+}
+
+impl DecodeSim {
+    /// Default decode setting: a 16-sequence continuous batch at context
+    /// 512 (the prefill figures' sequence length, now as KV depth).
+    pub fn new(model: ModelConfig, system: SystemSpec) -> DecodeSim {
+        DecodeSim {
+            model,
+            system,
+            batch: 16,
+            ctx_len: 512,
+            error_model: ErrorModel::Typical,
+            hide_duplication: true,
+            replan_interval: 1,
+        }
+    }
+
+    pub fn with_workload(mut self, batch: usize, ctx_len: usize) -> DecodeSim {
+        self.batch = batch;
+        self.ctx_len = ctx_len;
+        self
+    }
+
+    pub fn attention(&self) -> AttentionCost {
+        decode_attention_cost(&self.model, &self.system, self.batch, self.ctx_len)
+    }
+
+    /// Router on the step's new tokens only.
+    pub fn router_time(&self) -> f64 {
+        let gemm = roofline::gemm_time(
+            &self.system.device,
+            self.batch,
+            self.model.n_experts,
+            self.model.d_model,
+            self.model.dtype,
+        );
+        let topk = roofline::elementwise_time(
+            &self.system.device,
+            self.batch * self.model.n_experts,
+            3.0,
+            1,
+            self.model.dtype,
+        );
+        gemm + topk
+    }
+
+    fn moe(&self, skewness: f64, strategy: Strategy, attention_compute_s: f64) -> MoeCost {
+        let mut p = DecodeParams::new(self.batch, self.ctx_len, skewness, strategy);
+        p.error_model = self.error_model;
+        p.hide_duplication = self.hide_duplication;
+        p.attention_compute_s = attention_compute_s;
+        p.replan_interval = self.replan_interval;
+        decode_moe_cost(&self.model, &self.system, &p)
+    }
+
+    /// Per-layer breakdown of one decode step. `overhead_s` is the
+    /// whole-step predictor cost (the TEP predictor emits all layers'
+    /// predictions in one pass, §3.1) — [`Self::step_total`] counts it
+    /// once, not per layer.
+    pub fn step_breakdown(&self, skewness: f64, strategy: Strategy) -> LayerBreakdown {
+        let attn = self.attention();
+        let moe = self.moe(skewness, strategy, attn.compute());
+        LayerBreakdown {
+            attention_s: attn.compute(),
+            allreduce_s: attn.allreduce_s,
+            router_s: self.router_time(),
+            ffn_s: moe.ffn_s,
+            scatter_s: moe.scatter_s,
+            gather_s: moe.gather_s,
+            overhead_s: moe.overhead_s,
+            movement_s: moe.movement_s,
+        }
+    }
+
+    /// Full-step latency: all layers, predictor overhead charged once.
+    pub fn step_total(&self, skewness: f64, strategy: Strategy) -> f64 {
+        let b = self.step_breakdown(skewness, strategy);
+        (b.total() - b.overhead_s) * self.model.n_layers as f64 + b.overhead_s
+    }
+
+    pub fn baseline_step(&self, skewness: f64) -> f64 {
+        self.step_total(skewness, Strategy::NoPrediction)
+    }
+
+    /// Steady-state decode throughput (tokens/s) for the whole model.
+    pub fn tokens_per_s(&self, skewness: f64, strategy: Strategy) -> f64 {
+        self.batch as f64 / self.step_total(skewness, strategy)
+    }
+
+    /// baseline_step / step (≥ 1 means the strategy helps).
+    pub fn normalized_performance(&self, skewness: f64, strategy: Strategy) -> f64 {
+        self.baseline_step(skewness) / self.step_total(skewness, strategy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{LayerSim, SystemSpec};
+
+    fn mixtral_nvlink() -> (ModelConfig, SystemSpec) {
+        (ModelConfig::mixtral_8x7b(), SystemSpec::four_a100_nvlink())
+    }
+
+    #[test]
+    fn decode_ffn_is_memory_bound_flat_in_skew() {
+        let (m, s) = mixtral_nvlink();
+        let at = |skew| {
+            decode_moe_cost(
+                &m,
+                &s,
+                &DecodeParams::new(16, 512, skew, Strategy::NoPrediction),
+            )
+        };
+        let flat_ratio = at(2.0).ffn_s / at(1.0).ffn_s;
+        assert!(
+            flat_ratio < 1.3,
+            "decode FFN should be ~flat in skew (weight streaming dominates), got {flat_ratio}"
+        );
+        // Prefill contrast: the same skew doubles the compute-bound FFN.
+        let sim = LayerSim::new(m, s);
+        let p1 = sim.breakdown(1.0, Strategy::NoPrediction).ffn_s;
+        let p2 = sim.breakdown(2.0, Strategy::NoPrediction).ffn_s;
+        assert!((p2 / p1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_comm_still_scales_with_skew() {
+        let (m, s) = mixtral_nvlink();
+        let at = |skew| {
+            decode_moe_cost(
+                &m,
+                &s,
+                &DecodeParams::new(16, 512, skew, Strategy::NoPrediction),
+            )
+        };
+        assert!(at(3.0).comm_s() > at(1.0).comm_s() * 1.5);
+    }
+
+    #[test]
+    fn tep_overhead_charged_every_step_regardless_of_cadence() {
+        let (m, s) = mixtral_nvlink();
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-3,
+        };
+        let mut p = DecodeParams::new(16, 512, 1.4, strategy);
+        let every_step = decode_moe_cost(&m, &s, &p).overhead_s;
+        p.replan_interval = 32;
+        let with_cadence = decode_moe_cost(&m, &s, &p).overhead_s;
+        assert_eq!(every_step, with_cadence, "prediction cannot amortise in decode");
+        assert_eq!(every_step, 1e-3);
+    }
+
+    #[test]
+    fn dop_movement_amortises_with_replan_cadence() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = DecodeParams::new(
+            16,
+            512,
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        p.hide_duplication = false;
+        p.attention_compute_s = 0.0;
+        let per_step = decode_moe_cost(&m, &s, &p).movement_s;
+        assert!(per_step > 0.0);
+        p.replan_interval = 8;
+        let amortised = decode_moe_cost(&m, &s, &p).movement_s;
+        assert!((per_step / amortised - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_attention_memory_bound_in_context() {
+        let (m, s) = mixtral_nvlink();
+        let short = decode_attention_cost(&m, &s, 16, 256);
+        let long = decode_attention_cost(&m, &s, 16, 4096);
+        // KV sweep grows ~linearly with context (sublinear only through
+        // the fixed kernel-launch term).
+        assert!(long.scores_s > short.scores_s * 4.0);
+        // Projections do not depend on context.
+        assert!((long.qkv_proj_s - short.qkv_proj_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_total_counts_overhead_once() {
+        let (m, s) = mixtral_nvlink();
+        let sim = DecodeSim::new(m.clone(), s);
+        let overhead = 5e-3;
+        let with = sim.step_total(
+            1.4,
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: overhead,
+            },
+        );
+        let without = sim.step_total(
+            1.4,
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: 0.0,
+            },
+        );
+        assert!(((with - without) - overhead).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dop_normalized_perf_at_least_one_in_decode() {
+        let (m, s) = mixtral_nvlink();
+        let sim = DecodeSim::new(m, s);
+        let perf = sim.normalized_performance(
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.018 },
+        );
+        assert!(perf >= 1.0 - 1e-9, "perf={perf}");
+    }
+
+    #[test]
+    fn tokens_per_s_sane_magnitude() {
+        let (m, s) = mixtral_nvlink();
+        let sim = DecodeSim::new(m, s);
+        let tps = sim.tokens_per_s(1.4, Strategy::NoPrediction);
+        // 16 sequences on 4×A100 Mixtral: order 10–10k tok/s.
+        assert!(tps > 10.0 && tps < 100_000.0, "tps={tps}");
+    }
+}

@@ -22,6 +22,7 @@
 
 pub mod attention;
 pub mod collective;
+pub mod decode;
 pub mod error_model;
 pub mod ffn;
 pub mod hardware;
@@ -29,6 +30,7 @@ pub mod layer;
 pub mod moe;
 pub mod roofline;
 
+pub use decode::{DecodeParams, DecodeSim};
 pub use error_model::ErrorModel;
 pub use hardware::{DeviceSpec, InterconnectSpec, SystemSpec};
 pub use layer::{LayerBreakdown, LayerSim};

@@ -1,0 +1,188 @@
+//! Offline mini-`anyhow`: the subset of the `anyhow` crate this project
+//! uses, re-implemented with no dependencies so the repo builds without a
+//! crates.io registry (the build image has no network — see DESIGN.md §6).
+//!
+//! Implemented surface: [`Error`], [`Result`], the [`Context`] trait
+//! (`.context(...)` / `.with_context(...)` on `Result` and `Option`), and
+//! the `anyhow!` / `bail!` / `ensure!` macros. `{err}` prints the outermost
+//! message; `{err:#}` prints the whole context chain separated by `: `,
+//! matching real anyhow's alternate formatting.
+
+use std::fmt;
+
+/// A context-chain error. `chain[0]` is the outermost (most recent)
+/// message; the root cause is last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion from
+// every std error type coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        // Preserve the source chain as context entries.
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let err: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{err}"), "reading manifest");
+        assert_eq!(format!("{err:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with flag {}", fail);
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        let err = inner(true).unwrap_err();
+        assert_eq!(err.to_string(), "failed with flag true");
+        let err2 = anyhow!("x = {}", 3);
+        assert_eq!(err2.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        assert_eq!(Some(1u8).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let err: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{err:#}"), "step 2: no such file");
+    }
+}

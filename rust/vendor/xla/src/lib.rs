@@ -1,0 +1,122 @@
+//! Compile-only stub of the `xla` crate (PJRT C API bindings).
+//!
+//! The real PJRT backend needs `xla_extension`-based bindings that are not
+//! present in every build image. This stub mirrors exactly the API surface
+//! `moe_gps`'s `runtime::pjrt` module uses, so `--features pjrt` always
+//! *compiles*; every entry point returns [`Error::Unavailable`] at runtime.
+//! Build images that ship the real bindings replace the `vendor/xla` path
+//! dependency (see DESIGN.md §6).
+
+use std::fmt;
+
+/// Stub error: the backend is not linked in this build.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT backend unavailable: built against the stub `xla` crate \
+             (vendor/xla); install the real xla bindings to execute artifacts"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker for element types transferable to device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable)
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
