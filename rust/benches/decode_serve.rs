@@ -7,6 +7,7 @@
 //! environment. Also micro-benchmarks the scheduler hot paths and the
 //! decode-regime analytical model.
 
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
 use moe_gps::bench::{black_box, group, Bencher};
 use moe_gps::coordinator::request::RequestGen;
 use moe_gps::coordinator::{Coordinator, DecodeOptions, Scheduler, ServeStrategy};
@@ -71,6 +72,7 @@ fn main() {
     group("E2E continuous-batching decode (4 virtual GPUs, 8 seqs)");
     let artifacts = std::path::PathBuf::from("artifacts");
     let mut results: Vec<(&str, f64)> = Vec::new();
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
     for strategy in [
         ServeStrategy::NoPrediction,
         ServeStrategy::DistributionOnly,
@@ -95,6 +97,16 @@ fn main() {
         let report = coord.serve_decode(requests, &opts).unwrap();
         println!("  {}", report.summary());
         results.push((strategy.name(), report.steady_state_tokens_per_s()));
+        records.push(ServeBenchRecord {
+            bench: "decode_serve/e2e".into(),
+            strategy: strategy.name().into(),
+            lookahead: false,
+            tokens_per_s: report.steady_state_tokens_per_s(),
+            hidden_transfer_ns: report.total_hidden_transfer_s() * 1e9,
+            exposed_transfer_ns: report.total_exposed_transfer_s() * 1e9,
+            hidden_bytes: report.total_hidden_upload_bytes(),
+            exposed_bytes: report.total_exposed_upload_bytes(),
+        });
     }
     let baseline = results
         .iter()
@@ -112,5 +124,12 @@ fn main() {
             "\n  steady-state DOP vs baseline: {ratio:.3}x  [{}]",
             if ratio >= 1.0 { "PASS: DOP >= baseline" } else { "WARN: below baseline this run" }
         );
+    }
+
+    // Machine-readable trajectory (merged with pipeline_overlap's records).
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("  wrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("  WARN: could not write {}: {err}", path.display()),
     }
 }

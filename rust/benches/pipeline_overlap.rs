@@ -1,0 +1,143 @@
+//! Bench: **lookahead overlap** (ADR 002) — the unified layer pipeline
+//! with async expert pre-warming, off vs on, on the real coordinator.
+//!
+//! Reports steady-state decode tokens/sec for Distribution-Only in both
+//! regimes (acceptance: lookahead ≥ no-lookahead), the hidden-vs-exposed
+//! duplication-transfer split from a cold start, and the analytical
+//! overlap cost model alongside. Results are appended to
+//! `BENCH_serve.json` (merged by bench/strategy/lookahead) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Runs against on-disk artifacts when present, otherwise the synthetic
+//! tiny model (reference backend) — so it works in every build
+//! environment.
+
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
+use moe_gps::bench::group;
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, DecodeOptions, ServeStrategy};
+use moe_gps::model::ModelConfig;
+use moe_gps::sim::moe::Strategy;
+use moe_gps::sim::{DecodeSim, LayerSim, SystemSpec};
+
+fn main() {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
+
+    group("E2E decode: DOP with lookahead off vs on (4 vGPUs, 8 seqs)");
+    let mut steady = [0.0f64; 2];
+    for (idx, lookahead) in [false, true].into_iter().enumerate() {
+        let mut coord =
+            Coordinator::new(&artifacts, 4, ServeStrategy::DistributionOnly).unwrap();
+        coord.lookahead = lookahead;
+        coord.placement.replan_interval = 4;
+        let mut gen = RequestGen::new(11, coord.vocab());
+        // Cold run: weights stream in here, so this is where the
+        // hidden-vs-exposed transfer split is visible.
+        let cold_requests: Vec<_> = (0..4).map(|_| gen.decode_request(16, 8)).collect();
+        let cold = coord
+            .serve_decode(cold_requests, &DecodeOptions::default())
+            .unwrap();
+        // Measured run: weights resident → pure steady-state throughput.
+        let requests: Vec<_> = (0..8).map(|_| gen.decode_request(16, 24)).collect();
+        let opts = DecodeOptions {
+            max_active: 8,
+            max_steps: 64,
+            temperature: 1.0,
+            seed: 17,
+            arrival_interval: 0,
+        };
+        let report = coord.serve_decode(requests, &opts).unwrap();
+        println!("  lookahead={}: {}", u8::from(lookahead), report.summary());
+        println!(
+            "    cold-start transfer: hidden {} B / exposed {} B  \
+             (hidden {:.1} us worker time, exposed {:.1} us leader stall)",
+            cold.total_hidden_upload_bytes(),
+            cold.total_exposed_upload_bytes(),
+            cold.total_hidden_transfer_s() * 1e6,
+            cold.total_exposed_transfer_s() * 1e6,
+        );
+        steady[idx] = report.steady_state_tokens_per_s();
+        records.push(ServeBenchRecord {
+            bench: "pipeline_overlap/decode_dop".into(),
+            strategy: "distribution-only".into(),
+            lookahead,
+            tokens_per_s: report.steady_state_tokens_per_s(),
+            hidden_transfer_ns: cold.total_hidden_transfer_s() * 1e9,
+            exposed_transfer_ns: cold.total_exposed_transfer_s() * 1e9,
+            hidden_bytes: cold.total_hidden_upload_bytes(),
+            exposed_bytes: cold.total_exposed_upload_bytes(),
+        });
+    }
+    let ratio = if steady[0] > 0.0 { steady[1] / steady[0] } else { 0.0 };
+    println!(
+        "\n  steady-state DOP lookahead vs baseline: {ratio:.3}x  [{}]",
+        if ratio >= 1.0 {
+            "PASS: lookahead >= no-lookahead"
+        } else {
+            "WARN: below no-lookahead this run"
+        }
+    );
+
+    group("E2E prefill: DOP round with lookahead (hidden-transfer check)");
+    {
+        let mut coord =
+            Coordinator::new(&artifacts, 4, ServeStrategy::DistributionOnly).unwrap();
+        coord.lookahead = true;
+        let mut gen = RequestGen::new(7, coord.vocab());
+        let max_len = coord.seq_len();
+        // Two rounds teach the estimators the synthetic trace's skew; the
+        // third round duplicates hot experts and prewarms the replicas.
+        let mut last_hidden = 0u64;
+        for round in 0..3 {
+            let requests: Vec<_> =
+                (0..4).map(|_| gen.request_varlen(max_len / 4, max_len)).collect();
+            let (m, _) = coord.serve_round(&requests).unwrap();
+            println!(
+                "  round {round}: replicas_added={} transfer hidden {} B / exposed {} B",
+                m.replicas_added, m.hidden_upload_bytes, m.exposed_upload_bytes
+            );
+            last_hidden = m.hidden_upload_bytes.max(last_hidden);
+        }
+        println!(
+            "  hidden duplication transfer observed: {} [{}]",
+            last_hidden,
+            if last_hidden > 0 { "PASS: > 0 bytes hidden" } else { "WARN: nothing hidden" }
+        );
+    }
+
+    group("analytical overlap cost model (Mixtral 8x7B, 4xA100)");
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let tep = Strategy::TokenToExpert {
+        accuracy: 0.9,
+        overhead_s: 100e-6,
+    };
+    for (name, sim_total, overlapped_total) in [
+        (
+            "prefill tep",
+            LayerSim::new(model.clone(), system.clone()).breakdown(1.4, tep).total(),
+            LayerSim::new(model.clone(), system.clone())
+                .with_overlap(true)
+                .breakdown(1.4, tep)
+                .total(),
+        ),
+        (
+            "decode  tep",
+            DecodeSim::new(model.clone(), system.clone()).step_total(1.4, tep),
+            DecodeSim::new(model, system).with_overlap(true).step_total(1.4, tep),
+        ),
+    ] {
+        println!(
+            "    model: {name}  plain={}  overlap={}",
+            moe_gps::util::human_time(sim_total),
+            moe_gps::util::human_time(overlapped_total),
+        );
+    }
+
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("\nWARN: could not write {}: {err}", path.display()),
+    }
+}

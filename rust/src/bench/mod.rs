@@ -131,6 +131,165 @@ pub fn group(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable serving-bench results (`BENCH_serve.json`), so the
+/// perf trajectory is tracked across PRs: each record carries the bench
+/// name, prediction strategy, lookahead regime, steady-state tokens/sec,
+/// and the hidden-vs-exposed duplication-transfer split (ADR 002).
+/// Writers merge by (bench, strategy, lookahead), so `decode_serve` and
+/// `pipeline_overlap` can share one file without clobbering each other.
+pub mod emit {
+    use std::path::{Path, PathBuf};
+
+    use crate::util::json::Value;
+
+    pub const DEFAULT_PATH: &str = "BENCH_serve.json";
+    pub const SCHEMA: &str = "moe-gps/serve-bench/v1";
+
+    /// One serving-bench measurement.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct ServeBenchRecord {
+        pub bench: String,
+        pub strategy: String,
+        pub lookahead: bool,
+        pub tokens_per_s: f64,
+        /// Worker nanoseconds spent on overlapped duplication transfers.
+        pub hidden_transfer_ns: f64,
+        /// Leader nanoseconds stalled on duplication transfers.
+        pub exposed_transfer_ns: f64,
+        pub hidden_bytes: u64,
+        pub exposed_bytes: u64,
+    }
+
+    impl ServeBenchRecord {
+        fn key(&self) -> (String, String, bool) {
+            (self.bench.clone(), self.strategy.clone(), self.lookahead)
+        }
+
+        fn to_json(&self) -> Value {
+            let mut v = Value::obj();
+            v.set("bench", Value::Str(self.bench.clone()))
+                .set("strategy", Value::Str(self.strategy.clone()))
+                .set("lookahead", Value::Bool(self.lookahead))
+                .set("tokens_per_s", Value::Num(self.tokens_per_s))
+                .set("hidden_transfer_ns", Value::Num(self.hidden_transfer_ns))
+                .set("exposed_transfer_ns", Value::Num(self.exposed_transfer_ns))
+                .set("hidden_bytes", Value::Num(self.hidden_bytes as f64))
+                .set("exposed_bytes", Value::Num(self.exposed_bytes as f64));
+            v
+        }
+
+        fn from_json(v: &Value) -> Option<ServeBenchRecord> {
+            Some(ServeBenchRecord {
+                bench: v.get("bench")?.as_str()?.to_string(),
+                strategy: v.get("strategy")?.as_str()?.to_string(),
+                lookahead: v.get("lookahead")?.as_bool()?,
+                tokens_per_s: v.get("tokens_per_s")?.as_f64()?,
+                hidden_transfer_ns: v.get("hidden_transfer_ns")?.as_f64()?,
+                exposed_transfer_ns: v.get("exposed_transfer_ns")?.as_f64()?,
+                hidden_bytes: v.get("hidden_bytes")?.as_f64()? as u64,
+                exposed_bytes: v.get("exposed_bytes")?.as_f64()? as u64,
+            })
+        }
+    }
+
+    /// Where the serving benches write their results: `$BENCH_SERVE_JSON`
+    /// or `BENCH_serve.json` in the working directory (`rust/` under
+    /// `cargo bench`).
+    pub fn bench_json_path() -> PathBuf {
+        std::env::var("BENCH_SERVE_JSON")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(DEFAULT_PATH))
+    }
+
+    /// Read the records currently on disk (empty on a missing or
+    /// unparseable file — the trajectory starts fresh rather than erroring).
+    pub fn read_serve_benches(path: &Path) -> Vec<ServeBenchRecord> {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return Vec::new();
+        };
+        let Ok(v) = Value::parse(&text) else {
+            return Vec::new();
+        };
+        v.get("results")
+            .and_then(Value::as_arr)
+            .map(|arr| arr.iter().filter_map(ServeBenchRecord::from_json).collect())
+            .unwrap_or_default()
+    }
+
+    /// Merge-write: replaces on-disk records with the same (bench,
+    /// strategy, lookahead) key and keeps the rest, so independent bench
+    /// binaries accumulate into one trajectory file.
+    pub fn record_serve_benches(
+        path: &Path,
+        records: &[ServeBenchRecord],
+    ) -> std::io::Result<()> {
+        let mut merged = read_serve_benches(path);
+        merged.retain(|r| !records.iter().any(|n| n.key() == r.key()));
+        merged.extend(records.iter().cloned());
+        merged.sort_by_key(|r| r.key());
+        let mut root = Value::obj();
+        root.set("schema", Value::Str(SCHEMA.into())).set(
+            "results",
+            Value::Arr(merged.iter().map(ServeBenchRecord::to_json).collect()),
+        );
+        std::fs::write(path, root.to_string_pretty())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn record(bench: &str, strategy: &str, lookahead: bool, tps: f64) -> ServeBenchRecord {
+            ServeBenchRecord {
+                bench: bench.into(),
+                strategy: strategy.into(),
+                lookahead,
+                tokens_per_s: tps,
+                hidden_transfer_ns: 123.0,
+                exposed_transfer_ns: 456.0,
+                hidden_bytes: 7,
+                exposed_bytes: 8,
+            }
+        }
+
+        #[test]
+        fn round_trips_and_merges_by_key() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_bench_emit_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            record_serve_benches(
+                &path,
+                &[record("a", "dop", false, 1.0), record("a", "dop", true, 2.0)],
+            )
+            .unwrap();
+            // Same keys overwrite; new key accumulates.
+            record_serve_benches(
+                &path,
+                &[record("a", "dop", true, 3.0), record("b", "tep", false, 4.0)],
+            )
+            .unwrap();
+            let mut got = read_serve_benches(&path);
+            got.sort_by_key(|r| r.key());
+            assert_eq!(got.len(), 3);
+            assert_eq!(got[0], record("a", "dop", false, 1.0));
+            assert_eq!(got[1], record("a", "dop", true, 3.0));
+            assert_eq!(got[2], record("b", "tep", false, 4.0));
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(text.contains(SCHEMA));
+            let _ = std::fs::remove_file(&path);
+        }
+
+        #[test]
+        fn unreadable_file_reads_empty() {
+            let path = std::env::temp_dir().join("moe_gps_bench_emit_missing.json");
+            let _ = std::fs::remove_file(&path);
+            assert!(read_serve_benches(&path).is_empty());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

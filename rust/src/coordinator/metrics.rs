@@ -22,8 +22,19 @@ pub struct RoundMetrics {
     pub worker_busy_s: Vec<f64>,
     /// Token-slots processed per worker.
     pub worker_slots: Vec<usize>,
-    /// Duplication-transfer bytes per worker.
+    /// Total duplication-transfer bytes (= hidden + exposed).
     pub upload_bytes: u64,
+    /// Transfer bytes whose upload completed under the lookahead overlap
+    /// window (prewarm acks that arrived before the FFN phase needed the
+    /// weights — ADR 002).
+    pub hidden_upload_bytes: u64,
+    /// Transfer bytes that landed on the critical path: prewarm acks the
+    /// FFN phase had to block on, plus cold uploads inside `WorkerMsg::Run`.
+    pub exposed_upload_bytes: u64,
+    /// Worker seconds spent on transfers that were overlapped (hidden).
+    pub hidden_transfer_s: f64,
+    /// Leader wall seconds stalled waiting on transfers (exposed).
+    pub exposed_transfer_s: f64,
     /// Replicas added by the planner this round.
     pub replicas_added: usize,
     /// Observed routing skewness averaged over layers.
@@ -109,11 +120,27 @@ impl ServeReport {
         self.rounds.iter().map(|r| r.upload_bytes).sum()
     }
 
+    pub fn total_hidden_upload_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.hidden_upload_bytes).sum()
+    }
+
+    pub fn total_exposed_upload_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.exposed_upload_bytes).sum()
+    }
+
+    pub fn total_hidden_transfer_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.hidden_transfer_s).sum()
+    }
+
+    pub fn total_exposed_transfer_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.exposed_transfer_s).sum()
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "strategy={:<18} rounds={:<3} tokens={:<6} throughput={:>9.1} tok/s  \
              mean latency={}  p95={}  ffn wall={}  slot imbalance={:.3}  \
-             busy imbalance={:.3}  dup transfer={}",
+             busy imbalance={:.3}  dup transfer={} (hidden {} / exposed {})",
             self.strategy,
             self.rounds.len(),
             self.total_tokens(),
@@ -124,6 +151,8 @@ impl ServeReport {
             self.mean_slot_imbalance(),
             self.mean_busy_imbalance(),
             crate::util::human_bytes(self.total_upload_bytes() as f64),
+            crate::util::human_bytes(self.total_hidden_upload_bytes() as f64),
+            crate::util::human_bytes(self.total_exposed_upload_bytes() as f64),
         )
     }
 }
@@ -148,7 +177,17 @@ pub struct DecodeStepMetrics {
     pub total_s: f64,
     pub worker_busy_s: Vec<f64>,
     pub worker_slots: Vec<usize>,
+    /// Total duplication-transfer bytes (= hidden + exposed).
     pub upload_bytes: u64,
+    /// Transfer bytes overlapped by the lookahead prewarm (ADR 002).
+    pub hidden_upload_bytes: u64,
+    /// Transfer bytes on the critical path (blocked-on prewarms + cold
+    /// uploads inside `WorkerMsg::Run`).
+    pub exposed_upload_bytes: u64,
+    /// Worker seconds spent on overlapped transfers.
+    pub hidden_transfer_s: f64,
+    /// Leader wall seconds stalled waiting on transfers.
+    pub exposed_transfer_s: f64,
     pub replicas_added: usize,
     pub routing_skew: f64,
     /// Whether the duplication plan was rebuilt this step (replan cadence).
@@ -244,6 +283,22 @@ impl DecodeReport {
         self.steps.iter().map(|s| s.upload_bytes).sum()
     }
 
+    pub fn total_hidden_upload_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.hidden_upload_bytes).sum()
+    }
+
+    pub fn total_exposed_upload_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.exposed_upload_bytes).sum()
+    }
+
+    pub fn total_hidden_transfer_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.hidden_transfer_s).sum()
+    }
+
+    pub fn total_exposed_transfer_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.exposed_transfer_s).sum()
+    }
+
     pub fn replan_count(&self) -> usize {
         self.steps.iter().filter(|s| s.replanned).count()
     }
@@ -252,7 +307,8 @@ impl DecodeReport {
         format!(
             "strategy={:<18} steps={:<4} decoded={:<6} throughput={:>8.1} tok/s  \
              steady={:>8.1} tok/s ({} steps)  mean step={}  p95={}  \
-             slot imbalance={:.3}  replans={}  dup transfer={}",
+             slot imbalance={:.3}  replans={}  dup transfer={} \
+             (hidden {} / exposed {})",
             self.strategy,
             self.steps.len(),
             self.total_decode_tokens(),
@@ -264,6 +320,8 @@ impl DecodeReport {
             self.mean_slot_imbalance(),
             self.replan_count(),
             crate::util::human_bytes(self.total_upload_bytes() as f64),
+            crate::util::human_bytes(self.total_hidden_upload_bytes() as f64),
+            crate::util::human_bytes(self.total_exposed_upload_bytes() as f64),
         )
     }
 }
@@ -334,5 +392,43 @@ mod tests {
         assert!((rep.steady_state_tokens_per_s() - 40.0).abs() < 1e-9);
         assert!((rep.decode_tokens_per_s() - 10.0).abs() < 1e-9);
         assert!(rep.summary().contains("steady"));
+    }
+
+    #[test]
+    fn hidden_and_exposed_transfer_aggregate() {
+        let mut rep = DecodeReport {
+            strategy: "test".into(),
+            steps: Vec::new(),
+        };
+        for step in 0..2 {
+            rep.steps.push(DecodeStepMetrics {
+                step,
+                upload_bytes: 100,
+                hidden_upload_bytes: 60,
+                exposed_upload_bytes: 40,
+                hidden_transfer_s: 0.5,
+                exposed_transfer_s: 0.25,
+                ..Default::default()
+            });
+        }
+        assert_eq!(rep.total_upload_bytes(), 200);
+        assert_eq!(rep.total_hidden_upload_bytes(), 120);
+        assert_eq!(rep.total_exposed_upload_bytes(), 80);
+        assert!((rep.total_hidden_transfer_s() - 1.0).abs() < 1e-12);
+        assert!((rep.total_exposed_transfer_s() - 0.5).abs() < 1e-12);
+        assert!(rep.summary().contains("hidden"));
+
+        let round = RoundMetrics {
+            upload_bytes: 10,
+            hidden_upload_bytes: 10,
+            ..Default::default()
+        };
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![round],
+        };
+        assert_eq!(serve.total_hidden_upload_bytes(), 10);
+        assert_eq!(serve.total_exposed_upload_bytes(), 0);
+        assert!(serve.summary().contains("hidden"));
     }
 }

@@ -5,7 +5,9 @@
 //! dynamic expert duplication (Algorithm 1), quota dispatch — runs on the
 //! batch hot path in [`placement_mgr`] and [`server`].
 //!
-//! Two serving modes (DESIGN.md §4):
+//! Two serving modes (DESIGN.md §4) over one stage-based layer engine
+//! ([`pipeline`], ADR 002 — including the lookahead overlap that hides
+//! duplication transfers and next-layer planning under compute):
 //!
 //! * **prefill rounds** — [`Batcher`] closes rounds of whole sequences;
 //!   one `serve_round` call runs everything once (the paper's Figure-3
@@ -22,6 +24,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod placement_mgr;
 pub mod request;
 pub mod router;

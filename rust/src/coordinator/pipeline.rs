@@ -1,0 +1,1008 @@
+//! The unified layer-pipeline serving engine (ADR 002).
+//!
+//! Prefill rounds and continuous-batching decode steps run the same
+//! per-layer stage sequence; only the attention form differs:
+//!
+//! ```text
+//! embed → [predict → plan] → per layer:
+//!     prewarm(L+1) → attention(L) → router(L) →
+//!     [settle needed prewarms] → dispatch/ffn(L) → combine(L) → observe(L)
+//! ```
+//!
+//! * `embed` stays with the caller ([`Coordinator::serve_round`] /
+//!   `decode_step`), which also owns phase-specific state (KV caches,
+//!   sampling).
+//! * `predict → plan` is [`Coordinator::build_plans`]: one shared stage
+//!   covering all three strategies and the decode replan cadence.
+//! * The per-layer loop is [`Coordinator::run_layers`], parameterised by
+//!   [`AttentionMode`] (whole-sequence attention vs KV-cache incremental).
+//!
+//! **Lookahead overlap** (`Coordinator::lookahead`): while layer `L` runs
+//! attention on the leader, the already-built plan for layer `L+1` is
+//! pushed to the workers as non-blocking [`WorkerMsg::Prewarm`] messages,
+//! so replica weight uploads stream while the leader computes instead of
+//! stalling the FFN phase on first use. The settle point is *selective*
+//! ([`Prewarmer::settle_for`]): the FFN phase blocks only on prewarms for
+//! the (worker, expert) pairs its dispatch actually routed work to —
+//! warming the rest of the placement never barriers the pipeline — and
+//! every transferred byte is accounted as *hidden* (ack arrived before
+//! any dispatch needed it) or *exposed* (the FFN phase had to block, or
+//! the worker uploaded cold inside `Run`) — the split `metrics.rs`
+//! reports and `sim/` prices (`lookahead_overlap`). With
+//! `parallel_attention` on, prewarms are issued *after* the attention
+//! fan-out instead, so transfers queue behind attention work on the
+//! shared worker queues rather than ahead of it.
+//!
+//! **Determinism contract**: the combine stage buffers every expert-FFN
+//! output row and accumulates `gate · out` in *global slot order*. Each
+//! slot's FFN row depends only on its own activation row (the reference
+//! backend's matmuls are row-independent, and bucket padding rows are
+//! zero), so the final hidden states are bitwise independent of reply
+//! arrival order, dispatch grouping, prediction strategy, and lookahead —
+//! the property `tests/pipeline_parity.rs` pins down.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::{DecodeStepMetrics, RoundMetrics};
+use super::placement_mgr::LayerPlan;
+use super::router::{expert_counts, route_sequence, Slot};
+use super::server::{Coordinator, SeqSession, ServeStrategy, StepSeq};
+use super::worker::{pad_to_bucket, ResidentSets, WorkerHandle, WorkerMsg, WorkerResult};
+use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
+use crate::runtime::bucket::split_into_buckets;
+use crate::runtime::{HostTensor, In};
+use crate::util::stats;
+
+/// §Perf iteration 1: groups smaller than this fold into the same
+/// expert's largest group (a runt split costs a whole padded-bucket FFN
+/// call for negligible balance gain).
+pub const MIN_GROUP: usize = 16;
+
+/// Timings and counters the per-layer loop produces, independent of the
+/// serving phase; the caller copies them into [`RoundMetrics`] or
+/// [`DecodeStepMetrics`].
+#[derive(Clone, Debug)]
+pub struct StageMetrics {
+    pub attention_s: f64,
+    pub router_s: f64,
+    pub ffn_wall_s: f64,
+    pub n_slots: usize,
+    pub worker_busy_s: Vec<f64>,
+    pub worker_slots: Vec<usize>,
+    /// Total duplication-transfer bytes (= hidden + exposed).
+    pub upload_bytes: u64,
+    /// Bytes whose transfer completed under the lookahead window.
+    pub hidden_upload_bytes: u64,
+    /// Bytes transferred on the critical path (blocked-on prewarms plus
+    /// cold uploads inside `WorkerMsg::Run`).
+    pub exposed_upload_bytes: u64,
+    /// Worker seconds spent on overlapped transfers.
+    pub hidden_transfer_s: f64,
+    /// Leader wall seconds stalled waiting on transfers.
+    pub exposed_transfer_s: f64,
+    /// Mean per-layer routing skewness.
+    pub routing_skew: f64,
+    skews: Vec<f64>,
+}
+
+impl StageMetrics {
+    pub fn new(n_workers: usize) -> StageMetrics {
+        StageMetrics {
+            attention_s: 0.0,
+            router_s: 0.0,
+            ffn_wall_s: 0.0,
+            n_slots: 0,
+            worker_busy_s: vec![0.0; n_workers],
+            worker_slots: vec![0; n_workers],
+            upload_bytes: 0,
+            hidden_upload_bytes: 0,
+            exposed_upload_bytes: 0,
+            hidden_transfer_s: 0.0,
+            exposed_transfer_s: 0.0,
+            routing_skew: 0.0,
+            skews: Vec::new(),
+        }
+    }
+
+    fn finish(&mut self) {
+        self.routing_skew = stats::mean(&self.skews);
+    }
+
+    /// Both metric families share the pipeline's field names; one body
+    /// serves both so a new stage metric cannot silently reach only one
+    /// report family.
+    fn apply_to(
+        &self,
+        attention_s: &mut f64,
+        router_s: &mut f64,
+        ffn_wall_s: &mut f64,
+        n_slots: &mut usize,
+        worker_busy_s: &mut [f64],
+        worker_slots: &mut [usize],
+        upload_bytes: &mut u64,
+        hidden_upload_bytes: &mut u64,
+        exposed_upload_bytes: &mut u64,
+        hidden_transfer_s: &mut f64,
+        exposed_transfer_s: &mut f64,
+        routing_skew: &mut f64,
+    ) {
+        *attention_s += self.attention_s;
+        *router_s += self.router_s;
+        *ffn_wall_s += self.ffn_wall_s;
+        *n_slots += self.n_slots;
+        for (w, &b) in self.worker_busy_s.iter().enumerate() {
+            worker_busy_s[w] += b;
+        }
+        for (w, &s) in self.worker_slots.iter().enumerate() {
+            worker_slots[w] += s;
+        }
+        *upload_bytes += self.upload_bytes;
+        *hidden_upload_bytes += self.hidden_upload_bytes;
+        *exposed_upload_bytes += self.exposed_upload_bytes;
+        *hidden_transfer_s += self.hidden_transfer_s;
+        *exposed_transfer_s += self.exposed_transfer_s;
+        *routing_skew = self.routing_skew;
+    }
+
+    pub fn apply_to_round(&self, m: &mut RoundMetrics) {
+        self.apply_to(
+            &mut m.attention_s,
+            &mut m.router_s,
+            &mut m.ffn_wall_s,
+            &mut m.n_slots,
+            &mut m.worker_busy_s,
+            &mut m.worker_slots,
+            &mut m.upload_bytes,
+            &mut m.hidden_upload_bytes,
+            &mut m.exposed_upload_bytes,
+            &mut m.hidden_transfer_s,
+            &mut m.exposed_transfer_s,
+            &mut m.routing_skew,
+        );
+    }
+
+    pub fn apply_to_step(&self, m: &mut DecodeStepMetrics) {
+        self.apply_to(
+            &mut m.attention_s,
+            &mut m.router_s,
+            &mut m.ffn_wall_s,
+            &mut m.n_slots,
+            &mut m.worker_busy_s,
+            &mut m.worker_slots,
+            &mut m.upload_bytes,
+            &mut m.hidden_upload_bytes,
+            &mut m.exposed_upload_bytes,
+            &mut m.hidden_transfer_s,
+            &mut m.exposed_transfer_s,
+            &mut m.routing_skew,
+        );
+    }
+}
+
+/// Output of the shared predict → plan stage.
+pub struct PlanStage {
+    pub plans: Vec<LayerPlan>,
+    /// Prediction time (the TEP predictor forward; 0 for the others).
+    pub predictor_s: f64,
+    /// Algorithm-1 planning time (was folded into `predictor_s` pre-ADR-002).
+    pub plan_s: f64,
+    /// Whether plans were rebuilt (always true outside the decode cadence).
+    pub replanned: bool,
+    pub replicas_added: usize,
+}
+
+/// How the attention stage runs — the one phase-specific part of the
+/// per-layer loop.
+pub(crate) enum AttentionMode<'a> {
+    /// Whole-sequence attention via the `attention` op (prefill rounds);
+    /// `parallel` fans sequences out to the workers (§Perf iteration 2).
+    Full { parallel: bool },
+    /// KV-cache attention (decode steps): `attention_prefill` seeds the
+    /// cache for newly admitted sequences, `attention_step` extends it.
+    Cached {
+        sessions: &'a mut BTreeMap<u64, SeqSession>,
+        workload: &'a [StepSeq],
+    },
+}
+
+impl Coordinator {
+    /// Stage: predict + plan, shared by every serving phase. `decode_step`
+    /// engages the replan cadence for Distribution-Only (ADR 001); `None`
+    /// (prefill) always replans.
+    pub(crate) fn build_plans(
+        &mut self,
+        hidden: &[HostTensor],
+        n_real: &[usize],
+        decode_step: Option<usize>,
+    ) -> Result<PlanStage> {
+        let n_layers = self.dims.n_layers;
+        let top_k = self.dims.top_k;
+        let t0 = Instant::now();
+        let mut predictor_s = 0.0;
+        let mut replanned = true;
+        let plans: Vec<LayerPlan> = match self.strategy {
+            ServeStrategy::NoPrediction => {
+                replanned = false;
+                (0..n_layers).map(|_| self.placement.static_plan()).collect()
+            }
+            ServeStrategy::DistributionOnly => {
+                let total_slots: usize = n_real.iter().map(|&n| n * top_k).sum();
+                match decode_step {
+                    Some(step) => {
+                        replanned = self.placement.replans_at(step);
+                        self.placement.decode_plans(step, total_slots)
+                    }
+                    None => (0..n_layers)
+                        .map(|l| self.placement.plan_distribution_only(l, total_slots))
+                        .collect(),
+                }
+            }
+            ServeStrategy::TokenToExpert => {
+                let tp = Instant::now();
+                let counts = self.predict_counts(hidden, n_real)?;
+                predictor_s = tp.elapsed().as_secs_f64();
+                counts
+                    .iter()
+                    .map(|c| self.placement.plan_from_counts(c))
+                    .collect()
+            }
+        };
+        Ok(PlanStage {
+            replicas_added: plans.iter().map(|p| p.added.len()).sum(),
+            plans,
+            predictor_s,
+            plan_s: (t0.elapsed().as_secs_f64() - predictor_s).max(0.0),
+            replanned,
+        })
+    }
+
+    /// The unified per-layer pipeline: attention → router → [settle
+    /// prewarms] → dispatch/FFN/combine → observe, with next-layer
+    /// prewarms issued ahead of attention when lookahead is on.
+    pub(crate) fn run_layers(
+        &mut self,
+        mode: &mut AttentionMode<'_>,
+        hidden: &mut [HostTensor],
+        n_real: &[usize],
+        plans: &[LayerPlan],
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        let n_layers = self.dims.n_layers;
+        debug_assert_eq!(plans.len(), n_layers);
+        // With worker-offloaded attention the Attention messages share the
+        // workers' serial queues: prewarms enqueued first would sit *ahead*
+        // of attention work and put the transfer on the attention critical
+        // path. Issue prewarms after the attention fan-out in that mode;
+        // with leader attention (the default, and all decode steps) the
+        // workers are idle during attention, which is exactly the window
+        // the transfers should fill.
+        let issue_before_attention =
+            !matches!(mode, AttentionMode::Full { parallel: true });
+        let mut prewarmer = if self.lookahead {
+            let mut pw = Prewarmer::new();
+            if issue_before_attention {
+                // Layer 0's weights stream while layer 0's attention runs.
+                pw.issue(&self.workers, &mut self.warmed, 0, &plans[0]);
+            }
+            Some(pw)
+        } else {
+            None
+        };
+
+        for layer in 0..n_layers {
+            // Stage: prewarm — fire upcoming replica uploads so they
+            // stream under this layer's leader-side compute.
+            if let Some(pw) = prewarmer.as_mut() {
+                if issue_before_attention {
+                    if layer + 1 < n_layers {
+                        pw.issue(
+                            &self.workers,
+                            &mut self.warmed,
+                            layer + 1,
+                            &plans[layer + 1],
+                        );
+                    }
+                }
+            }
+
+            // Stage: attention.
+            let t0 = Instant::now();
+            self.attention_stage(mode, layer, hidden)?;
+            metrics.attention_s += t0.elapsed().as_secs_f64();
+
+            // Parallel-attention mode: prewarm this layer (and the next)
+            // only now, so transfers queue behind attention, not ahead.
+            if let Some(pw) = prewarmer.as_mut() {
+                if !issue_before_attention {
+                    pw.issue(&self.workers, &mut self.warmed, layer, &plans[layer]);
+                    if layer + 1 < n_layers {
+                        pw.issue(
+                            &self.workers,
+                            &mut self.warmed,
+                            layer + 1,
+                            &plans[layer + 1],
+                        );
+                    }
+                }
+            }
+
+            // Stage: router (fused RMSNorm + logits) + rust top-k.
+            let t0 = Instant::now();
+            let (normed, slots) = self.router_stage(layer, hidden, n_real)?;
+            let actual_counts = expert_counts(&slots, self.dims.n_experts);
+            metrics.skews.push(stats::skewness_of_counts(&actual_counts));
+            metrics.n_slots += slots.len();
+            metrics.router_s += t0.elapsed().as_secs_f64();
+
+            // Stage: dispatch + expert FFN + combine (settles only the
+            // prewarms this layer's dispatch actually needs).
+            self.ffn_stage(
+                layer,
+                &plans[layer],
+                &slots,
+                &normed,
+                hidden,
+                prewarmer.as_mut(),
+                metrics,
+            )?;
+
+            // Stage: observe actual routing (the §3.2.1 moving average
+            // keeps teaching the DOP estimators while serving).
+            self.placement.observe(layer, &actual_counts);
+        }
+        // Drain stragglers so every transferred byte is accounted.
+        if let Some(pw) = prewarmer.as_mut() {
+            pw.finish(metrics)?;
+        }
+        metrics.finish();
+        Ok(())
+    }
+
+    /// One layer of attention in either mode.
+    fn attention_stage(
+        &mut self,
+        mode: &mut AttentionMode<'_>,
+        layer: usize,
+        hidden: &mut [HostTensor],
+    ) -> Result<()> {
+        let attn_names = attn_weight_names(layer);
+        match mode {
+            AttentionMode::Full { parallel } => {
+                // Sequences spread across the virtual GPUs (§Perf
+                // iteration 2); single-sequence rounds stay on the leader
+                // to avoid a round-trip.
+                if !*parallel || hidden.len() == 1 {
+                    for h in hidden.iter_mut() {
+                        let out = self
+                            .leader
+                            .call(
+                                "attention",
+                                &[
+                                    In::T(h),
+                                    In::W(&attn_names[0]),
+                                    In::W(&attn_names[1]),
+                                    In::W(&attn_names[2]),
+                                    In::W(&attn_names[3]),
+                                    In::W(&attn_names[4]),
+                                ],
+                            )?
+                            .remove(0);
+                        *h = out;
+                    }
+                } else {
+                    let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
+                    for (seq_idx, h) in hidden.iter().enumerate() {
+                        let worker = seq_idx % self.workers.len();
+                        self.workers[worker].send(WorkerMsg::Attention {
+                            tag: seq_idx as u64,
+                            layer,
+                            x: h.clone(),
+                            reply: attn_tx.clone(),
+                        });
+                    }
+                    drop(attn_tx);
+                    for _ in 0..hidden.len() {
+                        let r = attn_rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("attention worker channel closed"))?;
+                        if let Some(err) = &r.error {
+                            anyhow::bail!("attention on worker {} failed: {err}", r.worker);
+                        }
+                        let shape = hidden[r.tag as usize].shape.clone();
+                        hidden[r.tag as usize] = HostTensor::new(r.out, shape);
+                    }
+                }
+            }
+            AttentionMode::Cached { sessions, workload } => {
+                // Full-sequence for prefill rows (seeding the KV cache),
+                // incremental over the cache for decode rows. Decode
+                // attention stays on the leader: single-row matvecs cost
+                // less than a worker round-trip (§Perf iteration 2).
+                for (i, ws) in workload.iter().enumerate() {
+                    let sess = sessions.get_mut(&ws.id).expect("session exists");
+                    if ws.prefill {
+                        let mut out = self.leader.call(
+                            "attention_prefill",
+                            &[
+                                In::T(&hidden[i]),
+                                In::W(&attn_names[0]),
+                                In::W(&attn_names[1]),
+                                In::W(&attn_names[2]),
+                                In::W(&attn_names[3]),
+                                In::W(&attn_names[4]),
+                            ],
+                        )?;
+                        let v = out.remove(2);
+                        let k = out.remove(1);
+                        hidden[i] = out.remove(0);
+                        sess.kv[layer] = Some((k, v));
+                    } else {
+                        let (k_cache, v_cache) =
+                            sess.kv[layer].as_ref().expect("decode sequence has KV");
+                        let mut out = self.leader.call(
+                            "attention_step",
+                            &[
+                                In::T(&hidden[i]),
+                                In::T(k_cache),
+                                In::T(v_cache),
+                                In::W(&attn_names[0]),
+                                In::W(&attn_names[1]),
+                                In::W(&attn_names[2]),
+                                In::W(&attn_names[3]),
+                                In::W(&attn_names[4]),
+                            ],
+                        )?;
+                        let v_new = out.remove(2);
+                        let k_new = out.remove(1);
+                        hidden[i] = out.remove(0);
+                        let (k_cache, v_cache) =
+                            sess.kv[layer].as_mut().expect("decode sequence has KV");
+                        k_cache.append_rows(&k_new);
+                        v_cache.append_rows(&v_new);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One layer of router + top-k: returns the normed activations and
+    /// the routed slots (identical for both serving phases).
+    fn router_stage(
+        &mut self,
+        layer: usize,
+        hidden: &[HostTensor],
+        n_real: &[usize],
+    ) -> Result<(Vec<HostTensor>, Vec<Slot>)> {
+        let e = self.dims.n_experts;
+        let ln = format!("layers.{layer}.moe.ln");
+        let wr = format!("layers.{layer}.moe.router");
+        let mut normed: Vec<HostTensor> = Vec::with_capacity(hidden.len());
+        let mut slots: Vec<Slot> = Vec::new();
+        for (seq_idx, h) in hidden.iter().enumerate() {
+            let mut out = self
+                .leader
+                .call("router", &[In::T(h), In::W(&ln), In::W(&wr)])?;
+            let logits = out.remove(1);
+            let xn = out.remove(0);
+            slots.extend(route_sequence(
+                seq_idx,
+                &logits.data,
+                e,
+                n_real[seq_idx],
+                self.dims.top_k,
+            ));
+            normed.push(xn);
+        }
+        Ok((normed, slots))
+    }
+
+    /// Dispatch routed slots to the virtual-GPU workers under `plan`, run
+    /// the expert FFNs, and combine `gate · expert_out` into `hidden` in
+    /// global slot order (see the module-level determinism contract).
+    fn ffn_stage(
+        &mut self,
+        layer: usize,
+        plan: &LayerPlan,
+        slots: &[Slot],
+        normed: &[HostTensor],
+        hidden: &mut [HostTensor],
+        prewarmer: Option<&mut Prewarmer>,
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        let d = self.dims.d_model;
+        if slots.is_empty() {
+            return Ok(());
+        }
+
+        let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
+        let (assignment, _loads) = if plan.share.is_empty() {
+            dispatch_tokens(&experts, &plan.placement)
+        } else {
+            dispatch_with_quota(&experts, &plan.placement, &plan.share)
+        };
+
+        let t0 = Instant::now();
+        let mut groups = group_slots_by_assignment(&assignment, slots);
+        merge_runt_groups(&mut groups, MIN_GROUP);
+        let placed = lpt_place(groups, plan, self.workers.len(), &self.buckets);
+
+        // Settle the prewarm acks this dispatch depends on (hidden vs
+        // exposed); unneeded prewarms keep streaming in the background.
+        if let Some(pw) = prewarmer {
+            pw.settle_for(layer, &placed, metrics)?;
+        }
+
+        let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
+        let mut outstanding = 0usize;
+        // Slot-order metadata for scattering results back.
+        let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut msg_tag = 0u64;
+        for ((worker, expert), slot_indices) in &placed {
+            // Gather the normed activations for these slots.
+            let mut data = Vec::with_capacity(slot_indices.len() * d);
+            for &si in slot_indices {
+                let slot = &slots[si];
+                data.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
+            }
+            let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
+            // Oversized groups split across bucket-sized chunks.
+            let mut offset = 0usize;
+            for (chunk, _bucket) in split_into_buckets(&self.buckets, xn.rows()) {
+                let rows: Vec<usize> = (offset..offset + chunk).collect();
+                let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
+                msg_tag += 1;
+                group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
+                self.workers[*worker].send(WorkerMsg::Run {
+                    tag: msg_tag,
+                    layer,
+                    expert: *expert,
+                    xn: tile,
+                    n_real: chunk,
+                    reply: reply_tx.clone(),
+                });
+                outstanding += 1;
+                metrics.worker_slots[*worker] += chunk;
+                offset += chunk;
+            }
+        }
+        drop(reply_tx);
+
+        // Collect every tile's rows into a per-slot buffer first …
+        let mut slot_out = vec![0.0f32; slots.len() * d];
+        let mut received = 0usize;
+        while received < outstanding {
+            let result = reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+            received += 1;
+            if let Some(err) = &result.error {
+                anyhow::bail!("worker {} failed: {err}", result.worker);
+            }
+            metrics.worker_busy_s[result.worker] += result.exec_s;
+            // Cold uploads at Run time stall the FFN call: exposed.
+            metrics.upload_bytes += result.upload_bytes;
+            metrics.exposed_upload_bytes += result.upload_bytes;
+            let slot_indices = &group_slots[&result.tag];
+            debug_assert_eq!(result.n_real, slot_indices.len());
+            for (row, &si) in slot_indices.iter().enumerate() {
+                slot_out[si * d..(si + 1) * d]
+                    .copy_from_slice(&result.out[row * d..(row + 1) * d]);
+            }
+        }
+        // … then combine h += gate · out in global slot order, so numerics
+        // are independent of arrival order, grouping and strategy.
+        for (si, slot) in slots.iter().enumerate() {
+            let out_row = &slot_out[si * d..(si + 1) * d];
+            let h = &mut hidden[slot.seq_idx];
+            let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
+            for (a, &b) in dst.iter_mut().zip(out_row) {
+                *a += slot.gate * b;
+            }
+        }
+        metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Run the AOT Token-to-Expert predictor on every sequence's
+    /// embeddings (§3.1: before attention) and count predicted slots per
+    /// (layer, expert). `hidden[i]` holds `≥ n_real[i]` embedded rows.
+    pub(crate) fn predict_counts(
+        &mut self,
+        hidden: &[HostTensor],
+        n_real: &[usize],
+    ) -> Result<Vec<Vec<usize>>> {
+        let e = self.dims.n_experts;
+        let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
+        let head_names: Vec<String> = (0..self.dims.n_layers)
+            .map(|l| format!("predictor.head.{l}"))
+            .collect();
+        for (seq, &n) in hidden.iter().zip(n_real) {
+            let s_rows = seq.rows();
+            let mut ins: Vec<In<'_>> = vec![
+                In::T(seq),
+                In::W("predictor.w1"),
+                In::W("predictor.b1"),
+            ];
+            for name in &head_names {
+                ins.push(In::W(name));
+            }
+            let logits = self.leader.call("predictor", &ins)?.remove(0);
+            // logits [L, S, E]: argmax per (layer, real token).
+            for l in 0..self.dims.n_layers {
+                for t in 0..n.min(s_rows) {
+                    let base = (l * s_rows + t) * e;
+                    let row = &logits.data[base..base + e];
+                    let arg = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    // Each token occupies top_k slots; scale the predicted
+                    // count accordingly.
+                    counts[l][arg] += self.dims.top_k;
+                }
+            }
+        }
+        Ok(counts)
+    }
+}
+
+/// In-flight lookahead prewarms: issued per layer ahead of that layer's
+/// compute, settled selectively just before the FFN phase dispatches.
+///
+/// Settling only blocks on the (worker, expert) pairs the layer's
+/// dispatch actually routed work to — prewarms of experts that received
+/// no tokens this layer keep streaming in the background and are drained
+/// (as hidden) whenever their acks show up, so warming the whole
+/// placement never barriers the pipeline.
+struct Prewarmer {
+    tx: mpsc::Sender<WorkerResult>,
+    rx: mpsc::Receiver<WorkerResult>,
+    /// In-flight (worker, layer, expert) prewarms not yet acked.
+    pending: std::collections::HashSet<(usize, usize, usize)>,
+}
+
+/// The Prewarmer keeps its own `tx` alive (it clones it per message), so
+/// — unlike the FFN reply channel, which drops its sender before the recv
+/// loop — a dead worker cannot surface as a channel disconnect here.
+/// Blocking waits therefore use a generous timeout instead of `recv()`,
+/// turning a lost ack (worker thread died, message dropped on a closed
+/// queue) into an error rather than a permanent hang.
+const PREWARM_ACK_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl Prewarmer {
+    fn new() -> Prewarmer {
+        let (tx, rx) = mpsc::channel();
+        Prewarmer {
+            tx,
+            rx,
+            pending: std::collections::HashSet::new(),
+        }
+    }
+
+    fn recv_ack(&self) -> Result<WorkerResult> {
+        self.rx.recv_timeout(PREWARM_ACK_TIMEOUT).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => anyhow::anyhow!(
+                "prewarm ack timed out after {PREWARM_ACK_TIMEOUT:?} \
+                 (worker dead?)"
+            ),
+            mpsc::RecvTimeoutError::Disconnected => {
+                anyhow::anyhow!("prewarm channel closed")
+            }
+        })
+    }
+
+    /// Fire non-blocking prewarms for every (expert, worker) of the plan
+    /// not already resident on that worker; the coordinator-side
+    /// [`ResidentSets`] gates re-sends.
+    fn issue(
+        &mut self,
+        workers: &[WorkerHandle],
+        warmed: &mut ResidentSets,
+        layer: usize,
+        plan: &LayerPlan,
+    ) {
+        for &(expert, gpu) in plan.placement.pairs() {
+            if warmed.insert(gpu, layer, expert) {
+                workers[gpu].send(WorkerMsg::Prewarm {
+                    tag: layer as u64,
+                    layer,
+                    expert,
+                    reply: self.tx.clone(),
+                });
+                self.pending.insert((gpu, layer, expert));
+            }
+        }
+    }
+
+    /// Account acks before the FFN phase dispatches: everything already in
+    /// the channel was fully overlapped (hidden); acks for pairs this
+    /// layer's dispatch *needs* are blocked on (exposed bytes + stall
+    /// time), while unneeded in-flight prewarms are left streaming.
+    fn settle_for(
+        &mut self,
+        layer: usize,
+        needed: &BTreeMap<(usize, usize), Vec<usize>>,
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        while let Ok(ack) = self.rx.try_recv() {
+            self.absorb(ack, true, metrics)?;
+        }
+        let still_needed = |pending: &std::collections::HashSet<(usize, usize, usize)>| {
+            needed
+                .keys()
+                .any(|&(worker, expert)| pending.contains(&(worker, layer, expert)))
+        };
+        while still_needed(&self.pending) {
+            let t0 = Instant::now();
+            let ack = self.recv_ack()?;
+            metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
+            // Only the transfers this dispatch had to have are exposed;
+            // anything else that lands during the stall still beat its own
+            // point of use.
+            let hidden = ack.layer != layer
+                || !needed.contains_key(&(ack.worker, ack.expert));
+            self.absorb(ack, hidden, metrics)?;
+        }
+        Ok(())
+    }
+
+    /// Drain every remaining in-flight ack (end of the layer loop), so no
+    /// transferred byte escapes the accounting. These prewarms were never
+    /// waited on by any dispatch — their bytes are hidden — but the drain
+    /// itself delays the round tail, so its wall time is charged exposed.
+    fn finish(&mut self, metrics: &mut StageMetrics) -> Result<()> {
+        while !self.pending.is_empty() {
+            let t0 = Instant::now();
+            let ack = self.recv_ack()?;
+            metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
+            self.absorb(ack, true, metrics)?;
+        }
+        Ok(())
+    }
+
+    fn absorb(
+        &mut self,
+        ack: WorkerResult,
+        hidden: bool,
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        if let Some(err) = &ack.error {
+            anyhow::bail!("prewarm on worker {} failed: {err}", ack.worker);
+        }
+        self.pending.remove(&(ack.worker, ack.layer, ack.expert));
+        metrics.upload_bytes += ack.upload_bytes;
+        if hidden {
+            metrics.hidden_upload_bytes += ack.upload_bytes;
+            metrics.hidden_transfer_s += ack.exec_s;
+        } else {
+            metrics.exposed_upload_bytes += ack.upload_bytes;
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn attn_weight_names(layer: usize) -> [String; 5] {
+    [
+        format!("layers.{layer}.attn.ln"),
+        format!("layers.{layer}.attn.wq"),
+        format!("layers.{layer}.attn.wk"),
+        format!("layers.{layer}.attn.wv"),
+        format!("layers.{layer}.attn.wo"),
+    ]
+}
+
+/// Group slot indices per (dispatch worker, expert) — the unit the FFN
+/// phase pads, merges and places.
+pub fn group_slots_by_assignment(
+    assignment: &[u32],
+    slots: &[Slot],
+) -> BTreeMap<(usize, usize), Vec<usize>> {
+    let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (slot_idx, (&slot_worker, slot)) in assignment.iter().zip(slots).enumerate() {
+        groups
+            .entry((slot_worker as usize, slot.expert as usize))
+            .or_default()
+            .push(slot_idx);
+    }
+    groups
+}
+
+/// §Perf iteration 1: fold any group smaller than `min_group` into the
+/// largest group of the same expert (splitting an expert across workers
+/// for a handful of slots costs a whole padded-bucket FFN call — and
+/// possibly a weight transfer — for negligible balance gain).
+pub fn merge_runt_groups(groups: &mut BTreeMap<(usize, usize), Vec<usize>>, min_group: usize) {
+    let expert_ids: Vec<usize> = groups
+        .keys()
+        .map(|&(_, e)| e)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    for expert in expert_ids {
+        let mut keys: Vec<(usize, usize)> = groups
+            .keys()
+            .filter(|&&(_, ge)| ge == expert)
+            .cloned()
+            .collect();
+        if keys.len() < 2 {
+            continue;
+        }
+        keys.sort_by_key(|k| groups[k].len());
+        let biggest = *keys.last().unwrap();
+        for key in &keys[..keys.len() - 1] {
+            if groups[key].len() < min_group {
+                let moved = groups.remove(key).unwrap();
+                groups.get_mut(&biggest).unwrap().extend(moved);
+            }
+        }
+    }
+}
+
+/// Total padded rows a group of `n` slots costs under the bucket ladder.
+pub fn padded_rows(buckets: &[usize], n: usize) -> usize {
+    split_into_buckets(buckets, n).iter().map(|&(_, b)| b).sum()
+}
+
+/// §Perf iteration 3: greedy LPT placement of merged groups. The
+/// dispatcher's slot-level least-loaded choice ignores bucket padding — a
+/// 3-slot and a 14-slot group cost the same padded FFN call, and on
+/// decode-scale batches the padded call count per worker IS the critical
+/// path. Re-assign each group to the least-loaded worker hosting a
+/// replica (largest group first, load measured in padded rows; ties
+/// prefer the original worker, whose weights are more likely resident).
+/// Without replicas (baseline) every expert has one host and this is the
+/// identity — the invariant `tests/lpt_placement.rs` pins down.
+pub fn lpt_place(
+    groups: BTreeMap<(usize, usize), Vec<usize>>,
+    plan: &LayerPlan,
+    n_workers: usize,
+    buckets: &[usize],
+) -> BTreeMap<(usize, usize), Vec<usize>> {
+    let mut items: Vec<((usize, usize), Vec<usize>)> = groups.into_iter().collect();
+    items.sort_by_key(|(key, v)| (std::cmp::Reverse(v.len()), *key));
+    let mut lpt_load = vec![0usize; n_workers];
+    let mut placed: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for ((orig_worker, expert), slot_indices) in items {
+        let padded = padded_rows(buckets, slot_indices.len());
+        let hosts = plan.placement.gpus_of(expert);
+        let target = hosts
+            .iter()
+            .copied()
+            .min_by_key(|&g| (lpt_load[g], (g != orig_worker) as usize, g))
+            .unwrap_or(orig_worker);
+        lpt_load[target] += padded;
+        placed.entry((target, expert)).or_default().extend(slot_indices);
+    }
+    placed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement_mgr::PlacementManager;
+
+    fn slot(expert: u8) -> Slot {
+        Slot {
+            seq_idx: 0,
+            token_idx: 0,
+            expert,
+            gate: 1.0,
+        }
+    }
+
+    #[test]
+    fn grouping_partitions_slots() {
+        let slots: Vec<Slot> = [0u8, 1, 0, 2, 1, 0].iter().map(|&e| slot(e)).collect();
+        let assignment = vec![0u32, 1, 0, 2, 1, 3];
+        let groups = group_slots_by_assignment(&assignment, &slots);
+        let mut all: Vec<usize> = groups.values().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(groups[&(0, 0)], vec![0, 2]);
+        assert_eq!(groups[&(3, 0)], vec![5]);
+    }
+
+    #[test]
+    fn runt_groups_fold_into_biggest_of_same_expert() {
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        groups.insert((0, 7), (0..20).collect());
+        groups.insert((1, 7), vec![20, 21]); // runt, same expert
+        groups.insert((2, 3), vec![22]); // sole group of its expert: kept
+        merge_runt_groups(&mut groups, 16);
+        assert!(!groups.contains_key(&(1, 7)));
+        assert_eq!(groups[&(0, 7)].len(), 22);
+        assert_eq!(groups[&(2, 3)], vec![22]);
+    }
+
+    #[test]
+    fn padded_rows_monotone_and_exact_on_buckets() {
+        let buckets = [8usize, 16, 32, 64];
+        let mut prev = 0usize;
+        for n in 0..300 {
+            let p = padded_rows(&buckets, n);
+            assert!(p >= n, "padded {p} < n {n}");
+            assert!(p >= prev, "padded rows must be monotone: {prev} -> {p}");
+            prev = p;
+        }
+        assert_eq!(padded_rows(&buckets, 64), 64);
+        assert_eq!(padded_rows(&buckets, 65), 64 + 8);
+    }
+
+    #[test]
+    fn lpt_static_plan_is_identity() {
+        let mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        let plan = mgr.static_plan();
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        // Experts 0..8 homed two-per-gpu; groups at their home workers.
+        for e in 0..8usize {
+            let home = plan.placement.gpus_of(e)[0];
+            groups.insert((home, e), vec![e * 10, e * 10 + 1]);
+        }
+        let placed = lpt_place(groups.clone(), &plan, 4, &[8, 16, 32, 64]);
+        assert_eq!(placed, groups);
+    }
+
+    #[test]
+    fn lpt_spreads_replicated_hot_expert() {
+        let mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        let plan = mgr.plan_from_counts(&[600, 40, 40, 40, 40, 40, 40, 40]);
+        assert!(plan.placement.copies(0) > 1);
+        // Two equally big groups of the hot expert: the second must land
+        // on a different replica host than the first (its padded load is
+        // visible to the least-loaded choice).
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        groups.insert((0, 0), (0..40).collect());
+        groups.insert((1, 0), (40..80).collect());
+        let placed = lpt_place(groups, &plan, 4, &[8, 16, 32, 64]);
+        let total: usize = placed.values().map(Vec::len).sum();
+        assert_eq!(total, 80, "slots conserved");
+        for &(w, e) in placed.keys() {
+            assert_eq!(e, 0);
+            assert!(plan.placement.hosts(e, w), "host {w} lacks expert {e}");
+        }
+        assert_eq!(placed.len(), 2, "groups must spread over two hosts");
+    }
+
+    #[test]
+    fn stage_metrics_apply_to_both_metric_kinds() {
+        let mut s = StageMetrics::new(2);
+        s.attention_s = 1.0;
+        s.router_s = 0.5;
+        s.ffn_wall_s = 2.0;
+        s.n_slots = 10;
+        s.worker_busy_s = vec![1.0, 2.0];
+        s.worker_slots = vec![4, 6];
+        s.upload_bytes = 100;
+        s.hidden_upload_bytes = 70;
+        s.exposed_upload_bytes = 30;
+        s.skews.push(1.5);
+        s.finish();
+        let mut round = RoundMetrics {
+            worker_busy_s: vec![0.0; 2],
+            worker_slots: vec![0; 2],
+            ..Default::default()
+        };
+        s.apply_to_round(&mut round);
+        assert_eq!(round.n_slots, 10);
+        assert_eq!(round.upload_bytes, 100);
+        assert_eq!(round.hidden_upload_bytes, 70);
+        assert_eq!(round.worker_slots, vec![4, 6]);
+        assert!((round.routing_skew - 1.5).abs() < 1e-12);
+        let mut step = DecodeStepMetrics {
+            worker_busy_s: vec![0.0; 2],
+            worker_slots: vec![0; 2],
+            ..Default::default()
+        };
+        s.apply_to_step(&mut step);
+        assert_eq!(step.n_slots, 10);
+        assert_eq!(step.exposed_upload_bytes, 30);
+        assert_eq!(step.worker_busy_s, vec![1.0, 2.0]);
+    }
+}

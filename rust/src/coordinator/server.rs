@@ -2,47 +2,44 @@
 //! decode steps through the AOT model under Expert Parallelism with
 //! predictor-driven dynamic duplication.
 //!
-//! Prefill round pipeline (per paper Figure 3):
+//! Both serving phases share the stage-based layer pipeline in
+//! [`super::pipeline`] (ADR 002):
 //!
-//! 1. embed every sequence (leader engine);
-//! 2. *Token-to-Expert*: run the AOT predictor on the embeddings — before
-//!    attention, §3.1 — and build per-layer duplication plans;
-//!    *Distribution-Only*: build plans from the online MLE estimators;
-//! 3. per layer: attention (leader), fused router kernel, rust top-k;
-//! 4. dispatch routed token-slots to virtual-GPU workers per the plan
-//!    (quota dispatch for TEP, least-loaded over replicas for DOP, home
-//!    GPU for the baseline);
-//! 5. workers execute the expert-FFN artifact; leader gates and combines
-//!    outputs into the residual stream;
-//! 6. estimators observe the actual routing (the §3.2.1 moving average).
+//! 1. embed every sequence (leader engine) — whole prompts for prefill
+//!    rounds and newly admitted sequences, one row per decoding sequence;
+//! 2. *predict + plan* ([`Coordinator::build_plans`]): Token-to-Expert runs
+//!    the AOT predictor on the embeddings — before attention, §3.1 —
+//!    Distribution-Only converts the online MLE estimators into expected
+//!    counts (under the ADR-001 replan cadence in decode), and the baseline
+//!    keeps the static placement;
+//! 3. per layer ([`Coordinator::run_layers`]): prewarm(L+1) when
+//!    `lookahead` is on → attention → fused router + rust top-k →
+//!    plan-driven dispatch (quota dispatch for TEP, least-loaded over
+//!    replicas for DOP, home GPU for the baseline) → bucket-padded expert
+//!    FFN on the virtual-GPU workers → slot-order gate-and-combine →
+//!    estimator observe (the §3.2.1 moving average);
+//! 4. decode steps finish with `lm_head` + seeded sampling.
 //!
-//! Decode step pipeline ([`Coordinator::serve_decode`], DESIGN.md §4):
-//! every step carries one token per decoding sequence plus the full prompt
+//! Decode steps carry one token per decoding sequence plus the full prompt
 //! of each newly admitted sequence (continuous batching — admission and
-//! eviction are iteration-level, per [`super::scheduler`]). Attention runs
-//! incrementally over per-sequence KV caches; routing, dispatch and expert
-//! FFN reuse the same machinery as prefill; the DOP estimators update
-//! every step while Algorithm-1 replanning follows the
-//! `PlacementManager::replan_interval` cadence (ADR 001).
+//! eviction are iteration-level, per [`super::scheduler`]); attention runs
+//! incrementally over per-sequence KV caches (DESIGN.md §4).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
-use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
-use super::placement_mgr::{LayerPlan, PlacementManager};
+use super::pipeline::{AttentionMode, StageMetrics};
+use super::placement_mgr::PlacementManager;
 use super::request::Request;
-use super::router::{expert_counts, route_sequence, Slot};
 use super::scheduler::{Scheduler, SeqPhase};
-use super::worker::{pad_to_bucket, WorkerHandle, WorkerMsg, WorkerResult};
-use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
+use super::worker::{ResidentSets, WorkerHandle};
 use crate::runtime::tensor::IntTensor;
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
 use crate::util::rng::Rng;
-use crate::util::stats;
 
 /// Which prediction strategy drives placement (paper §3.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,13 +70,13 @@ impl ServeStrategy {
 
 /// Model dims read from the artifact manifest.
 #[derive(Clone, Debug)]
-struct Dims {
-    d_model: usize,
-    n_experts: usize,
-    n_layers: usize,
-    top_k: usize,
-    seq_len: usize,
-    vocab: usize,
+pub(crate) struct Dims {
+    pub(crate) d_model: usize,
+    pub(crate) n_experts: usize,
+    pub(crate) n_layers: usize,
+    pub(crate) top_k: usize,
+    pub(crate) seq_len: usize,
+    pub(crate) vocab: usize,
 }
 
 /// Knobs for a continuous-batching decode run.
@@ -111,37 +108,31 @@ impl Default for DecodeOptions {
 }
 
 /// Per-sequence tensors the decode path keeps across steps.
-struct SeqSession {
+pub(crate) struct SeqSession {
     /// Prompt plus generated tokens.
-    tokens: Vec<u32>,
+    pub(crate) tokens: Vec<u32>,
     /// Per-layer (K, V) caches, `[t, n_kv_heads * head_dim]`.
-    kv: Vec<Option<(HostTensor, HostTensor)>>,
+    pub(crate) kv: Vec<Option<(HostTensor, HostTensor)>>,
 }
 
 /// One sequence's share of a decode step.
-struct StepSeq {
-    id: u64,
-    rows: usize,
-    prefill: bool,
-}
-
-/// What one FFN dispatch phase produced (shared by prefill rounds and
-/// decode steps).
-struct FfnPhaseOutcome {
-    wall_s: f64,
-    worker_busy_s: Vec<f64>,
-    worker_slots: Vec<usize>,
-    upload_bytes: u64,
+pub(crate) struct StepSeq {
+    pub(crate) id: u64,
+    pub(crate) rows: usize,
+    pub(crate) prefill: bool,
 }
 
 pub struct Coordinator {
-    leader: Engine,
-    workers: Vec<WorkerHandle>,
+    pub(crate) leader: Engine,
+    pub(crate) workers: Vec<WorkerHandle>,
     pub placement: PlacementManager,
     pub strategy: ServeStrategy,
-    dims: Dims,
-    buckets: Vec<usize>,
-    round_tag: u64,
+    pub(crate) dims: Dims,
+    pub(crate) buckets: Vec<usize>,
+    pub(crate) round_tag: u64,
+    /// Coordinator-side view of each worker's resident expert weights
+    /// (gates lookahead prewarm sends — see `worker::ResidentSets`).
+    pub(crate) warmed: ResidentSets,
     /// §Perf iteration 2: fan per-sequence attention out to the workers
     /// (the TP analogue). Measured neutral on this substrate — the PJRT
     /// CPU client already saturates all cores per execution, so parallel
@@ -151,6 +142,11 @@ pub struct Coordinator {
     /// leader (single-row matvecs — a worker round-trip costs more than
     /// the op).
     pub parallel_attention: bool,
+    /// §Perf iteration 4 / ADR 002: overlap next-layer prediction, planning
+    /// and replica prewarm transfers with the current layer's compute
+    /// (`serve --lookahead 1`). Off by default so both regimes stay
+    /// reproducible; numerics are bitwise identical either way.
+    pub lookahead: bool,
 }
 
 impl Coordinator {
@@ -224,7 +220,9 @@ impl Coordinator {
             dims,
             buckets,
             round_tag: 0,
+            warmed: ResidentSets::new(n_workers),
             parallel_attention: false,
+            lookahead: false,
         })
     }
 
@@ -246,7 +244,6 @@ impl Coordinator {
         let round_start = Instant::now();
         self.round_tag += 1;
         let s_max = self.dims.seq_len;
-        let e = self.dims.n_experts;
 
         let mut metrics = RoundMetrics {
             n_seqs: requests.len(),
@@ -275,125 +272,19 @@ impl Coordinator {
         }
         metrics.embed_s = t0.elapsed().as_secs_f64();
 
-        // ---- 2. predict + plan ------------------------------------------
-        let t0 = Instant::now();
-        let plans: Vec<LayerPlan> = match self.strategy {
-            ServeStrategy::NoPrediction => {
-                (0..self.dims.n_layers).map(|_| self.placement.static_plan()).collect()
-            }
-            ServeStrategy::DistributionOnly => {
-                let total_slots: usize =
-                    n_real.iter().map(|&n| n * self.dims.top_k).sum();
-                (0..self.dims.n_layers)
-                    .map(|l| self.placement.plan_distribution_only(l, total_slots))
-                    .collect()
-            }
-            ServeStrategy::TokenToExpert => {
-                let counts = self.predict_counts(&hidden, &n_real)?;
-                counts
-                    .iter()
-                    .map(|c| self.placement.plan_from_counts(c))
-                    .collect()
-            }
+        // ---- 2. predict + plan (shared stage) ---------------------------
+        let plan_stage = self.build_plans(&hidden, &n_real, None)?;
+        metrics.predictor_s = plan_stage.predictor_s;
+        metrics.plan_s = plan_stage.plan_s;
+        metrics.replicas_added = plan_stage.replicas_added;
+
+        // ---- 3. unified per-layer pipeline ------------------------------
+        let mut stage = StageMetrics::new(self.workers.len());
+        let mut mode = AttentionMode::Full {
+            parallel: self.parallel_attention,
         };
-        metrics.predictor_s = t0.elapsed().as_secs_f64();
-        metrics.replicas_added = plans.iter().map(|p| p.added.len()).sum();
-        metrics.plan_s = 0.0; // planning time folded into predictor_s
-
-        // ---- 3..5 per-layer pipeline ------------------------------------
-        let mut skews: Vec<f64> = Vec::new();
-        for layer in 0..self.dims.n_layers {
-            // Attention: sequences of the round spread across the virtual
-            // GPUs and run in parallel (the serving analogue of the paper's
-            // TP attention — §Perf iteration 2; single-sequence rounds fall
-            // back to the leader to avoid a round-trip).
-            let t0 = Instant::now();
-            if !self.parallel_attention || hidden.len() == 1 {
-                let attn_names = attn_weight_names(layer);
-                for h in hidden.iter_mut() {
-                    let out = self
-                        .leader
-                        .call(
-                            "attention",
-                            &[
-                                In::T(h),
-                                In::W(&attn_names[0]),
-                                In::W(&attn_names[1]),
-                                In::W(&attn_names[2]),
-                                In::W(&attn_names[3]),
-                                In::W(&attn_names[4]),
-                            ],
-                        )?
-                        .remove(0);
-                    *h = out;
-                }
-            } else {
-                let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
-                for (seq_idx, h) in hidden.iter().enumerate() {
-                    let worker = seq_idx % self.workers.len();
-                    self.workers[worker].send(WorkerMsg::Attention {
-                        tag: seq_idx as u64,
-                        layer,
-                        x: h.clone(),
-                        reply: attn_tx.clone(),
-                    });
-                }
-                drop(attn_tx);
-                for _ in 0..hidden.len() {
-                    let r = attn_rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("attention worker channel closed"))?;
-                    if let Some(err) = &r.error {
-                        anyhow::bail!("attention on worker {} failed: {err}", r.worker);
-                    }
-                    let shape = hidden[r.tag as usize].shape.clone();
-                    hidden[r.tag as usize] = HostTensor::new(r.out, shape);
-                }
-            }
-            metrics.attention_s += t0.elapsed().as_secs_f64();
-
-            // Router (fused RMSNorm + logits) + rust top-k.
-            let t0 = Instant::now();
-            let ln = format!("layers.{layer}.moe.ln");
-            let wr = format!("layers.{layer}.moe.router");
-            let mut normed: Vec<HostTensor> = Vec::with_capacity(hidden.len());
-            let mut slots: Vec<Slot> = Vec::new();
-            for (seq_idx, h) in hidden.iter().enumerate() {
-                let mut out = self
-                    .leader
-                    .call("router", &[In::T(h), In::W(&ln), In::W(&wr)])?;
-                let logits = out.remove(1);
-                let xn = out.remove(0);
-                slots.extend(route_sequence(
-                    seq_idx,
-                    &logits.data,
-                    e,
-                    n_real[seq_idx],
-                    self.dims.top_k,
-                ));
-                normed.push(xn);
-            }
-            let actual_counts = expert_counts(&slots, e);
-            skews.push(stats::skewness_of_counts(&actual_counts));
-            metrics.n_slots += slots.len();
-            metrics.router_s += t0.elapsed().as_secs_f64();
-
-            // Dispatch + expert FFN + combine (shared with decode).
-            let outcome = self.ffn_phase(layer, &plans[layer], &slots, &normed, &mut hidden)?;
-            for (w, &b) in outcome.worker_busy_s.iter().enumerate() {
-                metrics.worker_busy_s[w] += b;
-            }
-            for (w, &s) in outcome.worker_slots.iter().enumerate() {
-                metrics.worker_slots[w] += s;
-            }
-            metrics.upload_bytes += outcome.upload_bytes;
-            metrics.ffn_wall_s += outcome.wall_s;
-
-            // Online learning for the DOP estimators.
-            self.placement.observe(layer, &actual_counts);
-        }
-
-        metrics.routing_skew = stats::mean(&skews);
+        self.run_layers(&mut mode, &mut hidden, &n_real, &plan_stage.plans, &mut stage)?;
+        stage.apply_to_round(&mut metrics);
         metrics.total_s = round_start.elapsed().as_secs_f64();
 
         // Trim outputs to real tokens.
@@ -499,9 +390,7 @@ impl Coordinator {
         rng: &mut Rng,
     ) -> Result<DecodeStepMetrics> {
         let step_start = Instant::now();
-        let e = self.dims.n_experts;
         let n_layers = self.dims.n_layers;
-        let top_k = self.dims.top_k;
 
         // Sessions for newly admitted requests (prompt capped at the
         // compiled prefill bucket).
@@ -569,120 +458,29 @@ impl Coordinator {
         }
         metrics.embed_s = t0.elapsed().as_secs_f64();
 
-        // ---- 2. predict + plan ------------------------------------------
+        // ---- 2. predict + plan (shared stage) ---------------------------
         // DOP follows the replan cadence; TEP is re-priced every step
         // (its prediction covers exactly this step's new tokens — ADR 001).
-        let t0 = Instant::now();
-        let total_slots: usize = workload.iter().map(|w| w.rows * top_k).sum();
-        let plans: Vec<LayerPlan> = match self.strategy {
-            ServeStrategy::NoPrediction => {
-                (0..n_layers).map(|_| self.placement.static_plan()).collect()
-            }
-            ServeStrategy::DistributionOnly => {
-                metrics.replanned = self.placement.replans_at(step);
-                self.placement.decode_plans(step, total_slots)
-            }
-            ServeStrategy::TokenToExpert => {
-                metrics.replanned = true;
-                let n_real: Vec<usize> = workload.iter().map(|w| w.rows).collect();
-                let counts = self.predict_counts(&hidden, &n_real)?;
-                counts
-                    .iter()
-                    .map(|c| self.placement.plan_from_counts(c))
-                    .collect()
-            }
-        };
-        metrics.predictor_s = t0.elapsed().as_secs_f64();
-        metrics.replicas_added = plans.iter().map(|p| p.added.len()).sum();
+        let n_real: Vec<usize> = workload.iter().map(|w| w.rows).collect();
+        let plan_stage = self.build_plans(&hidden, &n_real, Some(step))?;
+        // `DecodeStepMetrics` has no separate plan_s: planning folds into
+        // predictor_s, matching the pre-refactor accounting.
+        metrics.predictor_s = plan_stage.predictor_s + plan_stage.plan_s;
+        metrics.replanned = plan_stage.replanned;
+        metrics.replicas_added = plan_stage.replicas_added;
 
-        // ---- 3. per-layer pipeline --------------------------------------
-        let mut skews: Vec<f64> = Vec::new();
-        for layer in 0..n_layers {
-            let attn_names = attn_weight_names(layer);
-
-            // Attention: full-sequence for prefill rows (seeding the KV
-            // cache), incremental over the cache for decode rows.
-            let t0 = Instant::now();
-            for (i, ws) in workload.iter().enumerate() {
-                let sess = sessions.get_mut(&ws.id).expect("session exists");
-                if ws.prefill {
-                    let mut out = self.leader.call(
-                        "attention_prefill",
-                        &[
-                            In::T(&hidden[i]),
-                            In::W(&attn_names[0]),
-                            In::W(&attn_names[1]),
-                            In::W(&attn_names[2]),
-                            In::W(&attn_names[3]),
-                            In::W(&attn_names[4]),
-                        ],
-                    )?;
-                    let v = out.remove(2);
-                    let k = out.remove(1);
-                    hidden[i] = out.remove(0);
-                    sess.kv[layer] = Some((k, v));
-                } else {
-                    let (k_cache, v_cache) =
-                        sess.kv[layer].as_ref().expect("decode sequence has KV");
-                    let mut out = self.leader.call(
-                        "attention_step",
-                        &[
-                            In::T(&hidden[i]),
-                            In::T(k_cache),
-                            In::T(v_cache),
-                            In::W(&attn_names[0]),
-                            In::W(&attn_names[1]),
-                            In::W(&attn_names[2]),
-                            In::W(&attn_names[3]),
-                            In::W(&attn_names[4]),
-                        ],
-                    )?;
-                    let v_new = out.remove(2);
-                    let k_new = out.remove(1);
-                    hidden[i] = out.remove(0);
-                    let (k_cache, v_cache) =
-                        sess.kv[layer].as_mut().expect("decode sequence has KV");
-                    k_cache.append_rows(&k_new);
-                    v_cache.append_rows(&v_new);
-                }
-            }
-            metrics.attention_s += t0.elapsed().as_secs_f64();
-
-            // Router + top-k.
-            let t0 = Instant::now();
-            let ln = format!("layers.{layer}.moe.ln");
-            let wr = format!("layers.{layer}.moe.router");
-            let mut normed: Vec<HostTensor> = Vec::with_capacity(workload.len());
-            let mut slots: Vec<Slot> = Vec::new();
-            for (i, ws) in workload.iter().enumerate() {
-                let mut out = self
-                    .leader
-                    .call("router", &[In::T(&hidden[i]), In::W(&ln), In::W(&wr)])?;
-                let logits = out.remove(1);
-                let xn = out.remove(0);
-                slots.extend(route_sequence(i, &logits.data, e, ws.rows, top_k));
-                normed.push(xn);
-            }
-            let actual_counts = expert_counts(&slots, e);
-            skews.push(stats::skewness_of_counts(&actual_counts));
-            metrics.n_slots += slots.len();
-            metrics.router_s += t0.elapsed().as_secs_f64();
-
-            // Dispatch + expert FFN + combine (shared with prefill).
-            let outcome = self.ffn_phase(layer, &plans[layer], &slots, &normed, &mut hidden)?;
-            for (w, &b) in outcome.worker_busy_s.iter().enumerate() {
-                metrics.worker_busy_s[w] += b;
-            }
-            for (w, &s) in outcome.worker_slots.iter().enumerate() {
-                metrics.worker_slots[w] += s;
-            }
-            metrics.upload_bytes += outcome.upload_bytes;
-            metrics.ffn_wall_s += outcome.wall_s;
-
-            // Per-step moving-average estimator update (§3.2.1: decode
-            // steps keep teaching DOP while it serves).
-            self.placement.observe(layer, &actual_counts);
+        // ---- 3. unified per-layer pipeline ------------------------------
+        let mut stage = StageMetrics::new(self.workers.len());
+        {
+            // Reborrow `sessions` so the lm-head stage below can use it
+            // again after the pipeline releases the mode.
+            let mut mode = AttentionMode::Cached {
+                sessions: &mut *sessions,
+                workload: &workload,
+            };
+            self.run_layers(&mut mode, &mut hidden, &n_real, &plan_stage.plans, &mut stage)?;
         }
+        stage.apply_to_step(&mut metrics);
 
         // ---- 4. lm head + sampling --------------------------------------
         let t0 = Instant::now();
@@ -702,226 +500,9 @@ impl Coordinator {
         }
         metrics.lm_head_s = t0.elapsed().as_secs_f64();
 
-        metrics.routing_skew = stats::mean(&skews);
         metrics.total_s = step_start.elapsed().as_secs_f64();
         Ok(metrics)
     }
-
-    /// Run the AOT Token-to-Expert predictor on every sequence's
-    /// embeddings (§3.1: before attention) and count predicted slots per
-    /// (layer, expert). `hidden[i]` holds `≥ n_real[i]` embedded rows.
-    fn predict_counts(
-        &mut self,
-        hidden: &[HostTensor],
-        n_real: &[usize],
-    ) -> Result<Vec<Vec<usize>>> {
-        let e = self.dims.n_experts;
-        let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
-        let head_names: Vec<String> = (0..self.dims.n_layers)
-            .map(|l| format!("predictor.head.{l}"))
-            .collect();
-        for (seq, &n) in hidden.iter().zip(n_real) {
-            let s_rows = seq.rows();
-            let mut ins: Vec<In<'_>> = vec![
-                In::T(seq),
-                In::W("predictor.w1"),
-                In::W("predictor.b1"),
-            ];
-            for name in &head_names {
-                ins.push(In::W(name));
-            }
-            let logits = self.leader.call("predictor", &ins)?.remove(0);
-            // logits [L, S, E]: argmax per (layer, real token).
-            for l in 0..self.dims.n_layers {
-                for t in 0..n.min(s_rows) {
-                    let base = (l * s_rows + t) * e;
-                    let row = &logits.data[base..base + e];
-                    let arg = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .unwrap()
-                        .0;
-                    // Each token occupies top_k slots; scale the predicted
-                    // count accordingly.
-                    counts[l][arg] += self.dims.top_k;
-                }
-            }
-        }
-        Ok(counts)
-    }
-
-    /// Dispatch routed slots to the virtual-GPU workers under `plan`, run
-    /// the expert FFNs, and combine `gate * expert_out` into `hidden`.
-    /// Shared by prefill rounds and decode steps.
-    fn ffn_phase(
-        &mut self,
-        layer: usize,
-        plan: &LayerPlan,
-        slots: &[Slot],
-        normed: &[HostTensor],
-        hidden: &mut [HostTensor],
-    ) -> Result<FfnPhaseOutcome> {
-        let d = self.dims.d_model;
-        let mut outcome = FfnPhaseOutcome {
-            wall_s: 0.0,
-            worker_busy_s: vec![0.0; self.workers.len()],
-            worker_slots: vec![0; self.workers.len()],
-            upload_bytes: 0,
-        };
-        if slots.is_empty() {
-            return Ok(outcome);
-        }
-
-        let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
-        let (assignment, _loads) = if plan.share.is_empty() {
-            dispatch_tokens(&experts, &plan.placement)
-        } else {
-            dispatch_with_quota(&experts, &plan.placement, &plan.share)
-        };
-
-        // Group slots per (worker, expert), gather activations, run.
-        let t0 = Instant::now();
-        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
-        for (slot_idx, (&slot_worker, slot)) in assignment.iter().zip(slots).enumerate() {
-            groups
-                .entry((slot_worker as usize, slot.expert as usize))
-                .or_default()
-                .push(slot_idx);
-        }
-        // §Perf: merge runt groups. Splitting an expert across workers
-        // for a handful of slots costs a whole padded-bucket FFN call
-        // (and possibly a weight transfer) for negligible balance gain;
-        // fold any group smaller than MIN_GROUP into the largest group
-        // of the same expert.
-        const MIN_GROUP: usize = 16;
-        let expert_ids: Vec<usize> = groups
-            .keys()
-            .map(|&(_, e)| e)
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect();
-        for expert in expert_ids {
-            let mut keys: Vec<(usize, usize)> = groups
-                .keys()
-                .filter(|&&(_, ge)| ge == expert)
-                .cloned()
-                .collect();
-            if keys.len() < 2 {
-                continue;
-            }
-            keys.sort_by_key(|k| groups[k].len());
-            let biggest = *keys.last().unwrap();
-            for key in &keys[..keys.len() - 1] {
-                if groups[key].len() < MIN_GROUP {
-                    let moved = groups.remove(key).unwrap();
-                    groups.get_mut(&biggest).unwrap().extend(moved);
-                }
-            }
-        }
-        // §Perf (decode serving): greedy LPT placement of merged groups.
-        // The dispatcher's slot-level least-loaded choice ignores bucket
-        // padding — a 3-slot and a 14-slot group cost the same padded FFN
-        // call, and on decode-scale batches the padded call count per
-        // worker IS the critical path. Re-assign each group to the least-
-        // loaded worker hosting a replica (largest group first, load
-        // measured in padded rows; ties prefer the original worker, whose
-        // weights are more likely resident). Without replicas (baseline)
-        // every expert has one host and this is the identity.
-        let mut items: Vec<((usize, usize), Vec<usize>)> = groups.into_iter().collect();
-        items.sort_by_key(|(key, v)| (std::cmp::Reverse(v.len()), *key));
-        let mut lpt_load = vec![0usize; self.workers.len()];
-        let mut placed: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
-        for ((orig_worker, expert), slot_indices) in items {
-            let padded: usize =
-                crate::runtime::bucket::split_into_buckets(&self.buckets, slot_indices.len())
-                    .iter()
-                    .map(|&(_, b)| b)
-                    .sum();
-            let hosts = plan.placement.gpus_of(expert);
-            let target = hosts
-                .iter()
-                .copied()
-                .min_by_key(|&g| (lpt_load[g], (g != orig_worker) as usize, g))
-                .unwrap_or(orig_worker);
-            lpt_load[target] += padded;
-            placed.entry((target, expert)).or_default().extend(slot_indices);
-        }
-
-        let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
-        let mut outstanding = 0usize;
-        // Slot-order metadata for combining.
-        let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-        let mut msg_tag = 0u64;
-        for ((worker, expert), slot_indices) in &placed {
-            // Gather the normed activations for these slots.
-            let mut data = Vec::with_capacity(slot_indices.len() * d);
-            for &si in slot_indices {
-                let slot = &slots[si];
-                data.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
-            }
-            let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
-            // Oversized groups split across bucket-sized chunks.
-            let mut offset = 0usize;
-            for (chunk, _bucket) in
-                crate::runtime::bucket::split_into_buckets(&self.buckets, xn.rows())
-            {
-                let rows: Vec<usize> = (offset..offset + chunk).collect();
-                let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
-                msg_tag += 1;
-                group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
-                self.workers[*worker].send(WorkerMsg::Run {
-                    tag: msg_tag,
-                    layer,
-                    expert: *expert,
-                    xn: tile,
-                    n_real: chunk,
-                    reply: reply_tx.clone(),
-                });
-                outstanding += 1;
-                outcome.worker_slots[*worker] += chunk;
-                offset += chunk;
-            }
-        }
-        drop(reply_tx);
-
-        // Combine: h += gate * expert_out at each slot.
-        let mut received = 0usize;
-        while received < outstanding {
-            let result = reply_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-            received += 1;
-            if let Some(err) = &result.error {
-                anyhow::bail!("worker {} failed: {err}", result.worker);
-            }
-            outcome.worker_busy_s[result.worker] += result.exec_s;
-            outcome.upload_bytes += result.upload_bytes;
-            let slot_indices = &group_slots[&result.tag];
-            debug_assert_eq!(result.n_real, slot_indices.len());
-            for (row, &si) in slot_indices.iter().enumerate() {
-                let slot = &slots[si];
-                let out_row = &result.out[row * d..(row + 1) * d];
-                let h = &mut hidden[slot.seq_idx];
-                let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
-                for (a, &b) in dst.iter_mut().zip(out_row) {
-                    *a += slot.gate * b;
-                }
-            }
-        }
-        outcome.wall_s = t0.elapsed().as_secs_f64();
-        Ok(outcome)
-    }
-}
-
-fn attn_weight_names(layer: usize) -> [String; 5] {
-    [
-        format!("layers.{layer}.attn.ln"),
-        format!("layers.{layer}.attn.wq"),
-        format!("layers.{layer}.attn.wk"),
-        format!("layers.{layer}.attn.wv"),
-        format!("layers.{layer}.attn.wo"),
-    ]
 }
 
 /// Sample the next token from lm-head logits: greedy when `temperature <=

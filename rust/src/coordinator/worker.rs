@@ -2,8 +2,14 @@
 //! own PJRT engine (the `xla` client is not `Send`) with the expert-FFN
 //! executables compiled locally. Expert weights become device-resident on
 //! first use — that upload is exactly the duplication transfer Algorithm 1
-//! triggers, and is accounted per worker.
+//! triggers, and is accounted per worker. The lookahead pipeline
+//! (`coordinator/pipeline.rs`) instead pre-warms replica weights with
+//! [`WorkerMsg::Prewarm`] while the leader runs attention, so the transfer
+//! is hidden rather than stalling the FFN phase; [`ResidentSets`] is the
+//! coordinator-side per-layer view of what each worker already holds, so
+//! prewarms are sent at most once per (worker, layer, expert).
 
+use std::collections::HashSet;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -33,9 +39,12 @@ pub enum WorkerMsg {
         x: HostTensor,
         reply: mpsc::Sender<WorkerResult>,
     },
-    /// Pre-warm an expert's weights (duplication ahead of the FFN phase,
-    /// i.e. the transfer the paper hides under attention).
-    Prefetch {
+    /// Pre-warm an expert's weights ahead of the FFN phase — the
+    /// duplication transfer the paper hides under attention. The ack is
+    /// non-blocking: the coordinator keeps working and settles acks when
+    /// the layer's FFN phase actually needs the weights (ADR 002).
+    Prewarm {
+        tag: u64,
         layer: usize,
         expert: usize,
         reply: mpsc::Sender<WorkerResult>,
@@ -128,9 +137,9 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                             error: Some("engine init failed".into()),
                         });
                     }
-                    WorkerMsg::Prefetch { layer, expert, reply } => {
+                    WorkerMsg::Prewarm { tag, layer, expert, reply } => {
                         let _ = reply.send(WorkerResult {
-                            tag: 0, worker: index, layer, expert,
+                            tag, worker: index, layer, expert,
                             out: Vec::new(), n_real: 0,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
@@ -246,7 +255,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     error,
                 });
             }
-            WorkerMsg::Prefetch { layer, expert, reply } => {
+            WorkerMsg::Prewarm { tag, layer, expert, reply } => {
                 let t0 = Instant::now();
                 let mut upload_bytes = 0u64;
                 let mut error = None;
@@ -257,7 +266,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     }
                 }
                 let _ = reply.send(WorkerResult {
-                    tag: 0,
+                    tag,
                     worker: index,
                     layer,
                     expert,
@@ -282,4 +291,70 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
 pub fn pad_to_bucket(xn: HostTensor, buckets: &[usize]) -> HostTensor {
     let b = bucket::pick_bucket(buckets, xn.rows());
     xn.pad_rows_to(b)
+}
+
+/// Coordinator-side view of each worker's per-layer resident expert
+/// weights. Worker engines track residency themselves (uploads are cache
+/// hits after the first), but the leader needs its own copy to avoid
+/// flooding the channels with no-op [`WorkerMsg::Prewarm`] messages every
+/// layer: a (worker, layer, expert) triple is prewarmed at most once per
+/// coordinator lifetime, matching engine residency (nothing evicts on the
+/// serve path today — eviction support is an open item, ROADMAP.md).
+#[derive(Debug, Default)]
+pub struct ResidentSets {
+    /// One `(layer, expert)` set per worker.
+    per_worker: Vec<HashSet<(usize, usize)>>,
+}
+
+impl ResidentSets {
+    pub fn new(n_workers: usize) -> ResidentSets {
+        ResidentSets {
+            per_worker: (0..n_workers).map(|_| HashSet::new()).collect(),
+        }
+    }
+
+    pub fn contains(&self, worker: usize, layer: usize, expert: usize) -> bool {
+        self.per_worker[worker].contains(&(layer, expert))
+    }
+
+    /// Mark a triple resident; returns false if it already was.
+    pub fn insert(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
+        self.per_worker[worker].insert((layer, expert))
+    }
+
+    pub fn remove(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
+        self.per_worker[worker].remove(&(layer, expert))
+    }
+
+    /// Resident experts of one worker for one layer (sorted).
+    pub fn layer_experts(&self, worker: usize, layer: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self.per_worker[worker]
+            .iter()
+            .filter(|&&(l, _)| l == layer)
+            .map(|&(_, e)| e)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_sets_track_per_layer() {
+        let mut r = ResidentSets::new(2);
+        assert!(!r.contains(0, 1, 3));
+        assert!(r.insert(0, 1, 3));
+        assert!(!r.insert(0, 1, 3), "second insert is a no-op");
+        assert!(r.contains(0, 1, 3));
+        assert!(!r.contains(1, 1, 3), "workers are independent");
+        r.insert(0, 1, 1);
+        r.insert(0, 2, 5);
+        assert_eq!(r.layer_experts(0, 1), vec![1, 3]);
+        assert_eq!(r.layer_experts(0, 2), vec![5]);
+        assert!(r.remove(0, 1, 3));
+        assert!(!r.contains(0, 1, 3));
+    }
 }

@@ -3,7 +3,7 @@
 //! strategy minimises end-to-end latency.
 
 use super::calibrate::WorkloadCalibration;
-use super::select::{recommend, strategy_savings, Recommendation};
+use super::select::{recommend, strategy_savings_overlap, Recommendation};
 use crate::model::ModelConfig;
 use crate::sim::hardware::SystemSpec;
 
@@ -26,11 +26,27 @@ pub fn decision_map(
     batch: usize,
     seq: usize,
 ) -> Vec<GuidelineCell> {
+    decision_map_overlap(model, cals, skews, bandwidths_gbs, batch, seq, false)
+}
+
+/// [`decision_map`] under an explicit overlap regime: `overlap = true`
+/// prices the ADR-002 lookahead serving engine, re-deriving every cell's
+/// DOP-vs-TEP crossover (`advise --overlap`).
+pub fn decision_map_overlap(
+    model: &ModelConfig,
+    cals: &[WorkloadCalibration],
+    skews: &[f64],
+    bandwidths_gbs: &[f64],
+    batch: usize,
+    seq: usize,
+    overlap: bool,
+) -> Vec<GuidelineCell> {
     let mut cells = Vec::new();
     for &bw in bandwidths_gbs {
         let system = SystemSpec::four_a100_custom_bw(bw);
         for &skew in skews {
-            let cmp = strategy_savings(model, &system, cals, skew, batch, seq);
+            let cmp =
+                strategy_savings_overlap(model, &system, cals, skew, batch, seq, overlap);
             let rec = recommend(&cmp);
             let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
             cells.push(GuidelineCell {
@@ -42,6 +58,36 @@ pub fn decision_map(
         }
     }
     cells
+}
+
+/// Describe where two decision maps over the same grid disagree — the
+/// cells lookahead overlap flips (rendered by `advise --overlap`).
+pub fn render_flips(base: &[GuidelineCell], overlap: &[GuidelineCell]) -> String {
+    debug_assert_eq!(base.len(), overlap.len());
+    let flips: Vec<String> = base
+        .iter()
+        .zip(overlap)
+        .filter(|(a, b)| a.recommendation != b.recommendation)
+        .map(|(a, b)| {
+            format!(
+                "  skew {:.1} @ {:.0} GB/s: {} -> {}",
+                a.skewness,
+                a.bandwidth_gbs,
+                a.recommendation.name(),
+                b.recommendation.name()
+            )
+        })
+        .collect();
+    if flips.is_empty() {
+        "overlap flips no cells on this grid".to_string()
+    } else {
+        format!(
+            "overlap flips {} of {} cells vs the non-overlap map:\n{}",
+            flips.len(),
+            base.len(),
+            flips.join("\n")
+        )
+    }
 }
 
 /// Render the decision map as the Figure-1-style ASCII chart
@@ -134,5 +180,30 @@ mod tests {
         assert!(chart.contains('D') || chart.contains('T'));
         let summary = summarize(&cells);
         assert!(summary.contains("Distribution-Only wins"));
+    }
+
+    #[test]
+    fn overlap_map_same_grid_and_flips_render() {
+        let model = ModelConfig::mixtral_8x7b();
+        let opts = CalibrationOptions {
+            fast: true,
+            ..Default::default()
+        };
+        let system = SystemSpec::four_a100_nvlink();
+        let cals = vec![
+            calibrate(datasets::mmlu_like(93), &model, &system, &opts),
+            calibrate(datasets::sst2_like(94), &model, &system, &opts),
+        ];
+        let skews = [1.2, 2.0];
+        let bws = [600.0, 64.0];
+        let base = decision_map(&model, &cals, &skews, &bws, 1, 512);
+        let over = decision_map_overlap(&model, &cals, &skews, &bws, 1, 512, true);
+        assert_eq!(base.len(), over.len());
+        for (a, b) in base.iter().zip(&over) {
+            assert_eq!(a.skewness, b.skewness);
+            assert_eq!(a.bandwidth_gbs, b.bandwidth_gbs);
+        }
+        let flips = render_flips(&base, &over);
+        assert!(flips.contains("flips"), "flips text: {flips}");
     }
 }

@@ -89,7 +89,27 @@ pub fn strategy_savings(
     batch: usize,
     seq: usize,
 ) -> SavingsComparison {
-    let sim = LayerSim::new(model.clone(), system.clone()).with_workload(batch, seq);
+    strategy_savings_overlap(model, system, cals, skew, batch, seq, false)
+}
+
+/// [`strategy_savings`] under an explicit overlap regime: with
+/// `overlap = true` the simulator prices the ADR-002 lookahead engine
+/// (prediction + duplication transfers hide under the compute window),
+/// which is what re-derives the DOP-vs-TEP crossover for `advise
+/// --overlap` — TEP's per-batch overhead (its Achilles heel) hides, while
+/// DOP's transfer is charged explicitly where the window is too small.
+pub fn strategy_savings_overlap(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    seq: usize,
+    overlap: bool,
+) -> SavingsComparison {
+    let sim = LayerSim::new(model.clone(), system.clone())
+        .with_workload(batch, seq)
+        .with_overlap(overlap);
     let baseline_s = sim.baseline_total(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim
@@ -125,7 +145,23 @@ pub fn decode_strategy_savings(
     batch: usize,
     ctx_len: usize,
 ) -> SavingsComparison {
-    let sim = DecodeSim::new(model.clone(), system.clone()).with_workload(batch, ctx_len);
+    decode_strategy_savings_overlap(model, system, cals, skew, batch, ctx_len, false)
+}
+
+/// [`decode_strategy_savings`] under an explicit overlap regime (the
+/// decode analogue of [`strategy_savings_overlap`]).
+pub fn decode_strategy_savings_overlap(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    ctx_len: usize,
+    overlap: bool,
+) -> SavingsComparison {
+    let sim = DecodeSim::new(model.clone(), system.clone())
+        .with_workload(batch, ctx_len)
+        .with_overlap(overlap);
     let baseline_s = sim.baseline_step(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
@@ -272,6 +308,58 @@ mod tests {
         let (acc, total) = best_tep(&sim, 2.0, (0.01, 3.0), baseline);
         assert!(accuracy_grid().contains(&acc));
         assert!(total.is_finite() && total > 0.0);
+    }
+
+    #[test]
+    fn overlap_moves_the_difference_toward_tep() {
+        // Both strategies pay the same explicit exposed-transfer charge
+        // under overlap, but only TEP additionally hides (part of) its
+        // prediction overhead — so the Figure-7 difference (dop − tep
+        // saving) can only shrink or hold. The baseline itself never moves
+        // (no prediction, no duplication to overlap).
+        let model = ModelConfig::mixtral_8x7b();
+        for bw in [600.0, 64.0] {
+            let system = SystemSpec::four_a100_custom_bw(bw);
+            let c = cals(&model, &system);
+            for skew in [1.4, 2.0, 3.0] {
+                let plain = strategy_savings(&model, &system, &c, skew, 1, 512);
+                let over =
+                    strategy_savings_overlap(&model, &system, &c, skew, 1, 512, true);
+                assert!(
+                    (plain.baseline_s - over.baseline_s).abs() < 1e-12,
+                    "baseline unchanged"
+                );
+                assert!(
+                    over.difference_s <= plain.difference_s + 1e-12,
+                    "difference must move toward TEP at bw={bw} skew={skew}: \
+                     {} -> {}",
+                    plain.difference_s,
+                    over.difference_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_flips_a_crossover_cell_somewhere() {
+        // The acceptance check behind `advise --overlap`: over a grid
+        // spanning the decision boundary, at least one cell's
+        // recommendation must differ between the two regimes.
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        let mut flipped = 0usize;
+        for bw in [600.0, 300.0, 128.0, 64.0, 32.0, 16.0] {
+            let sys = SystemSpec::four_a100_custom_bw(bw);
+            for skew in [1.0, 1.2, 1.4, 1.7, 2.0, 2.5, 3.0, 4.0, 5.0] {
+                let plain = strategy_savings(&model, &sys, &c, skew, 1, 512);
+                let over = strategy_savings_overlap(&model, &sys, &c, skew, 1, 512, true);
+                if recommend(&plain) != recommend(&over) {
+                    flipped += 1;
+                }
+            }
+        }
+        assert!(flipped > 0, "overlap must flip at least one guideline cell");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use moe_gps::trace::{datasets, Trace};
 use moe_gps::util::args::Args;
 
 fn main() {
-    let args = Args::from_env(&["fast", "csv", "help", "version"]);
+    let args = Args::from_env(&["fast", "csv", "help", "version", "overlap"]);
     if args.flag("version") {
         println!("moe-gps {}", moe_gps::VERSION);
         return;
@@ -57,11 +57,13 @@ USAGE: moe-gps <subcommand> [options]
                 --error-model typical]
   sweep        --model ... --system ... [--skews 1.0,1.4,2.0,3.0,4.0 --fast]
   advise       --model ... [--phase prefill|decode --skews ...
-                --bandwidths 600,300,128,64 --batch 16 --ctx 512 --fast]
+                --bandwidths 600,300,128,64 --batch 16 --ctx 512 --fast
+                --overlap   (price the ADR-002 lookahead engine and show
+                             which guideline cells it flips)]
   trace        --dataset mmlu|alpaca|sst2 [--seed 7]
   predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
   serve        --strategy none|dop|tep [--phase prefill|decode|mixed
-                --workers 4 --artifacts artifacts]
+                --workers 4 --artifacts artifacts --lookahead 0|1]
                prefill: [--rounds 8 --seqs 4]
                decode/mixed (continuous batching): [--steps 256 --seqs 8
                 --max-active 8 --prompt 32 --max-new 32 --replan 4
@@ -162,41 +164,69 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_advise(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let phase = ServePhase::by_name(args.opt_or("phase", "prefill"))?;
+    let overlap = args.flag("overlap");
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
     let system = SystemSpec::four_a100_nvlink();
     let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
-    let cells = match phase {
-        ServePhase::Prefill => {
-            gps::guidelines::decision_map(&model, &cals, &skews, &bandwidths, 1, 512)
-        }
-        ServePhase::Decode => {
-            // Decode regime: decision map over the same grid, priced on
-            // the decode-step simulator (memory-bound FFN, per-step TEP
-            // overhead — ADR 001).
-            let batch = args.opt_usize("batch", 16)?;
-            let ctx = args.opt_usize("ctx", 512)?;
-            let mut cells = Vec::new();
-            for &bw in &bandwidths {
-                let sys = SystemSpec::four_a100_custom_bw(bw);
-                for &skew in &skews {
-                    let cmp =
-                        gps::decode_strategy_savings(&model, &sys, &cals, skew, batch, ctx);
-                    let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
-                    cells.push(gps::guidelines::GuidelineCell {
-                        skewness: skew,
-                        bandwidth_gbs: bw,
-                        recommendation: recommend(&cmp),
-                        saving_frac: best_saving / cmp.baseline_s,
-                    });
+    // One map builder per phase, parameterised by the overlap regime so
+    // `--overlap` can render its map *and* the cells it flips.
+    let build = |with_overlap: bool| -> Result<Vec<gps::guidelines::GuidelineCell>> {
+        Ok(match phase {
+            ServePhase::Prefill => gps::guidelines::decision_map_overlap(
+                &model,
+                &cals,
+                &skews,
+                &bandwidths,
+                1,
+                512,
+                with_overlap,
+            ),
+            ServePhase::Decode => {
+                // Decode regime: decision map over the same grid, priced on
+                // the decode-step simulator (memory-bound FFN, per-step TEP
+                // overhead — ADR 001).
+                let batch = args.opt_usize("batch", 16)?;
+                let ctx = args.opt_usize("ctx", 512)?;
+                let mut cells = Vec::new();
+                for &bw in &bandwidths {
+                    let sys = SystemSpec::four_a100_custom_bw(bw);
+                    for &skew in &skews {
+                        let cmp = gps::decode_strategy_savings_overlap(
+                            &model,
+                            &sys,
+                            &cals,
+                            skew,
+                            batch,
+                            ctx,
+                            with_overlap,
+                        );
+                        let best_saving =
+                            cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
+                        cells.push(gps::guidelines::GuidelineCell {
+                            skewness: skew,
+                            bandwidth_gbs: bw,
+                            recommendation: recommend(&cmp),
+                            saving_frac: best_saving / cmp.baseline_s,
+                        });
+                    }
                 }
+                cells
             }
-            cells
-        }
+        })
     };
-    println!("phase: {}", phase.name());
+    let cells = build(overlap)?;
+    println!(
+        "phase: {}{}",
+        phase.name(),
+        if overlap { " (lookahead overlap)" } else { "" }
+    );
     println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
     println!("{}", gps::guidelines::summarize(&cells));
+    if overlap {
+        let base = build(false)?;
+        println!("{}", gps::guidelines::render_flips(&base, &cells));
+    }
     Ok(())
 }
 
@@ -235,6 +265,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let phase = args.opt_or("phase", "prefill");
     let seed = args.opt_u64("seed", 11)?;
     let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
+    // ADR 002: overlap next-layer prediction/planning/prewarm with the
+    // current layer's compute. Numerics are identical either way; both
+    // regimes stay reproducible from the CLI.
+    coord.lookahead = args.opt_usize("lookahead", 0)? != 0;
     let mut gen = RequestGen::new(seed, coord.vocab());
     match phase {
         "prefill" => {

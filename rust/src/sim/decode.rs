@@ -23,7 +23,7 @@ use super::error_model::ErrorModel;
 use super::ffn;
 use super::hardware::SystemSpec;
 use super::layer::LayerBreakdown;
-use super::moe::{MoeCost, Strategy};
+use super::moe::{self, MoeCost, Strategy};
 use super::roofline;
 use crate::model::ModelConfig;
 
@@ -48,6 +48,11 @@ pub struct DecodeParams {
     /// attention; if false their excess is charged (ablation, as prefill).
     pub hide_duplication: bool,
     pub attention_compute_s: f64,
+    /// ADR 002: price the serving engine's lookahead overlap (supersedes
+    /// `hide_duplication`): the per-step attention window explicitly hides
+    /// the (cadence-amortised) duplication transfer first, then the
+    /// predictor runtime; only the residue is charged.
+    pub lookahead_overlap: bool,
 }
 
 impl DecodeParams {
@@ -61,6 +66,7 @@ impl DecodeParams {
             replan_interval: 1,
             hide_duplication: true,
             attention_compute_s: 0.0,
+            lookahead_overlap: false,
         }
     }
 }
@@ -121,7 +127,21 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
             // Communication unchanged vs baseline (§4), as in prefill.
             cost.scatter_s = skewed_a2a;
             cost.gather_s = skewed_a2a;
-            cost.movement_s = movement_cost(model, system, p, p.replan_interval);
+            if p.lookahead_overlap {
+                // Clip against ONE step's window first, then amortise the
+                // exposed remainder over the cadence: the engine moves the
+                // whole transfer on the replan step, so only that step's
+                // window can hide it (amortise-then-clip would overstate
+                // hiding by up to replan_interval×).
+                let raw = raw_movement(model, system);
+                let (mv, _oh, hidden) =
+                    moe::overlap_split(raw, 0.0, p.attention_compute_s);
+                let steps = p.replan_interval.max(1) as f64;
+                cost.movement_s = mv / steps;
+                cost.hidden_s = hidden / steps;
+            } else {
+                cost.movement_s = movement_cost(model, system, p, p.replan_interval);
+            }
         }
         Strategy::TokenToExpert { accuracy, overhead_s } => {
             let eps = (1.0 - accuracy).clamp(0.0, 1.0);
@@ -137,17 +157,35 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
             cost.scatter_s = balanced_a2a * eps;
             cost.gather_s = balanced_a2a * eps;
             // The decode-phase crux: every step routes brand-new tokens,
-            // so the predictor runs — and is paid — every step.
-            cost.overhead_s = overhead_s;
-            // TEP replans per step: movement never amortises.
-            cost.movement_s = movement_cost(model, system, p, 1);
+            // so the predictor runs — and is paid — every step. Under
+            // lookahead overlap the next layer's forecast runs while this
+            // layer computes, so the attention window hides the transfer
+            // first and then the predictor (ADR 002).
+            if p.lookahead_overlap {
+                let raw = raw_movement(model, system);
+                let (mv, oh, hidden) =
+                    moe::overlap_split(raw, overhead_s, p.attention_compute_s);
+                cost.movement_s = mv;
+                cost.overhead_s = oh;
+                cost.hidden_s = hidden;
+            } else {
+                cost.overhead_s = overhead_s;
+                // TEP replans per step: movement never amortises.
+                cost.movement_s = movement_cost(model, system, p, 1);
+            }
         }
     }
     cost
 }
 
+/// Raw expert-movement transfer time (the full once-per-replan move).
+fn raw_movement(model: &ModelConfig, system: &SystemSpec) -> f64 {
+    collective::p2p_time(&system.interconnect, model.expert_bytes())
+}
+
 /// Expert-movement cost not hidden under attention, amortised over the
-/// replanning cadence.
+/// replanning cadence — the blanket assumption; the overlap model prices
+/// it explicitly instead (`moe::overlap_split`).
 fn movement_cost(
     model: &ModelConfig,
     system: &SystemSpec,
@@ -220,6 +258,8 @@ pub struct DecodeSim {
     pub error_model: ErrorModel,
     pub hide_duplication: bool,
     pub replan_interval: usize,
+    /// Price the lookahead-overlap serving engine (ADR 002).
+    pub lookahead_overlap: bool,
 }
 
 impl DecodeSim {
@@ -234,12 +274,18 @@ impl DecodeSim {
             error_model: ErrorModel::Typical,
             hide_duplication: true,
             replan_interval: 1,
+            lookahead_overlap: false,
         }
     }
 
     pub fn with_workload(mut self, batch: usize, ctx_len: usize) -> DecodeSim {
         self.batch = batch;
         self.ctx_len = ctx_len;
+        self
+    }
+
+    pub fn with_overlap(mut self, on: bool) -> DecodeSim {
+        self.lookahead_overlap = on;
         self
     }
 
@@ -272,6 +318,7 @@ impl DecodeSim {
         p.hide_duplication = self.hide_duplication;
         p.attention_compute_s = attention_compute_s;
         p.replan_interval = self.replan_interval;
+        p.lookahead_overlap = self.lookahead_overlap;
         decode_moe_cost(&self.model, &self.system, &p)
     }
 
@@ -291,6 +338,7 @@ impl DecodeSim {
             gather_s: moe.gather_s,
             overhead_s: moe.overhead_s,
             movement_s: moe.movement_s,
+            hidden_s: moe.hidden_s,
         }
     }
 
@@ -390,6 +438,64 @@ mod tests {
         p.replan_interval = 8;
         let amortised = decode_moe_cost(&m, &s, &p).movement_s;
         assert!((per_step / amortised - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookahead_overlap_softens_decode_tep_overhead() {
+        let (m, s) = mixtral_nvlink();
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-3,
+        };
+        let mut p = DecodeParams::new(16, 512, 1.4, strategy);
+        p.attention_compute_s = 1.0; // window larger than transfer + predict
+        let plain = decode_moe_cost(&m, &s, &p);
+        assert_eq!(plain.overhead_s, 1e-3);
+        p.lookahead_overlap = true;
+        let overlapped = decode_moe_cost(&m, &s, &p);
+        assert_eq!(overlapped.overhead_s, 0.0, "overhead hidden under the window");
+        assert!(overlapped.hidden_s >= 1e-3);
+        assert!(overlapped.total() < plain.total());
+        // DOP under overlap: cadence-amortised transfer hides too.
+        let mut pd = DecodeParams::new(
+            16,
+            512,
+            1.4,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        pd.attention_compute_s = 1.0;
+        pd.replan_interval = 8;
+        pd.lookahead_overlap = true;
+        let dop = decode_moe_cost(&m, &s, &pd);
+        assert_eq!(dop.movement_s, 0.0);
+        assert!(dop.hidden_s > 0.0);
+    }
+
+    #[test]
+    fn decode_sim_overlap_never_slower_than_exposed_ablation() {
+        // The fair comparison for the explicit overlap model is the
+        // explicit *exposed* ablation (hide_duplication = false), not the
+        // paper's blanket everything-hides assumption: overlap hides the
+        // same transfer window plus the predictor, so it can only help.
+        let (m, s) = mixtral_nvlink();
+        let mut base = DecodeSim::new(m.clone(), s.clone());
+        base.hide_duplication = false;
+        let over = DecodeSim::new(m, s).with_overlap(true);
+        for strategy in [
+            Strategy::NoPrediction,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: 1e-4,
+            },
+        ] {
+            let a = base.step_total(1.4, strategy);
+            let b = over.step_total(1.4, strategy);
+            assert!(
+                b <= a + 1e-12,
+                "overlap must never price slower than exposed: {a} vs {b} ({strategy:?})"
+            );
+        }
     }
 
     #[test]

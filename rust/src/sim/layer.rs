@@ -14,7 +14,10 @@ use super::ErrorModel;
 use crate::model::ModelConfig;
 use crate::util::json::Value;
 
-/// Per-component latency breakdown for one transformer layer.
+/// Per-component latency breakdown for one transformer layer. With the
+/// overlap model (ADR 002) `overhead_s`/`movement_s` hold only the
+/// *exposed* residues; `hidden_s` reports what the lookahead window
+/// absorbed (informational — never part of [`LayerBreakdown::total`]).
 #[derive(Clone, Debug)]
 pub struct LayerBreakdown {
     pub attention_s: f64,
@@ -25,6 +28,7 @@ pub struct LayerBreakdown {
     pub gather_s: f64,
     pub overhead_s: f64,
     pub movement_s: f64,
+    pub hidden_s: f64,
 }
 
 impl LayerBreakdown {
@@ -54,6 +58,7 @@ impl LayerBreakdown {
             .set("gather_s", Value::Num(self.gather_s))
             .set("overhead_s", Value::Num(self.overhead_s))
             .set("movement_s", Value::Num(self.movement_s))
+            .set("hidden_s", Value::Num(self.hidden_s))
             .set("total_s", Value::Num(self.total()));
         v
     }
@@ -68,6 +73,8 @@ pub struct LayerSim {
     pub seq: usize,
     pub error_model: ErrorModel,
     pub hide_duplication: bool,
+    /// Price the lookahead-overlap serving engine (ADR 002).
+    pub lookahead_overlap: bool,
 }
 
 impl LayerSim {
@@ -80,12 +87,18 @@ impl LayerSim {
             seq: 512,
             error_model: ErrorModel::Typical,
             hide_duplication: true,
+            lookahead_overlap: false,
         }
     }
 
     pub fn with_workload(mut self, batch: usize, seq: usize) -> LayerSim {
         self.batch = batch;
         self.seq = seq;
+        self
+    }
+
+    pub fn with_overlap(mut self, on: bool) -> LayerSim {
+        self.lookahead_overlap = on;
         self
     }
 
@@ -119,6 +132,7 @@ impl LayerSim {
         p.error_model = self.error_model;
         p.hide_duplication = self.hide_duplication;
         p.attention_compute_s = attention_compute_s;
+        p.lookahead_overlap = self.lookahead_overlap;
         moe::moe_cost(&self.model, &self.system, &p)
     }
 
@@ -135,6 +149,7 @@ impl LayerSim {
             gather_s: moe.gather_s,
             overhead_s: moe.overhead_s,
             movement_s: moe.movement_s,
+            hidden_s: moe.hidden_s,
         }
     }
 
@@ -218,6 +233,34 @@ mod tests {
         let hi = total(0.999);
         assert!(mid < lo, "mid={mid} lo={lo}");
         assert!(mid < hi, "mid={mid} hi={hi}");
+    }
+
+    #[test]
+    fn overlap_improves_tep_and_reports_hidden_time() {
+        let s = sim();
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-4,
+        };
+        let plain = s.breakdown(1.4, strategy);
+        let over = sim().with_overlap(true).breakdown(1.4, strategy);
+        assert!(over.overhead_s <= plain.overhead_s);
+        assert!(over.hidden_s > 0.0, "overlap must hide something");
+        assert_eq!(plain.hidden_s, 0.0);
+        // hidden_s never counts toward total.
+        assert!(
+            (over.total()
+                - (over.attention_s
+                    + over.allreduce_s
+                    + over.router_s
+                    + over.ffn_s
+                    + over.scatter_s
+                    + over.gather_s
+                    + over.overhead_s
+                    + over.movement_s))
+                .abs()
+                < 1e-15
+        );
     }
 
     #[test]

@@ -56,11 +56,14 @@ pub struct MoeCost {
     pub ffn_s: f64,
     /// Post-FFN all-to-all gather.
     pub gather_s: f64,
-    /// Prediction overhead (TEP only).
+    /// Prediction overhead (TEP only) *not* hidden by lookahead overlap.
     pub overhead_s: f64,
     /// Expert-movement time *not* hidden under attention (0 by default,
-    /// see [`MoeParams::hide_duplication`]).
+    /// see [`MoeParams::hide_duplication`] / [`MoeParams::lookahead_overlap`]).
     pub movement_s: f64,
+    /// Movement + prediction time absorbed by the lookahead window
+    /// (informational; never part of [`MoeCost::total`]).
+    pub hidden_s: f64,
 }
 
 impl MoeCost {
@@ -99,6 +102,13 @@ pub struct MoeParams {
     /// unchanged (skew-scaled); if true, model the alternative where
     /// duplication also balances the all-to-all destinations (skew → 1).
     pub dop_balanced_comm: bool,
+    /// ADR 002: model the serving engine's lookahead overlap. Replaces the
+    /// paper's blanket "transfers hide under attention" assumption
+    /// (`hide_duplication`, which this flag supersedes) with the explicit
+    /// `max(compute, exposed_transfer + exposed_predict)` form: the
+    /// attention window hides the duplication transfer first, then the
+    /// prediction overhead; only the residue is charged.
+    pub lookahead_overlap: bool,
 }
 
 impl MoeParams {
@@ -113,8 +123,25 @@ impl MoeParams {
             attention_compute_s: 0.0,
             prediction_interval: 1,
             dop_balanced_comm: false,
+            lookahead_overlap: false,
         }
     }
+}
+
+/// Split raw (movement, prediction) costs into exposed residues under the
+/// overlap window: the window absorbs the duplication transfer first, then
+/// the prediction; the remainder lands on the critical path. Returns
+/// `(exposed_movement, exposed_overhead, hidden)`; the sum of all exposed
+/// and hidden parts equals `movement_raw + overhead_raw`, making the total
+/// layer time `compute + max(0, movement + overhead − window)` — i.e.
+/// `max(compute, exposed_transfer + exposed_predict)` when the window is
+/// the full compute time (ADR 002).
+pub fn overlap_split(movement_raw: f64, overhead_raw: f64, window: f64) -> (f64, f64, f64) {
+    let exposed_movement = (movement_raw - window).max(0.0);
+    let window_left = (window - movement_raw).max(0.0);
+    let exposed_overhead = (overhead_raw - window_left).max(0.0);
+    let hidden = (movement_raw - exposed_movement) + (overhead_raw - exposed_overhead);
+    (exposed_movement, exposed_overhead, hidden)
 }
 
 /// Simulate the MoE stage (scatter → expert FFN → gather) of one layer.
@@ -160,7 +187,14 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
             let a2a = if p.dop_balanced_comm { balanced_a2a } else { skewed_a2a };
             cost.scatter_s = a2a;
             cost.gather_s = a2a;
-            cost.movement_s = movement_cost(model, system, p);
+            if p.lookahead_overlap {
+                let raw = raw_movement(model, system);
+                let (mv, _oh, hidden) = overlap_split(raw, 0.0, p.attention_compute_s);
+                cost.movement_s = mv;
+                cost.hidden_s = hidden;
+            } else {
+                cost.movement_s = movement_cost(model, system, p);
+            }
         }
         Strategy::TokenToExpert { accuracy, overhead_s } => {
             let eps = (1.0 - accuracy).clamp(0.0, 1.0);
@@ -171,21 +205,40 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
             cost.scatter_s = balanced_a2a * eps;
             cost.gather_s = balanced_a2a * eps;
             // §3.1: amortise predictor overhead over the prediction interval.
-            cost.overhead_s = overhead_s / p.prediction_interval.max(1) as f64;
-            cost.movement_s = movement_cost(model, system, p);
+            let overhead_amortised = overhead_s / p.prediction_interval.max(1) as f64;
+            if p.lookahead_overlap {
+                // ADR 002: the predictor forecasts layer L+1 while layer L
+                // computes, so its runtime hides under the same window as
+                // the duplication transfer (transfer first).
+                let raw = raw_movement(model, system);
+                let (mv, oh, hidden) =
+                    overlap_split(raw, overhead_amortised, p.attention_compute_s);
+                cost.movement_s = mv;
+                cost.overhead_s = oh;
+                cost.hidden_s = hidden;
+            } else {
+                cost.overhead_s = overhead_amortised;
+                cost.movement_s = movement_cost(model, system, p);
+            }
         }
     }
     cost
 }
 
-/// Expert-movement (duplication) cost not hidden under attention. The paper
-/// assumes one expert sent + received per GPU per layer (§5).
+/// Raw expert-movement (duplication) transfer time: one expert sent +
+/// received per GPU per layer (paper §5).
+fn raw_movement(model: &ModelConfig, system: &SystemSpec) -> f64 {
+    collective::p2p_time(&system.interconnect, model.expert_bytes())
+}
+
+/// Expert-movement cost not hidden under attention — the paper's blanket
+/// assumption (`hide_duplication`); the overlap model prices it explicitly
+/// instead ([`overlap_split`]).
 fn movement_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> f64 {
     if p.hide_duplication {
         return 0.0;
     }
-    let transfer = collective::p2p_time(&system.interconnect, model.expert_bytes());
-    (transfer - p.attention_compute_s).max(0.0)
+    (raw_movement(model, system) - p.attention_compute_s).max(0.0)
 }
 
 #[cfg(test)]
@@ -346,6 +399,62 @@ mod tests {
         let balanced = moe_cost(&m, &s, &p);
         assert!(balanced.comm_s() < unchanged.comm_s());
         assert_eq!(balanced.ffn_s, unchanged.ffn_s);
+    }
+
+    #[test]
+    fn overlap_split_arithmetic() {
+        // Window absorbs movement first, then prediction.
+        let (mv, oh, hidden) = overlap_split(2.0, 3.0, 4.0);
+        assert_eq!(mv, 0.0);
+        assert_eq!(oh, 1.0);
+        assert_eq!(hidden, 4.0);
+        // Nothing hides without a window.
+        let (mv, oh, hidden) = overlap_split(2.0, 3.0, 0.0);
+        assert_eq!((mv, oh, hidden), (2.0, 3.0, 0.0));
+        // Everything hides under a big window.
+        let (mv, oh, hidden) = overlap_split(2.0, 3.0, 100.0);
+        assert_eq!((mv, oh, hidden), (0.0, 0.0, 5.0));
+        // Conservation: exposed + hidden = raw.
+        for window in [0.0, 0.5, 1.7, 2.0, 4.9, 10.0] {
+            let (mv, oh, hidden) = overlap_split(2.0, 3.0, window);
+            assert!((mv + oh + hidden - 5.0).abs() < 1e-12, "window={window}");
+        }
+    }
+
+    #[test]
+    fn lookahead_overlap_hides_tep_overhead_under_attention() {
+        let (m, s) = mixtral_nvlink();
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-3,
+        };
+        let mut p = MoeParams::new(1, 512, 1.4, strategy);
+        p.attention_compute_s = 10.0; // huge window
+        let plain = moe_cost(&m, &s, &p);
+        assert_eq!(plain.overhead_s, 1e-3, "no overlap: overhead exposed");
+        p.lookahead_overlap = true;
+        let overlapped = moe_cost(&m, &s, &p);
+        assert_eq!(overlapped.overhead_s, 0.0, "overlap: overhead hidden");
+        assert_eq!(overlapped.movement_s, 0.0);
+        assert!(overlapped.hidden_s > 1e-3, "hidden must include overhead + transfer");
+        assert!(overlapped.total() < plain.total());
+        // Zero window: movement + overhead fully exposed (worse than the
+        // blanket hide_duplication assumption for DOP-style movement).
+        p.attention_compute_s = 0.0;
+        let exposed = moe_cost(&m, &s, &p);
+        assert_eq!(exposed.hidden_s, 0.0);
+        assert_eq!(exposed.overhead_s, 1e-3);
+        assert!(exposed.movement_s > 0.0, "transfer exposed without a window");
+    }
+
+    #[test]
+    fn lookahead_overlap_leaves_baseline_untouched() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(1, 512, 2.0, Strategy::NoPrediction);
+        let plain = moe_cost(&m, &s, &p);
+        p.lookahead_overlap = true;
+        p.attention_compute_s = 1.0;
+        assert_eq!(moe_cost(&m, &s, &p), plain);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Property tests for the FFN-phase group machinery (§Perf iterations 1
+//! and 3): dispatch grouping → runt merging → greedy LPT placement over
+//! replica hosts, as extracted into `coordinator::pipeline`.
+//!
+//! Invariants pinned here:
+//! * every routed expert call (slot) is assigned to exactly one
+//!   (worker, expert) group, before and after merging + LPT;
+//! * groups only land on workers that host the expert in the plan;
+//! * the pass is a pure function: identical inputs (fixed seed) give
+//!   identical placements;
+//! * under the static plan (no replicas) the pass is the identity — the
+//!   baseline is never perturbed;
+//! * no host pays more padded expert-FFN calls for one expert than that
+//!   expert's single home host pays under the static plan (the
+//!   padded-call bound: `padded_rows` is monotone, and a host's share of
+//!   an expert never exceeds the whole).
+
+use std::collections::BTreeMap;
+
+use moe_gps::coordinator::pipeline::{
+    group_slots_by_assignment, lpt_place, merge_runt_groups, padded_rows, MIN_GROUP,
+};
+use moe_gps::coordinator::placement_mgr::{LayerPlan, PlacementManager};
+use moe_gps::coordinator::router::Slot;
+use moe_gps::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
+use moe_gps::testing;
+use moe_gps::util::rng::Rng;
+
+const BUCKETS: [usize; 4] = [8, 16, 32, 64];
+
+struct Case {
+    n_experts: usize,
+    n_workers: usize,
+    slots: Vec<Slot>,
+    plan: LayerPlan,
+    static_plan: LayerPlan,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case {{ experts: {}, workers: {}, slots: {}, replicas: {:?} }}",
+            self.n_experts,
+            self.n_workers,
+            self.slots.len(),
+            self.plan.added
+        )
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let n_experts = rng.range(4, 10);
+    let n_workers = rng.range(2, 5);
+    let mgr = PlacementManager::new(n_experts, n_workers, 1, n_experts, n_workers);
+    // Skewed-ish counts so the planner sometimes replicates.
+    let hot = rng.range(0, n_experts);
+    let n_slots = rng.range(1, 400);
+    let slots: Vec<Slot> = (0..n_slots)
+        .map(|i| {
+            let expert = if rng.range(0, 100) < 60 {
+                hot
+            } else {
+                rng.range(0, n_experts)
+            };
+            Slot {
+                seq_idx: 0,
+                token_idx: i,
+                expert: expert as u8,
+                gate: 1.0,
+            }
+        })
+        .collect();
+    let mut counts = vec![0usize; n_experts];
+    for s in &slots {
+        counts[s.expert as usize] += 1;
+    }
+    Case {
+        n_experts,
+        n_workers,
+        slots,
+        plan: mgr.plan_from_counts(&counts),
+        static_plan: mgr.static_plan(),
+    }
+}
+
+/// Run the full pass (dispatch → group → merge → LPT) under a plan.
+fn run_pass(case: &Case, plan: &LayerPlan) -> BTreeMap<(usize, usize), Vec<usize>> {
+    let experts: Vec<u8> = case.slots.iter().map(|s| s.expert).collect();
+    let (assignment, _) = if plan.share.is_empty() {
+        dispatch_tokens(&experts, &plan.placement)
+    } else {
+        dispatch_with_quota(&experts, &plan.placement, &plan.share)
+    };
+    let mut groups = group_slots_by_assignment(&assignment, &case.slots);
+    merge_runt_groups(&mut groups, MIN_GROUP);
+    lpt_place(groups, plan, case.n_workers, &BUCKETS)
+}
+
+#[test]
+fn property_every_call_assigned_exactly_once_and_respects_placement() {
+    testing::forall_config(
+        testing::Config {
+            cases: 128,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let placed = run_pass(case, &case.plan);
+            let mut seen: Vec<usize> = placed.values().flatten().copied().collect();
+            seen.sort_unstable();
+            let expected: Vec<usize> = (0..case.slots.len()).collect();
+            if seen != expected {
+                return Err(format!(
+                    "slots not a partition: {} placed of {}",
+                    seen.len(),
+                    case.slots.len()
+                ));
+            }
+            for (&(worker, expert), slot_indices) in &placed {
+                if !case.plan.placement.hosts(expert, worker) {
+                    return Err(format!("group ({worker}, {expert}) on a non-host"));
+                }
+                for &si in slot_indices {
+                    if case.slots[si].expert as usize != expert {
+                        return Err(format!("slot {si} in the wrong expert group"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_pass_is_deterministic() {
+    testing::forall_config(
+        testing::Config {
+            cases: 64,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            if run_pass(case, &case.plan) != run_pass(case, &case.plan) {
+                return Err("two identical runs disagreed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_static_plan_is_identity() {
+    testing::forall_config(
+        testing::Config {
+            cases: 64,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            // Under the static plan each expert has one host, so dispatch
+            // grouping IS the final placement: merging finds nothing to
+            // fold and LPT has a single candidate per group.
+            let experts: Vec<u8> = case.slots.iter().map(|s| s.expert).collect();
+            let (assignment, _) = dispatch_tokens(&experts, &case.static_plan.placement);
+            let groups = group_slots_by_assignment(&assignment, &case.slots);
+            let placed = run_pass(case, &case.static_plan);
+            if placed != groups {
+                return Err("static-plan pass must be the identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_per_expert_padded_calls_bounded_by_static_home() {
+    testing::forall_config(
+        testing::Config {
+            cases: 128,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let placed = run_pass(case, &case.plan);
+            let mut totals = vec![0usize; case.n_experts];
+            for s in &case.slots {
+                totals[s.expert as usize] += 1;
+            }
+            for (&(worker, expert), slot_indices) in &placed {
+                let host_padded = padded_rows(&BUCKETS, slot_indices.len());
+                let home_padded = padded_rows(&BUCKETS, totals[expert]);
+                if host_padded > home_padded {
+                    return Err(format!(
+                        "host {worker} pays {host_padded} padded rows for expert \
+                         {expert}, but its static home pays only {home_padded}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn padded_rows_monotone_over_wide_range() {
+    // The bound above rests on split_into_buckets' padded total being
+    // monotone in the slot count; pin that here over a wide range.
+    let mut prev = 0usize;
+    for n in 0..2000 {
+        let p = padded_rows(&BUCKETS, n);
+        assert!(p >= prev, "padded_rows not monotone at {n}: {prev} -> {p}");
+        assert!(p >= n);
+        prev = p;
+    }
+}
+
+#[test]
+fn merged_groups_meet_min_group_or_are_sole_hosts() {
+    testing::forall_config(
+        testing::Config {
+            cases: 64,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let experts: Vec<u8> = case.slots.iter().map(|s| s.expert).collect();
+            let (assignment, _) = if case.plan.share.is_empty() {
+                dispatch_tokens(&experts, &case.plan.placement)
+            } else {
+                dispatch_with_quota(&experts, &case.plan.placement, &case.plan.share)
+            };
+            let mut groups = group_slots_by_assignment(&assignment, &case.slots);
+            merge_runt_groups(&mut groups, MIN_GROUP);
+            // After merging, a runt group may only survive as its expert's
+            // sole remaining group.
+            for (&(_, expert), slot_indices) in &groups {
+                if slot_indices.len() < MIN_GROUP {
+                    let siblings = groups.keys().filter(|&&(_, e)| e == expert).count();
+                    if siblings != 1 {
+                        return Err(format!(
+                            "runt group of expert {expert} survived with {siblings} \
+                             sibling groups"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,285 @@
+//! Golden-output parity for the unified layer pipeline (ADR 002).
+//!
+//! The refactor's contract: extracting `serve_round`/`decode_step` into
+//! the shared stage engine changes *nothing* about the numerics. The
+//! pre-refactor path computed, per layer, attention → router → top-k →
+//! per-slot expert FFN → `h += gate · out`; the oracle below replays that
+//! straight-line computation on the leader engine alone (no workers, no
+//! dispatch, no buckets beyond a single tile) and the pipeline must match
+//! it **bitwise** — possible because the combine stage accumulates in
+//! global slot order and every expert-FFN output row depends only on its
+//! own activation row.
+//!
+//! On top of the oracle, parity must hold across every axis the pipeline
+//! refactor introduced: prediction strategy (duplication is a performance
+//! mechanism, never a numerics change), `lookahead` on/off (prewarm moves
+//! bytes, not values), and repeated runs (determinism). Token counts in
+//! the metrics must agree everywhere too.
+
+use std::collections::BTreeMap;
+
+use moe_gps::coordinator::request::{Request, RequestGen};
+use moe_gps::coordinator::router::route_sequence;
+use moe_gps::coordinator::{Coordinator, DecodeOptions, DecodeReport, ServeStrategy};
+use moe_gps::runtime::tensor::IntTensor;
+use moe_gps::runtime::{Engine, EngineSource, HostTensor, In, SyntheticSpec};
+
+fn source() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::small_test())
+}
+
+fn mk_rounds(seed: u64, n_rounds: usize, n_seqs: usize) -> Vec<Vec<Request>> {
+    let mut gen = RequestGen::new(seed, 512);
+    (0..n_rounds)
+        .map(|_| (0..n_seqs).map(|_| gen.request_varlen(8, 24)).collect())
+        .collect()
+}
+
+/// Serve the given rounds, returning the last round's metrics token
+/// counts and every round's outputs.
+fn serve_prefill(
+    strategy: ServeStrategy,
+    lookahead: bool,
+    rounds: Vec<Vec<Request>>,
+) -> (Vec<(usize, usize)>, Vec<Vec<HostTensor>>) {
+    let mut coord = Coordinator::with_source(&source(), 4, strategy).unwrap();
+    coord.lookahead = lookahead;
+    let mut counts = Vec::new();
+    let mut outputs = Vec::new();
+    for round in rounds {
+        let (m, out) = coord.serve_round(&round).unwrap();
+        counts.push((m.n_tokens, m.n_slots));
+        outputs.push(out);
+    }
+    (counts, outputs)
+}
+
+fn assert_bitwise_eq(a: &[Vec<HostTensor>], b: &[Vec<HostTensor>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what}: round {round} seq count");
+        for (seq, (ta, tb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(ta.shape, tb.shape, "{what}: round {round} seq {seq} shape");
+            for (i, (&x, &y)) in ta.data.iter().zip(&tb.data).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: round {round} seq {seq} elem {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+/// Straight-line single-engine replay of the pre-refactor forward: embed
+/// the padded prompt, then per layer attention → router → top-k → per-slot
+/// expert FFN (single padded tile each) → combine in slot order.
+fn oracle_outputs(rounds: &[Vec<Request>]) -> Vec<Vec<HostTensor>> {
+    let mut engine = Engine::synthetic(&SyntheticSpec::small_test()).unwrap();
+    let cfg = engine.manifest().config.clone();
+    let d = cfg.req_usize("d_model").unwrap();
+    let e = cfg.req_usize("n_experts").unwrap();
+    let n_layers = cfg.req_usize("n_layers").unwrap();
+    let top_k = cfg.req_usize("top_k").unwrap();
+    let s_max = cfg.req_usize("seq_len").unwrap();
+    let tile = engine.manifest().ffn_buckets()[0];
+
+    let mut all = Vec::new();
+    for round in rounds {
+        let mut outputs = Vec::new();
+        for req in round {
+            let n = req.tokens.len().min(s_max);
+            let mut ids: Vec<i32> = req.tokens[..n].iter().map(|&t| t as i32).collect();
+            ids.resize(s_max, 0);
+            let ids = IntTensor::new(ids, vec![1, s_max]);
+            let mut h = engine
+                .call("embed", &[In::I(&ids), In::W("embed")])
+                .unwrap()
+                .remove(0);
+            for layer in 0..n_layers {
+                let names = [
+                    format!("layers.{layer}.attn.ln"),
+                    format!("layers.{layer}.attn.wq"),
+                    format!("layers.{layer}.attn.wk"),
+                    format!("layers.{layer}.attn.wv"),
+                    format!("layers.{layer}.attn.wo"),
+                ];
+                h = engine
+                    .call(
+                        "attention",
+                        &[
+                            In::T(&h),
+                            In::W(&names[0]),
+                            In::W(&names[1]),
+                            In::W(&names[2]),
+                            In::W(&names[3]),
+                            In::W(&names[4]),
+                        ],
+                    )
+                    .unwrap()
+                    .remove(0);
+                let ln = format!("layers.{layer}.moe.ln");
+                let wr = format!("layers.{layer}.moe.router");
+                let mut out = engine
+                    .call("router", &[In::T(&h), In::W(&ln), In::W(&wr)])
+                    .unwrap();
+                let logits = out.remove(1);
+                let xn = out.remove(0);
+                let slots = route_sequence(0, &logits.data, e, n, top_k);
+                for slot in &slots {
+                    let row = HostTensor::new(xn.row(slot.token_idx).to_vec(), vec![1, d])
+                        .pad_rows_to(tile);
+                    let ew = [
+                        format!("layers.{layer}.experts.{}.w_gate", slot.expert),
+                        format!("layers.{layer}.experts.{}.w_up", slot.expert),
+                        format!("layers.{layer}.experts.{}.w_down", slot.expert),
+                    ];
+                    let ffn = engine
+                        .call(
+                            &format!("expert_ffn_b{tile}"),
+                            &[In::T(&row), In::W(&ew[0]), In::W(&ew[1]), In::W(&ew[2])],
+                        )
+                        .unwrap()
+                        .remove(0);
+                    let dst =
+                        &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
+                    for (a, &b) in dst.iter_mut().zip(ffn.row(0)) {
+                        *a += slot.gate * b;
+                    }
+                }
+            }
+            outputs.push(h.gather_rows(&(0..n).collect::<Vec<_>>()));
+        }
+        all.push(outputs);
+    }
+    all
+}
+
+#[test]
+fn pipeline_matches_serial_oracle_bitwise() {
+    let rounds = mk_rounds(41, 2, 3);
+    let oracle = oracle_outputs(&rounds);
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        for lookahead in [false, true] {
+            let (_, got) = serve_prefill(strategy, lookahead, rounds.clone());
+            assert_bitwise_eq(
+                &oracle,
+                &got,
+                &format!("oracle vs {strategy:?} lookahead={lookahead}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prefill_strategies_and_lookahead_agree_bitwise_with_equal_token_counts() {
+    let rounds = mk_rounds(7, 3, 4);
+    let (base_counts, base_out) =
+        serve_prefill(ServeStrategy::NoPrediction, false, rounds.clone());
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        for lookahead in [false, true] {
+            let (counts, out) = serve_prefill(strategy, lookahead, rounds.clone());
+            assert_eq!(
+                counts, base_counts,
+                "token/slot counts diverged: {strategy:?} lookahead={lookahead}"
+            );
+            assert_bitwise_eq(
+                &base_out,
+                &out,
+                &format!("{strategy:?} lookahead={lookahead}"),
+            );
+        }
+    }
+}
+
+fn serve_decode(strategy: ServeStrategy, lookahead: bool) -> DecodeReport {
+    let mut coord = Coordinator::with_source(&source(), 4, strategy).unwrap();
+    coord.lookahead = lookahead;
+    coord.placement.replan_interval = 2;
+    let mut gen = RequestGen::new(23, 512);
+    let requests: Vec<Request> = (0..4).map(|_| gen.decode_request(6, 5)).collect();
+    coord
+        .serve_decode(requests, &DecodeOptions {
+            max_active: 3,
+            max_steps: 64,
+            temperature: 0.0, // greedy: fully deterministic
+            seed: 5,
+            arrival_interval: 0,
+        })
+        .unwrap()
+}
+
+/// Per-step routing fingerprint: identical hidden states imply identical
+/// routing imply identical slot counts — and greedy sampling feeds the
+/// same tokens into every subsequent step, so the whole trajectory pins
+/// the numerics across strategies and lookahead regimes.
+fn decode_fingerprint(report: &DecodeReport) -> Vec<(usize, usize, usize, usize)> {
+    report
+        .steps
+        .iter()
+        .map(|s| (s.step, s.n_prefill_tokens, s.n_decode_tokens, s.n_slots))
+        .collect()
+}
+
+#[test]
+fn decode_strategies_and_lookahead_agree_on_the_whole_trajectory() {
+    let base = decode_fingerprint(&serve_decode(ServeStrategy::NoPrediction, false));
+    assert!(!base.is_empty());
+    for strategy in [
+        ServeStrategy::NoPrediction,
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        for lookahead in [false, true] {
+            let got = decode_fingerprint(&serve_decode(strategy, lookahead));
+            assert_eq!(
+                got, base,
+                "decode trajectory diverged: {strategy:?} lookahead={lookahead}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lookahead_accounts_transfers_and_never_invents_bytes() {
+    // With lookahead on, the cold start must report hidden transfer bytes
+    // (the acceptance check behind `serve --lookahead 1`), and the total
+    // must stay consistent: hidden + exposed = total.
+    let mut totals: BTreeMap<bool, u64> = BTreeMap::new();
+    for lookahead in [false, true] {
+        let mut coord =
+            Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+        coord.lookahead = lookahead;
+        let rounds = mk_rounds(77, 3, 4);
+        let mut hidden = 0u64;
+        let mut total = 0u64;
+        for round in rounds {
+            let (m, _) = coord.serve_round(&round).unwrap();
+            assert_eq!(
+                m.hidden_upload_bytes + m.exposed_upload_bytes,
+                m.upload_bytes,
+                "hidden + exposed must equal total"
+            );
+            hidden += m.hidden_upload_bytes;
+            total += m.upload_bytes;
+        }
+        if lookahead {
+            assert!(hidden > 0, "lookahead must hide > 0 transfer bytes");
+        } else {
+            assert_eq!(hidden, 0, "without lookahead nothing is prewarmed");
+        }
+        totals.insert(lookahead, total);
+    }
+    // The same weights move either way — lookahead changes *when*, not
+    // *whether*. (Lookahead may prewarm replicas a later plan never uses,
+    // so its total is allowed to be >= the lazy path's.)
+    assert!(totals[&true] >= totals[&false]);
+}
