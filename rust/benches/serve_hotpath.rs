@@ -1,14 +1,23 @@
-//! Bench: **E2E serving hot path** — the real coordinator over PJRT
-//! (requires `make artifacts`; prints a skip message otherwise). This is
-//! the §Perf measurement target: round latency per strategy, plus the
-//! coordinator-side micro hot paths (top-k routing, gather/pad, combine).
+//! Bench: **E2E serving hot path** — the real coordinator (artifacts
+//! when present, synthetic tiny model otherwise). This is the §Perf
+//! measurement target: round latency and tokens/sec per strategy on the
+//! default 8-worker config, plus the coordinator-side micro hot paths
+//! (top-k routing, gather/pad, combine). Results are appended to
+//! `BENCH_serve.json` (schema `moe-gps/serve-bench/v1`) so the perf
+//! trajectory is tracked across PRs — the CI bench-smoke job runs this
+//! bench and validates the emitted file.
 
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
 use moe_gps::bench::{black_box, group, Bencher};
 use moe_gps::coordinator::request::RequestGen;
 use moe_gps::coordinator::router::route_sequence;
 use moe_gps::coordinator::{Coordinator, ServeStrategy};
 use moe_gps::runtime::HostTensor;
 use moe_gps::util::rng::Rng;
+
+/// The acceptance config for the serving hot path (ISSUE 3): 8 virtual
+/// GPUs, 2 sequences per round.
+const E2E_WORKERS: usize = 8;
 
 fn main() {
     group("coordinator micro hot paths (no PJRT)");
@@ -38,35 +47,63 @@ fn main() {
         println!("\nno AOT artifacts — E2E rounds run the synthetic tiny model");
     }
 
-    group("E2E serving rounds (4 virtual GPUs, 2 seqs/round)");
+    group(&format!(
+        "E2E serving rounds ({E2E_WORKERS} virtual GPUs, 2 seqs/round)"
+    ));
     let quick = Bencher::quick();
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
     for strategy in [
         ServeStrategy::NoPrediction,
         ServeStrategy::DistributionOnly,
         ServeStrategy::TokenToExpert,
     ] {
-        let mut coord = Coordinator::new(&artifacts, 4, strategy).unwrap();
+        let mut coord = Coordinator::new(&artifacts, E2E_WORKERS, strategy).unwrap();
         let mut gen = RequestGen::new(11, coord.vocab());
         let max_len = coord.seq_len();
-        // Warmup: compile + teach estimators.
+        // Warmup: compile + teach estimators + warm the tile pool.
         let warm: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
         coord.serve_round(&warm).unwrap();
         let reqs: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
+        let n_tokens: usize = reqs.iter().map(|r| r.tokens.len().min(max_len)).sum();
         let summary = quick.bench(&format!("serve_round_{}", strategy.name()), || {
             coord.serve_round(black_box(&reqs)).unwrap().0.n_tokens
         });
         summary.print();
+        let tokens_per_s = if summary.median_s > 0.0 {
+            n_tokens as f64 / summary.median_s
+        } else {
+            0.0
+        };
+        println!("    end-to-end: {tokens_per_s:.1} tok/s ({n_tokens} tokens/round)");
         // Strategy-specific stats from one measured round.
         let (m, _) = coord.serve_round(&reqs).unwrap();
         println!(
             "    breakdown: embed {} | predict+plan {} | attention {} | router {} | ffn {} \
-             | slot imbalance {:.3}",
+             | slot imbalance {:.3} | tile reuse {}/{}",
             moe_gps::util::human_time(m.embed_s),
             moe_gps::util::human_time(m.predictor_s),
             moe_gps::util::human_time(m.attention_s),
             moe_gps::util::human_time(m.router_s),
             moe_gps::util::human_time(m.ffn_wall_s),
             m.slot_imbalance(),
+            m.tile_reuses,
+            m.tile_allocs + m.tile_reuses,
         );
+        records.push(ServeBenchRecord {
+            bench: "serve_hotpath/round".into(),
+            strategy: strategy.name().into(),
+            lookahead: false,
+            tokens_per_s,
+            hidden_transfer_ns: m.hidden_transfer_s * 1e9,
+            exposed_transfer_ns: m.exposed_transfer_s * 1e9,
+            hidden_bytes: m.hidden_upload_bytes,
+            exposed_bytes: m.exposed_upload_bytes,
+        });
+    }
+
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("\nWARN: could not write {}: {err}", path.display()),
     }
 }

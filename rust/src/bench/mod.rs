@@ -216,6 +216,50 @@ pub mod emit {
             .unwrap_or_default()
     }
 
+    /// Validate a serve-bench trajectory file against the
+    /// `moe-gps/serve-bench/v1` schema (the CI bench-smoke gate:
+    /// `moe-gps bench-validate`). Checks the schema tag, that every
+    /// record parses, and that throughputs are finite and non-negative.
+    /// With `require_results`, an empty `results` array is an error.
+    /// Returns the number of valid records.
+    pub fn validate_serve_benches(
+        path: &Path,
+        require_results: bool,
+    ) -> anyhow::Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        let schema = v
+            .get("schema")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing `schema` field"))?;
+        anyhow::ensure!(
+            schema == SCHEMA,
+            "schema mismatch: got `{schema}`, want `{SCHEMA}`"
+        );
+        let results = v
+            .get("results")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing `results` array"))?;
+        for (i, r) in results.iter().enumerate() {
+            let rec = ServeBenchRecord::from_json(r)
+                .ok_or_else(|| anyhow::anyhow!("record {i} is malformed"))?;
+            anyhow::ensure!(
+                rec.tokens_per_s.is_finite() && rec.tokens_per_s >= 0.0,
+                "record {i} ({}) has invalid tokens_per_s {}",
+                rec.bench,
+                rec.tokens_per_s
+            );
+        }
+        anyhow::ensure!(
+            !require_results || !results.is_empty(),
+            "`results` is empty but records were required (run the serve \
+             benches first: cargo bench --bench serve_hotpath)"
+        );
+        Ok(results.len())
+    }
+
     /// Merge-write: replaces on-disk records with the same (bench,
     /// strategy, lookahead) key and keeps the rest, so independent bench
     /// binaries accumulate into one trajectory file.
@@ -286,6 +330,41 @@ pub mod emit {
             let path = std::env::temp_dir().join("moe_gps_bench_emit_missing.json");
             let _ = std::fs::remove_file(&path);
             assert!(read_serve_benches(&path).is_empty());
+        }
+
+        #[test]
+        fn validate_accepts_written_files_and_rejects_garbage() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_bench_validate_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            assert!(validate_serve_benches(&path, false).is_err(), "missing file");
+
+            record_serve_benches(&path, &[record("a", "dop", false, 1.5)]).unwrap();
+            assert_eq!(validate_serve_benches(&path, true).unwrap(), 1);
+
+            // Empty results: ok unless records are required.
+            std::fs::write(
+                &path,
+                format!("{{\"schema\": \"{SCHEMA}\", \"results\": []}}"),
+            )
+            .unwrap();
+            assert_eq!(validate_serve_benches(&path, false).unwrap(), 0);
+            assert!(validate_serve_benches(&path, true).is_err());
+
+            // Wrong schema tag.
+            std::fs::write(&path, "{\"schema\": \"nope\", \"results\": []}").unwrap();
+            assert!(validate_serve_benches(&path, false).is_err());
+
+            // Malformed record.
+            std::fs::write(
+                &path,
+                format!("{{\"schema\": \"{SCHEMA}\", \"results\": [{{\"bench\": 3}}]}}"),
+            )
+            .unwrap();
+            assert!(validate_serve_benches(&path, false).is_err());
+            let _ = std::fs::remove_file(&path);
         }
     }
 }

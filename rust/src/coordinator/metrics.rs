@@ -39,6 +39,17 @@ pub struct RoundMetrics {
     pub replicas_added: usize,
     /// Observed routing skewness averaged over layers.
     pub routing_skew: f64,
+    /// Tile buffers freshly heap-allocated on the FFN dispatch path
+    /// (gather/pad/scatter) — 0 in steady state once the pool is warm
+    /// (ADR 003).
+    pub tile_allocs: u64,
+    /// Tile buffers recycled from the coordinator's tile pool.
+    pub tile_reuses: u64,
+    /// Slots dispatched speculatively (layer-L+1 expert predicted during
+    /// layer L's FFN phase and confirmed by the router — §3.1 TEP).
+    pub spec_dispatch_slots: usize,
+    /// Slots that took the repair pass (mispredicted or extra top-k).
+    pub spec_repair_slots: usize,
 }
 
 impl RoundMetrics {
@@ -136,11 +147,28 @@ impl ServeReport {
         self.rounds.iter().map(|r| r.exposed_transfer_s).sum()
     }
 
+    pub fn total_tile_allocs(&self) -> u64 {
+        self.rounds.iter().map(|r| r.tile_allocs).sum()
+    }
+
+    pub fn total_tile_reuses(&self) -> u64 {
+        self.rounds.iter().map(|r| r.tile_reuses).sum()
+    }
+
+    pub fn total_spec_dispatch_slots(&self) -> usize {
+        self.rounds.iter().map(|r| r.spec_dispatch_slots).sum()
+    }
+
+    pub fn total_spec_repair_slots(&self) -> usize {
+        self.rounds.iter().map(|r| r.spec_repair_slots).sum()
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "strategy={:<18} rounds={:<3} tokens={:<6} throughput={:>9.1} tok/s  \
              mean latency={}  p95={}  ffn wall={}  slot imbalance={:.3}  \
-             busy imbalance={:.3}  dup transfer={} (hidden {} / exposed {})",
+             busy imbalance={:.3}  dup transfer={} (hidden {} / exposed {})  \
+             tile reuse={}/{}  spec slots={}/{}",
             self.strategy,
             self.rounds.len(),
             self.total_tokens(),
@@ -153,6 +181,10 @@ impl ServeReport {
             crate::util::human_bytes(self.total_upload_bytes() as f64),
             crate::util::human_bytes(self.total_hidden_upload_bytes() as f64),
             crate::util::human_bytes(self.total_exposed_upload_bytes() as f64),
+            self.total_tile_reuses(),
+            self.total_tile_allocs() + self.total_tile_reuses(),
+            self.total_spec_dispatch_slots(),
+            self.total_spec_dispatch_slots() + self.total_spec_repair_slots(),
         )
     }
 }
@@ -192,6 +224,14 @@ pub struct DecodeStepMetrics {
     pub routing_skew: f64,
     /// Whether the duplication plan was rebuilt this step (replan cadence).
     pub replanned: bool,
+    /// Tile buffers freshly allocated on the FFN dispatch path (ADR 003).
+    pub tile_allocs: u64,
+    /// Tile buffers recycled from the coordinator's tile pool.
+    pub tile_reuses: u64,
+    /// Slots dispatched speculatively (predicted expert confirmed).
+    pub spec_dispatch_slots: usize,
+    /// Slots that took the repair pass.
+    pub spec_repair_slots: usize,
 }
 
 impl DecodeStepMetrics {
@@ -299,6 +339,22 @@ impl DecodeReport {
         self.steps.iter().map(|s| s.exposed_transfer_s).sum()
     }
 
+    pub fn total_tile_allocs(&self) -> u64 {
+        self.steps.iter().map(|s| s.tile_allocs).sum()
+    }
+
+    pub fn total_tile_reuses(&self) -> u64 {
+        self.steps.iter().map(|s| s.tile_reuses).sum()
+    }
+
+    pub fn total_spec_dispatch_slots(&self) -> usize {
+        self.steps.iter().map(|s| s.spec_dispatch_slots).sum()
+    }
+
+    pub fn total_spec_repair_slots(&self) -> usize {
+        self.steps.iter().map(|s| s.spec_repair_slots).sum()
+    }
+
     pub fn replan_count(&self) -> usize {
         self.steps.iter().filter(|s| s.replanned).count()
     }
@@ -308,7 +364,7 @@ impl DecodeReport {
             "strategy={:<18} steps={:<4} decoded={:<6} throughput={:>8.1} tok/s  \
              steady={:>8.1} tok/s ({} steps)  mean step={}  p95={}  \
              slot imbalance={:.3}  replans={}  dup transfer={} \
-             (hidden {} / exposed {})",
+             (hidden {} / exposed {})  tile reuse={}/{}  spec slots={}/{}",
             self.strategy,
             self.steps.len(),
             self.total_decode_tokens(),
@@ -322,6 +378,10 @@ impl DecodeReport {
             crate::util::human_bytes(self.total_upload_bytes() as f64),
             crate::util::human_bytes(self.total_hidden_upload_bytes() as f64),
             crate::util::human_bytes(self.total_exposed_upload_bytes() as f64),
+            self.total_tile_reuses(),
+            self.total_tile_allocs() + self.total_tile_reuses(),
+            self.total_spec_dispatch_slots(),
+            self.total_spec_dispatch_slots() + self.total_spec_repair_slots(),
         )
     }
 }
@@ -430,5 +490,50 @@ mod tests {
         assert_eq!(serve.total_hidden_upload_bytes(), 10);
         assert_eq!(serve.total_exposed_upload_bytes(), 0);
         assert!(serve.summary().contains("hidden"));
+    }
+
+    #[test]
+    fn tile_and_spec_counters_aggregate() {
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![
+                RoundMetrics {
+                    tile_allocs: 5,
+                    tile_reuses: 0,
+                    spec_dispatch_slots: 3,
+                    spec_repair_slots: 7,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    tile_allocs: 0,
+                    tile_reuses: 9,
+                    spec_dispatch_slots: 4,
+                    spec_repair_slots: 6,
+                    ..Default::default()
+                },
+            ],
+        };
+        assert_eq!(serve.total_tile_allocs(), 5);
+        assert_eq!(serve.total_tile_reuses(), 9);
+        assert_eq!(serve.total_spec_dispatch_slots(), 7);
+        assert_eq!(serve.total_spec_repair_slots(), 13);
+        assert!(serve.summary().contains("tile reuse=9/14"));
+        assert!(serve.summary().contains("spec slots=7/20"));
+
+        let decode = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![DecodeStepMetrics {
+                tile_allocs: 2,
+                tile_reuses: 8,
+                spec_dispatch_slots: 1,
+                spec_repair_slots: 1,
+                ..Default::default()
+            }],
+        };
+        assert_eq!(decode.total_tile_allocs(), 2);
+        assert_eq!(decode.total_tile_reuses(), 8);
+        assert_eq!(decode.total_spec_dispatch_slots(), 1);
+        assert_eq!(decode.total_spec_repair_slots(), 1);
+        assert!(decode.summary().contains("tile reuse=8/10"));
     }
 }

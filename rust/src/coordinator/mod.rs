@@ -30,6 +30,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod tile_pool;
 pub mod worker;
 
 pub use batcher::Batcher;

@@ -33,13 +33,31 @@
 //! fan-out instead, so transfers queue behind attention work on the
 //! shared worker queues rather than ahead of it.
 //!
+//! **Speculative TEP scatter** (`Coordinator::speculative`, ADR 003 —
+//! the full §3.1 contract): with lookahead on and Token-to-Expert
+//! predictions in hand, each layer's per-token dispatch targets are
+//! derived from predictions + plan alone *during the previous layer's
+//! FFN phase* (no activations needed). At the FFN stage, slots whose
+//! routed expert confirms the prediction ship immediately — before the
+//! dispatcher/LPT machinery runs — so workers compute confirmed tiles
+//! while the leader plans the misprediction-*repair* pass for the rest
+//! (LPT seeded with the speculative load so repair work avoids the busy
+//! hosts).
+//!
+//! **Zero-alloc dispatch** (ADR 003): gather → pad → send → scatter run
+//! on pooled tile buffers ([`super::tile_pool::TilePool`]); the worker
+//! reply path returns both the input tile and the FFN output buffer, so
+//! steady-state serving performs no per-layer tile allocation
+//! (`metrics.rs` counts allocs vs reuses; `tests/zero_alloc_dispatch.rs`
+//! pins the invariant).
+//!
 //! **Determinism contract**: the combine stage buffers every expert-FFN
 //! output row and accumulates `gate · out` in *global slot order*. Each
 //! slot's FFN row depends only on its own activation row (the reference
 //! backend's matmuls are row-independent, and bucket padding rows are
 //! zero), so the final hidden states are bitwise independent of reply
-//! arrival order, dispatch grouping, prediction strategy, and lookahead —
-//! the property `tests/pipeline_parity.rs` pins down.
+//! arrival order, dispatch grouping, prediction strategy, lookahead, and
+//! speculation — the property `tests/pipeline_parity.rs` pins down.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -51,7 +69,7 @@ use super::metrics::{DecodeStepMetrics, RoundMetrics};
 use super::placement_mgr::LayerPlan;
 use super::router::{expert_counts, route_sequence, Slot};
 use super::server::{Coordinator, SeqSession, ServeStrategy, StepSeq};
-use super::worker::{pad_to_bucket, ResidentSets, WorkerHandle, WorkerMsg, WorkerResult};
+use super::worker::{ResidentSets, WorkerHandle, WorkerMsg, WorkerResult};
 use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
 use crate::runtime::bucket::split_into_buckets;
 use crate::runtime::{HostTensor, In};
@@ -86,6 +104,15 @@ pub struct StageMetrics {
     pub exposed_transfer_s: f64,
     /// Mean per-layer routing skewness.
     pub routing_skew: f64,
+    /// Tile buffers freshly heap-allocated on the dispatch path (ADR 003).
+    pub tile_allocs: u64,
+    /// Tile buffers recycled from the coordinator's tile pool.
+    pub tile_reuses: u64,
+    /// Slots dispatched on the speculative fast path (predicted expert
+    /// confirmed by the router).
+    pub spec_dispatch_slots: usize,
+    /// Slots that took the misprediction-repair pass.
+    pub spec_repair_slots: usize,
     skews: Vec<f64>,
 }
 
@@ -104,6 +131,10 @@ impl StageMetrics {
             hidden_transfer_s: 0.0,
             exposed_transfer_s: 0.0,
             routing_skew: 0.0,
+            tile_allocs: 0,
+            tile_reuses: 0,
+            spec_dispatch_slots: 0,
+            spec_repair_slots: 0,
             skews: Vec::new(),
         }
     }
@@ -129,6 +160,10 @@ impl StageMetrics {
         hidden_transfer_s: &mut f64,
         exposed_transfer_s: &mut f64,
         routing_skew: &mut f64,
+        tile_allocs: &mut u64,
+        tile_reuses: &mut u64,
+        spec_dispatch_slots: &mut usize,
+        spec_repair_slots: &mut usize,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -146,6 +181,10 @@ impl StageMetrics {
         *hidden_transfer_s += self.hidden_transfer_s;
         *exposed_transfer_s += self.exposed_transfer_s;
         *routing_skew = self.routing_skew;
+        *tile_allocs += self.tile_allocs;
+        *tile_reuses += self.tile_reuses;
+        *spec_dispatch_slots += self.spec_dispatch_slots;
+        *spec_repair_slots += self.spec_repair_slots;
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -162,6 +201,10 @@ impl StageMetrics {
             &mut m.hidden_transfer_s,
             &mut m.exposed_transfer_s,
             &mut m.routing_skew,
+            &mut m.tile_allocs,
+            &mut m.tile_reuses,
+            &mut m.spec_dispatch_slots,
+            &mut m.spec_repair_slots,
         );
     }
 
@@ -179,6 +222,10 @@ impl StageMetrics {
             &mut m.hidden_transfer_s,
             &mut m.exposed_transfer_s,
             &mut m.routing_skew,
+            &mut m.tile_allocs,
+            &mut m.tile_reuses,
+            &mut m.spec_dispatch_slots,
+            &mut m.spec_repair_slots,
         );
     }
 }
@@ -193,6 +240,9 @@ pub struct PlanStage {
     /// Whether plans were rebuilt (always true outside the decode cadence).
     pub replanned: bool,
     pub replicas_added: usize,
+    /// Per-token predicted experts, `[layer][seq][token]` (TEP only) —
+    /// what the speculative scatter confirms against actual routing.
+    pub predicted_experts: Option<Vec<Vec<Vec<u8>>>>,
 }
 
 /// How the attention stage runs — the one phase-specific part of the
@@ -224,6 +274,7 @@ impl Coordinator {
         let t0 = Instant::now();
         let mut predictor_s = 0.0;
         let mut replanned = true;
+        let mut predicted_experts = None;
         let plans: Vec<LayerPlan> = match self.strategy {
             ServeStrategy::NoPrediction => {
                 replanned = false;
@@ -243,8 +294,9 @@ impl Coordinator {
             }
             ServeStrategy::TokenToExpert => {
                 let tp = Instant::now();
-                let counts = self.predict_counts(hidden, n_real)?;
+                let (counts, predictions) = self.predict_counts(hidden, n_real)?;
                 predictor_s = tp.elapsed().as_secs_f64();
+                predicted_experts = Some(predictions);
                 counts
                     .iter()
                     .map(|c| self.placement.plan_from_counts(c))
@@ -257,6 +309,7 @@ impl Coordinator {
             predictor_s,
             plan_s: (t0.elapsed().as_secs_f64() - predictor_s).max(0.0),
             replanned,
+            predicted_experts,
         })
     }
 
@@ -269,10 +322,21 @@ impl Coordinator {
         hidden: &mut [HostTensor],
         n_real: &[usize],
         plans: &[LayerPlan],
+        predictions: Option<&[Vec<Vec<u8>>]>,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
         let n_layers = self.dims.n_layers;
         debug_assert_eq!(plans.len(), n_layers);
+        // Speculative TEP scatter (§3.1 full contract, ADR 003): requires
+        // per-token predictions (TEP) and the lookahead pipeline. Layer
+        // 0's targets are built eagerly; every later layer's targets are
+        // built during the previous layer's FFN wait (see `ffn_stage`).
+        let speculate = self.speculative && self.lookahead && predictions.is_some();
+        let mut spec: Option<SpecTargets> = if speculate {
+            predictions.map(|p| SpecTargets::build(&p[0], &plans[0]))
+        } else {
+            None
+        };
         // With worker-offloaded attention the Attention messages share the
         // workers' serial queues: prewarms enqueued first would sit *ahead*
         // of attention work and put the transfer on the attention critical
@@ -339,7 +403,16 @@ impl Coordinator {
             metrics.router_s += t0.elapsed().as_secs_f64();
 
             // Stage: dispatch + expert FFN + combine (settles only the
-            // prewarms this layer's dispatch actually needs).
+            // prewarms this layer's dispatch actually needs). Under
+            // speculation, confirmed-prediction slots ship first and the
+            // next layer's targets are derived while the workers compute.
+            let spec_in = spec.take();
+            let mut spec_out = None;
+            let spec_next = if speculate && layer + 1 < n_layers {
+                predictions.map(|p| (&plans[layer + 1], p[layer + 1].as_slice()))
+            } else {
+                None
+            };
             self.ffn_stage(
                 layer,
                 &plans[layer],
@@ -347,8 +420,12 @@ impl Coordinator {
                 &normed,
                 hidden,
                 prewarmer.as_mut(),
+                spec_in,
+                spec_next,
+                &mut spec_out,
                 metrics,
             )?;
+            spec = spec_out;
 
             // Stage: observe actual routing (the §3.2.1 moving average
             // keeps teaching the DOP estimators while serving).
@@ -501,9 +578,63 @@ impl Coordinator {
         Ok((normed, slots))
     }
 
+    /// Gather one (worker, expert) group's slots into bucket-padded tiles
+    /// (pooled buffers — zero steady-state allocation, ADR 003) and ship
+    /// them as `WorkerMsg::Run`.
+    fn send_ffn_group(
+        &mut self,
+        layer: usize,
+        worker: usize,
+        expert: usize,
+        slot_indices: &[usize],
+        slots: &[Slot],
+        normed: &[HostTensor],
+        reply_tx: &mpsc::Sender<WorkerResult>,
+        msg_tag: &mut u64,
+        group_slots: &mut BTreeMap<u64, Vec<usize>>,
+        outstanding: &mut usize,
+        metrics: &mut StageMetrics,
+    ) {
+        let d = self.dims.d_model;
+        // Oversized groups split across bucket-sized chunks; each chunk
+        // gathers straight into a pooled tile (no intermediate group
+        // tensor), with the padding rows zero-filled explicitly so the
+        // pooled path is bitwise identical to fresh allocation.
+        let mut offset = 0usize;
+        for (chunk, bucket) in split_into_buckets(&self.buckets, slot_indices.len()) {
+            let mut buf = self.tiles.take(bucket * d);
+            for &si in &slot_indices[offset..offset + chunk] {
+                let slot = &slots[si];
+                buf.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
+            }
+            buf.resize(bucket * d, 0.0);
+            *msg_tag += 1;
+            group_slots.insert(*msg_tag, slot_indices[offset..offset + chunk].to_vec());
+            self.workers[worker].send(WorkerMsg::Run {
+                tag: *msg_tag,
+                layer,
+                expert,
+                xn: HostTensor::new(buf, vec![bucket, d]),
+                n_real: chunk,
+                reply: reply_tx.clone(),
+            });
+            *outstanding += 1;
+            metrics.worker_slots[worker] += chunk;
+            offset += chunk;
+        }
+    }
+
     /// Dispatch routed slots to the virtual-GPU workers under `plan`, run
     /// the expert FFNs, and combine `gate · expert_out` into `hidden` in
     /// global slot order (see the module-level determinism contract).
+    ///
+    /// With `spec_in` (TEP + lookahead, ADR 003), slots whose routed
+    /// expert matches the prediction made before attention ship on a fast
+    /// path *before* the dispatcher runs, so workers compute confirmed
+    /// tiles while the leader plans the misprediction-repair pass; the
+    /// next layer's speculative targets (`spec_out`) are derived during
+    /// this layer's FFN wait — pure §3.1: prediction happens ahead of the
+    /// compute that would otherwise serialise dispatch.
     fn ffn_stage(
         &mut self,
         layer: usize,
@@ -511,30 +642,41 @@ impl Coordinator {
         slots: &[Slot],
         normed: &[HostTensor],
         hidden: &mut [HostTensor],
-        prewarmer: Option<&mut Prewarmer>,
+        mut prewarmer: Option<&mut Prewarmer>,
+        spec_in: Option<SpecTargets>,
+        spec_next: Option<(&LayerPlan, &[Vec<u8>])>,
+        spec_out: &mut Option<SpecTargets>,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
         let d = self.dims.d_model;
         if slots.is_empty() {
+            if let Some((plan_next, preds_next)) = spec_next {
+                *spec_out = Some(SpecTargets::build(preds_next, plan_next));
+            }
             return Ok(());
         }
 
-        let experts: Vec<u8> = slots.iter().map(|s| s.expert).collect();
-        let (assignment, _loads) = if plan.share.is_empty() {
-            dispatch_tokens(&experts, &plan.placement)
-        } else {
-            dispatch_with_quota(&experts, &plan.placement, &plan.share)
-        };
-
         let t0 = Instant::now();
-        let mut groups = group_slots_by_assignment(&assignment, slots);
-        merge_runt_groups(&mut groups, MIN_GROUP);
-        let placed = lpt_place(groups, plan, self.workers.len(), &self.buckets);
+        let (alloc0, reuse0) = (self.tiles.allocs, self.tiles.reuses);
 
-        // Settle the prewarm acks this dispatch depends on (hidden vs
-        // exposed); unneeded prewarms keep streaming in the background.
-        if let Some(pw) = prewarmer {
-            pw.settle_for(layer, &placed, metrics)?;
+        // Partition slots into confirmed speculative hits and the repair
+        // set (everything, when speculation is off).
+        let mut spec_groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        let mut repair_idx: Vec<usize> = Vec::new();
+        match &spec_in {
+            Some(targets) => {
+                for (si, slot) in slots.iter().enumerate() {
+                    match targets.target(slot.seq_idx, slot.token_idx) {
+                        Some((w, e)) if e == slot.expert as usize => {
+                            spec_groups.entry((w, e)).or_default().push(si);
+                        }
+                        _ => repair_idx.push(si),
+                    }
+                }
+                metrics.spec_dispatch_slots += slots.len() - repair_idx.len();
+                metrics.spec_repair_slots += repair_idx.len();
+            }
+            None => repair_idx.extend(0..slots.len()),
         }
 
         let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
@@ -542,41 +684,92 @@ impl Coordinator {
         // Slot-order metadata for scattering results back.
         let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
         let mut msg_tag = 0u64;
-        for ((worker, expert), slot_indices) in &placed {
-            // Gather the normed activations for these slots.
-            let mut data = Vec::with_capacity(slot_indices.len() * d);
-            for &si in slot_indices {
-                let slot = &slots[si];
-                data.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
+
+        // Speculative fast path first: settle only these pairs' prewarms
+        // and ship the confirmed tiles immediately.
+        if !spec_groups.is_empty() {
+            if let Some(pw) = prewarmer.as_deref_mut() {
+                pw.settle_for(layer, &spec_groups, metrics)?;
             }
-            let xn = HostTensor::new(data, vec![slot_indices.len(), d]);
-            // Oversized groups split across bucket-sized chunks.
-            let mut offset = 0usize;
-            for (chunk, _bucket) in split_into_buckets(&self.buckets, xn.rows()) {
-                let rows: Vec<usize> = (offset..offset + chunk).collect();
-                let tile = pad_to_bucket(xn.gather_rows(&rows), &self.buckets);
-                msg_tag += 1;
-                group_slots.insert(msg_tag, slot_indices[offset..offset + chunk].to_vec());
-                self.workers[*worker].send(WorkerMsg::Run {
-                    tag: msg_tag,
+            for ((worker, expert), slot_indices) in &spec_groups {
+                self.send_ffn_group(
                     layer,
-                    expert: *expert,
-                    xn: tile,
-                    n_real: chunk,
-                    reply: reply_tx.clone(),
-                });
-                outstanding += 1;
-                metrics.worker_slots[*worker] += chunk;
-                offset += chunk;
+                    *worker,
+                    *expert,
+                    slot_indices,
+                    slots,
+                    normed,
+                    &reply_tx,
+                    &mut msg_tag,
+                    &mut group_slots,
+                    &mut outstanding,
+                    metrics,
+                );
+            }
+        }
+
+        // Repair pass (the whole batch when speculation is off): quota
+        // dispatch → runt merge → LPT placement, seeded with the padded
+        // load the speculative tiles already put on each worker.
+        if !repair_idx.is_empty() {
+            let experts: Vec<u8> = repair_idx.iter().map(|&si| slots[si].expert).collect();
+            let (assignment, _loads) = if plan.share.is_empty() {
+                dispatch_tokens(&experts, &plan.placement)
+            } else {
+                dispatch_with_quota(&experts, &plan.placement, &plan.share)
+            };
+            let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            for (pos, &w) in assignment.iter().enumerate() {
+                let si = repair_idx[pos];
+                groups
+                    .entry((w as usize, slots[si].expert as usize))
+                    .or_default()
+                    .push(si);
+            }
+            merge_runt_groups(&mut groups, MIN_GROUP);
+            let mut seed_load = vec![0usize; self.workers.len()];
+            for ((w, _), v) in &spec_groups {
+                seed_load[*w] += padded_rows(&self.buckets, v.len());
+            }
+            let placed =
+                lpt_place_seeded(groups, plan, self.workers.len(), &self.buckets, &seed_load);
+
+            // Settle the prewarm acks this dispatch depends on (hidden vs
+            // exposed); unneeded prewarms keep streaming in the background.
+            if let Some(pw) = prewarmer.as_deref_mut() {
+                pw.settle_for(layer, &placed, metrics)?;
+            }
+            for ((worker, expert), slot_indices) in &placed {
+                self.send_ffn_group(
+                    layer,
+                    *worker,
+                    *expert,
+                    slot_indices,
+                    slots,
+                    normed,
+                    &reply_tx,
+                    &mut msg_tag,
+                    &mut group_slots,
+                    &mut outstanding,
+                    metrics,
+                );
             }
         }
         drop(reply_tx);
 
+        // The workers are now busy with this layer's tiles — exactly the
+        // window in which the next layer's speculative targets are
+        // derivable from predictions + plan alone (no activations needed).
+        if let Some((plan_next, preds_next)) = spec_next {
+            *spec_out = Some(SpecTargets::build(preds_next, plan_next));
+        }
+
         // Collect every tile's rows into a per-slot buffer first …
-        let mut slot_out = vec![0.0f32; slots.len() * d];
+        let mut slot_out = self.tiles.take(slots.len() * d);
+        slot_out.resize(slots.len() * d, 0.0);
         let mut received = 0usize;
         while received < outstanding {
-            let result = reply_rx
+            let mut result = reply_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
             received += 1;
@@ -593,6 +786,10 @@ impl Coordinator {
                 slot_out[si * d..(si + 1) * d]
                     .copy_from_slice(&result.out[row * d..(row + 1) * d]);
             }
+            // Zero-alloc recycling: the padded input tile and the FFN
+            // output buffer both return to the pool for the next layer.
+            self.tiles.put(std::mem::take(&mut result.tile));
+            self.tiles.put(std::mem::take(&mut result.out));
         }
         // … then combine h += gate · out in global slot order, so numerics
         // are independent of arrival order, grouping and strategy.
@@ -604,21 +801,30 @@ impl Coordinator {
                 *a += slot.gate * b;
             }
         }
+        self.tiles.put(slot_out);
+        metrics.tile_allocs += self.tiles.allocs - alloc0;
+        metrics.tile_reuses += self.tiles.reuses - reuse0;
         metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
     /// Run the AOT Token-to-Expert predictor on every sequence's
-    /// embeddings (§3.1: before attention) and count predicted slots per
-    /// (layer, expert). `hidden[i]` holds `≥ n_real[i]` embedded rows.
+    /// embeddings (§3.1: before attention). Returns predicted slot counts
+    /// per (layer, expert) plus the raw per-token predictions
+    /// `[layer][seq][token]` the speculative scatter confirms against.
+    /// `hidden[i]` holds `≥ n_real[i]` embedded rows.
     pub(crate) fn predict_counts(
         &mut self,
         hidden: &[HostTensor],
         n_real: &[usize],
-    ) -> Result<Vec<Vec<usize>>> {
+    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<Vec<u8>>>)> {
         let e = self.dims.n_experts;
-        let mut counts = vec![vec![0usize; e]; self.dims.n_layers];
-        let head_names: Vec<String> = (0..self.dims.n_layers)
+        let n_layers = self.dims.n_layers;
+        let mut counts = vec![vec![0usize; e]; n_layers];
+        let mut predicted: Vec<Vec<Vec<u8>>> = (0..n_layers)
+            .map(|_| Vec::with_capacity(hidden.len()))
+            .collect();
+        let head_names: Vec<String> = (0..n_layers)
             .map(|l| format!("predictor.head.{l}"))
             .collect();
         for (seq, &n) in hidden.iter().zip(n_real) {
@@ -632,24 +838,111 @@ impl Coordinator {
                 ins.push(In::W(name));
             }
             let logits = self.leader.call("predictor", &ins)?.remove(0);
-            // logits [L, S, E]: argmax per (layer, real token).
-            for l in 0..self.dims.n_layers {
+            // logits [L, S, E]: argmax per (layer, real token) — total
+            // order, so non-finite logits can never panic the hot path.
+            for l in 0..n_layers {
+                let mut seq_pred = Vec::with_capacity(n.min(s_rows));
                 for t in 0..n.min(s_rows) {
                     let base = (l * s_rows + t) * e;
                     let row = &logits.data[base..base + e];
                     let arg = row
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .unwrap()
                         .0;
                     // Each token occupies top_k slots; scale the predicted
                     // count accordingly.
                     counts[l][arg] += self.dims.top_k;
+                    seq_pred.push(arg as u8);
                 }
+                predicted[l].push(seq_pred);
             }
         }
-        Ok(counts)
+        Ok((counts, predicted))
+    }
+}
+
+/// Per-token speculative dispatch targets for one layer: token
+/// `(seq_idx, token_idx)` → the (worker, expert) its §3.1 prediction
+/// routes it to under that layer's duplication plan. Built from
+/// predictions + plan alone — no activations — which is what lets the
+/// pipeline derive layer L+1's targets during layer L's FFN phase.
+pub(crate) struct SpecTargets {
+    targets: std::collections::HashMap<(usize, usize), (usize, usize)>,
+}
+
+impl SpecTargets {
+    /// `preds[seq][token]` = predicted expert for this layer. Replicated
+    /// experts spread their predicted tokens over the hosts following the
+    /// plan's per-(expert, gpu) quota (`share[e][g]`, built from these
+    /// same predicted counts): each token goes to the replica with the
+    /// lowest *filled fraction* of its quota, so speculative load tracks
+    /// the balance the plan computed from the first token on — a uniform
+    /// rotation would undo exactly the skew-aware split the quota
+    /// encodes. Experts with no quota (shareless plans) fall back to
+    /// round-robin. Deterministic: assignment follows (seq, token) order
+    /// with lowest-gpu tie-breaks.
+    fn build(preds: &[Vec<u8>], plan: &LayerPlan) -> SpecTargets {
+        let mut given: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        let mut rr: BTreeMap<usize, usize> = BTreeMap::new();
+        let total: usize = preds.iter().map(Vec::len).sum();
+        let mut targets = std::collections::HashMap::with_capacity(total);
+        for (seq, toks) in preds.iter().enumerate() {
+            for (tok, &expert) in toks.iter().enumerate() {
+                let expert = expert as usize;
+                let hosts = plan.placement.gpus_of(expert);
+                if hosts.is_empty() {
+                    continue;
+                }
+                // Lowest filled-fraction host among those with quota
+                // (`given/quota` compared by cross-multiplication to stay
+                // in integers); ties prefer the lower gpu id.
+                let mut best: Option<(usize, usize, usize)> = None; // (g, given, quota)
+                for g in hosts.iter().copied() {
+                    let quota = plan
+                        .share
+                        .get(expert)
+                        .and_then(|row| row.get(g))
+                        .copied()
+                        .unwrap_or(0);
+                    if quota == 0 {
+                        continue;
+                    }
+                    let giv = given.get(&(expert, g)).copied().unwrap_or(0);
+                    best = match best {
+                        None => Some((g, giv, quota)),
+                        Some((bg, bgiv, bq)) => {
+                            let lhs = giv * bq;
+                            let rhs = bgiv * quota;
+                            if lhs < rhs || (lhs == rhs && g < bg) {
+                                Some((g, giv, quota))
+                            } else {
+                                Some((bg, bgiv, bq))
+                            }
+                        }
+                    };
+                }
+                let worker = match best {
+                    Some((g, _, _)) => g,
+                    None => {
+                        // No quota anywhere for this expert: spread
+                        // round-robin over its hosts.
+                        let turn = rr.entry(expert).or_insert(0);
+                        let w = hosts[*turn % hosts.len()];
+                        *turn += 1;
+                        w
+                    }
+                };
+                *given.entry((expert, worker)).or_insert(0) += 1;
+                targets.insert((seq, tok), (worker, expert));
+            }
+        }
+        SpecTargets { targets }
+    }
+
+    fn target(&self, seq: usize, tok: usize) -> Option<(usize, usize)> {
+        self.targets.get(&(seq, tok)).copied()
     }
 }
 
@@ -865,9 +1158,24 @@ pub fn lpt_place(
     n_workers: usize,
     buckets: &[usize],
 ) -> BTreeMap<(usize, usize), Vec<usize>> {
+    lpt_place_seeded(groups, plan, n_workers, buckets, &vec![0; n_workers])
+}
+
+/// [`lpt_place`] with pre-existing per-worker padded-row load — the
+/// speculative fast path's tiles are already committed to their predicted
+/// hosts when the repair pass places, so LPT must see that load or it
+/// would stack repair work onto the busiest workers (ADR 003).
+pub fn lpt_place_seeded(
+    groups: BTreeMap<(usize, usize), Vec<usize>>,
+    plan: &LayerPlan,
+    n_workers: usize,
+    buckets: &[usize],
+    initial_load: &[usize],
+) -> BTreeMap<(usize, usize), Vec<usize>> {
+    debug_assert_eq!(initial_load.len(), n_workers);
     let mut items: Vec<((usize, usize), Vec<usize>)> = groups.into_iter().collect();
     items.sort_by_key(|(key, v)| (std::cmp::Reverse(v.len()), *key));
-    let mut lpt_load = vec![0usize; n_workers];
+    let mut lpt_load = initial_load.to_vec();
     let mut placed: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
     for ((orig_worker, expert), slot_indices) in items {
         let padded = padded_rows(buckets, slot_indices.len());
@@ -982,6 +1290,10 @@ mod tests {
         s.upload_bytes = 100;
         s.hidden_upload_bytes = 70;
         s.exposed_upload_bytes = 30;
+        s.tile_allocs = 2;
+        s.tile_reuses = 5;
+        s.spec_dispatch_slots = 6;
+        s.spec_repair_slots = 4;
         s.skews.push(1.5);
         s.finish();
         let mut round = RoundMetrics {
@@ -994,6 +1306,10 @@ mod tests {
         assert_eq!(round.upload_bytes, 100);
         assert_eq!(round.hidden_upload_bytes, 70);
         assert_eq!(round.worker_slots, vec![4, 6]);
+        assert_eq!(round.tile_allocs, 2);
+        assert_eq!(round.tile_reuses, 5);
+        assert_eq!(round.spec_dispatch_slots, 6);
+        assert_eq!(round.spec_repair_slots, 4);
         assert!((round.routing_skew - 1.5).abs() < 1e-12);
         let mut step = DecodeStepMetrics {
             worker_busy_s: vec![0.0; 2],
@@ -1004,5 +1320,72 @@ mod tests {
         assert_eq!(step.n_slots, 10);
         assert_eq!(step.exposed_upload_bytes, 30);
         assert_eq!(step.worker_busy_s, vec![1.0, 2.0]);
+        assert_eq!(step.tile_allocs, 2);
+        assert_eq!(step.tile_reuses, 5);
+        assert_eq!(step.spec_dispatch_slots, 6);
+        assert_eq!(step.spec_repair_slots, 4);
+    }
+
+    #[test]
+    fn lpt_seeded_avoids_preloaded_worker() {
+        let mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        let plan = mgr.plan_from_counts(&[600, 40, 40, 40, 40, 40, 40, 40]);
+        let hosts = plan.placement.gpus_of(0);
+        assert!(hosts.len() >= 2);
+        // One group of the replicated hot expert; host 0 already carries
+        // speculative load, so the group must land on another replica.
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        groups.insert((hosts[0], 0), (0..8).collect());
+        let mut seed = vec![0usize; 4];
+        seed[hosts[0]] = 1000;
+        let placed = lpt_place_seeded(groups, &plan, 4, &[8, 16, 32, 64], &seed);
+        assert_eq!(placed.len(), 1);
+        let (&(w, e), v) = placed.iter().next().unwrap();
+        assert_eq!(e, 0);
+        assert_ne!(w, hosts[0], "seeded load must steer the group away");
+        assert!(plan.placement.hosts(e, w));
+        assert_eq!(v.len(), 8);
+    }
+
+    #[test]
+    fn spec_targets_confirm_only_predicted_tokens() {
+        let mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        let plan = mgr.static_plan();
+        // Two sequences, three tokens each, all predicting expert 2 except
+        // one token predicting expert 5.
+        let preds: Vec<Vec<u8>> = vec![vec![2, 2, 5], vec![2, 2, 2]];
+        let st = SpecTargets::build(&preds, &plan);
+        let home2 = plan.placement.gpus_of(2)[0];
+        let home5 = plan.placement.gpus_of(5)[0];
+        assert_eq!(st.target(0, 0), Some((home2, 2)));
+        assert_eq!(st.target(0, 2), Some((home5, 5)));
+        assert_eq!(st.target(1, 1), Some((home2, 2)));
+        assert_eq!(st.target(0, 3), None, "unknown token has no target");
+        assert_eq!(st.target(2, 0), None, "unknown sequence has no target");
+    }
+
+    #[test]
+    fn spec_targets_spread_over_replicas_following_quota() {
+        let mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        let plan = mgr.plan_from_counts(&[600, 40, 40, 40, 40, 40, 40, 40]);
+        let hosts = plan.placement.gpus_of(0);
+        assert!(hosts.len() >= 2, "hot expert must replicate");
+        assert!(!plan.share.is_empty(), "counts plan carries quotas");
+        let preds: Vec<Vec<u8>> = vec![vec![0; 6]];
+        let st = SpecTargets::build(&preds, &plan);
+        let mut used: Vec<usize> = (0..6)
+            .map(|t| st.target(0, t).unwrap().0)
+            .collect();
+        // Every chosen host must hold positive quota for the expert (the
+        // plan's balance is respected, not undone by a uniform rotation).
+        for &w in &used {
+            assert!(
+                plan.share[0][w] > 0,
+                "speculative target {w} has no quota for expert 0"
+            );
+        }
+        used.sort_unstable();
+        used.dedup();
+        assert!(used.len() >= 2, "predicted tokens must spread over replicas");
     }
 }

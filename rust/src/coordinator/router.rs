@@ -20,7 +20,7 @@ pub fn top_k_route(
 ) -> Vec<(u8, f32)> {
     debug_assert!(k >= 1 && k <= logits_row.len());
     let mut idx: Vec<usize> = (0..logits_row.len()).collect();
-    idx.sort_by(|&a, &b| logits_row[b].partial_cmp(&logits_row[a]).unwrap());
+    idx.sort_by(|&a, &b| logits_row[b].total_cmp(&logits_row[a]));
     let top = &idx[..k];
     let max = logits_row[top[0]];
     let exps: Vec<f32> = top.iter().map(|&i| (logits_row[i] - max).exp()).collect();

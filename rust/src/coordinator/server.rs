@@ -36,6 +36,7 @@ use super::pipeline::{AttentionMode, StageMetrics};
 use super::placement_mgr::PlacementManager;
 use super::request::Request;
 use super::scheduler::{Scheduler, SeqPhase};
+use super::tile_pool::TilePool;
 use super::worker::{ResidentSets, WorkerHandle};
 use crate::runtime::tensor::IntTensor;
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
@@ -147,6 +148,17 @@ pub struct Coordinator {
     /// (`serve --lookahead 1`). Off by default so both regimes stay
     /// reproducible; numerics are bitwise identical either way.
     pub lookahead: bool,
+    /// §Perf iteration 5 / ADR 003: speculative TEP scatter (`serve
+    /// --speculative 1`). Requires `lookahead` and the Token-to-Expert
+    /// strategy: slots whose §3.1 prediction the router confirms ship on a
+    /// fast path before the repair dispatch runs, and each layer's
+    /// speculative targets are derived during the previous layer's FFN
+    /// phase. Numerics are bitwise identical either way.
+    pub speculative: bool,
+    /// Reusable tile-buffer arena for the FFN dispatch path (ADR 003):
+    /// steady-state serving gathers/pads/scatters with zero per-layer
+    /// heap allocation; buffers recycle via the worker reply path.
+    pub(crate) tiles: TilePool,
 }
 
 impl Coordinator {
@@ -223,6 +235,8 @@ impl Coordinator {
             warmed: ResidentSets::new(n_workers),
             parallel_attention: false,
             lookahead: false,
+            speculative: false,
+            tiles: TilePool::new(),
         })
     }
 
@@ -283,7 +297,14 @@ impl Coordinator {
         let mut mode = AttentionMode::Full {
             parallel: self.parallel_attention,
         };
-        self.run_layers(&mut mode, &mut hidden, &n_real, &plan_stage.plans, &mut stage)?;
+        self.run_layers(
+            &mut mode,
+            &mut hidden,
+            &n_real,
+            &plan_stage.plans,
+            plan_stage.predicted_experts.as_deref(),
+            &mut stage,
+        )?;
         stage.apply_to_round(&mut metrics);
         metrics.total_s = round_start.elapsed().as_secs_f64();
 
@@ -478,7 +499,14 @@ impl Coordinator {
                 sessions: &mut *sessions,
                 workload: &workload,
             };
-            self.run_layers(&mut mode, &mut hidden, &n_real, &plan_stage.plans, &mut stage)?;
+            self.run_layers(
+                &mut mode,
+                &mut hidden,
+                &n_real,
+                &plan_stage.plans,
+                plan_stage.predicted_experts.as_deref(),
+                &mut stage,
+            )?;
         }
         stage.apply_to_step(&mut metrics);
 
@@ -511,10 +539,11 @@ impl Coordinator {
 fn sample_token(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
     debug_assert!(!logits.is_empty());
     if temperature <= 0.0 {
+        // Total order: a non-finite logit can never panic the serve path.
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0 as u32;
     }

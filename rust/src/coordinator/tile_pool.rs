@@ -1,0 +1,128 @@
+//! Reusable tile-buffer arena for the FFN dispatch path (ADR 003).
+//!
+//! `pipeline.rs::ffn_stage` gathers routed activations into bucket-padded
+//! tiles, ships them to the virtual-GPU workers, and scatters the padded
+//! outputs back — before this pool, every (worker, expert) group on every
+//! layer of every step heap-allocated its gather tile, its padded copy
+//! and its scatter buffer. The pool recycles those buffers across layers
+//! and steps: `take` hands out a cleared buffer with enough capacity
+//! (reuse) or allocates one (alloc), and the worker reply path returns
+//! both the input tile and the FFN output buffer via [`TilePool::put`].
+//! In steady state (stable routing → stable bucket mix) the dispatch path
+//! performs **zero** per-layer heap allocation for tiles — the invariant
+//! `tests/zero_alloc_dispatch.rs` pins down via the alloc/reuse counters
+//! that `metrics.rs` reports.
+//!
+//! Determinism: the pool only changes *where* bytes live, never their
+//! values — `take` clears the buffer and callers rewrite every row (real
+//! rows copied, padding explicitly zero-filled), so the pooled path is
+//! bitwise identical to fresh allocation.
+
+use std::collections::BTreeMap;
+
+/// Keep at most this many free buffers per capacity class; beyond it,
+/// returned buffers are dropped (bounds pool memory under bucket churn).
+const MAX_FREE_PER_CLASS: usize = 64;
+
+/// A capacity-keyed free list of `Vec<f32>` buffers with alloc/reuse
+/// accounting.
+#[derive(Debug, Default)]
+pub struct TilePool {
+    /// Free buffers keyed by their capacity.
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    /// Buffers handed out that had to be freshly allocated.
+    pub allocs: u64,
+    /// Buffers handed out from the free list.
+    pub reuses: u64,
+}
+
+impl TilePool {
+    pub fn new() -> TilePool {
+        TilePool::default()
+    }
+
+    /// An empty buffer with capacity ≥ `cap`: the smallest pooled buffer
+    /// that fits, else a fresh allocation. The returned buffer has
+    /// `len() == 0`; callers fill it and hand it back via [`Self::put`].
+    pub fn take(&mut self, cap: usize) -> Vec<f32> {
+        let key = self
+            .free
+            .range(cap..)
+            .find(|(_, list)| !list.is_empty())
+            .map(|(&k, _)| k);
+        if let Some(k) = key {
+            let list = self.free.get_mut(&k).expect("key just found");
+            let mut buf = list.pop().expect("non-empty list");
+            if list.is_empty() {
+                self.free.remove(&k);
+            }
+            buf.clear();
+            self.reuses += 1;
+            return buf;
+        }
+        self.allocs += 1;
+        Vec::with_capacity(cap)
+    }
+
+    /// Return a buffer to the pool, keyed by its capacity. Zero-capacity
+    /// buffers (e.g. error-path placeholders) are dropped.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        let list = self.free.entry(cap).or_default();
+        if list.len() < MAX_FREE_PER_CLASS {
+            list.push(buf);
+        }
+    }
+
+    /// Free buffers currently pooled (across all capacity classes).
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_prefers_reuse_and_counts() {
+        let mut pool = TilePool::new();
+        let mut a = pool.take(128);
+        assert_eq!(pool.allocs, 1);
+        a.resize(128, 1.0);
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take(64); // smaller request still reuses the buffer
+        assert_eq!(pool.reuses, 1);
+        assert_eq!(b.len(), 0, "reused buffers come back cleared");
+        assert!(b.capacity() >= cap.min(128));
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn take_allocates_when_nothing_fits() {
+        let mut pool = TilePool::new();
+        let a = pool.take(16);
+        pool.put(a);
+        let b = pool.take(1024); // pooled 16-cap buffer does not fit
+        assert!(b.capacity() >= 1024);
+        assert_eq!(pool.allocs, 2);
+        assert_eq!(pool.reuses, 0);
+        assert_eq!(pool.pooled(), 1, "small buffer stays pooled");
+    }
+
+    #[test]
+    fn put_drops_empty_and_bounds_classes() {
+        let mut pool = TilePool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+        for _ in 0..(MAX_FREE_PER_CLASS + 10) {
+            pool.put(Vec::with_capacity(8));
+        }
+        assert!(pool.pooled() <= MAX_FREE_PER_CLASS);
+    }
+}

@@ -16,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::{bucket, Engine, EngineSource, HostTensor, In};
+use crate::runtime::{Engine, EngineSource, HostTensor, In};
 
 /// Work sent to a worker.
 pub enum WorkerMsg {
@@ -63,6 +63,10 @@ pub struct WorkerResult {
     /// FFN output rows (only the first `n_real` are meaningful); empty for
     /// prefetch replies.
     pub out: Vec<f32>,
+    /// The input tile's buffer, returned so the coordinator's
+    /// [`crate::coordinator::tile_pool::TilePool`] can recycle it (the
+    /// zero-alloc dispatch path, ADR 003). Empty for non-Run replies.
+    pub tile: Vec<f32>,
     pub n_real: usize,
     /// Wall time the worker spent executing (busy time).
     pub exec_s: f64,
@@ -129,10 +133,10 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
             // Drain messages, replying with errors, until shutdown.
             for msg in rx {
                 match msg {
-                    WorkerMsg::Run { tag, layer, expert, n_real, reply, .. } => {
+                    WorkerMsg::Run { tag, layer, expert, xn, n_real, reply } => {
                         let _ = reply.send(WorkerResult {
                             tag, worker: index, layer, expert,
-                            out: Vec::new(), n_real,
+                            out: Vec::new(), tile: xn.data, n_real,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -140,7 +144,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     WorkerMsg::Prewarm { tag, layer, expert, reply } => {
                         let _ = reply.send(WorkerResult {
                             tag, worker: index, layer, expert,
-                            out: Vec::new(), n_real: 0,
+                            out: Vec::new(), tile: Vec::new(), n_real: 0,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -148,7 +152,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     WorkerMsg::Attention { tag, layer, reply, .. } => {
                         let _ = reply.send(WorkerResult {
                             tag, worker: index, layer, expert: 0,
-                            out: Vec::new(), n_real: 0,
+                            out: Vec::new(), tile: Vec::new(), n_real: 0,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -202,6 +206,8 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     layer,
                     expert,
                     out,
+                    // Hand the input tile's buffer back for pool reuse.
+                    tile: xn.data,
                     n_real,
                     exec_s: t0.elapsed().as_secs_f64(),
                     upload_bytes,
@@ -249,6 +255,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     layer,
                     expert: 0,
                     out,
+                    tile: Vec::new(),
                     n_real,
                     exec_s: t0.elapsed().as_secs_f64(),
                     upload_bytes,
@@ -271,6 +278,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     layer,
                     expert,
                     out: Vec::new(),
+                    tile: Vec::new(),
                     n_real: 0,
                     exec_s: t0.elapsed().as_secs_f64(),
                     upload_bytes,
@@ -285,12 +293,6 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
             WorkerMsg::Shutdown => break,
         }
     }
-}
-
-/// Pad a gathered token tile to the smallest compiled bucket.
-pub fn pad_to_bucket(xn: HostTensor, buckets: &[usize]) -> HostTensor {
-    let b = bucket::pick_bucket(buckets, xn.rows());
-    xn.pad_rows_to(b)
 }
 
 /// Coordinator-side view of each worker's per-layer resident expert

@@ -186,13 +186,13 @@ pub fn balance_fractional(probs: &[f64], initial: &Placement) -> (Placement, Vec
     let cap = 1.0 / n_gpus as f64 + 1e-12;
 
     let mut order: Vec<usize> = (0..n_experts).collect();
-    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
 
     for &e in &order {
         let mut remaining = probs[e];
         // Fill the home GPUs first, then duplicate to the least-loaded.
         let mut hosts = placement.gpus_of(e);
-        hosts.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+        hosts.sort_by(|&a, &b| loads[a].total_cmp(&loads[b]));
         for g in hosts {
             if remaining <= 0.0 {
                 break;
@@ -207,7 +207,7 @@ pub fn balance_fractional(probs: &[f64], initial: &Placement) -> (Placement, Vec
             let mut candidates: Vec<usize> = (0..n_gpus)
                 .filter(|&g| loads[g] < cap && !placement.hosts(e, g))
                 .collect();
-            candidates.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+            candidates.sort_by(|&a, &b| loads[a].total_cmp(&loads[b]));
             let mut placed = false;
             for g in candidates {
                 if placement.add(e, g) {
@@ -225,7 +225,7 @@ pub fn balance_fractional(probs: &[f64], initial: &Placement) -> (Placement, Vec
                 let g = placement
                     .gpus_of(e)
                     .into_iter()
-                    .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+                    .min_by(|&a, &b| loads[a].total_cmp(&loads[b]))
                     .unwrap();
                 share[e][g] += remaining;
                 loads[g] += remaining;

@@ -162,7 +162,7 @@ pub fn calibrate(
     }
 
     // Paper fits: exponential overhead(accuracy), polynomial perf(accuracy).
-    points.sort_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap());
+    points.sort_by(|a, b| a.accuracy.total_cmp(&b.accuracy));
     let xs: Vec<f64> = points.iter().map(|p| p.accuracy).collect();
     let ratio_ys: Vec<f64> = points.iter().map(|p| p.overhead_ratio.max(1e-9)).collect();
     let overhead_fit = stats::fit_exponential(&xs, &ratio_ys);
@@ -203,7 +203,7 @@ pub fn calibrate_all(
 pub fn interpolate_for_skew(cals: &[WorkloadCalibration], skew: f64) -> (f64, (f64, f64)) {
     assert!(!cals.is_empty());
     let mut sorted: Vec<&WorkloadCalibration> = cals.iter().collect();
-    sorted.sort_by(|a, b| a.skewness.partial_cmp(&b.skewness).unwrap());
+    sorted.sort_by(|a, b| a.skewness.total_cmp(&b.skewness));
     if skew <= sorted[0].skewness {
         return (sorted[0].dop_error, sorted[0].overhead_fit);
     }

@@ -3,7 +3,7 @@
 //! strategy minimises end-to-end latency.
 
 use super::calibrate::WorkloadCalibration;
-use super::select::{recommend, strategy_savings_overlap, Recommendation};
+use super::select::{recommend, strategy_savings_regime, Recommendation};
 use crate::model::ModelConfig;
 use crate::sim::hardware::SystemSpec;
 
@@ -41,12 +41,30 @@ pub fn decision_map_overlap(
     seq: usize,
     overlap: bool,
 ) -> Vec<GuidelineCell> {
+    decision_map_regime(model, cals, skews, bandwidths_gbs, batch, seq, overlap, false)
+}
+
+/// [`decision_map_overlap`] plus the ADR-003 speculative-scatter regime
+/// (`advise --speculative`): re-derives every cell with TEP's repair
+/// scatter hidden under the confirmed tiles' FFN compute, which shifts
+/// the DOP/TEP frontier toward TEP.
+pub fn decision_map_regime(
+    model: &ModelConfig,
+    cals: &[WorkloadCalibration],
+    skews: &[f64],
+    bandwidths_gbs: &[f64],
+    batch: usize,
+    seq: usize,
+    overlap: bool,
+    speculative: bool,
+) -> Vec<GuidelineCell> {
     let mut cells = Vec::new();
     for &bw in bandwidths_gbs {
         let system = SystemSpec::four_a100_custom_bw(bw);
         for &skew in skews {
-            let cmp =
-                strategy_savings_overlap(model, &system, cals, skew, batch, seq, overlap);
+            let cmp = strategy_savings_regime(
+                model, &system, cals, skew, batch, seq, overlap, speculative,
+            );
             let rec = recommend(&cmp);
             let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
             cells.push(GuidelineCell {

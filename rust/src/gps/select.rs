@@ -62,7 +62,7 @@ pub fn best_tep(
                 .total();
             (acc, total)
         })
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap()
 }
 
@@ -107,9 +107,29 @@ pub fn strategy_savings_overlap(
     seq: usize,
     overlap: bool,
 ) -> SavingsComparison {
+    strategy_savings_regime(model, system, cals, skew, batch, seq, overlap, false)
+}
+
+/// [`strategy_savings_overlap`] plus the ADR-003 speculative-scatter
+/// regime: `speculative = true` additionally hides TEP's misprediction
+/// repair scatter under the confirmed tiles' FFN compute (it requires
+/// `overlap`; DOP and the baseline are untouched). This is what
+/// `advise --speculative` re-derives the guideline map with — cheap
+/// speculative scatter shifts the DOP/TEP frontier further toward TEP.
+pub fn strategy_savings_regime(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    seq: usize,
+    overlap: bool,
+    speculative: bool,
+) -> SavingsComparison {
     let sim = LayerSim::new(model.clone(), system.clone())
         .with_workload(batch, seq)
-        .with_overlap(overlap);
+        .with_overlap(overlap)
+        .with_speculative(speculative && overlap);
     let baseline_s = sim.baseline_total(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim
@@ -159,9 +179,24 @@ pub fn decode_strategy_savings_overlap(
     ctx_len: usize,
     overlap: bool,
 ) -> SavingsComparison {
+    decode_strategy_savings_regime(model, system, cals, skew, batch, ctx_len, overlap, false)
+}
+
+/// The decode analogue of [`strategy_savings_regime`] (ADR 003).
+pub fn decode_strategy_savings_regime(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cals: &[WorkloadCalibration],
+    skew: f64,
+    batch: usize,
+    ctx_len: usize,
+    overlap: bool,
+    speculative: bool,
+) -> SavingsComparison {
     let sim = DecodeSim::new(model.clone(), system.clone())
         .with_workload(batch, ctx_len)
-        .with_overlap(overlap);
+        .with_overlap(overlap)
+        .with_speculative(speculative && overlap);
     let baseline_s = sim.baseline_step(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
@@ -185,7 +220,7 @@ pub fn decode_strategy_savings_overlap(
             );
             (acc, total)
         })
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap();
 
     SavingsComparison {
@@ -338,6 +373,43 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn speculative_regime_moves_the_difference_further_toward_tep() {
+        // ADR 003: speculation only ever hides more TEP scatter, so vs
+        // plain overlap the tep saving can only grow and the Figure-7
+        // difference can only shrink; DOP and the baseline never move.
+        let model = ModelConfig::mixtral_8x7b();
+        for bw in [600.0, 64.0] {
+            let system = SystemSpec::four_a100_custom_bw(bw);
+            let c = cals(&model, &system);
+            for skew in [1.4, 2.0, 3.0] {
+                let over = strategy_savings_overlap(&model, &system, &c, skew, 1, 512, true);
+                let spec =
+                    strategy_savings_regime(&model, &system, &c, skew, 1, 512, true, true);
+                assert!((spec.baseline_s - over.baseline_s).abs() < 1e-15);
+                assert!((spec.dop_saving_s - over.dop_saving_s).abs() < 1e-15);
+                assert!(
+                    spec.tep_best_saving_s >= over.tep_best_saving_s - 1e-15,
+                    "speculation must not hurt TEP at bw={bw} skew={skew}"
+                );
+                assert!(spec.difference_s <= over.difference_s + 1e-15);
+            }
+        }
+        // Decode regime obeys the same ordering.
+        let system = SystemSpec::four_a100_pcie();
+        let c = cals(&model, &system);
+        let over =
+            decode_strategy_savings_overlap(&model, &system, &c, 2.0, 16, 512, true);
+        let spec =
+            decode_strategy_savings_regime(&model, &system, &c, 2.0, 16, 512, true, true);
+        assert!(spec.tep_best_saving_s >= over.tep_best_saving_s - 1e-15);
+        // Without overlap the flag is inert (speculation rides lookahead).
+        let plain = strategy_savings(&model, &system, &c, 2.0, 1, 512);
+        let spec_no_overlap =
+            strategy_savings_regime(&model, &system, &c, 2.0, 1, 512, false, true);
+        assert!((plain.tep_best_saving_s - spec_no_overlap.tep_best_saving_s).abs() < 1e-15);
     }
 
     #[test]

@@ -140,7 +140,7 @@ mod tests {
         let best_tep = points
             .iter()
             .filter(|p| p.strategy_name == "token-to-expert")
-            .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+            .min_by(|a, b| a.total_s.total_cmp(&b.total_s))
             .unwrap();
         assert!(
             dop.total_s < best_tep.total_s,

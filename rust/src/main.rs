@@ -22,7 +22,15 @@ use moe_gps::trace::{datasets, Trace};
 use moe_gps::util::args::Args;
 
 fn main() {
-    let args = Args::from_env(&["fast", "csv", "help", "version", "overlap"]);
+    let args = Args::from_env(&[
+        "fast",
+        "csv",
+        "help",
+        "version",
+        "overlap",
+        "speculative",
+        "require-results",
+    ]);
     if args.flag("version") {
         println!("moe-gps {}", moe_gps::VERSION);
         return;
@@ -35,6 +43,7 @@ fn main() {
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-report") => cmd_bench_report(&args),
+        Some("bench-validate") => cmd_bench_validate(&args),
         _ => {
             print_help();
             Ok(())
@@ -58,18 +67,25 @@ USAGE: moe-gps <subcommand> [options]
   sweep        --model ... --system ... [--skews 1.0,1.4,2.0,3.0,4.0 --fast]
   advise       --model ... [--phase prefill|decode --skews ...
                 --bandwidths 600,300,128,64 --batch 16 --ctx 512 --fast
-                --overlap   (price the ADR-002 lookahead engine and show
-                             which guideline cells it flips)]
+                --overlap      (price the ADR-002 lookahead engine and show
+                                which guideline cells it flips)
+                --speculative  (additionally price the ADR-003 speculative
+                                TEP scatter; implies --overlap)]
   trace        --dataset mmlu|alpaca|sst2 [--seed 7]
   predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
   serve        --strategy none|dop|tep [--phase prefill|decode|mixed
-                --workers 4 --artifacts artifacts --lookahead 0|1]
+                --workers 4 --artifacts artifacts --lookahead 0|1
+                --speculative  (TEP speculative scatter; implies lookahead)
+                --threads N    (reference-backend compute pool; 0 = auto)]
                prefill: [--rounds 8 --seqs 4]
                decode/mixed (continuous batching): [--steps 256 --seqs 8
                 --max-active 8 --prompt 32 --max-new 32 --replan 4
                 --temperature 1.0 --arrival-every 2]
                (without artifacts the synthetic tiny model is served)
   bench-report table1|fig4|fig6|fig7 [--fast]
+  bench-validate [BENCH_serve.json] [--require-results]
+               validate a serve-bench trajectory file against the
+               moe-gps/serve-bench/v1 schema (the CI bench-smoke gate)
 ",
         moe_gps::VERSION
     );
@@ -164,16 +180,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_advise(args: &Args) -> Result<()> {
     let model = parse_model(args)?;
     let phase = ServePhase::by_name(args.opt_or("phase", "prefill"))?;
-    let overlap = args.flag("overlap");
+    let speculative = args.flag("speculative");
+    // Speculative scatter rides the lookahead pipeline, so pricing it
+    // implies the overlap regime (ADR 003).
+    let overlap = args.flag("overlap") || speculative;
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
     let system = SystemSpec::four_a100_nvlink();
     let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
-    // One map builder per phase, parameterised by the overlap regime so
-    // `--overlap` can render its map *and* the cells it flips.
-    let build = |with_overlap: bool| -> Result<Vec<gps::guidelines::GuidelineCell>> {
+    // One map builder per phase, parameterised by regime so `--overlap` /
+    // `--speculative` can render their map *and* the cells they flip.
+    let build = |with_overlap: bool,
+                 with_spec: bool|
+     -> Result<Vec<gps::guidelines::GuidelineCell>> {
         Ok(match phase {
-            ServePhase::Prefill => gps::guidelines::decision_map_overlap(
+            ServePhase::Prefill => gps::guidelines::decision_map_regime(
                 &model,
                 &cals,
                 &skews,
@@ -181,6 +202,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
                 1,
                 512,
                 with_overlap,
+                with_spec,
             ),
             ServePhase::Decode => {
                 // Decode regime: decision map over the same grid, priced on
@@ -192,7 +214,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
                 for &bw in &bandwidths {
                     let sys = SystemSpec::four_a100_custom_bw(bw);
                     for &skew in &skews {
-                        let cmp = gps::decode_strategy_savings_overlap(
+                        let cmp = gps::decode_strategy_savings_regime(
                             &model,
                             &sys,
                             &cals,
@@ -200,6 +222,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
                             batch,
                             ctx,
                             with_overlap,
+                            with_spec,
                         );
                         let best_saving =
                             cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
@@ -215,16 +238,26 @@ fn cmd_advise(args: &Args) -> Result<()> {
             }
         })
     };
-    let cells = build(overlap)?;
+    let cells = build(overlap, speculative)?;
     println!(
         "phase: {}{}",
         phase.name(),
-        if overlap { " (lookahead overlap)" } else { "" }
+        if speculative {
+            " (lookahead overlap + speculative scatter)"
+        } else if overlap {
+            " (lookahead overlap)"
+        } else {
+            ""
+        }
     );
     println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
     println!("{}", gps::guidelines::summarize(&cells));
-    if overlap {
-        let base = build(false)?;
+    if speculative {
+        // Flips vs the overlap-only map: what speculation alone buys.
+        let base = build(true, false)?;
+        println!("{}", gps::guidelines::render_flips(&base, &cells));
+    } else if overlap {
+        let base = build(false, false)?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
     }
     Ok(())
@@ -264,11 +297,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.opt_usize("workers", 4)?;
     let phase = args.opt_or("phase", "prefill");
     let seed = args.opt_u64("seed", 11)?;
+    // ADR 003: size the reference backend's shared compute pool before
+    // the first engine spins up (0 = auto-detect).
+    moe_gps::runtime::configure_compute_threads(args.opt_usize("threads", 0)?);
     let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
     // ADR 002: overlap next-layer prediction/planning/prewarm with the
     // current layer's compute. Numerics are identical either way; both
     // regimes stay reproducible from the CLI.
     coord.lookahead = args.opt_usize("lookahead", 0)? != 0;
+    // ADR 003: speculative TEP scatter rides the lookahead pipeline.
+    coord.speculative = args.flag("speculative");
+    if coord.speculative {
+        coord.lookahead = true;
+    }
     let mut gen = RequestGen::new(seed, coord.vocab());
     match phase {
         "prefill" => {
@@ -366,5 +407,24 @@ fn cmd_bench_report(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown report `{other}` (table1|fig4|fig6|fig7)"),
     }
+    Ok(())
+}
+
+fn cmd_bench_validate(args: &Args) -> Result<()> {
+    let path = std::path::PathBuf::from(
+        args.positionals
+            .first()
+            .map(String::as_str)
+            .unwrap_or(moe_gps::bench::emit::DEFAULT_PATH),
+    );
+    let n = moe_gps::bench::emit::validate_serve_benches(
+        &path,
+        args.flag("require-results"),
+    )?;
+    println!(
+        "{}: valid `{}` file with {n} record(s)",
+        path.display(),
+        moe_gps::bench::emit::SCHEMA
+    );
     Ok(())
 }

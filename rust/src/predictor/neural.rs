@@ -351,7 +351,7 @@ impl TokenPredictor for MlpPredictor {
                         logits
                             .iter()
                             .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .max_by(|a, b| a.1.total_cmp(b.1))
                             .map(|(i, _)| i as u8)
                             .unwrap()
                     })

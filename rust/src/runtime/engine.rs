@@ -26,6 +26,18 @@ use super::artifacts::{synthetic_artifacts, Manifest, SyntheticSpec, WeightStore
 use super::reference::ReferenceBackend;
 use super::tensor::{HostTensor, IntTensor};
 
+/// Configure the reference backend's shared compute thread pool (ADR
+/// 003): `n` total threads (helpers + caller), 0 = auto-detect. Must run
+/// before the first engine op executes — the pool is created lazily on
+/// first use and its size is then fixed for the process. The CLI plumbs
+/// `serve --threads N` here; `MOE_GPS_THREADS` works for benches/tests.
+/// Numerics are bitwise independent of the thread count (every parallel
+/// op partitions its output rows and runs the identical serial kernel
+/// per row).
+pub fn configure_compute_threads(n: usize) {
+    super::pool::configure_threads(n);
+}
+
 /// An input to [`Engine::call`]: a named device-resident weight, a host
 /// activation tensor, or host int tensor (token ids).
 #[derive(Clone, Copy)]

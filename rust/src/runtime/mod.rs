@@ -22,9 +22,10 @@ pub mod bucket;
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 pub mod reference;
 pub mod tensor;
 
 pub use artifacts::{synthetic_artifacts, Manifest, SyntheticSpec, WeightStore};
-pub use engine::{Engine, EngineSource, In};
+pub use engine::{configure_compute_threads, Engine, EngineSource, In};
 pub use tensor::HostTensor;

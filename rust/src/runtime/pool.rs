@@ -1,0 +1,290 @@
+//! Shared persistent compute thread pool for the reference backend
+//! (ADR 003).
+//!
+//! The pure-rust ops in [`super::reference`] parallelise their row/head
+//! loops over this pool instead of spawning threads per call. Design
+//! constraints, in order:
+//!
+//! 1. **Determinism** — every parallel op partitions its *output* into
+//!    disjoint chunks and computes each chunk with the identical serial
+//!    kernel, so results are bitwise independent of the thread count and
+//!    of which thread ran which chunk. The pool only decides *where* a
+//!    chunk runs, never *how* it accumulates.
+//! 2. **No allocation on the steady path** beyond one job box per helper
+//!    per call — work is distributed by an atomic task counter, not by
+//!    queueing one closure per task.
+//! 3. **No nesting deadlocks** — a task that (transitively) calls back
+//!    into the pool runs its inner loop serially (`IN_POOL_TASK` guard),
+//!    and the calling thread always participates in its own call's work,
+//!    so a call can complete even if every helper is busy elsewhere.
+//!    Concurrent calls from different threads (the leader engine plus the
+//!    virtual-GPU workers) interleave safely: each call waits only on its
+//!    own completion tokens.
+//!
+//! Thread count: [`configure_threads`] before first use (the CLI's
+//! `serve --threads N`), else `MOE_GPS_THREADS`, else
+//! `available_parallelism`. The pool is created lazily on first use and
+//! lives for the process.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    /// One channel per helper thread; the leader of each call is the
+    /// calling thread itself.
+    senders: Vec<Mutex<mpsc::Sender<Job>>>,
+}
+
+/// Desired total thread count (helpers + leader); 0 = auto.
+static DESIRED: AtomicUsize = AtomicUsize::new(0);
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Set while a helper runs a pool task: nested parallel calls from
+    /// inside a task degrade to serial instead of risking a queue cycle.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Set the compute thread count (total, including the calling thread).
+/// Takes effect only before the pool's first use; later calls are
+/// ignored (the pool is already running). 0 restores auto-detection.
+pub fn configure_threads(n: usize) {
+    DESIRED.store(n, Ordering::SeqCst);
+}
+
+/// Total compute threads a parallel region can use (helpers + caller).
+pub fn threads() -> usize {
+    pool().senders.len() + 1
+}
+
+fn auto_threads() -> usize {
+    if let Ok(v) = std::env::var("MOE_GPS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 16)
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let desired = DESIRED.load(Ordering::SeqCst);
+        let total = if desired == 0 { auto_threads() } else { desired };
+        let helpers = total.saturating_sub(1);
+        let senders = (0..helpers)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel::<Job>();
+                std::thread::Builder::new()
+                    .name(format!("compute-{i}"))
+                    .spawn(move || {
+                        // Jobs catch their own panics, so this loop only
+                        // ends when the sender side is dropped (never:
+                        // the pool is static).
+                        for job in rx {
+                            job();
+                        }
+                    })
+                    .expect("spawn compute pool thread");
+                Mutex::new(tx)
+            })
+            .collect();
+        Pool { senders }
+    })
+}
+
+/// Run `f(0..n_tasks)` across the pool. Blocks until every task has
+/// completed; tasks are claimed from a shared atomic counter, and the
+/// calling thread participates, so the call completes even with zero
+/// helpers. Panics in any task are re-raised here after all tasks finish.
+pub fn parallel_for<F>(n_tasks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n_tasks == 0 {
+        return;
+    }
+    let nested = IN_POOL_TASK.with(Cell::get);
+    let pool = pool();
+    if n_tasks == 1 || pool.senders.is_empty() || nested {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+
+    let next = Arc::new(AtomicUsize::new(0));
+    let helper_panicked = Arc::new(AtomicBool::new(false));
+    let (done_tx, done_rx) = mpsc::channel::<()>();
+    // SAFETY: the borrow of `f` is extended to 'static only for the
+    // duration of this call — every helper job sends its done token
+    // before returning, and we block on exactly `helpers` tokens below
+    // (even if the leader's own work panics), so no job can outlive `f`.
+    let f_ref: &(dyn Fn(usize) + Sync) = &f;
+    let f_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute(f_ref) };
+
+    let helpers = pool.senders.len().min(n_tasks - 1);
+    for sender in pool.senders.iter().take(helpers) {
+        let next = Arc::clone(&next);
+        let flag = Arc::clone(&helper_panicked);
+        let done = done_tx.clone();
+        let job: Job = Box::new(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                IN_POOL_TASK.with(|t| t.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    f_static(i);
+                }
+            }));
+            IN_POOL_TASK.with(|t| t.set(false));
+            if result.is_err() {
+                flag.store(true, Ordering::SeqCst);
+            }
+            let _ = done.send(());
+        });
+        sender
+            .lock()
+            .expect("compute pool sender")
+            .send(job)
+            .expect("compute pool thread alive");
+    }
+    drop(done_tx);
+
+    // The leader claims tasks too; its panic (if any) is deferred until
+    // the helpers are drained so the `f` borrow stays valid throughout.
+    let leader = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n_tasks {
+            break;
+        }
+        f(i);
+    }));
+    for _ in 0..helpers {
+        done_rx.recv().expect("compute pool thread alive");
+    }
+    if let Err(panic) = leader {
+        std::panic::resume_unwind(panic);
+    }
+    if helper_panicked.load(Ordering::SeqCst) {
+        panic!("compute pool task panicked");
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: only ever used to reconstruct *disjoint* sub-slices, one per
+// task index (see `parallel_slices_mut`).
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Split `data` into consecutive chunks of `chunk_len` (the last chunk
+/// may be shorter) and run `f(chunk_index, chunk)` for each across the
+/// pool. Chunks are disjoint, so each task gets exclusive `&mut` access.
+pub fn parallel_slices_mut<F>(data: &mut [f32], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let total = data.len();
+    if total == 0 {
+        return;
+    }
+    let n_tasks = total.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    parallel_for(n_tasks, move |i| {
+        let start = i * chunk_len;
+        let len = chunk_len.min(total - start);
+        // SAFETY: [start, start+len) ranges are disjoint across task
+        // indices and in-bounds; `parallel_for` joins before returning.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(i, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_handles_empty_and_single() {
+        parallel_for(0, |_| panic!("must not run"));
+        let ran = AtomicUsize::new(0);
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_slices_are_disjoint_and_cover() {
+        let mut data = vec![0.0f32; 1003];
+        parallel_slices_mut(&mut data, 64, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1.0 + i as f32 * 0.0; // each element touched once
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn nested_calls_degrade_to_serial_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            parallel_for(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn concurrent_leaders_complete() {
+        // Two non-pool threads driving the pool at once (the leader +
+        // virtual-GPU-worker pattern).
+        let a = std::thread::spawn(|| {
+            let sum = AtomicUsize::new(0);
+            parallel_for(100, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+            sum.load(Ordering::Relaxed)
+        });
+        let b = std::thread::spawn(|| {
+            let sum = AtomicUsize::new(0);
+            parallel_for(100, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+            sum.load(Ordering::Relaxed)
+        });
+        assert_eq!(a.join().unwrap(), 4950);
+        assert_eq!(b.join().unwrap(), 4950);
+    }
+
+    #[test]
+    fn threads_reports_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

@@ -10,11 +10,19 @@
 //! decode-phase ops the coordinator's continuous-batching path needs
 //! (`attention_prefill` / `attention_step` with explicit KV tensors, and
 //! `lm_head` with tied embeddings).
+//!
+//! Hot loops (matmul, attention, lm_head) are blocked/tiled and fan out
+//! over the shared persistent compute pool ([`super::pool`], ADR 003).
+//! Every parallel op partitions its *output* into disjoint row/head
+//! chunks and computes each with the identical serial kernel, so results
+//! are bitwise independent of the thread count — the property
+//! `tests/pipeline_parity.rs` and `tests/tiled_backend.rs` pin down.
 
 use anyhow::Result;
 
 use super::artifacts::{Manifest, WeightStore};
 use super::engine::In;
+use super::pool;
 use super::tensor::HostTensor;
 
 /// Model geometry the attention ops need, read once from the manifest.
@@ -187,9 +195,11 @@ impl ReferenceBackend {
         let kvw = nkv * hd;
         let scale = 1.0 / (hd as f32).sqrt();
 
-        let mut ctx = vec![0.0f32; sq * qw];
-        let mut scores: Vec<f32> = Vec::with_capacity(tk);
-        for i in 0..sq {
+        // The per-(row, head) kernel is shared by the serial and parallel
+        // paths below: one query row's context depends only on its own
+        // scores, so parallelising over query rows (ADR 003) cannot change
+        // any output bit.
+        let row_kernel = |i: usize, out_row: &mut [f32], scores: &mut Vec<f32>| {
             let attended = (offset + i + 1).min(tk);
             for h in 0..nh {
                 let kvh = h / group;
@@ -208,7 +218,7 @@ impl ReferenceBackend {
                     *sc = (*sc - max).exp();
                     denom += *sc;
                 }
-                let out = &mut ctx[i * qw + h * hd..i * qw + (h + 1) * hd];
+                let out = &mut out_row[h * hd..(h + 1) * hd];
                 for (j, &p) in scores.iter().enumerate() {
                     let weight = p / denom;
                     let v_vec = &v_all[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd];
@@ -217,7 +227,24 @@ impl ReferenceBackend {
                     }
                 }
             }
+        };
+
+        let mut ctx = vec![0.0f32; sq * qw];
+        if sq < 2 || sq * tk * qw < ATTEND_PAR_WORK {
+            let mut scores: Vec<f32> = Vec::with_capacity(tk);
+            for (i, out_row) in ctx.chunks_mut(qw).enumerate() {
+                row_kernel(i, out_row, &mut scores);
+            }
+            return ctx;
         }
+        let rows_per_chunk = sq.div_ceil(pool::threads() * 4).max(1);
+        pool::parallel_slices_mut(&mut ctx, rows_per_chunk * qw, |chunk_idx, chunk| {
+            let i0 = chunk_idx * rows_per_chunk;
+            let mut scores: Vec<f32> = Vec::with_capacity(tk);
+            for (r, out_row) in chunk.chunks_mut(qw).enumerate() {
+                row_kernel(i0 + r, out_row, &mut scores);
+            }
+        });
         ctx
     }
 
@@ -256,9 +283,11 @@ impl ReferenceBackend {
             }
         };
 
-        let mut ctx = vec![0.0f32; qw];
-        let mut scores: Vec<f32> = Vec::with_capacity(t_prev + 1);
-        for h in 0..nh {
+        // Each head writes its own `hd`-wide slice of the context — the
+        // natural parallel axis for a single-query step (ADR 003). The
+        // per-head kernel is shared by both paths, so outputs are bitwise
+        // independent of the thread count.
+        let head_kernel = |h: usize, out: &mut [f32], scores: &mut Vec<f32>| {
             let kvh = h / group;
             let q_vec = &q[h * hd..(h + 1) * hd];
             scores.clear();
@@ -275,7 +304,6 @@ impl ReferenceBackend {
                 *sc = (*sc - max).exp();
                 denom += *sc;
             }
-            let out = &mut ctx[h * hd..(h + 1) * hd];
             for (j, &p) in scores.iter().enumerate() {
                 let weight = p / denom;
                 let v_vec = v_row(j, kvh);
@@ -283,7 +311,20 @@ impl ReferenceBackend {
                     *o += weight * vv;
                 }
             }
+        };
+
+        let mut ctx = vec![0.0f32; qw];
+        if nh < 2 || nh * (t_prev + 1) * hd < ATTEND_PAR_WORK {
+            let mut scores: Vec<f32> = Vec::with_capacity(t_prev + 1);
+            for (h, out) in ctx.chunks_mut(hd).enumerate() {
+                head_kernel(h, out, &mut scores);
+            }
+            return ctx;
         }
+        pool::parallel_slices_mut(&mut ctx, hd, |h, out| {
+            let mut scores: Vec<f32> = Vec::with_capacity(t_prev + 1);
+            head_kernel(h, out, &mut scores);
+        });
         ctx
     }
 
@@ -335,14 +376,29 @@ impl ReferenceBackend {
         let d = self.dims.d_model;
         let vocab = embed.rows();
         let xn = rmsnorm(&h.data, n, d, &ln.data);
-        // Tied embeddings: logits = xn @ embed^T.
+        // Tied embeddings: logits = xn @ embed^T. Usually a single row
+        // (the last token of each sequence), so the parallel axis is the
+        // vocab: disjoint logit spans per chunk, each element a single
+        // dot product — bitwise independent of the chunking (ADR 003).
         let mut logits = vec![0.0f32; n * vocab];
-        for i in 0..n {
+        let fill = |i: usize, v0: usize, orow: &mut [f32]| {
             let xrow = &xn[i * d..(i + 1) * d];
-            let orow = &mut logits[i * vocab..(i + 1) * vocab];
-            for (v, o) in orow.iter_mut().enumerate() {
-                let erow = embed.row(v);
+            for (dv, o) in orow.iter_mut().enumerate() {
+                let erow = embed.row(v0 + dv);
                 *o = xrow.iter().zip(erow).map(|(&a, &b)| a * b).sum();
+            }
+        };
+        if n * vocab * d < MATMUL_PAR_FLOPS {
+            for i in 0..n {
+                fill(i, 0, &mut logits[i * vocab..(i + 1) * vocab]);
+            }
+        } else {
+            for i in 0..n {
+                let row = &mut logits[i * vocab..(i + 1) * vocab];
+                let chunk = vocab.div_ceil(pool::threads() * 4).max(1);
+                pool::parallel_slices_mut(row, chunk, |c, span| {
+                    fill(i, c * chunk, span);
+                });
             }
         }
         Ok(vec![HostTensor::new(logits, vec![n, vocab])])
@@ -384,21 +440,60 @@ fn rmsnorm(x: &[f32], m: usize, d: usize, g: &[f32]) -> Vec<f32> {
     out
 }
 
-/// Row-major `[m,k] @ [k,n] -> [m,n]` (ikj loop order for cache locality).
-fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
+/// Mul-add count below which a matmul is not worth fanning out to the
+/// compute pool (dispatch overhead dominates — e.g. decode matvecs).
+const MATMUL_PAR_FLOPS: usize = 1 << 15;
+
+/// Work estimate (`rows × keys × width`) below which attention stays
+/// serial; single-row decode steps and tiny prefills land here.
+const ATTEND_PAR_WORK: usize = 1 << 14;
+
+/// k-dimension tile: the `b` panel touched by one tile fits in L1/L2 and
+/// is reused across the rows of a chunk. Tiling only partitions the `kk`
+/// loop — the accumulation order within a row is exactly the plain ikj
+/// order, so tiled output is bitwise identical to the untiled kernel.
+const MATMUL_K_TILE: usize = 64;
+
+/// The serial per-row kernel: blocked ikj over one output row. Every
+/// execution path (serial, tiled, pool-parallel) funnels through this,
+/// which is what keeps results bitwise independent of the thread count.
+#[inline]
+fn matmul_row(a: &[f32], k: usize, b: &[f32], n: usize, i: usize, orow: &mut [f32]) {
+    let arow = &a[i * k..(i + 1) * k];
+    for k0 in (0..k).step_by(MATMUL_K_TILE) {
+        let k1 = (k0 + MATMUL_K_TILE).min(k);
+        for (kk, &av) in arow[k0..k1].iter().enumerate() {
+            let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
             }
         }
     }
+}
+
+/// Row-major `[m,k] @ [k,n] -> [m,n]`: blocked/tiled ikj kernel with
+/// row-chunk parallelism over the shared compute pool (ADR 003). Each
+/// output row is produced by the identical serial kernel regardless of
+/// chunking, so results are bitwise independent of the thread count.
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    if m * k * n < MATMUL_PAR_FLOPS || m < 2 {
+        for i in 0..m {
+            matmul_row(a, k, b, n, i, &mut out[i * n..(i + 1) * n]);
+        }
+        return out;
+    }
+    // Chunk rows ~4× finer than the thread count so a straggler chunk
+    // cannot serialise the tail; chunking never changes per-row numerics.
+    let rows_per_chunk = m.div_ceil(pool::threads() * 4).max(1);
+    pool::parallel_slices_mut(&mut out, rows_per_chunk * n, |chunk_idx, chunk| {
+        let row0 = chunk_idx * rows_per_chunk;
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            matmul_row(a, k, b, n, row0 + r, orow);
+        }
+    });
     out
 }
 
@@ -623,7 +718,7 @@ mod tests {
             .data
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert_eq!(argmax, target);

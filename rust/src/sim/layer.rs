@@ -75,6 +75,8 @@ pub struct LayerSim {
     pub hide_duplication: bool,
     /// Price the lookahead-overlap serving engine (ADR 002).
     pub lookahead_overlap: bool,
+    /// Price the speculative TEP scatter on top of overlap (ADR 003).
+    pub speculative_scatter: bool,
 }
 
 impl LayerSim {
@@ -88,6 +90,7 @@ impl LayerSim {
             error_model: ErrorModel::Typical,
             hide_duplication: true,
             lookahead_overlap: false,
+            speculative_scatter: false,
         }
     }
 
@@ -99,6 +102,11 @@ impl LayerSim {
 
     pub fn with_overlap(mut self, on: bool) -> LayerSim {
         self.lookahead_overlap = on;
+        self
+    }
+
+    pub fn with_speculative(mut self, on: bool) -> LayerSim {
+        self.speculative_scatter = on;
         self
     }
 
@@ -133,6 +141,7 @@ impl LayerSim {
         p.hide_duplication = self.hide_duplication;
         p.attention_compute_s = attention_compute_s;
         p.lookahead_overlap = self.lookahead_overlap;
+        p.speculative_scatter = self.speculative_scatter;
         moe::moe_cost(&self.model, &self.system, &p)
     }
 

@@ -109,6 +109,13 @@ pub struct MoeParams {
     /// attention window hides the duplication transfer first, then the
     /// prediction overhead; only the residue is charged.
     pub lookahead_overlap: bool,
+    /// ADR 003: price the speculative TEP scatter (only meaningful with
+    /// `lookahead_overlap` and Token-to-Expert). Correctly-predicted
+    /// tokens ship before the repair dispatch runs, so the misprediction
+    /// correction scatter overlaps with the confirmed tiles' FFN compute;
+    /// only the residue stays on the critical path. The gather is
+    /// unchanged (it waits on every expert's output regardless).
+    pub speculative_scatter: bool,
 }
 
 impl MoeParams {
@@ -124,6 +131,7 @@ impl MoeParams {
             prediction_interval: 1,
             dop_balanced_comm: false,
             lookahead_overlap: false,
+            speculative_scatter: false,
         }
     }
 }
@@ -216,6 +224,17 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
                 cost.movement_s = mv;
                 cost.overhead_s = oh;
                 cost.hidden_s = hidden;
+                if p.speculative_scatter {
+                    // ADR 003: confirmed tokens (fraction 1 − ε) were
+                    // dispatched before the repair pass, so the correction
+                    // scatter overlaps with their FFN compute; only the
+                    // residue is exposed. Conservation: exposed + hidden
+                    // scatter = the plain ε-scatter charge.
+                    let window = cost.ffn_s * (1.0 - eps);
+                    let hidden_scatter = cost.scatter_s.min(window);
+                    cost.scatter_s -= hidden_scatter;
+                    cost.hidden_s += hidden_scatter;
+                }
             } else {
                 cost.overhead_s = overhead_amortised;
                 cost.movement_s = movement_cost(model, system, p);
@@ -445,6 +464,46 @@ mod tests {
         assert_eq!(exposed.hidden_s, 0.0);
         assert_eq!(exposed.overhead_s, 1e-3);
         assert!(exposed.movement_s > 0.0, "transfer exposed without a window");
+    }
+
+    #[test]
+    fn speculative_scatter_hides_correction_under_ffn() {
+        let (m, s) = mixtral_nvlink();
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-4,
+        };
+        let mut p = MoeParams::new(1, 512, 2.0, strategy);
+        p.lookahead_overlap = true;
+        p.attention_compute_s = 1e-3;
+        let plain = moe_cost(&m, &s, &p);
+        p.speculative_scatter = true;
+        let spec = moe_cost(&m, &s, &p);
+        assert!(spec.scatter_s < plain.scatter_s, "scatter must shrink");
+        assert!(spec.scatter_s >= 0.0);
+        // Conservation: what left the scatter moved into hidden.
+        let moved = plain.scatter_s - spec.scatter_s;
+        assert!((spec.hidden_s - plain.hidden_s - moved).abs() < 1e-15);
+        assert_eq!(spec.gather_s, plain.gather_s, "gather unchanged");
+        assert_eq!(spec.ffn_s, plain.ffn_s);
+        assert!(spec.total() < plain.total());
+        // Without lookahead the flag is inert.
+        p.lookahead_overlap = false;
+        let inert = moe_cost(&m, &s, &p);
+        p.speculative_scatter = false;
+        assert_eq!(inert, moe_cost(&m, &s, &p));
+        // DOP is never affected by the TEP-only flag.
+        let mut pd = MoeParams::new(
+            1,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        pd.lookahead_overlap = true;
+        pd.attention_compute_s = 1e-3;
+        let dop_plain = moe_cost(&m, &s, &pd);
+        pd.speculative_scatter = true;
+        assert_eq!(dop_plain, moe_cost(&m, &s, &pd));
     }
 
     #[test]

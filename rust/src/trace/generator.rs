@@ -224,7 +224,7 @@ fn drift_permutation(probs: &[f64], rng: &mut Rng) -> Vec<f64> {
     let argmax = probs
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
     let mut rest: Vec<usize> = (0..probs.len()).filter(|&i| i != argmax).collect();

@@ -1,0 +1,231 @@
+//! Property tests for the parallel tiled reference backend (ADR 003).
+//!
+//! Contract: the blocked/tiled, pool-parallel kernels are bitwise
+//! identical to a naive serial implementation — per row, independent of
+//! shape, tiling boundaries, and thread count. This is what lets
+//! `tests/pipeline_parity.rs` keep its bitwise oracle across the backend
+//! rewrite.
+
+use moe_gps::runtime::reference::matmul;
+use moe_gps::runtime::tensor::IntTensor;
+use moe_gps::runtime::{Engine, HostTensor, In, SyntheticSpec};
+use moe_gps::util::rng::Rng;
+
+/// The seed implementation: plain untiled single-threaded ikj.
+fn naive_matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn random_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn tiled_matmul_bitwise_matches_naive_over_shape_grid() {
+    let mut rng = Rng::new(0xA11C);
+    // Shapes straddle every regime: serial fallback (tiny), single/multi
+    // k-tile (k vs the 64-wide tile), and the parallel row-chunk path
+    // (large m·k·n), including non-multiples of every block size.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 64, 512),
+        (2, 3, 5),
+        (7, 64, 9),
+        (16, 65, 33),
+        (17, 129, 65),
+        (64, 64, 64),
+        (100, 57, 31),
+        (128, 256, 64),
+        (200, 64, 512),
+        (257, 130, 67),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = random_buf(&mut rng, m * k);
+        let b = random_buf(&mut rng, k * n);
+        let got = matmul(&a, m, k, &b, n);
+        let want = naive_matmul(&a, m, k, &b, n);
+        assert_eq!(got.len(), want.len());
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "({m},{k},{n}) elem {i}: tiled {x} vs naive {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_matmul_handles_non_finite_inputs_without_panicking() {
+    // NaN/Inf activations must flow through (garbage in, garbage out) —
+    // never panic, and still bitwise-match the naive kernel.
+    let m = 40;
+    let k = 70;
+    let n = 40;
+    let mut rng = Rng::new(7);
+    let mut a = random_buf(&mut rng, m * k);
+    a[3] = f32::NAN;
+    a[k + 1] = f32::INFINITY;
+    let b = random_buf(&mut rng, k * n);
+    let got = matmul(&a, m, k, &b, n);
+    let want = naive_matmul(&a, m, k, &b, n);
+    for (x, y) in got.iter().zip(&want) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// Repeated executions of the threaded attention ops must be bitwise
+/// stable: thread scheduling may vary run to run, results may not.
+#[test]
+fn attention_ops_are_bitwise_deterministic_across_runs() {
+    let mut engine = Engine::synthetic(&SyntheticSpec::small_test()).unwrap();
+    let s = 24usize;
+    let d = 64usize;
+    let x = HostTensor::new(
+        (0..s * d).map(|i| ((i % 23) as f32 - 11.0) * 0.07).collect(),
+        vec![s, d],
+    );
+    let args = |x: &HostTensor| {
+        vec![
+            In::T(x),
+            In::W("layers.0.attn.ln"),
+            In::W("layers.0.attn.wq"),
+            In::W("layers.0.attn.wk"),
+            In::W("layers.0.attn.wv"),
+            In::W("layers.0.attn.wo"),
+        ]
+    };
+    let runs: Vec<HostTensor> = (0..3)
+        .map(|_| {
+            let a = args(&x);
+            engine.call("attention", &a).unwrap().remove(0)
+        })
+        .collect();
+    for run in &runs[1..] {
+        assert_eq!(run.shape, runs[0].shape);
+        for (a, b) in runs[0].data.iter().zip(&run.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "attention must be run-stable");
+        }
+    }
+
+    // Same for the decode step over a KV cache (head-parallel path).
+    let mut prefill_args = vec![In::T(&x)];
+    prefill_args.extend([
+        In::W("layers.0.attn.ln"),
+        In::W("layers.0.attn.wq"),
+        In::W("layers.0.attn.wk"),
+        In::W("layers.0.attn.wv"),
+        In::W("layers.0.attn.wo"),
+    ]);
+    let mut prefill = engine.call("attention_prefill", &prefill_args).unwrap();
+    let v_cache = prefill.remove(2);
+    let k_cache = prefill.remove(1);
+    let x_last = x.gather_rows(&[s - 1]);
+    let step_runs: Vec<HostTensor> = (0..3)
+        .map(|_| {
+            let step_args = vec![
+                In::T(&x_last),
+                In::T(&k_cache),
+                In::T(&v_cache),
+                In::W("layers.0.attn.ln"),
+                In::W("layers.0.attn.wq"),
+                In::W("layers.0.attn.wk"),
+                In::W("layers.0.attn.wv"),
+                In::W("layers.0.attn.wo"),
+            ];
+            engine.call("attention_step", &step_args).unwrap().remove(0)
+        })
+        .collect();
+    for run in &step_runs[1..] {
+        for (a, b) in step_runs[0].data.iter().zip(&run.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "attention_step must be run-stable");
+        }
+    }
+}
+
+/// The lm_head vocab-chunked parallel path must agree with a serial dot
+/// product against the embedding table.
+#[test]
+fn lm_head_matches_serial_dot_products() {
+    let mut engine = Engine::synthetic(&SyntheticSpec::small_test()).unwrap();
+    let d = 64usize;
+    let h = HostTensor::new((0..d).map(|i| (i as f32 - 31.0) * 0.03).collect(), vec![1, d]);
+    let logits = engine
+        .call("lm_head", &[In::T(&h), In::W("final.ln"), In::W("embed")])
+        .unwrap()
+        .remove(0);
+    assert_eq!(logits.shape, vec![1, 512]);
+    // Reproduce serially: rmsnorm(h) · embed[v] for a few vocab ids.
+    let ws = engine.weight_store();
+    let ln = ws.get("final.ln").unwrap();
+    let embed = ws.get("embed").unwrap();
+    let ms: f32 = h.data.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+    let scale = 1.0 / (ms + 1e-5).sqrt();
+    let xn: Vec<f32> = h
+        .data
+        .iter()
+        .zip(&ln.data)
+        .map(|(&v, &g)| v * scale * g)
+        .collect();
+    for v in [0usize, 17, 255, 511] {
+        let want: f32 = xn.iter().zip(embed.row(v)).map(|(&a, &b)| a * b).sum();
+        assert_eq!(
+            logits.data[v].to_bits(),
+            want.to_bits(),
+            "vocab {v}: {} vs {want}",
+            logits.data[v]
+        );
+    }
+}
+
+/// Embedding + a full engine round-trip sanity check under the threaded
+/// backend (shapes and determinism of a composite call chain).
+#[test]
+fn composite_op_chain_is_stable() {
+    let mut engine = Engine::synthetic(&SyntheticSpec::small_test()).unwrap();
+    let ids = IntTensor::new(vec![4, 9, 2, 2, 100], vec![1, 5]);
+    let run = |engine: &mut Engine| -> HostTensor {
+        let x0 = engine
+            .call("embed", &[In::I(&ids), In::W("embed")])
+            .unwrap()
+            .remove(0);
+        let h = engine
+            .call(
+                "attention",
+                &[
+                    In::T(&x0),
+                    In::W("layers.1.attn.ln"),
+                    In::W("layers.1.attn.wq"),
+                    In::W("layers.1.attn.wk"),
+                    In::W("layers.1.attn.wv"),
+                    In::W("layers.1.attn.wo"),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        engine
+            .call(
+                "router",
+                &[In::T(&h), In::W("layers.1.moe.ln"), In::W("layers.1.moe.router")],
+            )
+            .unwrap()
+            .remove(1)
+    };
+    let a = run(&mut engine);
+    let b = run(&mut engine);
+    assert_eq!(a.shape, vec![5, 8]);
+    for (x, y) in a.data.iter().zip(&b.data) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
