@@ -26,7 +26,7 @@ fn main() {
 
     group("E2E decode: DOP with lookahead off vs on (4 vGPUs, 8 seqs)");
     let mut steady = [0.0f64; 2];
-    for (idx, lookahead) in [false, true].into_iter().enumerate() {
+    for (idx, lookahead) in [0usize, 1].into_iter().enumerate() {
         let mut coord =
             Coordinator::new(&artifacts, 4, ServeStrategy::DistributionOnly).unwrap();
         coord.lookahead = lookahead;
@@ -48,7 +48,7 @@ fn main() {
             arrival_interval: 0,
         };
         let report = coord.serve_decode(requests, &opts).unwrap();
-        println!("  lookahead={}: {}", u8::from(lookahead), report.summary());
+        println!("  lookahead={lookahead}: {}", report.summary());
         println!(
             "    cold-start transfer: hidden {} B / exposed {} B  \
              (hidden {:.1} us worker time, exposed {:.1} us leader stall)",
@@ -61,7 +61,7 @@ fn main() {
         records.push(ServeBenchRecord {
             bench: "pipeline_overlap/decode_dop".into(),
             strategy: "distribution-only".into(),
-            lookahead,
+            lookahead: lookahead > 0,
             tokens_per_s: report.steady_state_tokens_per_s(),
             hidden_transfer_ns: cold.total_hidden_transfer_s() * 1e9,
             exposed_transfer_ns: cold.total_exposed_transfer_s() * 1e9,
@@ -83,7 +83,7 @@ fn main() {
     {
         let mut coord =
             Coordinator::new(&artifacts, 4, ServeStrategy::DistributionOnly).unwrap();
-        coord.lookahead = true;
+        coord.lookahead = 1;
         let mut gen = RequestGen::new(7, coord.vocab());
         let max_len = coord.seq_len();
         // Two rounds teach the estimators the synthetic trace's skew; the

@@ -46,10 +46,19 @@ pub struct RoundMetrics {
     /// Tile buffers recycled from the coordinator's tile pool.
     pub tile_reuses: u64,
     /// Slots dispatched speculatively (layer-L+1 expert predicted during
-    /// layer L's FFN phase and confirmed by the router — §3.1 TEP).
+    /// layer L's FFN phase and confirmed anywhere in the routed top-k —
+    /// §3.1 TEP, ADR 003/004).
     pub spec_dispatch_slots: usize,
     /// Slots that took the repair pass (mispredicted or extra top-k).
     pub spec_repair_slots: usize,
+    /// Replica weights evicted by the residency LRU (capacity pressure
+    /// plus plan-shrink evictions — ADR 004).
+    pub evictions: u64,
+    /// Bytes re-uploaded for replicas the cap had evicted (refetches).
+    pub refetch_upload_bytes: u64,
+    /// Peak per-worker resident replica bytes (the `--memory-cap`
+    /// acceptance number: ≤ the cap whenever no pinned overflow occurred).
+    pub resident_high_water_bytes: u64,
 }
 
 impl RoundMetrics {
@@ -163,12 +172,30 @@ impl ServeReport {
         self.rounds.iter().map(|r| r.spec_repair_slots).sum()
     }
 
+    pub fn total_evictions(&self) -> u64 {
+        self.rounds.iter().map(|r| r.evictions).sum()
+    }
+
+    pub fn total_refetch_upload_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.refetch_upload_bytes).sum()
+    }
+
+    /// Peak per-worker resident replica bytes across the whole run.
+    pub fn resident_high_water_bytes(&self) -> u64 {
+        self.rounds
+            .iter()
+            .map(|r| r.resident_high_water_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "strategy={:<18} rounds={:<3} tokens={:<6} throughput={:>9.1} tok/s  \
              mean latency={}  p95={}  ffn wall={}  slot imbalance={:.3}  \
              busy imbalance={:.3}  dup transfer={} (hidden {} / exposed {})  \
-             tile reuse={}/{}  spec slots={}/{}",
+             tile reuse={}/{}  spec slots={}/{}  evictions={} refetch={} \
+             resident hwm={}",
             self.strategy,
             self.rounds.len(),
             self.total_tokens(),
@@ -185,6 +212,9 @@ impl ServeReport {
             self.total_tile_allocs() + self.total_tile_reuses(),
             self.total_spec_dispatch_slots(),
             self.total_spec_dispatch_slots() + self.total_spec_repair_slots(),
+            self.total_evictions(),
+            crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
+            crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         )
     }
 }
@@ -228,10 +258,17 @@ pub struct DecodeStepMetrics {
     pub tile_allocs: u64,
     /// Tile buffers recycled from the coordinator's tile pool.
     pub tile_reuses: u64,
-    /// Slots dispatched speculatively (predicted expert confirmed).
+    /// Slots dispatched speculatively (predicted expert confirmed
+    /// anywhere in the routed top-k — ADR 003/004).
     pub spec_dispatch_slots: usize,
     /// Slots that took the repair pass.
     pub spec_repair_slots: usize,
+    /// Replica weights evicted by the residency LRU (ADR 004).
+    pub evictions: u64,
+    /// Bytes re-uploaded for replicas the cap had evicted.
+    pub refetch_upload_bytes: u64,
+    /// Peak per-worker resident replica bytes.
+    pub resident_high_water_bytes: u64,
 }
 
 impl DecodeStepMetrics {
@@ -355,6 +392,23 @@ impl DecodeReport {
         self.steps.iter().map(|s| s.spec_repair_slots).sum()
     }
 
+    pub fn total_evictions(&self) -> u64 {
+        self.steps.iter().map(|s| s.evictions).sum()
+    }
+
+    pub fn total_refetch_upload_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.refetch_upload_bytes).sum()
+    }
+
+    /// Peak per-worker resident replica bytes across the whole run.
+    pub fn resident_high_water_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| s.resident_high_water_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
     pub fn replan_count(&self) -> usize {
         self.steps.iter().filter(|s| s.replanned).count()
     }
@@ -364,7 +418,8 @@ impl DecodeReport {
             "strategy={:<18} steps={:<4} decoded={:<6} throughput={:>8.1} tok/s  \
              steady={:>8.1} tok/s ({} steps)  mean step={}  p95={}  \
              slot imbalance={:.3}  replans={}  dup transfer={} \
-             (hidden {} / exposed {})  tile reuse={}/{}  spec slots={}/{}",
+             (hidden {} / exposed {})  tile reuse={}/{}  spec slots={}/{}  \
+             evictions={} refetch={} resident hwm={}",
             self.strategy,
             self.steps.len(),
             self.total_decode_tokens(),
@@ -382,6 +437,9 @@ impl DecodeReport {
             self.total_tile_allocs() + self.total_tile_reuses(),
             self.total_spec_dispatch_slots(),
             self.total_spec_dispatch_slots() + self.total_spec_repair_slots(),
+            self.total_evictions(),
+            crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
+            crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         )
     }
 }
@@ -535,5 +593,55 @@ mod tests {
         assert_eq!(decode.total_spec_dispatch_slots(), 1);
         assert_eq!(decode.total_spec_repair_slots(), 1);
         assert!(decode.summary().contains("tile reuse=8/10"));
+    }
+
+    #[test]
+    fn residency_counters_aggregate_and_peak() {
+        // Evictions and refetch bytes are flows (summed); the resident
+        // high-water mark is a peak (max over rounds/steps) — ADR 004.
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![
+                RoundMetrics {
+                    evictions: 2,
+                    refetch_upload_bytes: 100,
+                    resident_high_water_bytes: 700,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    evictions: 3,
+                    refetch_upload_bytes: 50,
+                    resident_high_water_bytes: 400,
+                    ..Default::default()
+                },
+            ],
+        };
+        assert_eq!(serve.total_evictions(), 5);
+        assert_eq!(serve.total_refetch_upload_bytes(), 150);
+        assert_eq!(serve.resident_high_water_bytes(), 700);
+        assert!(serve.summary().contains("evictions=5"));
+        assert!(serve.summary().contains("resident hwm="));
+
+        let decode = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![
+                DecodeStepMetrics {
+                    evictions: 1,
+                    refetch_upload_bytes: 10,
+                    resident_high_water_bytes: 300,
+                    ..Default::default()
+                },
+                DecodeStepMetrics {
+                    evictions: 0,
+                    refetch_upload_bytes: 0,
+                    resident_high_water_bytes: 350,
+                    ..Default::default()
+                },
+            ],
+        };
+        assert_eq!(decode.total_evictions(), 1);
+        assert_eq!(decode.total_refetch_upload_bytes(), 10);
+        assert_eq!(decode.resident_high_water_bytes(), 350);
+        assert!(decode.summary().contains("evictions=1"));
     }
 }

@@ -27,6 +27,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod placement_mgr;
 pub mod request;
+pub mod residency;
 pub mod router;
 pub mod scheduler;
 pub mod server;
@@ -36,5 +37,6 @@ pub mod worker;
 pub use batcher::Batcher;
 pub use metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 pub use request::Request;
+pub use residency::ResidencyManager;
 pub use scheduler::Scheduler;
 pub use server::{Coordinator, DecodeOptions, ServeStrategy};

@@ -17,21 +17,38 @@
 //! * The per-layer loop is [`Coordinator::run_layers`], parameterised by
 //!   [`AttentionMode`] (whole-sequence attention vs KV-cache incremental).
 //!
-//! **Lookahead overlap** (`Coordinator::lookahead`): while layer `L` runs
-//! attention on the leader, the already-built plan for layer `L+1` is
-//! pushed to the workers as non-blocking [`WorkerMsg::Prewarm`] messages,
-//! so replica weight uploads stream while the leader computes instead of
-//! stalling the FFN phase on first use. The settle point is *selective*
-//! ([`Prewarmer::settle_for`]): the FFN phase blocks only on prewarms for
-//! the (worker, expert) pairs its dispatch actually routed work to —
-//! warming the rest of the placement never barriers the pipeline — and
-//! every transferred byte is accounted as *hidden* (ack arrived before
-//! any dispatch needed it) or *exposed* (the FFN phase had to block, or
-//! the worker uploaded cold inside `Run`) — the split `metrics.rs`
-//! reports and `sim/` prices (`lookahead_overlap`). With
-//! `parallel_attention` on, prewarms are issued *after* the attention
-//! fan-out instead, so transfers queue behind attention work on the
-//! shared worker queues rather than ahead of it.
+//! **Budgeted multi-step lookahead** (`Coordinator::lookahead = N`,
+//! ADR 002/004): while layer `L` runs attention on the leader, the
+//! already-built plans for layers `L+1 ..= L+N` are pushed to the workers
+//! as non-blocking [`WorkerMsg::Prewarm`] messages — nearest layer first,
+//! so when the per-layer-step transfer budget
+//! (`Coordinator::prewarm_budget_bytes`) runs out it is the *deepest*
+//! prewarms that are dropped (they get re-attempted at the next layer
+//! step, or upload cold at dispatch). Replica weight uploads therefore
+//! stream while the leader computes instead of stalling the FFN phase on
+//! first use, and slow interconnects can hide `N > 1` layers deep. The
+//! settle point is *selective* ([`Prewarmer::settle_for`]): the FFN phase
+//! blocks only on prewarms for the (worker, expert) pairs its dispatch
+//! actually routed work to — warming the rest of the placement never
+//! barriers the pipeline — and every transferred byte is accounted as
+//! *hidden* (ack arrived before any dispatch needed it) or *exposed* (the
+//! FFN phase had to block, or the worker uploaded cold inside `Run`) —
+//! the split `metrics.rs` reports and `sim/` prices (`lookahead_overlap`).
+//! With `parallel_attention` on, prewarms are issued *after* the
+//! attention fan-out instead, so transfers queue behind attention work on
+//! the shared worker queues rather than ahead of it.
+//!
+//! **Memory-budgeted residency** (ADR 004): every replica that becomes
+//! worker-resident — prewarm issue or cold FFN dispatch — is admitted
+//! into the [`super::residency::ResidencyManager`], a per-worker LRU
+//! bounded by `--memory-cap`. Admissions over the cap evict the
+//! least-recently-used replicas of *unpinned* layers (the active layer
+//! and the in-flight prewarm window are pinned) as real
+//! [`WorkerMsg::Evict`] messages, and plan shrinks under a cap evict the
+//! dropped replicas eagerly at plan time. Evictions move bytes, never
+//! values: serving under any cap is bitwise identical to unbounded
+//! serving (`tests/residency.rs`), while evictions / refetch bytes / the
+//! residency high-water mark flow into `metrics.rs`.
 //!
 //! **Speculative TEP scatter** (`Coordinator::speculative`, ADR 003 —
 //! the full §3.1 contract): with lookahead on and Token-to-Expert
@@ -67,9 +84,10 @@ use anyhow::Result;
 
 use super::metrics::{DecodeStepMetrics, RoundMetrics};
 use super::placement_mgr::LayerPlan;
+use super::residency::ResidencyManager;
 use super::router::{expert_counts, route_sequence, Slot};
 use super::server::{Coordinator, SeqSession, ServeStrategy, StepSeq};
-use super::worker::{ResidentSets, WorkerHandle, WorkerMsg, WorkerResult};
+use super::worker::{WorkerHandle, WorkerMsg, WorkerResult};
 use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
 use crate::runtime::bucket::split_into_buckets;
 use crate::runtime::{HostTensor, In};
@@ -113,6 +131,13 @@ pub struct StageMetrics {
     pub spec_dispatch_slots: usize,
     /// Slots that took the misprediction-repair pass.
     pub spec_repair_slots: usize,
+    /// Replica weights evicted under the memory cap (LRU + plan shrink).
+    pub evictions: u64,
+    /// Bytes re-uploaded for previously evicted replicas (the transfer
+    /// the cap forced back onto the wire — ADR 004).
+    pub refetch_upload_bytes: u64,
+    /// Peak per-worker resident replica bytes seen so far (max, not sum).
+    pub resident_high_water_bytes: u64,
     skews: Vec<f64>,
 }
 
@@ -135,6 +160,9 @@ impl StageMetrics {
             tile_reuses: 0,
             spec_dispatch_slots: 0,
             spec_repair_slots: 0,
+            evictions: 0,
+            refetch_upload_bytes: 0,
+            resident_high_water_bytes: 0,
             skews: Vec::new(),
         }
     }
@@ -164,6 +192,9 @@ impl StageMetrics {
         tile_reuses: &mut u64,
         spec_dispatch_slots: &mut usize,
         spec_repair_slots: &mut usize,
+        evictions: &mut u64,
+        refetch_upload_bytes: &mut u64,
+        resident_high_water_bytes: &mut u64,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -185,6 +216,11 @@ impl StageMetrics {
         *tile_reuses += self.tile_reuses;
         *spec_dispatch_slots += self.spec_dispatch_slots;
         *spec_repair_slots += self.spec_repair_slots;
+        *evictions += self.evictions;
+        *refetch_upload_bytes += self.refetch_upload_bytes;
+        // A high-water mark is a peak, not a flow: max-assign.
+        *resident_high_water_bytes =
+            (*resident_high_water_bytes).max(self.resident_high_water_bytes);
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -205,6 +241,9 @@ impl StageMetrics {
             &mut m.tile_reuses,
             &mut m.spec_dispatch_slots,
             &mut m.spec_repair_slots,
+            &mut m.evictions,
+            &mut m.refetch_upload_bytes,
+            &mut m.resident_high_water_bytes,
         );
     }
 
@@ -226,6 +265,9 @@ impl StageMetrics {
             &mut m.tile_reuses,
             &mut m.spec_dispatch_slots,
             &mut m.spec_repair_slots,
+            &mut m.evictions,
+            &mut m.refetch_upload_bytes,
+            &mut m.resident_high_water_bytes,
         );
     }
 }
@@ -240,9 +282,16 @@ pub struct PlanStage {
     /// Whether plans were rebuilt (always true outside the decode cadence).
     pub replanned: bool,
     pub replicas_added: usize,
-    /// Per-token predicted experts, `[layer][seq][token]` (TEP only) —
-    /// what the speculative scatter confirms against actual routing.
-    pub predicted_experts: Option<Vec<Vec<Vec<u8>>>>,
+    /// Replicas the previous round's plans hosted that these plans no
+    /// longer do, per layer — under a memory cap they are evicted eagerly
+    /// at plan time (ADR 004); without one the LRU keeps them warm.
+    pub replicas_removed: usize,
+    /// Ranked per-token top-k expert predictions,
+    /// `[layer][seq][token][rank]` (TEP only) — what the speculative
+    /// scatter confirms against actual routing. A slot confirms when its
+    /// routed expert appears *anywhere* in the token's predicted top-k,
+    /// not just the argmax (the ADR-003 follow-up).
+    pub predicted_experts: Option<Vec<Vec<Vec<Vec<u8>>>>>,
 }
 
 /// How the attention stage runs — the one phase-specific part of the
@@ -303,8 +352,31 @@ impl Coordinator {
                     .collect()
             }
         };
+        // Plan-shrink evictions (ADR 004): under a memory cap, replicas
+        // the new plans dropped are evicted eagerly — the budget they held
+        // frees before this round's prewarms need it. Without a cap the
+        // LRU keeps them warm as a cross-request cache instead, and the
+        // per-layer placement clone/diff is skipped entirely (uncapped
+        // serving stays allocation-free here; `set_memory_cap` resets the
+        // diff baseline when a cap is installed mid-run). Pins only live
+        // inside `run_layers` — drop any left behind by a previous round
+        // that aborted mid-layer, or `remove` would silently skip those
+        // layers' shrink evictions.
+        self.residency.clear_pins();
+        let mut replicas_removed = 0usize;
+        if self.residency.cap_bytes().is_some() {
+            for (layer, plan) in plans.iter().enumerate() {
+                for (expert, gpu) in self.placement.note_plan(layer, &plan.placement) {
+                    if self.residency.remove(gpu, layer, expert) {
+                        self.workers[gpu].send(WorkerMsg::Evict { layer, expert });
+                        replicas_removed += 1;
+                    }
+                }
+            }
+        }
         Ok(PlanStage {
             replicas_added: plans.iter().map(|p| p.added.len()).sum(),
+            replicas_removed,
             plans,
             predictor_s,
             plan_s: (t0.elapsed().as_secs_f64() - predictor_s).max(0.0),
@@ -322,16 +394,20 @@ impl Coordinator {
         hidden: &mut [HostTensor],
         n_real: &[usize],
         plans: &[LayerPlan],
-        predictions: Option<&[Vec<Vec<u8>>]>,
+        predictions: Option<&[Vec<Vec<Vec<u8>>>]>,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
         let n_layers = self.dims.n_layers;
         debug_assert_eq!(plans.len(), n_layers);
+        // Residency counters span the whole layer loop (admissions happen
+        // on both the prewarm and the dispatch path).
+        let evictions0 = self.residency.evictions;
+        let refetch_bytes0 = self.residency.refetch_bytes;
         // Speculative TEP scatter (§3.1 full contract, ADR 003): requires
         // per-token predictions (TEP) and the lookahead pipeline. Layer
         // 0's targets are built eagerly; every later layer's targets are
         // built during the previous layer's FFN wait (see `ffn_stage`).
-        let speculate = self.speculative && self.lookahead && predictions.is_some();
+        let speculate = self.speculative && self.lookahead > 0 && predictions.is_some();
         let mut spec: Option<SpecTargets> = if speculate {
             predictions.map(|p| SpecTargets::build(&p[0], &plans[0]))
         } else {
@@ -346,30 +422,32 @@ impl Coordinator {
         // the transfers should fill.
         let issue_before_attention =
             !matches!(mode, AttentionMode::Full { parallel: true });
-        let mut prewarmer = if self.lookahead {
-            let mut pw = Prewarmer::new();
-            if issue_before_attention {
-                // Layer 0's weights stream while layer 0's attention runs.
-                pw.issue(&self.workers, &mut self.warmed, 0, &plans[0]);
-            }
-            Some(pw)
-        } else {
-            None
-        };
+        let depth = self.lookahead;
+        let mut prewarmer = if depth > 0 { Some(Prewarmer::new()) } else { None };
 
         for layer in 0..n_layers {
-            // Stage: prewarm — fire upcoming replica uploads so they
-            // stream under this layer's leader-side compute.
-            if let Some(pw) = prewarmer.as_mut() {
-                if issue_before_attention {
-                    if layer + 1 < n_layers {
-                        pw.issue(
-                            &self.workers,
-                            &mut self.warmed,
-                            layer + 1,
-                            &plans[layer + 1],
-                        );
-                    }
+            // Pin the active layer plus the in-flight prewarm window: their
+            // replicas are never capacity-eviction victims (ADR 004).
+            let window_end = (layer + depth).min(n_layers - 1);
+            self.residency.pin_layers(layer..=window_end);
+
+            // Stage: prewarm — fire replica uploads for every layer of the
+            // lookahead window so they stream under this layer's
+            // leader-side compute. Nearest layer first: when the per-step
+            // transfer budget runs out, the deepest prewarms are the ones
+            // dropped (re-attempted next layer, or uploaded cold).
+            // Already-issued pairs are skipped via the residency view, so
+            // in steady state only the window's new frontier transfers.
+            if issue_before_attention {
+                if let Some(pw) = prewarmer.as_mut() {
+                    issue_prewarm_window(
+                        pw,
+                        &self.workers,
+                        &mut self.residency,
+                        plans,
+                        layer..=window_end,
+                        self.prewarm_budget_bytes,
+                    );
                 }
             }
 
@@ -378,19 +456,18 @@ impl Coordinator {
             self.attention_stage(mode, layer, hidden)?;
             metrics.attention_s += t0.elapsed().as_secs_f64();
 
-            // Parallel-attention mode: prewarm this layer (and the next)
-            // only now, so transfers queue behind attention, not ahead.
-            if let Some(pw) = prewarmer.as_mut() {
-                if !issue_before_attention {
-                    pw.issue(&self.workers, &mut self.warmed, layer, &plans[layer]);
-                    if layer + 1 < n_layers {
-                        pw.issue(
-                            &self.workers,
-                            &mut self.warmed,
-                            layer + 1,
-                            &plans[layer + 1],
-                        );
-                    }
+            // Parallel-attention mode: prewarm the window only now, so
+            // transfers queue behind attention, not ahead.
+            if !issue_before_attention {
+                if let Some(pw) = prewarmer.as_mut() {
+                    issue_prewarm_window(
+                        pw,
+                        &self.workers,
+                        &mut self.residency,
+                        plans,
+                        layer..=window_end,
+                        self.prewarm_budget_bytes,
+                    );
                 }
             }
 
@@ -435,6 +512,17 @@ impl Coordinator {
         if let Some(pw) = prewarmer.as_mut() {
             pw.finish(metrics)?;
         }
+        // The forward is over: release the pin window so plan-time shrink
+        // eviction (and the next round's LRU pressure) can touch any layer,
+        // fold the residency counters into the metrics, and advance the
+        // tile pool's aging clock one round/step (ADR 004).
+        self.residency.clear_pins();
+        metrics.evictions += self.residency.evictions - evictions0;
+        metrics.refetch_upload_bytes += self.residency.refetch_bytes - refetch_bytes0;
+        metrics.resident_high_water_bytes = metrics
+            .resident_high_water_bytes
+            .max(self.residency.high_water_bytes());
+        self.tiles.tick();
         metrics.finish();
         Ok(())
     }
@@ -596,6 +684,18 @@ impl Coordinator {
         metrics: &mut StageMetrics,
     ) {
         let d = self.dims.d_model;
+        // Residency (ADR 004): dispatching to this (worker, layer, expert)
+        // makes (or keeps) its replica resident — touch the LRU stamp, and
+        // if the pair is cold the admission may evict LRU replicas of
+        // unpinned layers to hold the cap. Evict messages are enqueued
+        // before this group's Run, so the FIFO worker frees memory first.
+        let admission = self.residency.admit(worker, layer, expert);
+        for (victim_layer, victim_expert) in admission.evicted {
+            self.workers[worker].send(WorkerMsg::Evict {
+                layer: victim_layer,
+                expert: victim_expert,
+            });
+        }
         // Oversized groups split across bucket-sized chunks; each chunk
         // gathers straight into a pooled tile (no intermediate group
         // tensor), with the padding rows zero-filled explicitly so the
@@ -644,7 +744,7 @@ impl Coordinator {
         hidden: &mut [HostTensor],
         mut prewarmer: Option<&mut Prewarmer>,
         spec_in: Option<SpecTargets>,
-        spec_next: Option<(&LayerPlan, &[Vec<u8>])>,
+        spec_next: Option<(&LayerPlan, &[Vec<Vec<u8>>])>,
         spec_out: &mut Option<SpecTargets>,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
@@ -665,12 +765,24 @@ impl Coordinator {
         let mut repair_idx: Vec<usize> = Vec::new();
         match &spec_in {
             Some(targets) => {
+                // Top-k-aware confirmation (ADR-003 follow-up): a slot
+                // ships speculatively when its routed expert appears
+                // anywhere in the token's predicted top-k set, not just
+                // the predictor argmax — with k predictions per token, up
+                // to all k of a token's routed slots can confirm.
                 for (si, slot) in slots.iter().enumerate() {
-                    match targets.target(slot.seq_idx, slot.token_idx) {
-                        Some((w, e)) if e == slot.expert as usize => {
-                            spec_groups.entry((w, e)).or_default().push(si);
+                    match targets.target_for(
+                        slot.seq_idx,
+                        slot.token_idx,
+                        slot.expert as usize,
+                    ) {
+                        Some(w) => {
+                            spec_groups
+                                .entry((w, slot.expert as usize))
+                                .or_default()
+                                .push(si);
                         }
-                        _ => repair_idx.push(si),
+                        None => repair_idx.push(si),
                     }
                 }
                 metrics.spec_dispatch_slots += slots.len() - repair_idx.len();
@@ -810,18 +922,23 @@ impl Coordinator {
 
     /// Run the AOT Token-to-Expert predictor on every sequence's
     /// embeddings (§3.1: before attention). Returns predicted slot counts
-    /// per (layer, expert) plus the raw per-token predictions
-    /// `[layer][seq][token]` the speculative scatter confirms against.
+    /// per (layer, expert) plus the ranked per-token top-k predictions
+    /// `[layer][seq][token][rank]` the speculative scatter confirms
+    /// against (rank 0 = predictor argmax). The router routes each token
+    /// to `top_k` experts, so the predictor forecasts the token's full
+    /// top-k set — one predicted slot per rank — rather than charging all
+    /// `top_k` slots to the argmax expert (the ADR-003 follow-up).
     /// `hidden[i]` holds `≥ n_real[i]` embedded rows.
     pub(crate) fn predict_counts(
         &mut self,
         hidden: &[HostTensor],
         n_real: &[usize],
-    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<Vec<u8>>>)> {
+    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<Vec<Vec<u8>>>>)> {
         let e = self.dims.n_experts;
         let n_layers = self.dims.n_layers;
+        let top_k = self.dims.top_k.min(e).max(1);
         let mut counts = vec![vec![0usize; e]; n_layers];
-        let mut predicted: Vec<Vec<Vec<u8>>> = (0..n_layers)
+        let mut predicted: Vec<Vec<Vec<Vec<u8>>>> = (0..n_layers)
             .map(|_| Vec::with_capacity(hidden.len()))
             .collect();
         let head_names: Vec<String> = (0..n_layers)
@@ -838,23 +955,37 @@ impl Coordinator {
                 ins.push(In::W(name));
             }
             let logits = self.leader.call("predictor", &ins)?.remove(0);
-            // logits [L, S, E]: argmax per (layer, real token) — total
-            // order, so non-finite logits can never panic the hot path.
+            // logits [L, S, E]: top-k per (layer, real token). The
+            // comparator is a total order (total_cmp + index tie-break),
+            // so non-finite logits can never panic the hot path and the
+            // selected set is deterministic. Partial selection + sorting
+            // only the k winners keeps this timed path O(e) per token
+            // instead of a full O(e log e) sort; `order` is reused across
+            // tokens so the loop stays allocation-free bar the stored
+            // per-token rank vectors.
+            let mut order: Vec<usize> = Vec::with_capacity(e);
             for l in 0..n_layers {
                 let mut seq_pred = Vec::with_capacity(n.min(s_rows));
                 for t in 0..n.min(s_rows) {
                     let base = (l * s_rows + t) * e;
                     let row = &logits.data[base..base + e];
-                    let arg = row
+                    let desc = |a: &usize, b: &usize| {
+                        row[*b].total_cmp(&row[*a]).then(a.cmp(b))
+                    };
+                    order.clear();
+                    order.extend(0..e);
+                    if top_k < e {
+                        order.select_nth_unstable_by(top_k - 1, desc);
+                    }
+                    order[..top_k].sort_unstable_by(desc);
+                    let ranked: Vec<u8> = order[..top_k]
                         .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .unwrap()
-                        .0;
-                    // Each token occupies top_k slots; scale the predicted
-                    // count accordingly.
-                    counts[l][arg] += self.dims.top_k;
-                    seq_pred.push(arg as u8);
+                        .map(|&arg| {
+                            counts[l][arg] += 1;
+                            arg as u8
+                        })
+                        .collect();
+                    seq_pred.push(ranked);
                 }
                 predicted[l].push(seq_pred);
             }
@@ -864,85 +995,124 @@ impl Coordinator {
 }
 
 /// Per-token speculative dispatch targets for one layer: token
-/// `(seq_idx, token_idx)` → the (worker, expert) its §3.1 prediction
-/// routes it to under that layer's duplication plan. Built from
-/// predictions + plan alone — no activations — which is what lets the
-/// pipeline derive layer L+1's targets during layer L's FFN phase.
+/// `(seq_idx, token_idx)` → for each of its ranked top-k predicted
+/// experts, the worker its §3.1 prediction routes it to under that
+/// layer's duplication plan. Built from predictions + plan alone — no
+/// activations — which is what lets the pipeline derive layer L+1's
+/// targets during layer L's FFN phase. A routed slot confirms when its
+/// expert appears *anywhere* in the token's predicted set (top-k-aware
+/// confirmation, the ADR-003 follow-up), so up to all k of a token's
+/// slots can ship on the fast path.
 pub(crate) struct SpecTargets {
-    targets: std::collections::HashMap<(usize, usize), (usize, usize)>,
+    /// `(seq, tok)` → `[(worker, expert)]`, one entry per predicted rank.
+    targets: std::collections::HashMap<(usize, usize), Vec<(usize, usize)>>,
 }
 
 impl SpecTargets {
-    /// `preds[seq][token]` = predicted expert for this layer. Replicated
-    /// experts spread their predicted tokens over the hosts following the
-    /// plan's per-(expert, gpu) quota (`share[e][g]`, built from these
-    /// same predicted counts): each token goes to the replica with the
+    /// `preds[seq][token]` = the token's ranked top-k predicted experts
+    /// for this layer (rank 0 = predictor argmax). Replicated experts
+    /// spread their predicted tokens over the hosts following the plan's
+    /// per-(expert, gpu) quota (`share[e][g]`, built from these same
+    /// predicted counts): each (token, rank) goes to the replica with the
     /// lowest *filled fraction* of its quota, so speculative load tracks
     /// the balance the plan computed from the first token on — a uniform
     /// rotation would undo exactly the skew-aware split the quota
     /// encodes. Experts with no quota (shareless plans) fall back to
-    /// round-robin. Deterministic: assignment follows (seq, token) order
-    /// with lowest-gpu tie-breaks.
-    fn build(preds: &[Vec<u8>], plan: &LayerPlan) -> SpecTargets {
+    /// round-robin. Deterministic: assignment follows (seq, token, rank)
+    /// order with lowest-gpu tie-breaks.
+    fn build(preds: &[Vec<Vec<u8>>], plan: &LayerPlan) -> SpecTargets {
         let mut given: BTreeMap<(usize, usize), usize> = BTreeMap::new();
         let mut rr: BTreeMap<usize, usize> = BTreeMap::new();
         let total: usize = preds.iter().map(Vec::len).sum();
-        let mut targets = std::collections::HashMap::with_capacity(total);
+        let mut targets: std::collections::HashMap<(usize, usize), Vec<(usize, usize)>> =
+            std::collections::HashMap::with_capacity(total);
         for (seq, toks) in preds.iter().enumerate() {
-            for (tok, &expert) in toks.iter().enumerate() {
-                let expert = expert as usize;
-                let hosts = plan.placement.gpus_of(expert);
-                if hosts.is_empty() {
-                    continue;
-                }
-                // Lowest filled-fraction host among those with quota
-                // (`given/quota` compared by cross-multiplication to stay
-                // in integers); ties prefer the lower gpu id.
-                let mut best: Option<(usize, usize, usize)> = None; // (g, given, quota)
-                for g in hosts.iter().copied() {
-                    let quota = plan
-                        .share
-                        .get(expert)
-                        .and_then(|row| row.get(g))
-                        .copied()
-                        .unwrap_or(0);
-                    if quota == 0 {
+            for (tok, ranked) in toks.iter().enumerate() {
+                for &expert in ranked {
+                    let expert = expert as usize;
+                    let hosts = plan.placement.gpus_of(expert);
+                    if hosts.is_empty() {
                         continue;
                     }
-                    let giv = given.get(&(expert, g)).copied().unwrap_or(0);
-                    best = match best {
-                        None => Some((g, giv, quota)),
-                        Some((bg, bgiv, bq)) => {
-                            let lhs = giv * bq;
-                            let rhs = bgiv * quota;
-                            if lhs < rhs || (lhs == rhs && g < bg) {
-                                Some((g, giv, quota))
-                            } else {
-                                Some((bg, bgiv, bq))
+                    // Lowest filled-fraction host among those with quota
+                    // (`given/quota` compared by cross-multiplication to
+                    // stay in integers); ties prefer the lower gpu id.
+                    let mut best: Option<(usize, usize, usize)> = None; // (g, given, quota)
+                    for g in hosts.iter().copied() {
+                        let quota = plan
+                            .share
+                            .get(expert)
+                            .and_then(|row| row.get(g))
+                            .copied()
+                            .unwrap_or(0);
+                        if quota == 0 {
+                            continue;
+                        }
+                        let giv = given.get(&(expert, g)).copied().unwrap_or(0);
+                        best = match best {
+                            None => Some((g, giv, quota)),
+                            Some((bg, bgiv, bq)) => {
+                                let lhs = giv * bq;
+                                let rhs = bgiv * quota;
+                                if lhs < rhs || (lhs == rhs && g < bg) {
+                                    Some((g, giv, quota))
+                                } else {
+                                    Some((bg, bgiv, bq))
+                                }
                             }
+                        };
+                    }
+                    let worker = match best {
+                        Some((g, _, _)) => g,
+                        None => {
+                            // No quota anywhere for this expert: spread
+                            // round-robin over its hosts.
+                            let turn = rr.entry(expert).or_insert(0);
+                            let w = hosts[*turn % hosts.len()];
+                            *turn += 1;
+                            w
                         }
                     };
+                    *given.entry((expert, worker)).or_insert(0) += 1;
+                    targets
+                        .entry((seq, tok))
+                        .or_default()
+                        .push((worker, expert));
                 }
-                let worker = match best {
-                    Some((g, _, _)) => g,
-                    None => {
-                        // No quota anywhere for this expert: spread
-                        // round-robin over its hosts.
-                        let turn = rr.entry(expert).or_insert(0);
-                        let w = hosts[*turn % hosts.len()];
-                        *turn += 1;
-                        w
-                    }
-                };
-                *given.entry((expert, worker)).or_insert(0) += 1;
-                targets.insert((seq, tok), (worker, expert));
             }
         }
         SpecTargets { targets }
     }
 
-    fn target(&self, seq: usize, tok: usize) -> Option<(usize, usize)> {
-        self.targets.get(&(seq, tok)).copied()
+    /// The worker a routed slot ships to speculatively, if its expert was
+    /// among the token's predicted top-k (first matching rank wins).
+    fn target_for(&self, seq: usize, tok: usize, expert: usize) -> Option<usize> {
+        self.targets.get(&(seq, tok)).and_then(|ranked| {
+            ranked
+                .iter()
+                .find(|&&(_, e)| e == expert)
+                .map(|&(w, _)| w)
+        })
+    }
+}
+
+/// Issue one layer step's prewarm window (ADR 004): walk the window
+/// nearest layer first under a fresh per-step byte budget, stopping at
+/// the depth where the budget runs out — so the deepest prewarms are the
+/// first dropped, and both attention-ordering modes share one behaviour.
+fn issue_prewarm_window(
+    pw: &mut Prewarmer,
+    workers: &[WorkerHandle],
+    residency: &mut ResidencyManager,
+    plans: &[LayerPlan],
+    window: std::ops::RangeInclusive<usize>,
+    budget_init: Option<u64>,
+) {
+    let mut budget = budget_init;
+    for target in window {
+        if pw.issue(workers, residency, target, &plans[target], &mut budget) {
+            break; // budget exhausted at this depth
+        }
     }
 }
 
@@ -993,25 +1163,47 @@ impl Prewarmer {
 
     /// Fire non-blocking prewarms for every (expert, worker) of the plan
     /// not already resident on that worker; the coordinator-side
-    /// [`ResidentSets`] gates re-sends.
+    /// [`ResidencyManager`] gates re-sends, admits each new replica into
+    /// the LRU (emitting capacity evictions ahead of the prewarm on the
+    /// same FIFO queue) and `budget` bounds the bytes issued at this
+    /// layer step. Returns true when the budget ran out — the caller
+    /// stops descending into deeper lookahead layers (ADR 004).
     fn issue(
         &mut self,
         workers: &[WorkerHandle],
-        warmed: &mut ResidentSets,
+        residency: &mut ResidencyManager,
         layer: usize,
         plan: &LayerPlan,
-    ) {
+        budget: &mut Option<u64>,
+    ) -> bool {
+        let replica_bytes = residency.replica_bytes();
         for &(expert, gpu) in plan.placement.pairs() {
-            if warmed.insert(gpu, layer, expert) {
-                workers[gpu].send(WorkerMsg::Prewarm {
-                    tag: layer as u64,
-                    layer,
-                    expert,
-                    reply: self.tx.clone(),
-                });
-                self.pending.insert((gpu, layer, expert));
+            if residency.contains(gpu, layer, expert) {
+                continue;
             }
+            if let Some(left) = budget {
+                if *left < replica_bytes {
+                    return true; // deeper prewarms wait for the next step
+                }
+                *left -= replica_bytes;
+            }
+            let admission = residency.admit(gpu, layer, expert);
+            debug_assert!(admission.newly_resident);
+            for (victim_layer, victim_expert) in admission.evicted {
+                workers[gpu].send(WorkerMsg::Evict {
+                    layer: victim_layer,
+                    expert: victim_expert,
+                });
+            }
+            workers[gpu].send(WorkerMsg::Prewarm {
+                tag: layer as u64,
+                layer,
+                expert,
+                reply: self.tx.clone(),
+            });
+            self.pending.insert((gpu, layer, expert));
         }
+        false
     }
 
     /// Account acks before the FFN phase dispatches: everything already in
@@ -1294,6 +1486,9 @@ mod tests {
         s.tile_reuses = 5;
         s.spec_dispatch_slots = 6;
         s.spec_repair_slots = 4;
+        s.evictions = 3;
+        s.refetch_upload_bytes = 40;
+        s.resident_high_water_bytes = 900;
         s.skews.push(1.5);
         s.finish();
         let mut round = RoundMetrics {
@@ -1310,6 +1505,16 @@ mod tests {
         assert_eq!(round.tile_reuses, 5);
         assert_eq!(round.spec_dispatch_slots, 6);
         assert_eq!(round.spec_repair_slots, 4);
+        assert_eq!(round.evictions, 3);
+        assert_eq!(round.refetch_upload_bytes, 40);
+        assert_eq!(round.resident_high_water_bytes, 900);
+        // High-water is max-assigned, not summed: a second application
+        // with a lower peak must not move it.
+        let mut lower = StageMetrics::new(2);
+        lower.resident_high_water_bytes = 100;
+        lower.finish();
+        lower.apply_to_round(&mut round);
+        assert_eq!(round.resident_high_water_bytes, 900);
         assert!((round.routing_skew - 1.5).abs() < 1e-12);
         let mut step = DecodeStepMetrics {
             worker_busy_s: vec![0.0; 2],
@@ -1324,6 +1529,9 @@ mod tests {
         assert_eq!(step.tile_reuses, 5);
         assert_eq!(step.spec_dispatch_slots, 6);
         assert_eq!(step.spec_repair_slots, 4);
+        assert_eq!(step.evictions, 3);
+        assert_eq!(step.refetch_upload_bytes, 40);
+        assert_eq!(step.resident_high_water_bytes, 900);
     }
 
     #[test]
@@ -1348,20 +1556,25 @@ mod tests {
     }
 
     #[test]
-    fn spec_targets_confirm_only_predicted_tokens() {
+    fn spec_targets_confirm_anywhere_in_predicted_topk() {
         let mgr = PlacementManager::new(8, 4, 2, 8, 4);
         let plan = mgr.static_plan();
-        // Two sequences, three tokens each, all predicting expert 2 except
-        // one token predicting expert 5.
-        let preds: Vec<Vec<u8>> = vec![vec![2, 2, 5], vec![2, 2, 2]];
+        // Two sequences; each token predicts a ranked top-2 expert set.
+        let preds: Vec<Vec<Vec<u8>>> =
+            vec![vec![vec![2, 7], vec![2, 3], vec![5, 2]], vec![vec![2, 6]]];
         let st = SpecTargets::build(&preds, &plan);
-        let home2 = plan.placement.gpus_of(2)[0];
-        let home5 = plan.placement.gpus_of(5)[0];
-        assert_eq!(st.target(0, 0), Some((home2, 2)));
-        assert_eq!(st.target(0, 2), Some((home5, 5)));
-        assert_eq!(st.target(1, 1), Some((home2, 2)));
-        assert_eq!(st.target(0, 3), None, "unknown token has no target");
-        assert_eq!(st.target(2, 0), None, "unknown sequence has no target");
+        let home = |e: usize| plan.placement.gpus_of(e)[0];
+        // Rank-0 predictions confirm…
+        assert_eq!(st.target_for(0, 0, 2), Some(home(2)));
+        assert_eq!(st.target_for(0, 2, 5), Some(home(5)));
+        // …and so do rank-1 predictions (the top-k-aware follow-up).
+        assert_eq!(st.target_for(0, 0, 7), Some(home(7)));
+        assert_eq!(st.target_for(0, 1, 3), Some(home(3)));
+        assert_eq!(st.target_for(1, 0, 6), Some(home(6)));
+        // Unpredicted experts, tokens and sequences have no target.
+        assert_eq!(st.target_for(0, 0, 4), None);
+        assert_eq!(st.target_for(0, 3, 2), None, "unknown token");
+        assert_eq!(st.target_for(2, 0, 2), None, "unknown sequence");
     }
 
     #[test]
@@ -1371,10 +1584,10 @@ mod tests {
         let hosts = plan.placement.gpus_of(0);
         assert!(hosts.len() >= 2, "hot expert must replicate");
         assert!(!plan.share.is_empty(), "counts plan carries quotas");
-        let preds: Vec<Vec<u8>> = vec![vec![0; 6]];
+        let preds: Vec<Vec<Vec<u8>>> = vec![vec![vec![0]; 6]];
         let st = SpecTargets::build(&preds, &plan);
         let mut used: Vec<usize> = (0..6)
-            .map(|t| st.target(0, t).unwrap().0)
+            .map(|t| st.target_for(0, t, 0).unwrap())
             .collect();
         // Every chosen host must hold positive quota for the expert (the
         // plan's balance is respected, not undone by a uniform rotation).

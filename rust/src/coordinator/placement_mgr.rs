@@ -49,6 +49,10 @@ pub struct PlacementManager {
     pub replan_interval: usize,
     /// Cached decode plans: (step they were built at, per-layer plans).
     cached_decode_plans: Option<(usize, Vec<LayerPlan>)>,
+    /// Last placement handed to the pipeline, per layer — the baseline
+    /// [`PlacementManager::note_plan`] diffs against to detect replicas a
+    /// new plan dropped (plan-shrink evictions, ADR 004).
+    last_placements: Vec<Option<Placement>>,
 }
 
 impl PlacementManager {
@@ -70,6 +74,7 @@ impl PlacementManager {
             static_placement: Placement::initial(n_experts, n_workers, capacity, max_copies),
             replan_interval: 1,
             cached_decode_plans: None,
+            last_placements: (0..n_layers).map(|_| None).collect(),
         }
     }
 
@@ -155,6 +160,40 @@ impl PlacementManager {
     /// Drop cached decode plans (start of a new serving run).
     pub fn reset_decode_plans(&mut self) {
         self.cached_decode_plans = None;
+    }
+
+    /// Forget the plan-diff baseline (all layers). Called when a memory
+    /// cap is installed mid-run, so the first capped round diffs against
+    /// nothing instead of against placements noted under different rules.
+    pub fn reset_plan_baseline(&mut self) {
+        for slot in &mut self.last_placements {
+            *slot = None;
+        }
+    }
+
+    /// Record the placement a layer is about to serve under and return the
+    /// `(expert, gpu)` replicas the *previous* plan hosted that this one no
+    /// longer does — the plan-shrink eviction set (ADR 004). Only called
+    /// while a memory cap is active (uncapped serving skips the clone).
+    /// Under memory pressure the coordinator turns each into a
+    /// `WorkerMsg::Evict`; without a cap the residency LRU keeps dropped
+    /// replicas warm as cache instead.
+    pub fn note_plan(&mut self, layer: usize, placement: &Placement) -> Vec<(usize, usize)> {
+        // Steady state (cached decode plans, static placements) re-notes
+        // an identical placement every step: skip the clone entirely.
+        if self.last_placements[layer].as_ref() == Some(placement) {
+            return Vec::new();
+        }
+        let removed = match &self.last_placements[layer] {
+            Some(prev) => prev
+                .pairs()
+                .filter(|&&(expert, gpu)| !placement.hosts(expert, gpu))
+                .copied()
+                .collect(),
+            None => Vec::new(),
+        };
+        self.last_placements[layer] = Some(placement.clone());
+        removed
     }
 }
 
@@ -252,6 +291,27 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(hot, 7);
+    }
+
+    #[test]
+    fn note_plan_diffs_shrunk_replicas() {
+        let mut m = mgr();
+        let fat = m.plan_from_counts(&[600, 40, 40, 40, 40, 40, 40, 40]);
+        assert!(fat.placement.copies(0) > 1);
+        // First observation: nothing to diff against.
+        assert!(m.note_plan(1, &fat.placement).is_empty());
+        // Shrinking back to the static placement drops the added replicas.
+        let lean = m.static_plan();
+        let removed = m.note_plan(1, &lean.placement);
+        assert_eq!(removed.len(), fat.added.len());
+        for &(expert, gpu) in &removed {
+            assert!(fat.placement.hosts(expert, gpu));
+            assert!(!lean.placement.hosts(expert, gpu));
+        }
+        // Same plan again: no further shrink.
+        assert!(m.note_plan(1, &lean.placement).is_empty());
+        // Other layers are independent.
+        assert!(m.note_plan(0, &lean.placement).is_empty());
     }
 
     #[test]

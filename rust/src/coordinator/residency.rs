@@ -1,0 +1,356 @@
+//! The memory-budgeted residency subsystem (ADR 004): a per-worker,
+//! capacity-bounded LRU over `(layer, expert)` replica weights.
+//!
+//! Before this module, coordinator-side residency was a grow-only set
+//! (`worker::ResidentSets`) and `WorkerMsg::Evict` was never sent on the
+//! serve path — duplication could only *add* weights, so sustained serving
+//! under dynamic plans grew device memory without bound. The
+//! [`ResidencyManager`] is that set refactored into a real cache:
+//!
+//! * **Admission** ([`ResidencyManager::admit`]) — marking a replica
+//!   resident (prewarm issue or FFN dispatch to a cold pair) touches its
+//!   LRU stamp and, when the per-worker byte cap is exceeded, selects
+//!   least-recently-used *unpinned* victims. The caller (the pipeline)
+//!   turns each victim into a [`super::worker::WorkerMsg::Evict`], which
+//!   frees the engine-side weights, so the coordinator view and the
+//!   engine view stay in lockstep (worker queues are FIFO).
+//! * **Pinning** ([`ResidencyManager::pin_layers`]) — the active layer and
+//!   every layer inside the in-flight prewarm window are pinned; their
+//!   entries are never victims, so an eviction can never race a dispatch
+//!   or an outstanding prewarm. If every resident entry is pinned the
+//!   admission proceeds anyway (weights must be resident to compute —
+//!   correctness over the cap) and `cap_overflows` records the breach.
+//! * **Accounting** — evictions, refetches (re-admission of a previously
+//!   evicted replica: the bytes the cap forced back onto the wire), and
+//!   the per-worker resident-bytes high-water mark, all surfaced through
+//!   `metrics.rs` per round/step.
+//!
+//! Determinism: residency moves bytes, never values — an evicted replica
+//! re-uploads the identical weights on next use, so serving under any cap
+//! is bitwise identical to unbounded serving (`tests/residency.rs`).
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Outcome of one [`ResidencyManager::admit`] call.
+#[derive(Debug, Default)]
+pub struct Admission {
+    /// True when the replica was not previously resident on the worker
+    /// (the caller owes a prewarm/upload for it).
+    pub newly_resident: bool,
+    /// `(layer, expert)` victims the cap forced out of this worker, in
+    /// eviction order; the caller must send `WorkerMsg::Evict` for each.
+    pub evicted: Vec<(usize, usize)>,
+}
+
+#[derive(Debug, Default)]
+struct WorkerResidency {
+    /// Resident `(layer, expert)` replicas with their last-used LRU stamp.
+    last_used: HashMap<(usize, usize), u64>,
+    /// Replicas this worker evicted at least once (refetch detection).
+    ever_evicted: HashSet<(usize, usize)>,
+    resident_bytes: u64,
+    peak_bytes: u64,
+}
+
+/// Per-worker capacity-bounded LRU over `(layer, expert)` replica weights
+/// (see the module docs for the full contract).
+#[derive(Debug, Default)]
+pub struct ResidencyManager {
+    workers: Vec<WorkerResidency>,
+    /// Per-worker byte budget for expert replica weights; `None` =
+    /// unbounded (the pre-ADR-004 behaviour).
+    cap_bytes: Option<u64>,
+    /// Bytes of one `(layer, expert)` replica (the three FFN matrices).
+    replica_bytes: u64,
+    /// Monotone LRU clock, bumped on every touch.
+    clock: u64,
+    /// Layers whose entries are currently exempt from eviction.
+    pinned_layers: BTreeSet<usize>,
+    /// Replicas evicted to hold the cap (admission + plan-shrink).
+    pub evictions: u64,
+    /// Re-admissions of previously evicted replicas.
+    pub refetches: u64,
+    /// Bytes those refetches forced back onto the wire.
+    pub refetch_bytes: u64,
+    /// Admissions that exceeded the cap with every resident entry pinned.
+    pub cap_overflows: u64,
+}
+
+impl ResidencyManager {
+    pub fn new(n_workers: usize, replica_bytes: u64) -> ResidencyManager {
+        ResidencyManager {
+            workers: (0..n_workers).map(|_| WorkerResidency::default()).collect(),
+            replica_bytes: replica_bytes.max(1),
+            ..ResidencyManager::default()
+        }
+    }
+
+    /// Set (or clear) the per-worker byte cap. Takes effect on the next
+    /// admission; already-resident entries are not proactively evicted,
+    /// but the high-water marks restart from current residency so the
+    /// reported peak measures the new regime, not a pre-cap lifetime max
+    /// (the `hwm ≤ cap` acceptance check must not false-fail after a cap
+    /// is installed mid-run).
+    pub fn set_cap(&mut self, cap_bytes: Option<u64>) {
+        self.cap_bytes = cap_bytes;
+        for w in &mut self.workers {
+            w.peak_bytes = w.resident_bytes;
+        }
+    }
+
+    pub fn cap_bytes(&self) -> Option<u64> {
+        self.cap_bytes
+    }
+
+    pub fn replica_bytes(&self) -> u64 {
+        self.replica_bytes
+    }
+
+    /// Pin a window of layers (the active layer plus the in-flight
+    /// prewarm window); replaces the previous pin set.
+    pub fn pin_layers(&mut self, layers: impl IntoIterator<Item = usize>) {
+        self.pinned_layers = layers.into_iter().collect();
+    }
+
+    pub fn clear_pins(&mut self) {
+        self.pinned_layers.clear();
+    }
+
+    pub fn contains(&self, worker: usize, layer: usize, expert: usize) -> bool {
+        self.workers[worker].last_used.contains_key(&(layer, expert))
+    }
+
+    /// Refresh a resident replica's LRU stamp without the admission
+    /// bookkeeping — [`Self::admit`]'s resident branch does this on the
+    /// serve path; kept private so every external mutation pairs with the
+    /// matching worker message.
+    #[cfg(test)]
+    fn touch(&mut self, worker: usize, layer: usize, expert: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(stamp) = self.workers[worker].last_used.get_mut(&(layer, expert)) {
+            *stamp = clock;
+        }
+    }
+
+    /// Make a replica resident on a worker (or refresh it), evicting LRU
+    /// unpinned entries while the cap is exceeded. See [`Admission`].
+    pub fn admit(&mut self, worker: usize, layer: usize, expert: usize) -> Admission {
+        self.clock += 1;
+        let clock = self.clock;
+        let replica_bytes = self.replica_bytes;
+        let cap = self.cap_bytes;
+        let pinned = &self.pinned_layers;
+        let w = &mut self.workers[worker];
+        let mut outcome = Admission::default();
+        if let Some(stamp) = w.last_used.get_mut(&(layer, expert)) {
+            *stamp = clock;
+            return outcome;
+        }
+        outcome.newly_resident = true;
+        w.last_used.insert((layer, expert), clock);
+        w.resident_bytes += replica_bytes;
+        if w.ever_evicted.contains(&(layer, expert)) {
+            self.refetches += 1;
+            self.refetch_bytes += replica_bytes;
+        }
+        if let Some(cap) = cap {
+            while w.resident_bytes > cap {
+                // LRU victim among unpinned layers; ties break on the
+                // smaller (layer, expert) key for determinism. The entry
+                // being admitted is never its own victim — evicting it
+                // would desync the caller's Evict-then-upload message
+                // order from the coordinator view.
+                let victim = w
+                    .last_used
+                    .iter()
+                    .filter(|(&key, _)| {
+                        key != (layer, expert) && !pinned.contains(&key.0)
+                    })
+                    .min_by_key(|(&key, &stamp)| (stamp, key))
+                    .map(|(&key, _)| key);
+                match victim {
+                    Some(key) => {
+                        w.last_used.remove(&key);
+                        w.ever_evicted.insert(key);
+                        w.resident_bytes -= replica_bytes;
+                        self.evictions += 1;
+                        outcome.evicted.push(key);
+                    }
+                    None => {
+                        // Everything resident is pinned: correctness
+                        // requires the weights, so breach the cap and
+                        // record it.
+                        self.cap_overflows += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        w.peak_bytes = w.peak_bytes.max(w.resident_bytes);
+        outcome
+    }
+
+    /// Drop a replica from the coordinator view (plan shrink); the caller
+    /// owes the matching `WorkerMsg::Evict`. Pinned layers are refused.
+    /// Returns whether the entry was resident (and is now gone).
+    pub fn remove(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
+        if self.pinned_layers.contains(&layer) {
+            return false;
+        }
+        let w = &mut self.workers[worker];
+        if w.last_used.remove(&(layer, expert)).is_some() {
+            w.ever_evicted.insert((layer, expert));
+            w.resident_bytes -= self.replica_bytes;
+            self.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Resident experts of one worker for one layer (sorted).
+    pub fn layer_experts(&self, worker: usize, layer: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self.workers[worker]
+            .last_used
+            .keys()
+            .filter(|&&(l, _)| l == layer)
+            .map(|&(_, e)| e)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn resident_bytes(&self, worker: usize) -> u64 {
+        self.workers[worker].resident_bytes
+    }
+
+    pub fn resident_replicas(&self, worker: usize) -> usize {
+        self.workers[worker].last_used.len()
+    }
+
+    /// Highest resident-bytes any worker ever reached.
+    pub fn high_water_bytes(&self) -> u64 {
+        self.workers.iter().map(|w| w.peak_bytes).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_per_layer_like_resident_sets() {
+        // The grow-only ResidentSets contract this LRU absorbed (ADR 004).
+        let mut r = ResidencyManager::new(2, 10);
+        assert!(!r.contains(0, 1, 3));
+        assert!(r.admit(0, 1, 3).newly_resident);
+        assert!(!r.admit(0, 1, 3).newly_resident, "second admit is a touch");
+        assert!(r.contains(0, 1, 3));
+        assert!(!r.contains(1, 1, 3), "workers are independent");
+        r.admit(0, 1, 1);
+        r.admit(0, 2, 5);
+        assert_eq!(r.layer_experts(0, 1), vec![1, 3]);
+        assert_eq!(r.layer_experts(0, 2), vec![5]);
+        assert!(r.remove(0, 1, 3));
+        assert!(!r.contains(0, 1, 3));
+        assert!(!r.remove(0, 1, 3), "double remove is a no-op");
+    }
+
+    #[test]
+    fn unbounded_manager_never_evicts() {
+        let mut r = ResidencyManager::new(1, 100);
+        for layer in 0..10 {
+            for expert in 0..8 {
+                assert!(r.admit(0, layer, expert).evicted.is_empty());
+            }
+        }
+        assert_eq!(r.evictions, 0);
+        assert_eq!(r.resident_replicas(0), 80);
+        assert_eq!(r.high_water_bytes(), 8000);
+    }
+
+    #[test]
+    fn cap_evicts_lru_first() {
+        let mut r = ResidencyManager::new(1, 100);
+        r.set_cap(Some(250)); // room for 2 replicas
+        r.admit(0, 0, 0);
+        r.admit(0, 0, 1);
+        r.touch(0, 0, 0); // expert 1 is now the LRU entry
+        let out = r.admit(0, 1, 0);
+        assert_eq!(out.evicted, vec![(0, 1)], "LRU victim must go first");
+        assert!(r.contains(0, 0, 0) && r.contains(0, 1, 0));
+        assert_eq!(r.resident_bytes(0), 200);
+        assert_eq!(r.evictions, 1);
+        assert!(r.high_water_bytes() <= 300, "one transient admit over cap");
+    }
+
+    #[test]
+    fn pinned_layers_are_never_victims() {
+        let mut r = ResidencyManager::new(1, 100);
+        r.set_cap(Some(250));
+        r.admit(0, 0, 0);
+        r.admit(0, 1, 0);
+        r.pin_layers([0, 1]);
+        // Both residents pinned: the admission must breach the cap rather
+        // than evict (correctness over cap) and record the overflow.
+        let out = r.admit(0, 1, 1);
+        assert!(out.evicted.is_empty());
+        assert_eq!(r.cap_overflows, 1);
+        assert_eq!(r.resident_replicas(0), 3);
+        // Unpin layer 0: the next admission reclaims down to the cap.
+        r.pin_layers([1, 2]);
+        let out = r.admit(0, 2, 0);
+        assert_eq!(out.evicted, vec![(0, 0)]);
+        assert!(r.resident_bytes(0) > 250, "still over: layer-1 pins hold");
+        r.clear_pins();
+        let out = r.admit(0, 2, 1);
+        assert_eq!(out.evicted.len(), 2, "unpinned now reclaims to cap");
+        assert!(r.resident_bytes(0) <= 250);
+    }
+
+    #[test]
+    fn refetch_accounting_counts_readmissions() {
+        let mut r = ResidencyManager::new(1, 100);
+        r.set_cap(Some(150));
+        r.admit(0, 0, 0);
+        r.admit(0, 0, 1); // evicts (0,0)
+        assert_eq!(r.evictions, 1);
+        assert_eq!(r.refetches, 0);
+        r.admit(0, 0, 0); // refetch of the evicted replica (evicts (0,1))
+        assert_eq!(r.refetches, 1);
+        assert_eq!(r.refetch_bytes, 100);
+        assert_eq!(r.evictions, 2);
+    }
+
+    #[test]
+    fn conservation_inserts_equal_resident_plus_evictions() {
+        // Deterministic pseudo-random workload over 2 workers, 4 layers,
+        // 8 experts: every insert either stays resident or was evicted
+        // (cap victim or explicit remove — both count as evictions), so
+        // inserts == resident + evictions at every point.
+        let mut r = ResidencyManager::new(2, 10);
+        r.set_cap(Some(55)); // 5 replicas per worker
+        let mut inserts = 0u64;
+        for i in 0..200usize {
+            let worker = i % 2;
+            let layer = (i * 7) % 4;
+            let expert = (i * 13) % 8;
+            r.pin_layers([layer]);
+            if i % 11 == 0 {
+                let victim_layer = (layer + 1) % 4;
+                r.remove(worker, victim_layer, expert);
+            } else if r.admit(worker, layer, expert).newly_resident {
+                inserts += 1;
+            }
+            let resident: u64 = (0..2).map(|w| r.resident_replicas(w) as u64).sum();
+            assert_eq!(inserts, resident + r.evictions, "step {i}");
+            assert!(
+                r.resident_bytes(worker) <= 55 + r.replica_bytes(),
+                "at most one transient replica over cap while pinned"
+            );
+        }
+        assert!(r.evictions > 0, "the cap must have bitten");
+        assert!(r.refetches > 0, "the cycle must re-admit evicted replicas");
+    }
+}

@@ -35,9 +35,10 @@ use super::metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport}
 use super::pipeline::{AttentionMode, StageMetrics};
 use super::placement_mgr::PlacementManager;
 use super::request::Request;
+use super::residency::ResidencyManager;
 use super::scheduler::{Scheduler, SeqPhase};
 use super::tile_pool::TilePool;
-use super::worker::{ResidentSets, WorkerHandle};
+use super::worker::WorkerHandle;
 use crate::runtime::tensor::IntTensor;
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
 use crate::util::rng::Rng;
@@ -131,9 +132,15 @@ pub struct Coordinator {
     pub(crate) dims: Dims,
     pub(crate) buckets: Vec<usize>,
     pub(crate) round_tag: u64,
-    /// Coordinator-side view of each worker's resident expert weights
-    /// (gates lookahead prewarm sends — see `worker::ResidentSets`).
-    pub(crate) warmed: ResidentSets,
+    /// Coordinator-side residency: a per-worker capacity-bounded LRU over
+    /// (layer, expert) replica weights (ADR 004). Gates lookahead prewarm
+    /// sends, emits `WorkerMsg::Evict` under `--memory-cap`, and accounts
+    /// evictions / refetches / the resident high-water mark. Crate-private:
+    /// every mutation must pair with the matching worker message (admit →
+    /// upload, remove → Evict), so external code configures the cap via
+    /// [`Coordinator::set_memory_cap`] and reads via
+    /// [`Coordinator::residency`].
+    pub(crate) residency: ResidencyManager,
     /// §Perf iteration 2: fan per-sequence attention out to the workers
     /// (the TP analogue). Measured neutral on this substrate — the PJRT
     /// CPU client already saturates all cores per execution, so parallel
@@ -143,11 +150,17 @@ pub struct Coordinator {
     /// leader (single-row matvecs — a worker round-trip costs more than
     /// the op).
     pub parallel_attention: bool,
-    /// §Perf iteration 4 / ADR 002: overlap next-layer prediction, planning
-    /// and replica prewarm transfers with the current layer's compute
-    /// (`serve --lookahead 1`). Off by default so both regimes stay
-    /// reproducible; numerics are bitwise identical either way.
-    pub lookahead: bool,
+    /// §Perf iteration 4 / ADR 002, generalised by ADR 004: overlap the
+    /// next `lookahead` layers' prediction, planning and replica prewarm
+    /// transfers with the current layer's compute (`serve --lookahead N`).
+    /// 0 (the default) disables the prewarm pipeline so both regimes stay
+    /// reproducible; numerics are bitwise identical at every depth.
+    pub lookahead: usize,
+    /// ADR 004: byte budget for prewarm transfers issued per layer step
+    /// (`serve --prewarm-budget`). Nearest-layer prewarms fill the budget
+    /// first, so the deepest lookahead transfers are the first dropped;
+    /// `None` = unbudgeted.
+    pub prewarm_budget_bytes: Option<u64>,
     /// §Perf iteration 5 / ADR 003: speculative TEP scatter (`serve
     /// --speculative 1`). Requires `lookahead` and the Token-to-Expert
     /// strategy: slots whose §3.1 prediction the router confirms ship on a
@@ -213,6 +226,19 @@ impl Coordinator {
             .map(|i| WorkerHandle::spawn(i, source.clone()))
             .collect::<Result<_>>()?;
 
+        // Bytes of one (layer, expert) replica — the unit the residency
+        // LRU budgets and the duplication transfer moves (ADR 004).
+        let replica_bytes: u64 = ["w_gate", "w_up", "w_down"]
+            .iter()
+            .map(|m| {
+                leader
+                    .weight_store()
+                    .nbytes(&format!("layers.0.experts.0.{m}"))
+                    .map(|b| b as u64)
+            })
+            .sum::<Result<u64>>()
+            .context("sizing expert replica weights")?;
+
         // Capacity: up to all experts can fit (CPU memory is not the
         // constraint here); C_max = n_workers mirrors "replicate at most
         // once per GPU".
@@ -232,12 +258,30 @@ impl Coordinator {
             dims,
             buckets,
             round_tag: 0,
-            warmed: ResidentSets::new(n_workers),
+            residency: ResidencyManager::new(n_workers, replica_bytes),
             parallel_attention: false,
-            lookahead: false,
+            lookahead: 0,
+            prewarm_budget_bytes: None,
             speculative: false,
             tiles: TilePool::new(),
         })
+    }
+
+    /// Set (or clear) the per-worker byte cap for expert replica weights
+    /// (`serve --memory-cap`, ADR 004). Serving under any cap is bitwise
+    /// identical to unbounded serving — the cap trades refetch transfer
+    /// for memory, never numerics.
+    pub fn set_memory_cap(&mut self, cap_bytes: Option<u64>) {
+        self.residency.set_cap(cap_bytes);
+        // Plan-shrink diffing only runs while capped; re-seed its baseline
+        // so a cap installed mid-run never diffs against stale placements.
+        self.placement.reset_plan_baseline();
+    }
+
+    /// Read-only view of the residency LRU (replica sizing, counters,
+    /// high-water mark); mutate only through coordinator serving methods.
+    pub fn residency(&self) -> &ResidencyManager {
+        &self.residency
     }
 
     pub fn n_workers(&self) -> usize {
@@ -291,6 +335,9 @@ impl Coordinator {
         metrics.predictor_s = plan_stage.predictor_s;
         metrics.plan_s = plan_stage.plan_s;
         metrics.replicas_added = plan_stage.replicas_added;
+        // Plan-shrink evictions happen at plan time, before the layer
+        // loop's counter window opens (ADR 004).
+        metrics.evictions += plan_stage.replicas_removed as u64;
 
         // ---- 3. unified per-layer pipeline ------------------------------
         let mut stage = StageMetrics::new(self.workers.len());
@@ -489,6 +536,7 @@ impl Coordinator {
         metrics.predictor_s = plan_stage.predictor_s + plan_stage.plan_s;
         metrics.replanned = plan_stage.replanned;
         metrics.replicas_added = plan_stage.replicas_added;
+        metrics.evictions += plan_stage.replicas_removed as u64;
 
         // ---- 3. unified per-layer pipeline ------------------------------
         let mut stage = StageMetrics::new(self.workers.len());

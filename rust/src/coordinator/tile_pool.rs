@@ -13,6 +13,13 @@
 //! `tests/zero_alloc_dispatch.rs` pins down via the alloc/reuse counters
 //! that `metrics.rs` reports.
 //!
+//! **Aging** (ADR 004): free buffers are stamped with the pool clock when
+//! returned; [`TilePool::tick`] — called by the pipeline once per serving
+//! round/step, the same cadence the residency LRU ages on — drops buffers
+//! that sat unused for [`MAX_FREE_AGE`] ticks. A bucket-mix shift (batch
+//! shrink, routing drift) therefore releases its stranded capacity
+//! classes instead of holding them for the process lifetime.
+//!
 //! Determinism: the pool only changes *where* bytes live, never their
 //! values — `take` clears the buffer and callers rewrite every row (real
 //! rows copied, padding explicitly zero-filled), so the pooled path is
@@ -24,16 +31,26 @@ use std::collections::BTreeMap;
 /// returned buffers are dropped (bounds pool memory under bucket churn).
 const MAX_FREE_PER_CLASS: usize = 64;
 
+/// Free buffers untouched for this many [`TilePool::tick`]s are dropped.
+/// One tick per serving round/step, so a capacity class the bucket mix
+/// stopped producing is released within ~this many rounds.
+pub const MAX_FREE_AGE: u64 = 32;
+
 /// A capacity-keyed free list of `Vec<f32>` buffers with alloc/reuse
-/// accounting.
+/// accounting and clock-based aging.
 #[derive(Debug, Default)]
 pub struct TilePool {
-    /// Free buffers keyed by their capacity.
-    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    /// Free buffers keyed by their capacity, each stamped with the tick
+    /// it was returned on.
+    free: BTreeMap<usize, Vec<(u64, Vec<f32>)>>,
+    /// Aging clock; one tick per serving round/step.
+    clock: u64,
     /// Buffers handed out that had to be freshly allocated.
     pub allocs: u64,
     /// Buffers handed out from the free list.
     pub reuses: u64,
+    /// Free buffers dropped by aging (idle > [`MAX_FREE_AGE`] ticks).
+    pub aged_out: u64,
 }
 
 impl TilePool {
@@ -52,7 +69,7 @@ impl TilePool {
             .map(|(&k, _)| k);
         if let Some(k) = key {
             let list = self.free.get_mut(&k).expect("key just found");
-            let mut buf = list.pop().expect("non-empty list");
+            let (_, mut buf) = list.pop().expect("non-empty list");
             if list.is_empty() {
                 self.free.remove(&k);
             }
@@ -64,8 +81,9 @@ impl TilePool {
         Vec::with_capacity(cap)
     }
 
-    /// Return a buffer to the pool, keyed by its capacity. Zero-capacity
-    /// buffers (e.g. error-path placeholders) are dropped.
+    /// Return a buffer to the pool, keyed by its capacity and stamped with
+    /// the current tick. Zero-capacity buffers (e.g. error-path
+    /// placeholders) are dropped.
     pub fn put(&mut self, buf: Vec<f32>) {
         let cap = buf.capacity();
         if cap == 0 {
@@ -73,8 +91,28 @@ impl TilePool {
         }
         let list = self.free.entry(cap).or_default();
         if list.len() < MAX_FREE_PER_CLASS {
-            list.push(buf);
+            list.push((self.clock, buf));
         }
+    }
+
+    /// Advance the aging clock one round/step and drop free buffers that
+    /// have sat idle longer than `max_age` ticks.
+    pub fn tick_with_age(&mut self, max_age: u64) {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut aged = 0u64;
+        self.free.retain(|_, list| {
+            let before = list.len();
+            list.retain(|&(stamp, _)| clock.saturating_sub(stamp) <= max_age);
+            aged += (before - list.len()) as u64;
+            !list.is_empty()
+        });
+        self.aged_out += aged;
+    }
+
+    /// [`Self::tick_with_age`] at the default [`MAX_FREE_AGE`].
+    pub fn tick(&mut self) {
+        self.tick_with_age(MAX_FREE_AGE);
     }
 
     /// Free buffers currently pooled (across all capacity classes).
@@ -124,5 +162,37 @@ mod tests {
             pool.put(Vec::with_capacity(8));
         }
         assert!(pool.pooled() <= MAX_FREE_PER_CLASS);
+    }
+
+    #[test]
+    fn aging_drops_idle_buffers_but_keeps_fresh_ones() {
+        let mut pool = TilePool::new();
+        pool.put(Vec::with_capacity(8)); // stamped at tick 0
+        for _ in 0..3 {
+            pool.tick_with_age(3);
+        }
+        assert_eq!(pool.pooled(), 1, "within max_age the buffer survives");
+        pool.put(Vec::with_capacity(16)); // stamped at tick 3
+        pool.tick_with_age(3); // tick 4: the tick-0 buffer ages out
+        assert_eq!(pool.pooled(), 1, "only the fresh buffer survives");
+        assert_eq!(pool.aged_out, 1);
+        assert!(pool.take(16).capacity() >= 16, "fresh buffer still usable");
+        assert_eq!(pool.reuses, 1);
+    }
+
+    #[test]
+    fn reuse_refreshes_the_age_stamp() {
+        let mut pool = TilePool::new();
+        pool.put(Vec::with_capacity(8));
+        pool.tick_with_age(2);
+        // Take + return: the buffer's stamp moves to the current tick.
+        let b = pool.take(8);
+        pool.put(b);
+        pool.tick_with_age(2);
+        pool.tick_with_age(2);
+        assert_eq!(pool.pooled(), 1, "refreshed stamp keeps it alive");
+        pool.tick_with_age(2);
+        assert_eq!(pool.pooled(), 0, "idle again long enough: dropped");
+        assert_eq!(pool.aged_out, 1);
     }
 }

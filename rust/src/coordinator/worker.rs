@@ -5,11 +5,12 @@
 //! triggers, and is accounted per worker. The lookahead pipeline
 //! (`coordinator/pipeline.rs`) instead pre-warms replica weights with
 //! [`WorkerMsg::Prewarm`] while the leader runs attention, so the transfer
-//! is hidden rather than stalling the FFN phase; [`ResidentSets`] is the
-//! coordinator-side per-layer view of what each worker already holds, so
-//! prewarms are sent at most once per (worker, layer, expert).
+//! is hidden rather than stalling the FFN phase; the coordinator-side view
+//! of what each worker holds is the capacity-bounded LRU in
+//! [`super::residency::ResidencyManager`] (ADR 004), which both gates
+//! duplicate prewarm sends and emits the [`WorkerMsg::Evict`] messages
+//! that keep each engine inside its `--memory-cap` budget.
 
-use std::collections::HashSet;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -49,7 +50,11 @@ pub enum WorkerMsg {
         expert: usize,
         reply: mpsc::Sender<WorkerResult>,
     },
-    /// Evict an expert's weights (placement shrink between batches).
+    /// Evict an expert's weights and free the engine-side residency (LRU
+    /// capacity eviction or placement shrink — ADR 004). Workers process
+    /// their queue in FIFO order, so an eviction enqueued before a later
+    /// `Run`/`Prewarm` of the same expert is applied first and the replica
+    /// re-uploads cold (the refetch the coordinator accounts).
     Evict { layer: usize, expert: usize },
     Shutdown,
 }
@@ -295,68 +300,6 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
     }
 }
 
-/// Coordinator-side view of each worker's per-layer resident expert
-/// weights. Worker engines track residency themselves (uploads are cache
-/// hits after the first), but the leader needs its own copy to avoid
-/// flooding the channels with no-op [`WorkerMsg::Prewarm`] messages every
-/// layer: a (worker, layer, expert) triple is prewarmed at most once per
-/// coordinator lifetime, matching engine residency (nothing evicts on the
-/// serve path today — eviction support is an open item, ROADMAP.md).
-#[derive(Debug, Default)]
-pub struct ResidentSets {
-    /// One `(layer, expert)` set per worker.
-    per_worker: Vec<HashSet<(usize, usize)>>,
-}
-
-impl ResidentSets {
-    pub fn new(n_workers: usize) -> ResidentSets {
-        ResidentSets {
-            per_worker: (0..n_workers).map(|_| HashSet::new()).collect(),
-        }
-    }
-
-    pub fn contains(&self, worker: usize, layer: usize, expert: usize) -> bool {
-        self.per_worker[worker].contains(&(layer, expert))
-    }
-
-    /// Mark a triple resident; returns false if it already was.
-    pub fn insert(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
-        self.per_worker[worker].insert((layer, expert))
-    }
-
-    pub fn remove(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
-        self.per_worker[worker].remove(&(layer, expert))
-    }
-
-    /// Resident experts of one worker for one layer (sorted).
-    pub fn layer_experts(&self, worker: usize, layer: usize) -> Vec<usize> {
-        let mut v: Vec<usize> = self.per_worker[worker]
-            .iter()
-            .filter(|&&(l, _)| l == layer)
-            .map(|&(_, e)| e)
-            .collect();
-        v.sort_unstable();
-        v
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn resident_sets_track_per_layer() {
-        let mut r = ResidentSets::new(2);
-        assert!(!r.contains(0, 1, 3));
-        assert!(r.insert(0, 1, 3));
-        assert!(!r.insert(0, 1, 3), "second insert is a no-op");
-        assert!(r.contains(0, 1, 3));
-        assert!(!r.contains(1, 1, 3), "workers are independent");
-        r.insert(0, 1, 1);
-        r.insert(0, 2, 5);
-        assert_eq!(r.layer_experts(0, 1), vec![1, 3]);
-        assert_eq!(r.layer_experts(0, 2), vec![5]);
-        assert!(r.remove(0, 1, 3));
-        assert!(!r.contains(0, 1, 3));
-    }
-}
+// `ResidentSets` (the grow-only coordinator-side residency view) lived
+// here through ADR 003; it was refactored into the capacity-bounded LRU
+// in `super::residency::ResidencyManager` (ADR 004).

@@ -3,7 +3,7 @@
 //! strategy minimises end-to-end latency.
 
 use super::calibrate::WorkloadCalibration;
-use super::select::{recommend, strategy_savings_regime, Recommendation};
+use super::select::{recommend, strategy_savings_in, Recommendation, Regime};
 use crate::model::ModelConfig;
 use crate::sim::hardware::SystemSpec;
 
@@ -17,7 +17,8 @@ pub struct GuidelineCell {
     pub saving_frac: f64,
 }
 
-/// Compute the decision map over a (skew × bandwidth) grid.
+/// Compute the decision map over a (skew × bandwidth) grid under the
+/// paper's plain regime ([`Regime::default`]).
 pub fn decision_map(
     model: &ModelConfig,
     cals: &[WorkloadCalibration],
@@ -26,45 +27,41 @@ pub fn decision_map(
     batch: usize,
     seq: usize,
 ) -> Vec<GuidelineCell> {
-    decision_map_overlap(model, cals, skews, bandwidths_gbs, batch, seq, false)
+    decision_map_in(
+        model,
+        cals,
+        skews,
+        bandwidths_gbs,
+        batch,
+        seq,
+        Regime::default(),
+    )
 }
 
-/// [`decision_map`] under an explicit overlap regime: `overlap = true`
-/// prices the ADR-002 lookahead serving engine, re-deriving every cell's
-/// DOP-vs-TEP crossover (`advise --overlap`).
-pub fn decision_map_overlap(
+/// The fully-general decision map, priced under an explicit [`Regime`]:
+/// `overlap` re-derives every cell's DOP-vs-TEP crossover under the
+/// ADR-002 lookahead engine (`advise --overlap`); `speculative` hides
+/// TEP's repair scatter under the confirmed tiles' FFN compute, shifting
+/// the frontier toward TEP (`advise --speculative`); `memory_cap_bytes`
+/// is the ADR-004 constrained-HBM budget (`advise --memory-cap`) — a cap
+/// below the duplicated working set charges the prediction strategies
+/// exposed refetch transfer, shifting low-saving cells toward
+/// no-prediction and re-drawing the DOP/TEP frontier for memory-starved
+/// systems.
+pub fn decision_map_in(
     model: &ModelConfig,
     cals: &[WorkloadCalibration],
     skews: &[f64],
     bandwidths_gbs: &[f64],
     batch: usize,
     seq: usize,
-    overlap: bool,
-) -> Vec<GuidelineCell> {
-    decision_map_regime(model, cals, skews, bandwidths_gbs, batch, seq, overlap, false)
-}
-
-/// [`decision_map_overlap`] plus the ADR-003 speculative-scatter regime
-/// (`advise --speculative`): re-derives every cell with TEP's repair
-/// scatter hidden under the confirmed tiles' FFN compute, which shifts
-/// the DOP/TEP frontier toward TEP.
-pub fn decision_map_regime(
-    model: &ModelConfig,
-    cals: &[WorkloadCalibration],
-    skews: &[f64],
-    bandwidths_gbs: &[f64],
-    batch: usize,
-    seq: usize,
-    overlap: bool,
-    speculative: bool,
+    regime: Regime,
 ) -> Vec<GuidelineCell> {
     let mut cells = Vec::new();
     for &bw in bandwidths_gbs {
         let system = SystemSpec::four_a100_custom_bw(bw);
         for &skew in skews {
-            let cmp = strategy_savings_regime(
-                model, &system, cals, skew, batch, seq, overlap, speculative,
-            );
+            let cmp = strategy_savings_in(model, &system, cals, skew, batch, seq, regime);
             let rec = recommend(&cmp);
             let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
             cells.push(GuidelineCell {
@@ -215,7 +212,15 @@ mod tests {
         let skews = [1.2, 2.0];
         let bws = [600.0, 64.0];
         let base = decision_map(&model, &cals, &skews, &bws, 1, 512);
-        let over = decision_map_overlap(&model, &cals, &skews, &bws, 1, 512, true);
+        let over = decision_map_in(
+            &model,
+            &cals,
+            &skews,
+            &bws,
+            1,
+            512,
+            Regime { overlap: true, ..Regime::default() },
+        );
         assert_eq!(base.len(), over.len());
         for (a, b) in base.iter().zip(&over) {
             assert_eq!(a.skewness, b.skewness);

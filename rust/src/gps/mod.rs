@@ -22,8 +22,8 @@ pub mod sweep;
 
 pub use calibrate::{calibrate, CalibrationOptions, PredictorPoint, WorkloadCalibration};
 pub use select::{
-    best_tep, decode_strategy_savings, decode_strategy_savings_overlap,
-    decode_strategy_savings_regime, strategy_savings, strategy_savings_for_phase,
-    strategy_savings_overlap, strategy_savings_regime, SavingsComparison, ServePhase,
+    best_tep, decode_strategy_savings, decode_strategy_savings_in, strategy_savings,
+    strategy_savings_for_phase, strategy_savings_in, Regime, SavingsComparison,
+    ServePhase,
 };
 pub use sweep::{skew_sweep, SweepPoint};

@@ -66,6 +66,19 @@ pub fn best_tep(
         .unwrap()
 }
 
+/// The serving-engine regime a savings comparison is priced under: the
+/// ADR-002 lookahead overlap, the ADR-003 speculative scatter riding it,
+/// and the ADR-004 constrained-HBM budget. `Regime::default()` is the
+/// paper's plain setting (no overlap, no speculation, unbounded memory).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Regime {
+    pub overlap: bool,
+    pub speculative: bool,
+    /// Per-device HBM available for expert weights (ADR 004); `None` =
+    /// unbounded.
+    pub memory_cap_bytes: Option<f64>,
+}
+
 /// Figure-7 row: savings of each strategy vs baseline, and their difference
 /// (positive ⇒ Distribution-Only wins).
 #[derive(Clone, Debug)]
@@ -80,7 +93,8 @@ pub struct SavingsComparison {
     pub difference_s: f64,
 }
 
-/// Compute the savings comparison for one (system, skew).
+/// Compute the savings comparison for one (system, skew) under the
+/// paper's plain regime ([`Regime::default`]).
 pub fn strategy_savings(
     model: &ModelConfig,
     system: &SystemSpec,
@@ -89,47 +103,35 @@ pub fn strategy_savings(
     batch: usize,
     seq: usize,
 ) -> SavingsComparison {
-    strategy_savings_overlap(model, system, cals, skew, batch, seq, false)
+    strategy_savings_in(model, system, cals, skew, batch, seq, Regime::default())
 }
 
-/// [`strategy_savings`] under an explicit overlap regime: with
-/// `overlap = true` the simulator prices the ADR-002 lookahead engine
-/// (prediction + duplication transfers hide under the compute window),
-/// which is what re-derives the DOP-vs-TEP crossover for `advise
-/// --overlap` — TEP's per-batch overhead (its Achilles heel) hides, while
-/// DOP's transfer is charged explicitly where the window is too small.
-pub fn strategy_savings_overlap(
+/// The fully-general savings comparison, priced under an explicit
+/// [`Regime`]: `overlap` prices the ADR-002 lookahead engine (prediction
+/// + duplication transfers hide under the compute window — TEP's
+/// per-batch overhead hides while DOP's transfer is charged where the
+/// window is too small); `speculative` additionally hides TEP's
+/// misprediction repair scatter under the confirmed tiles' FFN compute
+/// (requires `overlap`; DOP and the baseline are untouched); and
+/// `memory_cap_bytes` is the ADR-004 constrained-HBM budget — under a
+/// tight cap the duplicated replica overflows the per-device weight
+/// working set and evicted-then-refetched experts pay exposed transfer.
+/// `advise --overlap/--speculative/--memory-cap` re-derive the guideline
+/// map through this one entry point.
+pub fn strategy_savings_in(
     model: &ModelConfig,
     system: &SystemSpec,
     cals: &[WorkloadCalibration],
     skew: f64,
     batch: usize,
     seq: usize,
-    overlap: bool,
-) -> SavingsComparison {
-    strategy_savings_regime(model, system, cals, skew, batch, seq, overlap, false)
-}
-
-/// [`strategy_savings_overlap`] plus the ADR-003 speculative-scatter
-/// regime: `speculative = true` additionally hides TEP's misprediction
-/// repair scatter under the confirmed tiles' FFN compute (it requires
-/// `overlap`; DOP and the baseline are untouched). This is what
-/// `advise --speculative` re-derives the guideline map with — cheap
-/// speculative scatter shifts the DOP/TEP frontier further toward TEP.
-pub fn strategy_savings_regime(
-    model: &ModelConfig,
-    system: &SystemSpec,
-    cals: &[WorkloadCalibration],
-    skew: f64,
-    batch: usize,
-    seq: usize,
-    overlap: bool,
-    speculative: bool,
+    regime: Regime,
 ) -> SavingsComparison {
     let sim = LayerSim::new(model.clone(), system.clone())
         .with_workload(batch, seq)
-        .with_overlap(overlap)
-        .with_speculative(speculative && overlap);
+        .with_overlap(regime.overlap)
+        .with_speculative(regime.speculative && regime.overlap)
+        .with_memory_cap(regime.memory_cap_bytes);
     let baseline_s = sim.baseline_total(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim
@@ -165,38 +167,24 @@ pub fn decode_strategy_savings(
     batch: usize,
     ctx_len: usize,
 ) -> SavingsComparison {
-    decode_strategy_savings_overlap(model, system, cals, skew, batch, ctx_len, false)
+    decode_strategy_savings_in(model, system, cals, skew, batch, ctx_len, Regime::default())
 }
 
-/// [`decode_strategy_savings`] under an explicit overlap regime (the
-/// decode analogue of [`strategy_savings_overlap`]).
-pub fn decode_strategy_savings_overlap(
+/// The decode analogue of [`strategy_savings_in`] (ADR 002/003/004).
+pub fn decode_strategy_savings_in(
     model: &ModelConfig,
     system: &SystemSpec,
     cals: &[WorkloadCalibration],
     skew: f64,
     batch: usize,
     ctx_len: usize,
-    overlap: bool,
-) -> SavingsComparison {
-    decode_strategy_savings_regime(model, system, cals, skew, batch, ctx_len, overlap, false)
-}
-
-/// The decode analogue of [`strategy_savings_regime`] (ADR 003).
-pub fn decode_strategy_savings_regime(
-    model: &ModelConfig,
-    system: &SystemSpec,
-    cals: &[WorkloadCalibration],
-    skew: f64,
-    batch: usize,
-    ctx_len: usize,
-    overlap: bool,
-    speculative: bool,
+    regime: Regime,
 ) -> SavingsComparison {
     let sim = DecodeSim::new(model.clone(), system.clone())
         .with_workload(batch, ctx_len)
-        .with_overlap(overlap)
-        .with_speculative(speculative && overlap);
+        .with_overlap(regime.overlap)
+        .with_speculative(regime.speculative && regime.overlap)
+        .with_memory_cap(regime.memory_cap_bytes);
     let baseline_s = sim.baseline_step(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
@@ -345,6 +333,17 @@ mod tests {
         assert!(total.is_finite() && total > 0.0);
     }
 
+    const OVERLAP: Regime = Regime {
+        overlap: true,
+        speculative: false,
+        memory_cap_bytes: None,
+    };
+    const SPECULATIVE: Regime = Regime {
+        overlap: true,
+        speculative: true,
+        memory_cap_bytes: None,
+    };
+
     #[test]
     fn overlap_moves_the_difference_toward_tep() {
         // Both strategies pay the same explicit exposed-transfer charge
@@ -359,7 +358,7 @@ mod tests {
             for skew in [1.4, 2.0, 3.0] {
                 let plain = strategy_savings(&model, &system, &c, skew, 1, 512);
                 let over =
-                    strategy_savings_overlap(&model, &system, &c, skew, 1, 512, true);
+                    strategy_savings_in(&model, &system, &c, skew, 1, 512, OVERLAP);
                 assert!(
                     (plain.baseline_s - over.baseline_s).abs() < 1e-12,
                     "baseline unchanged"
@@ -385,9 +384,9 @@ mod tests {
             let system = SystemSpec::four_a100_custom_bw(bw);
             let c = cals(&model, &system);
             for skew in [1.4, 2.0, 3.0] {
-                let over = strategy_savings_overlap(&model, &system, &c, skew, 1, 512, true);
+                let over = strategy_savings_in(&model, &system, &c, skew, 1, 512, OVERLAP);
                 let spec =
-                    strategy_savings_regime(&model, &system, &c, skew, 1, 512, true, true);
+                    strategy_savings_in(&model, &system, &c, skew, 1, 512, SPECULATIVE);
                 assert!((spec.baseline_s - over.baseline_s).abs() < 1e-15);
                 assert!((spec.dop_saving_s - over.dop_saving_s).abs() < 1e-15);
                 assert!(
@@ -400,15 +399,21 @@ mod tests {
         // Decode regime obeys the same ordering.
         let system = SystemSpec::four_a100_pcie();
         let c = cals(&model, &system);
-        let over =
-            decode_strategy_savings_overlap(&model, &system, &c, 2.0, 16, 512, true);
+        let over = decode_strategy_savings_in(&model, &system, &c, 2.0, 16, 512, OVERLAP);
         let spec =
-            decode_strategy_savings_regime(&model, &system, &c, 2.0, 16, 512, true, true);
+            decode_strategy_savings_in(&model, &system, &c, 2.0, 16, 512, SPECULATIVE);
         assert!(spec.tep_best_saving_s >= over.tep_best_saving_s - 1e-15);
         // Without overlap the flag is inert (speculation rides lookahead).
         let plain = strategy_savings(&model, &system, &c, 2.0, 1, 512);
-        let spec_no_overlap =
-            strategy_savings_regime(&model, &system, &c, 2.0, 1, 512, false, true);
+        let spec_no_overlap = strategy_savings_in(
+            &model,
+            &system,
+            &c,
+            2.0,
+            1,
+            512,
+            Regime { overlap: false, ..SPECULATIVE },
+        );
         assert!((plain.tep_best_saving_s - spec_no_overlap.tep_best_saving_s).abs() < 1e-15);
     }
 
@@ -425,13 +430,66 @@ mod tests {
             let sys = SystemSpec::four_a100_custom_bw(bw);
             for skew in [1.0, 1.2, 1.4, 1.7, 2.0, 2.5, 3.0, 4.0, 5.0] {
                 let plain = strategy_savings(&model, &sys, &c, skew, 1, 512);
-                let over = strategy_savings_overlap(&model, &sys, &c, skew, 1, 512, true);
+                let over = strategy_savings_in(&model, &sys, &c, skew, 1, 512, OVERLAP);
                 if recommend(&plain) != recommend(&over) {
                     flipped += 1;
                 }
             }
         }
         assert!(flipped > 0, "overlap must flip at least one guideline cell");
+    }
+
+    #[test]
+    fn memory_cap_shrinks_prediction_savings_and_flips_a_cell() {
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        // Cap sized between the baseline working set (no replicas) and the
+        // duplicated one: prediction strategies pay refetch, baseline not.
+        let base_needed = model.n_layers as f64
+            * (model.n_experts as f64 / system.n_devices as f64)
+            * model.expert_bytes();
+        let capped = Regime {
+            memory_cap_bytes: Some(base_needed),
+            ..Regime::default()
+        };
+        let mut flipped = 0usize;
+        for bw in [600.0, 300.0, 128.0, 64.0] {
+            let sys = SystemSpec::four_a100_custom_bw(bw);
+            for skew in [1.0, 1.05, 1.1, 1.2, 1.4, 2.0, 3.0, 4.0] {
+                let plain = strategy_savings(&model, &sys, &c, skew, 1, 512);
+                let tight = strategy_savings_in(&model, &sys, &c, skew, 1, 512, capped);
+                assert!(
+                    (plain.baseline_s - tight.baseline_s).abs() < 1e-12,
+                    "baseline fits under this cap and must not move"
+                );
+                assert!(
+                    tight.dop_saving_s <= plain.dop_saving_s + 1e-12,
+                    "refetch can only shrink DOP's saving (bw={bw} skew={skew})"
+                );
+                assert!(tight.tep_best_saving_s <= plain.tep_best_saving_s + 1e-12);
+                if recommend(&plain) != recommend(&tight) {
+                    flipped += 1;
+                }
+            }
+        }
+        assert!(
+            flipped > 0,
+            "a cap below the duplicated working set must flip ≥ 1 cell"
+        );
+        // Decode regime obeys the same ordering.
+        let plain = decode_strategy_savings(&model, &system, &c, 2.0, 16, 512);
+        let tight = decode_strategy_savings_in(&model, &system, &c, 2.0, 16, 512, capped);
+        assert!(tight.dop_saving_s <= plain.dop_saving_s + 1e-12);
+        // A roomy cap is a no-op in both phases.
+        let roomy = Regime {
+            memory_cap_bytes: Some(base_needed * 10.0),
+            ..Regime::default()
+        };
+        let same = strategy_savings_in(&model, &system, &c, 2.0, 1, 512, roomy);
+        let plain_prefill = strategy_savings(&model, &system, &c, 2.0, 1, 512);
+        assert!((same.dop_saving_s - plain_prefill.dop_saving_s).abs() < 1e-12);
+        assert!((same.tep_best_saving_s - plain_prefill.tep_best_saving_s).abs() < 1e-12);
     }
 
     #[test]

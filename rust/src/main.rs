@@ -70,11 +70,21 @@ USAGE: moe-gps <subcommand> [options]
                 --overlap      (price the ADR-002 lookahead engine and show
                                 which guideline cells it flips)
                 --speculative  (additionally price the ADR-003 speculative
-                                TEP scatter; implies --overlap)]
+                                TEP scatter; implies --overlap)
+                --memory-cap B (ADR 004: per-device HBM budget for expert
+                                weights, e.g. 24g; duplication that
+                                overflows it pays exposed refetch — shows
+                                the cells the cap flips)]
   trace        --dataset mmlu|alpaca|sst2 [--seed 7]
   predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
   serve        --strategy none|dop|tep [--phase prefill|decode|mixed
-                --workers 4 --artifacts artifacts --lookahead 0|1
+                --workers 4 --artifacts artifacts
+                --lookahead N  (prewarm the next N layers' replicas under
+                                the current layer's compute; 0 = off)
+                --prewarm-budget B (byte budget for prewarm transfers per
+                                layer step; deepest prewarms drop first)
+                --memory-cap B (per-worker byte cap for expert replica
+                                weights: LRU eviction + refetch, ADR 004)
                 --speculative  (TEP speculative scatter; implies lookahead)
                 --threads N    (reference-backend compute pool; 0 = auto)]
                prefill: [--rounds 8 --seqs 4]
@@ -184,25 +194,30 @@ fn cmd_advise(args: &Args) -> Result<()> {
     // Speculative scatter rides the lookahead pipeline, so pricing it
     // implies the overlap regime (ADR 003).
     let overlap = args.flag("overlap") || speculative;
+    // ADR 004: per-device HBM budget for expert weights (e.g. `24g`).
+    let memory_cap_bytes = args.opt_bytes("memory-cap")?.map(|b| b as f64);
+    let regime = gps::Regime {
+        overlap,
+        speculative,
+        memory_cap_bytes,
+    };
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
     let system = SystemSpec::four_a100_nvlink();
     let cals = calibrations(&model, &system, args.flag("fast"), args.opt_u64("seed", 7)?);
     // One map builder per phase, parameterised by regime so `--overlap` /
-    // `--speculative` can render their map *and* the cells they flip.
-    let build = |with_overlap: bool,
-                 with_spec: bool|
-     -> Result<Vec<gps::guidelines::GuidelineCell>> {
+    // `--speculative` / `--memory-cap` can render their map *and* the
+    // cells they flip.
+    let build = |regime: gps::Regime| -> Result<Vec<gps::guidelines::GuidelineCell>> {
         Ok(match phase {
-            ServePhase::Prefill => gps::guidelines::decision_map_regime(
+            ServePhase::Prefill => gps::guidelines::decision_map_in(
                 &model,
                 &cals,
                 &skews,
                 &bandwidths,
                 1,
                 512,
-                with_overlap,
-                with_spec,
+                regime,
             ),
             ServePhase::Decode => {
                 // Decode regime: decision map over the same grid, priced on
@@ -214,15 +229,8 @@ fn cmd_advise(args: &Args) -> Result<()> {
                 for &bw in &bandwidths {
                     let sys = SystemSpec::four_a100_custom_bw(bw);
                     for &skew in &skews {
-                        let cmp = gps::decode_strategy_savings_regime(
-                            &model,
-                            &sys,
-                            &cals,
-                            skew,
-                            batch,
-                            ctx,
-                            with_overlap,
-                            with_spec,
+                        let cmp = gps::decode_strategy_savings_in(
+                            &model, &sys, &cals, skew, batch, ctx, regime,
                         );
                         let best_saving =
                             cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
@@ -238,26 +246,49 @@ fn cmd_advise(args: &Args) -> Result<()> {
             }
         })
     };
-    let cells = build(overlap, speculative)?;
+    let cells = build(regime)?;
+    let mut tags: Vec<&str> = Vec::new();
+    if speculative {
+        tags.push("lookahead overlap + speculative scatter");
+    } else if overlap {
+        tags.push("lookahead overlap");
+    }
+    if memory_cap_bytes.is_some() {
+        tags.push("memory-capped");
+    }
     println!(
         "phase: {}{}",
         phase.name(),
-        if speculative {
-            " (lookahead overlap + speculative scatter)"
-        } else if overlap {
-            " (lookahead overlap)"
+        if tags.is_empty() {
+            String::new()
         } else {
-            ""
+            format!(" ({})", tags.join(", "))
         }
     );
     println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
     println!("{}", gps::guidelines::summarize(&cells));
+    if memory_cap_bytes.is_some() {
+        // Flips vs the same regime without the cap: what memory pressure
+        // alone changes about the guidance (ADR 004).
+        let base = build(gps::Regime {
+            memory_cap_bytes: None,
+            ..regime
+        })?;
+        println!("{}", gps::guidelines::render_flips(&base, &cells));
+    }
     if speculative {
         // Flips vs the overlap-only map: what speculation alone buys.
-        let base = build(true, false)?;
+        let base = build(gps::Regime {
+            speculative: false,
+            ..regime
+        })?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
     } else if overlap {
-        let base = build(false, false)?;
+        let base = build(gps::Regime {
+            overlap: false,
+            speculative: false,
+            ..regime
+        })?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
     }
     Ok(())
@@ -301,14 +332,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the first engine spins up (0 = auto-detect).
     moe_gps::runtime::configure_compute_threads(args.opt_usize("threads", 0)?);
     let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
-    // ADR 002: overlap next-layer prediction/planning/prewarm with the
-    // current layer's compute. Numerics are identical either way; both
-    // regimes stay reproducible from the CLI.
-    coord.lookahead = args.opt_usize("lookahead", 0)? != 0;
+    // ADR 002/004: overlap the next N layers' prediction/planning/prewarm
+    // with the current layer's compute. Numerics are identical at every
+    // depth; all regimes stay reproducible from the CLI.
+    coord.lookahead = args.opt_usize("lookahead", 0)?;
+    // ADR 004: byte budget for prewarm transfers issued per layer step
+    // (deepest lookahead transfers drop first when it runs out).
+    coord.prewarm_budget_bytes = args.opt_bytes("prewarm-budget")?;
+    // ADR 004: per-worker cap on resident expert replica bytes — real LRU
+    // eviction via WorkerMsg::Evict; bitwise-identical outputs.
+    coord.set_memory_cap(args.opt_bytes("memory-cap")?);
     // ADR 003: speculative TEP scatter rides the lookahead pipeline.
     coord.speculative = args.flag("speculative");
     if coord.speculative {
-        coord.lookahead = true;
+        coord.lookahead = coord.lookahead.max(1);
+    }
+    if coord.prewarm_budget_bytes.is_some() && coord.lookahead == 0 {
+        eprintln!(
+            "warning: --prewarm-budget has no effect without --lookahead N \
+             (no prewarm stream to budget)"
+        );
     }
     let mut gen = RequestGen::new(seed, coord.vocab());
     match phase {

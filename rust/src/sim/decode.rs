@@ -58,6 +58,11 @@ pub struct DecodeParams {
     /// dispatch ahead of the repair pass, hiding the correction scatter
     /// under their FFN compute. TEP + `lookahead_overlap` only.
     pub speculative_scatter: bool,
+    /// ADR 004: per-device HBM available for expert weights (see
+    /// [`super::moe::MoeParams::memory_cap_bytes`]). Decode is already
+    /// weight-streaming-bound from HBM; under the cap the missing
+    /// fraction streams from host/peer instead — exposed, every step.
+    pub memory_cap_bytes: Option<f64>,
 }
 
 impl DecodeParams {
@@ -73,6 +78,7 @@ impl DecodeParams {
             attention_compute_s: 0.0,
             lookahead_overlap: false,
             speculative_scatter: false,
+            memory_cap_bytes: None,
         }
     }
 }
@@ -189,6 +195,15 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
             }
         }
     }
+    // ADR 004: memory-pressure refetch is exposed for every strategy and
+    // every step — the decode working set revisits each layer per token,
+    // so a cap below it thrashes the weight cache continuously.
+    cost.movement_s += moe::memory_pressure_refetch_s(
+        model,
+        system,
+        p.memory_cap_bytes,
+        !matches!(p.strategy, Strategy::NoPrediction),
+    );
     cost
 }
 
@@ -276,6 +291,8 @@ pub struct DecodeSim {
     pub lookahead_overlap: bool,
     /// Price the speculative TEP scatter on top of overlap (ADR 003).
     pub speculative_scatter: bool,
+    /// Price the constrained-HBM regime (ADR 004).
+    pub memory_cap_bytes: Option<f64>,
 }
 
 impl DecodeSim {
@@ -292,6 +309,7 @@ impl DecodeSim {
             replan_interval: 1,
             lookahead_overlap: false,
             speculative_scatter: false,
+            memory_cap_bytes: None,
         }
     }
 
@@ -308,6 +326,11 @@ impl DecodeSim {
 
     pub fn with_speculative(mut self, on: bool) -> DecodeSim {
         self.speculative_scatter = on;
+        self
+    }
+
+    pub fn with_memory_cap(mut self, cap_bytes: Option<f64>) -> DecodeSim {
+        self.memory_cap_bytes = cap_bytes;
         self
     }
 
@@ -342,6 +365,7 @@ impl DecodeSim {
         p.replan_interval = self.replan_interval;
         p.lookahead_overlap = self.lookahead_overlap;
         p.speculative_scatter = self.speculative_scatter;
+        p.memory_cap_bytes = self.memory_cap_bytes;
         decode_moe_cost(&self.model, &self.system, &p)
     }
 
@@ -543,6 +567,33 @@ mod tests {
                 "overlap must never price slower than exposed: {a} vs {b} ({strategy:?})"
             );
         }
+    }
+
+    #[test]
+    fn decode_memory_cap_charges_every_strategy_dup_most() {
+        let (m, s) = mixtral_nvlink();
+        let base_needed =
+            m.n_layers as f64 * (m.n_experts as f64 / s.n_devices as f64) * m.expert_bytes();
+        let cap = Some(base_needed * 0.5);
+        let cost_at = |strategy: Strategy, cap: Option<f64>| {
+            let mut p = DecodeParams::new(16, 512, 2.0, strategy);
+            p.memory_cap_bytes = cap;
+            decode_moe_cost(&m, &s, &p)
+        };
+        let base = cost_at(Strategy::NoPrediction, cap);
+        let base_free = cost_at(Strategy::NoPrediction, None);
+        assert!(base.movement_s > 0.0, "tight cap charges the baseline too");
+        assert_eq!(base_free.movement_s, 0.0);
+        let dop = cost_at(Strategy::DistributionOnly { error_rate: 0.02 }, cap);
+        assert!(
+            dop.movement_s > base.movement_s,
+            "the duplicated replica must cost extra under pressure"
+        );
+        // Sim plumbing: the builder prices the cap identically.
+        let capped = DecodeSim::new(m.clone(), s.clone()).with_memory_cap(cap);
+        let free = DecodeSim::new(m, s);
+        let strategy = Strategy::DistributionOnly { error_rate: 0.02 };
+        assert!(capped.step_total(2.0, strategy) > free.step_total(2.0, strategy));
     }
 
     #[test]

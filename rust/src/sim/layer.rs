@@ -77,6 +77,9 @@ pub struct LayerSim {
     pub lookahead_overlap: bool,
     /// Price the speculative TEP scatter on top of overlap (ADR 003).
     pub speculative_scatter: bool,
+    /// Price the constrained-HBM regime (ADR 004): per-device byte budget
+    /// for expert weights; working-set overflow pays exposed refetch.
+    pub memory_cap_bytes: Option<f64>,
 }
 
 impl LayerSim {
@@ -91,6 +94,7 @@ impl LayerSim {
             hide_duplication: true,
             lookahead_overlap: false,
             speculative_scatter: false,
+            memory_cap_bytes: None,
         }
     }
 
@@ -107,6 +111,11 @@ impl LayerSim {
 
     pub fn with_speculative(mut self, on: bool) -> LayerSim {
         self.speculative_scatter = on;
+        self
+    }
+
+    pub fn with_memory_cap(mut self, cap_bytes: Option<f64>) -> LayerSim {
+        self.memory_cap_bytes = cap_bytes;
         self
     }
 
@@ -142,6 +151,7 @@ impl LayerSim {
         p.attention_compute_s = attention_compute_s;
         p.lookahead_overlap = self.lookahead_overlap;
         p.speculative_scatter = self.speculative_scatter;
+        p.memory_cap_bytes = self.memory_cap_bytes;
         moe::moe_cost(&self.model, &self.system, &p)
     }
 

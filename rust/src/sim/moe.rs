@@ -116,6 +116,14 @@ pub struct MoeParams {
     /// only the residue stays on the critical path. The gather is
     /// unchanged (it waits on every expert's output regardless).
     pub speculative_scatter: bool,
+    /// ADR 004: per-device HBM available for expert weights. When the
+    /// device's expert working set (home experts, plus the duplicated
+    /// replica for prediction strategies) exceeds this budget, the LRU
+    /// weight cache evicts between layer visits and the missing fraction
+    /// must be re-streamed each layer — demand-fetched at FFN time, after
+    /// the prewarm window has passed, so it is pure exposed transfer.
+    /// `None` (default) = unbounded, the pre-ADR-004 model.
+    pub memory_cap_bytes: Option<f64>,
 }
 
 impl MoeParams {
@@ -132,6 +140,7 @@ impl MoeParams {
             dop_balanced_comm: false,
             lookahead_overlap: false,
             speculative_scatter: false,
+            memory_cap_bytes: None,
         }
     }
 }
@@ -150,6 +159,37 @@ pub fn overlap_split(movement_raw: f64, overhead_raw: f64, window: f64) -> (f64,
     let exposed_overhead = (overhead_raw - window_left).max(0.0);
     let hidden = (movement_raw - exposed_movement) + (overhead_raw - exposed_overhead);
     (exposed_movement, exposed_overhead, hidden)
+}
+
+/// Exposed per-layer refetch charge under a device memory cap (ADR 004).
+///
+/// Per-device expert working set: `n_experts / n_devices` home experts
+/// per layer, plus one duplicated replica per layer for strategies that
+/// move experts (the paper's §5 one-expert-per-GPU-per-layer scale) —
+/// across all layers. When the cap cannot hold that set, an LRU weight
+/// cache thrashes: by the time a layer comes around again, the missing
+/// fraction of its weights was evicted and must be re-streamed over the
+/// interconnect before the FFN can run. The charge is the miss fraction
+/// times the time to move one layer's per-device expert weights — pure
+/// exposed transfer (demand-fetched at FFN time; the prewarm window
+/// already passed). Returns 0 when `cap` is `None` or the set fits.
+pub(crate) fn memory_pressure_refetch_s(
+    model: &ModelConfig,
+    system: &SystemSpec,
+    cap_bytes: Option<f64>,
+    duplicated: bool,
+) -> f64 {
+    let Some(cap) = cap_bytes else { return 0.0 };
+    let n = system.n_devices as f64;
+    let local_experts = (model.n_experts as f64 / n).max(1.0);
+    let replicas = if duplicated { 1.0 } else { 0.0 };
+    let per_layer_bytes = (local_experts + replicas) * model.expert_bytes();
+    let needed = model.n_layers as f64 * per_layer_bytes;
+    if cap.max(0.0) >= needed {
+        return 0.0;
+    }
+    let miss = 1.0 - (cap.max(0.0) / needed).clamp(0.0, 1.0);
+    miss * collective::p2p_time(&system.interconnect, per_layer_bytes)
 }
 
 /// Simulate the MoE stage (scatter → expert FFN → gather) of one layer.
@@ -241,6 +281,15 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
             }
         }
     }
+    // ADR 004: memory-pressure refetch is exposed for every strategy; the
+    // duplicated replica enlarges the prediction strategies' working set,
+    // so under a tight cap they pay more than the baseline.
+    cost.movement_s += memory_pressure_refetch_s(
+        model,
+        system,
+        p.memory_cap_bytes,
+        !matches!(p.strategy, Strategy::NoPrediction),
+    );
     cost
 }
 
@@ -514,6 +563,54 @@ mod tests {
         p.lookahead_overlap = true;
         p.attention_compute_s = 1.0;
         assert_eq!(moe_cost(&m, &s, &p), plain);
+    }
+
+    #[test]
+    fn memory_cap_charges_refetch_and_penalises_duplication() {
+        let (m, s) = mixtral_nvlink();
+        let base_needed =
+            m.n_layers as f64 * (m.n_experts as f64 / s.n_devices as f64) * m.expert_bytes();
+        // Roomy cap: everything fits, nothing changes for any strategy.
+        for strategy in [
+            Strategy::NoPrediction,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+            Strategy::TokenToExpert { accuracy: 0.9, overhead_s: 1e-4 },
+        ] {
+            let mut p = MoeParams::new(1, 512, 2.0, strategy);
+            let plain = moe_cost(&m, &s, &p);
+            p.memory_cap_bytes = Some(base_needed * 4.0);
+            assert_eq!(moe_cost(&m, &s, &p), plain, "{strategy:?}");
+        }
+        // Cap between the baseline and the duplicated working set: only
+        // the duplication strategies pay (their replica overflows).
+        let mut pb = MoeParams::new(1, 512, 2.0, Strategy::NoPrediction);
+        pb.memory_cap_bytes = Some(base_needed);
+        assert_eq!(moe_cost(&m, &s, &pb).movement_s, 0.0, "baseline fits");
+        let mut pd = MoeParams::new(
+            1,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        let unbounded = moe_cost(&m, &s, &pd);
+        pd.memory_cap_bytes = Some(base_needed);
+        let capped = moe_cost(&m, &s, &pd);
+        assert!(
+            capped.movement_s > unbounded.movement_s,
+            "duplication must pay exposed refetch under the cap"
+        );
+        assert!(capped.total() > unbounded.total());
+        // A tighter cap charges everyone, duplication still strictly more.
+        let tight = Some(base_needed * 0.5);
+        pb.memory_cap_bytes = tight;
+        pd.memory_cap_bytes = tight;
+        let base_refetch = moe_cost(&m, &s, &pb).movement_s;
+        let dop_refetch = moe_cost(&m, &s, &pd).movement_s;
+        assert!(base_refetch > 0.0);
+        assert!(dop_refetch > base_refetch);
+        // Refetch monotone in pressure: halving the cap can only cost more.
+        pd.memory_cap_bytes = Some(base_needed * 0.25);
+        assert!(moe_cost(&m, &s, &pd).movement_s > dop_refetch);
     }
 
     #[test]

@@ -89,6 +89,19 @@ impl Args {
         }
     }
 
+    /// Parse an optional byte size with a binary suffix, e.g.
+    /// `--memory-cap 24g`, `--prewarm-budget 1.5m`, `--memory-cap 4096`
+    /// (plain numbers are bytes; k/m/g/t are KiB/MiB/GiB/TiB, an optional
+    /// trailing `b`/`ib` is accepted). Returns `None` when absent.
+    pub fn opt_bytes(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => parse_byte_size(s)
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} expects a byte size (e.g. 24g, 512m, 4096), got `{s}`")),
+        }
+    }
+
     /// Parse a comma-separated list of floats, e.g. `--skews 1.0,1.4,2.0`.
     pub fn opt_f64_list(&self, name: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
         match self.opt(name) {
@@ -103,6 +116,25 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+/// Parse `"24g"` / `"512m"` / `"1.5m"` / `"4096"` into bytes (binary
+/// multipliers; optional trailing `b` or `ib` after the unit).
+pub fn parse_byte_size(s: &str) -> Result<u64, ()> {
+    let t = s.trim().to_ascii_lowercase();
+    let t = t.strip_suffix("ib").or_else(|| t.strip_suffix('b')).unwrap_or(&t);
+    let (digits, mult) = match t.chars().last() {
+        Some('k') => (&t[..t.len() - 1], 1024.0),
+        Some('m') => (&t[..t.len() - 1], 1024.0 * 1024.0),
+        Some('g') => (&t[..t.len() - 1], 1024.0 * 1024.0 * 1024.0),
+        Some('t') => (&t[..t.len() - 1], 1024.0 * 1024.0 * 1024.0 * 1024.0),
+        _ => (t, 1.0),
+    };
+    let v: f64 = digits.trim().parse().map_err(|_| ())?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(());
+    }
+    Ok((v * mult).round() as u64)
 }
 
 #[cfg(test)]
@@ -165,5 +197,28 @@ mod tests {
         assert!(a.opt_usize("n", 0).is_err());
         assert!(a.opt_f64("n", 0.0).is_err());
         assert!(a.opt_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_binary_suffixes() {
+        assert_eq!(parse_byte_size("4096"), Ok(4096));
+        assert_eq!(parse_byte_size("2k"), Ok(2048));
+        assert_eq!(parse_byte_size("1.5m"), Ok(1_572_864));
+        assert_eq!(parse_byte_size("24g"), Ok(24 * 1024 * 1024 * 1024));
+        assert_eq!(parse_byte_size("24GiB"), Ok(24 * 1024 * 1024 * 1024));
+        assert_eq!(parse_byte_size("512MB"), Ok(512 * 1024 * 1024));
+        assert_eq!(parse_byte_size(" 2T "), Ok(2_199_023_255_552));
+        assert!(parse_byte_size("oops").is_err());
+        assert!(parse_byte_size("-4k").is_err());
+        assert!(parse_byte_size("").is_err());
+    }
+
+    #[test]
+    fn opt_bytes_absent_none_bad_errors() {
+        let a = parse(&["serve", "--memory-cap", "256k"], &[]);
+        assert_eq!(a.opt_bytes("memory-cap").unwrap(), Some(262_144));
+        assert_eq!(a.opt_bytes("prewarm-budget").unwrap(), None);
+        let bad = parse(&["serve", "--memory-cap", "many"], &[]);
+        assert!(bad.opt_bytes("memory-cap").is_err());
     }
 }

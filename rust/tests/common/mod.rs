@@ -1,0 +1,35 @@
+//! Helpers shared by the serving integration-test binaries
+//! (`pipeline_parity.rs`, `residency.rs`): deterministic request rounds
+//! and the load-bearing bitwise output comparison every parity claim in
+//! the suite rests on.
+
+use moe_gps::coordinator::request::{Request, RequestGen};
+use moe_gps::runtime::HostTensor;
+
+/// Deterministic prefill rounds: `n_rounds` batches of `n_seqs`
+/// variable-length requests from a seeded generator.
+pub fn mk_rounds(seed: u64, n_rounds: usize, n_seqs: usize) -> Vec<Vec<Request>> {
+    let mut gen = RequestGen::new(seed, 512);
+    (0..n_rounds)
+        .map(|_| (0..n_seqs).map(|_| gen.request_varlen(8, 24)).collect())
+        .collect()
+}
+
+/// Assert two runs' per-round outputs are bitwise identical (shape and
+/// every f32 bit pattern), with a path to the first divergence.
+pub fn assert_bitwise_eq(a: &[Vec<HostTensor>], b: &[Vec<HostTensor>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what}: round {round} seq count");
+        for (seq, (ta, tb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(ta.shape, tb.shape, "{what}: round {round} seq {seq} shape");
+            for (i, (&x, &y)) in ta.data.iter().zip(&tb.data).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: round {round} seq {seq} elem {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}

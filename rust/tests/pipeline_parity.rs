@@ -18,6 +18,8 @@
 
 use std::collections::BTreeMap;
 
+mod common;
+use common::{assert_bitwise_eq, mk_rounds};
 use moe_gps::coordinator::request::{Request, RequestGen};
 use moe_gps::coordinator::router::route_sequence;
 use moe_gps::coordinator::{Coordinator, DecodeOptions, DecodeReport, ServeStrategy};
@@ -28,18 +30,11 @@ fn source() -> EngineSource {
     EngineSource::Synthetic(SyntheticSpec::small_test())
 }
 
-fn mk_rounds(seed: u64, n_rounds: usize, n_seqs: usize) -> Vec<Vec<Request>> {
-    let mut gen = RequestGen::new(seed, 512);
-    (0..n_rounds)
-        .map(|_| (0..n_seqs).map(|_| gen.request_varlen(8, 24)).collect())
-        .collect()
-}
-
 /// Serve the given rounds, returning the last round's metrics token
 /// counts and every round's outputs.
 fn serve_prefill(
     strategy: ServeStrategy,
-    lookahead: bool,
+    lookahead: usize,
     rounds: Vec<Vec<Request>>,
 ) -> (Vec<(usize, usize)>, Vec<Vec<HostTensor>>) {
     serve_prefill_spec(strategy, lookahead, false, rounds)
@@ -48,7 +43,7 @@ fn serve_prefill(
 /// [`serve_prefill`] with the ADR-003 speculative TEP scatter toggled.
 fn serve_prefill_spec(
     strategy: ServeStrategy,
-    lookahead: bool,
+    lookahead: usize,
     speculative: bool,
     rounds: Vec<Vec<Request>>,
 ) -> (Vec<(usize, usize)>, Vec<Vec<HostTensor>>) {
@@ -63,23 +58,6 @@ fn serve_prefill_spec(
         outputs.push(out);
     }
     (counts, outputs)
-}
-
-fn assert_bitwise_eq(a: &[Vec<HostTensor>], b: &[Vec<HostTensor>], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: round count");
-    for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
-        assert_eq!(ra.len(), rb.len(), "{what}: round {round} seq count");
-        for (seq, (ta, tb)) in ra.iter().zip(rb).enumerate() {
-            assert_eq!(ta.shape, tb.shape, "{what}: round {round} seq {seq} shape");
-            for (i, (&x, &y)) in ta.data.iter().zip(&tb.data).enumerate() {
-                assert_eq!(
-                    x.to_bits(),
-                    y.to_bits(),
-                    "{what}: round {round} seq {seq} elem {i}: {x} vs {y}"
-                );
-            }
-        }
-    }
 }
 
 /// Straight-line single-engine replay of the pre-refactor forward: embed
@@ -175,7 +153,7 @@ fn pipeline_matches_serial_oracle_bitwise() {
         ServeStrategy::DistributionOnly,
         ServeStrategy::TokenToExpert,
     ] {
-        for lookahead in [false, true] {
+        for lookahead in [0usize, 1, 2] {
             let (_, got) = serve_prefill(strategy, lookahead, rounds.clone());
             assert_bitwise_eq(
                 &oracle,
@@ -187,16 +165,16 @@ fn pipeline_matches_serial_oracle_bitwise() {
 }
 
 #[test]
-fn prefill_strategies_and_lookahead_agree_bitwise_with_equal_token_counts() {
+fn prefill_strategies_and_lookahead_depths_agree_bitwise_with_equal_token_counts() {
     let rounds = mk_rounds(7, 3, 4);
     let (base_counts, base_out) =
-        serve_prefill(ServeStrategy::NoPrediction, false, rounds.clone());
+        serve_prefill(ServeStrategy::NoPrediction, 0, rounds.clone());
     for strategy in [
         ServeStrategy::NoPrediction,
         ServeStrategy::DistributionOnly,
         ServeStrategy::TokenToExpert,
     ] {
-        for lookahead in [false, true] {
+        for lookahead in [0usize, 1, 2] {
             let (counts, out) = serve_prefill(strategy, lookahead, rounds.clone());
             assert_eq!(
                 counts, base_counts,
@@ -211,13 +189,13 @@ fn prefill_strategies_and_lookahead_agree_bitwise_with_equal_token_counts() {
     }
 }
 
-fn serve_decode(strategy: ServeStrategy, lookahead: bool) -> DecodeReport {
+fn serve_decode(strategy: ServeStrategy, lookahead: usize) -> DecodeReport {
     serve_decode_spec(strategy, lookahead, false)
 }
 
 fn serve_decode_spec(
     strategy: ServeStrategy,
-    lookahead: bool,
+    lookahead: usize,
     speculative: bool,
 ) -> DecodeReport {
     let mut coord = Coordinator::with_source(&source(), 4, strategy).unwrap();
@@ -256,7 +234,7 @@ fn decode_fingerprint(report: &DecodeReport) -> Vec<(usize, usize, usize, usize)
 fn speculative_scatter_matches_oracle_bitwise_and_accounts_slots() {
     let rounds = mk_rounds(59, 2, 3);
     let oracle = oracle_outputs(&rounds);
-    let (_, got) = serve_prefill_spec(ServeStrategy::TokenToExpert, true, true, rounds.clone());
+    let (_, got) = serve_prefill_spec(ServeStrategy::TokenToExpert, 1, true, rounds.clone());
     assert_bitwise_eq(&oracle, &got, "oracle vs TEP speculative");
 
     // Slot accounting: with speculation on, every routed slot is either
@@ -265,7 +243,7 @@ fn speculative_scatter_matches_oracle_bitwise_and_accounts_slots() {
     // predictor — neither perfect nor useless on top-2 routing).
     let mut coord =
         Coordinator::with_source(&source(), 4, ServeStrategy::TokenToExpert).unwrap();
-    coord.lookahead = true;
+    coord.lookahead = 1;
     coord.speculative = true;
     let (mut spec, mut repair, mut slots) = (0usize, 0usize, 0usize);
     for round in mk_rounds(59, 3, 3) {
@@ -287,7 +265,7 @@ fn speculative_scatter_matches_oracle_bitwise_and_accounts_slots() {
     let (m_off, _) = {
         let mut c =
             Coordinator::with_source(&source(), 4, ServeStrategy::TokenToExpert).unwrap();
-        c.lookahead = true;
+        c.lookahead = 1;
         let round = mk_rounds(59, 1, 3).pop().unwrap();
         c.serve_round(&round).unwrap()
     };
@@ -297,14 +275,14 @@ fn speculative_scatter_matches_oracle_bitwise_and_accounts_slots() {
 
 #[test]
 fn decode_strategies_and_lookahead_agree_on_the_whole_trajectory() {
-    let base = decode_fingerprint(&serve_decode(ServeStrategy::NoPrediction, false));
+    let base = decode_fingerprint(&serve_decode(ServeStrategy::NoPrediction, 0));
     assert!(!base.is_empty());
     for strategy in [
         ServeStrategy::NoPrediction,
         ServeStrategy::DistributionOnly,
         ServeStrategy::TokenToExpert,
     ] {
-        for lookahead in [false, true] {
+        for lookahead in [0usize, 1, 2] {
             let got = decode_fingerprint(&serve_decode(strategy, lookahead));
             assert_eq!(
                 got, base,
@@ -314,7 +292,7 @@ fn decode_strategies_and_lookahead_agree_on_the_whole_trajectory() {
     }
     // ADR 003: speculative scatter is a scheduling change only — the whole
     // greedy decode trajectory (hence every sampled token) is unchanged.
-    let spec = decode_fingerprint(&serve_decode_spec(ServeStrategy::TokenToExpert, true, true));
+    let spec = decode_fingerprint(&serve_decode_spec(ServeStrategy::TokenToExpert, 1, true));
     assert_eq!(spec, base, "speculative decode trajectory diverged");
 }
 
@@ -323,8 +301,8 @@ fn lookahead_accounts_transfers_and_never_invents_bytes() {
     // With lookahead on, the cold start must report hidden transfer bytes
     // (the acceptance check behind `serve --lookahead 1`), and the total
     // must stay consistent: hidden + exposed = total.
-    let mut totals: BTreeMap<bool, u64> = BTreeMap::new();
-    for lookahead in [false, true] {
+    let mut totals: BTreeMap<usize, u64> = BTreeMap::new();
+    for lookahead in [0usize, 1, 2] {
         let mut coord =
             Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
         coord.lookahead = lookahead;
@@ -341,7 +319,7 @@ fn lookahead_accounts_transfers_and_never_invents_bytes() {
             hidden += m.hidden_upload_bytes;
             total += m.upload_bytes;
         }
-        if lookahead {
+        if lookahead > 0 {
             assert!(hidden > 0, "lookahead must hide > 0 transfer bytes");
         } else {
             assert_eq!(hidden, 0, "without lookahead nothing is prewarmed");
@@ -351,5 +329,6 @@ fn lookahead_accounts_transfers_and_never_invents_bytes() {
     // The same weights move either way — lookahead changes *when*, not
     // *whether*. (Lookahead may prewarm replicas a later plan never uses,
     // so its total is allowed to be >= the lazy path's.)
-    assert!(totals[&true] >= totals[&false]);
+    assert!(totals[&1] >= totals[&0]);
+    assert!(totals[&2] >= totals[&0]);
 }

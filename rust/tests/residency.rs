@@ -1,0 +1,310 @@
+//! The ADR-004 residency subsystem, end to end: serving under a
+//! `--memory-cap` must evict real weights (engine-side, via
+//! `WorkerMsg::Evict`), keep the per-worker resident high-water mark
+//! under the cap, pay the refetch transfer it traded memory for — and
+//! change **nothing** about the numerics: capped serving is bitwise
+//! identical to unbounded serving across strategies, lookahead depths and
+//! prewarm budgets.
+
+mod common;
+use common::{assert_bitwise_eq, mk_rounds};
+use moe_gps::coordinator::request::{Request, RequestGen};
+use moe_gps::coordinator::{Coordinator, DecodeOptions, DecodeReport, ServeStrategy};
+use moe_gps::runtime::{EngineSource, HostTensor, SyntheticSpec};
+
+fn small() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::small_test())
+}
+
+fn tiny() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::tiny())
+}
+
+struct PrefillRun {
+    outputs: Vec<Vec<HostTensor>>,
+    evictions: u64,
+    refetch_bytes: u64,
+    high_water: u64,
+    upload_bytes: u64,
+    hidden_bytes: u64,
+    exposed_bytes: u64,
+}
+
+fn serve_prefill(
+    source: &EngineSource,
+    strategy: ServeStrategy,
+    lookahead: usize,
+    cap_replicas: Option<u64>,
+    prewarm_budget: Option<u64>,
+    rounds: Vec<Vec<Request>>,
+) -> PrefillRun {
+    let mut coord = Coordinator::with_source(source, 4, strategy).unwrap();
+    coord.lookahead = lookahead;
+    coord.prewarm_budget_bytes = prewarm_budget;
+    let replica = coord.residency().replica_bytes();
+    coord.set_memory_cap(cap_replicas.map(|n| n * replica));
+    let mut run = PrefillRun {
+        outputs: Vec::new(),
+        evictions: 0,
+        refetch_bytes: 0,
+        high_water: 0,
+        upload_bytes: 0,
+        hidden_bytes: 0,
+        exposed_bytes: 0,
+    };
+    for round in rounds {
+        let (m, out) = coord.serve_round(&round).unwrap();
+        assert_eq!(
+            m.hidden_upload_bytes + m.exposed_upload_bytes,
+            m.upload_bytes,
+            "hidden + exposed must equal total under any cap"
+        );
+        run.evictions += m.evictions;
+        run.refetch_bytes += m.refetch_upload_bytes;
+        run.high_water = run.high_water.max(m.resident_high_water_bytes);
+        run.upload_bytes += m.upload_bytes;
+        run.hidden_bytes += m.hidden_upload_bytes;
+        run.exposed_bytes += m.exposed_upload_bytes;
+        run.outputs.push(out);
+    }
+    run
+}
+
+/// The acceptance triple: evictions > 0, high-water ≤ cap, outputs
+/// bitwise identical to the unbounded run. Baseline strategy on the
+/// 2-layer model without lookahead: the pin window is one layer (2
+/// replicas per worker), the per-worker working set is 4, and the cap of
+/// 3 forces the LRU to cycle layers in and out every round.
+#[test]
+fn capped_prefill_is_bitwise_identical_with_real_evictions() {
+    let rounds = mk_rounds(101, 3, 3);
+    let unbounded = serve_prefill(
+        &small(),
+        ServeStrategy::NoPrediction,
+        0,
+        None,
+        None,
+        rounds.clone(),
+    );
+    assert_eq!(unbounded.evictions, 0, "no cap, no evictions");
+    assert_eq!(unbounded.refetch_bytes, 0);
+    assert!(unbounded.high_water > 0, "residency must be tracked");
+
+    let cap_replicas = 3u64;
+    let capped = serve_prefill(
+        &small(),
+        ServeStrategy::NoPrediction,
+        0,
+        Some(cap_replicas),
+        None,
+        rounds,
+    );
+    assert_bitwise_eq(&unbounded.outputs, &capped.outputs, "capped vs unbounded");
+    assert!(capped.evictions > 0, "the cap must evict");
+    assert!(capped.refetch_bytes > 0, "round 2+ must refetch evicted layers");
+    let coord = Coordinator::with_source(&small(), 4, ServeStrategy::NoPrediction).unwrap();
+    let replica = coord.residency().replica_bytes();
+    assert!(
+        capped.high_water <= cap_replicas * replica,
+        "high-water {} must stay under the cap {}",
+        capped.high_water,
+        cap_replicas * replica
+    );
+    assert!(
+        capped.high_water < unbounded.high_water,
+        "the cap must actually bound memory below the unbounded peak"
+    );
+    // The memory the cap saved was paid for in refetch transfer.
+    assert!(capped.upload_bytes > unbounded.upload_bytes);
+    assert_eq!(
+        capped.upload_bytes - unbounded.upload_bytes,
+        capped.refetch_bytes,
+        "every extra uploaded byte must be an accounted refetch"
+    );
+}
+
+/// Same acceptance under budgeted multi-step lookahead on the 4-layer
+/// model: the pin window spans two layers, the cap spans six replicas,
+/// and prewarm + dispatch admissions both hit the LRU. DOP replication
+/// exercises plan-driven placements; numerics must not move.
+#[test]
+fn capped_lookahead_prefill_matches_unbounded_bitwise() {
+    let rounds = mk_rounds(77, 3, 3);
+    let unbounded = serve_prefill(
+        &tiny(),
+        ServeStrategy::DistributionOnly,
+        1,
+        None,
+        None,
+        rounds.clone(),
+    );
+    let capped = serve_prefill(
+        &tiny(),
+        ServeStrategy::DistributionOnly,
+        1,
+        Some(6),
+        None,
+        rounds.clone(),
+    );
+    assert_bitwise_eq(&unbounded.outputs, &capped.outputs, "capped DOP lookahead");
+    assert!(capped.evictions > 0, "8 replicas/worker vs cap 6 must evict");
+    assert!(capped.upload_bytes >= unbounded.upload_bytes);
+
+    // Baseline strategy (fixed 2 replicas/worker/layer, pinned window of
+    // 2 layers = 4 < cap 6): the strict high-water guarantee holds.
+    let base_unbounded = serve_prefill(
+        &tiny(),
+        ServeStrategy::NoPrediction,
+        1,
+        None,
+        None,
+        rounds.clone(),
+    );
+    let base_capped = serve_prefill(
+        &tiny(),
+        ServeStrategy::NoPrediction,
+        1,
+        Some(6),
+        None,
+        rounds,
+    );
+    assert_bitwise_eq(
+        &base_unbounded.outputs,
+        &base_capped.outputs,
+        "capped baseline lookahead",
+    );
+    assert!(base_capped.evictions > 0);
+    let coord = Coordinator::with_source(&tiny(), 4, ServeStrategy::NoPrediction).unwrap();
+    let replica = coord.residency().replica_bytes();
+    assert!(
+        base_capped.high_water <= 6 * replica,
+        "lookahead high-water {} over cap {}",
+        base_capped.high_water,
+        6 * replica
+    );
+}
+
+/// A zero prewarm budget silences the prewarm stream entirely (nothing
+/// hides) without touching numerics; an unbudgeted run hides > 0.
+#[test]
+fn prewarm_budget_gates_hidden_transfer_not_numerics() {
+    let rounds = mk_rounds(55, 2, 3);
+    let free = serve_prefill(
+        &small(),
+        ServeStrategy::DistributionOnly,
+        1,
+        None,
+        None,
+        rounds.clone(),
+    );
+    assert!(free.hidden_bytes > 0, "unbudgeted lookahead must hide bytes");
+    let starved = serve_prefill(
+        &small(),
+        ServeStrategy::DistributionOnly,
+        1,
+        None,
+        Some(0),
+        rounds.clone(),
+    );
+    assert_eq!(starved.hidden_bytes, 0, "budget 0 must issue no prewarms");
+    assert_bitwise_eq(&free.outputs, &starved.outputs, "budget 0 vs unbudgeted");
+    // A one-replica-per-step budget lands in between: some prewarms issue
+    // (hidden > 0), and numerics still hold.
+    let coord =
+        Coordinator::with_source(&small(), 4, ServeStrategy::DistributionOnly).unwrap();
+    let replica = coord.residency().replica_bytes();
+    let trickle = serve_prefill(
+        &small(),
+        ServeStrategy::DistributionOnly,
+        1,
+        None,
+        Some(replica),
+        rounds,
+    );
+    assert!(trickle.hidden_bytes > 0);
+    // A starved budget can only skip prewarms, never add transfers — and
+    // unbudgeted lookahead may warm plan pairs dispatch never touches.
+    assert!(trickle.upload_bytes <= free.upload_bytes);
+    assert!(starved.upload_bytes <= trickle.upload_bytes);
+    assert_bitwise_eq(&free.outputs, &trickle.outputs, "trickle budget");
+}
+
+fn decode_run(cap_replicas: Option<u64>) -> (DecodeReport, u64) {
+    let mut coord =
+        Coordinator::with_source(&small(), 4, ServeStrategy::NoPrediction).unwrap();
+    let replica = coord.residency().replica_bytes();
+    coord.set_memory_cap(cap_replicas.map(|n| n * replica));
+    let mut gen = RequestGen::new(23, 512);
+    let requests: Vec<Request> = (0..4).map(|_| gen.decode_request(6, 5)).collect();
+    let report = coord
+        .serve_decode(requests, &DecodeOptions {
+            max_active: 3,
+            max_steps: 64,
+            temperature: 0.0, // greedy: fully deterministic
+            seed: 5,
+            arrival_interval: 0,
+        })
+        .unwrap();
+    (report, replica)
+}
+
+/// Greedy decode under a tight cap: identical token trajectory (the
+/// sampled tokens feed back into every later step, so any numeric drift
+/// would diverge it), evictions every revisit, high-water ≤ cap.
+#[test]
+fn capped_decode_trajectory_is_identical_and_bounded() {
+    let (free, replica) = decode_run(None);
+    let (capped, _) = decode_run(Some(3));
+    let fingerprint = |r: &DecodeReport| -> Vec<(usize, usize, usize, usize)> {
+        r.steps
+            .iter()
+            .map(|s| (s.step, s.n_prefill_tokens, s.n_decode_tokens, s.n_slots))
+            .collect()
+    };
+    assert!(!free.steps.is_empty());
+    assert_eq!(fingerprint(&free), fingerprint(&capped), "trajectory moved");
+    assert_eq!(free.total_evictions(), 0);
+    assert!(capped.total_evictions() > 0, "every step cycles the 2 layers");
+    assert!(capped.total_refetch_upload_bytes() > 0);
+    assert!(capped.resident_high_water_bytes() <= 3 * replica);
+    assert!(
+        capped.resident_high_water_bytes() < free.resident_high_water_bytes(),
+        "cap must bound decode residency below the unbounded peak"
+    );
+}
+
+/// Counter conservation at the report level: evictions and refetches are
+/// flows that reconcile with the upload accounting (a refetched byte is
+/// an uploaded byte), and an unbounded run reports strict zeros.
+#[test]
+fn residency_counters_conserve_across_a_run() {
+    let rounds = mk_rounds(31, 4, 2);
+    let capped = serve_prefill(
+        &small(),
+        ServeStrategy::NoPrediction,
+        0,
+        Some(3),
+        None,
+        rounds.clone(),
+    );
+    // Refetch bytes are a subset of all uploaded bytes…
+    assert!(capped.refetch_bytes <= capped.upload_bytes);
+    // …and each refetch re-uploads exactly one replica's bytes, so the
+    // flow is replica-granular.
+    let coord = Coordinator::with_source(&small(), 4, ServeStrategy::NoPrediction).unwrap();
+    let replica = coord.residency().replica_bytes();
+    assert_eq!(capped.refetch_bytes % replica, 0);
+    // Evictions outnumber (or equal) refetches: nothing is refetched that
+    // was not first evicted.
+    assert!(capped.evictions * replica >= capped.refetch_bytes);
+    let unbounded = serve_prefill(
+        &small(),
+        ServeStrategy::NoPrediction,
+        0,
+        None,
+        None,
+        rounds,
+    );
+    assert_eq!(unbounded.evictions, 0);
+    assert_eq!(unbounded.refetch_bytes, 0);
+}
