@@ -11,7 +11,7 @@ use moe_gps::gps::calibrate::{calibrate, CalibrationOptions};
 use moe_gps::gps::report;
 use moe_gps::model::ModelConfig;
 use moe_gps::predictor::neural::{MlpConfig, MlpPredictor};
-use moe_gps::predictor::TokenPredictor;
+use moe_gps::predictor::Predictor;
 use moe_gps::sim::SystemSpec;
 use moe_gps::trace::{datasets, Trace};
 
@@ -58,6 +58,6 @@ fn main() {
     let mut mlp = MlpPredictor::new(MlpConfig::default());
     mlp.fit(&train);
     b.run("mlp_predict_batch", || {
-        mlp.predict_batch(black_box(&test.batches[0]))
+        mlp.predict_topk(black_box(&test.batches[0]), 1)
     });
 }

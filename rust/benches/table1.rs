@@ -9,6 +9,7 @@ use moe_gps::gps::calibrate::calibrate_all;
 use moe_gps::gps::report;
 use moe_gps::model::ModelConfig;
 use moe_gps::predictor::distribution::DistributionEstimator;
+use moe_gps::predictor::Predictor;
 use moe_gps::sim::SystemSpec;
 use moe_gps::trace::{datasets, Trace};
 

@@ -1,0 +1,520 @@
+//! The online strategy controller (ADR 005): closes the GPS loop by
+//! re-making the DOP/TEP/speculative decision *while serving*, from
+//! measured metrics instead of launch-time assumptions.
+//!
+//! MoE-GPS's whole point is picking the optimal predictor design for a
+//! system configuration — but expert-load distributions drift over a
+//! serving lifetime, so a decision frozen at startup rots. Under
+//! `serve --adaptive` the coordinator consults this controller at every
+//! **replan boundary** (between prefill rounds; at the decode replan
+//! cadence): the rolling [`OnlineCalibrator`] fits the last window of
+//! `RoundMetrics`/`DecodeStepMetrics` into [`MeasuredConstants`], the
+//! controller re-prices the strategies through the *same*
+//! `gps::select::strategy_savings_in` path the static `advise` map uses
+//! (measured skew, measured effective bandwidth, measured share error),
+//! and — behind hysteresis, so a single noisy window never flips the
+//! serving engine — switches DOP↔TEP, toggles the speculative scatter,
+//! and adjusts the lookahead depth.
+//!
+//! **Determinism contract**: switches land only at layer-0 boundaries
+//! (never mid-forward), so given the realized decision trace the run is
+//! bitwise reproducible — and a controller whose decisions are pinned
+//! ([`ControllerConfig::pinned`]) serves bitwise identically to the fixed
+//! strategy (`tests/adaptive_gps.rs`). Every boundary's evaluation is
+//! recorded as a [`DecisionRecord`] whether or not it switched, so the
+//! decision trace in the report replays the whole control history.
+
+use crate::gps::calibrate::{calibrate_all, WorkloadCalibration};
+use crate::gps::online::{MeasuredConstants, OnlineCalibrator, WindowSample};
+use crate::gps::select::{recommend, Recommendation, Regime, ServePhase};
+use crate::model::ModelConfig;
+use crate::sim::hardware::SystemSpec;
+use crate::util::json::Value;
+
+use super::metrics::{DecodeStepMetrics, RoundMetrics};
+use super::server::ServeStrategy;
+
+/// Knobs for the control loop (`serve --adaptive`).
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Consecutive boundaries a candidate strategy must win (with margin)
+    /// before the switch lands — the hysteresis that keeps one noisy
+    /// window from thrashing the engine.
+    pub hysteresis: usize,
+    /// Minimum relative saving margin (vs the current strategy, as a
+    /// fraction of baseline latency) a challenger needs to count as a
+    /// win at a boundary.
+    pub margin_frac: f64,
+    /// Samples the calibrator window must hold before the first decision.
+    pub min_window: usize,
+    /// Rolling-window capacity (samples).
+    pub window: usize,
+    /// Record decisions but never apply them — the parity configuration
+    /// (adaptive-with-pinned-decision ≡ fixed-strategy, bitwise).
+    pub pinned: bool,
+    /// Sim model the decisions are priced on.
+    pub model: ModelConfig,
+    /// Baseline system spec; the measured effective bandwidth overrides
+    /// its interconnect when the window moved replica bytes.
+    pub system: SystemSpec,
+    /// Which phase's cost model prices the decision.
+    pub phase: ServePhase,
+    /// Workload shape handed to the pricing (batch, seq-or-context).
+    pub batch: usize,
+    pub seq_or_ctx: usize,
+    /// Realized top-k hit rate above which the speculative scatter is
+    /// worth its repair traffic (TEP only); below `spec_off_below` it is
+    /// switched back off.
+    pub spec_on_above: f64,
+    pub spec_off_below: f64,
+    /// Lookahead depth bounds the controller may move within. Depth goes
+    /// up when exposed transfer dominates the duplication traffic (the
+    /// window is too small), down when a shallower window already hides
+    /// everything. `min_lookahead` of 0 lets the controller leave a
+    /// launched no-overlap configuration alone until measurements argue
+    /// for prewarming; the CLI sets `max_lookahead` from `--lookahead`
+    /// so a user-chosen deeper window is never silently cut.
+    pub min_lookahead: usize,
+    pub max_lookahead: usize,
+    /// Seed for the offline calibration priors.
+    pub seed: u64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            hysteresis: 2,
+            margin_frac: 0.01,
+            min_window: 4,
+            window: 32,
+            pinned: false,
+            model: ModelConfig::mixtral_8x7b(),
+            system: SystemSpec::four_a100_nvlink(),
+            phase: ServePhase::Prefill,
+            batch: 1,
+            seq_or_ctx: 512,
+            spec_on_above: 0.5,
+            spec_off_below: 0.3,
+            min_lookahead: 0,
+            max_lookahead: 2,
+            seed: 7,
+        }
+    }
+}
+
+/// What the coordinator applies at a boundary when the controller
+/// switches: the full engine configuration, not a delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    pub strategy: ServeStrategy,
+    pub speculative: bool,
+    pub lookahead: usize,
+}
+
+/// One boundary's evaluation — recorded whether or not it switched, so
+/// the report's decision trace replays the whole control history.
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    /// Round index (prefill) or step index (decode) of the boundary.
+    pub boundary: usize,
+    pub from: ServeStrategy,
+    pub to: ServeStrategy,
+    pub speculative: bool,
+    pub lookahead: usize,
+    pub switched: bool,
+    /// The calibrated constants the decision was priced on.
+    pub measured: MeasuredConstants,
+    pub baseline_s: f64,
+    pub dop_saving_s: f64,
+    pub tep_saving_s: f64,
+    pub reason: String,
+}
+
+impl DecisionRecord {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("boundary", Value::Num(self.boundary as f64))
+            .set("from", Value::Str(self.from.name().into()))
+            .set("to", Value::Str(self.to.name().into()))
+            .set("speculative", Value::Bool(self.speculative))
+            .set("lookahead", Value::Num(self.lookahead as f64))
+            .set("switched", Value::Bool(self.switched))
+            .set("measured", self.measured.to_json())
+            .set("baseline_s", Value::Num(self.baseline_s))
+            .set("dop_saving_s", Value::Num(self.dop_saving_s))
+            .set("tep_saving_s", Value::Num(self.tep_saving_s))
+            .set("reason", Value::Str(self.reason.clone()));
+        v
+    }
+}
+
+/// The controller's contribution to the serve report: the decision trace
+/// plus the final calibrated constants.
+#[derive(Clone, Debug, Default)]
+pub struct ControllerReport {
+    pub decisions: Vec<DecisionRecord>,
+    pub final_strategy: String,
+    pub calibrated: Option<MeasuredConstants>,
+}
+
+impl ControllerReport {
+    pub fn switch_count(&self) -> usize {
+        self.decisions.iter().filter(|d| d.switched).count()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set(
+            "decisions",
+            Value::Arr(self.decisions.iter().map(DecisionRecord::to_json).collect()),
+        )
+        .set("final_strategy", Value::Str(self.final_strategy.clone()))
+        .set(
+            "calibrated",
+            match &self.calibrated {
+                Some(c) => c.to_json(),
+                None => Value::Null,
+            },
+        )
+        .set("switches", Value::Num(self.switch_count() as f64));
+        v
+    }
+}
+
+/// The online controller itself. Owns the rolling calibrator and the
+/// offline calibration priors (predictor accuracy↔overhead fits, which
+/// measurement cannot re-derive online — the measured constants override
+/// everything the live loop *can* observe: skew, bandwidth, share error).
+pub struct StrategyController {
+    pub cfg: ControllerConfig,
+    calibrator: OnlineCalibrator,
+    cals: Vec<WorkloadCalibration>,
+    /// Challenger strategy + how many consecutive boundaries it has won.
+    pending: Option<(ServeStrategy, usize)>,
+    decisions: Vec<DecisionRecord>,
+}
+
+impl StrategyController {
+    /// Build a controller; runs the fast offline calibration once to get
+    /// the accuracy↔overhead priors the measured constants refine.
+    pub fn new(cfg: ControllerConfig) -> StrategyController {
+        let cals = calibrate_all(&cfg.model, &cfg.system, true, cfg.seed);
+        StrategyController::with_cals(cfg, cals)
+    }
+
+    /// Build with precomputed calibration priors (tests, repeated runs).
+    pub fn with_cals(
+        cfg: ControllerConfig,
+        cals: Vec<WorkloadCalibration>,
+    ) -> StrategyController {
+        StrategyController {
+            calibrator: OnlineCalibrator::new(cfg.window),
+            cfg,
+            cals,
+            pending: None,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Feed one prefill round's metrics into the window.
+    pub fn observe_round(&mut self, m: &RoundMetrics) {
+        self.calibrator.push(WindowSample::from(m));
+    }
+
+    /// Feed one decode step's metrics into the window.
+    pub fn observe_step(&mut self, m: &DecodeStepMetrics) {
+        self.calibrator.push(WindowSample::from(m));
+    }
+
+    /// Feed a raw sample (tests, replayed traces).
+    pub fn observe_sample(&mut self, s: WindowSample) {
+        self.calibrator.push(s);
+    }
+
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+
+    /// The report block for `metrics.rs`.
+    pub fn report(&self, final_strategy: ServeStrategy) -> ControllerReport {
+        ControllerReport {
+            decisions: self.decisions.clone(),
+            final_strategy: final_strategy.name().to_string(),
+            calibrated: self.calibrator.constants(),
+        }
+    }
+
+    /// Evaluate one replan boundary. Returns the decision the coordinator
+    /// should apply, or `None` while the window is too thin, the winner
+    /// is already serving, hysteresis is still counting, or the
+    /// controller is pinned. Always appends a [`DecisionRecord`] once the
+    /// window is thick enough, so the trace shows every evaluation.
+    pub fn decide(
+        &mut self,
+        boundary: usize,
+        current: ServeStrategy,
+        speculative: bool,
+        lookahead: usize,
+        regime: Regime,
+    ) -> Option<Decision> {
+        if self.calibrator.len() < self.cfg.min_window {
+            return None;
+        }
+        let measured = self.calibrator.constants()?;
+        let cmp = measured.savings(
+            self.cfg.phase,
+            &self.cfg.model,
+            &self.cfg.system,
+            &self.cals,
+            self.cfg.batch,
+            self.cfg.seq_or_ctx,
+            regime,
+        );
+        let winner = match recommend(&cmp) {
+            Recommendation::DistributionOnly => ServeStrategy::DistributionOnly,
+            Recommendation::TokenToExpert => ServeStrategy::TokenToExpert,
+            Recommendation::NoPrediction => ServeStrategy::NoPrediction,
+        };
+        let saving_of = |s: ServeStrategy| match s {
+            ServeStrategy::NoPrediction => 0.0,
+            ServeStrategy::DistributionOnly => cmp.dop_saving_s,
+            ServeStrategy::TokenToExpert => cmp.tep_best_saving_s,
+        };
+        let margin = (saving_of(winner) - saving_of(current)) / cmp.baseline_s.max(1e-12);
+        let challenger = winner != current && margin >= self.cfg.margin_frac;
+
+        // Hysteresis: the same challenger must win `hysteresis`
+        // consecutive boundaries before the switch lands.
+        let streak = match (&self.pending, challenger) {
+            (Some((cand, n)), true) if *cand == winner => n + 1,
+            (_, true) => 1,
+            (_, false) => 0,
+        };
+        self.pending = if challenger { Some((winner, streak)) } else { None };
+        let switch = challenger && streak >= self.cfg.hysteresis && !self.cfg.pinned;
+
+        let strategy = if switch { winner } else { current };
+        // Speculation rides TEP + lookahead; gate it on the *realized*
+        // top-k hit rate so a predictor that stopped confirming stops
+        // paying repair traffic.
+        let new_spec = if strategy == ServeStrategy::TokenToExpert {
+            match measured.tep_topk_hit {
+                Some(hit) if hit >= self.cfg.spec_on_above => true,
+                Some(hit) if hit < self.cfg.spec_off_below => false,
+                _ => speculative,
+            }
+        } else {
+            false
+        };
+        // Lookahead depth: deepen while exposed transfer dominates the
+        // duplication traffic; never leave the configured bounds. Only
+        // strategies that duplicate (and therefore transfer) care — the
+        // baseline keeps whatever depth it was launched with.
+        let mut new_lookahead = lookahead;
+        if strategy != ServeStrategy::NoPrediction {
+            new_lookahead =
+                new_lookahead.clamp(self.cfg.min_lookahead, self.cfg.max_lookahead);
+            // `upload_bytes > 0` rather than a measured bandwidth: a
+            // no-lookahead window moves bytes only as cold uploads inside
+            // `Run`, which carry no transfer-stall seconds — exactly the
+            // case where deepening helps most.
+            if measured.upload_bytes > 0.0
+                && measured.hidden_frac < 0.5
+                && new_lookahead < self.cfg.max_lookahead
+            {
+                new_lookahead += 1;
+            } else if measured.upload_bytes > 0.0
+                && measured.hidden_frac > 0.95
+                && new_lookahead > self.cfg.min_lookahead
+            {
+                new_lookahead -= 1;
+            }
+        }
+        if new_spec {
+            new_lookahead = new_lookahead.max(1);
+        }
+
+        let changed = switch
+            || (!self.cfg.pinned
+                && (new_spec != speculative || new_lookahead != lookahead));
+        let (to, spec_out, depth_out) = if self.cfg.pinned {
+            (current, speculative, lookahead)
+        } else {
+            (strategy, new_spec, new_lookahead)
+        };
+        self.decisions.push(DecisionRecord {
+            boundary,
+            from: current,
+            to,
+            speculative: spec_out,
+            lookahead: depth_out,
+            switched: switch,
+            measured,
+            baseline_s: cmp.baseline_s,
+            dop_saving_s: cmp.dop_saving_s,
+            tep_saving_s: cmp.tep_best_saving_s,
+            reason: if switch {
+                format!(
+                    "{} wins by {:.1}% of baseline at measured skew {:.2} \
+                     (streak {streak}/{})",
+                    winner.name(),
+                    margin * 100.0,
+                    cmp.skewness,
+                    self.cfg.hysteresis
+                )
+            } else if challenger {
+                format!(
+                    "{} challenging ({}/{} boundaries, margin {:.1}%)",
+                    winner.name(),
+                    streak,
+                    self.cfg.hysteresis,
+                    margin * 100.0
+                )
+            } else {
+                format!("{} holds (margin {:.1}%)", current.name(), margin * 100.0)
+            },
+        });
+        if changed {
+            Some(Decision {
+                strategy: to,
+                speculative: spec_out,
+                lookahead: depth_out,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gps::online::WindowSample;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            min_window: 2,
+            hysteresis: 2,
+            margin_frac: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn skew_sample(skew: f64) -> WindowSample {
+        WindowSample {
+            tokens: 64.0,
+            total_s: 0.5,
+            routing_skew: skew,
+            pred_share_l1: 0.02,
+            pred_share_layers: 2.0,
+            ..Default::default()
+        }
+    }
+
+    /// Cheap priors so unit tests never run the full calibration.
+    fn test_controller(cfg: ControllerConfig) -> StrategyController {
+        let cals = crate::gps::calibrate::calibrate_all(
+            &cfg.model,
+            &cfg.system,
+            true,
+            cfg.seed,
+        );
+        StrategyController::with_cals(cfg, cals)
+    }
+
+    #[test]
+    fn no_decision_below_min_window() {
+        let mut c = test_controller(cfg());
+        c.observe_sample(skew_sample(2.0));
+        assert!(c
+            .decide(
+                1,
+                ServeStrategy::DistributionOnly,
+                false,
+                1,
+                Regime::default()
+            )
+            .is_none());
+        assert!(c.decisions().is_empty(), "thin window records nothing");
+    }
+
+    #[test]
+    fn pinned_controller_never_switches_but_records() {
+        let mut c = test_controller(ControllerConfig {
+            pinned: true,
+            ..cfg()
+        });
+        for _ in 0..6 {
+            c.observe_sample(skew_sample(4.0));
+        }
+        for b in 1..4 {
+            let d = c.decide(
+                b,
+                ServeStrategy::NoPrediction,
+                false,
+                0,
+                Regime::default(),
+            );
+            assert!(d.is_none(), "pinned must never ask for a change");
+        }
+        assert_eq!(c.decisions().len(), 3, "every boundary recorded");
+        assert!(c.decisions().iter().all(|d| !d.switched));
+        assert!(c
+            .decisions()
+            .iter()
+            .all(|d| d.to == ServeStrategy::NoPrediction));
+    }
+
+    #[test]
+    fn hysteresis_delays_the_flip() {
+        // High measured skew on NVLink: prediction strongly beats the
+        // no-prediction baseline, so the controller wants to switch away
+        // from NoPrediction — but only after `hysteresis` boundaries.
+        let mut c = test_controller(cfg());
+        for _ in 0..4 {
+            c.observe_sample(skew_sample(3.0));
+        }
+        let first = c.decide(
+            1,
+            ServeStrategy::NoPrediction,
+            false,
+            1,
+            Regime::default(),
+        );
+        assert!(first.is_none(), "streak 1 < hysteresis 2");
+        let second = c.decide(
+            2,
+            ServeStrategy::NoPrediction,
+            false,
+            1,
+            Regime::default(),
+        );
+        let d = second.expect("streak reached hysteresis");
+        assert_ne!(d.strategy, ServeStrategy::NoPrediction);
+        assert_eq!(c.decisions().len(), 2);
+        assert!(!c.decisions()[0].switched);
+        assert!(c.decisions()[1].switched);
+    }
+
+    #[test]
+    fn report_carries_trace_and_constants() {
+        let mut c = test_controller(cfg());
+        for _ in 0..3 {
+            c.observe_sample(skew_sample(2.0));
+        }
+        c.decide(
+            1,
+            ServeStrategy::DistributionOnly,
+            false,
+            1,
+            Regime::default(),
+        );
+        let rep = c.report(ServeStrategy::DistributionOnly);
+        assert_eq!(rep.decisions.len(), 1);
+        assert_eq!(rep.final_strategy, "distribution-only");
+        assert!(rep.calibrated.is_some());
+        let json = rep.to_json();
+        assert!(json.get("decisions").is_some());
+        assert!(json.get("switches").is_some());
+    }
+}

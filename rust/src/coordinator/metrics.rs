@@ -1,8 +1,51 @@
 //! Serving metrics: per-round phase timings, per-worker load, and the
 //! aggregate report the E2E example prints (latency / throughput /
-//! imbalance — the quantities the paper's evaluation is about).
+//! imbalance — the quantities the paper's evaluation is about). Reports
+//! also serialize to the `moe-gps/serve-report/v1` JSON schema (ADR 005)
+//! carrying the measured constants, the fit-vs-holdout calibration check
+//! and the controller decision trace that `advise --from-serve` consumes.
 
+use super::controller::ControllerReport;
+use crate::gps::online::{calibration_check, OnlineCalibrator, WindowSample};
+use crate::util::json::Value;
 use crate::util::stats;
+
+/// Schema tag of the serve-report JSON (`serve --report`).
+pub const REPORT_SCHEMA: &str = "moe-gps/serve-report/v1";
+
+/// Run-level context recorded into the report: which serving phase and
+/// engine regime produced the measurements (what `advise --from-serve`
+/// prices the calibrated guideline map under).
+#[derive(Clone, Debug, Default)]
+pub struct ReportMeta {
+    /// "prefill" | "decode".
+    pub phase: String,
+    pub workers: usize,
+    pub lookahead: usize,
+    pub speculative: bool,
+    pub memory_cap_bytes: Option<u64>,
+    /// Whether the online strategy controller was driving (`--adaptive`).
+    pub adaptive: bool,
+}
+
+impl ReportMeta {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("phase", Value::Str(self.phase.clone()))
+            .set("workers", Value::Num(self.workers as f64))
+            .set("lookahead", Value::Num(self.lookahead as f64))
+            .set("speculative", Value::Bool(self.speculative))
+            .set(
+                "memory_cap_bytes",
+                match self.memory_cap_bytes {
+                    Some(b) => Value::Num(b as f64),
+                    None => Value::Null,
+                },
+            )
+            .set("adaptive", Value::Bool(self.adaptive));
+        v
+    }
+}
 
 /// Metrics for one serving round.
 #[derive(Clone, Debug, Default)]
@@ -59,6 +102,23 @@ pub struct RoundMetrics {
     /// Peak per-worker resident replica bytes (the `--memory-cap`
     /// acceptance number: ≤ the cap whenever no pinned overflow occurred).
     pub resident_high_water_bytes: u64,
+    /// Routed slots that carried a per-token prediction (TEP) — the
+    /// top-k hit rate's denominator (ADR 005).
+    pub pred_slots: usize,
+    /// Tokens that carried a prediction — the top-1 denominator, so the
+    /// realized argmax accuracy matches the offline harness's per-token
+    /// definition.
+    pub pred_tokens: usize,
+    /// Slots whose routed expert appeared anywhere in the predicted
+    /// top-k set.
+    pub pred_topk_hits: usize,
+    /// Tokens whose routed expert set contained the predictor argmax.
+    pub pred_top1_hits: usize,
+    /// Mean per-layer L1 error between predicted and routed per-expert
+    /// shares (DOP + TEP; the live Table-1 metric — ADR 005).
+    pub pred_share_l1: f64,
+    /// Layers that carried predicted counts (0 under NoPrediction).
+    pub pred_share_layers: usize,
 }
 
 impl RoundMetrics {
@@ -91,6 +151,10 @@ impl RoundMetrics {
 pub struct ServeReport {
     pub strategy: String,
     pub rounds: Vec<RoundMetrics>,
+    /// Decision trace + calibrated snapshots when `--adaptive` drove the
+    /// run (ADR 005).
+    pub controller: Option<ControllerReport>,
+    pub meta: ReportMeta,
 }
 
 impl ServeReport {
@@ -189,8 +253,72 @@ impl ServeReport {
             .unwrap_or(0)
     }
 
+    pub fn total_pred_slots(&self) -> usize {
+        self.rounds.iter().map(|r| r.pred_slots).sum()
+    }
+
+    /// Realized top-k set hit rate over the run (TEP only; `None` when no
+    /// slot carried a prediction) — the live counterpart of the
+    /// calibration harness's top-k accuracy (ADR 005).
+    pub fn realized_topk_hit_rate(&self) -> Option<f64> {
+        let slots = self.total_pred_slots();
+        if slots == 0 {
+            return None;
+        }
+        let hits: usize = self.rounds.iter().map(|r| r.pred_topk_hits).sum();
+        Some(hits as f64 / slots as f64)
+    }
+
+    /// Realized argmax accuracy over the run (TEP only) — per token,
+    /// so it is directly comparable with the offline harness's `top1`.
+    pub fn realized_top1_rate(&self) -> Option<f64> {
+        let tokens: usize = self.rounds.iter().map(|r| r.pred_tokens).sum();
+        if tokens == 0 {
+            return None;
+        }
+        let hits: usize = self.rounds.iter().map(|r| r.pred_top1_hits).sum();
+        Some(hits as f64 / tokens as f64)
+    }
+
+    /// Mean predicted-vs-routed share L1 across rounds that carried
+    /// predicted counts (DOP + TEP) — the live Table-1 error rate.
+    pub fn mean_pred_share_l1(&self) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .rounds
+            .iter()
+            .filter(|r| r.pred_share_layers > 0)
+            .map(|r| r.pred_share_l1)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(stats::mean(&xs))
+        }
+    }
+
+    pub fn mean_routing_skew(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().map(|r| r.routing_skew).collect();
+        stats::mean(&xs)
+    }
+
+    /// Serialize to the `moe-gps/serve-report/v1` schema: run meta +
+    /// aggregates + per-round calibration samples + the fitted measured
+    /// constants + the fit-vs-holdout check + the controller trace — the
+    /// file `advise --from-serve` renders the measured guideline map from.
+    pub fn to_json(&self) -> Value {
+        let samples: Vec<WindowSample> = self.rounds.iter().map(WindowSample::from).collect();
+        report_json(
+            &self.meta,
+            &self.strategy,
+            self.throughput(),
+            self.total_tokens(),
+            &samples,
+            self.controller.as_ref(),
+        )
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "strategy={:<18} rounds={:<3} tokens={:<6} throughput={:>9.1} tok/s  \
              mean latency={}  p95={}  ffn wall={}  slot imbalance={:.3}  \
              busy imbalance={:.3}  dup transfer={} (hidden {} / exposed {})  \
@@ -215,7 +343,22 @@ impl ServeReport {
             self.total_evictions(),
             crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
-        )
+        );
+        if let Some(hit) = self.realized_topk_hit_rate() {
+            s.push_str(&format!("  pred top-k hit={:.3}", hit));
+        }
+        if let Some(l1) = self.mean_pred_share_l1() {
+            s.push_str(&format!("  share L1={:.3}", l1));
+        }
+        if let Some(c) = &self.controller {
+            s.push_str(&format!(
+                "  adaptive: {} decisions / {} switches -> {}",
+                c.decisions.len(),
+                c.switch_count(),
+                c.final_strategy
+            ));
+        }
+        s
     }
 }
 
@@ -269,6 +412,18 @@ pub struct DecodeStepMetrics {
     pub refetch_upload_bytes: u64,
     /// Peak per-worker resident replica bytes.
     pub resident_high_water_bytes: u64,
+    /// Routed slots that carried a per-token prediction (ADR 005).
+    pub pred_slots: usize,
+    /// Tokens that carried a prediction (top-1 denominator).
+    pub pred_tokens: usize,
+    /// Slots whose routed expert appeared in the predicted top-k set.
+    pub pred_topk_hits: usize,
+    /// Tokens whose routed expert set contained the predictor argmax.
+    pub pred_top1_hits: usize,
+    /// Mean per-layer L1 error between predicted and routed shares.
+    pub pred_share_l1: f64,
+    /// Layers that carried predicted counts this step.
+    pub pred_share_layers: usize,
 }
 
 impl DecodeStepMetrics {
@@ -295,6 +450,10 @@ impl DecodeStepMetrics {
 pub struct DecodeReport {
     pub strategy: String,
     pub steps: Vec<DecodeStepMetrics>,
+    /// Decision trace + calibrated snapshots when `--adaptive` drove the
+    /// run (ADR 005).
+    pub controller: Option<ControllerReport>,
+    pub meta: ReportMeta,
 }
 
 impl DecodeReport {
@@ -413,8 +572,68 @@ impl DecodeReport {
         self.steps.iter().filter(|s| s.replanned).count()
     }
 
+    pub fn total_pred_slots(&self) -> usize {
+        self.steps.iter().map(|s| s.pred_slots).sum()
+    }
+
+    /// Realized top-k set hit rate over the run (see [`ServeReport`]).
+    pub fn realized_topk_hit_rate(&self) -> Option<f64> {
+        let slots = self.total_pred_slots();
+        if slots == 0 {
+            return None;
+        }
+        let hits: usize = self.steps.iter().map(|s| s.pred_topk_hits).sum();
+        Some(hits as f64 / slots as f64)
+    }
+
+    /// Realized argmax accuracy over the run (per token — see
+    /// [`ServeReport::realized_top1_rate`]).
+    pub fn realized_top1_rate(&self) -> Option<f64> {
+        let tokens: usize = self.steps.iter().map(|s| s.pred_tokens).sum();
+        if tokens == 0 {
+            return None;
+        }
+        let hits: usize = self.steps.iter().map(|s| s.pred_top1_hits).sum();
+        Some(hits as f64 / tokens as f64)
+    }
+
+    /// Mean predicted-vs-routed share L1 across steps that carried
+    /// predicted counts.
+    pub fn mean_pred_share_l1(&self) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .steps
+            .iter()
+            .filter(|s| s.pred_share_layers > 0)
+            .map(|s| s.pred_share_l1)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(stats::mean(&xs))
+        }
+    }
+
+    pub fn mean_routing_skew(&self) -> f64 {
+        let xs: Vec<f64> = self.steps.iter().map(|s| s.routing_skew).collect();
+        stats::mean(&xs)
+    }
+
+    /// Serialize to the `moe-gps/serve-report/v1` schema (see
+    /// [`ServeReport::to_json`]).
+    pub fn to_json(&self) -> Value {
+        let samples: Vec<WindowSample> = self.steps.iter().map(WindowSample::from).collect();
+        report_json(
+            &self.meta,
+            &self.strategy,
+            self.decode_tokens_per_s(),
+            self.total_decode_tokens(),
+            &samples,
+            self.controller.as_ref(),
+        )
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "strategy={:<18} steps={:<4} decoded={:<6} throughput={:>8.1} tok/s  \
              steady={:>8.1} tok/s ({} steps)  mean step={}  p95={}  \
              slot imbalance={:.3}  replans={}  dup transfer={} \
@@ -440,8 +659,74 @@ impl DecodeReport {
             self.total_evictions(),
             crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
-        )
+        );
+        if let Some(hit) = self.realized_topk_hit_rate() {
+            s.push_str(&format!("  pred top-k hit={:.3}", hit));
+        }
+        if let Some(l1) = self.mean_pred_share_l1() {
+            s.push_str(&format!("  share L1={:.3}", l1));
+        }
+        if let Some(c) = &self.controller {
+            s.push_str(&format!(
+                "  adaptive: {} decisions / {} switches -> {}",
+                c.decisions.len(),
+                c.switch_count(),
+                c.final_strategy
+            ));
+        }
+        s
     }
+}
+
+/// Assemble the serve-report JSON shared by both report kinds: the
+/// rolling-window calibrator is replayed over the run's samples to fit
+/// the measured constants, and the first-half-fit / second-half-holdout
+/// check quantifies how well the fitted cost model predicts throughput it
+/// did not see (the CI drift gate's number).
+fn report_json(
+    meta: &ReportMeta,
+    strategy: &str,
+    tokens_per_s: f64,
+    tokens: usize,
+    samples: &[WindowSample],
+    controller: Option<&ControllerReport>,
+) -> Value {
+    let mut cal = OnlineCalibrator::new(samples.len().max(1));
+    for s in samples {
+        cal.push(s.clone());
+    }
+    let mut root = Value::obj();
+    root.set("schema", Value::Str(REPORT_SCHEMA.into()))
+        .set("meta", meta.to_json())
+        .set("strategy", Value::Str(strategy.into()))
+        .set("tokens", Value::Num(tokens as f64))
+        .set("tokens_per_s", Value::Num(tokens_per_s))
+        .set(
+            "measured",
+            match cal.constants() {
+                Some(c) => c.to_json(),
+                None => Value::Null,
+            },
+        )
+        .set(
+            "calibration_check",
+            match calibration_check(samples) {
+                Some(c) => c.to_json(),
+                None => Value::Null,
+            },
+        )
+        .set(
+            "controller",
+            match controller {
+                Some(c) => c.to_json(),
+                None => Value::Null,
+            },
+        )
+        .set(
+            "samples",
+            Value::Arr(samples.iter().map(WindowSample::to_json).collect()),
+        );
+    root
 }
 
 #[cfg(test)]
@@ -467,6 +752,7 @@ mod tests {
         let mut rep = ServeReport {
             strategy: "test".into(),
             rounds: Vec::new(),
+            ..Default::default()
         };
         for i in 1..=4 {
             rep.rounds.push(RoundMetrics {
@@ -488,6 +774,7 @@ mod tests {
         let mut rep = DecodeReport {
             strategy: "test".into(),
             steps: Vec::new(),
+            ..Default::default()
         };
         // Step 0: mixed prefill + decode; steps 1-2: pure decode.
         rep.steps.push(DecodeStepMetrics {
@@ -517,6 +804,7 @@ mod tests {
         let mut rep = DecodeReport {
             strategy: "test".into(),
             steps: Vec::new(),
+            ..Default::default()
         };
         for step in 0..2 {
             rep.steps.push(DecodeStepMetrics {
@@ -544,6 +832,7 @@ mod tests {
         let serve = ServeReport {
             strategy: "test".into(),
             rounds: vec![round],
+            ..Default::default()
         };
         assert_eq!(serve.total_hidden_upload_bytes(), 10);
         assert_eq!(serve.total_exposed_upload_bytes(), 0);
@@ -570,6 +859,7 @@ mod tests {
                     ..Default::default()
                 },
             ],
+            ..Default::default()
         };
         assert_eq!(serve.total_tile_allocs(), 5);
         assert_eq!(serve.total_tile_reuses(), 9);
@@ -587,6 +877,7 @@ mod tests {
                 spec_repair_slots: 1,
                 ..Default::default()
             }],
+            ..Default::default()
         };
         assert_eq!(decode.total_tile_allocs(), 2);
         assert_eq!(decode.total_tile_reuses(), 8);
@@ -615,6 +906,7 @@ mod tests {
                     ..Default::default()
                 },
             ],
+            ..Default::default()
         };
         assert_eq!(serve.total_evictions(), 5);
         assert_eq!(serve.total_refetch_upload_bytes(), 150);
@@ -638,6 +930,7 @@ mod tests {
                     ..Default::default()
                 },
             ],
+            ..Default::default()
         };
         assert_eq!(decode.total_evictions(), 1);
         assert_eq!(decode.total_refetch_upload_bytes(), 10);

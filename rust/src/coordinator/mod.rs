@@ -23,9 +23,11 @@
 //! reference backend otherwise — see `runtime`).
 
 pub mod batcher;
+pub mod controller;
 pub mod metrics;
 pub mod pipeline;
 pub mod placement_mgr;
+pub mod predict;
 pub mod request;
 pub mod residency;
 pub mod router;
@@ -35,6 +37,9 @@ pub mod tile_pool;
 pub mod worker;
 
 pub use batcher::Batcher;
+pub use controller::{
+    ControllerConfig, ControllerReport, Decision, DecisionRecord, StrategyController,
+};
 pub use metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 pub use request::Request;
 pub use residency::ResidencyManager;

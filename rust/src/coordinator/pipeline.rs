@@ -138,7 +138,29 @@ pub struct StageMetrics {
     pub refetch_upload_bytes: u64,
     /// Peak per-worker resident replica bytes seen so far (max, not sum).
     pub resident_high_water_bytes: u64,
+    /// Routed slots that carried a per-token prediction (TEP) — the
+    /// top-k hit rate's denominator (ADR 005).
+    pub pred_slots: usize,
+    /// Tokens that carried a prediction (= pred_slots / routed top_k) —
+    /// the top-1 denominator, so the realized argmax accuracy is
+    /// comparable with the offline harness's per-token `top1`.
+    pub pred_tokens: usize,
+    /// Slots whose routed expert appeared anywhere in the predicted
+    /// top-k set (the speculative-confirmation rule, measured even when
+    /// speculation is off).
+    pub pred_topk_hits: usize,
+    /// Tokens whose routed expert set contained the predictor argmax
+    /// (at most one routed slot per token can match rank 0, so this is
+    /// a per-token count).
+    pub pred_top1_hits: usize,
+    /// Mean per-layer L1 error between the plan's predicted per-expert
+    /// shares and the actually routed shares (the Table-1 metric,
+    /// measured live — feeds the online calibrator, ADR 005).
+    pub pred_share_l1: f64,
+    /// Layers that carried predicted counts (0 for NoPrediction).
+    pub pred_share_layers: usize,
     skews: Vec<f64>,
+    share_l1s: Vec<f64>,
 }
 
 impl StageMetrics {
@@ -163,12 +185,23 @@ impl StageMetrics {
             evictions: 0,
             refetch_upload_bytes: 0,
             resident_high_water_bytes: 0,
+            pred_slots: 0,
+            pred_tokens: 0,
+            pred_topk_hits: 0,
+            pred_top1_hits: 0,
+            pred_share_l1: 0.0,
+            pred_share_layers: 0,
             skews: Vec::new(),
+            share_l1s: Vec::new(),
         }
     }
 
     fn finish(&mut self) {
         self.routing_skew = stats::mean(&self.skews);
+        self.pred_share_layers = self.share_l1s.len();
+        if !self.share_l1s.is_empty() {
+            self.pred_share_l1 = stats::mean(&self.share_l1s);
+        }
     }
 
     /// Both metric families share the pipeline's field names; one body
@@ -195,6 +228,12 @@ impl StageMetrics {
         evictions: &mut u64,
         refetch_upload_bytes: &mut u64,
         resident_high_water_bytes: &mut u64,
+        pred_slots: &mut usize,
+        pred_tokens: &mut usize,
+        pred_topk_hits: &mut usize,
+        pred_top1_hits: &mut usize,
+        pred_share_l1: &mut f64,
+        pred_share_layers: &mut usize,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -221,6 +260,20 @@ impl StageMetrics {
         // A high-water mark is a peak, not a flow: max-assign.
         *resident_high_water_bytes =
             (*resident_high_water_bytes).max(self.resident_high_water_bytes);
+        *pred_slots += self.pred_slots;
+        *pred_tokens += self.pred_tokens;
+        *pred_topk_hits += self.pred_topk_hits;
+        *pred_top1_hits += self.pred_top1_hits;
+        // Layer-weighted merge: applying a second stage to the same
+        // metrics must not clobber the first stage's share error (the
+        // calibrator weights this mean by `pred_share_layers`).
+        let total_layers = *pred_share_layers + self.pred_share_layers;
+        if total_layers > 0 {
+            *pred_share_l1 = (*pred_share_l1 * *pred_share_layers as f64
+                + self.pred_share_l1 * self.pred_share_layers as f64)
+                / total_layers as f64;
+        }
+        *pred_share_layers = total_layers;
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -244,6 +297,12 @@ impl StageMetrics {
             &mut m.evictions,
             &mut m.refetch_upload_bytes,
             &mut m.resident_high_water_bytes,
+            &mut m.pred_slots,
+            &mut m.pred_tokens,
+            &mut m.pred_topk_hits,
+            &mut m.pred_top1_hits,
+            &mut m.pred_share_l1,
+            &mut m.pred_share_layers,
         );
     }
 
@@ -268,6 +327,12 @@ impl StageMetrics {
             &mut m.evictions,
             &mut m.refetch_upload_bytes,
             &mut m.resident_high_water_bytes,
+            &mut m.pred_slots,
+            &mut m.pred_tokens,
+            &mut m.pred_topk_hits,
+            &mut m.pred_top1_hits,
+            &mut m.pred_share_l1,
+            &mut m.pred_share_layers,
         );
     }
 }
@@ -343,7 +408,10 @@ impl Coordinator {
             }
             ServeStrategy::TokenToExpert => {
                 let tp = Instant::now();
-                let (counts, predictions) = self.predict_counts(hidden, n_real)?;
+                // The AOT TEP bridge (ADR 005): logits→ranked-top-k via
+                // the shared predictor-layer kernel (`coordinator::predict`).
+                let (counts, predictions) =
+                    self.tep.predict(&mut self.leader, hidden, n_real)?;
                 predictor_s = tp.elapsed().as_secs_f64();
                 predicted_experts = Some(predictions);
                 counts
@@ -478,6 +546,45 @@ impl Coordinator {
             metrics.skews.push(stats::skewness_of_counts(&actual_counts));
             metrics.n_slots += slots.len();
             metrics.router_s += t0.elapsed().as_secs_f64();
+
+            // Realized prediction quality (ADR 005): now that routing is
+            // settled, score the plan's predicted shares (DOP + TEP) and
+            // the per-token top-k sets (TEP) against what actually routed.
+            // These flow into metrics and feed the online calibrator the
+            // strategy controller re-decides from.
+            if !plans[layer].predicted_counts.is_empty() {
+                metrics
+                    .share_l1s
+                    .push(stats::l1_of_counts(&plans[layer].predicted_counts, &actual_counts));
+            }
+            if let Some(per_layer) = predictions {
+                let pl = &per_layer[layer];
+                // `slots` is emitted per sequence in token order, so a
+                // token's top_k routed slots are contiguous — `last_tok`
+                // counts each predicted token once (the top-1
+                // denominator; a token's routed experts are distinct, so
+                // at most one of its slots matches the argmax).
+                let mut last_tok: Option<(usize, usize)> = None;
+                for slot in &slots {
+                    let Some(ranked) = pl
+                        .get(slot.seq_idx)
+                        .and_then(|seq| seq.get(slot.token_idx))
+                    else {
+                        continue;
+                    };
+                    metrics.pred_slots += 1;
+                    if last_tok != Some((slot.seq_idx, slot.token_idx)) {
+                        metrics.pred_tokens += 1;
+                        last_tok = Some((slot.seq_idx, slot.token_idx));
+                    }
+                    if ranked.first() == Some(&slot.expert) {
+                        metrics.pred_top1_hits += 1;
+                    }
+                    if ranked.contains(&slot.expert) {
+                        metrics.pred_topk_hits += 1;
+                    }
+                }
+            }
 
             // Stage: dispatch + expert FFN + combine (settles only the
             // prewarms this layer's dispatch actually needs). Under
@@ -920,78 +1027,6 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Run the AOT Token-to-Expert predictor on every sequence's
-    /// embeddings (§3.1: before attention). Returns predicted slot counts
-    /// per (layer, expert) plus the ranked per-token top-k predictions
-    /// `[layer][seq][token][rank]` the speculative scatter confirms
-    /// against (rank 0 = predictor argmax). The router routes each token
-    /// to `top_k` experts, so the predictor forecasts the token's full
-    /// top-k set — one predicted slot per rank — rather than charging all
-    /// `top_k` slots to the argmax expert (the ADR-003 follow-up).
-    /// `hidden[i]` holds `≥ n_real[i]` embedded rows.
-    pub(crate) fn predict_counts(
-        &mut self,
-        hidden: &[HostTensor],
-        n_real: &[usize],
-    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<Vec<Vec<u8>>>>)> {
-        let e = self.dims.n_experts;
-        let n_layers = self.dims.n_layers;
-        let top_k = self.dims.top_k.min(e).max(1);
-        let mut counts = vec![vec![0usize; e]; n_layers];
-        let mut predicted: Vec<Vec<Vec<Vec<u8>>>> = (0..n_layers)
-            .map(|_| Vec::with_capacity(hidden.len()))
-            .collect();
-        let head_names: Vec<String> = (0..n_layers)
-            .map(|l| format!("predictor.head.{l}"))
-            .collect();
-        for (seq, &n) in hidden.iter().zip(n_real) {
-            let s_rows = seq.rows();
-            let mut ins: Vec<In<'_>> = vec![
-                In::T(seq),
-                In::W("predictor.w1"),
-                In::W("predictor.b1"),
-            ];
-            for name in &head_names {
-                ins.push(In::W(name));
-            }
-            let logits = self.leader.call("predictor", &ins)?.remove(0);
-            // logits [L, S, E]: top-k per (layer, real token). The
-            // comparator is a total order (total_cmp + index tie-break),
-            // so non-finite logits can never panic the hot path and the
-            // selected set is deterministic. Partial selection + sorting
-            // only the k winners keeps this timed path O(e) per token
-            // instead of a full O(e log e) sort; `order` is reused across
-            // tokens so the loop stays allocation-free bar the stored
-            // per-token rank vectors.
-            let mut order: Vec<usize> = Vec::with_capacity(e);
-            for l in 0..n_layers {
-                let mut seq_pred = Vec::with_capacity(n.min(s_rows));
-                for t in 0..n.min(s_rows) {
-                    let base = (l * s_rows + t) * e;
-                    let row = &logits.data[base..base + e];
-                    let desc = |a: &usize, b: &usize| {
-                        row[*b].total_cmp(&row[*a]).then(a.cmp(b))
-                    };
-                    order.clear();
-                    order.extend(0..e);
-                    if top_k < e {
-                        order.select_nth_unstable_by(top_k - 1, desc);
-                    }
-                    order[..top_k].sort_unstable_by(desc);
-                    let ranked: Vec<u8> = order[..top_k]
-                        .iter()
-                        .map(|&arg| {
-                            counts[l][arg] += 1;
-                            arg as u8
-                        })
-                        .collect();
-                    seq_pred.push(ranked);
-                }
-                predicted[l].push(seq_pred);
-            }
-        }
-        Ok((counts, predicted))
-    }
 }
 
 /// Per-token speculative dispatch targets for one layer: token
@@ -1489,8 +1524,16 @@ mod tests {
         s.evictions = 3;
         s.refetch_upload_bytes = 40;
         s.resident_high_water_bytes = 900;
+        s.pred_slots = 12;
+        s.pred_tokens = 6;
+        s.pred_topk_hits = 9;
+        s.pred_top1_hits = 5;
+        s.share_l1s.push(0.2);
+        s.share_l1s.push(0.4);
         s.skews.push(1.5);
         s.finish();
+        assert_eq!(s.pred_share_layers, 2);
+        assert!((s.pred_share_l1 - 0.3).abs() < 1e-12);
         let mut round = RoundMetrics {
             worker_busy_s: vec![0.0; 2],
             worker_slots: vec![0; 2],
@@ -1508,6 +1551,12 @@ mod tests {
         assert_eq!(round.evictions, 3);
         assert_eq!(round.refetch_upload_bytes, 40);
         assert_eq!(round.resident_high_water_bytes, 900);
+        assert_eq!(round.pred_slots, 12);
+        assert_eq!(round.pred_tokens, 6);
+        assert_eq!(round.pred_topk_hits, 9);
+        assert_eq!(round.pred_top1_hits, 5);
+        assert_eq!(round.pred_share_layers, 2);
+        assert!((round.pred_share_l1 - 0.3).abs() < 1e-12);
         // High-water is max-assigned, not summed: a second application
         // with a lower peak must not move it.
         let mut lower = StageMetrics::new(2);
@@ -1516,6 +1565,17 @@ mod tests {
         lower.apply_to_round(&mut round);
         assert_eq!(round.resident_high_water_bytes, 900);
         assert!((round.routing_skew - 1.5).abs() < 1e-12);
+        // A second stage with no share samples must not clobber the
+        // layer-weighted share error (latent-aggregation guard).
+        assert_eq!(round.pred_share_layers, 2);
+        assert!((round.pred_share_l1 - 0.3).abs() < 1e-12);
+        let mut more = StageMetrics::new(2);
+        more.share_l1s.push(0.6);
+        more.share_l1s.push(0.6);
+        more.finish();
+        more.apply_to_round(&mut round);
+        assert_eq!(round.pred_share_layers, 4);
+        assert!((round.pred_share_l1 - 0.45).abs() < 1e-12, "weighted merge");
         let mut step = DecodeStepMetrics {
             worker_busy_s: vec![0.0; 2],
             worker_slots: vec![0; 2],
@@ -1532,6 +1592,12 @@ mod tests {
         assert_eq!(step.evictions, 3);
         assert_eq!(step.refetch_upload_bytes, 40);
         assert_eq!(step.resident_high_water_bytes, 900);
+        assert_eq!(step.pred_slots, 12);
+        assert_eq!(step.pred_tokens, 6);
+        assert_eq!(step.pred_topk_hits, 9);
+        assert_eq!(step.pred_top1_hits, 5);
+        assert_eq!(step.pred_share_layers, 2);
+        assert!((step.pred_share_l1 - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //!   layer *before attention runs* (§3.1), giving Algorithm 1 exact
 //!   predicted counts and the dispatcher per-(expert, GPU) quotas.
 
+use super::predict::expected_counts;
 use crate::duplication::algorithm::{balance, BalanceResult};
 use crate::duplication::placement::Placement;
 use crate::predictor::distribution::DistributionEstimator;
+use crate::predictor::Predictor;
 
 /// Per-layer plan for one round.
 #[derive(Clone, Debug)]
@@ -101,34 +103,19 @@ impl PlacementManager {
         }
     }
 
-    /// DOP plan for a layer: expected counts = p̂ · total_slots.
+    /// DOP plan for a layer: expected counts = p̂ · total_slots, via the
+    /// unified predictor surface (`predict_distribution` + the shared
+    /// share→counts conversion in `coordinator::predict`, ADR 005).
     pub fn plan_distribution_only(&self, layer: usize, total_slots: usize) -> LayerPlan {
-        let probs = self.estimators[layer].mle();
-        let mut counts: Vec<usize> = probs
-            .iter()
-            .map(|p| (p * total_slots as f64).round() as usize)
-            .collect();
-        // Fix rounding so counts sum to total_slots (conservation).
-        let mut diff = total_slots as i64 - counts.iter().sum::<usize>() as i64;
-        let mut i = 0;
-        while diff != 0 && !counts.is_empty() {
-            let idx = i % counts.len();
-            if diff > 0 {
-                counts[idx] += 1;
-                diff -= 1;
-            } else if counts[idx] > 0 {
-                counts[idx] -= 1;
-                diff += 1;
-            }
-            i += 1;
-        }
-        self.plan_from_counts(&counts)
+        let probs = self.estimators[layer].predict_distribution();
+        self.plan_from_counts(&expected_counts(&probs, total_slots))
     }
 
     /// Feed observed routing back into the estimators (the moving average
-    /// keeps improving while serving — §3.2.1).
+    /// keeps improving while serving — §3.2.1) through the trait's
+    /// `observe` hook, fed from the pipeline's router-settle stage.
     pub fn observe(&mut self, layer: usize, actual_counts: &[usize]) {
-        self.estimators[layer].update(actual_counts);
+        self.estimators[layer].observe(actual_counts);
     }
 
     /// Whether the decode cadence rebuilds plans at `step`.

@@ -1,0 +1,163 @@
+//! The serving-side prediction stage (ADR 005): bridges the unified
+//! [`crate::predictor::Predictor`] surface onto the live pipeline.
+//!
+//! Both prediction families reach the planner through this module:
+//!
+//! * **Token-to-Expert** — [`TepHead`] runs the AOT-compiled predictor op
+//!   on every sequence's embeddings (§3.1: *before attention*) and
+//!   converts the logits into ranked per-token top-k sets plus
+//!   per-(layer, expert) slot counts, using the same
+//!   [`crate::predictor::rank_topk_f32`] kernel the offline zoo ranks
+//!   with. This used to be bespoke plumbing inside `pipeline.rs`; it now
+//!   lives beside the predictor layer it belongs to.
+//! * **Distribution-Only** — [`expected_counts`] converts a share
+//!   distribution (a [`crate::predictor::Predictor::predict_distribution`]
+//!   output) into expected per-expert slot counts for Algorithm 1,
+//!   conserving the slot total exactly.
+
+use anyhow::Result;
+
+use crate::predictor::rank_topk_f32;
+use crate::runtime::{Engine, HostTensor, In};
+
+/// The AOT Token-to-Expert predictor head: op + weight names plus the
+/// logits→top-k conversion. Holds no engine — the coordinator lends its
+/// leader engine per call, so the head stays borrow-free state.
+pub(crate) struct TepHead {
+    head_names: Vec<String>,
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+}
+
+impl TepHead {
+    pub(crate) fn new(n_layers: usize, n_experts: usize, top_k: usize) -> TepHead {
+        TepHead {
+            head_names: (0..n_layers)
+                .map(|l| format!("predictor.head.{l}"))
+                .collect(),
+            n_layers,
+            n_experts,
+            top_k: top_k.clamp(1, n_experts.max(1)),
+        }
+    }
+
+    /// Run the predictor on every sequence's embeddings. Returns predicted
+    /// slot counts per (layer, expert) plus the ranked per-token top-k
+    /// predictions `[layer][seq][token][rank]` the speculative scatter
+    /// confirms against (rank 0 = predictor argmax). The router routes
+    /// each token to `top_k` experts, so the predictor forecasts the
+    /// token's full top-k set — one predicted slot per rank — rather than
+    /// charging all `top_k` slots to the argmax expert (the ADR-003
+    /// follow-up). `hidden[i]` holds `≥ n_real[i]` embedded rows.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn predict(
+        &self,
+        leader: &mut Engine,
+        hidden: &[HostTensor],
+        n_real: &[usize],
+    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<Vec<Vec<u8>>>>)> {
+        let e = self.n_experts;
+        let n_layers = self.n_layers;
+        let top_k = self.top_k;
+        let mut counts = vec![vec![0usize; e]; n_layers];
+        let mut predicted: Vec<Vec<Vec<Vec<u8>>>> = (0..n_layers)
+            .map(|_| Vec::with_capacity(hidden.len()))
+            .collect();
+        // The rank buffer is reused across tokens so the timed loop stays
+        // allocation-free bar the stored per-token rank vectors.
+        let mut order: Vec<usize> = Vec::with_capacity(e);
+        for (seq, &n) in hidden.iter().zip(n_real) {
+            let s_rows = seq.rows();
+            let mut ins: Vec<In<'_>> = vec![
+                In::T(seq),
+                In::W("predictor.w1"),
+                In::W("predictor.b1"),
+            ];
+            for name in &self.head_names {
+                ins.push(In::W(name));
+            }
+            let logits = leader.call("predictor", &ins)?.remove(0);
+            // logits [L, S, E]: ranked top-k per (layer, real token) via
+            // the shared predictor-layer kernel (total order, O(e)/token).
+            for l in 0..n_layers {
+                let mut seq_pred = Vec::with_capacity(n.min(s_rows));
+                for t in 0..n.min(s_rows) {
+                    let base = (l * s_rows + t) * e;
+                    let row = &logits.data[base..base + e];
+                    let ranked: Vec<u8> = rank_topk_f32(row, top_k, &mut order)
+                        .iter()
+                        .map(|&arg| {
+                            counts[l][arg] += 1;
+                            arg as u8
+                        })
+                        .collect();
+                    seq_pred.push(ranked);
+                }
+                predicted[l].push(seq_pred);
+            }
+        }
+        Ok((counts, predicted))
+    }
+}
+
+/// Convert a per-expert share distribution into expected slot counts that
+/// sum to exactly `total_slots` (rounding drift is repaired by walking
+/// the experts round-robin) — the Distribution-Only half of the predict
+/// stage, shared by the placement manager's per-layer planning.
+pub fn expected_counts(probs: &[f64], total_slots: usize) -> Vec<usize> {
+    let mut counts: Vec<usize> = probs
+        .iter()
+        .map(|p| (p * total_slots as f64).round() as usize)
+        .collect();
+    let mut diff = total_slots as i64 - counts.iter().sum::<usize>() as i64;
+    let mut i = 0;
+    while diff != 0 && !counts.is_empty() {
+        let idx = i % counts.len();
+        if diff > 0 {
+            counts[idx] += 1;
+            diff -= 1;
+        } else if counts[idx] > 0 {
+            counts[idx] -= 1;
+            diff += 1;
+        }
+        i += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_counts_conserve_total() {
+        let probs = [0.5, 0.25, 0.125, 0.125];
+        for total in [0usize, 1, 7, 64, 513] {
+            let c = expected_counts(&probs, total);
+            assert_eq!(c.iter().sum::<usize>(), total, "total={total}");
+        }
+        // Rounding drift repaired: a distribution whose rounds overshoot.
+        let skewed = [0.334, 0.333, 0.333];
+        let c = expected_counts(&skewed, 100);
+        assert_eq!(c.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn expected_counts_track_shares() {
+        let probs = [0.75, 0.25];
+        let c = expected_counts(&probs, 400);
+        assert_eq!(c, vec![300, 100]);
+    }
+
+    #[test]
+    fn tep_head_names_cover_layers() {
+        let head = TepHead::new(3, 8, 2);
+        assert_eq!(head.head_names.len(), 3);
+        assert_eq!(head.head_names[2], "predictor.head.2");
+        assert_eq!(head.top_k, 2);
+        // top_k clamps into [1, e].
+        assert_eq!(TepHead::new(1, 4, 0).top_k, 1);
+        assert_eq!(TepHead::new(1, 4, 9).top_k, 4);
+    }
+}

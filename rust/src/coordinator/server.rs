@@ -31,14 +31,19 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
+use super::controller::{Decision, StrategyController};
+use super::metrics::{
+    DecodeReport, DecodeStepMetrics, ReportMeta, RoundMetrics, ServeReport,
+};
 use super::pipeline::{AttentionMode, StageMetrics};
 use super::placement_mgr::PlacementManager;
+use super::predict::TepHead;
 use super::request::Request;
 use super::residency::ResidencyManager;
 use super::scheduler::{Scheduler, SeqPhase};
 use super::tile_pool::TilePool;
 use super::worker::WorkerHandle;
+use crate::gps::select::Regime;
 use crate::runtime::tensor::IntTensor;
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
 use crate::util::rng::Rng;
@@ -172,6 +177,14 @@ pub struct Coordinator {
     /// steady-state serving gathers/pads/scatters with zero per-layer
     /// heap allocation; buffers recycle via the worker reply path.
     pub(crate) tiles: TilePool,
+    /// The AOT Token-to-Expert bridge (ADR 005): op/weight names + the
+    /// shared logits→top-k conversion (`coordinator::predict`).
+    pub(crate) tep: TepHead,
+    /// The online strategy controller (`serve --adaptive`, ADR 005):
+    /// consulted at replan boundaries, it can switch DOP↔TEP, toggle the
+    /// speculative scatter and adjust lookahead depth from measured
+    /// metrics. `None` = fixed-strategy serving (the default).
+    pub controller: Option<StrategyController>,
 }
 
 impl Coordinator {
@@ -250,6 +263,7 @@ impl Coordinator {
             n_workers,
         );
 
+        let tep = TepHead::new(dims.n_layers, dims.n_experts, dims.top_k);
         Ok(Coordinator {
             leader,
             workers,
@@ -264,6 +278,8 @@ impl Coordinator {
             prewarm_budget_bytes: None,
             speculative: false,
             tiles: TilePool::new(),
+            tep,
+            controller: None,
         })
     }
 
@@ -364,17 +380,83 @@ impl Coordinator {
         Ok((metrics, outputs))
     }
 
-    /// Serve many rounds and aggregate a report.
+    /// Serve many rounds and aggregate a report. With a controller
+    /// installed (`serve --adaptive`), every round boundary is a replan
+    /// (= layer-0) boundary where the strategy may be re-selected from
+    /// the measured window (ADR 005) — never mid-forward, so the run is
+    /// bitwise reproducible given the decision trace.
     pub fn serve(&mut self, rounds: Vec<Vec<Request>>) -> Result<ServeReport> {
         let mut report = ServeReport {
             strategy: self.strategy.name().to_string(),
-            rounds: Vec::new(),
+            ..Default::default()
         };
-        for round in rounds {
+        for (round_idx, round) in rounds.into_iter().enumerate() {
+            if round_idx > 0 {
+                self.consult_controller(round_idx);
+            }
             let (metrics, _) = self.serve_round(&round)?;
+            if let Some(ctrl) = self.controller.as_mut() {
+                ctrl.observe_round(&metrics);
+            }
             report.rounds.push(metrics);
         }
+        // Adaptive runs report the strategy they *ended* on; the decision
+        // trace in `controller` replays how it got there.
+        report.strategy = self.strategy.name().to_string();
+        report.controller = self.controller.as_ref().map(|c| c.report(self.strategy));
+        report.meta = self.report_meta("prefill");
         Ok(report)
+    }
+
+    /// The engine regime currently serving — what the controller prices
+    /// its calibrated savings under (ADR 005).
+    pub fn current_regime(&self) -> Regime {
+        Regime {
+            overlap: self.lookahead > 0,
+            speculative: self.speculative,
+            memory_cap_bytes: self.residency.cap_bytes().map(|b| b as f64),
+        }
+    }
+
+    /// Apply a controller decision. Only ever called at a layer-0
+    /// boundary: numerics stay deterministic given the decision trace.
+    pub fn apply_decision(&mut self, d: &Decision) {
+        self.strategy = d.strategy;
+        // Speculation rides TEP predictions + the lookahead pipeline.
+        self.speculative = d.speculative && d.strategy == ServeStrategy::TokenToExpert;
+        self.lookahead = d.lookahead;
+        if self.speculative {
+            self.lookahead = self.lookahead.max(1);
+        }
+        // Cached decode plans were built for the old regime; the next
+        // step replans fresh.
+        self.placement.reset_decode_plans();
+    }
+
+    fn consult_controller(&mut self, boundary: usize) {
+        // Take the controller out so `decide` can borrow coordinator
+        // state without aliasing it.
+        let Some(mut ctrl) = self.controller.take() else {
+            return;
+        };
+        let regime = self.current_regime();
+        if let Some(d) =
+            ctrl.decide(boundary, self.strategy, self.speculative, self.lookahead, regime)
+        {
+            self.apply_decision(&d);
+        }
+        self.controller = Some(ctrl);
+    }
+
+    fn report_meta(&self, phase: &str) -> ReportMeta {
+        ReportMeta {
+            phase: phase.into(),
+            workers: self.workers.len(),
+            lookahead: self.lookahead,
+            speculative: self.speculative,
+            memory_cap_bytes: self.residency.cap_bytes(),
+            adaptive: self.controller.is_some(),
+        }
     }
 
     /// Serve requests with continuous batching: admit up to
@@ -402,7 +484,7 @@ impl Coordinator {
         }
         let mut report = DecodeReport {
             strategy: self.strategy.name().to_string(),
-            steps: Vec::new(),
+            ..Default::default()
         };
         let mut sched = Scheduler::new(opts.max_active);
         // Cap prompts at the compiled prefill bucket up front, so the
@@ -437,13 +519,31 @@ impl Coordinator {
                 }
                 continue; // idle step waiting for the next arrival
             }
+            // Controller consultation runs on the replan cadence
+            // (`replan_interval` steps, the ADR-001 boundary) *uniformly
+            // for every strategy*: gating on `replans_at` would consult
+            // per step under TEP (which re-plans each step and never
+            // fills the DOP plan cache), making hysteresis asymmetrically
+            // twitchy and appending a DecisionRecord per step. Any step
+            // start is a layer-0 boundary, so numerics stay deterministic
+            // given the decision trace (ADR 005).
+            let cadence = self.placement.replan_interval.max(1);
+            if step > 0 && step % cadence == 0 {
+                self.consult_controller(step);
+            }
             let metrics =
                 self.decode_step(step, admitted, &mut sched, &mut sessions, opts, &mut rng)?;
+            if let Some(ctrl) = self.controller.as_mut() {
+                ctrl.observe_step(&metrics);
+            }
             report.steps.push(metrics);
             for id in sched.evict_finished() {
                 sessions.remove(&id);
             }
         }
+        report.strategy = self.strategy.name().to_string();
+        report.controller = self.controller.as_ref().map(|c| c.report(self.strategy));
+        report.meta = self.report_meta("decode");
         Ok(report)
     }
 

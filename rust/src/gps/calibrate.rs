@@ -13,7 +13,7 @@ use crate::predictor::markov::BigramModel;
 use crate::predictor::neural::{MlpConfig, MlpPredictor};
 use crate::predictor::overhead::{self, PredictorKind};
 use crate::predictor::probability::ProbabilityModel;
-use crate::predictor::{accuracy, TokenPredictor};
+use crate::predictor::{accuracy, Predictor};
 use crate::sim::hardware::SystemSpec;
 use crate::sim::moe::Strategy;
 use crate::sim::LayerSim;
@@ -25,6 +25,15 @@ use crate::util::stats;
 pub struct PredictorPoint {
     pub name: String,
     pub accuracy: f64,
+    /// Top-k set hit rate at the model's routed `top_k` (ADR 005): the
+    /// probability a routed slot's expert appears anywhere in the
+    /// predicted set — what the speculative scatter's confirm rate
+    /// realises at serve time.
+    pub topk_accuracy: f64,
+    /// L1 error between the predictor's share distribution and the test
+    /// trace's empirical shares (the Table-1 metric, scored for TEP
+    /// predictors too).
+    pub dist_l1: f64,
     pub overhead_s: f64,
     /// Overhead as a ratio to the baseline layer runtime (Figure 4's
     /// overhead axis).
@@ -117,7 +126,7 @@ pub fn calibrate(
         lr: 2e-3,
         seed: spec.seed ^ hidden as u64,
     };
-    let mut zoo: Vec<(Box<dyn TokenPredictor>, PredictorKind)> = vec![
+    let mut zoo: Vec<(Box<dyn Predictor>, PredictorKind)> = vec![
         (
             Box::new(ProbabilityModel::new()),
             PredictorKind::Probability,
@@ -141,9 +150,20 @@ pub fn calibrate(
     ];
 
     let mut points = Vec::new();
+    let k = model.top_k.clamp(1, spec.n_experts);
     for (predictor, kind) in zoo.iter_mut() {
+        // The Figure-4 zoo prices Token-to-Expert predictors; a DOP
+        // estimator slipping in would be scored through the broadcast
+        // fallback and silently mis-priced as a per-token classifier.
+        assert_eq!(
+            predictor.family(),
+            crate::predictor::PredictorFamily::TokenToExpert,
+            "calibration zoo entry {} is not a TEP predictor",
+            predictor.name()
+        );
         predictor.fit(&train);
-        let acc = accuracy::accuracy(predictor.as_ref(), &test);
+        let ev = accuracy::evaluate(predictor.as_ref(), &test, k);
+        let acc = ev.top1;
         let ovh = overhead::overhead_s(*kind, model, system, opts.batch, opts.seq);
         let perf = sim.normalized_performance(
             skew,
@@ -155,6 +175,8 @@ pub fn calibrate(
         points.push(PredictorPoint {
             name: predictor.name(),
             accuracy: acc,
+            topk_accuracy: ev.topk,
+            dist_l1: ev.dist_l1,
             overhead_s: ovh,
             overhead_ratio: ovh / baseline_s,
             normalized_perf: perf,

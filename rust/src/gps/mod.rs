@@ -12,15 +12,24 @@
 //! * [`select`] — best-configuration selection and the Figure 7
 //!   savings-difference series.
 //! * [`guidelines`] — the Figure 1 decision output.
+//! * [`online`] — the closed loop (ADR 005): rolling-window calibration of
+//!   measured serving metrics into fitted cost-model constants, priced
+//!   through the same [`select`] entry points the static map uses
+//!   (`serve --adaptive`, `advise --from-serve`).
 //! * [`report`] — table/CSV emitters shared by the benches and the CLI.
 
 pub mod calibrate;
 pub mod guidelines;
+pub mod online;
 pub mod report;
 pub mod select;
 pub mod sweep;
 
 pub use calibrate::{calibrate, CalibrationOptions, PredictorPoint, WorkloadCalibration};
+pub use online::{
+    calibration_check, parse_serve_report, CalibrationCheck, MeasuredConstants,
+    OnlineCalibrator, WindowSample,
+};
 pub use select::{
     best_tep, decode_strategy_savings, decode_strategy_savings_in, strategy_savings,
     strategy_savings_for_phase, strategy_savings_in, Regime, SavingsComparison,

@@ -1,0 +1,788 @@
+//! Online cost-model calibration (ADR 005): turn measured serving
+//! metrics into the fitted constants the GPS decision machinery prices
+//! strategies with — closing the sim-vs-measured gap the ROADMAP flagged
+//! (LRU refetch calibration, overlap-guidance validation).
+//!
+//! The flow: every serving round / decode step reduces to one
+//! [`WindowSample`]; a rolling [`OnlineCalibrator`] over the last N
+//! samples fits [`MeasuredConstants`] — mean routing skew, effective
+//! interconnect bandwidth (moved bytes over transfer seconds), the live
+//! Table-1 share error, realized Token-to-Expert top-k accuracy, hidden/
+//! refetch transfer fractions, and the per-token cost. The constants plug
+//! straight back into the *existing* `gps::select` pricing
+//! ([`MeasuredConstants::savings`] overrides the workload calibrations and
+//! the system spec, then calls `strategy_savings_in` /
+//! `decode_strategy_savings_in`), so the strategy controller re-decides
+//! DOP/TEP/speculative from measurements through the same code path
+//! `advise` prices statically.
+//!
+//! [`calibration_check`] is the drift gate: fit the per-token cost on the
+//! run's first half, predict the second half's throughput, report the
+//! relative delta — `advise --from-serve --max-delta` turns silent
+//! cost-model rot into a CI failure.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::gps::calibrate::WorkloadCalibration;
+use crate::gps::select::{
+    decode_strategy_savings_in, strategy_savings_in, Regime, SavingsComparison, ServePhase,
+};
+use crate::model::ModelConfig;
+use crate::sim::hardware::{InterconnectSpec, SystemSpec};
+use crate::util::json::Value;
+use crate::util::stats;
+
+/// One serving round's / decode step's calibration-relevant measurements
+/// — the reduction of `RoundMetrics` / `DecodeStepMetrics` the estimator
+/// windows over (`From` impls live here so the metrics structs stay
+/// measurement-only).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowSample {
+    /// Tokens processed (prompt tokens for prefill; prefill + decode rows
+    /// for a decode step).
+    pub tokens: f64,
+    /// Prompt tokens a decode step carried for newly admitted sequences
+    /// (0 for steady-state decode steps and for prefill rounds, which
+    /// are phase-homogeneous). Lets the calibration check score drift on
+    /// like-for-like samples instead of the prefill/decode phase mix.
+    pub prefill_tokens: f64,
+    pub total_s: f64,
+    pub routing_skew: f64,
+    pub upload_bytes: f64,
+    pub hidden_upload_bytes: f64,
+    pub exposed_upload_bytes: f64,
+    pub hidden_transfer_s: f64,
+    pub exposed_transfer_s: f64,
+    pub refetch_upload_bytes: f64,
+    pub predictor_s: f64,
+    pub pred_slots: f64,
+    pub pred_tokens: f64,
+    pub pred_topk_hits: f64,
+    pub pred_top1_hits: f64,
+    pub pred_share_l1: f64,
+    pub pred_share_layers: f64,
+}
+
+impl From<&crate::coordinator::metrics::RoundMetrics> for WindowSample {
+    fn from(m: &crate::coordinator::metrics::RoundMetrics) -> WindowSample {
+        WindowSample {
+            tokens: m.n_tokens as f64,
+            prefill_tokens: 0.0,
+            total_s: m.total_s,
+            routing_skew: m.routing_skew,
+            upload_bytes: m.upload_bytes as f64,
+            hidden_upload_bytes: m.hidden_upload_bytes as f64,
+            exposed_upload_bytes: m.exposed_upload_bytes as f64,
+            hidden_transfer_s: m.hidden_transfer_s,
+            exposed_transfer_s: m.exposed_transfer_s,
+            refetch_upload_bytes: m.refetch_upload_bytes as f64,
+            predictor_s: m.predictor_s,
+            pred_slots: m.pred_slots as f64,
+            pred_tokens: m.pred_tokens as f64,
+            pred_topk_hits: m.pred_topk_hits as f64,
+            pred_top1_hits: m.pred_top1_hits as f64,
+            pred_share_l1: m.pred_share_l1,
+            pred_share_layers: m.pred_share_layers as f64,
+        }
+    }
+}
+
+impl From<&crate::coordinator::metrics::DecodeStepMetrics> for WindowSample {
+    fn from(m: &crate::coordinator::metrics::DecodeStepMetrics) -> WindowSample {
+        WindowSample {
+            tokens: (m.n_prefill_tokens + m.n_decode_tokens) as f64,
+            prefill_tokens: m.n_prefill_tokens as f64,
+            total_s: m.total_s,
+            routing_skew: m.routing_skew,
+            upload_bytes: m.upload_bytes as f64,
+            hidden_upload_bytes: m.hidden_upload_bytes as f64,
+            exposed_upload_bytes: m.exposed_upload_bytes as f64,
+            hidden_transfer_s: m.hidden_transfer_s,
+            exposed_transfer_s: m.exposed_transfer_s,
+            refetch_upload_bytes: m.refetch_upload_bytes as f64,
+            predictor_s: m.predictor_s,
+            pred_slots: m.pred_slots as f64,
+            pred_tokens: m.pred_tokens as f64,
+            pred_topk_hits: m.pred_topk_hits as f64,
+            pred_top1_hits: m.pred_top1_hits as f64,
+            pred_share_l1: m.pred_share_l1,
+            pred_share_layers: m.pred_share_layers as f64,
+        }
+    }
+}
+
+impl WindowSample {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("tokens", Value::Num(self.tokens))
+            .set("prefill_tokens", Value::Num(self.prefill_tokens))
+            .set("total_s", Value::Num(self.total_s))
+            .set("routing_skew", Value::Num(self.routing_skew))
+            .set("upload_bytes", Value::Num(self.upload_bytes))
+            .set("hidden_upload_bytes", Value::Num(self.hidden_upload_bytes))
+            .set(
+                "exposed_upload_bytes",
+                Value::Num(self.exposed_upload_bytes),
+            )
+            .set("hidden_transfer_s", Value::Num(self.hidden_transfer_s))
+            .set("exposed_transfer_s", Value::Num(self.exposed_transfer_s))
+            .set(
+                "refetch_upload_bytes",
+                Value::Num(self.refetch_upload_bytes),
+            )
+            .set("predictor_s", Value::Num(self.predictor_s))
+            .set("pred_slots", Value::Num(self.pred_slots))
+            .set("pred_tokens", Value::Num(self.pred_tokens))
+            .set("pred_topk_hits", Value::Num(self.pred_topk_hits))
+            .set("pred_top1_hits", Value::Num(self.pred_top1_hits))
+            .set("pred_share_l1", Value::Num(self.pred_share_l1))
+            .set("pred_share_layers", Value::Num(self.pred_share_layers));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Option<WindowSample> {
+        Some(WindowSample {
+            tokens: v.get("tokens")?.as_f64()?,
+            prefill_tokens: v.get("prefill_tokens")?.as_f64()?,
+            total_s: v.get("total_s")?.as_f64()?,
+            routing_skew: v.get("routing_skew")?.as_f64()?,
+            upload_bytes: v.get("upload_bytes")?.as_f64()?,
+            hidden_upload_bytes: v.get("hidden_upload_bytes")?.as_f64()?,
+            exposed_upload_bytes: v.get("exposed_upload_bytes")?.as_f64()?,
+            hidden_transfer_s: v.get("hidden_transfer_s")?.as_f64()?,
+            exposed_transfer_s: v.get("exposed_transfer_s")?.as_f64()?,
+            refetch_upload_bytes: v.get("refetch_upload_bytes")?.as_f64()?,
+            predictor_s: v.get("predictor_s")?.as_f64()?,
+            pred_slots: v.get("pred_slots")?.as_f64()?,
+            pred_tokens: v.get("pred_tokens")?.as_f64()?,
+            pred_topk_hits: v.get("pred_topk_hits")?.as_f64()?,
+            pred_top1_hits: v.get("pred_top1_hits")?.as_f64()?,
+            pred_share_l1: v.get("pred_share_l1")?.as_f64()?,
+            pred_share_layers: v.get("pred_share_layers")?.as_f64()?,
+        })
+    }
+}
+
+/// The fitted cost-model constants a measurement window implies — what
+/// the controller re-prices strategies with, and what the serve report
+/// records for `advise --from-serve`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredConstants {
+    /// Samples (rounds / steps) the window held.
+    pub samples: usize,
+    pub tokens: f64,
+    pub tokens_per_s: f64,
+    /// Fitted per-token wall cost (the predictive constant the
+    /// calibration check scores).
+    pub per_token_s: f64,
+    /// Mean observed routing skewness — the x-axis of every guideline map.
+    pub mean_skew: f64,
+    /// Total duplication-transfer bytes the window moved (prewarms, cold
+    /// uploads and refetches alike) — 0 once the working set is warm.
+    pub upload_bytes: f64,
+    /// Effective duplication-transfer bandwidth: moved bytes over
+    /// (hidden + exposed) transfer seconds. `None` when the window moved
+    /// no replica bytes (static placement, warm cache) — or moved them
+    /// only as cold uploads inside `Run`, which carry no transfer-stall
+    /// seconds (check `upload_bytes` for that case).
+    pub effective_bandwidth_gbs: Option<f64>,
+    /// Live Table-1 share error (predicted vs routed shares, layer-
+    /// weighted). `None` under NoPrediction.
+    pub dop_error: Option<f64>,
+    /// Realized TEP top-k set hit rate. `None` when no slot carried a
+    /// per-token prediction.
+    pub tep_topk_hit: Option<f64>,
+    /// Realized TEP argmax accuracy.
+    pub tep_top1: Option<f64>,
+    /// Fraction of duplication bytes hidden under the lookahead window.
+    pub hidden_frac: f64,
+    /// Fraction of duplication bytes that were cap-forced refetches — the
+    /// measured input the sim's LRU refetch model is calibrated against
+    /// (the ROADMAP follow-up this module closes).
+    pub refetch_frac: f64,
+    /// Fraction of wall time spent in the predictor forward.
+    pub predictor_frac: f64,
+}
+
+impl MeasuredConstants {
+    /// Re-anchor the offline workload calibrations on measured values:
+    /// every calibration's DOP error is scaled by the ratio of the *live*
+    /// share error to the prior's interpolated error at the measured skew
+    /// — so the skew-dependence the offline fits learned is preserved,
+    /// the measured operating point is matched exactly, and an undrifted
+    /// workload (measurement == prior) passes the calibrations through
+    /// untouched (the `advise --from-serve` map-parity acceptance).
+    /// Windows with no prediction signal also pass through.
+    pub fn apply_to_cals(&self, cals: &[WorkloadCalibration]) -> Vec<WorkloadCalibration> {
+        let Some(err) = self.dop_error else {
+            return cals.to_vec();
+        };
+        if cals.is_empty() {
+            return Vec::new();
+        }
+        let (prior_err, _) = crate::gps::calibrate::interpolate_for_skew(cals, self.mean_skew);
+        if prior_err <= 0.0 {
+            return cals.to_vec();
+        }
+        let ratio = err / prior_err;
+        cals.iter()
+            .cloned()
+            .map(|mut c| {
+                c.dop_error = (c.dop_error * ratio).clamp(0.0, 2.0);
+                c
+            })
+            .collect()
+    }
+
+    /// Override the system spec's interconnect with the measured
+    /// effective bandwidth (the duplication path's *achieved* rate, which
+    /// is what duplication transfers will actually see — not the nominal
+    /// link rate). Passes `base` through when nothing was measured.
+    pub fn system_spec(&self, base: &SystemSpec) -> SystemSpec {
+        match self.effective_bandwidth_gbs {
+            Some(bw) if bw > 0.0 => SystemSpec {
+                interconnect: InterconnectSpec::custom(bw),
+                ..base.clone()
+            },
+            _ => base.clone(),
+        }
+    }
+
+    /// Price the strategy trade-off on the *calibrated* regime: measured
+    /// skew, measured bandwidth, measured DOP error — through the same
+    /// `gps::select` entry points the static `advise` map uses (ADR 005's
+    /// "one code path" requirement).
+    pub fn savings(
+        &self,
+        phase: ServePhase,
+        model: &ModelConfig,
+        base_system: &SystemSpec,
+        cals: &[WorkloadCalibration],
+        batch: usize,
+        seq_or_ctx: usize,
+        regime: Regime,
+    ) -> SavingsComparison {
+        let sys = self.system_spec(base_system);
+        let cals = self.apply_to_cals(cals);
+        match phase {
+            ServePhase::Prefill => strategy_savings_in(
+                model,
+                &sys,
+                &cals,
+                self.mean_skew,
+                batch,
+                seq_or_ctx,
+                regime,
+            ),
+            ServePhase::Decode => decode_strategy_savings_in(
+                model,
+                &sys,
+                &cals,
+                self.mean_skew,
+                batch,
+                seq_or_ctx,
+                regime,
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let opt = |o: Option<f64>| match o {
+            Some(x) => Value::Num(x),
+            None => Value::Null,
+        };
+        let mut v = Value::obj();
+        v.set("samples", Value::Num(self.samples as f64))
+            .set("tokens", Value::Num(self.tokens))
+            .set("tokens_per_s", Value::Num(self.tokens_per_s))
+            .set("per_token_s", Value::Num(self.per_token_s))
+            .set("mean_skew", Value::Num(self.mean_skew))
+            .set("upload_bytes", Value::Num(self.upload_bytes))
+            .set(
+                "effective_bandwidth_gbs",
+                opt(self.effective_bandwidth_gbs),
+            )
+            .set("dop_error", opt(self.dop_error))
+            .set("tep_topk_hit", opt(self.tep_topk_hit))
+            .set("tep_top1", opt(self.tep_top1))
+            .set("hidden_frac", Value::Num(self.hidden_frac))
+            .set("refetch_frac", Value::Num(self.refetch_frac))
+            .set("predictor_frac", Value::Num(self.predictor_frac));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<MeasuredConstants> {
+        let opt = |key: &str| v.get(key).and_then(Value::as_f64);
+        Ok(MeasuredConstants {
+            samples: v.req_usize("samples")?,
+            tokens: v.req_f64("tokens")?,
+            tokens_per_s: v.req_f64("tokens_per_s")?,
+            per_token_s: v.req_f64("per_token_s")?,
+            mean_skew: v.req_f64("mean_skew")?,
+            upload_bytes: v.req_f64("upload_bytes")?,
+            effective_bandwidth_gbs: opt("effective_bandwidth_gbs"),
+            dop_error: opt("dop_error"),
+            tep_topk_hit: opt("tep_topk_hit"),
+            tep_top1: opt("tep_top1"),
+            hidden_frac: v.req_f64("hidden_frac")?,
+            refetch_frac: v.req_f64("refetch_frac")?,
+            predictor_frac: v.req_f64("predictor_frac")?,
+        })
+    }
+}
+
+/// Rolling-window estimator over serving measurements: push one
+/// [`WindowSample`] per round / step, read fitted [`MeasuredConstants`]
+/// back. The window bounds how far back the controller trusts — expert-
+/// load drift ages out of the estimate after `cap` samples.
+#[derive(Clone, Debug)]
+pub struct OnlineCalibrator {
+    window: VecDeque<WindowSample>,
+    cap: usize,
+}
+
+impl OnlineCalibrator {
+    pub fn new(cap: usize) -> OnlineCalibrator {
+        OnlineCalibrator {
+            window: VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&mut self, sample: WindowSample) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(sample);
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Fit the window into measured constants. `None` until the window
+    /// holds at least one sample with tokens and wall time.
+    pub fn constants(&self) -> Option<MeasuredConstants> {
+        let tokens: f64 = self.window.iter().map(|s| s.tokens).sum();
+        let total_s: f64 = self.window.iter().map(|s| s.total_s).sum();
+        if tokens <= 0.0 || total_s <= 0.0 {
+            return None;
+        }
+        let skews: Vec<f64> = self
+            .window
+            .iter()
+            .filter(|s| s.tokens > 0.0)
+            .map(|s| s.routing_skew)
+            .collect();
+        let upload: f64 = self.window.iter().map(|s| s.upload_bytes).sum();
+        let hidden: f64 = self.window.iter().map(|s| s.hidden_upload_bytes).sum();
+        let refetch: f64 = self.window.iter().map(|s| s.refetch_upload_bytes).sum();
+        let transfer_s: f64 = self
+            .window
+            .iter()
+            .map(|s| s.hidden_transfer_s + s.exposed_transfer_s)
+            .sum();
+        let effective_bandwidth_gbs = if upload > 0.0 && transfer_s > 0.0 {
+            Some(upload / transfer_s / 1e9)
+        } else {
+            None
+        };
+        let share_weight: f64 = self.window.iter().map(|s| s.pred_share_layers).sum();
+        let dop_error = if share_weight > 0.0 {
+            Some(
+                self.window
+                    .iter()
+                    .map(|s| s.pred_share_l1 * s.pred_share_layers)
+                    .sum::<f64>()
+                    / share_weight,
+            )
+        } else {
+            None
+        };
+        let pred_slots: f64 = self.window.iter().map(|s| s.pred_slots).sum();
+        let pred_tokens: f64 = self.window.iter().map(|s| s.pred_tokens).sum();
+        let tep_topk_hit = if pred_slots > 0.0 {
+            Some(self.window.iter().map(|s| s.pred_topk_hits).sum::<f64>() / pred_slots)
+        } else {
+            None
+        };
+        // Top-1 is per token (at most one of a token's routed slots can
+        // match the argmax), matching the offline harness's definition.
+        let tep_top1 = if pred_tokens > 0.0 {
+            Some(self.window.iter().map(|s| s.pred_top1_hits).sum::<f64>() / pred_tokens)
+        } else {
+            None
+        };
+        let predictor_s: f64 = self.window.iter().map(|s| s.predictor_s).sum();
+        Some(MeasuredConstants {
+            samples: self.window.len(),
+            tokens,
+            tokens_per_s: tokens / total_s,
+            per_token_s: total_s / tokens,
+            mean_skew: stats::mean(&skews),
+            upload_bytes: upload,
+            effective_bandwidth_gbs,
+            dop_error,
+            tep_topk_hit,
+            tep_top1,
+            hidden_frac: if upload > 0.0 { hidden / upload } else { 0.0 },
+            refetch_frac: if upload > 0.0 { refetch / upload } else { 0.0 },
+            predictor_frac: predictor_s / total_s,
+        })
+    }
+}
+
+/// The fit-vs-holdout drift check: fit the per-token cost on the first
+/// half of the run, predict the second half's throughput, report the
+/// relative delta. A small delta means the fitted cost model transfers
+/// across the run (undrifted workload); a blown-out delta is the
+/// cost-model rot the CI smoke gate catches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationCheck {
+    /// Throughput predicted from the first-half fit.
+    pub fit_tokens_per_s: f64,
+    /// Throughput actually measured on the second half.
+    pub holdout_tokens_per_s: f64,
+    /// `|fit − holdout| / holdout`.
+    pub delta_frac: f64,
+}
+
+impl CalibrationCheck {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("fit_tokens_per_s", Value::Num(self.fit_tokens_per_s))
+            .set(
+                "holdout_tokens_per_s",
+                Value::Num(self.holdout_tokens_per_s),
+            )
+            .set("delta_frac", Value::Num(self.delta_frac));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Option<CalibrationCheck> {
+        Some(CalibrationCheck {
+            fit_tokens_per_s: v.get("fit_tokens_per_s")?.as_f64()?,
+            holdout_tokens_per_s: v.get("holdout_tokens_per_s")?.as_f64()?,
+            delta_frac: v.get("delta_frac")?.as_f64()?,
+        })
+    }
+}
+
+/// Run the fit-vs-holdout check over a run's samples. `None` below 4
+/// usable samples (each half needs ≥ 2 to mean anything).
+///
+/// Decode runs interleave prefill-heavy admission steps (many prompt
+/// rows batch-parallel in one step) with steady one-row decode steps —
+/// and admissions cluster at the start, so a naive temporal split would
+/// compare the phase mix, not the cost model. When the run has enough
+/// steady (no-prefill) samples the check scores only those; phase-
+/// homogeneous runs (prefill rounds) use everything.
+pub fn calibration_check(samples: &[WindowSample]) -> Option<CalibrationCheck> {
+    let steady: Vec<&WindowSample> = samples
+        .iter()
+        .filter(|s| s.prefill_tokens == 0.0)
+        .collect();
+    let scored: Vec<&WindowSample> = if steady.len() >= 4 {
+        steady
+    } else {
+        samples.iter().collect()
+    };
+    if scored.len() < 4 {
+        return None;
+    }
+    let mid = scored.len() / 2;
+    let tps = |xs: &[&WindowSample]| -> Option<f64> {
+        let t: f64 = xs.iter().map(|s| s.total_s).sum();
+        let tok: f64 = xs.iter().map(|s| s.tokens).sum();
+        if t > 0.0 && tok > 0.0 {
+            Some(tok / t)
+        } else {
+            None
+        }
+    };
+    let fit = tps(&scored[..mid])?;
+    let holdout = tps(&scored[mid..])?;
+    Some(CalibrationCheck {
+        fit_tokens_per_s: fit,
+        holdout_tokens_per_s: holdout,
+        delta_frac: (fit - holdout).abs() / holdout,
+    })
+}
+
+/// The parsed essentials of a `moe-gps/serve-report/v1` file — what
+/// `advise --from-serve` consumes.
+#[derive(Clone, Debug)]
+pub struct ServedReport {
+    pub phase: ServePhase,
+    pub strategy: String,
+    pub tokens_per_s: f64,
+    pub measured: MeasuredConstants,
+    pub check: Option<CalibrationCheck>,
+    /// The engine regime the measurements were produced under.
+    pub regime: Regime,
+    pub adaptive: bool,
+    /// Controller decisions evaluated / actually switched.
+    pub decisions: usize,
+    pub switches: usize,
+}
+
+/// Parse a serve-report JSON file (see `ServeReport::to_json`). Fails
+/// with a diagnostic when the schema tag mismatches or the run recorded
+/// no measured constants (an empty serve).
+pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
+    let v = Value::parse(text).map_err(|e| anyhow::anyhow!("invalid report JSON: {e}"))?;
+    let schema = v
+        .get("schema")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing `schema` field"))?;
+    anyhow::ensure!(
+        schema == crate::coordinator::metrics::REPORT_SCHEMA,
+        "schema mismatch: got `{schema}`, want `{}`",
+        crate::coordinator::metrics::REPORT_SCHEMA
+    );
+    let meta = v
+        .get("meta")
+        .ok_or_else(|| anyhow::anyhow!("missing `meta`"))?;
+    let phase = match meta.get("phase").and_then(Value::as_str) {
+        Some("prefill") => ServePhase::Prefill,
+        Some("decode") => ServePhase::Decode,
+        other => anyhow::bail!("unknown report phase {other:?}"),
+    };
+    let lookahead = meta.get("lookahead").and_then(Value::as_usize).unwrap_or(0);
+    let speculative = meta
+        .get("speculative")
+        .and_then(Value::as_bool)
+        .unwrap_or(false);
+    let memory_cap_bytes = meta.get("memory_cap_bytes").and_then(Value::as_f64);
+    let measured = v
+        .get("measured")
+        .filter(|m| !matches!(m, Value::Null))
+        .ok_or_else(|| {
+            anyhow::anyhow!("report carries no measured constants (empty serve run?)")
+        })?;
+    let controller = v.get("controller").filter(|c| !matches!(c, Value::Null));
+    let (decisions, switches) = controller
+        .and_then(|c| c.get("decisions"))
+        .and_then(Value::as_arr)
+        .map(|arr| {
+            let switched = arr
+                .iter()
+                .filter(|d| d.get("switched").and_then(Value::as_bool) == Some(true))
+                .count();
+            (arr.len(), switched)
+        })
+        .unwrap_or((0, 0));
+    Ok(ServedReport {
+        phase,
+        strategy: v
+            .get("strategy")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        tokens_per_s: v.req_f64("tokens_per_s")?,
+        measured: MeasuredConstants::from_json(measured)?,
+        check: v
+            .get("calibration_check")
+            .and_then(CalibrationCheck::from_json),
+        regime: Regime {
+            overlap: lookahead > 0,
+            speculative,
+            memory_cap_bytes,
+        },
+        adaptive: meta
+            .get("adaptive")
+            .and_then(Value::as_bool)
+            .unwrap_or(false),
+        decisions,
+        switches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(tokens: f64, total_s: f64, skew: f64) -> WindowSample {
+        WindowSample {
+            tokens,
+            total_s,
+            routing_skew: skew,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn empty_window_has_no_constants() {
+        let cal = OnlineCalibrator::new(8);
+        assert!(cal.constants().is_none());
+    }
+
+    #[test]
+    fn constants_fit_throughput_and_skew() {
+        let mut cal = OnlineCalibrator::new(8);
+        cal.push(sample(100.0, 1.0, 2.0));
+        cal.push(sample(300.0, 3.0, 4.0));
+        let c = cal.constants().unwrap();
+        assert_eq!(c.samples, 2);
+        assert!((c.tokens_per_s - 100.0).abs() < 1e-9);
+        assert!((c.per_token_s - 0.01).abs() < 1e-12);
+        assert!((c.mean_skew - 3.0).abs() < 1e-12);
+        assert!(c.effective_bandwidth_gbs.is_none(), "no bytes moved");
+        assert!(c.dop_error.is_none());
+        assert!(c.tep_topk_hit.is_none());
+    }
+
+    #[test]
+    fn window_ages_out_old_samples() {
+        let mut cal = OnlineCalibrator::new(2);
+        cal.push(sample(1000.0, 1.0, 9.0));
+        cal.push(sample(100.0, 1.0, 2.0));
+        cal.push(sample(100.0, 1.0, 2.0));
+        let c = cal.constants().unwrap();
+        assert_eq!(c.samples, 2);
+        assert!((c.mean_skew - 2.0).abs() < 1e-12, "old skew aged out");
+    }
+
+    #[test]
+    fn bandwidth_and_fractions_from_transfer_bytes() {
+        let mut cal = OnlineCalibrator::new(4);
+        let mut s = sample(100.0, 1.0, 2.0);
+        s.upload_bytes = 4e9;
+        s.hidden_upload_bytes = 3e9;
+        s.exposed_upload_bytes = 1e9;
+        s.hidden_transfer_s = 1.5;
+        s.exposed_transfer_s = 0.5;
+        s.refetch_upload_bytes = 1e9;
+        cal.push(s);
+        let c = cal.constants().unwrap();
+        assert!((c.effective_bandwidth_gbs.unwrap() - 2.0).abs() < 1e-9);
+        assert!((c.hidden_frac - 0.75).abs() < 1e-12);
+        assert!((c.refetch_frac - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prediction_signals_are_weighted_rates() {
+        let mut cal = OnlineCalibrator::new(4);
+        let mut a = sample(10.0, 1.0, 2.0);
+        a.pred_slots = 10.0;
+        a.pred_tokens = 5.0;
+        a.pred_topk_hits = 8.0;
+        a.pred_top1_hits = 4.0;
+        a.pred_share_l1 = 0.1;
+        a.pred_share_layers = 2.0;
+        let mut b = sample(10.0, 1.0, 2.0);
+        b.pred_slots = 30.0;
+        b.pred_tokens = 15.0;
+        b.pred_topk_hits = 12.0;
+        b.pred_top1_hits = 6.0;
+        b.pred_share_l1 = 0.4;
+        b.pred_share_layers = 2.0;
+        cal.push(a);
+        cal.push(b);
+        let c = cal.constants().unwrap();
+        // Top-k is per slot; top-1 is per token (the offline harness's
+        // definition, so the two columns stay comparable).
+        assert!((c.tep_topk_hit.unwrap() - 0.5).abs() < 1e-12);
+        assert!((c.tep_top1.unwrap() - 0.5).abs() < 1e-12);
+        assert!((c.dop_error.unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_check_fits_undrifted_runs() {
+        let samples: Vec<WindowSample> = (0..8).map(|_| sample(100.0, 0.5, 2.0)).collect();
+        let c = calibration_check(&samples).unwrap();
+        assert!(c.delta_frac < 1e-12, "steady run: fit == holdout");
+        // Drifted second half shows up in the delta.
+        let mut drifted = samples.clone();
+        for s in drifted.iter_mut().skip(4) {
+            s.total_s = 1.0;
+        }
+        let d = calibration_check(&drifted).unwrap();
+        assert!((d.delta_frac - 1.0).abs() < 1e-9, "2x slowdown = 100% delta");
+        assert!(calibration_check(&samples[..3]).is_none(), "too short");
+    }
+
+    #[test]
+    fn calibration_check_ignores_prefill_phase_mix() {
+        // Admission steps (prefill-heavy, far higher rows/s) cluster at
+        // the start of a decode run; the check must score steady decode
+        // steps against each other, not the phase mix.
+        let mut samples: Vec<WindowSample> = Vec::new();
+        for _ in 0..2 {
+            let mut s = sample(200.0, 0.2, 2.0); // 1000 rows/s admission
+            s.prefill_tokens = 192.0;
+            samples.push(s);
+        }
+        for _ in 0..8 {
+            samples.push(sample(6.0, 0.1, 2.0)); // 60 rows/s steady
+        }
+        let c = calibration_check(&samples).unwrap();
+        assert!(
+            c.delta_frac < 1e-12,
+            "steady-only scoring must see no drift: {}",
+            c.delta_frac
+        );
+        // Too few steady samples: fall back to scoring everything.
+        let c2 = calibration_check(&samples[..5]).unwrap();
+        assert!(c2.delta_frac > 0.5, "phase mix shows when unavoidable");
+    }
+
+    #[test]
+    fn constants_json_round_trip() {
+        let mut cal = OnlineCalibrator::new(4);
+        let mut s = sample(100.0, 1.0, 2.5);
+        s.upload_bytes = 1e9;
+        s.hidden_transfer_s = 1.0;
+        s.pred_slots = 10.0;
+        s.pred_topk_hits = 9.0;
+        s.pred_top1_hits = 7.0;
+        s.pred_share_l1 = 0.2;
+        s.pred_share_layers = 2.0;
+        cal.push(s.clone());
+        let c = cal.constants().unwrap();
+        let rt = MeasuredConstants::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, rt);
+        // WindowSample round-trips too.
+        assert_eq!(WindowSample::from_json(&s.to_json()).unwrap(), s);
+    }
+
+    #[test]
+    fn measured_overrides_plug_into_static_machinery() {
+        let base = SystemSpec::four_a100_nvlink();
+        let c = MeasuredConstants {
+            samples: 4,
+            tokens: 100.0,
+            tokens_per_s: 10.0,
+            per_token_s: 0.1,
+            mean_skew: 2.0,
+            upload_bytes: 1e9,
+            effective_bandwidth_gbs: Some(64.0),
+            dop_error: Some(0.05),
+            tep_topk_hit: Some(0.9),
+            tep_top1: Some(0.8),
+            hidden_frac: 0.5,
+            refetch_frac: 0.0,
+            predictor_frac: 0.01,
+        };
+        let sys = c.system_spec(&base);
+        assert!((sys.interconnect.link_bw_gbs - 64.0).abs() < 1e-12);
+        assert_eq!(sys.n_devices, base.n_devices);
+        // No measurement → base passes through.
+        let none = MeasuredConstants {
+            effective_bandwidth_gbs: None,
+            ..c.clone()
+        };
+        assert!(
+            (none.system_spec(&base).interconnect.link_bw_gbs
+                - base.interconnect.link_bw_gbs)
+                .abs()
+                < 1e-12
+        );
+    }
+}

@@ -30,14 +30,25 @@ pub fn figure4(cal: &WorkloadCalibration) -> String {
     let mut t = Table::new(&[
         "Predictor",
         "Accuracy",
+        "Top-k hit",
+        "L1 err",
         "Overhead (ratio)",
         "Norm. perf",
     ])
-    .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    .align(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
     for p in &cal.points {
         t.row(&[
             p.name.clone(),
             f(p.accuracy, 3),
+            f(p.topk_accuracy, 3),
+            f(p.dist_l1, 3),
             f(p.overhead_ratio, 4),
             f(p.normalized_perf, 3),
         ]);

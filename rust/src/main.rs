@@ -12,7 +12,9 @@
 use anyhow::Result;
 
 use moe_gps::coordinator::request::RequestGen;
-use moe_gps::coordinator::{Coordinator, DecodeOptions, ServeStrategy};
+use moe_gps::coordinator::{
+    ControllerConfig, Coordinator, DecodeOptions, ServeStrategy, StrategyController,
+};
 use moe_gps::gps::select::recommend;
 use moe_gps::gps::{self, calibrate, CalibrationOptions, ServePhase};
 use moe_gps::model::ModelConfig;
@@ -30,6 +32,7 @@ fn main() {
         "overlap",
         "speculative",
         "require-results",
+        "adaptive",
     ]);
     if args.flag("version") {
         println!("moe-gps {}", moe_gps::VERSION);
@@ -74,7 +77,12 @@ USAGE: moe-gps <subcommand> [options]
                 --memory-cap B (ADR 004: per-device HBM budget for expert
                                 weights, e.g. 24g; duplication that
                                 overflows it pays exposed refetch — shows
-                                the cells the cap flips)]
+                                the cells the cap flips)
+                --from-serve report.json (ADR 005: render the map from the
+                                *measured* constants a `serve --report` run
+                                recorded — measured skew/bandwidth/share
+                                error; --max-delta F fails when the
+                                fit-vs-holdout throughput drift exceeds F)]
   trace        --dataset mmlu|alpaca|sst2 [--seed 7]
   predict      --dataset mmlu|alpaca|sst2 [--fast --seed 7]
   serve        --strategy none|dop|tep [--phase prefill|decode|mixed
@@ -86,7 +94,16 @@ USAGE: moe-gps <subcommand> [options]
                 --memory-cap B (per-worker byte cap for expert replica
                                 weights: LRU eviction + refetch, ADR 004)
                 --speculative  (TEP speculative scatter; implies lookahead)
-                --threads N    (reference-backend compute pool; 0 = auto)]
+                --threads N    (reference-backend compute pool; 0 = auto)
+                --adaptive     (ADR 005: online strategy controller —
+                                re-selects DOP/TEP/speculative/lookahead at
+                                replan boundaries from measured metrics;
+                                tune with --hysteresis N --margin F
+                                --window N --min-window N, price on
+                                --model/--system)
+                --report F.json (write the serve report: measured
+                                constants, calibration check, controller
+                                decision trace — advise --from-serve input)]
                prefill: [--rounds 8 --seqs 4]
                decode/mixed (continuous batching): [--steps 256 --seqs 8
                 --max-active 8 --prompt 32 --max-new 32 --replan 4
@@ -187,7 +204,41 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Decode-phase guideline cells: the decision map grid priced on the
+/// decode-step simulator (memory-bound FFN, per-step TEP overhead — ADR
+/// 001). Shared by the static map, the regime overlays and
+/// `advise --from-serve`.
+fn decode_cells(
+    model: &ModelConfig,
+    cals: &[gps::WorkloadCalibration],
+    skews: &[f64],
+    bandwidths: &[f64],
+    batch: usize,
+    ctx: usize,
+    regime: gps::Regime,
+) -> Vec<gps::guidelines::GuidelineCell> {
+    let mut cells = Vec::new();
+    for &bw in bandwidths {
+        let sys = SystemSpec::four_a100_custom_bw(bw);
+        for &skew in skews {
+            let cmp =
+                gps::decode_strategy_savings_in(model, &sys, cals, skew, batch, ctx, regime);
+            let best_saving = cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
+            cells.push(gps::guidelines::GuidelineCell {
+                skewness: skew,
+                bandwidth_gbs: bw,
+                recommendation: recommend(&cmp),
+                saving_frac: best_saving / cmp.baseline_s,
+            });
+        }
+    }
+    cells
+}
+
 fn cmd_advise(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("from-serve") {
+        return cmd_advise_from_serve(args, path);
+    }
     let model = parse_model(args)?;
     let phase = ServePhase::by_name(args.opt_or("phase", "prefill"))?;
     let speculative = args.flag("speculative");
@@ -219,31 +270,15 @@ fn cmd_advise(args: &Args) -> Result<()> {
                 512,
                 regime,
             ),
-            ServePhase::Decode => {
-                // Decode regime: decision map over the same grid, priced on
-                // the decode-step simulator (memory-bound FFN, per-step TEP
-                // overhead — ADR 001).
-                let batch = args.opt_usize("batch", 16)?;
-                let ctx = args.opt_usize("ctx", 512)?;
-                let mut cells = Vec::new();
-                for &bw in &bandwidths {
-                    let sys = SystemSpec::four_a100_custom_bw(bw);
-                    for &skew in &skews {
-                        let cmp = gps::decode_strategy_savings_in(
-                            &model, &sys, &cals, skew, batch, ctx, regime,
-                        );
-                        let best_saving =
-                            cmp.dop_saving_s.max(cmp.tep_best_saving_s).max(0.0);
-                        cells.push(gps::guidelines::GuidelineCell {
-                            skewness: skew,
-                            bandwidth_gbs: bw,
-                            recommendation: recommend(&cmp),
-                            saving_frac: best_saving / cmp.baseline_s,
-                        });
-                    }
-                }
-                cells
-            }
+            ServePhase::Decode => decode_cells(
+                &model,
+                &cals,
+                &skews,
+                &bandwidths,
+                args.opt_usize("batch", 16)?,
+                args.opt_usize("ctx", 512)?,
+                regime,
+            ),
         })
     };
     let cells = build(regime)?;
@@ -290,6 +325,151 @@ fn cmd_advise(args: &Args) -> Result<()> {
             ..regime
         })?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
+    }
+    Ok(())
+}
+
+/// `advise --from-serve report.json`: render the guideline map from the
+/// *measured* constants a serve run recorded (ADR 005). The measured
+/// share error overrides the offline calibrations, the measured
+/// effective bandwidth defines the operating point, and the fit-vs-
+/// holdout calibration check gates silent cost-model rot
+/// (`--max-delta`, the CI smoke bound).
+fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let served = gps::parse_serve_report(&text)?;
+    let measured = &served.measured;
+    let model = parse_model(args)?;
+    let base_system = SystemSpec::four_a100_nvlink();
+    let cals = calibrations(&model, &base_system, args.flag("fast"), args.opt_u64("seed", 7)?);
+    let cals_measured = measured.apply_to_cals(&cals);
+    let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
+    let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
+    let batch = args.opt_usize("batch", 16)?;
+    let ctx = args.opt_usize("ctx", 512)?;
+
+    println!(
+        "measured constants from {path} ({} run, strategy {}, {} samples):",
+        served.phase.name(),
+        served.strategy,
+        measured.samples
+    );
+    println!(
+        "  skew {:.3}  tokens/s {:.1}  bandwidth {}  share-L1 {}  \
+         top-k hit {}  hidden {:.0}%  refetch {:.0}%",
+        measured.mean_skew,
+        measured.tokens_per_s,
+        measured
+            .effective_bandwidth_gbs
+            .map(|b| format!("{b:.2} GB/s"))
+            .unwrap_or_else(|| "unmeasured".into()),
+        measured
+            .dop_error
+            .map(|e| format!("{:.1}%", e * 100.0))
+            .unwrap_or_else(|| "n/a".into()),
+        measured
+            .tep_topk_hit
+            .map(|h| format!("{:.1}%", h * 100.0))
+            .unwrap_or_else(|| "n/a".into()),
+        measured.hidden_frac * 100.0,
+        measured.refetch_frac * 100.0,
+    );
+    if served.adaptive {
+        println!(
+            "  controller: {} decisions, {} switches",
+            served.decisions, served.switches
+        );
+    }
+
+    // The guideline map under the measured constants, priced under the
+    // regime the run actually served (overlap/speculative/memory-cap).
+    let cells = match served.phase {
+        ServePhase::Prefill => gps::guidelines::decision_map_in(
+            &model,
+            &cals_measured,
+            &skews,
+            &bandwidths,
+            1,
+            512,
+            served.regime,
+        ),
+        ServePhase::Decode => decode_cells(
+            &model,
+            &cals_measured,
+            &skews,
+            &bandwidths,
+            batch,
+            ctx,
+            served.regime,
+        ),
+    };
+    println!(
+        "phase: {} (calibrated from measured serve)",
+        served.phase.name()
+    );
+    println!("{}", gps::guidelines::render_map(&cells, &skews, &bandwidths));
+    println!("{}", gps::guidelines::summarize(&cells));
+
+    // The measured operating point through the same pricing path.
+    let seq_or_ctx = match served.phase {
+        ServePhase::Prefill => 512,
+        ServePhase::Decode => ctx,
+    };
+    let op_batch = match served.phase {
+        ServePhase::Prefill => 1,
+        ServePhase::Decode => batch,
+    };
+    let cmp = measured.savings(
+        served.phase,
+        &model,
+        &base_system,
+        &cals,
+        op_batch,
+        seq_or_ctx,
+        served.regime,
+    );
+    println!(
+        "measured operating point (skew {:.2}, bw {}): recommend {}",
+        cmp.skewness,
+        measured
+            .effective_bandwidth_gbs
+            .map(|b| format!("{b:.2} GB/s"))
+            .unwrap_or_else(|| "nominal".into()),
+        recommend(&cmp).name()
+    );
+
+    // Measured-vs-predicted throughput delta: the drift gate.
+    match &served.check {
+        Some(check) => {
+            println!(
+                "calibration check: fit {:.1} tok/s vs holdout {:.1} tok/s \
+                 (delta {:.1}%)",
+                check.fit_tokens_per_s,
+                check.holdout_tokens_per_s,
+                check.delta_frac * 100.0
+            );
+            if let Some(max_delta) = args.opt("max-delta") {
+                let bound: f64 = max_delta
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--max-delta expects a fraction"))?;
+                anyhow::ensure!(
+                    check.delta_frac <= bound,
+                    "calibration drift {:.3} exceeds --max-delta {bound} \
+                     (cost model no longer predicts measured throughput)",
+                    check.delta_frac
+                );
+                println!("calibration drift within --max-delta {bound}: OK");
+            }
+        }
+        None => {
+            anyhow::ensure!(
+                args.opt("max-delta").is_none(),
+                "--max-delta given but the report carries no calibration \
+                 check (run more rounds/steps)"
+            );
+            println!("calibration check: n/a (run too short)");
+        }
     }
     Ok(())
 }
@@ -353,6 +533,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
              (no prewarm stream to budget)"
         );
     }
+    // ADR 005: `--adaptive` installs the online strategy controller — at
+    // replan boundaries it re-prices DOP/TEP/speculative on constants
+    // calibrated from the measured serving metrics (rolling window) and
+    // switches behind hysteresis. `--system`/`--model` pick the sim the
+    // decisions are priced on; `--hysteresis`/`--margin` tune stability.
+    if args.flag("adaptive") {
+        let ctrl_phase = if phase == "prefill" {
+            ServePhase::Prefill
+        } else {
+            ServePhase::Decode
+        };
+        // Price decisions on the run's actual workload shape: the decode
+        // batch is the continuous-batch size and its context is the full
+        // generated depth; a prefill round's batch is its sequence count
+        // at the model's sequence length.
+        let (ctrl_batch, ctrl_ctx) = if ctrl_phase == ServePhase::Decode {
+            // Mirror the decode branch's own defaults exactly: max_active
+            // defaults to seqs.clamp(1, 8) and prompts are capped at the
+            // compiled prefill bucket before serving.
+            let seqs = args.opt_usize("seqs", 8)?;
+            let prompt = args
+                .opt_usize("prompt", (coord.seq_len() / 8).max(4))?
+                .min(coord.seq_len().max(1));
+            let max_new = args.opt_usize("max-new", 32)?;
+            (
+                args.opt_usize("max-active", seqs.clamp(1, 8))?,
+                prompt + max_new,
+            )
+        } else {
+            (args.opt_usize("seqs", 4)?, coord.seq_len())
+        };
+        let cfg = ControllerConfig {
+            phase: ctrl_phase,
+            model: parse_model(args)?,
+            system: parse_system(args)?,
+            hysteresis: args.opt_usize("hysteresis", 2)?,
+            margin_frac: args.opt_f64("margin", 0.01)?,
+            min_window: args.opt_usize("min-window", 4)?,
+            window: args.opt_usize("window", 32)?,
+            batch: ctrl_batch,
+            seq_or_ctx: ctrl_ctx,
+            // Depth bounds honour the launch configuration: the
+            // controller may move the prewarm window between "off" and
+            // the launched depth (or 2, whichever is larger) but never
+            // silently cuts a deeper `--lookahead` the user asked for.
+            min_lookahead: 0,
+            max_lookahead: coord.lookahead.max(2),
+            seed,
+            ..Default::default()
+        };
+        coord.controller = Some(StrategyController::new(cfg));
+    }
+    let report_path = args.opt("report").map(str::to_string);
+    let write_report = |json: moe_gps::util::json::Value| -> Result<()> {
+        if let Some(path) = &report_path {
+            std::fs::write(path, json.to_string_pretty())
+                .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+            println!("serve report written to {path}");
+        }
+        Ok(())
+    };
     let mut gen = RequestGen::new(seed, coord.vocab());
     match phase {
         "prefill" => {
@@ -368,6 +609,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .collect();
             let report = coord.serve(batches)?;
             println!("{}", report.summary());
+            write_report(report.to_json())?;
         }
         "decode" | "mixed" => {
             let seqs = args.opt_usize("seqs", 8)?;
@@ -392,6 +634,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             let report = coord.serve_decode(requests, &opts)?;
             println!("{}", report.summary());
+            write_report(report.to_json())?;
         }
         other => anyhow::bail!("unknown --phase `{other}` (prefill|decode|mixed)"),
     }

@@ -1,37 +1,146 @@
-//! Predictor evaluation harness: accuracy, per-expert confusion, and the
-//! predicted-vs-actual load comparison the duplication planner consumes.
+//! Predictor evaluation harness — one API for both prediction families
+//! (the ADR-005 generalisation): top-1 accuracy, top-k *set* hit rate
+//! (a routed slot scores when its expert appears anywhere in the token's
+//! predicted set — the same confirmation rule the speculative scatter
+//! uses), and L1 distribution error on per-expert shares (the paper's
+//! Table-1 metric, now scored for every predictor, not just DOP).
+//!
+//! Distribution-Only predictors hold no per-token opinion
+//! (`predict_topk` is `None`); the harness broadcasts their ranked share
+//! distribution to every token, so a DOP estimator and a TEP classifier
+//! are comparable through the same calls.
 
-use super::TokenPredictor;
-use crate::trace::Trace;
+use super::{rank_topk_f64, Predictor, PredictorFamily};
+use crate::trace::{Batch, Trace};
+use crate::util::stats;
 
-/// Top-1 prediction accuracy over every token of the test trace.
-pub fn accuracy(predictor: &dyn TokenPredictor, test: &Trace) -> f64 {
-    let mut correct = 0usize;
+/// The generalized evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct Evaluation {
+    /// Fraction of tokens whose argmax prediction matched the routed
+    /// expert (the classic Figure-4 axis).
+    pub top1: f64,
+    /// Fraction of tokens whose routed expert appeared anywhere in the
+    /// predicted top-k set.
+    pub topk: f64,
+    /// L1 distance between the predictor's share distribution and the
+    /// test trace's empirical shares (Table 1's error rate).
+    pub dist_l1: f64,
+    /// The k the set metric was scored at.
+    pub k: usize,
+}
+
+/// Ranked top-k sets for one batch, falling back to broadcasting the
+/// predictor's share distribution when the family has no per-token
+/// opinion — the bridge that lets DOP predictors flow through the
+/// per-token scoring path.
+pub fn broadcast_topk(p: &dyn Predictor, batch: &Batch, k: usize) -> Vec<Vec<Vec<u8>>> {
+    if let Some(sets) = p.predict_topk(batch, k) {
+        // The declared family and the per-token behavior are two
+        // encodings of one fact; keep them honest about each other.
+        debug_assert_eq!(
+            p.family(),
+            PredictorFamily::TokenToExpert,
+            "{} returns per-token sets but declares itself {}",
+            p.name(),
+            p.family().name()
+        );
+        return sets;
+    }
+    debug_assert_eq!(
+        p.family(),
+        PredictorFamily::DistributionOnly,
+        "{} returns no per-token sets but declares itself {}",
+        p.name(),
+        p.family().name()
+    );
+    let dist = p.predict_distribution();
+    let mut order = Vec::with_capacity(dist.len());
+    let ranked: Vec<u8> = rank_topk_f64(&dist, k, &mut order)
+        .iter()
+        .map(|&e| e as u8)
+        .collect();
+    batch
+        .sequences
+        .iter()
+        .map(|seq| vec![ranked.clone(); seq.len()])
+        .collect()
+}
+
+/// Argmax (top-1) predictions for every token of a batch — the historic
+/// `predict_batch` shape, preserved for call sites that want one expert
+/// per token.
+pub fn top1_predictions(p: &dyn Predictor, batch: &Batch) -> Vec<Vec<u8>> {
+    broadcast_topk(p, batch, 1)
+        .into_iter()
+        .map(|seq| {
+            seq.into_iter()
+                .map(|ranked| ranked.first().copied().unwrap_or(0))
+                .collect()
+        })
+        .collect()
+}
+
+/// The generalized evaluation over a test trace.
+pub fn evaluate(p: &dyn Predictor, test: &Trace, k: usize) -> Evaluation {
+    let e = test.spec.n_experts;
+    let mut top1_hits = 0usize;
+    let mut topk_hits = 0usize;
     let mut total = 0usize;
     for batch in &test.batches {
-        let preds = predictor.predict_batch(batch);
-        for (seq, pred_seq) in batch.sequences.iter().zip(&preds) {
-            for (tok, &pred) in seq.iter().zip(pred_seq) {
+        let sets = broadcast_topk(p, batch, k);
+        for (seq, pred_seq) in batch.sequences.iter().zip(&sets) {
+            for (tok, ranked) in seq.iter().zip(pred_seq) {
                 total += 1;
-                if tok.expert == pred {
-                    correct += 1;
+                if ranked.first() == Some(&tok.expert) {
+                    top1_hits += 1;
+                }
+                if ranked.contains(&tok.expert) {
+                    topk_hits += 1;
                 }
             }
         }
     }
-    if total == 0 {
+    let counts = test.expert_counts();
+    let n_tokens: usize = counts.iter().sum();
+    let dist_l1 = if n_tokens == 0 {
         0.0
     } else {
-        correct as f64 / total as f64
+        let empirical: Vec<f64> = counts
+            .iter()
+            .map(|&c| c as f64 / n_tokens as f64)
+            .collect();
+        let mut predicted = p.predict_distribution();
+        predicted.resize(e, 0.0);
+        stats::l1_distance(&predicted, &empirical)
+    };
+    if total == 0 {
+        return Evaluation {
+            top1: 0.0,
+            topk: 0.0,
+            dist_l1,
+            k,
+        };
+    }
+    Evaluation {
+        top1: top1_hits as f64 / total as f64,
+        topk: topk_hits as f64 / total as f64,
+        dist_l1,
+        k,
     }
 }
 
-/// Confusion matrix `confusion[actual][predicted]`.
-pub fn confusion(predictor: &dyn TokenPredictor, test: &Trace) -> Vec<Vec<usize>> {
+/// Top-1 prediction accuracy over every token of the test trace.
+pub fn accuracy(predictor: &dyn Predictor, test: &Trace) -> f64 {
+    evaluate(predictor, test, 1).top1
+}
+
+/// Confusion matrix `confusion[actual][predicted]` (argmax predictions).
+pub fn confusion(predictor: &dyn Predictor, test: &Trace) -> Vec<Vec<usize>> {
     let e = test.spec.n_experts;
     let mut m = vec![vec![0usize; e]; e];
     for batch in &test.batches {
-        let preds = predictor.predict_batch(batch);
+        let preds = top1_predictions(predictor, batch);
         for (seq, pred_seq) in batch.sequences.iter().zip(&preds) {
             for (tok, &pred) in seq.iter().zip(pred_seq) {
                 m[tok.expert as usize][pred as usize] += 1;
@@ -42,16 +151,20 @@ pub fn confusion(predictor: &dyn TokenPredictor, test: &Trace) -> Vec<Vec<usize>
 }
 
 /// Predicted per-expert loads for one batch — what the placement manager
-/// feeds to Algorithm 1 under Token-to-Expert prediction.
+/// feeds to Algorithm 1 under Token-to-Expert prediction. Counts one
+/// predicted slot per rank of each token's top-k set.
 pub fn predicted_loads(
-    predictor: &dyn TokenPredictor,
+    predictor: &dyn Predictor,
     batch: &crate::trace::Batch,
     n_experts: usize,
+    k: usize,
 ) -> Vec<usize> {
     let mut counts = vec![0usize; n_experts];
-    for pred_seq in predictor.predict_batch(batch) {
-        for &e in &pred_seq {
-            counts[e as usize] += 1;
+    for pred_seq in broadcast_topk(predictor, batch, k) {
+        for ranked in &pred_seq {
+            for &e in ranked {
+                counts[e as usize] += 1;
+            }
         }
     }
     counts
@@ -60,6 +173,7 @@ pub fn predicted_loads(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::predictor::distribution::DistributionEstimator;
     use crate::predictor::probability::ProbabilityModel;
     use crate::trace::{datasets, Trace};
 
@@ -94,10 +208,51 @@ mod tests {
         let (train, test) = trace.split(0.8);
         let mut m = ProbabilityModel::new();
         m.fit(&train);
-        let loads = predicted_loads(&m, &test.batches[0], 8);
+        let loads = predicted_loads(&m, &test.batches[0], 8, 1);
+        assert_eq!(loads.iter().sum::<usize>(), test.batches[0].n_tokens());
+        // k slots per token at k = 2.
+        let loads2 = predicted_loads(&m, &test.batches[0], 8, 2);
         assert_eq!(
-            loads.iter().sum::<usize>(),
-            test.batches[0].n_tokens()
+            loads2.iter().sum::<usize>(),
+            2 * test.batches[0].n_tokens()
         );
+    }
+
+    #[test]
+    fn topk_dominates_top1() {
+        let trace = Trace::generate(datasets::mmlu_like(54));
+        let (train, test) = trace.split(0.8);
+        let mut m = ProbabilityModel::new();
+        m.fit(&train);
+        let e1 = evaluate(&m, &test, 1);
+        let e2 = evaluate(&m, &test, 2);
+        assert!((e1.top1 - e1.topk).abs() < 1e-12, "k=1: set == argmax");
+        assert!(e2.topk >= e1.top1, "a wider set can only hit more");
+        assert!((e1.top1 - e2.top1).abs() < 1e-12, "top1 independent of k");
+    }
+
+    #[test]
+    fn dop_scores_through_the_same_api() {
+        // The ADR-005 point: a Distribution-Only estimator flows through
+        // the identical evaluate() call as a TEP classifier.
+        let trace = Trace::generate(datasets::sst2_like(55));
+        let (train, test) = trace.split(0.8);
+        let mut dop = DistributionEstimator::new(8);
+        dop.fit(&train);
+        let ev = evaluate(&dop, &test, 2);
+        assert!(ev.top1 > 0.0, "broadcast argmax must hit the hot expert");
+        assert!(ev.topk >= ev.top1);
+        // Its L1 share error equals the historic Table-1 error rate.
+        assert!((ev.dist_l1 - dop.error_rate(&test)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_l1_small_for_matched_distribution() {
+        let trace = Trace::generate(datasets::mmlu_like(56));
+        let (train, test) = trace.split(0.8);
+        let mut dop = DistributionEstimator::new(8);
+        dop.fit(&train);
+        let ev = evaluate(&dop, &test, 1);
+        assert!(ev.dist_l1 < 0.06, "l1={}", ev.dist_l1);
     }
 }

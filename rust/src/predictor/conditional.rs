@@ -1,10 +1,10 @@
 //! Conditional probability models (Appendix B): condition the frequency
 //! table on the token index or on the absolute position, and predict the
-//! per-condition argmax. Captures per-token / per-position routing biases
-//! at lookup-table cost.
+//! per-condition ranked experts. Captures per-token / per-position routing
+//! biases at lookup-table cost.
 
 use super::probability::ProbabilityModel;
-use super::TokenPredictor;
+use super::{rank_topk_u32, Predictor, PredictorFamily};
 use crate::trace::{Batch, Trace};
 
 /// What the frequency table is conditioned on.
@@ -43,18 +43,6 @@ impl ConditionalModel {
         }
     }
 
-    fn argmax_for(&self, cond: usize) -> Option<u8> {
-        let row = self.counts.get(cond)?;
-        let total: u32 = row.iter().sum();
-        if total == 0 {
-            return None;
-        }
-        row.iter()
-            .enumerate()
-            .max_by_key(|&(_, c)| *c)
-            .map(|(i, _)| i as u8)
-    }
-
     /// Memory footprint of the lookup table in entries (used by the
     /// overhead model).
     pub fn table_entries(&self) -> usize {
@@ -62,12 +50,16 @@ impl ConditionalModel {
     }
 }
 
-impl TokenPredictor for ConditionalModel {
+impl Predictor for ConditionalModel {
     fn name(&self) -> String {
         match self.conditioning {
             Conditioning::TokenId => "conditional-token".into(),
             Conditioning::Position => "conditional-position".into(),
         }
+    }
+
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::TokenToExpert
     }
 
     fn fit(&mut self, train: &Trace) {
@@ -90,29 +82,52 @@ impl TokenPredictor for ConditionalModel {
         self.fallback.fit(train);
     }
 
-    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
-        let fallback_preds = self.fallback.predict_batch(batch);
-        batch
-            .sequences
-            .iter()
-            .zip(fallback_preds)
-            .map(|(seq, fb)| {
-                seq.iter()
-                    .enumerate()
-                    .map(|(pos, tok)| {
-                        self.argmax_for(self.condition_index(tok.id, pos))
-                            .unwrap_or(fb[pos])
-                    })
-                    .collect()
-            })
-            .collect()
+    fn predict_distribution(&self) -> Vec<f64> {
+        self.fallback.predict_distribution()
+    }
+
+    fn predict_topk(&self, batch: &Batch, k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
+        let fallback_sets = self.fallback.predict_topk(batch, k)?;
+        let mut order = Vec::with_capacity(self.n_experts);
+        Some(
+            batch
+                .sequences
+                .iter()
+                .zip(fallback_sets)
+                .map(|(seq, fb)| {
+                    seq.iter()
+                        .enumerate()
+                        .zip(fb)
+                        .map(|((pos, tok), fb_ranked)| {
+                            let cond = self.condition_index(tok.id, pos);
+                            match self.counts.get(cond) {
+                                Some(row) if row.iter().sum::<u32>() > 0 => {
+                                    rank_topk_u32(row, k, &mut order)
+                                        .iter()
+                                        .map(|&e| e as u8)
+                                        .collect()
+                                }
+                                _ => fb_ranked,
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    /// Aggregate routed counts carry no condition labels, so the online
+    /// signal lands in the global fallback distribution (the conditional
+    /// table itself only learns offline, from labelled traces).
+    fn observe(&mut self, routed_counts: &[usize]) {
+        self.fallback.observe(routed_counts);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::predictor::accuracy::accuracy;
+    use crate::predictor::accuracy::{accuracy, top1_predictions};
     use crate::predictor::probability::ProbabilityModel;
     use crate::trace::{datasets, Trace};
 
@@ -158,7 +173,7 @@ mod tests {
         let (train, test) = trace.split(0.02);
         let mut cond = ConditionalModel::new(Conditioning::TokenId);
         cond.fit(&train);
-        let preds = cond.predict_batch(&test.batches[0]);
+        let preds = top1_predictions(&cond, &test.batches[0]);
         assert_eq!(preds.len(), test.batches[0].sequences.len());
         assert!(preds
             .iter()
@@ -175,5 +190,22 @@ mod tests {
         by_pos.fit(&trace);
         assert_eq!(by_token.table_entries(), trace.spec.vocab_size * 8);
         assert_eq!(by_pos.table_entries(), trace.spec.seq_len * 8);
+    }
+
+    #[test]
+    fn topk_sets_contain_the_argmax_and_respect_k() {
+        let trace = Trace::generate(datasets::mmlu_like(25));
+        let (train, test) = trace.split(0.8);
+        let mut cond = ConditionalModel::new(Conditioning::TokenId);
+        cond.fit(&train);
+        let k = 3;
+        let sets = cond.predict_topk(&test.batches[0], k).unwrap();
+        let top1 = top1_predictions(&cond, &test.batches[0]);
+        for (seq_sets, seq_top1) in sets.iter().zip(&top1) {
+            for (ranked, &argmax) in seq_sets.iter().zip(seq_top1) {
+                assert_eq!(ranked.len(), k);
+                assert_eq!(ranked[0], argmax, "rank 0 is the argmax");
+            }
+        }
     }
 }

@@ -8,7 +8,8 @@
 //! this equals the L1 distance between the estimated and the test-set
 //! empirical distributions.
 
-use crate::trace::Trace;
+use super::{Predictor, PredictorFamily};
+use crate::trace::{Batch, Trace};
 use crate::util::stats;
 
 /// Multinomial MLE estimator with optional exponential moving average.
@@ -53,14 +54,6 @@ impl DistributionEstimator {
                     .map(|(&a, &b)| (1.0 - self.ema_weight) * a + self.ema_weight * b)
                     .collect(),
             });
-        }
-    }
-
-    /// Fit on a whole training trace (batch-by-batch, as the paper's
-    /// "moving average" framing describes).
-    pub fn fit(&mut self, train: &Trace) {
-        for b in &train.batches {
-            self.update(&b.expert_counts(self.n_experts));
         }
     }
 
@@ -117,6 +110,39 @@ impl DistributionEstimator {
             })
             .collect();
         stats::mean(&errs)
+    }
+}
+
+/// The canonical Distribution-Only predictor behind the unified trait
+/// (ADR 005): `fit` replays a training trace batch-by-batch (the paper's
+/// "moving average" framing), `observe` is the streaming update the
+/// serving pipeline's router-settle stage feeds, and `predict_topk` is
+/// `None` — this family holds no per-token opinion.
+impl Predictor for DistributionEstimator {
+    fn name(&self) -> String {
+        "distribution-mle".into()
+    }
+
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::DistributionOnly
+    }
+
+    fn fit(&mut self, train: &Trace) {
+        for b in &train.batches {
+            self.update(&b.expert_counts(self.n_experts));
+        }
+    }
+
+    fn predict_distribution(&self) -> Vec<f64> {
+        self.mle()
+    }
+
+    fn predict_topk(&self, _batch: &Batch, _k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
+        None
+    }
+
+    fn observe(&mut self, routed_counts: &[usize]) {
+        self.update(routed_counts);
     }
 }
 

@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 
 use super::conditional::{ConditionalModel, Conditioning};
-use super::TokenPredictor;
+use super::{rank_topk_u32, Predictor, PredictorFamily};
 use crate::trace::{Batch, Trace};
 
 #[derive(Clone, Debug)]
@@ -48,9 +48,13 @@ impl Default for BigramModel {
     }
 }
 
-impl TokenPredictor for BigramModel {
+impl Predictor for BigramModel {
     fn name(&self) -> String {
         "bigram-context".into()
+    }
+
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::TokenToExpert
     }
 
     fn fit(&mut self, train: &Trace) {
@@ -71,34 +75,49 @@ impl TokenPredictor for BigramModel {
         self.fallback.fit(train);
     }
 
-    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
-        let fallback_preds = self.fallback.predict_batch(batch);
-        batch
-            .sequences
-            .iter()
-            .zip(fallback_preds)
-            .map(|(seq, fb)| {
-                seq.iter()
-                    .enumerate()
-                    .map(|(pos, tok)| {
-                        if pos == 0 {
-                            return fb[pos];
-                        }
-                        let key = (seq[pos - 1].id, tok.id);
-                        match self.counts.get(&key) {
-                            Some(row) if row.iter().sum::<u32>() >= self.min_support => {
-                                row.iter()
-                                    .enumerate()
-                                    .max_by_key(|&(_, c)| *c)
-                                    .map(|(i, _)| i as u8)
-                                    .unwrap_or(fb[pos])
+    fn predict_distribution(&self) -> Vec<f64> {
+        self.fallback.predict_distribution()
+    }
+
+    fn predict_topk(&self, batch: &Batch, k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
+        let fallback_sets = self.fallback.predict_topk(batch, k)?;
+        let mut order = Vec::with_capacity(self.n_experts);
+        Some(
+            batch
+                .sequences
+                .iter()
+                .zip(fallback_sets)
+                .map(|(seq, fb)| {
+                    seq.iter()
+                        .enumerate()
+                        .zip(fb)
+                        .map(|((pos, tok), fb_ranked)| {
+                            if pos == 0 {
+                                return fb_ranked;
                             }
-                            _ => fb[pos],
-                        }
-                    })
-                    .collect()
-            })
-            .collect()
+                            let key = (seq[pos - 1].id, tok.id);
+                            match self.counts.get(&key) {
+                                Some(row)
+                                    if row.iter().sum::<u32>() >= self.min_support =>
+                                {
+                                    rank_topk_u32(row, k, &mut order)
+                                        .iter()
+                                        .map(|&e| e as u8)
+                                        .collect()
+                                }
+                                _ => fb_ranked,
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    /// Aggregate routed counts carry no (prev, cur) labels; the online
+    /// signal lands in the fallback chain's global distribution.
+    fn observe(&mut self, routed_counts: &[usize]) {
+        self.fallback.observe(routed_counts);
     }
 }
 

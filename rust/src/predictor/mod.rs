@@ -1,21 +1,28 @@
 //! Prediction strategies for dynamic expert duplication (paper §3.2).
 //!
-//! Two families:
+//! Two families, one interface: every predictor — Distribution-Only or
+//! Token-to-Expert — implements the object-safe [`Predictor`] trait
+//! (ADR 005), so the calibration pipeline, the evaluation harness and the
+//! serving-side strategy controller all speak to one surface:
 //!
 //! * **Distribution-Only** ([`distribution`]) — a multinomial MLE over
 //!   observed routing history (Appendix A): predicts per-expert token
-//!   *shares*, maintained as a moving average offline, zero request-path
-//!   overhead.
+//!   *shares*, maintained online via [`Predictor::observe`], zero
+//!   request-path overhead. `predict_topk` is `None`: the family has no
+//!   per-token opinion (the evaluation harness broadcasts its ranked
+//!   share distribution instead, so both families score through one API).
 //! * **Token-to-Expert** — per-token expert classification (Appendix B):
 //!   [`probability`] (global argmax), [`conditional`] (token- or
 //!   position-conditioned argmax), [`markov`] (bigram/context model — our
 //!   stand-in for the sequence context the paper's LSTM exploits, see
 //!   DESIGN.md §3), and [`neural`] (an MLP with learned token embeddings,
-//!   trained in rust with Adam; the AOT/PJRT-served variant lives in
-//!   `runtime`/`coordinator`).
+//!   trained in rust with Adam; the AOT/PJRT-served variant is bridged
+//!   onto the serving path by `coordinator::predict`).
 //!
 //! [`overhead`] prices each predictor's request-path runtime on the
-//! simulated hardware, and [`accuracy`] is the shared evaluation harness.
+//! simulated hardware, and [`accuracy`] is the shared evaluation harness
+//! (top-1, top-k set hit rate, and L1 distribution error — one API for
+//! both families).
 
 pub mod accuracy;
 pub mod conditional;
@@ -27,22 +34,166 @@ pub mod probability;
 
 use crate::trace::{Batch, Trace};
 
-/// A token-to-expert predictor: fits on a training trace, then predicts the
-/// expert for every token of a batch *before routing runs* (it sees only
-/// token ids/positions, never the routing labels of the batch it predicts).
-pub trait TokenPredictor {
-    fn name(&self) -> String;
-    fn fit(&mut self, train: &Trace);
-    /// Predict experts for every sequence in the batch.
-    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>>;
+/// Which of the paper's two prediction families a predictor belongs to
+/// (§3.2): the family decides how the planner consumes its output
+/// (expected counts from shares vs exact per-token counts + quotas).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorFamily {
+    /// Predicts per-expert token *shares* (no per-token opinion).
+    DistributionOnly,
+    /// Predicts each token's routed expert set before routing runs.
+    TokenToExpert,
 }
 
-/// Fit + evaluate helper: returns accuracy on the test trace.
-pub fn fit_and_evaluate(
-    predictor: &mut dyn TokenPredictor,
-    train: &Trace,
-    test: &Trace,
-) -> f64 {
+impl PredictorFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorFamily::DistributionOnly => "distribution-only",
+            PredictorFamily::TokenToExpert => "token-to-expert",
+        }
+    }
+}
+
+/// The unified predictor interface (ADR 005). Object-safe: the
+/// calibration zoo, the evaluation harness and the online controller hold
+/// `Box<dyn Predictor>` / `&dyn Predictor` without caring which family or
+/// implementation is behind it.
+///
+/// The serving loop's contract: `fit` runs offline on a training trace;
+/// `predict_distribution` / `predict_topk` run on the request path
+/// *before routing* (they never see the routing labels of the batch they
+/// predict); `observe` feeds each layer's *actual* routed counts back
+/// after the router-settle stage, so estimates keep improving while
+/// serving (the §3.2.1 moving average, generalised to every predictor).
+pub trait Predictor {
+    fn name(&self) -> String;
+
+    fn family(&self) -> PredictorFamily;
+
+    /// Offline fit on a training trace.
+    fn fit(&mut self, train: &Trace);
+
+    /// Estimated per-expert share distribution for upcoming traffic
+    /// (sums to 1; uniform when nothing has been observed yet).
+    fn predict_distribution(&self) -> Vec<f64>;
+
+    /// Ranked top-k expert sets per token of the batch, `[seq][token][rank]`
+    /// (rank 0 = argmax). `None` for the Distribution-Only family, which
+    /// holds no per-token opinion — callers that need one per token
+    /// broadcast the ranked share distribution (see
+    /// [`accuracy::broadcast_topk`]).
+    fn predict_topk(&self, batch: &Batch, k: usize) -> Option<Vec<Vec<Vec<u8>>>>;
+
+    /// Online update from one batch/layer of observed routed per-expert
+    /// counts (fed from the pipeline's router-settle stage).
+    fn observe(&mut self, routed_counts: &[usize]);
+}
+
+/// Rank the descending top-k of an `n`-element score set into `order`
+/// (reused across calls to stay allocation-free). `desc` must be a total
+/// order — use `total_cmp` plus an index tie-break so non-finite scores
+/// can never panic and the selected set is deterministic. Partial
+/// selection + sorting only the k winners keeps this O(n) per call
+/// instead of a full O(n log n) sort — the shared kernel behind every
+/// top-k in the predictor zoo *and* the serving pipeline's AOT
+/// predictor head.
+pub fn rank_topk_by(
+    n: usize,
+    k: usize,
+    order: &mut Vec<usize>,
+    desc: impl Fn(&usize, &usize) -> std::cmp::Ordering,
+) {
+    order.clear();
+    order.extend(0..n);
+    if n == 0 {
+        return;
+    }
+    let k = k.clamp(1, n);
+    if k < n {
+        order.select_nth_unstable_by(k - 1, &desc);
+    }
+    order[..k].sort_unstable_by(&desc);
+    order.truncate(k);
+}
+
+/// [`rank_topk_by`] over an `f32` score row (predictor logits).
+pub fn rank_topk_f32<'a>(row: &[f32], k: usize, order: &'a mut Vec<usize>) -> &'a [usize] {
+    rank_topk_by(row.len(), k, order, |a, b| {
+        row[*b].total_cmp(&row[*a]).then(a.cmp(b))
+    });
+    order
+}
+
+/// [`rank_topk_by`] over an `f64` score row (share distributions).
+pub fn rank_topk_f64<'a>(row: &[f64], k: usize, order: &'a mut Vec<usize>) -> &'a [usize] {
+    rank_topk_by(row.len(), k, order, |a, b| {
+        row[*b].total_cmp(&row[*a]).then(a.cmp(b))
+    });
+    order
+}
+
+/// [`rank_topk_by`] over a `u32` count row (frequency tables).
+pub fn rank_topk_u32<'a>(row: &[u32], k: usize, order: &'a mut Vec<usize>) -> &'a [usize] {
+    rank_topk_by(row.len(), k, order, |a, b| {
+        row[*b].cmp(&row[*a]).then(a.cmp(b))
+    });
+    order
+}
+
+/// Fit + evaluate helper: returns top-1 accuracy on the test trace (the
+/// Figure-4 axis). For the full top-k / distribution-error report use
+/// [`fit_and_evaluate_k`].
+pub fn fit_and_evaluate(predictor: &mut dyn Predictor, train: &Trace, test: &Trace) -> f64 {
     predictor.fit(train);
     accuracy::accuracy(predictor, test)
+}
+
+/// Fit + the generalized evaluation (top-1, top-k set hit rate, L1 share
+/// error) — one call evaluating DOP and TEP predictors through one API.
+pub fn fit_and_evaluate_k(
+    predictor: &mut dyn Predictor,
+    train: &Trace,
+    test: &Trace,
+    k: usize,
+) -> accuracy::Evaluation {
+    predictor.fit(train);
+    accuracy::evaluate(predictor, test, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_topk_orders_and_truncates() {
+        let row = [0.1f32, 5.0, -2.0, 5.0, 3.0];
+        let mut order = Vec::new();
+        assert_eq!(rank_topk_f32(&row, 3, &mut order), &[1, 3, 4]);
+        assert_eq!(rank_topk_f32(&row, 1, &mut order), &[1]);
+        // k larger than n clamps; k == 0 clamps to 1.
+        assert_eq!(rank_topk_f32(&row, 99, &mut order), &[1, 3, 4, 0, 2]);
+        assert_eq!(rank_topk_f32(&row, 0, &mut order), &[1]);
+    }
+
+    #[test]
+    fn rank_topk_total_order_survives_nan() {
+        let row = [f32::NAN, 1.0, 2.0];
+        let mut order = Vec::new();
+        // NaN sorts below real scores under total_cmp's descending order.
+        assert_eq!(rank_topk_f32(&row, 2, &mut order), &[2, 1]);
+    }
+
+    #[test]
+    fn rank_topk_u32_ties_break_by_index() {
+        let row = [7u32, 9, 9, 1];
+        let mut order = Vec::new();
+        assert_eq!(rank_topk_u32(&row, 3, &mut order), &[1, 2, 0]);
+    }
+
+    #[test]
+    fn rank_topk_empty_row_is_empty() {
+        let row: [f64; 0] = [];
+        let mut order = vec![123];
+        assert!(rank_topk_f64(&row, 2, &mut order).is_empty());
+    }
 }

@@ -10,7 +10,7 @@
 //! see), one ReLU hidden layer, and an expert-logit head; trained with
 //! Adam on cross-entropy, exactly as Appendix B prescribes.
 
-use super::TokenPredictor;
+use super::{rank_topk_f32, Predictor, PredictorFamily};
 use crate::trace::{Batch, Trace};
 use crate::util::rng::Rng;
 
@@ -53,6 +53,9 @@ pub struct MlpPredictor {
     v: Vec<f32>,
     adam_t: u64,
     fitted: bool,
+    /// Per-expert label counts (train + observed) backing the trait's
+    /// share-distribution view of this classifier.
+    label_counts: Vec<u64>,
 }
 
 impl MlpPredictor {
@@ -70,6 +73,7 @@ impl MlpPredictor {
             v: Vec::new(),
             adam_t: 0,
             fitted: false,
+            label_counts: Vec::new(),
         }
     }
 
@@ -306,13 +310,18 @@ impl MlpPredictor {
     }
 }
 
-impl TokenPredictor for MlpPredictor {
+impl Predictor for MlpPredictor {
     fn name(&self) -> String {
         format!("mlp-h{}", self.config.hidden)
     }
 
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::TokenToExpert
+    }
+
     fn fit(&mut self, train: &Trace) {
         self.init(train.spec.vocab_size, train.spec.n_experts);
+        self.label_counts = vec![0; train.spec.n_experts];
         // Flatten (prev, cur, label) triples; prev of the first token is
         // the token itself (a BOS-like convention).
         let mut examples: Vec<(u32, u32, u8)> = Vec::with_capacity(train.n_tokens());
@@ -321,6 +330,7 @@ impl TokenPredictor for MlpPredictor {
                 for (pos, tok) in seq.iter().enumerate() {
                     let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
                     examples.push((prev, tok.id, tok.expert));
+                    self.label_counts[tok.expert as usize] += 1;
                 }
             }
         }
@@ -334,30 +344,52 @@ impl TokenPredictor for MlpPredictor {
         self.fitted = true;
     }
 
-    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
+    fn predict_distribution(&self) -> Vec<f64> {
+        let total: u64 = self.label_counts.iter().sum();
+        if total == 0 {
+            let e = self.n_experts.max(1);
+            return vec![1.0 / e as f64; e];
+        }
+        self.label_counts
+            .iter()
+            .map(|&c| c as f64 / total as f64)
+            .collect()
+    }
+
+    fn predict_topk(&self, batch: &Batch, k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
         assert!(self.fitted, "predict before fit");
         let h = self.config.hidden;
         let mut hid = vec![0.0f32; h];
         let mut logits = vec![0.0f32; self.n_experts];
-        batch
-            .sequences
-            .iter()
-            .map(|seq| {
-                seq.iter()
-                    .enumerate()
-                    .map(|(pos, tok)| {
-                        let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
-                        self.forward(prev, tok.id, &mut hid, &mut logits);
-                        logits
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.total_cmp(b.1))
-                            .map(|(i, _)| i as u8)
-                            .unwrap()
-                    })
-                    .collect()
-            })
-            .collect()
+        let mut order = Vec::with_capacity(self.n_experts);
+        Some(
+            batch
+                .sequences
+                .iter()
+                .map(|seq| {
+                    seq.iter()
+                        .enumerate()
+                        .map(|(pos, tok)| {
+                            let prev = if pos == 0 { tok.id } else { seq[pos - 1].id };
+                            self.forward(prev, tok.id, &mut hid, &mut logits);
+                            rank_topk_f32(&logits, k, &mut order)
+                                .iter()
+                                .map(|&e| e as u8)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    fn observe(&mut self, routed_counts: &[usize]) {
+        if self.label_counts.len() < routed_counts.len() {
+            self.label_counts.resize(routed_counts.len(), 0);
+        }
+        for (c, &b) in self.label_counts.iter_mut().zip(routed_counts) {
+            *c += b as u64;
+        }
     }
 }
 
@@ -415,8 +447,8 @@ mod tests {
         let mut b = MlpPredictor::new(fast_config());
         b.fit(&train);
         assert_eq!(
-            a.predict_batch(&test.batches[0]),
-            b.predict_batch(&test.batches[0])
+            a.predict_topk(&test.batches[0], 2),
+            b.predict_topk(&test.batches[0], 2)
         );
     }
 
@@ -455,6 +487,6 @@ mod tests {
     fn predict_requires_fit() {
         let trace = small_trace(44);
         let mlp = MlpPredictor::new(fast_config());
-        mlp.predict_batch(&trace.batches[0]);
+        mlp.predict_topk(&trace.batches[0], 1);
     }
 }

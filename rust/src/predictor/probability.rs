@@ -2,15 +2,17 @@
 //! most frequently activated in the training data — a static rule that
 //! ignores token identity. Its accuracy equals the global frequency of the
 //! most popular expert, so it *improves with skewness* (paper §4: higher
-//! skew makes accurate prediction cheaper).
+//! skew makes accurate prediction cheaper). Under the unified trait it
+//! also keeps learning online: every `observe` folds the routed counts
+//! into the global frequency table.
 
-use super::TokenPredictor;
+use super::{rank_topk_f64, Predictor, PredictorFamily};
 use crate::trace::{Batch, Trace};
 
 #[derive(Clone, Debug, Default)]
 pub struct ProbabilityModel {
-    /// argmax_i p̂_i after fitting.
-    best_expert: u8,
+    /// Global per-expert counts (train + observed).
+    counts: Vec<u64>,
     /// Fitted global distribution (kept for inspection).
     pub probs: Vec<f64>,
 }
@@ -19,41 +21,84 @@ impl ProbabilityModel {
     pub fn new() -> ProbabilityModel {
         ProbabilityModel::default()
     }
+
+    /// argmax of the fitted distribution (lowest index on ties).
+    pub fn best_expert(&self) -> u8 {
+        let mut order = Vec::with_capacity(self.probs.len());
+        rank_topk_f64(&self.probs, 1, &mut order)
+            .first()
+            .map(|&i| i as u8)
+            .unwrap_or(0)
+    }
+
+    fn refresh_probs(&mut self) {
+        let total: u64 = self.counts.iter().sum();
+        self.probs = self
+            .counts
+            .iter()
+            .map(|&c| if total == 0 { 0.0 } else { c as f64 / total as f64 })
+            .collect();
+    }
 }
 
-impl TokenPredictor for ProbabilityModel {
+impl Predictor for ProbabilityModel {
     fn name(&self) -> String {
         "probability".into()
     }
 
-    fn fit(&mut self, train: &Trace) {
-        let counts = train.expert_counts();
-        let total: usize = counts.iter().sum();
-        self.probs = counts
-            .iter()
-            .map(|&c| if total == 0 { 0.0 } else { c as f64 / total as f64 })
-            .collect();
-        self.best_expert = counts
-            .iter()
-            .enumerate()
-            .max_by_key(|&(_, c)| *c)
-            .map(|(i, _)| i as u8)
-            .unwrap_or(0);
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::TokenToExpert
     }
 
-    fn predict_batch(&self, batch: &Batch) -> Vec<Vec<u8>> {
-        batch
-            .sequences
+    fn fit(&mut self, train: &Trace) {
+        self.counts = train
+            .expert_counts()
+            .into_iter()
+            .map(|c| c as u64)
+            .collect();
+        self.refresh_probs();
+    }
+
+    fn predict_distribution(&self) -> Vec<f64> {
+        if self.counts.iter().sum::<u64>() == 0 {
+            let e = self.counts.len().max(1);
+            return vec![1.0 / e as f64; e];
+        }
+        self.probs.clone()
+    }
+
+    fn predict_topk(&self, batch: &Batch, k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
+        // Token-independent: the ranked global distribution broadcast to
+        // every token.
+        let mut order = Vec::with_capacity(self.probs.len());
+        let ranked: Vec<u8> = rank_topk_f64(&self.probs, k, &mut order)
             .iter()
-            .map(|seq| vec![self.best_expert; seq.len()])
-            .collect()
+            .map(|&e| e as u8)
+            .collect();
+        Some(
+            batch
+                .sequences
+                .iter()
+                .map(|seq| vec![ranked.clone(); seq.len()])
+                .collect(),
+        )
+    }
+
+    fn observe(&mut self, routed_counts: &[usize]) {
+        if self.counts.len() < routed_counts.len() {
+            self.counts.resize(routed_counts.len(), 0);
+        }
+        for (c, &b) in self.counts.iter_mut().zip(routed_counts) {
+            *c += b as u64;
+        }
+        self.refresh_probs();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::predictor::accuracy::accuracy;
+    use crate::predictor::accuracy::{accuracy, top1_predictions};
     use crate::trace::{datasets, Trace};
 
     #[test]
@@ -68,11 +113,12 @@ mod tests {
             .0;
         let mut m = ProbabilityModel::new();
         m.fit(&trace);
-        let preds = m.predict_batch(&trace.batches[0]);
+        let preds = top1_predictions(&m, &trace.batches[0]);
         assert!(preds
             .iter()
             .flat_map(|s| s.iter())
             .all(|&e| e as usize == argmax));
+        assert_eq!(m.best_expert() as usize, argmax);
     }
 
     #[test]
@@ -100,5 +146,28 @@ mod tests {
         let low = mk(datasets::mmlu_like(4)); // skew ~1.39
         let high = mk(datasets::sst2_like(4)); // skew ~1.99
         assert!(high > low, "high={high} low={low}");
+    }
+
+    #[test]
+    fn observe_shifts_the_argmax_online() {
+        let mut m = ProbabilityModel::new();
+        m.observe(&[10, 1, 1, 1]);
+        assert_eq!(m.best_expert(), 0);
+        // A sustained shift in routed traffic moves the prediction.
+        for _ in 0..5 {
+            m.observe(&[0, 50, 0, 0]);
+        }
+        assert_eq!(m.best_expert(), 1);
+        let d = m.predict_distribution();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_ranks_by_frequency() {
+        let mut m = ProbabilityModel::new();
+        m.observe(&[5, 30, 1, 20]);
+        let trace = Trace::generate(datasets::mmlu_like(6));
+        let sets = m.predict_topk(&trace.batches[0], 3).unwrap();
+        assert_eq!(sets[0][0], vec![1, 3, 0]);
     }
 }

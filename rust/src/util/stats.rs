@@ -55,6 +55,20 @@ pub fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
 }
 
+/// L1 distance between the *share* distributions of two count histograms
+/// (each normalised to sum to 1) — the Table-1 error metric applied to
+/// predicted-vs-routed per-expert counts. 0.0 when either side is empty.
+pub fn l1_of_counts(a: &[usize], b: &[usize]) -> f64 {
+    let (ta, tb): (usize, usize) = (a.iter().sum(), b.iter().sum());
+    if ta == 0 || tb == 0 || a.len() != b.len() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 / ta as f64 - y as f64 / tb as f64).abs())
+        .sum()
+}
+
 /// Normalise a non-negative vector to sum to 1. Uniform if the sum is 0.
 pub fn normalize(xs: &[f64]) -> Vec<f64> {
     let sum: f64 = xs.iter().sum();

@@ -1,0 +1,472 @@
+//! Closed-loop GPS acceptance suite (ADR 005).
+//!
+//! Pins the three contracts the online controller + calibrator must hold:
+//!
+//! 1. **Parity** — adaptive serving whose decisions are pinned is bitwise
+//!    identical to fixed-strategy serving (the controller observes and
+//!    records but the engine regime never moves, so numerics cannot).
+//! 2. **Drift flip** — a synthetic skew-ramp measurement trace provably
+//!    flips DOP→TEP at a replan boundary, the decision trace records the
+//!    flip, and hysteresis delays it by the configured streak.
+//! 3. **Calibration fidelity** — constants calibrated from an undrifted
+//!    measurement window reproduce the static sim's savings exactly, and
+//!    the `advise --from-serve` guideline map equals the static map when
+//!    the measured error matches the offline prior (the ratio-anchoring
+//!    identity).
+
+mod common;
+use std::sync::OnceLock;
+
+use common::{assert_bitwise_eq, mk_rounds};
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{
+    Coordinator, ControllerConfig, DecodeOptions, ServeStrategy, StrategyController,
+};
+use moe_gps::gps::calibrate::{calibrate_all, interpolate_for_skew, WorkloadCalibration};
+use moe_gps::gps::guidelines::decision_map_in;
+use moe_gps::gps::select::{recommend, Recommendation, Regime, ServePhase};
+use moe_gps::gps::{parse_serve_report, MeasuredConstants, OnlineCalibrator, WindowSample};
+use moe_gps::model::ModelConfig;
+use moe_gps::runtime::{EngineSource, HostTensor, SyntheticSpec};
+use moe_gps::sim::SystemSpec;
+
+fn source() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::small_test())
+}
+
+/// Fast offline calibration priors, computed once for the whole binary
+/// (every controller in these tests shares them).
+fn priors() -> &'static Vec<WorkloadCalibration> {
+    static PRIORS: OnceLock<Vec<WorkloadCalibration>> = OnceLock::new();
+    PRIORS.get_or_init(|| {
+        calibrate_all(
+            &ModelConfig::mixtral_8x7b(),
+            &SystemSpec::four_a100_nvlink(),
+            true,
+            7,
+        )
+    })
+}
+
+fn controller(cfg: ControllerConfig) -> StrategyController {
+    StrategyController::with_cals(cfg, priors().clone())
+}
+
+// ---------------------------------------------------------------- parity
+
+fn serve_prefill_outputs(
+    strategy: ServeStrategy,
+    adaptive_pinned: bool,
+) -> (Vec<Vec<HostTensor>>, Option<usize>) {
+    let mut coord = Coordinator::with_source(&source(), 4, strategy).unwrap();
+    coord.lookahead = 1;
+    if adaptive_pinned {
+        coord.controller = Some(controller(ControllerConfig {
+            pinned: true,
+            min_window: 1,
+            hysteresis: 1,
+            margin_frac: 0.0,
+            phase: ServePhase::Prefill,
+            ..Default::default()
+        }));
+    }
+    let rounds = mk_rounds(71, 4, 3);
+    let mut outputs = Vec::new();
+    // Mirror `Coordinator::serve`'s boundary protocol by hand so per-round
+    // outputs can be captured: consult the controller before each round
+    // past the first, observe the real metrics after.
+    for (i, round) in rounds.iter().enumerate() {
+        if i > 0 {
+            if let Some(mut ctrl) = coord.controller.take() {
+                let regime = coord.current_regime();
+                if let Some(d) = ctrl.decide(
+                    i,
+                    coord.strategy,
+                    coord.speculative,
+                    coord.lookahead,
+                    regime,
+                ) {
+                    coord.apply_decision(&d);
+                }
+                coord.controller = Some(ctrl);
+            }
+        }
+        let (m, out) = coord.serve_round(round).unwrap();
+        if let Some(ctrl) = coord.controller.as_mut() {
+            ctrl.observe_round(&m);
+        }
+        outputs.push(out);
+    }
+    let decisions = coord.controller.as_ref().map(|c| c.decisions().len());
+    (outputs, decisions)
+}
+
+#[test]
+fn adaptive_pinned_is_bitwise_identical_to_fixed() {
+    for strategy in [
+        ServeStrategy::DistributionOnly,
+        ServeStrategy::TokenToExpert,
+    ] {
+        let (fixed, _) = serve_prefill_outputs(strategy, false);
+        let (adaptive, _) = serve_prefill_outputs(strategy, true);
+        assert_bitwise_eq(
+            &fixed,
+            &adaptive,
+            &format!("adaptive-pinned vs fixed ({})", strategy.name()),
+        );
+    }
+}
+
+#[test]
+fn adaptive_pinned_decode_is_bitwise_identical_to_fixed() {
+    let run = |adaptive_pinned: bool| {
+        let mut coord =
+            Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+        coord.placement.replan_interval = 2;
+        if adaptive_pinned {
+            coord.controller = Some(controller(ControllerConfig {
+                pinned: true,
+                min_window: 1,
+                hysteresis: 1,
+                margin_frac: 0.0,
+                phase: ServePhase::Decode,
+                ..Default::default()
+            }));
+        }
+        let mut gen = RequestGen::new(73, coord.vocab());
+        let requests: Vec<_> = (0..4).map(|_| gen.decode_request(6, 8)).collect();
+        let opts = DecodeOptions {
+            max_active: 4,
+            max_steps: 24,
+            temperature: 0.0,
+            seed: 73,
+            arrival_interval: 0,
+        };
+        coord.serve_decode(requests, &opts).unwrap()
+    };
+    let fixed = run(false);
+    let adaptive = run(true);
+    assert_eq!(fixed.steps.len(), adaptive.steps.len(), "step count");
+    for (a, b) in fixed.steps.iter().zip(&adaptive.steps) {
+        assert_eq!(a.n_slots, b.n_slots, "step {} slots", a.step);
+        assert_eq!(
+            a.n_decode_tokens, b.n_decode_tokens,
+            "step {} decode rows",
+            a.step
+        );
+    }
+    // The pinned controller recorded its evaluations without switching.
+    let ctrl = adaptive.controller.expect("controller report present");
+    assert!(ctrl.switch_count() == 0, "pinned must never switch");
+    assert!(
+        !ctrl.decisions.is_empty(),
+        "boundaries past min_window must be recorded"
+    );
+    assert_eq!(adaptive.strategy, fixed.strategy, "strategy never moved");
+}
+
+// ------------------------------------------------------------ drift flip
+
+/// A measurement window sample shaped like healthy low-skew DOP serving
+/// (tight share error) or drifted high-skew serving (estimator lagging,
+/// share error blown out).
+fn measured_sample(skew: f64, share_l1: f64) -> WindowSample {
+    WindowSample {
+        tokens: 128.0,
+        total_s: 0.25,
+        routing_skew: skew,
+        pred_share_l1: share_l1,
+        pred_share_layers: 2.0,
+        ..Default::default()
+    }
+}
+
+/// Find a bandwidth where the calibrated decision is DOP at the calm
+/// operating point and TEP at the drifted one — the crossover the
+/// guideline map promises exists (paper §4: TEP gains as communication
+/// gets expensive and skew rises).
+fn crossover_bandwidth(
+    calm: &MeasuredConstants,
+    drifted: &MeasuredConstants,
+    model: &ModelConfig,
+) -> Option<f64> {
+    for bw in [600.0, 300.0, 128.0, 64.0, 32.0, 16.0, 8.0] {
+        let sys = SystemSpec::four_a100_custom_bw(bw);
+        let calm_cmp =
+            calm.savings(ServePhase::Prefill, model, &sys, priors(), 1, 512, Regime::default());
+        let drift_cmp = drifted.savings(
+            ServePhase::Prefill,
+            model,
+            &sys,
+            priors(),
+            1,
+            512,
+            Regime::default(),
+        );
+        if recommend(&calm_cmp) == Recommendation::DistributionOnly
+            && recommend(&drift_cmp) == Recommendation::TokenToExpert
+        {
+            return Some(bw);
+        }
+    }
+    None
+}
+
+#[test]
+fn skew_ramp_flips_dop_to_tep_at_a_replan_boundary() {
+    let model = ModelConfig::mixtral_8x7b();
+    // Calibrate the scenario: a calm window (low skew, tight share error)
+    // and a drifted one (high skew, estimator lagging 6x worse).
+    let mk_constants = |skew: f64, l1: f64| {
+        let mut cal = OnlineCalibrator::new(8);
+        for _ in 0..8 {
+            cal.push(measured_sample(skew, l1));
+        }
+        cal.constants().unwrap()
+    };
+    let calm = mk_constants(1.3, 0.02);
+    let drifted = mk_constants(4.5, 0.30);
+    let bw = crossover_bandwidth(&calm, &drifted, &model).expect(
+        "some bandwidth must put DOP ahead when calm and TEP ahead when \
+         drifted — the paper's crossover",
+    );
+
+    // Drive the controller across the ramp: 4 calm boundaries, then the
+    // measured window drifts. Hysteresis 2 ⇒ the flip lands on the second
+    // drifted boundary, not the first.
+    let mut ctrl = controller(ControllerConfig {
+        hysteresis: 2,
+        margin_frac: 0.0,
+        min_window: 4,
+        window: 4,
+        phase: ServePhase::Prefill,
+        system: SystemSpec::four_a100_custom_bw(bw),
+        model: model.clone(),
+        ..Default::default()
+    });
+    let mut strategy = ServeStrategy::DistributionOnly;
+    let mut speculative = false;
+    let mut lookahead = 1;
+    let mut switch_boundary = None;
+    for boundary in 1..=12 {
+        // Skew ramp: calm for 4 windows, then drifted.
+        let (skew, l1) = if boundary <= 4 { (1.3, 0.02) } else { (4.5, 0.30) };
+        ctrl.observe_sample(measured_sample(skew, l1));
+        if let Some(d) = ctrl.decide(
+            boundary,
+            strategy,
+            speculative,
+            lookahead,
+            Regime { overlap: lookahead > 0, speculative, memory_cap_bytes: None },
+        ) {
+            if d.strategy != strategy && switch_boundary.is_none() {
+                switch_boundary = Some(boundary);
+            }
+            strategy = d.strategy;
+            speculative = d.speculative;
+            lookahead = d.lookahead;
+        }
+    }
+    assert_eq!(
+        strategy,
+        ServeStrategy::TokenToExpert,
+        "the drifted regime must end on TEP"
+    );
+    let flip = switch_boundary.expect("a switch must have landed");
+    // The window is 4 samples; drift starts landing at boundary 5. With
+    // hysteresis 2 the earliest legal flip is boundary 6 (challenger at
+    // 5 and 6), and it must land while the ramp is in force.
+    assert!(flip >= 6, "hysteresis must delay the flip: flipped at {flip}");
+    assert!(flip <= 10, "flip must land during the drift: {flip}");
+
+    // The decision trace records the flip at that boundary.
+    let trace = ctrl.decisions();
+    let flip_rec = trace
+        .iter()
+        .find(|d| d.switched)
+        .expect("decision trace records the switch");
+    assert_eq!(flip_rec.boundary, flip);
+    assert_eq!(flip_rec.from, ServeStrategy::DistributionOnly);
+    assert_eq!(flip_rec.to, ServeStrategy::TokenToExpert);
+    assert!(flip_rec.measured.mean_skew > 3.0, "priced on drifted window");
+    // Boundaries before the hysteresis streak completed did not switch.
+    assert!(trace
+        .iter()
+        .filter(|d| d.boundary < flip)
+        .all(|d| !d.switched));
+    // The report block replays the trace.
+    let rep = ctrl.report(strategy);
+    assert_eq!(rep.switch_count(), 1);
+    assert_eq!(rep.final_strategy, "token-to-expert");
+}
+
+// --------------------------------------------- calibration fidelity + map
+
+#[test]
+fn undrifted_calibration_reproduces_static_sim_costs() {
+    let model = ModelConfig::mixtral_8x7b();
+    let system = SystemSpec::four_a100_nvlink();
+    let cals = priors();
+    let skew = 2.0;
+    // The static prior's error at this skew is what an undrifted run
+    // would measure live.
+    let (static_err, _) = interpolate_for_skew(cals, skew);
+    let mut cal = OnlineCalibrator::new(8);
+    for _ in 0..8 {
+        cal.push(measured_sample(skew, static_err));
+    }
+    let measured = cal.constants().unwrap();
+    assert!((measured.mean_skew - skew).abs() < 1e-12);
+    assert!((measured.dop_error.unwrap() - static_err).abs() < 1e-12);
+
+    let static_cmp = moe_gps::gps::strategy_savings_in(
+        &model,
+        &system,
+        cals,
+        skew,
+        1,
+        512,
+        Regime::default(),
+    );
+    let calibrated_cmp = measured.savings(
+        ServePhase::Prefill,
+        &model,
+        &system,
+        cals,
+        1,
+        512,
+        Regime::default(),
+    );
+    let tol = 1e-9 * static_cmp.baseline_s.max(1.0);
+    assert!((calibrated_cmp.baseline_s - static_cmp.baseline_s).abs() < tol);
+    assert!((calibrated_cmp.dop_saving_s - static_cmp.dop_saving_s).abs() < tol);
+    assert!(
+        (calibrated_cmp.tep_best_saving_s - static_cmp.tep_best_saving_s).abs() < tol
+    );
+    assert_eq!(recommend(&calibrated_cmp), recommend(&static_cmp));
+}
+
+#[test]
+fn from_serve_map_matches_static_map_on_undrifted_constants() {
+    let model = ModelConfig::mixtral_8x7b();
+    let cals = priors();
+    let skews = [1.0, 1.4, 2.0, 3.0, 4.0];
+    let bandwidths = [600.0, 300.0, 128.0, 64.0];
+    let skew = 2.0;
+    let (static_err, _) = interpolate_for_skew(cals, skew);
+    let mut cal = OnlineCalibrator::new(8);
+    for _ in 0..8 {
+        cal.push(measured_sample(skew, static_err));
+    }
+    let measured = cal.constants().unwrap();
+    // Undrifted measurement ⇒ ratio anchoring is the identity ⇒ the
+    // calibrated map IS the static map, cell for cell.
+    let adjusted = measured.apply_to_cals(cals);
+    for (a, b) in cals.iter().zip(&adjusted) {
+        assert!((a.dop_error - b.dop_error).abs() < 1e-12);
+    }
+    let static_map =
+        decision_map_in(&model, cals, &skews, &bandwidths, 1, 512, Regime::default());
+    let measured_map =
+        decision_map_in(&model, &adjusted, &skews, &bandwidths, 1, 512, Regime::default());
+    assert_eq!(static_map.len(), measured_map.len());
+    for (s, m) in static_map.iter().zip(&measured_map) {
+        assert_eq!(
+            s.recommendation, m.recommendation,
+            "cell (skew {}, bw {}) must not move on undrifted constants",
+            s.skewness, s.bandwidth_gbs
+        );
+        assert!((s.saving_frac - m.saving_frac).abs() < 1e-9);
+    }
+    // A drifted measurement (worse live error) does move the calibration.
+    let mut drifted_cal = OnlineCalibrator::new(8);
+    for _ in 0..8 {
+        drifted_cal.push(measured_sample(skew, static_err * 3.0));
+    }
+    let drifted = drifted_cal.constants().unwrap().apply_to_cals(cals);
+    assert!(drifted[0].dop_error > cals[0].dop_error * 2.0);
+}
+
+// ------------------------------------------------- report JSON round trip
+
+#[test]
+fn serve_report_json_parses_back_with_measured_constants() {
+    let mut coord =
+        Coordinator::with_source(&source(), 4, ServeStrategy::TokenToExpert).unwrap();
+    coord.lookahead = 1;
+    let rounds = mk_rounds(77, 6, 3);
+    let report = coord.serve(rounds).unwrap();
+    let json = report.to_json().to_string_pretty();
+    let served = parse_serve_report(&json).expect("report round-trips");
+    assert_eq!(served.phase, ServePhase::Prefill);
+    assert_eq!(served.strategy, "token-to-expert");
+    assert!(served.regime.overlap, "lookahead recorded as overlap regime");
+    assert!(!served.adaptive);
+    assert!(served.measured.samples >= 6);
+    assert!(served.measured.mean_skew >= 1.0);
+    assert!(
+        served.measured.tep_topk_hit.is_some(),
+        "TEP runs must measure a realized top-k hit rate"
+    );
+    assert!(
+        served.measured.dop_error.is_some(),
+        "predicted-vs-routed share error must be measured"
+    );
+    let check = served.check.expect("6 rounds is enough for the check");
+    assert!(check.delta_frac.is_finite());
+    // Realized accuracy flows into the aggregate report too. Top-k is a
+    // per-slot rate, top-1 a per-token rate (the offline definition), so
+    // both live in [0, 1] but neither bounds the other.
+    let hit = report.realized_topk_hit_rate().expect("TEP slots were scored");
+    assert!((0.0..=1.0).contains(&hit));
+    let top1 = report.realized_top1_rate().expect("TEP tokens were scored");
+    assert!((0.0..=1.0).contains(&top1));
+    assert!(report.mean_pred_share_l1().unwrap() >= 0.0);
+}
+
+#[test]
+fn adaptive_decode_serve_records_decisions_at_replan_boundaries() {
+    let mut coord =
+        Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+    coord.placement.replan_interval = 4;
+    coord.controller = Some(controller(ControllerConfig {
+        min_window: 2,
+        hysteresis: 1,
+        margin_frac: 0.0,
+        phase: ServePhase::Decode,
+        batch: 4,
+        seq_or_ctx: 64,
+        ..Default::default()
+    }));
+    let mut gen = RequestGen::new(79, coord.vocab());
+    let requests: Vec<_> = (0..4).map(|_| gen.decode_request(6, 12)).collect();
+    let opts = DecodeOptions {
+        max_active: 4,
+        max_steps: 32,
+        temperature: 0.0,
+        seed: 79,
+        arrival_interval: 0,
+    };
+    let report = coord.serve_decode(requests, &opts).unwrap();
+    let ctrl = report.controller.as_ref().expect("controller report");
+    assert!(
+        !ctrl.decisions.is_empty(),
+        "boundaries past min_window must be evaluated"
+    );
+    let mut prev = 0usize;
+    for d in &ctrl.decisions {
+        assert!(d.boundary > prev, "boundaries strictly increase");
+        assert_eq!(
+            d.boundary % 4,
+            0,
+            "consultation follows the replan cadence uniformly"
+        );
+        prev = d.boundary;
+    }
+    assert!(ctrl.calibrated.is_some(), "final constants recorded");
+    // The JSON report round-trips with the decision trace attached.
+    let served = parse_serve_report(&report.to_json().to_string_pretty()).unwrap();
+    assert!(served.adaptive);
+    assert_eq!(served.decisions, ctrl.decisions.len());
+    assert_eq!(served.switches, ctrl.switch_count());
+}
