@@ -260,6 +260,41 @@ pub mod emit {
         Ok(results.len())
     }
 
+    /// Forecast-accuracy regression gate (ADR 006): read a serve report
+    /// (`serve --horizon H --report F.json`) and assert its realized
+    /// forecast L1 (`forecast_l1` — the layer-weighted mean L1 distance
+    /// between forecast and realized expert shares) is present and at
+    /// most `max_l1`. A null or missing field means no forecasts matured
+    /// (horizon 0, or too short a run) and is an error — the gate must
+    /// measure something. Returns the measured value.
+    pub fn validate_forecast_error(path: &Path, max_l1: f64) -> anyhow::Result<f64> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        let l1 = v
+            .get("forecast_l1")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: no realized forecast error (`forecast_l1` missing or \
+                     null — serve with --horizon > 0 and enough replan windows)",
+                    path.display()
+                )
+            })?;
+        anyhow::ensure!(
+            l1.is_finite() && l1 >= 0.0,
+            "{}: invalid forecast_l1 {l1}",
+            path.display()
+        );
+        anyhow::ensure!(
+            l1 <= max_l1,
+            "realized forecast L1 {l1:.4} exceeds bound {max_l1} (the load \
+             forecaster regressed or the trace is adversarial)"
+        );
+        Ok(l1)
+    }
+
     /// Merge-write: replaces on-disk records with the same (bench,
     /// strategy, lookahead) key and keeps the rest, so independent bench
     /// binaries accumulate into one trajectory file.
@@ -364,6 +399,29 @@ pub mod emit {
             )
             .unwrap();
             assert!(validate_serve_benches(&path, false).is_err());
+            let _ = std::fs::remove_file(&path);
+        }
+
+        #[test]
+        fn forecast_gate_bounds_realized_l1() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_forecast_gate_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            assert!(validate_forecast_error(&path, 0.5).is_err(), "missing file");
+
+            std::fs::write(&path, "{\"forecast_l1\": 0.12}").unwrap();
+            let l1 = validate_forecast_error(&path, 0.5).unwrap();
+            assert!((l1 - 0.12).abs() < 1e-15);
+            assert!(validate_forecast_error(&path, 0.1).is_err(), "over bound");
+
+            // Null / missing: no forecasts matured — the gate must fail
+            // rather than silently pass a horizon-0 run.
+            std::fs::write(&path, "{\"forecast_l1\": null}").unwrap();
+            assert!(validate_forecast_error(&path, 0.5).is_err());
+            std::fs::write(&path, "{\"tokens_per_s\": 9.0}").unwrap();
+            assert!(validate_forecast_error(&path, 0.5).is_err());
             let _ = std::fs::remove_file(&path);
         }
     }

@@ -76,6 +76,15 @@ pub struct ControllerConfig {
     /// so a user-chosen deeper window is never silently cut.
     pub min_lookahead: usize,
     pub max_lookahead: usize,
+    /// Launched proactive forecast horizon (`serve --horizon`, ADR 006);
+    /// 0 = reactive replanning. Recorded so the decision trace shows what
+    /// the fallback gave up.
+    pub horizon: usize,
+    /// Realized forecast L1 error above which the controller falls back
+    /// to reactive replanning (horizon 0). One-way within a run: at
+    /// horizon 0 no forecasts mature, so no error signal exists to argue
+    /// for re-raising (ADR 006).
+    pub forecast_error_max: f64,
     /// Seed for the offline calibration priors.
     pub seed: u64,
 }
@@ -97,6 +106,8 @@ impl Default for ControllerConfig {
             spec_off_below: 0.3,
             min_lookahead: 0,
             max_lookahead: 2,
+            horizon: 0,
+            forecast_error_max: 0.5,
             seed: 7,
         }
     }
@@ -109,6 +120,8 @@ pub struct Decision {
     pub strategy: ServeStrategy,
     pub speculative: bool,
     pub lookahead: usize,
+    /// Proactive forecast horizon (0 = reactive — ADR 006).
+    pub horizon: usize,
 }
 
 /// One boundary's evaluation — recorded whether or not it switched, so
@@ -121,6 +134,8 @@ pub struct DecisionRecord {
     pub to: ServeStrategy,
     pub speculative: bool,
     pub lookahead: usize,
+    /// Forecast horizon in force after this boundary (ADR 006).
+    pub horizon: usize,
     pub switched: bool,
     /// The calibrated constants the decision was priced on.
     pub measured: MeasuredConstants,
@@ -138,6 +153,7 @@ impl DecisionRecord {
             .set("to", Value::Str(self.to.name().into()))
             .set("speculative", Value::Bool(self.speculative))
             .set("lookahead", Value::Num(self.lookahead as f64))
+            .set("horizon", Value::Num(self.horizon as f64))
             .set("switched", Value::Bool(self.switched))
             .set("measured", self.measured.to_json())
             .set("baseline_s", Value::Num(self.baseline_s))
@@ -334,13 +350,56 @@ impl StrategyController {
             new_lookahead = new_lookahead.max(1);
         }
 
+        // Forecast-error fallback (ADR 006): when the realized horizon
+        // forecast error breaches the threshold, the forecast is hurting
+        // more than a stale plan would — drop to reactive replanning.
+        // One-way within a run: at horizon 0 no forecasts mature, so no
+        // error signal exists to argue for re-raising.
+        let cur_horizon = regime.horizon;
+        let mut new_horizon = cur_horizon;
+        let mut horizon_note = String::new();
+        if cur_horizon > 0 {
+            if let Some(err) = measured.forecast_error {
+                if err > self.cfg.forecast_error_max {
+                    new_horizon = 0;
+                    horizon_note = format!(
+                        "; forecast L1 {:.2} > {:.2} — falling back to \
+                         reactive replanning (horizon {cur_horizon} -> 0)",
+                        err, self.cfg.forecast_error_max
+                    );
+                }
+            }
+        }
+
         let changed = switch
             || (!self.cfg.pinned
-                && (new_spec != speculative || new_lookahead != lookahead));
-        let (to, spec_out, depth_out) = if self.cfg.pinned {
-            (current, speculative, lookahead)
+                && (new_spec != speculative
+                    || new_lookahead != lookahead
+                    || new_horizon != cur_horizon));
+        let (to, spec_out, depth_out, horizon_out) = if self.cfg.pinned {
+            (current, speculative, lookahead, cur_horizon)
         } else {
-            (strategy, new_spec, new_lookahead)
+            (strategy, new_spec, new_lookahead, new_horizon)
+        };
+        let base_reason = if switch {
+            format!(
+                "{} wins by {:.1}% of baseline at measured skew {:.2} \
+                 (streak {streak}/{})",
+                winner.name(),
+                margin * 100.0,
+                cmp.skewness,
+                self.cfg.hysteresis
+            )
+        } else if challenger {
+            format!(
+                "{} challenging ({}/{} boundaries, margin {:.1}%)",
+                winner.name(),
+                streak,
+                self.cfg.hysteresis,
+                margin * 100.0
+            )
+        } else {
+            format!("{} holds (margin {:.1}%)", current.name(), margin * 100.0)
         };
         self.decisions.push(DecisionRecord {
             boundary,
@@ -348,37 +407,20 @@ impl StrategyController {
             to,
             speculative: spec_out,
             lookahead: depth_out,
+            horizon: horizon_out,
             switched: switch,
             measured,
             baseline_s: cmp.baseline_s,
             dop_saving_s: cmp.dop_saving_s,
             tep_saving_s: cmp.tep_best_saving_s,
-            reason: if switch {
-                format!(
-                    "{} wins by {:.1}% of baseline at measured skew {:.2} \
-                     (streak {streak}/{})",
-                    winner.name(),
-                    margin * 100.0,
-                    cmp.skewness,
-                    self.cfg.hysteresis
-                )
-            } else if challenger {
-                format!(
-                    "{} challenging ({}/{} boundaries, margin {:.1}%)",
-                    winner.name(),
-                    streak,
-                    self.cfg.hysteresis,
-                    margin * 100.0
-                )
-            } else {
-                format!("{} holds (margin {:.1}%)", current.name(), margin * 100.0)
-            },
+            reason: format!("{base_reason}{horizon_note}"),
         });
         if changed {
             Some(Decision {
                 strategy: to,
                 speculative: spec_out,
                 lookahead: depth_out,
+                horizon: horizon_out,
             })
         } else {
             None
@@ -494,6 +536,57 @@ mod tests {
         assert_eq!(c.decisions().len(), 2);
         assert!(!c.decisions()[0].switched);
         assert!(c.decisions()[1].switched);
+    }
+
+    #[test]
+    fn forecast_error_breach_falls_back_to_reactive() {
+        // Adversarial load: realized forecast L1 far above the threshold.
+        let mut c = test_controller(cfg());
+        for _ in 0..4 {
+            c.observe_sample(WindowSample {
+                forecast_l1: 1.2,
+                forecast_layers: 2.0,
+                ..skew_sample(1.0)
+            });
+        }
+        let regime = Regime {
+            horizon: 4,
+            ..Regime::default()
+        };
+        let d = c
+            .decide(1, ServeStrategy::DistributionOnly, false, 1, regime)
+            .expect("horizon fallback must be applied");
+        assert_eq!(d.horizon, 0, "breach must fall back to reactive");
+        let rec = c.decisions().last().unwrap();
+        assert_eq!(rec.horizon, 0);
+        assert!(
+            rec.reason.contains("falling back to reactive"),
+            "fallback must be logged in the decision trace: {}",
+            rec.reason
+        );
+
+        // Healthy forecasts keep the launched horizon.
+        let mut ok = test_controller(cfg());
+        for _ in 0..4 {
+            ok.observe_sample(WindowSample {
+                forecast_l1: 0.05,
+                forecast_layers: 2.0,
+                ..skew_sample(1.0)
+            });
+        }
+        if let Some(d) = ok.decide(
+            1,
+            ServeStrategy::DistributionOnly,
+            false,
+            1,
+            Regime {
+                horizon: 4,
+                ..Regime::default()
+            },
+        ) {
+            assert_eq!(d.horizon, 4, "healthy forecast must not fall back");
+        }
+        assert_eq!(ok.decisions().last().unwrap().horizon, 4);
     }
 
     #[test]

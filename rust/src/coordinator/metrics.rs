@@ -26,6 +26,8 @@ pub struct ReportMeta {
     pub memory_cap_bytes: Option<u64>,
     /// Whether the online strategy controller was driving (`--adaptive`).
     pub adaptive: bool,
+    /// Forecast horizon the placement planned for (0 = reactive, ADR 006).
+    pub horizon: usize,
 }
 
 impl ReportMeta {
@@ -42,7 +44,8 @@ impl ReportMeta {
                     None => Value::Null,
                 },
             )
-            .set("adaptive", Value::Bool(self.adaptive));
+            .set("adaptive", Value::Bool(self.adaptive))
+            .set("horizon", Value::Num(self.horizon as f64));
         v
     }
 }
@@ -119,6 +122,13 @@ pub struct RoundMetrics {
     pub pred_share_l1: f64,
     /// Layers that carried predicted counts (0 under NoPrediction).
     pub pred_share_layers: usize,
+    /// Mean realized forecast L1 error over the horizon forecasts that
+    /// matured this round: the h-step-ahead share forecast parked at plan
+    /// time vs the shares actually routed h observes later (ADR 006;
+    /// 0 layers ⇒ no forecast matured, e.g. horizon 0).
+    pub forecast_l1: f64,
+    /// (layer, forecast) pairs that matured and were scored this round.
+    pub forecast_layers: usize,
 }
 
 impl RoundMetrics {
@@ -301,6 +311,13 @@ impl ServeReport {
         stats::mean(&xs)
     }
 
+    /// Mean realized forecast L1 error across rounds where a horizon
+    /// forecast matured (`None` at horizon 0 / before any maturation) —
+    /// the CI forecast-accuracy gate's number (ADR 006).
+    pub fn mean_forecast_l1(&self) -> Option<f64> {
+        mean_forecast_l1(self.rounds.iter().map(|r| (r.forecast_l1, r.forecast_layers)))
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema: run meta +
     /// aggregates + per-round calibration samples + the fitted measured
     /// constants + the fit-vs-holdout check + the controller trace — the
@@ -312,6 +329,7 @@ impl ServeReport {
             &self.strategy,
             self.throughput(),
             self.total_tokens(),
+            self.mean_forecast_l1(),
             &samples,
             self.controller.as_ref(),
         )
@@ -349,6 +367,9 @@ impl ServeReport {
         }
         if let Some(l1) = self.mean_pred_share_l1() {
             s.push_str(&format!("  share L1={:.3}", l1));
+        }
+        if let Some(l1) = self.mean_forecast_l1() {
+            s.push_str(&format!("  forecast L1={:.3}", l1));
         }
         if let Some(c) = &self.controller {
             s.push_str(&format!(
@@ -424,6 +445,11 @@ pub struct DecodeStepMetrics {
     pub pred_share_l1: f64,
     /// Layers that carried predicted counts this step.
     pub pred_share_layers: usize,
+    /// Mean realized forecast L1 error over forecasts that matured this
+    /// step (ADR 006 — see [`RoundMetrics::forecast_l1`]).
+    pub forecast_l1: f64,
+    /// (layer, forecast) pairs that matured and were scored this step.
+    pub forecast_layers: usize,
 }
 
 impl DecodeStepMetrics {
@@ -618,6 +644,12 @@ impl DecodeReport {
         stats::mean(&xs)
     }
 
+    /// Mean realized forecast L1 error across steps where a horizon
+    /// forecast matured (see [`ServeReport::mean_forecast_l1`]).
+    pub fn mean_forecast_l1(&self) -> Option<f64> {
+        mean_forecast_l1(self.steps.iter().map(|s| (s.forecast_l1, s.forecast_layers)))
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema (see
     /// [`ServeReport::to_json`]).
     pub fn to_json(&self) -> Value {
@@ -627,6 +659,7 @@ impl DecodeReport {
             &self.strategy,
             self.decode_tokens_per_s(),
             self.total_decode_tokens(),
+            self.mean_forecast_l1(),
             &samples,
             self.controller.as_ref(),
         )
@@ -666,6 +699,9 @@ impl DecodeReport {
         if let Some(l1) = self.mean_pred_share_l1() {
             s.push_str(&format!("  share L1={:.3}", l1));
         }
+        if let Some(l1) = self.mean_forecast_l1() {
+            s.push_str(&format!("  forecast L1={:.3}", l1));
+        }
         if let Some(c) = &self.controller {
             s.push_str(&format!(
                 "  adaptive: {} decisions / {} switches -> {}",
@@ -675,6 +711,23 @@ impl DecodeReport {
             ));
         }
         s
+    }
+}
+
+/// Layer-weighted mean of per-round/step realized forecast L1s (`None`
+/// when no forecast matured anywhere in the run — e.g. horizon 0).
+fn mean_forecast_l1(per_window: impl Iterator<Item = (f64, usize)>) -> Option<f64> {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for (l1, layers) in per_window {
+        if layers > 0 {
+            sum += l1 * layers as f64;
+            n += layers;
+        }
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(sum / n as f64)
     }
 }
 
@@ -688,6 +741,7 @@ fn report_json(
     strategy: &str,
     tokens_per_s: f64,
     tokens: usize,
+    forecast_l1: Option<f64>,
     samples: &[WindowSample],
     controller: Option<&ControllerReport>,
 ) -> Value {
@@ -701,6 +755,13 @@ fn report_json(
         .set("strategy", Value::Str(strategy.into()))
         .set("tokens", Value::Num(tokens as f64))
         .set("tokens_per_s", Value::Num(tokens_per_s))
+        .set(
+            "forecast_l1",
+            match forecast_l1 {
+                Some(l1) => Value::Num(l1),
+                None => Value::Null,
+            },
+        )
         .set(
             "measured",
             match cal.constants() {
@@ -884,6 +945,52 @@ mod tests {
         assert_eq!(decode.total_spec_dispatch_slots(), 1);
         assert_eq!(decode.total_spec_repair_slots(), 1);
         assert!(decode.summary().contains("tile reuse=8/10"));
+    }
+
+    #[test]
+    fn forecast_l1_aggregates_layer_weighted_and_skips_empty_windows() {
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![
+                // Horizon-0 round: no forecast matured — must not drag the
+                // mean toward zero.
+                RoundMetrics::default(),
+                RoundMetrics {
+                    forecast_l1: 0.2,
+                    forecast_layers: 1,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    forecast_l1: 0.5,
+                    forecast_layers: 3,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        // (0.2·1 + 0.5·3) / 4 = 0.425
+        let l1 = serve.mean_forecast_l1().expect("forecasts matured");
+        assert!((l1 - 0.425).abs() < 1e-12);
+        assert!(serve.summary().contains("forecast L1=0.425"));
+
+        let reactive = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![RoundMetrics::default()],
+            ..Default::default()
+        };
+        assert!(reactive.mean_forecast_l1().is_none());
+        assert!(!reactive.summary().contains("forecast L1"));
+
+        let decode = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![DecodeStepMetrics {
+                forecast_l1: 0.1,
+                forecast_layers: 2,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert!((decode.mean_forecast_l1().unwrap() - 0.1).abs() < 1e-12);
     }
 
     #[test]

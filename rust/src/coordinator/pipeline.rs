@@ -53,8 +53,11 @@
 //! **Speculative TEP scatter** (`Coordinator::speculative`, ADR 003 —
 //! the full §3.1 contract): with lookahead on and Token-to-Expert
 //! predictions in hand, each layer's per-token dispatch targets are
-//! derived from predictions + plan alone *during the previous layer's
-//! FFN phase* (no activations needed). At the FFN stage, slots whose
+//! derived from predictions + plan alone *during an earlier layer's
+//! FFN phase* (no activations needed) — depth-k under ADR 006: the
+//! target-build window tracks the prewarm window, so layer `L+k`'s
+//! targets can be derived up to `k` FFN waits ahead of their use
+//! instead of always exactly one. At the FFN stage, slots whose
 //! routed expert confirms the prediction ship immediately — before the
 //! dispatcher/LPT machinery runs — so workers compute confirmed tiles
 //! while the leader plans the misprediction-*repair* pass for the rest
@@ -473,14 +476,21 @@ impl Coordinator {
         let refetch_bytes0 = self.residency.refetch_bytes;
         // Speculative TEP scatter (§3.1 full contract, ADR 003): requires
         // per-token predictions (TEP) and the lookahead pipeline. Layer
-        // 0's targets are built eagerly; every later layer's targets are
-        // built during the previous layer's FFN wait (see `ffn_stage`).
+        // 0's targets are built eagerly; later layers' targets are built
+        // during earlier layers' FFN waits (see `ffn_stage`) — depth-k
+        // speculation (ADR 006, closing the ADR-003 depth-1 follow-up):
+        // the build window tracks the prewarm window (`lookahead` layers
+        // deep), so on deep-lookahead configs target derivation for layer
+        // L+k amortises over k FFN waits instead of crowding into one.
+        // Targets are pure functions of (predictions, plan), so build
+        // depth moves scheduling only — never values.
         let speculate = self.speculative && self.lookahead > 0 && predictions.is_some();
-        let mut spec: Option<SpecTargets> = if speculate {
-            predictions.map(|p| SpecTargets::build(&p[0], &plans[0]))
-        } else {
-            None
-        };
+        let mut spec_cache: BTreeMap<usize, SpecTargets> = BTreeMap::new();
+        if speculate {
+            if let Some(p) = predictions {
+                spec_cache.insert(0, SpecTargets::build(&p[0], &plans[0]));
+            }
+        }
         // With worker-offloaded attention the Attention messages share the
         // workers' serial queues: prewarms enqueued first would sit *ahead*
         // of attention work and put the transfer on the attention critical
@@ -590,12 +600,22 @@ impl Coordinator {
             // prewarms this layer's dispatch actually needs). Under
             // speculation, confirmed-prediction slots ship first and the
             // next layer's targets are derived while the workers compute.
-            let spec_in = spec.take();
-            let mut spec_out = None;
-            let spec_next = if speculate && layer + 1 < n_layers {
-                predictions.map(|p| (&plans[layer + 1], p[layer + 1].as_slice()))
+            let spec_in = spec_cache.remove(&layer);
+            let mut spec_built: Vec<(usize, SpecTargets)> = Vec::new();
+            // Depth-k build window (ADR 006): derive targets for every
+            // not-yet-cached layer of the lookahead window during this
+            // layer's FFN wait, nearest first.
+            let spec_next: Vec<(usize, &LayerPlan, &[Vec<Vec<u8>>])> = if speculate {
+                predictions
+                    .map(|p| {
+                        (layer + 1..=window_end)
+                            .filter(|l| !spec_cache.contains_key(l))
+                            .map(|l| (l, &plans[l], p[l].as_slice()))
+                            .collect()
+                    })
+                    .unwrap_or_default()
             } else {
-                None
+                Vec::new()
             };
             self.ffn_stage(
                 layer,
@@ -605,11 +625,11 @@ impl Coordinator {
                 hidden,
                 prewarmer.as_mut(),
                 spec_in,
-                spec_next,
-                &mut spec_out,
+                &spec_next,
+                &mut spec_built,
                 metrics,
             )?;
-            spec = spec_out;
+            spec_cache.extend(spec_built);
 
             // Stage: observe actual routing (the §3.2.1 moving average
             // keeps teaching the DOP estimators while serving).
@@ -839,9 +859,10 @@ impl Coordinator {
     /// expert matches the prediction made before attention ship on a fast
     /// path *before* the dispatcher runs, so workers compute confirmed
     /// tiles while the leader plans the misprediction-repair pass; the
-    /// next layer's speculative targets (`spec_out`) are derived during
-    /// this layer's FFN wait — pure §3.1: prediction happens ahead of the
-    /// compute that would otherwise serialise dispatch.
+    /// lookahead window's speculative targets (`spec_next` → `spec_out`,
+    /// depth-k under ADR 006) are derived during this layer's FFN wait —
+    /// pure §3.1: prediction happens ahead of the compute that would
+    /// otherwise serialise dispatch.
     fn ffn_stage(
         &mut self,
         layer: usize,
@@ -851,14 +872,14 @@ impl Coordinator {
         hidden: &mut [HostTensor],
         mut prewarmer: Option<&mut Prewarmer>,
         spec_in: Option<SpecTargets>,
-        spec_next: Option<(&LayerPlan, &[Vec<Vec<u8>>])>,
-        spec_out: &mut Option<SpecTargets>,
+        spec_next: &[(usize, &LayerPlan, &[Vec<Vec<u8>>])],
+        spec_out: &mut Vec<(usize, SpecTargets)>,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
         let d = self.dims.d_model;
         if slots.is_empty() {
-            if let Some((plan_next, preds_next)) = spec_next {
-                *spec_out = Some(SpecTargets::build(preds_next, plan_next));
+            for &(l, plan_next, preds_next) in spec_next {
+                spec_out.push((l, SpecTargets::build(preds_next, plan_next)));
             }
             return Ok(());
         }
@@ -977,10 +998,12 @@ impl Coordinator {
         drop(reply_tx);
 
         // The workers are now busy with this layer's tiles — exactly the
-        // window in which the next layer's speculative targets are
+        // window in which the lookahead window's speculative targets are
         // derivable from predictions + plan alone (no activations needed).
-        if let Some((plan_next, preds_next)) = spec_next {
-            *spec_out = Some(SpecTargets::build(preds_next, plan_next));
+        // Depth-k (ADR 006): nearest layer first; each deeper layer's
+        // build amortises over the FFN waits between here and its use.
+        for &(l, plan_next, preds_next) in spec_next {
+            spec_out.push((l, SpecTargets::build(preds_next, plan_next)));
         }
 
         // Collect every tile's rows into a per-slot buffer first …

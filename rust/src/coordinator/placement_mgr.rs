@@ -19,7 +19,20 @@ use super::predict::expected_counts;
 use crate::duplication::algorithm::{balance, BalanceResult};
 use crate::duplication::placement::Placement;
 use crate::predictor::distribution::DistributionEstimator;
+use crate::predictor::forecast::LoadForecaster;
 use crate::predictor::Predictor;
+use crate::util::stats;
+
+/// A forecast issued at plan time, waiting for reality to catch up: when
+/// `due_in` more observations have arrived for its layer, the forecast
+/// shares are scored (L1) against the actually routed distribution —
+/// the *realized* forecast error the controller's reactive fallback and
+/// the online calibrator consume (ADR 006).
+#[derive(Clone, Debug)]
+struct PendingForecast {
+    shares: Vec<f64>,
+    due_in: usize,
+}
 
 /// Per-layer plan for one round.
 #[derive(Clone, Debug)]
@@ -42,6 +55,21 @@ pub struct PlacementManager {
     pub max_copies: usize,
     /// Online estimators, one per layer (Distribution-Only state).
     pub estimators: Vec<DistributionEstimator>,
+    /// Load-trajectory forecasters, one per layer (ADR 006) — fed from
+    /// the same `observe` stream as the estimators, consulted instead of
+    /// them when `horizon > 0`.
+    pub forecasters: Vec<LoadForecaster>,
+    /// Proactive replanning horizon in observe-steps (ADR 006): 0 (the
+    /// default) plans reactively from the current estimate — bitwise
+    /// identical to pre-forecasting serving; `h > 0` plans for the
+    /// forecast distribution `h` steps ahead, so replicas for
+    /// predicted-hot experts are in the plan (and prewarmed by the
+    /// lookahead machinery) *before* their load peaks.
+    pub horizon: usize,
+    /// Per-layer forecast awaiting its realization (scored in `observe`).
+    pending_forecasts: Vec<Option<PendingForecast>>,
+    /// Realized forecast L1 errors since the last drain.
+    realized_forecast_l1s: Vec<f64>,
     static_placement: Placement,
     /// Decode-phase replan cadence: rebuild the Algorithm-1 plans every
     /// `replan_interval` steps and reuse them in between, amortising the
@@ -73,6 +101,12 @@ impl PlacementManager {
             estimators: (0..n_layers)
                 .map(|_| DistributionEstimator::new(n_experts))
                 .collect(),
+            forecasters: (0..n_layers)
+                .map(|_| LoadForecaster::new(n_experts))
+                .collect(),
+            horizon: 0,
+            pending_forecasts: (0..n_layers).map(|_| None).collect(),
+            realized_forecast_l1s: Vec::new(),
             static_placement: Placement::initial(n_experts, n_workers, capacity, max_copies),
             replan_interval: 1,
             cached_decode_plans: None,
@@ -106,16 +140,75 @@ impl PlacementManager {
     /// DOP plan for a layer: expected counts = p̂ · total_slots, via the
     /// unified predictor surface (`predict_distribution` + the shared
     /// share→counts conversion in `coordinator::predict`, ADR 005).
-    pub fn plan_distribution_only(&self, layer: usize, total_slots: usize) -> LayerPlan {
-        let probs = self.estimators[layer].predict_distribution();
+    ///
+    /// With `horizon > 0` (ADR 006) the shares come from the layer's
+    /// load-trajectory forecaster instead — the plan is built for the
+    /// *forecast* distribution `horizon` observe-steps ahead (proactive
+    /// replanning), and the forecast is parked for realized-error scoring
+    /// when reality catches up (`observe` → `drain_forecast_errors`).
+    /// `horizon == 0` takes the exact pre-forecasting estimator path, so
+    /// reactive serving stays bitwise identical.
+    pub fn plan_distribution_only(&mut self, layer: usize, total_slots: usize) -> LayerPlan {
+        let probs = if self.horizon == 0 {
+            self.estimators[layer].predict_distribution()
+        } else {
+            let shares = self.forecasters[layer].predict_horizon(self.horizon);
+            // One in-flight forecast per layer: when replanning outpaces
+            // the horizon (e.g. prefill replans every round), the parked
+            // forecast rides to maturity and the next one parks after it
+            // scores — never overwritten, or horizon ≥ 2 would go
+            // unmeasured.
+            if self.pending_forecasts[layer].is_none() {
+                self.pending_forecasts[layer] = Some(PendingForecast {
+                    shares: shares.clone(),
+                    due_in: self.horizon,
+                });
+            }
+            shares
+        };
         self.plan_from_counts(&expected_counts(&probs, total_slots))
     }
 
     /// Feed observed routing back into the estimators (the moving average
     /// keeps improving while serving — §3.2.1) through the trait's
-    /// `observe` hook, fed from the pipeline's router-settle stage.
+    /// `observe` hook, fed from the pipeline's router-settle stage. The
+    /// forecasters ride the same stream (warm even while `horizon == 0`,
+    /// so the controller can raise the horizon mid-run), and a pending
+    /// forecast whose target step has arrived is scored here: the L1
+    /// between what was forecast at plan time and what actually routed —
+    /// the *realized* forecast error (ADR 006).
     pub fn observe(&mut self, layer: usize, actual_counts: &[usize]) {
         self.estimators[layer].observe(actual_counts);
+        self.forecasters[layer].observe(actual_counts);
+        if let Some(p) = self.pending_forecasts[layer].as_mut() {
+            if p.due_in <= 1 {
+                let total: usize = actual_counts.iter().sum();
+                if total > 0 {
+                    let actual: Vec<f64> = actual_counts
+                        .iter()
+                        .map(|&c| c as f64 / total as f64)
+                        .collect();
+                    self.realized_forecast_l1s
+                        .push(stats::l1_distance(&p.shares, &actual));
+                }
+                self.pending_forecasts[layer] = None;
+            } else {
+                p.due_in -= 1;
+            }
+        }
+    }
+
+    /// Mean realized forecast L1 error and the number of scored layer
+    /// forecasts since the last drain (cleared on read). The caller folds
+    /// these into the round/step metrics; `(0.0, 0)` = nothing matured.
+    pub fn drain_forecast_errors(&mut self) -> (f64, usize) {
+        let n = self.realized_forecast_l1s.len();
+        if n == 0 {
+            return (0.0, 0);
+        }
+        let mean = stats::mean(&self.realized_forecast_l1s);
+        self.realized_forecast_l1s.clear();
+        (mean, n)
     }
 
     /// Whether the decode cadence rebuilds plans at `step`.
@@ -236,7 +329,7 @@ mod tests {
 
     #[test]
     fn fresh_estimator_plans_uniform() {
-        let m = mgr();
+        let mut m = mgr();
         let plan = m.plan_distribution_only(0, 512);
         assert_eq!(plan.predicted_counts.iter().sum::<usize>(), 512);
         assert!(plan.added.is_empty(), "uniform estimate needs no replicas");
@@ -309,5 +402,86 @@ mod tests {
         assert!(!m.replans_at(1));
         m.reset_decode_plans();
         assert!(m.replans_at(1));
+    }
+
+    #[test]
+    fn horizon_zero_plans_match_reactive_exactly() {
+        let mut reactive = mgr();
+        let mut forecasting = mgr();
+        forecasting.horizon = 0; // explicit: the default
+        for t in 0..6usize {
+            let counts = [40 + 20 * t, 40, 40, 40, 40, 40, 40, 40];
+            reactive.observe(2, &counts);
+            forecasting.observe(2, &counts);
+        }
+        let a = reactive.plan_distribution_only(2, 512);
+        let b = forecasting.plan_distribution_only(2, 512);
+        assert_eq!(a.predicted_counts, b.predicted_counts);
+        assert_eq!(a.placement, b.placement);
+    }
+
+    #[test]
+    fn proactive_plan_replicates_ramping_expert_before_reactive_does() {
+        // Expert 0 ramps linearly; by the horizon target it is hot enough
+        // to deserve a replica, but the *current* estimate is still too
+        // cool — the proactive plan must carry the replica first.
+        let mut m = mgr();
+        m.horizon = 4;
+        for t in 0..8usize {
+            m.observe(0, &[40 + 30 * t, 40, 40, 40, 40, 40, 40, 40]);
+        }
+        let proactive = m.plan_distribution_only(0, 512);
+        let mut reactive = mgr();
+        for t in 0..8usize {
+            reactive.observe(0, &[40 + 30 * t, 40, 40, 40, 40, 40, 40, 40]);
+        }
+        let now = reactive.plan_distribution_only(0, 512);
+        assert!(
+            proactive.predicted_counts[0] > now.predicted_counts[0],
+            "forecast must extrapolate the ramp: {} <= {}",
+            proactive.predicted_counts[0],
+            now.predicted_counts[0]
+        );
+        assert!(
+            proactive.placement.copies(0) >= now.placement.copies(0),
+            "proactive plan must not carry fewer replicas of the ramping expert"
+        );
+    }
+
+    #[test]
+    fn realized_forecast_error_scores_when_reality_arrives() {
+        let mut m = mgr();
+        m.horizon = 2;
+        // Constant load: the matured forecast should be near-perfect.
+        for _ in 0..6 {
+            m.observe(1, &[100, 100, 100, 100, 100, 100, 100, 100]);
+        }
+        let _plan = m.plan_distribution_only(1, 512);
+        assert_eq!(m.drain_forecast_errors(), (0.0, 0), "not matured yet");
+        m.observe(1, &[100, 100, 100, 100, 100, 100, 100, 100]);
+        assert_eq!(m.drain_forecast_errors().1, 0, "one step short");
+        m.observe(1, &[100, 100, 100, 100, 100, 100, 100, 100]);
+        let (err, n) = m.drain_forecast_errors();
+        assert_eq!(n, 1, "horizon-2 forecast matures on the second observe");
+        assert!(err < 1e-9, "constant load forecast error must vanish: {err}");
+        // Drained: a second read is empty.
+        assert_eq!(m.drain_forecast_errors(), (0.0, 0));
+        // An adversarial alternating trace realizes a large error.
+        let mut adv = mgr();
+        adv.horizon = 1;
+        for t in 0..10usize {
+            let counts = if t % 2 == 0 {
+                [400, 10, 10, 10, 10, 10, 10, 10]
+            } else {
+                [10, 400, 10, 10, 10, 10, 10, 10]
+            };
+            adv.observe(3, &counts);
+            if t == 8 {
+                let _ = adv.plan_distribution_only(3, 512);
+            }
+        }
+        let (err, n) = adv.drain_forecast_errors();
+        assert_eq!(n, 1);
+        assert!(err > 0.5, "alternating load must realize a large error: {err}");
     }
 }

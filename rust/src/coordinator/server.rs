@@ -369,6 +369,11 @@ impl Coordinator {
             &mut stage,
         )?;
         stage.apply_to_round(&mut metrics);
+        // Horizon forecasts parked at plan time mature inside the layer
+        // loop's observes; score them into this round (ADR 006).
+        let (forecast_l1, forecast_layers) = self.placement.drain_forecast_errors();
+        metrics.forecast_l1 = forecast_l1;
+        metrics.forecast_layers = forecast_layers;
         metrics.total_s = round_start.elapsed().as_secs_f64();
 
         // Trim outputs to real tokens.
@@ -415,6 +420,10 @@ impl Coordinator {
             overlap: self.lookahead > 0,
             speculative: self.speculative,
             memory_cap_bytes: self.residency.cap_bytes().map(|b| b as f64),
+            horizon: self.placement.horizon,
+            // The sim's default drift stands in until the calibrator has a
+            // measured realized forecast error to substitute (ADR 006).
+            forecast_drift: None,
         }
     }
 
@@ -428,6 +437,9 @@ impl Coordinator {
         if self.speculative {
             self.lookahead = self.lookahead.max(1);
         }
+        // Proactive horizon (0 = reactive). The controller lowers this to
+        // 0 when realized forecast error breaches its threshold (ADR 006).
+        self.placement.horizon = d.horizon;
         // Cached decode plans were built for the old regime; the next
         // step replans fresh.
         self.placement.reset_decode_plans();
@@ -456,6 +468,7 @@ impl Coordinator {
             speculative: self.speculative,
             memory_cap_bytes: self.residency.cap_bytes(),
             adaptive: self.controller.is_some(),
+            horizon: self.placement.horizon,
         }
     }
 
@@ -657,6 +670,11 @@ impl Coordinator {
             )?;
         }
         stage.apply_to_step(&mut metrics);
+        // Score horizon forecasts that matured during this step's layer
+        // observes (ADR 006).
+        let (forecast_l1, forecast_layers) = self.placement.drain_forecast_errors();
+        metrics.forecast_l1 = forecast_l1;
+        metrics.forecast_layers = forecast_layers;
 
         // ---- 4. lm head + sampling --------------------------------------
         let t0 = Instant::now();

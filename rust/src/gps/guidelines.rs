@@ -47,7 +47,11 @@ pub fn decision_map(
 /// below the duplicated working set charges the prediction strategies
 /// exposed refetch transfer, shifting low-saving cells toward
 /// no-prediction and re-drawing the DOP/TEP frontier for memory-starved
-/// systems.
+/// systems; `horizon`/`forecast_drift` price ADR-006 proactive
+/// replanning (`advise --horizon`) — DOP's duplication movement prewarms
+/// fully ahead of the boundary but the plan runs `drift × horizon`
+/// staler, so the horizon shifts movement-bound cells toward DOP and
+/// drift-sensitive cells away from it.
 pub fn decision_map_in(
     model: &ModelConfig,
     cals: &[WorkloadCalibration],

@@ -63,6 +63,12 @@ pub struct WindowSample {
     pub pred_top1_hits: f64,
     pub pred_share_l1: f64,
     pub pred_share_layers: f64,
+    /// Realized horizon-forecast L1 error over the forecasts that matured
+    /// this window (ADR 006; 0 with no matured forecast — weight by
+    /// `forecast_layers`).
+    pub forecast_l1: f64,
+    /// Matured (layer, forecast) pairs this window (0 at horizon 0).
+    pub forecast_layers: f64,
 }
 
 impl From<&crate::coordinator::metrics::RoundMetrics> for WindowSample {
@@ -85,6 +91,8 @@ impl From<&crate::coordinator::metrics::RoundMetrics> for WindowSample {
             pred_top1_hits: m.pred_top1_hits as f64,
             pred_share_l1: m.pred_share_l1,
             pred_share_layers: m.pred_share_layers as f64,
+            forecast_l1: m.forecast_l1,
+            forecast_layers: m.forecast_layers as f64,
         }
     }
 }
@@ -109,6 +117,8 @@ impl From<&crate::coordinator::metrics::DecodeStepMetrics> for WindowSample {
             pred_top1_hits: m.pred_top1_hits as f64,
             pred_share_l1: m.pred_share_l1,
             pred_share_layers: m.pred_share_layers as f64,
+            forecast_l1: m.forecast_l1,
+            forecast_layers: m.forecast_layers as f64,
         }
     }
 }
@@ -138,7 +148,9 @@ impl WindowSample {
             .set("pred_topk_hits", Value::Num(self.pred_topk_hits))
             .set("pred_top1_hits", Value::Num(self.pred_top1_hits))
             .set("pred_share_l1", Value::Num(self.pred_share_l1))
-            .set("pred_share_layers", Value::Num(self.pred_share_layers));
+            .set("pred_share_layers", Value::Num(self.pred_share_layers))
+            .set("forecast_l1", Value::Num(self.forecast_l1))
+            .set("forecast_layers", Value::Num(self.forecast_layers));
         v
     }
 
@@ -161,6 +173,12 @@ impl WindowSample {
             pred_top1_hits: v.get("pred_top1_hits")?.as_f64()?,
             pred_share_l1: v.get("pred_share_l1")?.as_f64()?,
             pred_share_layers: v.get("pred_share_layers")?.as_f64()?,
+            // Absent in pre-ADR-006 reports: default to "no forecast".
+            forecast_l1: v.get("forecast_l1").and_then(Value::as_f64).unwrap_or(0.0),
+            forecast_layers: v
+                .get("forecast_layers")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
         })
     }
 }
@@ -204,6 +222,12 @@ pub struct MeasuredConstants {
     pub refetch_frac: f64,
     /// Fraction of wall time spent in the predictor forward.
     pub predictor_frac: f64,
+    /// Realized horizon-forecast L1 error (matured forecasts, layer-
+    /// weighted). `None` when no forecast matured in the window — e.g.
+    /// horizon 0 (ADR 006). The controller's fallback signal, and the
+    /// measured drift [`MeasuredConstants::savings`] substitutes for the
+    /// sim's default.
+    pub forecast_error: Option<f64>,
 }
 
 impl MeasuredConstants {
@@ -266,6 +290,15 @@ impl MeasuredConstants {
     ) -> SavingsComparison {
         let sys = self.system_spec(base_system);
         let cals = self.apply_to_cals(cals);
+        // Substitute the measured realized forecast error for the sim's
+        // default drift: the error was scored at maturation (h steps
+        // out), so per-step drift is err / h (ADR 006).
+        let mut regime = regime;
+        if regime.horizon > 0 && regime.forecast_drift.is_none() {
+            regime.forecast_drift = self
+                .forecast_error
+                .map(|err| err / regime.horizon as f64);
+        }
         match phase {
             ServePhase::Prefill => strategy_savings_in(
                 model,
@@ -309,7 +342,8 @@ impl MeasuredConstants {
             .set("tep_top1", opt(self.tep_top1))
             .set("hidden_frac", Value::Num(self.hidden_frac))
             .set("refetch_frac", Value::Num(self.refetch_frac))
-            .set("predictor_frac", Value::Num(self.predictor_frac));
+            .set("predictor_frac", Value::Num(self.predictor_frac))
+            .set("forecast_error", opt(self.forecast_error));
         v
     }
 
@@ -329,6 +363,7 @@ impl MeasuredConstants {
             hidden_frac: v.req_f64("hidden_frac")?,
             refetch_frac: v.req_f64("refetch_frac")?,
             predictor_frac: v.req_f64("predictor_frac")?,
+            forecast_error: opt("forecast_error"),
         })
     }
 }
@@ -420,6 +455,18 @@ impl OnlineCalibrator {
             None
         };
         let predictor_s: f64 = self.window.iter().map(|s| s.predictor_s).sum();
+        let forecast_weight: f64 = self.window.iter().map(|s| s.forecast_layers).sum();
+        let forecast_error = if forecast_weight > 0.0 {
+            Some(
+                self.window
+                    .iter()
+                    .map(|s| s.forecast_l1 * s.forecast_layers)
+                    .sum::<f64>()
+                    / forecast_weight,
+            )
+        } else {
+            None
+        };
         Some(MeasuredConstants {
             samples: self.window.len(),
             tokens,
@@ -434,6 +481,7 @@ impl OnlineCalibrator {
             hidden_frac: if upload > 0.0 { hidden / upload } else { 0.0 },
             refetch_frac: if upload > 0.0 { refetch / upload } else { 0.0 },
             predictor_frac: predictor_s / total_s,
+            forecast_error,
         })
     }
 }
@@ -594,6 +642,8 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
             overlap: lookahead > 0,
             speculative,
             memory_cap_bytes,
+            horizon: meta.get("horizon").and_then(Value::as_usize).unwrap_or(0),
+            forecast_drift: None,
         },
         adaptive: meta
             .get("adaptive")
@@ -694,6 +744,24 @@ mod tests {
     }
 
     #[test]
+    fn forecast_error_is_layer_weighted_and_optional() {
+        let mut cal = OnlineCalibrator::new(4);
+        cal.push(sample(10.0, 1.0, 2.0)); // horizon 0: nothing matured
+        assert!(cal.constants().unwrap().forecast_error.is_none());
+        let mut a = sample(10.0, 1.0, 2.0);
+        a.forecast_l1 = 0.2;
+        a.forecast_layers = 1.0;
+        let mut b = sample(10.0, 1.0, 2.0);
+        b.forecast_l1 = 0.5;
+        b.forecast_layers = 3.0;
+        cal.push(a);
+        cal.push(b);
+        // (0.2·1 + 0.5·3) / 4 = 0.425
+        let c = cal.constants().unwrap();
+        assert!((c.forecast_error.unwrap() - 0.425).abs() < 1e-12);
+    }
+
+    #[test]
     fn calibration_check_fits_undrifted_runs() {
         let samples: Vec<WindowSample> = (0..8).map(|_| sample(100.0, 0.5, 2.0)).collect();
         let c = calibration_check(&samples).unwrap();
@@ -769,6 +837,7 @@ mod tests {
             hidden_frac: 0.5,
             refetch_frac: 0.0,
             predictor_frac: 0.01,
+            forecast_error: None,
         };
         let sys = c.system_spec(&base);
         assert!((sys.interconnect.link_bw_gbs - 64.0).abs() < 1e-12);

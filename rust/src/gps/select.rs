@@ -77,6 +77,16 @@ pub struct Regime {
     /// Per-device HBM available for expert weights (ADR 004); `None` =
     /// unbounded.
     pub memory_cap_bytes: Option<f64>,
+    /// Proactive forecast horizon in replan steps (ADR 006); 0 = reactive.
+    /// Planning for the forecast distribution prewarms DOP's replica
+    /// movement ahead of the boundary (hiding it like the overlap window
+    /// does) at the price of serving a plan whose distribution is
+    /// `forecast_drift × horizon` staler in L1 by maturation.
+    pub horizon: usize,
+    /// Per-step forecast drift (L1 share error accrued per horizon step).
+    /// `None` = the sim's default; `advise --from-serve` substitutes the
+    /// measured realized forecast error.
+    pub forecast_drift: Option<f64>,
 }
 
 /// Figure-7 row: savings of each strategy vs baseline, and their difference
@@ -131,7 +141,8 @@ pub fn strategy_savings_in(
         .with_workload(batch, seq)
         .with_overlap(regime.overlap)
         .with_speculative(regime.speculative && regime.overlap)
-        .with_memory_cap(regime.memory_cap_bytes);
+        .with_memory_cap(regime.memory_cap_bytes)
+        .with_horizon(regime.horizon, regime.forecast_drift);
     let baseline_s = sim.baseline_total(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim
@@ -184,7 +195,8 @@ pub fn decode_strategy_savings_in(
         .with_workload(batch, ctx_len)
         .with_overlap(regime.overlap)
         .with_speculative(regime.speculative && regime.overlap)
-        .with_memory_cap(regime.memory_cap_bytes);
+        .with_memory_cap(regime.memory_cap_bytes)
+        .with_horizon(regime.horizon, regime.forecast_drift);
     let baseline_s = sim.baseline_step(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
@@ -337,11 +349,15 @@ mod tests {
         overlap: true,
         speculative: false,
         memory_cap_bytes: None,
+        horizon: 0,
+        forecast_drift: None,
     };
     const SPECULATIVE: Regime = Regime {
         overlap: true,
         speculative: true,
         memory_cap_bytes: None,
+        horizon: 0,
+        forecast_drift: None,
     };
 
     #[test]
@@ -490,6 +506,63 @@ mod tests {
         let plain_prefill = strategy_savings(&model, &system, &c, 2.0, 1, 512);
         assert!((same.dop_saving_s - plain_prefill.dop_saving_s).abs() < 1e-12);
         assert!((same.tep_best_saving_s - plain_prefill.tep_best_saving_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn horizon_trades_prewarm_hiding_against_staleness() {
+        // ADR 006: a perfect forecast (drift 0) only ever helps DOP — the
+        // replica prewarms off the serving step — while a drifting one
+        // erodes the win as the horizon grows; TEP and the baseline never
+        // move, so the Figure-7 frontier shifts through DOP alone.
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        let at = |h: usize, drift: Option<f64>| {
+            strategy_savings_in(
+                &model,
+                &system,
+                &c,
+                2.0,
+                1,
+                512,
+                Regime { horizon: h, forecast_drift: drift, ..OVERLAP },
+            )
+        };
+        let reactive = at(0, None);
+        let perfect = at(4, Some(0.0));
+        assert!((perfect.baseline_s - reactive.baseline_s).abs() < 1e-15);
+        assert!(
+            (perfect.tep_best_saving_s - reactive.tep_best_saving_s).abs() < 1e-15,
+            "a load trajectory buys per-token prediction nothing"
+        );
+        assert!(perfect.dop_saving_s >= reactive.dop_saving_s - 1e-15);
+        // Staleness is monotone: more horizon under drift, less DOP win.
+        let near = at(1, None);
+        let far = at(8, None);
+        assert!(
+            far.dop_saving_s <= near.dop_saving_s + 1e-15,
+            "drift × horizon must erode DOP: h=1 {} vs h=8 {}",
+            near.dop_saving_s,
+            far.dop_saving_s
+        );
+        // Decode obeys the same orderings.
+        let d_at = |h: usize, drift: Option<f64>| {
+            decode_strategy_savings_in(
+                &model,
+                &system,
+                &c,
+                2.0,
+                16,
+                512,
+                Regime { horizon: h, forecast_drift: drift, ..OVERLAP },
+            )
+        };
+        let d_reactive = d_at(0, None);
+        let d_perfect = d_at(4, Some(0.0));
+        assert!(d_perfect.dop_saving_s >= d_reactive.dop_saving_s - 1e-15);
+        assert!(
+            d_at(8, None).dop_saving_s <= d_at(1, None).dop_saving_s + 1e-15
+        );
     }
 
     #[test]

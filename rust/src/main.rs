@@ -78,6 +78,14 @@ USAGE: moe-gps <subcommand> [options]
                                 weights, e.g. 24g; duplication that
                                 overflows it pays exposed refetch — shows
                                 the cells the cap flips)
+                --horizon H    (ADR 006: price proactive replanning H
+                                replan windows ahead — DOP's duplication
+                                movement prewarms fully but the plan runs
+                                drift×H staler; shows the cells the
+                                horizon flips)
+                --forecast-drift F (per-window forecast L1 drift used in
+                                the staleness term; default 0.02, or pass
+                                a measured value)
                 --from-serve report.json (ADR 005: render the map from the
                                 *measured* constants a `serve --report` run
                                 recorded — measured skew/bandwidth/share
@@ -94,6 +102,13 @@ USAGE: moe-gps <subcommand> [options]
                 --memory-cap B (per-worker byte cap for expert replica
                                 weights: LRU eviction + refetch, ADR 004)
                 --speculative  (TEP speculative scatter; implies lookahead)
+                --horizon H    (ADR 006: plan for the forecast distribution
+                                H replan windows ahead; predicted-hot
+                                replicas prewarm before the spike; 0 =
+                                reactive, bitwise identical to omitting)
+                --forecast-error-max F (with --adaptive: realized forecast
+                                L1 past which the controller falls back to
+                                reactive replanning; default 0.5)
                 --threads N    (reference-backend compute pool; 0 = auto)
                 --adaptive     (ADR 005: online strategy controller —
                                 re-selects DOP/TEP/speculative/lookahead at
@@ -110,9 +125,12 @@ USAGE: moe-gps <subcommand> [options]
                 --temperature 1.0 --arrival-every 2]
                (without artifacts the synthetic tiny model is served)
   bench-report table1|fig4|fig6|fig7 [--fast]
-  bench-validate [BENCH_serve.json] [--require-results]
+  bench-validate [BENCH_serve.json] [--require-results
+                --forecast-report F.json --max-forecast-l1 B]
                validate a serve-bench trajectory file against the
-               moe-gps/serve-bench/v1 schema (the CI bench-smoke gate)
+               moe-gps/serve-bench/v1 schema (the CI bench-smoke gate);
+               with --forecast-report, additionally gate the realized
+               forecast L1 recorded by a `serve --horizon` report
 ",
         moe_gps::VERSION
     );
@@ -247,10 +265,23 @@ fn cmd_advise(args: &Args) -> Result<()> {
     let overlap = args.flag("overlap") || speculative;
     // ADR 004: per-device HBM budget for expert weights (e.g. `24g`).
     let memory_cap_bytes = args.opt_bytes("memory-cap")?.map(|b| b as f64);
+    // ADR 006: proactive forecast horizon (replan windows) — prewarms
+    // DOP's replica movement ahead of the boundary at the price of a
+    // `drift × horizon` staler plan; `--forecast-drift` overrides the
+    // default per-window drift (e.g. with a measured value).
+    let horizon = args.opt_usize("horizon", 0)?;
+    let forecast_drift = match args.opt("forecast-drift") {
+        Some(s) => Some(s.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--forecast-drift expects a number (L1 per window)")
+        })?),
+        None => None,
+    };
     let regime = gps::Regime {
         overlap,
         speculative,
         memory_cap_bytes,
+        horizon,
+        forecast_drift,
     };
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
@@ -282,14 +313,17 @@ fn cmd_advise(args: &Args) -> Result<()> {
         })
     };
     let cells = build(regime)?;
-    let mut tags: Vec<&str> = Vec::new();
+    let mut tags: Vec<String> = Vec::new();
     if speculative {
-        tags.push("lookahead overlap + speculative scatter");
+        tags.push("lookahead overlap + speculative scatter".into());
     } else if overlap {
-        tags.push("lookahead overlap");
+        tags.push("lookahead overlap".into());
     }
     if memory_cap_bytes.is_some() {
-        tags.push("memory-capped");
+        tags.push("memory-capped".into());
+    }
+    if horizon > 0 {
+        tags.push(format!("forecast horizon {horizon}"));
     }
     println!(
         "phase: {}{}",
@@ -322,6 +356,17 @@ fn cmd_advise(args: &Args) -> Result<()> {
         let base = build(gps::Regime {
             overlap: false,
             speculative: false,
+            ..regime
+        })?;
+        println!("{}", gps::guidelines::render_flips(&base, &cells));
+    }
+    if horizon > 0 {
+        // Flips vs the same regime replanned reactively (horizon 0): how
+        // the DOP/TEP frontier moves when plans are made for the forecast
+        // distribution instead of the last observed one (ADR 006).
+        let base = build(gps::Regime {
+            horizon: 0,
+            forecast_drift: None,
             ..regime
         })?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
@@ -527,6 +572,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if coord.speculative {
         coord.lookahead = coord.lookahead.max(1);
     }
+    // ADR 006: plan for the *forecast* distribution H replan windows
+    // ahead instead of the last observed one — replicas for predicted-hot
+    // experts prewarm before the spike. Horizon 0 is the reactive planner,
+    // bitwise identical to not passing the flag.
+    coord.placement.horizon = args.opt_usize("horizon", 0)?;
     if coord.prewarm_budget_bytes.is_some() && coord.lookahead == 0 {
         eprintln!(
             "warning: --prewarm-budget has no effect without --lookahead N \
@@ -580,6 +630,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // silently cuts a deeper `--lookahead` the user asked for.
             min_lookahead: 0,
             max_lookahead: coord.lookahead.max(2),
+            // ADR 006: the launched forecast horizon, plus the realized-
+            // forecast-error threshold past which the controller falls
+            // back to reactive replanning (horizon 0) for the rest of the
+            // run.
+            horizon: coord.placement.horizon,
+            forecast_error_max: args.opt_f64("forecast-error-max", 0.5)?,
             seed,
             ..Default::default()
         };
@@ -712,5 +768,17 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
         path.display(),
         moe_gps::bench::emit::SCHEMA
     );
+    // ADR 006: forecast-accuracy regression gate. Reads a serve report
+    // (`serve --horizon H --report F.json`) and fails when the realized
+    // forecast L1 exceeds the bound — the CI bench-smoke check that the
+    // load forecaster has not regressed.
+    if let Some(report) = args.opt("forecast-report") {
+        let bound = args.opt_f64("max-forecast-l1", 0.5)?;
+        let l1 = moe_gps::bench::emit::validate_forecast_error(
+            std::path::Path::new(report),
+            bound,
+        )?;
+        println!("{report}: realized forecast L1 {l1:.4} within bound {bound}");
+    }
     Ok(())
 }

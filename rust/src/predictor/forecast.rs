@@ -1,0 +1,243 @@
+//! Load-trajectory forecasting (ADR 006).
+//!
+//! Every other predictor in the zoo answers "what is the expert
+//! distribution *now*"; this module answers "what will it be `h`
+//! observation steps from now". "Prediction Is All MoE Needs" (PAPERS.md)
+//! observes that per-expert decode load *stabilizes* over a serving
+//! window, which makes short-horizon forecasting cheap and accurate
+//! exactly when proactive replanning needs it: a placement built for the
+//! forecast distribution at the next replan boundary has its replicas
+//! prewarmed *before* the spike instead of one replan interval after.
+//!
+//! The model is Holt's double exponential smoothing, per expert: a level
+//! (EWMA of the raw per-expert load) plus a trend (EWMA of the level's
+//! step-to-step delta), fit online from the same `observe()` stream of
+//! routed counts the DOP estimators and the online calibrator already
+//! consume. The `h`-step forecast is `level + h · trend`, clamped at
+//! zero and normalized into a share distribution.
+//!
+//! Contracts the test harness pins (`tests/forecasting.rs`):
+//! * horizon 0 is **bitwise identical** to [`Predictor::predict_distribution`]
+//!   (it *is* `forecast_distribution(0)` — no separate code path);
+//! * a perfectly linear per-expert ramp is a fixed point of the Holt
+//!   recurrence after the two-observation initialization, so linear loads
+//!   are recovered exactly at any horizon;
+//! * constant loads converge to the stationary distribution with zero
+//!   trend.
+
+use super::{Predictor, PredictorFamily};
+use crate::trace::{Batch, Trace};
+use crate::util::stats;
+
+/// Per-expert EWMA level + trend forecaster (Holt's linear method).
+#[derive(Clone, Debug)]
+pub struct LoadForecaster {
+    n_experts: usize,
+    /// Level smoothing weight for the newest observation.
+    pub alpha: f64,
+    /// Trend smoothing weight for the newest level delta.
+    pub beta: f64,
+    level: Vec<f64>,
+    trend: Vec<f64>,
+    /// Raw first observation, kept until the second fixes the trend.
+    first: Option<Vec<f64>>,
+    observed: u64,
+}
+
+impl LoadForecaster {
+    pub fn new(n_experts: usize) -> LoadForecaster {
+        LoadForecaster {
+            n_experts,
+            alpha: 0.5,
+            beta: 0.5,
+            level: vec![0.0; n_experts],
+            trend: vec![0.0; n_experts],
+            first: None,
+            observed: 0,
+        }
+    }
+
+    /// How many observations have been ingested.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Current per-expert level estimate (raw load units).
+    pub fn level(&self) -> &[f64] {
+        &self.level
+    }
+
+    /// Current per-expert trend estimate (load delta per step).
+    pub fn trend(&self) -> &[f64] {
+        &self.trend
+    }
+
+    /// Ingest one step's observed per-expert routed counts.
+    ///
+    /// Standard Holt initialization: the first observation seeds the
+    /// level; the second seeds `level = x₁, trend = x₁ − x₀` — which
+    /// makes an exactly linear signal a *fixed point* of the recurrence
+    /// (`level_t = x_t`, `trend_t = slope`) from the second observation
+    /// on, the exact-recovery property the forecasting tests pin.
+    pub fn ingest(&mut self, counts: &[usize]) {
+        assert_eq!(counts.len(), self.n_experts);
+        let x: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        self.observed += 1;
+        match self.observed {
+            1 => {
+                self.level.copy_from_slice(&x);
+                self.first = Some(x);
+            }
+            2 => {
+                let x0 = self.first.take().expect("first observation kept");
+                for e in 0..self.n_experts {
+                    self.trend[e] = x[e] - x0[e];
+                    self.level[e] = x[e];
+                }
+            }
+            _ => {
+                for e in 0..self.n_experts {
+                    let prev_level = self.level[e];
+                    let new_level = self.alpha * x[e]
+                        + (1.0 - self.alpha) * (prev_level + self.trend[e]);
+                    self.trend[e] = self.beta * (new_level - prev_level)
+                        + (1.0 - self.beta) * self.trend[e];
+                    self.level[e] = new_level;
+                }
+            }
+        }
+    }
+
+    /// Raw per-expert load forecast `h` steps ahead: `level + h · trend`,
+    /// clamped at zero (a load can shrink to nothing but not below it).
+    pub fn forecast(&self, h: usize) -> Vec<f64> {
+        let h = h as f64;
+        self.level
+            .iter()
+            .zip(&self.trend)
+            .map(|(&l, &t)| (l + h * t).max(0.0))
+            .collect()
+    }
+
+    /// Share-distribution forecast `h` steps ahead (sums to 1; uniform
+    /// before any observation or when the forecast collapses to zero).
+    pub fn forecast_distribution(&self, h: usize) -> Vec<f64> {
+        let raw = self.forecast(h);
+        let total: f64 = raw.iter().sum();
+        if self.observed == 0 || total <= 0.0 || !total.is_finite() {
+            return vec![1.0 / self.n_experts as f64; self.n_experts];
+        }
+        raw.into_iter().map(|v| v / total).collect()
+    }
+
+    /// Predicted skewness of the `h`-step-ahead distribution.
+    pub fn predicted_skewness(&self, h: usize) -> f64 {
+        stats::skewness_of_probs(&self.forecast_distribution(h))
+    }
+}
+
+/// The forecaster behind the unified trait (ADR 005/006): it is a
+/// Distribution-Only family member (no per-token opinion), whose
+/// [`Predictor::predict_horizon`] actually uses its trend state —
+/// `predict_distribution` is exactly `forecast_distribution(0)`, so
+/// horizon 0 degrades to the reactive estimate bitwise.
+impl Predictor for LoadForecaster {
+    fn name(&self) -> String {
+        "load-forecast".into()
+    }
+
+    fn family(&self) -> PredictorFamily {
+        PredictorFamily::DistributionOnly
+    }
+
+    fn fit(&mut self, train: &Trace) {
+        for b in &train.batches {
+            self.ingest(&b.expert_counts(self.n_experts));
+        }
+    }
+
+    fn predict_distribution(&self) -> Vec<f64> {
+        self.forecast_distribution(0)
+    }
+
+    fn predict_horizon(&self, h: usize) -> Vec<f64> {
+        self.forecast_distribution(h)
+    }
+
+    fn predict_topk(&self, _batch: &Batch, _k: usize) -> Option<Vec<Vec<Vec<u8>>>> {
+        None
+    }
+
+    fn observe(&mut self, routed_counts: &[usize]) {
+        self.ingest(routed_counts);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_forecaster_is_uniform_at_every_horizon() {
+        let f = LoadForecaster::new(4);
+        for h in [0, 1, 8] {
+            assert_eq!(f.forecast_distribution(h), vec![0.25; 4]);
+        }
+    }
+
+    #[test]
+    fn linear_ramp_is_a_fixed_point() {
+        let mut f = LoadForecaster::new(2);
+        // x_t = [100 + 10t, 300 - 10t]
+        for t in 0..12usize {
+            f.ingest(&[100 + 10 * t, 300 - 10 * t]);
+        }
+        let last_t = 11.0;
+        assert!((f.level[0] - (100.0 + 10.0 * last_t)).abs() < 1e-9);
+        assert!((f.trend[0] - 10.0).abs() < 1e-9);
+        assert!((f.trend[1] + 10.0).abs() < 1e-9);
+        let fc = f.forecast(4);
+        assert!((fc[0] - (100.0 + 10.0 * (last_t + 4.0))).abs() < 1e-9);
+        assert!((fc[1] - (300.0 - 10.0 * (last_t + 4.0))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_load_converges_with_zero_trend() {
+        let mut f = LoadForecaster::new(3);
+        for _ in 0..40 {
+            f.ingest(&[60, 30, 10]);
+        }
+        for (e, want) in [(0usize, 0.6), (1, 0.3), (2, 0.1)] {
+            assert!((f.forecast_distribution(5)[e] - want).abs() < 1e-9);
+        }
+        for &t in f.trend() {
+            assert!(t.abs() < 1e-9, "trend must vanish on constant load");
+        }
+    }
+
+    #[test]
+    fn horizon_zero_is_predict_distribution_bitwise() {
+        let mut f = LoadForecaster::new(4);
+        for t in 0..7usize {
+            f.ingest(&[5 + t, 9, 2 * t, 31]);
+        }
+        let a = f.predict_distribution();
+        let b = f.predict_horizon(0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn forecast_clamps_at_zero_and_renormalizes() {
+        let mut f = LoadForecaster::new(2);
+        // Expert 1 collapses fast: its linear extrapolation goes negative.
+        f.ingest(&[10, 100]);
+        f.ingest(&[10, 40]);
+        let far = f.forecast(10);
+        assert_eq!(far[1], 0.0, "negative extrapolation must clamp");
+        let dist = f.forecast_distribution(10);
+        assert!((dist.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(dist[0], 1.0);
+    }
+}

@@ -11,6 +11,10 @@
 //!   request-path overhead. `predict_topk` is `None`: the family has no
 //!   per-token opinion (the evaluation harness broadcasts its ranked
 //!   share distribution instead, so both families score through one API).
+//!   [`forecast`] is its trajectory-aware sibling (ADR 006): per-expert
+//!   EWMA level + trend fit from the same `observe()` stream, answering
+//!   [`Predictor::predict_horizon`] with a real `h`-step-ahead
+//!   distribution instead of the default stationarity assumption.
 //! * **Token-to-Expert** — per-token expert classification (Appendix B):
 //!   [`probability`] (global argmax), [`conditional`] (token- or
 //!   position-conditioned argmax), [`markov`] (bigram/context model — our
@@ -27,6 +31,7 @@
 pub mod accuracy;
 pub mod conditional;
 pub mod distribution;
+pub mod forecast;
 pub mod markov;
 pub mod neural;
 pub mod overhead;
@@ -76,6 +81,17 @@ pub trait Predictor {
     /// Estimated per-expert share distribution for upcoming traffic
     /// (sums to 1; uniform when nothing has been observed yet).
     fn predict_distribution(&self) -> Vec<f64>;
+
+    /// Forecast of the share distribution `h` observe-steps ahead
+    /// (ADR 006). The default is the stationarity assumption — the
+    /// current estimate at every horizon — so every predictor keeps its
+    /// exact pre-forecasting behaviour, and **horizon 0 is identical to
+    /// [`Predictor::predict_distribution`] for every implementation**
+    /// (trajectory-aware predictors like
+    /// [`forecast::LoadForecaster`] must preserve that identity too).
+    fn predict_horizon(&self, _h: usize) -> Vec<f64> {
+        self.predict_distribution()
+    }
 
     /// Ranked top-k expert sets per token of the batch, `[seq][token][rank]`
     /// (rank 0 = argmax). `None` for the Distribution-Only family, which

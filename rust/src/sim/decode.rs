@@ -63,6 +63,17 @@ pub struct DecodeParams {
     /// weight-streaming-bound from HBM; under the cap the missing
     /// fraction streams from host/peer instead — exposed, every step.
     pub memory_cap_bytes: Option<f64>,
+    /// ADR 006: proactive-replanning horizon in replan windows (see
+    /// [`super::moe::MoeParams::forecast_horizon`]). With `h > 0` the DOP
+    /// plan is built from the load forecast ahead of the replan boundary:
+    /// the duplication transfer prewarms during the preceding windows
+    /// (fully hidden, still cadence-amortised in the books) while the
+    /// effective estimation error inflates by `drift × h`. TEP predicts
+    /// this step's brand-new tokens — a trajectory buys it nothing.
+    pub forecast_horizon: usize,
+    /// ADR 006: per-window forecast drift; `None` = use
+    /// [`super::moe::DEFAULT_FORECAST_DRIFT`].
+    pub forecast_drift: Option<f64>,
 }
 
 impl DecodeParams {
@@ -79,6 +90,8 @@ impl DecodeParams {
             lookahead_overlap: false,
             speculative_scatter: false,
             memory_cap_bytes: None,
+            forecast_horizon: 0,
+            forecast_drift: None,
         }
     }
 }
@@ -127,7 +140,18 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
             cost.gather_s = skewed_a2a;
         }
         Strategy::DistributionOnly { error_rate } => {
-            let mult = p.error_model.load_multiplier(error_rate, n);
+            // ADR 006: a forecast-built plan is `horizon` windows stale by
+            // maturity; the drift adds to ε (L1 share distance = the
+            // paper's normalised error), as in prefill.
+            let stale = if p.forecast_horizon > 0 {
+                p.forecast_drift
+                    .unwrap_or(moe::DEFAULT_FORECAST_DRIFT)
+                    .max(0.0)
+                    * p.forecast_horizon as f64
+            } else {
+                0.0
+            };
+            let mult = p.error_model.load_multiplier(error_rate + stale, n);
             // Token counts rebalance; residual error inflates the hot
             // expert's token count, but stays on the memory-bound floor.
             let per_expert_dop = ((per_expert_balanced as f64 * mult).ceil() as usize)
@@ -139,7 +163,13 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
             // Communication unchanged vs baseline (§4), as in prefill.
             cost.scatter_s = skewed_a2a;
             cost.gather_s = skewed_a2a;
-            if p.lookahead_overlap {
+            if p.forecast_horizon > 0 {
+                // ADR 006: the replica prewarms during the windows before
+                // the replan boundary — off the serving step entirely,
+                // still amortised across the cadence in the books.
+                let steps = p.replan_interval.max(1) as f64;
+                cost.hidden_s = raw_movement(model, system) / steps;
+            } else if p.lookahead_overlap {
                 // Clip against ONE step's window first, then amortise the
                 // exposed remainder over the cadence: the engine moves the
                 // whole transfer on the replan step, so only that step's
@@ -293,6 +323,10 @@ pub struct DecodeSim {
     pub speculative_scatter: bool,
     /// Price the constrained-HBM regime (ADR 004).
     pub memory_cap_bytes: Option<f64>,
+    /// Price proactive replanning at this forecast horizon (ADR 006).
+    pub forecast_horizon: usize,
+    /// Per-window forecast drift override (ADR 006); `None` = default.
+    pub forecast_drift: Option<f64>,
 }
 
 impl DecodeSim {
@@ -310,6 +344,8 @@ impl DecodeSim {
             lookahead_overlap: false,
             speculative_scatter: false,
             memory_cap_bytes: None,
+            forecast_horizon: 0,
+            forecast_drift: None,
         }
     }
 
@@ -331,6 +367,14 @@ impl DecodeSim {
 
     pub fn with_memory_cap(mut self, cap_bytes: Option<f64>) -> DecodeSim {
         self.memory_cap_bytes = cap_bytes;
+        self
+    }
+
+    /// Price proactive replanning at forecast horizon `h` (ADR 006);
+    /// `drift` overrides the default per-window forecast drift.
+    pub fn with_horizon(mut self, h: usize, drift: Option<f64>) -> DecodeSim {
+        self.forecast_horizon = h;
+        self.forecast_drift = drift;
         self
     }
 
@@ -366,6 +410,8 @@ impl DecodeSim {
         p.lookahead_overlap = self.lookahead_overlap;
         p.speculative_scatter = self.speculative_scatter;
         p.memory_cap_bytes = self.memory_cap_bytes;
+        p.forecast_horizon = self.forecast_horizon;
+        p.forecast_drift = self.forecast_drift;
         decode_moe_cost(&self.model, &self.system, &p)
     }
 
@@ -540,6 +586,54 @@ mod tests {
         let base = DecodeSim::new(m.clone(), s.clone()).with_overlap(true);
         let spec_sim = DecodeSim::new(m, s).with_overlap(true).with_speculative(true);
         assert!(spec_sim.step_total(2.0, strategy) <= base.step_total(2.0, strategy));
+    }
+
+    #[test]
+    fn decode_forecast_horizon_prewarms_dop_and_prices_staleness() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = DecodeParams::new(
+            16,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        p.hide_duplication = false;
+        p.attention_compute_s = 0.0;
+        p.replan_interval = 8;
+        let reactive = decode_moe_cost(&m, &s, &p);
+        assert!(reactive.movement_s > 0.0);
+        p.forecast_horizon = 4;
+        let proactive = decode_moe_cost(&m, &s, &p);
+        // Prewarmed before the boundary, still cadence-amortised.
+        assert_eq!(proactive.movement_s, 0.0);
+        assert!((proactive.hidden_s - reactive.movement_s).abs() < 1e-12);
+        // Staleness can only inflate the (memory-bound, so often flat)
+        // FFN term — never shrink it.
+        assert!(proactive.ffn_s >= reactive.ffn_s);
+        // Perfect forecast (drift 0): strictly a win under the ablation.
+        p.forecast_drift = Some(0.0);
+        let perfect = decode_moe_cost(&m, &s, &p);
+        assert_eq!(perfect.ffn_s, reactive.ffn_s);
+        assert!(perfect.total() < reactive.total());
+        // TEP is untouched by the horizon knob.
+        let strategy = Strategy::TokenToExpert {
+            accuracy: 0.9,
+            overhead_s: 1e-4,
+        };
+        let mut pt = DecodeParams::new(16, 512, 2.0, strategy);
+        let plain = decode_moe_cost(&m, &s, &pt);
+        pt.forecast_horizon = 4;
+        pt.forecast_drift = Some(0.1);
+        assert_eq!(decode_moe_cost(&m, &s, &pt), plain);
+        // Sim plumbing: the builder threads the knob through.
+        let strategy = Strategy::DistributionOnly { error_rate: 0.02 };
+        let mut base = DecodeSim::new(m.clone(), s.clone());
+        base.hide_duplication = false;
+        let mut proactive_sim = DecodeSim::new(m, s).with_horizon(4, Some(0.0));
+        proactive_sim.hide_duplication = false;
+        assert!(
+            proactive_sim.step_total(2.0, strategy) <= base.step_total(2.0, strategy) + 1e-15
+        );
     }
 
     #[test]

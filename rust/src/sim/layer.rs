@@ -80,6 +80,12 @@ pub struct LayerSim {
     /// Price the constrained-HBM regime (ADR 004): per-device byte budget
     /// for expert weights; working-set overflow pays exposed refetch.
     pub memory_cap_bytes: Option<f64>,
+    /// ADR 006: proactive-replanning horizon in replan windows (see
+    /// [`MoeParams::forecast_horizon`]). 0 = reactive.
+    pub forecast_horizon: usize,
+    /// ADR 006: per-window forecast drift; `None` = the default constant
+    /// (see [`MoeParams::forecast_drift`]).
+    pub forecast_drift: Option<f64>,
 }
 
 impl LayerSim {
@@ -95,6 +101,8 @@ impl LayerSim {
             lookahead_overlap: false,
             speculative_scatter: false,
             memory_cap_bytes: None,
+            forecast_horizon: 0,
+            forecast_drift: None,
         }
     }
 
@@ -116,6 +124,16 @@ impl LayerSim {
 
     pub fn with_memory_cap(mut self, cap_bytes: Option<f64>) -> LayerSim {
         self.memory_cap_bytes = cap_bytes;
+        self
+    }
+
+    /// Price proactive replanning at forecast horizon `h` (ADR 006);
+    /// `drift` overrides the default per-window forecast drift (`None` =
+    /// [`moe::DEFAULT_FORECAST_DRIFT`], or the measured value when the
+    /// online calibrator supplies one).
+    pub fn with_horizon(mut self, h: usize, drift: Option<f64>) -> LayerSim {
+        self.forecast_horizon = h;
+        self.forecast_drift = drift;
         self
     }
 
@@ -152,6 +170,8 @@ impl LayerSim {
         p.lookahead_overlap = self.lookahead_overlap;
         p.speculative_scatter = self.speculative_scatter;
         p.memory_cap_bytes = self.memory_cap_bytes;
+        p.forecast_horizon = self.forecast_horizon;
+        p.forecast_drift = self.forecast_drift;
         moe::moe_cost(&self.model, &self.system, &p)
     }
 
@@ -280,6 +300,21 @@ mod tests {
                 .abs()
                 < 1e-15
         );
+    }
+
+    #[test]
+    fn horizon_builder_prices_prewarm_against_staleness() {
+        let strategy = Strategy::DistributionOnly { error_rate: 0.02 };
+        let mut exposed = sim();
+        exposed.hide_duplication = false;
+        let reactive = exposed.clone().breakdown(2.0, strategy);
+        let proactive = exposed.with_horizon(4, None).breakdown(2.0, strategy);
+        // The forecast plan prewarms the replica off the serving step…
+        assert_eq!(proactive.movement_s, 0.0);
+        assert!(proactive.hidden_s > 0.0);
+        assert!(reactive.movement_s > proactive.movement_s);
+        // …but runs on a 4-windows-stale distribution.
+        assert!(proactive.ffn_s > reactive.ffn_s);
     }
 
     #[test]

@@ -124,7 +124,30 @@ pub struct MoeParams {
     /// the prewarm window has passed, so it is pure exposed transfer.
     /// `None` (default) = unbounded, the pre-ADR-004 model.
     pub memory_cap_bytes: Option<f64>,
+    /// ADR 006: proactive replanning horizon, in replan windows. With
+    /// `h > 0` the Distribution-Only plan is built for the *forecast*
+    /// distribution at the next replan boundary, so the duplication
+    /// transfer prewarms before the boundary and never lands on the
+    /// serving step — but the plan is `h` windows stale by maturity, so
+    /// the forecast drift (per-window L1, which equals the paper's
+    /// normalised error `mean|p̂ − p| / (1/E)`) inflates the effective
+    /// estimation error by `drift × h`. 0 (default) = reactive replanning,
+    /// the pre-ADR-006 model. TEP predicts per token, per step — a load
+    /// trajectory buys it nothing, so it is unaffected.
+    pub forecast_horizon: usize,
+    /// ADR 006: forecast drift per horizon window (L1 of the share
+    /// distribution). `None` = use [`DEFAULT_FORECAST_DRIFT`]; the online
+    /// calibrator substitutes the measured realized-forecast error.
+    pub forecast_drift: Option<f64>,
 }
+
+/// ADR 006: default per-window forecast drift (L1 distance of expert-share
+/// distributions) used when no measured value is available. ~2% per replan
+/// window is the steady-drift regime of production traces ("Prediction Is
+/// All MoE Needs", arXiv 2404.16914 observes decode-phase loads stabilise);
+/// adversarial traces run far higher — the `StrategyController` falls back
+/// to reactive replanning when the measured error breaches its threshold.
+pub const DEFAULT_FORECAST_DRIFT: f64 = 0.02;
 
 impl MoeParams {
     pub fn new(batch: usize, seq: usize, skewness: f64, strategy: Strategy) -> MoeParams {
@@ -141,6 +164,8 @@ impl MoeParams {
             lookahead_overlap: false,
             speculative_scatter: false,
             memory_cap_bytes: None,
+            forecast_horizon: 0,
+            forecast_drift: None,
         }
     }
 }
@@ -228,14 +253,30 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
             cost.gather_s = skewed_a2a;
         }
         Strategy::DistributionOnly { error_rate } => {
-            let mult = p.error_model.load_multiplier(error_rate, n);
+            // ADR 006: a plan built for the forecast distribution serves a
+            // window whose realized shares drifted ~drift × horizon in L1
+            // by maturity; the L1 share distance *is* the paper's
+            // normalised error, so staleness adds to ε directly.
+            let stale = if p.forecast_horizon > 0 {
+                p.forecast_drift.unwrap_or(DEFAULT_FORECAST_DRIFT).max(0.0)
+                    * p.forecast_horizon as f64
+            } else {
+                0.0
+            };
+            let mult = p.error_model.load_multiplier(error_rate + stale, n);
             cost.ffn_s = balanced_ffn * mult;
             // Communication unchanged vs baseline (§4) — unless the
             // balanced-destination ablation is enabled.
             let a2a = if p.dop_balanced_comm { balanced_a2a } else { skewed_a2a };
             cost.scatter_s = a2a;
             cost.gather_s = a2a;
-            if p.lookahead_overlap {
+            if p.forecast_horizon > 0 {
+                // ADR 006: the forecast plan's replicas prewarm during the
+                // windows *before* the replan boundary, so the duplication
+                // transfer is off the serving step entirely — the staleness
+                // term above is what pays for that hiding.
+                cost.hidden_s = raw_movement(model, system);
+            } else if p.lookahead_overlap {
                 let raw = raw_movement(model, system);
                 let (mv, _oh, hidden) = overlap_split(raw, 0.0, p.attention_compute_s);
                 cost.movement_s = mv;
@@ -611,6 +652,74 @@ mod tests {
         // Refetch monotone in pressure: halving the cap can only cost more.
         pd.memory_cap_bytes = Some(base_needed * 0.25);
         assert!(moe_cost(&m, &s, &pd).movement_s > dop_refetch);
+    }
+
+    #[test]
+    fn forecast_horizon_hides_dop_movement_but_inflates_staleness() {
+        let (m, s) = mixtral_nvlink();
+        // Exposed-movement ablation so the hiding is observable.
+        let mut p = MoeParams::new(
+            1,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        p.hide_duplication = false;
+        p.attention_compute_s = 0.0;
+        let reactive = moe_cost(&m, &s, &p);
+        assert!(reactive.movement_s > 0.0, "ablation exposes the transfer");
+        p.forecast_horizon = 2;
+        let proactive = moe_cost(&m, &s, &p);
+        // Prewarmed before the boundary: transfer off the serving step.
+        assert_eq!(proactive.movement_s, 0.0);
+        assert!((proactive.hidden_s - reactive.movement_s).abs() < 1e-15);
+        // …at the price of a staler plan: ε_eff = ε + drift·h.
+        assert!(proactive.ffn_s > reactive.ffn_s);
+        // Staleness is monotone in the horizon.
+        p.forecast_horizon = 8;
+        assert!(moe_cost(&m, &s, &p).ffn_s > proactive.ffn_s);
+    }
+
+    #[test]
+    fn zero_drift_forecast_is_a_pure_win_for_dop() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(
+            1,
+            512,
+            2.0,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+        );
+        p.hide_duplication = false;
+        p.attention_compute_s = 0.0;
+        let reactive = moe_cost(&m, &s, &p);
+        p.forecast_horizon = 4;
+        p.forecast_drift = Some(0.0);
+        let perfect = moe_cost(&m, &s, &p);
+        // A perfect forecaster keeps DOP's compute and drops the exposed
+        // movement: strictly no worse, strictly better under the ablation.
+        assert_eq!(perfect.ffn_s, reactive.ffn_s);
+        assert!(perfect.total() < reactive.total());
+        // Measured drift overrides the default (larger drift, worse plan).
+        p.forecast_drift = Some(0.25);
+        assert!(moe_cost(&m, &s, &p).ffn_s > perfect.ffn_s);
+    }
+
+    #[test]
+    fn forecast_horizon_leaves_baseline_and_tep_untouched() {
+        let (m, s) = mixtral_nvlink();
+        for strategy in [
+            Strategy::NoPrediction,
+            Strategy::TokenToExpert {
+                accuracy: 0.9,
+                overhead_s: 1e-4,
+            },
+        ] {
+            let mut p = MoeParams::new(1, 512, 2.0, strategy);
+            let plain = moe_cost(&m, &s, &p);
+            p.forecast_horizon = 4;
+            p.forecast_drift = Some(0.1);
+            assert_eq!(moe_cost(&m, &s, &p), plain, "{strategy:?}");
+        }
     }
 
     #[test]

@@ -17,22 +17,20 @@
 mod common;
 use std::sync::OnceLock;
 
-use common::{assert_bitwise_eq, mk_rounds};
-use moe_gps::coordinator::request::RequestGen;
+use common::{
+    assert_bitwise_eq, decode_requests, greedy_decode_opts, mk_rounds,
+    small_source as source,
+};
 use moe_gps::coordinator::{
-    Coordinator, ControllerConfig, DecodeOptions, ServeStrategy, StrategyController,
+    Coordinator, ControllerConfig, ServeStrategy, StrategyController,
 };
 use moe_gps::gps::calibrate::{calibrate_all, interpolate_for_skew, WorkloadCalibration};
 use moe_gps::gps::guidelines::decision_map_in;
 use moe_gps::gps::select::{recommend, Recommendation, Regime, ServePhase};
 use moe_gps::gps::{parse_serve_report, MeasuredConstants, OnlineCalibrator, WindowSample};
 use moe_gps::model::ModelConfig;
-use moe_gps::runtime::{EngineSource, HostTensor, SyntheticSpec};
+use moe_gps::runtime::HostTensor;
 use moe_gps::sim::SystemSpec;
-
-fn source() -> EngineSource {
-    EngineSource::Synthetic(SyntheticSpec::small_test())
-}
 
 /// Fast offline calibration priors, computed once for the whole binary
 /// (every controller in these tests shares them).
@@ -133,16 +131,10 @@ fn adaptive_pinned_decode_is_bitwise_identical_to_fixed() {
                 ..Default::default()
             }));
         }
-        let mut gen = RequestGen::new(73, coord.vocab());
-        let requests: Vec<_> = (0..4).map(|_| gen.decode_request(6, 8)).collect();
-        let opts = DecodeOptions {
-            max_active: 4,
-            max_steps: 24,
-            temperature: 0.0,
-            seed: 73,
-            arrival_interval: 0,
-        };
-        coord.serve_decode(requests, &opts).unwrap()
+        let requests = decode_requests(73, coord.vocab(), 4, 6, 8);
+        coord
+            .serve_decode(requests, &greedy_decode_opts(4, 24, 73))
+            .unwrap()
     };
     let fixed = run(false);
     let adaptive = run(true);
@@ -257,7 +249,7 @@ fn skew_ramp_flips_dop_to_tep_at_a_replan_boundary() {
             strategy,
             speculative,
             lookahead,
-            Regime { overlap: lookahead > 0, speculative, memory_cap_bytes: None },
+            Regime { overlap: lookahead > 0, speculative, ..Regime::default() },
         ) {
             if d.strategy != strategy && switch_boundary.is_none() {
                 switch_boundary = Some(boundary);
@@ -438,16 +430,10 @@ fn adaptive_decode_serve_records_decisions_at_replan_boundaries() {
         seq_or_ctx: 64,
         ..Default::default()
     }));
-    let mut gen = RequestGen::new(79, coord.vocab());
-    let requests: Vec<_> = (0..4).map(|_| gen.decode_request(6, 12)).collect();
-    let opts = DecodeOptions {
-        max_active: 4,
-        max_steps: 32,
-        temperature: 0.0,
-        seed: 79,
-        arrival_interval: 0,
-    };
-    let report = coord.serve_decode(requests, &opts).unwrap();
+    let requests = decode_requests(79, coord.vocab(), 4, 6, 12);
+    let report = coord
+        .serve_decode(requests, &greedy_decode_opts(4, 32, 79))
+        .unwrap();
     let ctrl = report.controller.as_ref().expect("controller report");
     assert!(
         !ctrl.decisions.is_empty(),

@@ -1,10 +1,26 @@
 //! Helpers shared by the serving integration-test binaries
-//! (`pipeline_parity.rs`, `residency.rs`): deterministic request rounds
-//! and the load-bearing bitwise output comparison every parity claim in
-//! the suite rests on.
+//! (`pipeline_parity.rs`, `residency.rs`, `adaptive_gps.rs`,
+//! `proactive_serving.rs`): deterministic request rounds, the synthetic
+//! engine sources, greedy decode fixtures, and the load-bearing bitwise
+//! output comparison every parity claim in the suite rests on.
+
+// Each test binary compiles this module independently and uses its own
+// subset of the helpers.
+#![allow(dead_code)]
 
 use moe_gps::coordinator::request::{Request, RequestGen};
-use moe_gps::runtime::HostTensor;
+use moe_gps::coordinator::{DecodeOptions, DecodeReport};
+use moe_gps::runtime::{EngineSource, HostTensor, SyntheticSpec};
+
+/// The 2-layer synthetic test model every serving parity suite runs on.
+pub fn small_source() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::small_test())
+}
+
+/// The 4-layer synthetic model (deeper pin windows for residency tests).
+pub fn tiny_source() -> EngineSource {
+    EngineSource::Synthetic(SyntheticSpec::tiny())
+}
 
 /// Deterministic prefill rounds: `n_rounds` batches of `n_seqs`
 /// variable-length requests from a seeded generator.
@@ -12,6 +28,43 @@ pub fn mk_rounds(seed: u64, n_rounds: usize, n_seqs: usize) -> Vec<Vec<Request>>
     let mut gen = RequestGen::new(seed, 512);
     (0..n_rounds)
         .map(|_| (0..n_seqs).map(|_| gen.request_varlen(8, 24)).collect())
+        .collect()
+}
+
+/// Deterministic decode requests from a seeded generator.
+pub fn decode_requests(
+    seed: u64,
+    vocab: usize,
+    n: usize,
+    prompt: usize,
+    max_new: usize,
+) -> Vec<Request> {
+    let mut gen = RequestGen::new(seed, vocab);
+    (0..n).map(|_| gen.decode_request(prompt, max_new)).collect()
+}
+
+/// Greedy (temperature 0, fully deterministic) decode options — the
+/// setting every trajectory-parity claim relies on: sampled tokens feed
+/// back into later steps, so any numeric drift diverges the whole run.
+pub fn greedy_decode_opts(max_active: usize, max_steps: usize, seed: u64) -> DecodeOptions {
+    DecodeOptions {
+        max_active,
+        max_steps,
+        temperature: 0.0,
+        seed,
+        arrival_interval: 0,
+    }
+}
+
+/// Per-step routing fingerprint of a decode run: identical hidden states
+/// imply identical routing imply identical slot counts — and greedy
+/// sampling feeds the same tokens into every subsequent step, so the
+/// whole trajectory pins the numerics across serving regimes.
+pub fn decode_fingerprint(report: &DecodeReport) -> Vec<(usize, usize, usize, usize)> {
+    report
+        .steps
+        .iter()
+        .map(|s| (s.step, s.n_prefill_tokens, s.n_decode_tokens, s.n_slots))
         .collect()
 }
 

@@ -1,0 +1,125 @@
+//! Forecasting test harness (ADR 006): the properties the load-trajectory
+//! forecaster must hold through the unified `Predictor` surface.
+//!
+//! * **Exact recovery on linear ramps** — Holt's two-observation
+//!   initialization makes a linear per-expert signal a fixed point of the
+//!   recurrence, so the `h`-step forecast equals the true future load
+//!   exactly, at every horizon.
+//! * **Convergence on constant loads** — the level converges to the
+//!   stationary load and the trend vanishes, so every horizon predicts
+//!   the stationary distribution.
+//! * **Horizon 0 ≡ `predict_distribution`, bitwise** — the degradation
+//!   contract every proactive-serving parity claim rests on, for the
+//!   forecaster and for the trait's default implementation alike.
+
+use moe_gps::predictor::distribution::DistributionEstimator;
+use moe_gps::predictor::forecast::LoadForecaster;
+use moe_gps::predictor::Predictor;
+
+/// Per-expert loads of the two-sided test ramp at step `t`: expert 0
+/// heats up linearly, expert 2 cools, the rest hold.
+fn ramp(t: usize) -> [usize; 4] {
+    [100 + 20 * t, 150, 400 - 10 * t, 150]
+}
+
+fn normalize(counts: &[usize]) -> Vec<f64> {
+    let total: f64 = counts.iter().map(|&c| c as f64).sum();
+    counts.iter().map(|&c| c as f64 / total).collect()
+}
+
+#[test]
+fn linear_ramp_is_recovered_exactly_at_every_horizon() {
+    let mut p = LoadForecaster::new(4);
+    let last = 9usize;
+    for t in 0..=last {
+        p.observe(&ramp(t));
+    }
+    for h in [1usize, 2, 4, 8] {
+        let want = normalize(&ramp(last + h));
+        let got = p.predict_horizon(h);
+        assert!((got.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for (e, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-9,
+                "horizon {h} expert {e}: forecast {g} vs true future share {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn constant_load_converges_with_horizon_invariant_forecast() {
+    let mut p = LoadForecaster::new(3);
+    for _ in 0..50 {
+        p.observe(&[300, 150, 50]);
+    }
+    let stationary = [0.6, 0.3, 0.1];
+    for h in [0usize, 1, 5, 20] {
+        let got = p.predict_horizon(h);
+        for (e, (&g, &w)) in got.iter().zip(&stationary).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-9,
+                "horizon {h} expert {e}: {g} vs stationary {w}"
+            );
+        }
+    }
+    for &t in p.trend() {
+        assert!(t.abs() < 1e-9, "trend must vanish on constant load: {t}");
+    }
+}
+
+#[test]
+fn horizon_zero_is_predict_distribution_bitwise() {
+    let mut p = LoadForecaster::new(4);
+    for t in 0..7usize {
+        p.observe(&ramp(t));
+    }
+    let reactive = p.predict_distribution();
+    let zero = p.predict_horizon(0);
+    assert_eq!(reactive.len(), zero.len());
+    for (e, (a, b)) in reactive.iter().zip(&zero).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "expert {e}: horizon 0 must be the reactive estimate bitwise"
+        );
+    }
+}
+
+#[test]
+fn default_trait_horizon_is_the_stationary_estimate_bitwise() {
+    // Predictors without trend state fall back to the trait default:
+    // predict_horizon(h) == predict_distribution() for every h, bitwise.
+    let mut p = DistributionEstimator::new(4);
+    for t in 0..7usize {
+        p.observe(&ramp(t));
+    }
+    let now = p.predict_distribution();
+    for h in [0usize, 3, 11] {
+        for (a, b) in now.iter().zip(&p.predict_horizon(h)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn forecaster_extrapolates_where_the_estimator_averages() {
+    // On the same ramp the forecaster's horizon-h share of the heating
+    // expert must exceed the stationary estimator's (which lags the ramp
+    // by averaging over history) — the property that makes proactive
+    // replanning land replicas before the spike.
+    let mut forecaster = LoadForecaster::new(4);
+    let mut estimator = DistributionEstimator::new(4);
+    for t in 0..10usize {
+        forecaster.observe(&ramp(t));
+        estimator.observe(&ramp(t));
+    }
+    let ahead = forecaster.predict_horizon(4)[0];
+    let lagging = estimator.predict_horizon(4)[0];
+    let current = normalize(&ramp(9))[0];
+    assert!(
+        ahead > current && current > lagging,
+        "forecast {ahead} must lead the current share {current}, which must \
+         lead the history-averaged estimate {lagging}"
+    );
+}

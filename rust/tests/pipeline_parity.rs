@@ -19,16 +19,15 @@
 use std::collections::BTreeMap;
 
 mod common;
-use common::{assert_bitwise_eq, mk_rounds};
-use moe_gps::coordinator::request::{Request, RequestGen};
+use common::{
+    assert_bitwise_eq, decode_fingerprint, decode_requests, greedy_decode_opts, mk_rounds,
+    small_source as source,
+};
+use moe_gps::coordinator::request::Request;
 use moe_gps::coordinator::router::route_sequence;
-use moe_gps::coordinator::{Coordinator, DecodeOptions, DecodeReport, ServeStrategy};
+use moe_gps::coordinator::{Coordinator, DecodeReport, ServeStrategy};
 use moe_gps::runtime::tensor::IntTensor;
-use moe_gps::runtime::{Engine, EngineSource, HostTensor, In, SyntheticSpec};
-
-fn source() -> EngineSource {
-    EngineSource::Synthetic(SyntheticSpec::small_test())
-}
+use moe_gps::runtime::{Engine, HostTensor, In, SyntheticSpec};
 
 /// Serve the given rounds, returning the last round's metrics token
 /// counts and every round's outputs.
@@ -202,29 +201,10 @@ fn serve_decode_spec(
     coord.lookahead = lookahead;
     coord.speculative = speculative;
     coord.placement.replan_interval = 2;
-    let mut gen = RequestGen::new(23, 512);
-    let requests: Vec<Request> = (0..4).map(|_| gen.decode_request(6, 5)).collect();
+    let requests = decode_requests(23, 512, 4, 6, 5);
     coord
-        .serve_decode(requests, &DecodeOptions {
-            max_active: 3,
-            max_steps: 64,
-            temperature: 0.0, // greedy: fully deterministic
-            seed: 5,
-            arrival_interval: 0,
-        })
+        .serve_decode(requests, &greedy_decode_opts(3, 64, 5))
         .unwrap()
-}
-
-/// Per-step routing fingerprint: identical hidden states imply identical
-/// routing imply identical slot counts — and greedy sampling feeds the
-/// same tokens into every subsequent step, so the whole trajectory pins
-/// the numerics across strategies and lookahead regimes.
-fn decode_fingerprint(report: &DecodeReport) -> Vec<(usize, usize, usize, usize)> {
-    report
-        .steps
-        .iter()
-        .map(|s| (s.step, s.n_prefill_tokens, s.n_decode_tokens, s.n_slots))
-        .collect()
 }
 
 /// ADR 003: the speculative fast path + misprediction-repair pass must be

@@ -1,0 +1,221 @@
+//! Proactive (forecast-driven) serving, end to end (ADR 006).
+//!
+//! The contracts:
+//!
+//! 1. **Bitwise neutrality** — a forecast horizon changes *which replicas
+//!    the plan carries and when they move*, never the numerics: serving
+//!    at any horizon is bitwise identical to reactive serving, and
+//!    horizon 0 doesn't even take a different code path.
+//! 2. **Prewarm before the spike** — on a skew ramp the proactive plan
+//!    replicates the heating expert at least one replan interval before
+//!    the reactive plan does (the whole point of forecasting).
+//! 3. **Realized-error feedback** — forecasts are scored against reality,
+//!    the error lands in the serve report (`forecast_l1`), gates in CI
+//!    via `bench-validate --forecast-report`, and trips the controller's
+//!    reactive fallback on an adversarial trace.
+
+mod common;
+use common::{
+    assert_bitwise_eq, decode_requests, greedy_decode_opts, mk_rounds,
+    small_source as source,
+};
+use moe_gps::coordinator::placement_mgr::PlacementManager;
+use moe_gps::coordinator::request::Request;
+use moe_gps::coordinator::{
+    ControllerConfig, Coordinator, ServeStrategy, StrategyController,
+};
+use moe_gps::gps::calibrate::calibrate_all;
+use moe_gps::gps::select::{Regime, ServePhase};
+use moe_gps::gps::WindowSample;
+use moe_gps::model::ModelConfig;
+use moe_gps::runtime::HostTensor;
+use moe_gps::sim::SystemSpec;
+
+fn serve_prefill_at_horizon(
+    horizon: usize,
+    rounds: Vec<Vec<Request>>,
+) -> (Vec<Vec<HostTensor>>, Option<f64>) {
+    let mut coord =
+        Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+    coord.lookahead = 1;
+    coord.placement.horizon = horizon;
+    let mut outputs = Vec::new();
+    let mut metrics = Vec::new();
+    for round in &rounds {
+        let (m, out) = coord.serve_round(round).unwrap();
+        metrics.push(m);
+        outputs.push(out);
+    }
+    let report = moe_gps::coordinator::ServeReport {
+        strategy: ServeStrategy::DistributionOnly.name().to_string(),
+        rounds: metrics,
+        ..Default::default()
+    };
+    (outputs, report.mean_forecast_l1())
+}
+
+#[test]
+fn forecast_serving_is_bitwise_identical_to_reactive_at_every_horizon() {
+    let rounds = mk_rounds(131, 5, 3);
+    let (reactive, reactive_l1) = serve_prefill_at_horizon(0, rounds.clone());
+    assert!(
+        reactive_l1.is_none(),
+        "horizon 0 must mature no forecasts: {reactive_l1:?}"
+    );
+    for horizon in [1usize, 2, 4] {
+        let (proactive, _) = serve_prefill_at_horizon(horizon, rounds.clone());
+        assert_bitwise_eq(
+            &reactive,
+            &proactive,
+            &format!("horizon {horizon} vs reactive"),
+        );
+    }
+    // Forecasts planned for round t are scored when round t+h's routing
+    // arrives, so a long enough run realizes an error measurement.
+    let (_, proactive_l1) = serve_prefill_at_horizon(2, rounds);
+    let l1 = proactive_l1.expect("horizon-2 forecasts must mature and score");
+    assert!((0.0..=2.0).contains(&l1), "L1 out of range: {l1}");
+}
+
+/// The paper-facing acceptance scenario: a skew ramp (one expert heating
+/// linearly) must see the proactive plan carry the hot expert's replica
+/// at least one replan interval before the reactive plan does.
+#[test]
+fn skew_ramp_prewarms_the_hot_expert_before_the_reactive_plan() {
+    let horizon = 4usize;
+    let ramp = |t: usize| -> [usize; 8] {
+        let mut counts = [40usize; 8];
+        counts[0] = 40 + 14 * t;
+        counts
+    };
+    let first_replication = |horizon: usize| -> Option<usize> {
+        let mut mgr = PlacementManager::new(8, 4, 2, 8, 4);
+        mgr.horizon = horizon;
+        for t in 0..24usize {
+            mgr.observe(0, &ramp(t));
+            let plan = mgr.plan_distribution_only(0, 512);
+            if plan.placement.copies(0) > 1 {
+                return Some(t);
+            }
+        }
+        None
+    };
+    let proactive = first_replication(horizon).expect("proactive plan must replicate");
+    let reactive = first_replication(0).expect("reactive plan must replicate eventually");
+    assert!(
+        proactive + 1 <= reactive,
+        "proactive replication at step {proactive} must land at least one \
+         replan interval before reactive at step {reactive}"
+    );
+}
+
+#[test]
+fn realized_forecast_error_lands_in_the_decode_report_and_gates() {
+    let serve = |horizon: usize| {
+        let mut coord =
+            Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+        coord.placement.replan_interval = 2;
+        coord.placement.horizon = horizon;
+        let requests = decode_requests(23, 512, 4, 6, 5);
+        coord
+            .serve_decode(requests, &greedy_decode_opts(3, 64, 5))
+            .unwrap()
+    };
+    let proactive = serve(2);
+    let l1 = proactive
+        .mean_forecast_l1()
+        .expect("horizon-2 decode forecasts must mature");
+    assert!(l1 >= 0.0 && l1.is_finite());
+    // The report JSON carries it at the top level, where the CI gate
+    // (`bench-validate --forecast-report`) reads it.
+    let json = proactive.to_json();
+    let in_json = json.get("forecast_l1").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(in_json.to_bits(), l1.to_bits());
+    let path = std::env::temp_dir().join(format!(
+        "moe_gps_proactive_report_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, json.to_string_pretty()).unwrap();
+    let gated = moe_gps::bench::emit::validate_forecast_error(&path, 2.0).unwrap();
+    assert!((gated - l1).abs() < 1e-12);
+    assert!(
+        moe_gps::bench::emit::validate_forecast_error(&path, l1 / 2.0 - 1e-9).is_err(),
+        "a tighter bound than the measured error must fail the gate"
+    );
+
+    // Reactive run: no forecast matures, the field is null, the gate
+    // refuses to pass vacuously.
+    let reactive = serve(0);
+    assert!(reactive.mean_forecast_l1().is_none());
+    std::fs::write(&path, reactive.to_json().to_string_pretty()).unwrap();
+    assert!(moe_gps::bench::emit::validate_forecast_error(&path, 2.0).is_err());
+    let _ = std::fs::remove_file(&path);
+
+    // And the decode trajectory itself never moved: forecasting is plans
+    // and scheduling, not numerics.
+    assert_eq!(
+        common::decode_fingerprint(&serve(2)),
+        common::decode_fingerprint(&reactive),
+        "forecast horizon must not move the greedy decode trajectory"
+    );
+}
+
+#[test]
+fn adversarial_trace_trips_the_controller_fallback_into_the_coordinator() {
+    let cals = calibrate_all(
+        &ModelConfig::mixtral_8x7b(),
+        &SystemSpec::four_a100_nvlink(),
+        true,
+        7,
+    );
+    let mut ctrl = StrategyController::with_cals(
+        ControllerConfig {
+            min_window: 1,
+            hysteresis: 1,
+            margin_frac: 0.0,
+            phase: ServePhase::Prefill,
+            horizon: 4,
+            forecast_error_max: 0.5,
+            ..Default::default()
+        },
+        cals,
+    );
+    // An alternating hot-expert trace realizes a forecast L1 far above
+    // the threshold (the forecaster extrapolates the flip it just saw,
+    // reality flips back).
+    for _ in 0..4 {
+        ctrl.observe_sample(WindowSample {
+            tokens: 128.0,
+            total_s: 0.25,
+            routing_skew: 2.0,
+            pred_share_l1: 0.05,
+            pred_share_layers: 2.0,
+            forecast_l1: 1.3,
+            forecast_layers: 2.0,
+            ..Default::default()
+        });
+    }
+    let mut coord =
+        Coordinator::with_source(&source(), 4, ServeStrategy::DistributionOnly).unwrap();
+    coord.placement.horizon = 4;
+    let regime = Regime {
+        horizon: 4,
+        ..coord.current_regime()
+    };
+    let d = ctrl
+        .decide(1, coord.strategy, coord.speculative, coord.lookahead, regime)
+        .expect("the breach must produce a decision");
+    assert_eq!(d.horizon, 0, "fallback must drop to reactive replanning");
+    coord.apply_decision(&d);
+    assert_eq!(
+        coord.placement.horizon, 0,
+        "the coordinator must serve reactively after the fallback"
+    );
+    let rec = ctrl.decisions().last().unwrap();
+    assert_eq!(rec.horizon, 0);
+    assert!(
+        rec.reason.contains("falling back to reactive"),
+        "the fallback must be logged in the decision trace: {}",
+        rec.reason
+    );
+}

@@ -7,18 +7,13 @@
 //! prewarm budgets.
 
 mod common;
-use common::{assert_bitwise_eq, mk_rounds};
-use moe_gps::coordinator::request::{Request, RequestGen};
-use moe_gps::coordinator::{Coordinator, DecodeOptions, DecodeReport, ServeStrategy};
-use moe_gps::runtime::{EngineSource, HostTensor, SyntheticSpec};
-
-fn small() -> EngineSource {
-    EngineSource::Synthetic(SyntheticSpec::small_test())
-}
-
-fn tiny() -> EngineSource {
-    EngineSource::Synthetic(SyntheticSpec::tiny())
-}
+use common::{
+    assert_bitwise_eq, decode_fingerprint, decode_requests, greedy_decode_opts, mk_rounds,
+    small_source as small, tiny_source as tiny,
+};
+use moe_gps::coordinator::request::Request;
+use moe_gps::coordinator::{Coordinator, DecodeReport, ServeStrategy};
+use moe_gps::runtime::{EngineSource, HostTensor};
 
 struct PrefillRun {
     outputs: Vec<Vec<HostTensor>>,
@@ -234,16 +229,9 @@ fn decode_run(cap_replicas: Option<u64>) -> (DecodeReport, u64) {
         Coordinator::with_source(&small(), 4, ServeStrategy::NoPrediction).unwrap();
     let replica = coord.residency().replica_bytes();
     coord.set_memory_cap(cap_replicas.map(|n| n * replica));
-    let mut gen = RequestGen::new(23, 512);
-    let requests: Vec<Request> = (0..4).map(|_| gen.decode_request(6, 5)).collect();
+    let requests = decode_requests(23, 512, 4, 6, 5);
     let report = coord
-        .serve_decode(requests, &DecodeOptions {
-            max_active: 3,
-            max_steps: 64,
-            temperature: 0.0, // greedy: fully deterministic
-            seed: 5,
-            arrival_interval: 0,
-        })
+        .serve_decode(requests, &greedy_decode_opts(3, 64, 5))
         .unwrap();
     (report, replica)
 }
@@ -255,14 +243,12 @@ fn decode_run(cap_replicas: Option<u64>) -> (DecodeReport, u64) {
 fn capped_decode_trajectory_is_identical_and_bounded() {
     let (free, replica) = decode_run(None);
     let (capped, _) = decode_run(Some(3));
-    let fingerprint = |r: &DecodeReport| -> Vec<(usize, usize, usize, usize)> {
-        r.steps
-            .iter()
-            .map(|s| (s.step, s.n_prefill_tokens, s.n_decode_tokens, s.n_slots))
-            .collect()
-    };
     assert!(!free.steps.is_empty());
-    assert_eq!(fingerprint(&free), fingerprint(&capped), "trajectory moved");
+    assert_eq!(
+        decode_fingerprint(&free),
+        decode_fingerprint(&capped),
+        "trajectory moved"
+    );
     assert_eq!(free.total_evictions(), 0);
     assert!(capped.total_evictions() > 0, "every step cycles the 2 layers");
     assert!(capped.total_refetch_upload_bytes() > 0);
