@@ -106,6 +106,7 @@ fn main() {
             exposed_transfer_ns: report.total_exposed_transfer_s() * 1e9,
             hidden_bytes: report.total_hidden_upload_bytes(),
             exposed_bytes: report.total_exposed_upload_bytes(),
+            ..Default::default()
         });
     }
     let baseline = results

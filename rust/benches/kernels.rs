@@ -1,0 +1,181 @@
+//! Bench: **SIMD lane kernels** (ADR 007) — per-kernel GB/s and GFLOP/s
+//! for the dot / AXPY / max-reduce primitives that dominate the serve hot
+//! path, scalar vs the dispatched vector tier, plus a matmul built from
+//! the same primitives. Records land in `BENCH_serve.json` (schema
+//! `moe-gps/serve-bench/v1`) with `bench = "kernels/<op>/<shape>"` and
+//! `strategy` = the dispatch tier, so `bench-validate
+//! --min-kernel-speedup` can gate the scalar-vs-simd ratio. When no
+//! vector ISA is available (or `MOE_GPS_SIMD=scalar` forces the portable
+//! path) only scalar records are written and that is announced loudly —
+//! the validator reports it rather than silently passing.
+
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::runtime::simd;
+use moe_gps::util::rng::Rng;
+
+/// One measured rate: elements/sec plus derived arithmetic and traffic
+/// rates for the record.
+fn record(bench: String, tier: &str, elems_per_s: f64, flops_per_elem: f64, bytes_per_elem: f64) -> ServeBenchRecord {
+    ServeBenchRecord {
+        bench,
+        strategy: tier.into(),
+        tokens_per_s: elems_per_s,
+        gflops: Some(elems_per_s * flops_per_elem / 1e9),
+        gbs: Some(elems_per_s * bytes_per_elem / 1e9),
+        ..Default::default()
+    }
+}
+
+fn rate(b: &Bencher, name: &str, n: usize, mut f: impl FnMut() -> f32) -> f64 {
+    let s = b.bench(name, &mut f);
+    s.print();
+    if s.median_s > 0.0 {
+        n as f64 / s.median_s
+    } else {
+        0.0
+    }
+}
+
+/// The reference backend's per-row matmul structure (blocked ikj over
+/// AXPY), parameterised on the AXPY used — so scalar and dispatched
+/// tiers run the identical loop nest and only the lane kernel differs.
+fn matmul_via(
+    axpy: fn(f32, &[f32], &mut [f32]),
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    const K_TILE: usize = 64;
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for k0 in (0..k).step_by(K_TILE) {
+            let k1 = (k0 + K_TILE).min(k);
+            for (kk, &av) in arow[k0..k1].iter().enumerate() {
+                axpy(av, &b[(k0 + kk) * n..(k0 + kk + 1) * n], orow);
+            }
+        }
+    }
+}
+
+fn main() {
+    let tier = simd::active_tier();
+    let vector = tier != simd::Tier::Scalar;
+    println!(
+        "SIMD dispatch tier: {} ({} lanes canonical accumulation)",
+        tier.name(),
+        simd::LANES
+    );
+    if !vector {
+        println!(
+            "NOTE: forced-scalar dispatch — no vector ISA (or MOE_GPS_SIMD=scalar); \
+             only scalar records will be written"
+        );
+    }
+
+    let b = Bencher::default();
+    let mut rng = Rng::new(7);
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
+
+    // Sanity: dispatched and portable must agree bitwise before we time
+    // anything (the determinism contract the test suite pins down).
+    {
+        let x: Vec<f32> = (0..4099).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..4099).map(|_| rng.normal() as f32).collect();
+        assert_eq!(
+            simd::dot(&x, &y).to_bits(),
+            simd::dot_portable(&x, &y).to_bits(),
+            "dispatched dot diverged from the portable kernel"
+        );
+        assert_eq!(
+            simd::max_reduce(&x).to_bits(),
+            simd::max_reduce_portable(&x).to_bits(),
+            "dispatched max_reduce diverged from the portable kernel"
+        );
+    }
+
+    group("dot product (q·k attention scores, lm_head logits)");
+    for n in [1024usize, 4096, 65536] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let scalar =
+            rate(&b, &format!("dot/{n}/scalar"), n, || simd::dot_portable(black_box(&x), black_box(&y)));
+        records.push(record(format!("kernels/dot/{n}"), "scalar", scalar, 2.0, 8.0));
+        if vector {
+            let fast = rate(&b, &format!("dot/{n}/{}", tier.name()), n, || {
+                simd::dot(black_box(&x), black_box(&y))
+            });
+            records.push(record(format!("kernels/dot/{n}"), tier.name(), fast, 2.0, 8.0));
+            println!("    speedup: {:.2}x", fast / scalar.max(1.0));
+        }
+    }
+
+    group("AXPY (matmul inner loop, attention V-accumulate)");
+    for n in [1024usize, 4096, 65536] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let scalar = rate(&b, &format!("axpy/{n}/scalar"), n, || {
+            simd::axpy_portable(1.0001, black_box(&x), black_box(&mut y));
+            y[0]
+        });
+        records.push(record(format!("kernels/axpy/{n}"), "scalar", scalar, 2.0, 12.0));
+        if vector {
+            let fast = rate(&b, &format!("axpy/{n}/{}", tier.name()), n, || {
+                simd::axpy(1.0001, black_box(&x), black_box(&mut y));
+                y[0]
+            });
+            records.push(record(format!("kernels/axpy/{n}"), tier.name(), fast, 2.0, 12.0));
+            println!("    speedup: {:.2}x", fast / scalar.max(1.0));
+        }
+    }
+
+    group("max-reduce (softmax row max)");
+    for n in [1024usize, 4096, 65536] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let scalar = rate(&b, &format!("max_reduce/{n}/scalar"), n, || {
+            simd::max_reduce_portable(black_box(&x))
+        });
+        records.push(record(format!("kernels/max_reduce/{n}"), "scalar", scalar, 1.0, 4.0));
+        if vector {
+            let fast = rate(&b, &format!("max_reduce/{n}/{}", tier.name()), n, || {
+                simd::max_reduce(black_box(&x))
+            });
+            records.push(record(format!("kernels/max_reduce/{n}"), tier.name(), fast, 1.0, 4.0));
+            println!("    speedup: {:.2}x", fast / scalar.max(1.0));
+        }
+    }
+
+    group("matmul on the lane kernels (blocked ikj, single thread)");
+    for (m, k, n) in [(64usize, 512usize, 256usize), (1, 512, 512)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let bm: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        let flops = (2 * m * k * n) as f64;
+        let bytes = (4 * (m * k + k * n + m * n)) as f64;
+        let shape = format!("{m}x{k}x{n}");
+        let scalar = rate(&b, &format!("matmul/{shape}/scalar"), 1, || {
+            matmul_via(simd::axpy_portable, &a, m, k, &bm, n, black_box(&mut out));
+            out[0]
+        });
+        records.push(record(format!("kernels/matmul/{shape}"), "scalar", scalar, flops, bytes));
+        if vector {
+            let fast = rate(&b, &format!("matmul/{shape}/{}", tier.name()), 1, || {
+                matmul_via(simd::axpy, &a, m, k, &bm, n, black_box(&mut out));
+                out[0]
+            });
+            records.push(record(format!("kernels/matmul/{shape}"), tier.name(), fast, flops, bytes));
+            println!("    speedup: {:.2}x", fast / scalar.max(f64::MIN_POSITIVE));
+        }
+    }
+
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("\nWARN: could not write {}: {err}", path.display()),
+    }
+}

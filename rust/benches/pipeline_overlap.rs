@@ -67,6 +67,7 @@ fn main() {
             exposed_transfer_ns: cold.total_exposed_transfer_s() * 1e9,
             hidden_bytes: cold.total_hidden_upload_bytes(),
             exposed_bytes: cold.total_exposed_upload_bytes(),
+            ..Default::default()
         });
     }
     let ratio = if steady[0] > 0.0 { steady[1] / steady[0] } else { 0.0 };

@@ -98,6 +98,7 @@ fn main() {
             exposed_transfer_ns: m.exposed_transfer_s * 1e9,
             hidden_bytes: m.hidden_upload_bytes,
             exposed_bytes: m.exposed_upload_bytes,
+            ..Default::default()
         });
     }
 

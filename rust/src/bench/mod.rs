@@ -145,8 +145,11 @@ pub mod emit {
     pub const DEFAULT_PATH: &str = "BENCH_serve.json";
     pub const SCHEMA: &str = "moe-gps/serve-bench/v1";
 
-    /// One serving-bench measurement.
-    #[derive(Clone, Debug, PartialEq)]
+    /// One serving-bench measurement. Kernel benches (`benches/kernels.rs`,
+    /// ADR 007) reuse the schema with `bench = "kernels/<op>/<shape>"`,
+    /// `strategy` = the SIMD dispatch tier, `tokens_per_s` = elements/sec,
+    /// and the optional `gflops`/`gbs` rates filled in.
+    #[derive(Clone, Debug, Default, PartialEq)]
     pub struct ServeBenchRecord {
         pub bench: String,
         pub strategy: String,
@@ -158,6 +161,11 @@ pub mod emit {
         pub exposed_transfer_ns: f64,
         pub hidden_bytes: u64,
         pub exposed_bytes: u64,
+        /// Arithmetic rate for kernel records (ADR 007); absent on
+        /// serving records and on pre-ADR-007 files.
+        pub gflops: Option<f64>,
+        /// Memory-traffic rate for kernel records (ADR 007).
+        pub gbs: Option<f64>,
     }
 
     impl ServeBenchRecord {
@@ -175,6 +183,12 @@ pub mod emit {
                 .set("exposed_transfer_ns", Value::Num(self.exposed_transfer_ns))
                 .set("hidden_bytes", Value::Num(self.hidden_bytes as f64))
                 .set("exposed_bytes", Value::Num(self.exposed_bytes as f64));
+            if let Some(g) = self.gflops {
+                v.set("gflops", Value::Num(g));
+            }
+            if let Some(g) = self.gbs {
+                v.set("gbs", Value::Num(g));
+            }
             v
         }
 
@@ -188,6 +202,10 @@ pub mod emit {
                 exposed_transfer_ns: v.get("exposed_transfer_ns")?.as_f64()?,
                 hidden_bytes: v.get("hidden_bytes")?.as_f64()? as u64,
                 exposed_bytes: v.get("exposed_bytes")?.as_f64()? as u64,
+                // Kernel-rate fields are optional: pre-ADR-007 records
+                // simply lack them.
+                gflops: v.get("gflops").and_then(Value::as_f64),
+                gbs: v.get("gbs").and_then(Value::as_f64),
             })
         }
     }
@@ -295,6 +313,132 @@ pub mod emit {
         Ok(l1)
     }
 
+    /// Kernel-speedup gate (ADR 007): for every `kernels/…dot…` or
+    /// `kernels/…matmul…` bench that recorded BOTH a `scalar` record and a
+    /// vector-tier record (`avx2+fma` / `neon`), assert the vector tier is
+    /// at least `min_speedup`× the scalar rate. When the file holds kernel
+    /// records but *no* vector-tier ones (the machine has no vector ISA,
+    /// or `MOE_GPS_SIMD=scalar` forced the portable path), that is
+    /// reported loudly via the returned message rather than silently
+    /// passed. Errors when no kernel records exist at all.
+    /// Returns (comparisons checked, human summary).
+    pub fn validate_kernel_speedups(
+        path: &Path,
+        min_speedup: f64,
+    ) -> anyhow::Result<(usize, String)> {
+        let records = read_serve_benches(path);
+        let kernels: Vec<&ServeBenchRecord> = records
+            .iter()
+            .filter(|r| r.bench.starts_with("kernels/"))
+            .collect();
+        anyhow::ensure!(
+            !kernels.is_empty(),
+            "{}: no kernel records (run: cargo bench --bench kernels)",
+            path.display()
+        );
+        let has_vector = kernels.iter().any(|r| r.strategy != "scalar");
+        if !has_vector {
+            return Ok((
+                0,
+                format!(
+                    "forced-scalar dispatch recorded ({} kernel record(s), no \
+                     vector ISA tier) — speedup gate not applicable",
+                    kernels.len()
+                ),
+            ));
+        }
+        let mut checked = 0usize;
+        for r in &kernels {
+            if r.strategy == "scalar"
+                || !(r.bench.contains("dot") || r.bench.contains("matmul"))
+            {
+                continue;
+            }
+            let Some(scalar) = kernels
+                .iter()
+                .find(|s| s.bench == r.bench && s.strategy == "scalar")
+            else {
+                continue;
+            };
+            let speedup = r.tokens_per_s / scalar.tokens_per_s.max(f64::MIN_POSITIVE);
+            anyhow::ensure!(
+                speedup >= min_speedup,
+                "{}: {} tier `{}` is only {speedup:.2}× scalar (bound {min_speedup}×)",
+                path.display(),
+                r.bench,
+                r.strategy
+            );
+            checked += 1;
+        }
+        anyhow::ensure!(
+            checked > 0,
+            "{}: vector-tier kernel records exist but none pair a scalar \
+             dot/matmul baseline — re-run the kernels bench",
+            path.display()
+        );
+        Ok((
+            checked,
+            format!("{checked} dot/matmul kernel(s) ≥ {min_speedup}× scalar"),
+        ))
+    }
+
+    /// Stored-baseline regression gate: compare each `serve_hotpath`
+    /// record in `path` against the record with the same (bench,
+    /// strategy, lookahead) key in `baseline_path`, failing when current
+    /// throughput dropped more than `max_regression` (fractional, e.g.
+    /// 0.2 = 20%). Keys present on only one side are skipped — the gate
+    /// flags regressions, not coverage drift. Returns (comparisons,
+    /// human summary); an empty baseline yields 0 comparisons and a
+    /// "no baseline" note instead of an error, so CI can phase the gate
+    /// in before the first toolchain run lands records.
+    pub fn validate_serve_baseline(
+        path: &Path,
+        baseline_path: &Path,
+        max_regression: f64,
+    ) -> anyhow::Result<(usize, String)> {
+        let current = read_serve_benches(path);
+        let baseline = read_serve_benches(baseline_path);
+        let base_hotpath: Vec<&ServeBenchRecord> = baseline
+            .iter()
+            .filter(|r| r.bench.contains("serve_hotpath"))
+            .collect();
+        if base_hotpath.is_empty() {
+            return Ok((
+                0,
+                format!(
+                    "{}: no serve_hotpath baseline records — regression gate \
+                     skipped",
+                    baseline_path.display()
+                ),
+            ));
+        }
+        let mut checked = 0usize;
+        for b in &base_hotpath {
+            let Some(c) = current.iter().find(|c| c.key() == b.key()) else {
+                continue;
+            };
+            let floor = b.tokens_per_s * (1.0 - max_regression);
+            anyhow::ensure!(
+                c.tokens_per_s >= floor,
+                "{} [{} lookahead={}]: {:.1} tok/s regressed below {:.1} \
+                 (baseline {:.1}, max regression {:.0}%)",
+                c.bench,
+                c.strategy,
+                c.lookahead,
+                c.tokens_per_s,
+                floor,
+                b.tokens_per_s,
+                max_regression * 100.0
+            );
+            checked += 1;
+        }
+        Ok((
+            checked,
+            format!("{checked} serve_hotpath record(s) within {:.0}% of baseline",
+                max_regression * 100.0),
+        ))
+    }
+
     /// Merge-write: replaces on-disk records with the same (bench,
     /// strategy, lookahead) key and keeps the rest, so independent bench
     /// binaries accumulate into one trajectory file.
@@ -328,6 +472,7 @@ pub mod emit {
                 exposed_transfer_ns: 456.0,
                 hidden_bytes: 7,
                 exposed_bytes: 8,
+                ..Default::default()
             }
         }
 
@@ -400,6 +545,90 @@ pub mod emit {
             .unwrap();
             assert!(validate_serve_benches(&path, false).is_err());
             let _ = std::fs::remove_file(&path);
+        }
+
+        fn kernel_record(bench: &str, tier: &str, eps: f64) -> ServeBenchRecord {
+            ServeBenchRecord {
+                bench: bench.into(),
+                strategy: tier.into(),
+                tokens_per_s: eps,
+                gflops: Some(eps * 2.0 / 1e9),
+                gbs: Some(eps * 8.0 / 1e9),
+                ..Default::default()
+            }
+        }
+
+        #[test]
+        fn kernel_speedup_gate_compares_tiers() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_kernel_gate_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            assert!(validate_kernel_speedups(&path, 1.5).is_err(), "no records");
+
+            // Forced-scalar: loud note, zero comparisons, no failure.
+            record_serve_benches(&path, &[kernel_record("kernels/dot/4096", "scalar", 1e9)])
+                .unwrap();
+            let (n, msg) = validate_kernel_speedups(&path, 1.5).unwrap();
+            assert_eq!(n, 0);
+            assert!(msg.contains("forced-scalar"), "{msg}");
+
+            // Vector tier at 2× passes a 1.5× bound, fails a 3× bound.
+            record_serve_benches(
+                &path,
+                &[kernel_record("kernels/dot/4096", "avx2+fma", 2e9)],
+            )
+            .unwrap();
+            let (n, _) = validate_kernel_speedups(&path, 1.5).unwrap();
+            assert_eq!(n, 1);
+            assert!(validate_kernel_speedups(&path, 3.0).is_err());
+
+            // Non-dot kernels (axpy) are exempt from the bound.
+            record_serve_benches(
+                &path,
+                &[
+                    kernel_record("kernels/axpy/4096", "scalar", 1e9),
+                    kernel_record("kernels/axpy/4096", "avx2+fma", 1.01e9),
+                ],
+            )
+            .unwrap();
+            assert!(validate_kernel_speedups(&path, 1.5).is_ok());
+            let _ = std::fs::remove_file(&path);
+        }
+
+        #[test]
+        fn baseline_gate_flags_hotpath_regression() {
+            let dir = std::env::temp_dir();
+            let cur = dir.join(format!("moe_gps_base_cur_{}.json", std::process::id()));
+            let base = dir.join(format!("moe_gps_base_old_{}.json", std::process::id()));
+            let _ = std::fs::remove_file(&cur);
+            let _ = std::fs::remove_file(&base);
+
+            // Missing baseline: gate skips with a note.
+            record_serve_benches(&cur, &[record("serve_hotpath", "dop", false, 100.0)])
+                .unwrap();
+            let (n, msg) = validate_serve_baseline(&cur, &base, 0.2).unwrap();
+            assert_eq!(n, 0);
+            assert!(msg.contains("skipped"), "{msg}");
+
+            // Within 20% of baseline: ok. Below: error.
+            record_serve_benches(&base, &[record("serve_hotpath", "dop", false, 110.0)])
+                .unwrap();
+            let (n, _) = validate_serve_baseline(&cur, &base, 0.2).unwrap();
+            assert_eq!(n, 1);
+            record_serve_benches(&base, &[record("serve_hotpath", "dop", false, 200.0)])
+                .unwrap();
+            assert!(validate_serve_baseline(&cur, &base, 0.2).is_err());
+
+            // Non-hotpath baseline records are ignored.
+            let _ = std::fs::remove_file(&base);
+            record_serve_benches(&base, &[record("decode_serve", "dop", false, 9e9)])
+                .unwrap();
+            let (n, _) = validate_serve_baseline(&cur, &base, 0.2).unwrap();
+            assert_eq!(n, 0);
+            let _ = std::fs::remove_file(&cur);
+            let _ = std::fs::remove_file(&base);
         }
 
         #[test]

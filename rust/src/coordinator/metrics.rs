@@ -28,6 +28,14 @@ pub struct ReportMeta {
     pub adaptive: bool,
     /// Forecast horizon the placement planned for (0 = reactive, ADR 006).
     pub horizon: usize,
+    /// Compute pool threads the kernels ran on (0 = not recorded, e.g.
+    /// reports parsed from pre-ADR-007 runs).
+    pub threads: usize,
+    /// Whether pool helpers were pinned to cores (ADR 007).
+    pub pinned: bool,
+    /// Resolved SIMD dispatch tier ("scalar" | "avx2+fma" | "neon") —
+    /// the kernel regime the measured constants were calibrated under.
+    pub simd_tier: String,
 }
 
 impl ReportMeta {
@@ -45,8 +53,25 @@ impl ReportMeta {
                 },
             )
             .set("adaptive", Value::Bool(self.adaptive))
-            .set("horizon", Value::Num(self.horizon as f64));
+            .set("horizon", Value::Num(self.horizon as f64))
+            .set("threads", Value::Num(self.threads as f64))
+            .set("pinned", Value::Bool(self.pinned))
+            .set("simd_tier", Value::Str(self.simd_tier.clone()));
         v
+    }
+
+    /// One-line kernel-regime suffix for the human summaries; empty when
+    /// the runtime fields were never recorded (hand-built test reports).
+    fn runtime_suffix(&self) -> String {
+        if self.threads == 0 {
+            return String::new();
+        }
+        format!(
+            "\n  kernels: simd={} threads={} pinned={}",
+            if self.simd_tier.is_empty() { "?" } else { &self.simd_tier },
+            self.threads,
+            self.pinned,
+        )
     }
 }
 
@@ -379,6 +404,7 @@ impl ServeReport {
                 c.final_strategy
             ));
         }
+        s.push_str(&self.meta.runtime_suffix());
         s
     }
 }
@@ -710,6 +736,7 @@ impl DecodeReport {
                 c.final_strategy
             ));
         }
+        s.push_str(&self.meta.runtime_suffix());
         s
     }
 }

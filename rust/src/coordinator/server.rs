@@ -469,6 +469,9 @@ impl Coordinator {
             memory_cap_bytes: self.residency.cap_bytes(),
             adaptive: self.controller.is_some(),
             horizon: self.placement.horizon,
+            threads: crate::runtime::pool::threads(),
+            pinned: crate::runtime::pool::pinning(),
+            simd_tier: crate::runtime::simd::active_tier().name().into(),
         }
     }
 

@@ -578,6 +578,12 @@ pub struct ServedReport {
     /// Controller decisions evaluated / actually switched.
     pub decisions: usize,
     pub switches: usize,
+    /// Compute pool threads (None for pre-ADR-007 reports).
+    pub threads: Option<usize>,
+    /// Whether pool helpers were core-pinned.
+    pub pinned: bool,
+    /// SIMD dispatch tier the kernels ran under (None for old reports).
+    pub simd_tier: Option<String>,
 }
 
 /// Parse a serve-report JSON file (see `ServeReport::to_json`). Fails
@@ -651,6 +657,15 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
             .unwrap_or(false),
         decisions,
         switches,
+        // Kernel-regime fields (ADR 007) are parsed leniently: reports
+        // written before this schema addition simply lack them.
+        threads: meta.get("threads").and_then(Value::as_usize).filter(|&t| t > 0),
+        pinned: meta.get("pinned").and_then(Value::as_bool).unwrap_or(false),
+        simd_tier: meta
+            .get("simd_tier")
+            .and_then(Value::as_str)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string),
     })
 }
 

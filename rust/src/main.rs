@@ -33,6 +33,7 @@ fn main() {
         "speculative",
         "require-results",
         "adaptive",
+        "pin",
     ]);
     if args.flag("version") {
         println!("moe-gps {}", moe_gps::VERSION);
@@ -110,6 +111,11 @@ USAGE: moe-gps <subcommand> [options]
                                 L1 past which the controller falls back to
                                 reactive replanning; default 0.5)
                 --threads N    (reference-backend compute pool; 0 = auto)
+                --pin          (ADR 007: pin pool helpers to cores and
+                                reserve the first core for the leader;
+                                linux only, bitwise identical either way.
+                                MOE_GPS_SIMD=scalar|native forces or
+                                auto-detects the kernel dispatch tier)
                 --adaptive     (ADR 005: online strategy controller —
                                 re-selects DOP/TEP/speculative/lookahead at
                                 replan boundaries from measured metrics;
@@ -126,11 +132,19 @@ USAGE: moe-gps <subcommand> [options]
                (without artifacts the synthetic tiny model is served)
   bench-report table1|fig4|fig6|fig7 [--fast]
   bench-validate [BENCH_serve.json] [--require-results
-                --forecast-report F.json --max-forecast-l1 B]
+                --forecast-report F.json --max-forecast-l1 B
+                --min-kernel-speedup X --baseline OLD.json
+                --max-regression F]
                validate a serve-bench trajectory file against the
                moe-gps/serve-bench/v1 schema (the CI bench-smoke gate);
                with --forecast-report, additionally gate the realized
-               forecast L1 recorded by a `serve --horizon` report
+               forecast L1 recorded by a `serve --horizon` report;
+               with --min-kernel-speedup, require the kernels bench's
+               vector tier ≥ X× scalar on dot/matmul (ADR 007 — a
+               forced-scalar file is reported, never silently passed);
+               with --baseline, fail when serve_hotpath throughput
+               regressed more than --max-regression (default 0.2) vs
+               the stored records
 ",
         moe_gps::VERSION
     );
@@ -426,6 +440,17 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             served.decisions, served.switches
         );
     }
+    if let Some(threads) = served.threads {
+        // The kernel regime the constants were calibrated under (ADR
+        // 007): a report measured with SIMD+pinning prices a different
+        // operating point than a scalar one — say which this was.
+        println!(
+            "  kernels: simd={} threads={} pinned={}",
+            served.simd_tier.as_deref().unwrap_or("?"),
+            threads,
+            served.pinned,
+        );
+    }
 
     // The guideline map under the measured constants, priced under the
     // regime the run actually served (overlap/speculative/memory-cap).
@@ -556,6 +581,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // ADR 003: size the reference backend's shared compute pool before
     // the first engine spins up (0 = auto-detect).
     moe_gps::runtime::configure_compute_threads(args.opt_usize("threads", 0)?);
+    // ADR 007: pin pool helpers to cores and keep the leader on its own
+    // reserved core. Placement only decides where threads run — outputs
+    // are bitwise identical pinned or unpinned.
+    if args.flag("pin") {
+        moe_gps::runtime::configure_pool_pinning(true);
+        if !moe_gps::runtime::pool::pin_leader() {
+            eprintln!(
+                "warning: --pin requested but sched_setaffinity is unavailable \
+                 (non-linux or sandboxed); threads will float"
+            );
+        }
+    }
     let mut coord = Coordinator::new(&artifacts, workers, strategy)?;
     // ADR 002/004: overlap the next N layers' prediction/planning/prewarm
     // with the current layer's compute. Numerics are identical at every
@@ -779,6 +816,27 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
             bound,
         )?;
         println!("{report}: realized forecast L1 {l1:.4} within bound {bound}");
+    }
+    // ADR 007: kernel-speedup gate. Fails when a vector tier recorded by
+    // `cargo bench --bench kernels` is under the bound on the dot/matmul
+    // kernels; a forced-scalar file is reported loudly, never silently
+    // passed.
+    if let Some(s) = args.opt("min-kernel-speedup") {
+        let bound = s.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("--min-kernel-speedup expects a number, got `{s}`")
+        })?;
+        let (_, msg) = moe_gps::bench::emit::validate_kernel_speedups(&path, bound)?;
+        println!("{}: {msg}", path.display());
+    }
+    // ADR 007: stored-baseline regression gate for serve_hotpath.
+    if let Some(baseline) = args.opt("baseline") {
+        let max_regression = args.opt_f64("max-regression", 0.2)?;
+        let (_, msg) = moe_gps::bench::emit::validate_serve_baseline(
+            &path,
+            std::path::Path::new(baseline),
+            max_regression,
+        )?;
+        println!("{}: {msg}", path.display());
     }
     Ok(())
 }

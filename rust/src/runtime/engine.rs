@@ -38,6 +38,13 @@ pub fn configure_compute_threads(n: usize) {
     super::pool::configure_threads(n);
 }
 
+/// Enable core pinning for the compute pool (the CLI's `serve --pin`).
+/// Must run before the pool's first use, like [`configure_compute_threads`];
+/// degrades to a no-op where `sched_setaffinity` is unavailable (ADR 007).
+pub fn configure_pool_pinning(on: bool) {
+    super::pool::configure_pinning(on);
+}
+
 /// An input to [`Engine::call`]: a named device-resident weight, a host
 /// activation tensor, or host int tensor (token ids).
 #[derive(Clone, Copy)]

@@ -24,8 +24,9 @@ pub mod engine;
 pub mod pjrt;
 pub mod pool;
 pub mod reference;
+pub mod simd;
 pub mod tensor;
 
 pub use artifacts::{synthetic_artifacts, Manifest, SyntheticSpec, WeightStore};
-pub use engine::{configure_compute_threads, Engine, EngineSource, In};
+pub use engine::{configure_compute_threads, configure_pool_pinning, Engine, EngineSource, In};
 pub use tensor::HostTensor;

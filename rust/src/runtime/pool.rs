@@ -25,6 +25,17 @@
 //! `serve --threads N`), else `MOE_GPS_THREADS`, else
 //! `available_parallelism`. The pool is created lazily on first use and
 //! lives for the process.
+//!
+//! **Placement (ADR 007).** With [`configure_pinning`] enabled before
+//! first use, each helper thread pins itself to its own core via
+//! `sched_setaffinity` (linux; no-op elsewhere), and the *leader* core —
+//! the first allowed CPU — is left out of the helper assignment so the
+//! calling thread ([`pin_leader`], the CLI's `serve --pin`) keeps a core
+//! to itself instead of migrating under the helpers. Pinning decides
+//! *where* threads run, never how chunks accumulate: outputs are bitwise
+//! identical pinned or unpinned (`tests/pinned_pool.rs`). The SIMD
+//! dispatch tier ([`super::simd`]) is also resolved here, once, at pool
+//! init.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -32,14 +43,90 @@ use std::sync::{mpsc, Arc, Mutex, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Thin wrappers over the glibc affinity calls. `std` already links
+/// libc on linux, so the symbols resolve without a libc crate
+/// dependency (the offline build bakes no registry).
+#[cfg(target_os = "linux")]
+mod affinity {
+    /// 1024-bit `cpu_set_t` as 16 u64 words.
+    const SET_WORDS: usize = 16;
+
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+    }
+
+    /// CPU ids the current thread may run on, ascending. `None` when the
+    /// kernel refuses (seccomp sandboxes) or reports an empty set.
+    pub fn allowed_cpus() -> Option<Vec<usize>> {
+        let mut mask = [0u64; SET_WORDS];
+        let rc = unsafe { sched_getaffinity(0, SET_WORDS * 8, mask.as_mut_ptr()) };
+        if rc != 0 {
+            return None;
+        }
+        let cpus: Vec<usize> = (0..SET_WORDS * 64)
+            .filter(|&c| (mask[c / 64] >> (c % 64)) & 1 == 1)
+            .collect();
+        if cpus.is_empty() {
+            None
+        } else {
+            Some(cpus)
+        }
+    }
+
+    /// Pin the calling thread (pid 0) to a single CPU; true on success.
+    pub fn pin_to(cpu: usize) -> bool {
+        if cpu >= SET_WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; SET_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        unsafe { sched_setaffinity(0, SET_WORDS * 8, mask.as_ptr()) == 0 }
+    }
+
+    /// Restore the calling thread's affinity to the full `cores` set
+    /// (undoes a probe [`pin_to`]); true on success.
+    pub fn allow(cores: &[usize]) -> bool {
+        let mut mask = [0u64; SET_WORDS];
+        for &c in cores {
+            if c < SET_WORDS * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+            }
+        }
+        unsafe { sched_setaffinity(0, SET_WORDS * 8, mask.as_ptr()) == 0 }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod affinity {
+    pub fn allowed_cpus() -> Option<Vec<usize>> {
+        None
+    }
+
+    pub fn pin_to(_cpu: usize) -> bool {
+        false
+    }
+
+    pub fn allow(_cores: &[usize]) -> bool {
+        false
+    }
+}
+
 struct Pool {
     /// One channel per helper thread; the leader of each call is the
     /// calling thread itself.
     senders: Vec<Mutex<mpsc::Sender<Job>>>,
+    /// Whether helper threads pinned themselves to cores at init.
+    pinned: bool,
+    /// The core reserved for leader threads (first allowed CPU) when
+    /// pinning is active.
+    leader_core: Option<usize>,
 }
 
 /// Desired total thread count (helpers + leader); 0 = auto.
 static DESIRED: AtomicUsize = AtomicUsize::new(0);
+/// Whether the pool should pin its helpers at init (ADR 007).
+static DESIRED_PIN: AtomicBool = AtomicBool::new(false);
 static POOL: OnceLock<Pool> = OnceLock::new();
 
 thread_local! {
@@ -55,9 +142,53 @@ pub fn configure_threads(n: usize) {
     DESIRED.store(n, Ordering::SeqCst);
 }
 
+/// Enable/disable core pinning for pool helpers (ADR 007). Takes effect
+/// only before the pool's first use, like [`configure_threads`]. On
+/// non-linux targets (or when `sched_setaffinity` is unavailable, e.g.
+/// seccomp sandboxes) pinning degrades to a no-op and [`pinning`]
+/// reports false.
+pub fn configure_pinning(on: bool) {
+    DESIRED_PIN.store(on, Ordering::SeqCst);
+}
+
+/// Whether the pool's helper threads actually pinned to cores.
+pub fn pinning() -> bool {
+    pool().pinned
+}
+
+/// Pin the calling (leader) thread to the reserved leader core — the
+/// first allowed CPU, which the helper assignment skips. No-op unless
+/// pinning is configured and supported; returns whether a pin applied.
+/// The CLI calls this for the coordinator thread under `serve --pin`;
+/// virtual-GPU worker threads deliberately float (they are dispatchers
+/// whose compute fans out to the pinned helpers).
+pub fn pin_leader() -> bool {
+    match pool().leader_core {
+        Some(core) => affinity::pin_to(core),
+        None => false,
+    }
+}
+
 /// Total compute threads a parallel region can use (helpers + caller).
 pub fn threads() -> usize {
     pool().senders.len() + 1
+}
+
+/// A parallel task should move at least this many bytes — below it,
+/// dispatch overhead beats the fan-out (the per-op chunk-size floor,
+/// ADR 007).
+pub const MIN_TASK_BYTES: usize = 16 * 1024;
+
+/// Rows per chunk for fanning `rows` rows out over the pool, given an
+/// estimate of the bytes one row's kernel touches. Targets ~4 chunks per
+/// thread (a straggler chunk cannot serialise the tail) but floors the
+/// chunk so every task moves at least [`MIN_TASK_BYTES`] — small ops
+/// stop paying fan-out overhead. Chunking never affects numerics: every
+/// chunk runs the identical serial kernel over disjoint rows.
+pub fn chunk_rows(rows: usize, bytes_per_row: usize) -> usize {
+    let balance = rows.div_ceil(threads() * 4).max(1);
+    let floor = MIN_TASK_BYTES.div_ceil(bytes_per_row.max(1));
+    balance.max(floor)
 }
 
 fn auto_threads() -> usize {
@@ -76,15 +207,41 @@ fn auto_threads() -> usize {
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
+        // Resolve the SIMD dispatch tier exactly once, before any kernel
+        // can run on a pool thread (ADR 007).
+        let _ = super::simd::active_tier();
         let desired = DESIRED.load(Ordering::SeqCst);
         let total = if desired == 0 { auto_threads() } else { desired };
         let helpers = total.saturating_sub(1);
+        // Core plan: the first allowed CPU is reserved for leaders;
+        // helpers cycle over the rest (wrapping when oversubscribed).
+        // With a single allowed CPU everyone shares it — still correct,
+        // pinning just buys nothing.
+        let cores = if DESIRED_PIN.load(Ordering::SeqCst) {
+            affinity::allowed_cpus()
+        } else {
+            None
+        };
+        let helper_core = |i: usize| -> Option<usize> {
+            let cores = cores.as_ref()?;
+            if cores.len() == 1 {
+                return Some(cores[0]);
+            }
+            Some(cores[1 + i % (cores.len() - 1)])
+        };
+        let mut pinned = cores.is_some() && helpers > 0;
         let senders = (0..helpers)
             .map(|i| {
+                let core = helper_core(i);
                 let (tx, rx) = mpsc::channel::<Job>();
                 std::thread::Builder::new()
                     .name(format!("compute-{i}"))
                     .spawn(move || {
+                        if let Some(core) = core {
+                            // Best-effort: a refused setaffinity (sandbox)
+                            // leaves the thread floating, which is safe.
+                            let _ = affinity::pin_to(core);
+                        }
                         // Jobs catch their own panics, so this loop only
                         // ends when the sender side is dropped (never:
                         // the pool is static).
@@ -96,7 +253,24 @@ fn pool() -> &'static Pool {
                 Mutex::new(tx)
             })
             .collect();
-        Pool { senders }
+        // Probe that setaffinity actually works from this process before
+        // reporting placement as active (helpers apply theirs async and
+        // best-effort; seccomp sandboxes allow getaffinity but refuse
+        // setaffinity). The probe pins the init thread to the leader
+        // core, then releases it back to the full set — `pin_leader`
+        // re-pins deliberately.
+        if pinned {
+            let cores = cores.as_ref().expect("cores present when pinned");
+            pinned = affinity::pin_to(cores[0]);
+            if pinned {
+                let _ = affinity::allow(cores);
+            }
+        }
+        Pool {
+            senders,
+            pinned,
+            leader_core: if pinned { cores.map(|c| c[0]) } else { None },
+        }
     })
 }
 
@@ -286,5 +460,39 @@ mod tests {
     #[test]
     fn threads_reports_at_least_one() {
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn chunk_rows_targets_four_chunks_per_thread_for_big_rows() {
+        // Huge rows: the bytes floor is 1, so only the balance term
+        // matters — expect ceil(rows / (threads * 4)).
+        let rows = 10_000;
+        let want = rows.div_ceil(threads() * 4).max(1);
+        assert_eq!(chunk_rows(rows, MIN_TASK_BYTES * 4), want);
+    }
+
+    #[test]
+    fn chunk_rows_floors_small_ops_to_min_task_bytes() {
+        // Tiny rows (16 bytes each): a task must cover at least
+        // MIN_TASK_BYTES / 16 rows no matter how many threads exist.
+        let got = chunk_rows(1_000_000, 16);
+        assert!(got >= MIN_TASK_BYTES / 16, "got {got}");
+    }
+
+    #[test]
+    fn chunk_rows_is_at_least_one() {
+        assert!(chunk_rows(1, 1) >= 1);
+        assert!(chunk_rows(0, 0) >= 1);
+        assert!(chunk_rows(7, usize::MAX) >= 1);
+    }
+
+    #[test]
+    fn pinning_defaults_off_and_pin_leader_is_safe() {
+        // This test binary never calls configure_pinning(true) before
+        // first pool use, so placement must be inactive and pin_leader
+        // a safe no-op (the pinned path is covered by
+        // tests/pinned_pool.rs in its own process).
+        assert!(!pinning());
+        assert!(!pin_leader());
     }
 }

@@ -17,12 +17,20 @@
 //! chunks and computes each with the identical serial kernel, so results
 //! are bitwise independent of the thread count — the property
 //! `tests/pipeline_parity.rs` and `tests/tiled_backend.rs` pin down.
+//!
+//! The serial kernels themselves are built on the [`super::simd`] lane
+//! primitives (ADR 007): `dot` / `axpy` / `max_reduce` run AVX2 or NEON
+//! where available, with a portable fallback that performs the *identical
+//! IEEE operation sequence* — so outputs are also bitwise independent of
+//! the dispatch tier, and chunk sizing ([`pool::chunk_rows`]) can change
+//! freely without touching numerics.
 
 use anyhow::Result;
 
 use super::artifacts::{Manifest, WeightStore};
 use super::engine::In;
 use super::pool;
+use super::simd;
 use super::tensor::HostTensor;
 
 /// Model geometry the attention ops need, read once from the manifest.
@@ -205,14 +213,11 @@ impl ReferenceBackend {
                 let kvh = h / group;
                 let q_vec = &q[i * qw + h * hd..i * qw + (h + 1) * hd];
                 scores.clear();
-                let mut max = f32::NEG_INFINITY;
                 for j in 0..attended {
                     let k_vec = &k_all[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd];
-                    let dot: f32 = q_vec.iter().zip(k_vec).map(|(&a, &b)| a * b).sum();
-                    let sc = dot * scale;
-                    max = max.max(sc);
-                    scores.push(sc);
+                    scores.push(simd::dot(q_vec, k_vec) * scale);
                 }
+                let max = simd::max_reduce(scores);
                 let mut denom = 0.0f32;
                 for sc in scores.iter_mut() {
                     *sc = (*sc - max).exp();
@@ -220,11 +225,8 @@ impl ReferenceBackend {
                 }
                 let out = &mut out_row[h * hd..(h + 1) * hd];
                 for (j, &p) in scores.iter().enumerate() {
-                    let weight = p / denom;
                     let v_vec = &v_all[j * kvw + kvh * hd..j * kvw + (kvh + 1) * hd];
-                    for (o, &vv) in out.iter_mut().zip(v_vec) {
-                        *o += weight * vv;
-                    }
+                    simd::axpy(p / denom, v_vec, out);
                 }
             }
         };
@@ -237,7 +239,10 @@ impl ReferenceBackend {
             }
             return ctx;
         }
-        let rows_per_chunk = sq.div_ceil(pool::threads() * 4).max(1);
+        // Per query row: every head streams its K and V panels once —
+        // ~2 × 4 bytes × qw × tk. The floor keeps tiny prefills from
+        // paying fan-out overhead (ADR 007).
+        let rows_per_chunk = pool::chunk_rows(sq, 8 * qw * tk);
         pool::parallel_slices_mut(&mut ctx, rows_per_chunk * qw, |chunk_idx, chunk| {
             let i0 = chunk_idx * rows_per_chunk;
             let mut scores: Vec<f32> = Vec::with_capacity(tk);
@@ -291,25 +296,19 @@ impl ReferenceBackend {
             let kvh = h / group;
             let q_vec = &q[h * hd..(h + 1) * hd];
             scores.clear();
-            let mut max = f32::NEG_INFINITY;
             for j in 0..=t_prev {
                 let k_vec = k_row(j, kvh);
-                let dot: f32 = q_vec.iter().zip(k_vec).map(|(&a, &b)| a * b).sum();
-                let sc = dot * scale;
-                max = max.max(sc);
-                scores.push(sc);
+                scores.push(simd::dot(q_vec, k_vec) * scale);
             }
+            let max = simd::max_reduce(scores);
             let mut denom = 0.0f32;
             for sc in scores.iter_mut() {
                 *sc = (*sc - max).exp();
                 denom += *sc;
             }
             for (j, &p) in scores.iter().enumerate() {
-                let weight = p / denom;
                 let v_vec = v_row(j, kvh);
-                for (o, &vv) in out.iter_mut().zip(v_vec) {
-                    *o += weight * vv;
-                }
+                simd::axpy(p / denom, v_vec, out);
             }
         };
 
@@ -384,8 +383,7 @@ impl ReferenceBackend {
         let fill = |i: usize, v0: usize, orow: &mut [f32]| {
             let xrow = &xn[i * d..(i + 1) * d];
             for (dv, o) in orow.iter_mut().enumerate() {
-                let erow = embed.row(v0 + dv);
-                *o = xrow.iter().zip(erow).map(|(&a, &b)| a * b).sum();
+                *o = simd::dot(xrow, embed.row(v0 + dv));
             }
         };
         if n * vocab * d < MATMUL_PAR_FLOPS {
@@ -395,7 +393,8 @@ impl ReferenceBackend {
         } else {
             for i in 0..n {
                 let row = &mut logits[i * vocab..(i + 1) * vocab];
-                let chunk = vocab.div_ceil(pool::threads() * 4).max(1);
+                // Per logit: one d-wide dot against an embedding row.
+                let chunk = pool::chunk_rows(vocab, 8 * d);
                 pool::parallel_slices_mut(row, chunk, |c, span| {
                     fill(i, c * chunk, span);
                 });
@@ -431,7 +430,9 @@ fn rmsnorm(x: &[f32], m: usize, d: usize, g: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; m * d];
     for i in 0..m {
         let row = &x[i * d..(i + 1) * d];
-        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        // Canonical lane-accumulated self-dot (ADR 007): the same value
+        // on every dispatch tier.
+        let ms: f32 = simd::dot(row, row) / d as f32;
         let scale = 1.0 / (ms + RMSNORM_EPS).sqrt();
         for (o, (&v, &gv)) in out[i * d..(i + 1) * d].iter_mut().zip(row.iter().zip(g)) {
             *o = v * scale * gv;
@@ -457,6 +458,9 @@ const MATMUL_K_TILE: usize = 64;
 /// The serial per-row kernel: blocked ikj over one output row. Every
 /// execution path (serial, tiled, pool-parallel) funnels through this,
 /// which is what keeps results bitwise independent of the thread count.
+/// The inner `orow += av * brow` is an elementwise AXPY, so the SIMD
+/// tiers perform the identical IEEE op per element and the output is
+/// bitwise independent of the dispatch tier too (ADR 007).
 #[inline]
 fn matmul_row(a: &[f32], k: usize, b: &[f32], n: usize, i: usize, orow: &mut [f32]) {
     let arow = &a[i * k..(i + 1) * k];
@@ -464,9 +468,7 @@ fn matmul_row(a: &[f32], k: usize, b: &[f32], n: usize, i: usize, orow: &mut [f3
         let k1 = (k0 + MATMUL_K_TILE).min(k);
         for (kk, &av) in arow[k0..k1].iter().enumerate() {
             let brow = &b[(k0 + kk) * n..(k0 + kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            simd::axpy(av, brow, orow);
         }
     }
 }
@@ -486,8 +488,10 @@ pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
         return out;
     }
     // Chunk rows ~4× finer than the thread count so a straggler chunk
-    // cannot serialise the tail; chunking never changes per-row numerics.
-    let rows_per_chunk = m.div_ceil(pool::threads() * 4).max(1);
+    // cannot serialise the tail, floored so each task moves real bytes
+    // (per row: read `k` of `a`, write `n` of out — the shared `b` panel
+    // amortises across rows). Chunking never changes per-row numerics.
+    let rows_per_chunk = pool::chunk_rows(m, 4 * (k + n));
     pool::parallel_slices_mut(&mut out, rows_per_chunk * n, |chunk_idx, chunk| {
         let row0 = chunk_idx * rows_per_chunk;
         for (r, orow) in chunk.chunks_mut(n).enumerate() {

@@ -1,0 +1,546 @@
+//! Runtime-dispatched f32 lane kernels for the reference backend's hot
+//! loops (ADR 007).
+//!
+//! Three primitives dominate the serve hot path — the dot products of
+//! attention scores and `lm_head` logits, the AXPY row updates of the
+//! blocked matmul and the attention value accumulation, and the
+//! max-reduce inside softmax. This module provides each in three tiers:
+//!
+//! * **portable** — plain rust, the canonical definition (below);
+//! * **avx2+fma** — `std::arch` x86_64 intrinsics, gated on runtime
+//!   `is_x86_feature_detected!("avx2")` + `("fma")`;
+//! * **neon** — `std::arch` aarch64 intrinsics (NEON is baseline on
+//!   aarch64, still detected for uniformity).
+//!
+//! The tier is resolved **once** per process ([`active_tier`], forced at
+//! compute-pool init) from the CPU plus the `MOE_GPS_SIMD` escape hatch
+//! (`scalar` forces the portable tier, `native` — the default — detects).
+//!
+//! ## Determinism contract (the safety rail)
+//!
+//! Every tier computes the **identical IEEE-754 operation sequence**, so
+//! results are bitwise identical across tiers — not just across thread
+//! counts. This is engineered, not accidental:
+//!
+//! 1. Reductions (`dot`, `max_reduce`) accumulate into a fixed
+//!    [`LANES`]`= 8` virtual-lane layout: lane `j` owns elements
+//!    `i` with `i % 8 == j` of each full 8-block, the sub-8 tail lands in
+//!    lanes `0..r`, and the lanes combine in a fixed pairwise tree
+//!    ([`reduce_sum`]/[`reduce_max`]). The portable tier implements this
+//!    layout in scalar code; AVX2 maps it onto one 8-wide register and
+//!    NEON onto two 4-wide registers — same lanes, same order.
+//! 2. **No fused multiply-add.** The vector tiers use explicit
+//!    mul-then-add (`_mm256_mul_ps` + `_mm256_add_ps`, `vmulq_f32` +
+//!    `vaddq_f32`), never `fmadd`/`fmla`: fusion skips the intermediate
+//!    rounding and would break cross-tier bitwise identity for a gain
+//!    that is negligible on these load-bound kernels. (The x86 tier still
+//!    requires the `fma` CPU flag so the choice can be revisited
+//!    per-tier; the contract test in `tests/tiled_backend.rs` is what
+//!    would have to change.)
+//! 3. `max_reduce`'s lane op is `if m > v { m } else { v }` — exactly
+//!    `_mm256_max_ps(m, v)` semantics (unordered compare picks `v`), and
+//!    the NEON tier uses a compare+select (`vcgtq`/`vbslq`) instead of
+//!    `vmaxq_f32` (IEEE maxNum), which would disagree on NaN inputs.
+//! 4. `axpy` is elementwise (`y[i] += a * x[i]`): each output element's
+//!    op sequence is one mul and one add in every tier, so it is bitwise
+//!    identical even to the pre-SIMD scalar loop — which is why the
+//!    AXPY-based matmul still bitwise-matches the seed's naive ikj
+//!    kernel (`tests/tiled_backend.rs`).
+//!
+//! Note the canonical *dot* order differs from a plain sequential sum:
+//! switching the attention/lm_head dots onto these kernels changed their
+//! low bits once, at this PR — determinism is against the canonical
+//! order, not against history.
+
+use std::sync::OnceLock;
+
+/// Virtual accumulator lanes of the canonical reduction layout. Fixed at
+/// 8 (one AVX2 register, two NEON registers) on every tier and every
+/// arch — changing it changes numerics.
+pub const LANES: usize = 8;
+
+/// Dispatch tier, resolved once per process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar implementation of the canonical lane layout.
+    Scalar,
+    /// x86_64 AVX2 (8-wide f32) with the FMA CPU flag present (fusion
+    /// deliberately unused — see the determinism contract).
+    Avx2Fma,
+    /// aarch64 NEON (2 × 4-wide f32).
+    Neon,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+static TIER: OnceLock<Tier> = OnceLock::new();
+
+/// Parse the `MOE_GPS_SIMD` escape hatch: `Some(tier)` for a forced
+/// tier, `None` for native detection.
+fn parse_simd_env(v: &str) -> Result<Option<Tier>, ()> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Ok(Some(Tier::Scalar)),
+        "native" | "" => Ok(None),
+        _ => Err(()),
+    }
+}
+
+fn detect() -> Tier {
+    match std::env::var("MOE_GPS_SIMD") {
+        Ok(v) => match parse_simd_env(&v) {
+            Ok(Some(forced)) => return forced,
+            Ok(None) => {}
+            Err(()) => eprintln!(
+                "warning: MOE_GPS_SIMD=`{v}` not recognised (scalar|native); \
+                 using native detection"
+            ),
+        },
+        Err(_) => {}
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Tier::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Tier::Neon;
+        }
+    }
+    Tier::Scalar
+}
+
+/// The dispatch tier every kernel in this module routes through. Resolved
+/// on first call (the compute pool forces it at init) and fixed for the
+/// process — per-call dispatch is one predictable branch on a loaded
+/// static.
+pub fn active_tier() -> Tier {
+    *TIER.get_or_init(detect)
+}
+
+// ---------------------------------------------------------------------
+// Canonical (portable) kernels — the definition the vector tiers must
+// reproduce bit-for-bit.
+// ---------------------------------------------------------------------
+
+/// Fold the sub-8 tail into lanes `0..tail.len()` (dot flavour).
+#[inline]
+fn tail_dot(lanes: &mut [f32; LANES], a: &[f32], b: &[f32]) {
+    for (j, (&av, &bv)) in a.iter().zip(b).enumerate() {
+        lanes[j] += av * bv;
+    }
+}
+
+/// Fixed pairwise reduction tree over the 8 lanes — part of the
+/// cross-tier bitwise contract.
+#[inline]
+fn reduce_sum(l: &[f32; LANES]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// The max lane op shared by every tier: strict greater-than select,
+/// matching `_mm256_max_ps(m, v)` (an unordered compare picks `v`).
+#[inline]
+fn lane_max(m: f32, v: f32) -> f32 {
+    if m > v {
+        m
+    } else {
+        v
+    }
+}
+
+#[inline]
+fn reduce_max(l: &[f32; LANES]) -> f32 {
+    let s0 = lane_max(l[0], l[4]);
+    let s1 = lane_max(l[1], l[5]);
+    let s2 = lane_max(l[2], l[6]);
+    let s3 = lane_max(l[3], l[7]);
+    lane_max(lane_max(s0, s2), lane_max(s1, s3))
+}
+
+/// Portable canonical dot product over `min(a.len(), b.len())` elements.
+pub fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let blocks = n / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for i in 0..blocks {
+        let base = i * LANES;
+        for j in 0..LANES {
+            lanes[j] += a[base + j] * b[base + j];
+        }
+    }
+    tail_dot(&mut lanes, &a[blocks * LANES..n], &b[blocks * LANES..n]);
+    reduce_sum(&lanes)
+}
+
+/// Portable canonical AXPY: `y[i] += alpha * x[i]` over
+/// `min(x.len(), y.len())` elements. Elementwise, so bitwise identical
+/// in every tier by construction.
+pub fn axpy_portable(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// Portable canonical max-reduce. Empty input yields `NEG_INFINITY`
+/// (softmax over zero scores never happens on the hot path).
+pub fn max_reduce_portable(xs: &[f32]) -> f32 {
+    let blocks = xs.len() / LANES;
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    for i in 0..blocks {
+        let base = i * LANES;
+        for j in 0..LANES {
+            lanes[j] = lane_max(lanes[j], xs[base + j]);
+        }
+    }
+    for (j, &v) in xs[blocks * LANES..].iter().enumerate() {
+        lanes[j] = lane_max(lanes[j], v);
+    }
+    reduce_max(&lanes)
+}
+
+// ---------------------------------------------------------------------
+// x86_64 AVX2 tier.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{reduce_max, reduce_sum, tail_dot, LANES};
+    use std::arch::x86_64::*;
+
+    // SAFETY (all fns): caller guarantees AVX2 is available (the `fma`
+    // flag is part of the tier gate but fused ops are never emitted —
+    // see the module-level determinism contract).
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let blocks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..blocks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * LANES));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * LANES));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        tail_dot(&mut lanes, &a[blocks * LANES..n], &b[blocks * LANES..n]);
+        reduce_sum(&lanes)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let blocks = n / LANES;
+        let va = _mm256_set1_ps(alpha);
+        for i in 0..blocks {
+            let p = y.as_mut_ptr().add(i * LANES);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * LANES));
+            let vy = _mm256_loadu_ps(p);
+            _mm256_storeu_ps(p, _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        }
+        for (o, &v) in y[blocks * LANES..n].iter_mut().zip(&x[blocks * LANES..n]) {
+            *o += alpha * v;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn max_reduce(xs: &[f32]) -> f32 {
+        let blocks = xs.len() / LANES;
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        for i in 0..blocks {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i * LANES));
+            // (acc > v) ? acc : v — the canonical lane op.
+            acc = _mm256_max_ps(acc, v);
+        }
+        let mut lanes = [f32::NEG_INFINITY; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (j, &v) in xs[blocks * LANES..].iter().enumerate() {
+            lanes[j] = super::lane_max(lanes[j], v);
+        }
+        reduce_max(&lanes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 NEON tier: the canonical 8 lanes as two 4-wide registers
+// (acc0 = lanes 0..4, acc1 = lanes 4..8).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{lane_max, reduce_max, reduce_sum, tail_dot, LANES};
+    use std::arch::aarch64::*;
+
+    // SAFETY (all fns): caller guarantees NEON is available. Fused
+    // `fmla` (vfmaq/vmlaq) is never emitted — mul-then-add only, per the
+    // module-level determinism contract.
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let blocks = n / LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for i in 0..blocks {
+            let pa = a.as_ptr().add(i * LANES);
+            let pb = b.as_ptr().add(i * LANES);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        tail_dot(&mut lanes, &a[blocks * LANES..n], &b[blocks * LANES..n]);
+        reduce_sum(&lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let blocks = n / LANES;
+        let va = vdupq_n_f32(alpha);
+        for i in 0..blocks {
+            let px = x.as_ptr().add(i * LANES);
+            let py = y.as_mut_ptr().add(i * LANES);
+            vst1q_f32(py, vaddq_f32(vld1q_f32(py), vmulq_f32(va, vld1q_f32(px))));
+            let py4 = py.add(4);
+            vst1q_f32(py4, vaddq_f32(vld1q_f32(py4), vmulq_f32(va, vld1q_f32(px.add(4)))));
+        }
+        for (o, &v) in y[blocks * LANES..n].iter_mut().zip(&x[blocks * LANES..n]) {
+            *o += alpha * v;
+        }
+    }
+
+    /// Canonical max lane op on a 4-wide register: strict greater-than
+    /// compare + select (`vmaxq_f32` is IEEE maxNum and would disagree
+    /// with the other tiers on NaN inputs).
+    #[inline]
+    unsafe fn vmax_sel(m: float32x4_t, v: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcgtq_f32(m, v), m, v)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn max_reduce(xs: &[f32]) -> f32 {
+        let blocks = xs.len() / LANES;
+        let mut acc0 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc1 = vdupq_n_f32(f32::NEG_INFINITY);
+        for i in 0..blocks {
+            let p = xs.as_ptr().add(i * LANES);
+            acc0 = vmax_sel(acc0, vld1q_f32(p));
+            acc1 = vmax_sel(acc1, vld1q_f32(p.add(4)));
+        }
+        let mut lanes = [f32::NEG_INFINITY; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for (j, &v) in xs[blocks * LANES..].iter().enumerate() {
+            lanes[j] = lane_max(lanes[j], v);
+        }
+        reduce_max(&lanes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched entry points — what the reference backend calls.
+// ---------------------------------------------------------------------
+
+/// Dot product over `min(a.len(), b.len())` elements, canonical lane
+/// order, dispatched to the active tier. Bitwise identical across tiers
+/// and thread counts.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { arm::dot(a, b) },
+        _ => dot_portable(a, b),
+    }
+}
+
+/// `y[i] += alpha * x[i]` over `min(x.len(), y.len())` elements,
+/// dispatched. Elementwise — bitwise identical across tiers, thread
+/// counts, and the pre-SIMD scalar loop.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { x86::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { arm::axpy(alpha, x, y) },
+        _ => axpy_portable(alpha, x, y),
+    }
+}
+
+/// Max over `xs` in the canonical lane order (`NEG_INFINITY` on empty),
+/// dispatched. Bitwise identical across tiers — including the NaN select
+/// semantics (see the module docs).
+#[inline]
+pub fn max_reduce(xs: &[f32]) -> f32 {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2Fma => unsafe { x86::max_reduce(xs) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { arm::max_reduce(xs) },
+        _ => max_reduce_portable(xs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn buf(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Lengths straddling every block/tail boundary of the 8-lane layout.
+    const GRID: &[usize] = &[
+        0, 1, 2, 3, 5, 7, 8, 9, 13, 15, 16, 17, 23, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129,
+        1000, 4099,
+    ];
+
+    #[test]
+    fn dispatched_dot_bitwise_matches_portable_on_grid() {
+        let mut rng = Rng::new(0x51AD);
+        for &n in GRID {
+            let a = buf(&mut rng, n);
+            let b = buf(&mut rng, n);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_portable(&a, &b).to_bits(),
+                "len {n} (tier {})",
+                active_tier().name()
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_axpy_bitwise_matches_portable_on_grid() {
+        let mut rng = Rng::new(0xA390);
+        for &n in GRID {
+            let x = buf(&mut rng, n);
+            let mut y1 = buf(&mut rng, n);
+            let mut y2 = y1.clone();
+            axpy(0.37, &x, &mut y1);
+            axpy_portable(0.37, &x, &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_max_bitwise_matches_portable_on_grid() {
+        let mut rng = Rng::new(0x3A8);
+        for &n in GRID {
+            let xs = buf(&mut rng, n);
+            assert_eq!(
+                max_reduce(&xs).to_bits(),
+                max_reduce_portable(&xs).to_bits(),
+                "len {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_stay_bitwise_identical_across_tiers() {
+        // Garbage in, identical garbage out — the NaN/Inf select and
+        // accumulate semantics are part of the cross-tier contract.
+        let mut rng = Rng::new(99);
+        let mut a = buf(&mut rng, 67);
+        let b = buf(&mut rng, 67);
+        a[3] = f32::NAN;
+        a[20] = f32::INFINITY;
+        a[66] = f32::NEG_INFINITY;
+        assert_eq!(dot(&a, &b).to_bits(), dot_portable(&a, &b).to_bits());
+        assert_eq!(max_reduce(&a).to_bits(), max_reduce_portable(&a).to_bits());
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        axpy(f32::NAN, &a, &mut y1);
+        axpy_portable(f32::NAN, &a, &mut y2);
+        for (x, y) in y1.iter().zip(&y2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_value_to_tolerance() {
+        // Lane reordering must not change the mathematical value beyond
+        // f32 noise.
+        let a: Vec<f32> = (0..100).map(|i| (i as f32) * 0.25).collect();
+        let b: Vec<f32> = (0..100).map(|i| 1.0 - (i as f32) * 0.01).collect();
+        let exact: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        assert!((dot(&a, &b) as f64 - exact).abs() < 1e-2 * exact.abs().max(1.0));
+    }
+
+    #[test]
+    fn empty_inputs_are_identities() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(max_reduce(&[]), f32::NEG_INFINITY);
+        let mut y: [f32; 0] = [];
+        axpy(2.0, &[], &mut y);
+    }
+
+    #[test]
+    fn max_reduce_finds_the_max_wherever_it_hides() {
+        for &n in GRID {
+            if n == 0 {
+                continue;
+            }
+            for pos in [0, n / 2, n - 1] {
+                let mut xs = vec![-1.0f32; n];
+                xs[pos] = 42.5;
+                assert_eq!(max_reduce(&xs), 42.5, "len {n} pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_poisoning_is_transient_under_select_semantics() {
+        // lane op (m > v) ? m : v: a NaN *candidate* poisons the lane
+        // until the next real value replaces it (unordered picks v).
+        assert_eq!(max_reduce(&[1.0, f32::NAN, 3.0]).to_bits(), 3.0f32.to_bits());
+    }
+
+    #[test]
+    fn env_escape_hatch_parses() {
+        assert_eq!(parse_simd_env("scalar"), Ok(Some(Tier::Scalar)));
+        assert_eq!(parse_simd_env(" SCALAR "), Ok(Some(Tier::Scalar)));
+        assert_eq!(parse_simd_env("native"), Ok(None));
+        assert_eq!(parse_simd_env(""), Ok(None));
+        assert_eq!(parse_simd_env("avx512"), Err(()));
+    }
+
+    #[test]
+    fn tier_is_stable_and_named() {
+        let t = active_tier();
+        assert_eq!(t, active_tier(), "tier must resolve once");
+        assert!(!t.name().is_empty());
+        // The escape hatch must actually have taken effect when set.
+        if std::env::var("MOE_GPS_SIMD").as_deref() == Ok("scalar") {
+            assert_eq!(t, Tier::Scalar);
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! rewrite.
 
 use moe_gps::runtime::reference::matmul;
+use moe_gps::runtime::simd;
 use moe_gps::runtime::tensor::IntTensor;
 use moe_gps::runtime::{Engine, HostTensor, In, SyntheticSpec};
 use moe_gps::util::rng::Rng;
@@ -170,7 +171,10 @@ fn lm_head_matches_serial_dot_products() {
     let ws = engine.weight_store();
     let ln = ws.get("final.ln").unwrap();
     let embed = ws.get("embed").unwrap();
-    let ms: f32 = h.data.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+    // The backend's dot products use the canonical 8-lane accumulation
+    // order (ADR 007), so the serial oracle must too — simd::dot is that
+    // order on every dispatch tier.
+    let ms: f32 = simd::dot(&h.data, &h.data) / d as f32;
     let scale = 1.0 / (ms + 1e-5).sqrt();
     let xn: Vec<f32> = h
         .data
@@ -179,13 +183,51 @@ fn lm_head_matches_serial_dot_products() {
         .map(|(&v, &g)| v * scale * g)
         .collect();
     for v in [0usize, 17, 255, 511] {
-        let want: f32 = xn.iter().zip(embed.row(v)).map(|(&a, &b)| a * b).sum();
+        let want: f32 = simd::dot(&xn, embed.row(v));
         assert_eq!(
             logits.data[v].to_bits(),
             want.to_bits(),
             "vocab {v}: {} vs {want}",
             logits.data[v]
         );
+    }
+}
+
+/// ADR 007 determinism contract, integration-level: whatever dispatch
+/// tier this machine resolved (scalar, avx2+fma, or neon), the dispatched
+/// lane kernels must be bitwise identical to the portable implementation
+/// over a shape grid that exercises full 8-lane blocks, sub-8 tails, and
+/// odd lengths. Run under `MOE_GPS_SIMD=scalar` this trivially compares
+/// scalar to itself — CI runs both legs so the vector tiers are pinned
+/// wherever the hardware has them.
+#[test]
+fn simd_dispatch_matches_portable_bitwise_over_length_grid() {
+    let mut rng = Rng::new(0x51D);
+    let lengths = [
+        0usize, 1, 2, 3, 5, 7, 8, 9, 13, 16, 17, 31, 32, 33, 63, 64, 65, 100, 127, 128, 129,
+        1000, 4099,
+    ];
+    let tier = simd::active_tier().name();
+    for &n in &lengths {
+        let x = random_buf(&mut rng, n);
+        let y = random_buf(&mut rng, n);
+        assert_eq!(
+            simd::dot(&x, &y).to_bits(),
+            simd::dot_portable(&x, &y).to_bits(),
+            "dot len {n} tier {tier}"
+        );
+        assert_eq!(
+            simd::max_reduce(&x).to_bits(),
+            simd::max_reduce_portable(&x).to_bits(),
+            "max_reduce len {n} tier {tier}"
+        );
+        let mut a = y.clone();
+        let mut b = y.clone();
+        simd::axpy(0.73, &x, &mut a);
+        simd::axpy_portable(0.73, &x, &mut b);
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "axpy len {n} elem {i} tier {tier}");
+        }
     }
 }
 
