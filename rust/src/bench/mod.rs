@@ -313,6 +313,45 @@ pub mod emit {
         Ok(l1)
     }
 
+    /// Chaos gate (ADR 008): reads a fault-injected serve report (`serve
+    /// --inject-faults … --report F.json`) and asserts the injection
+    /// actually bit (at least one worker death) AND no sequence was lost
+    /// — every admitted sequence finished, was requeued, or was
+    /// explicitly evicted. Returns (worker_deaths, lost_seqs).
+    pub fn validate_chaos_report(path: &Path) -> anyhow::Result<(u64, u64)> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        let field = |name: &str| -> anyhow::Result<u64> {
+            v.get(name)
+                .and_then(Value::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{}: `{name}` missing — not a fault-aware serve \
+                         report (serve with --report on this build)",
+                        path.display()
+                    )
+                })
+        };
+        let deaths = field("worker_deaths")?;
+        let lost = field("lost_seqs")?;
+        anyhow::ensure!(
+            deaths >= 1,
+            "{}: no worker death recorded — the fault injection never \
+             fired (check the --inject-faults spec against the run length)",
+            path.display()
+        );
+        anyhow::ensure!(
+            lost == 0,
+            "{}: {lost} sequence(s) lost under faults — failover must \
+             finish, requeue, or explicitly evict every admitted sequence",
+            path.display()
+        );
+        Ok((deaths, lost))
+    }
+
     /// Kernel-speedup gate (ADR 007): for every `kernels/…dot…` or
     /// `kernels/…matmul…` bench that recorded BOTH a `scalar` record and a
     /// vector-tier record (`avx2+fma` / `neon`), assert the vector tier is

@@ -426,6 +426,81 @@ impl StrategyController {
             None
         }
     }
+
+    /// A worker died (ADR 008). The measured window that justified the
+    /// current configuration described a fleet that no longer exists, so
+    /// rather than wait for hysteresis to re-learn it: cancel any pending
+    /// challenger streak and shed the optimistic extras — speculative
+    /// scatter and lookahead prewarming both spend work on workers that
+    /// may be the next to go, and the degraded replan needs the slots.
+    /// The strategy itself is kept (the duplication plan *is* the
+    /// failover table — dropping DOP/TEP now would shrink redundancy).
+    /// Records a `WorkerLost` decision and returns the degraded
+    /// configuration to apply, or `None` when nothing changes (already
+    /// degraded, or the controller is pinned).
+    pub fn note_worker_lost(
+        &mut self,
+        boundary: usize,
+        current: ServeStrategy,
+        speculative: bool,
+        lookahead: usize,
+        regime: Regime,
+    ) -> Option<Decision> {
+        self.pending = None;
+        let new_spec = false;
+        let new_lookahead = lookahead.min(self.cfg.min_lookahead);
+        let changed =
+            !self.cfg.pinned && (new_spec != speculative || new_lookahead != lookahead);
+        let (spec_out, depth_out) = if self.cfg.pinned {
+            (speculative, lookahead)
+        } else {
+            (new_spec, new_lookahead)
+        };
+        let measured = self.calibrator.constants().unwrap_or(MeasuredConstants {
+            samples: 0,
+            tokens: 0.0,
+            tokens_per_s: 0.0,
+            per_token_s: 0.0,
+            mean_skew: 0.0,
+            upload_bytes: 0.0,
+            effective_bandwidth_gbs: None,
+            dop_error: None,
+            tep_topk_hit: None,
+            tep_top1: None,
+            hidden_frac: 0.0,
+            refetch_frac: 0.0,
+            predictor_frac: 0.0,
+            forecast_error: None,
+        });
+        self.decisions.push(DecisionRecord {
+            boundary,
+            from: current,
+            to: current,
+            speculative: spec_out,
+            lookahead: depth_out,
+            horizon: regime.horizon,
+            switched: false,
+            measured,
+            baseline_s: 0.0,
+            dop_saving_s: 0.0,
+            tep_saving_s: 0.0,
+            reason: format!(
+                "WorkerLost: fleet degraded — {} speculation and lookahead \
+                 while survivors absorb the redispatched load",
+                if changed { "shedding" } else { "holding" }
+            ),
+        });
+        if changed {
+            Some(Decision {
+                strategy: current,
+                speculative: spec_out,
+                lookahead: depth_out,
+                horizon: regime.horizon,
+            })
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -587,6 +662,40 @@ mod tests {
             assert_eq!(d.horizon, 4, "healthy forecast must not fall back");
         }
         assert_eq!(ok.decisions().last().unwrap().horizon, 4);
+    }
+
+    #[test]
+    fn worker_loss_sheds_speculation_and_lookahead() {
+        let mut c = test_controller(cfg());
+        // Works even before the window is thick enough for `decide`.
+        let d = c
+            .note_worker_lost(3, ServeStrategy::TokenToExpert, true, 2, Regime::default())
+            .expect("degrading from spec+lookahead must produce a decision");
+        assert_eq!(d.strategy, ServeStrategy::TokenToExpert, "strategy kept");
+        assert!(!d.speculative);
+        assert_eq!(d.lookahead, 0);
+        let rec = c.decisions().last().unwrap();
+        assert!(rec.reason.contains("WorkerLost"), "{}", rec.reason);
+        assert!(!rec.switched);
+        // Already degraded: recorded again, but nothing to apply.
+        assert!(c
+            .note_worker_lost(4, ServeStrategy::TokenToExpert, false, 0, Regime::default())
+            .is_none());
+        assert_eq!(c.decisions().len(), 2);
+    }
+
+    #[test]
+    fn pinned_controller_records_worker_loss_without_change() {
+        let mut c = test_controller(ControllerConfig {
+            pinned: true,
+            ..cfg()
+        });
+        assert!(c
+            .note_worker_lost(1, ServeStrategy::TokenToExpert, true, 2, Regime::default())
+            .is_none());
+        let rec = c.decisions().last().unwrap();
+        assert!(rec.speculative, "pinned keeps the launched configuration");
+        assert_eq!(rec.lookahead, 2);
     }
 
     #[test]

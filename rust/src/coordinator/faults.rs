@@ -1,0 +1,365 @@
+//! Fault injection and worker health tracking (ADR 008).
+//!
+//! The duplication plan already keeps hot experts on several workers —
+//! this module turns that redundancy into fault tolerance. A
+//! [`FaultPlan`] is a deterministic script of worker misbehaviors
+//! (`kill[:W]@N`, `delay[:W]@N[xMS]`, `drop[:W]@N`) parsed from
+//! `serve --inject-faults` or the `MOE_GPS_FAULTS` env var and executed
+//! *inside* `worker_main`, so the coordinator-side detection/failover
+//! machinery is exercised end-to-end. With no plan installed the worker
+//! loop takes the same path as before this module existed — serving
+//! output stays bitwise identical.
+//!
+//! [`WorkerHealth`] is the coordinator-side registry: which workers are
+//! alive, an EWMA of observed per-op latency that derives the reply
+//! deadline, and the `--worker-timeout` override. The pipeline waits on
+//! replies with `recv_timeout(deadline)` and escalates through
+//! [`MAX_TIMEOUT_WAITS`] exponentially backed-off retries before
+//! declaring the owners of the outstanding groups dead.
+
+use anyhow::{anyhow, Result};
+
+/// Timeout waits (with exponential backoff: d, 2d, 4d, …) the reply
+/// collectors tolerate with zero progress before declaring the workers
+/// owning the outstanding groups dead. Stragglers that reply within the
+/// backoff window are retries, not deaths.
+pub const MAX_TIMEOUT_WAITS: u32 = 3;
+
+/// Floor for the derived reply deadline when no `--worker-timeout`
+/// override is given.
+const MIN_DEADLINE_S: f64 = 2.0;
+
+/// Deadline multiplier over the EWMA per-op execution time. Generous on
+/// purpose: a queue of ops ahead of ours all count against our wait.
+const DEADLINE_OP_FACTOR: f64 = 256.0;
+
+/// What an injected fault does to the worker when its trigger op comes
+/// up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Worker thread exits before processing the op (hard crash).
+    Kill,
+    /// Worker sleeps this many milliseconds before processing the op
+    /// (straggler).
+    Delay(u64),
+    /// Worker consumes the op without ever replying (lost reply).
+    Drop,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct FaultEntry {
+    worker: usize,
+    /// 1-based index into the worker's countable ops (Run / Attention /
+    /// Prewarm messages).
+    op: u64,
+    action: FaultAction,
+}
+
+/// A deterministic script of worker faults, parsed from
+/// `--inject-faults SPEC` / `MOE_GPS_FAULTS`. Spec grammar: a
+/// comma-separated list of `kind[:worker]@op` entries where `kind` is
+/// `kill`, `delay` or `drop`, `worker` defaults to 0, and `op` is the
+/// 1-based countable-op index on that worker. `delay` takes an optional
+/// `xMS` suffix (`delay:1@4x250` — sleep 250 ms; default 100).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (head, tail) = part.split_once('@').ok_or_else(|| {
+                anyhow!("fault `{part}`: missing `@op` (expected kind[:worker]@op[xMS])")
+            })?;
+            let (kind, worker) = match head.split_once(':') {
+                Some((k, w)) => (
+                    k,
+                    w.parse::<usize>()
+                        .map_err(|_| anyhow!("fault `{part}`: bad worker index `{w}`"))?,
+                ),
+                None => (head, 0),
+            };
+            let (op_s, delay_ms) = match tail.split_once('x') {
+                Some((o, m)) => (
+                    o,
+                    Some(
+                        m.parse::<u64>()
+                            .map_err(|_| anyhow!("fault `{part}`: bad delay ms `{m}`"))?,
+                    ),
+                ),
+                None => (tail, None),
+            };
+            let op = op_s
+                .parse::<u64>()
+                .map_err(|_| anyhow!("fault `{part}`: bad op index `{op_s}`"))?;
+            if op == 0 {
+                return Err(anyhow!("fault `{part}`: op index is 1-based"));
+            }
+            let action = match kind {
+                "kill" => FaultAction::Kill,
+                "delay" => FaultAction::Delay(delay_ms.unwrap_or(100)),
+                "drop" => FaultAction::Drop,
+                other => {
+                    return Err(anyhow!(
+                        "fault `{part}`: unknown kind `{other}` (kill|delay|drop)"
+                    ))
+                }
+            };
+            if delay_ms.is_some() && !matches!(action, FaultAction::Delay(_)) {
+                return Err(anyhow!("fault `{part}`: `xMS` only applies to delay"));
+            }
+            entries.push(FaultEntry { worker, op, action });
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// The plan from `MOE_GPS_FAULTS`, if set and non-empty.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("MOE_GPS_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlan::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The slice of the plan one worker executes, ordered by trigger op.
+    pub fn for_worker(&self, worker: usize) -> WorkerFaults {
+        let mut entries: Vec<(u64, FaultAction)> = self
+            .entries
+            .iter()
+            .filter(|e| e.worker == worker)
+            .map(|e| (e.op, e.action))
+            .collect();
+        entries.sort_by_key(|&(op, _)| op);
+        WorkerFaults { entries, next_op: 0 }
+    }
+}
+
+/// The per-worker fault script, consumed inside `worker_main`. Empty for
+/// every worker unless a plan was installed — and the empty script's
+/// `on_op` is a no-op, preserving bitwise parity with uninjected runs.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerFaults {
+    entries: Vec<(u64, FaultAction)>,
+    next_op: u64,
+}
+
+impl WorkerFaults {
+    /// Advance the countable-op counter and return the action scheduled
+    /// for this op, if any.
+    pub fn on_op(&mut self) -> Option<FaultAction> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        self.next_op += 1;
+        let op = self.next_op;
+        let idx = self.entries.iter().position(|&(o, _)| o == op)?;
+        Some(self.entries.remove(idx).1)
+    }
+}
+
+/// Coordinator-side worker liveness registry plus the reply-deadline
+/// model: deadline = `--worker-timeout` override, else
+/// `max(MIN_DEADLINE_S, DEADLINE_OP_FACTOR × EWMA(op exec seconds))`.
+#[derive(Clone, Debug)]
+pub struct WorkerHealth {
+    alive: Vec<bool>,
+    ewma_op_s: f64,
+    timeout_override: Option<f64>,
+    /// Cumulative deaths over the coordinator's lifetime (survives
+    /// per-round metric resets).
+    pub total_deaths: u64,
+}
+
+impl WorkerHealth {
+    pub fn new(n_workers: usize) -> WorkerHealth {
+        WorkerHealth {
+            alive: vec![true; n_workers],
+            ewma_op_s: 0.0,
+            timeout_override: None,
+            total_deaths: 0,
+        }
+    }
+
+    pub fn set_timeout_override(&mut self, seconds: Option<f64>) {
+        self.timeout_override = seconds.filter(|s| *s > 0.0);
+    }
+
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.alive.get(worker).copied().unwrap_or(false)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Mark a worker dead. Returns `true` the first time (so death
+    /// side-effects — metric bump, residency reclaim, replan — run
+    /// exactly once per worker).
+    pub fn mark_dead(&mut self, worker: usize) -> bool {
+        if !self.is_alive(worker) {
+            return false;
+        }
+        self.alive[worker] = false;
+        self.total_deaths += 1;
+        true
+    }
+
+    /// Fold one observed op execution time into the latency EWMA.
+    pub fn observe_op(&mut self, exec_s: f64) {
+        if !(exec_s.is_finite() && exec_s >= 0.0) {
+            return;
+        }
+        self.ewma_op_s = if self.ewma_op_s == 0.0 {
+            exec_s
+        } else {
+            0.9 * self.ewma_op_s + 0.1 * exec_s
+        };
+    }
+
+    /// The base reply deadline for one timeout wait.
+    pub fn deadline(&self) -> std::time::Duration {
+        let s = self
+            .timeout_override
+            .unwrap_or_else(|| (DEADLINE_OP_FACTOR * self.ewma_op_s).max(MIN_DEADLINE_S));
+        std::time::Duration::from_secs_f64(s)
+    }
+}
+
+/// Terminal degraded state: every worker is dead, so no group can be
+/// placed anywhere. The vendored `anyhow` carries message chains, not
+/// typed causes, so the decode loop recognizes this condition by its
+/// sentinel message (via [`is_all_workers_dead`]) and requeues the
+/// in-flight sequences instead of reporting them lost.
+pub const ALL_WORKERS_DEAD: &str = "all workers dead: no alive worker can host expert groups";
+
+pub fn all_workers_dead_err() -> anyhow::Error {
+    anyhow!("{ALL_WORKERS_DEAD}")
+}
+
+pub fn is_all_workers_dead(err: &anyhow::Error) -> bool {
+    err.chain().any(|m| m == ALL_WORKERS_DEAD)
+}
+
+/// Per-sequence invariant violation (missing session, missing KV): the
+/// serve loop evicts the offending sequence and keeps serving the rest
+/// instead of aborting the process. Same sentinel-message scheme as
+/// [`ALL_WORKERS_DEAD`].
+const SEQ_FAULT_PREFIX: &str = "sequence fault #";
+
+pub fn sequence_fault_err(id: u64, what: &str) -> anyhow::Error {
+    anyhow!("{SEQ_FAULT_PREFIX}{id}: {what}")
+}
+
+/// The sequence id a [`sequence_fault_err`] error carries, if any.
+pub fn sequence_fault_id(err: &anyhow::Error) -> Option<u64> {
+    err.chain().find_map(|m| {
+        let rest = m.strip_prefix(SEQ_FAULT_PREFIX)?;
+        rest.split(':').next()?.trim().parse().ok()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse("kill:1@3, delay@2x250, drop:2@5, delay:3@7").unwrap();
+        assert!(!plan.is_empty());
+        let mut w1 = plan.for_worker(1);
+        assert_eq!(w1.on_op(), None);
+        assert_eq!(w1.on_op(), None);
+        assert_eq!(w1.on_op(), Some(FaultAction::Kill));
+        assert_eq!(w1.on_op(), None);
+        let mut w0 = plan.for_worker(0);
+        assert_eq!(w0.on_op(), None);
+        assert_eq!(w0.on_op(), Some(FaultAction::Delay(250)));
+        let mut w3 = plan.for_worker(3);
+        for _ in 0..6 {
+            assert_eq!(w3.on_op(), None);
+        }
+        assert_eq!(w3.on_op(), Some(FaultAction::Delay(100)), "default delay");
+        let mut w2 = plan.for_worker(2);
+        for _ in 0..4 {
+            assert_eq!(w2.on_op(), None);
+        }
+        assert_eq!(w2.on_op(), Some(FaultAction::Drop));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("kill").is_err(), "missing @op");
+        assert!(FaultPlan::parse("kill@0").is_err(), "op is 1-based");
+        assert!(FaultPlan::parse("explode@3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("kill:x@3").is_err(), "bad worker");
+        assert!(FaultPlan::parse("delay@3xzz").is_err(), "bad delay ms");
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_worker_faults_never_fire() {
+        let mut f = WorkerFaults::default();
+        for _ in 0..1000 {
+            assert_eq!(f.on_op(), None);
+        }
+        assert_eq!(f.next_op, 0, "disabled path does not even count");
+    }
+
+    #[test]
+    fn health_tracks_deaths_once() {
+        let mut h = WorkerHealth::new(4);
+        assert_eq!(h.alive_count(), 4);
+        assert!(h.mark_dead(2));
+        assert!(!h.mark_dead(2), "second death of same worker is a no-op");
+        assert_eq!(h.alive_count(), 3);
+        assert!(!h.is_alive(2));
+        assert!(h.is_alive(0));
+        assert_eq!(h.total_deaths, 1);
+        assert!(!h.mark_dead(17), "out-of-range index tolerated");
+    }
+
+    #[test]
+    fn sentinel_errors_survive_context_chains() {
+        use anyhow::Context as _;
+        let err = all_workers_dead_err();
+        assert!(is_all_workers_dead(&err));
+        let wrapped: anyhow::Error = Err::<(), _>(all_workers_dead_err())
+            .context("decode step 3")
+            .unwrap_err();
+        assert!(is_all_workers_dead(&wrapped));
+        assert!(!is_all_workers_dead(&anyhow!("boring failure")));
+
+        let sf = sequence_fault_err(42, "session missing");
+        assert_eq!(sequence_fault_id(&sf), Some(42));
+        let sf2: anyhow::Error = Err::<(), _>(sequence_fault_err(7, "no KV"))
+            .context("layer 1")
+            .unwrap_err();
+        assert_eq!(sequence_fault_id(&sf2), Some(7));
+        assert_eq!(sequence_fault_id(&anyhow!("other")), None);
+    }
+
+    #[test]
+    fn deadline_prefers_override_then_ewma_floor() {
+        let mut h = WorkerHealth::new(2);
+        assert_eq!(h.deadline(), std::time::Duration::from_secs_f64(2.0));
+        for _ in 0..32 {
+            h.observe_op(0.1); // 256 × 0.1 = 25.6 s ≫ floor
+        }
+        assert!(h.deadline() > std::time::Duration::from_secs(20));
+        h.set_timeout_override(Some(0.05));
+        assert_eq!(h.deadline(), std::time::Duration::from_secs_f64(0.05));
+        h.set_timeout_override(None);
+        assert!(h.deadline() > std::time::Duration::from_secs(20));
+    }
+}

@@ -154,6 +154,22 @@ pub struct RoundMetrics {
     pub forecast_l1: f64,
     /// (layer, forecast) pairs that matured and were scored this round.
     pub forecast_layers: usize,
+    /// Workers newly detected dead this round (ADR 008).
+    pub worker_deaths: u64,
+    /// Slots re-sent to a surviving replica after their owner died or
+    /// their reply was lost.
+    pub redispatched_slots: usize,
+    /// Reply-deadline timeouts waited through (straggler retries).
+    pub retry_count: u64,
+    /// Prewarm acks abandoned: deadline exhausted or owner died. Each
+    /// abandoned pair is marked residency-unknown so later dispatch
+    /// re-uploads cold instead of trusting a pin forever.
+    pub prewarm_timeouts: u64,
+    /// Sequences evicted back to the waiting queue (requeued, not lost).
+    pub requeued_seqs: usize,
+    /// The round ran on a degraded fleet: a worker died during it, or
+    /// fewer workers than configured were alive when it started.
+    pub degraded: bool,
 }
 
 impl RoundMetrics {
@@ -178,6 +194,48 @@ impl RoundMetrics {
             return 0.0;
         }
         self.n_tokens as f64 / self.total_s
+    }
+}
+
+/// Run-level robustness aggregates carried at the serve-report root
+/// (ADR 008). All-zero on healthy runs, and pre-ADR-008 readers simply
+/// ignore the extra keys, so `moe-gps/serve-report/v1` stays
+/// backward-readable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    pub worker_deaths: u64,
+    pub redispatched_slots: usize,
+    pub retries: u64,
+    pub prewarm_timeouts: u64,
+    pub requeued_seqs: usize,
+    /// Rounds/steps that ran on a degraded fleet.
+    pub degraded_samples: usize,
+    /// Admitted sequences that neither finished nor remained queued at
+    /// the end of the run — the chaos gate requires 0 (decode runs only;
+    /// prefill rounds have no requeue path).
+    pub lost_seqs: u64,
+}
+
+impl FaultSummary {
+    pub fn any(&self) -> bool {
+        *self != FaultSummary::default()
+    }
+
+    fn summary_suffix(&self) -> String {
+        if !self.any() {
+            return String::new();
+        }
+        format!(
+            "\n  faults: deaths={} redispatched={} retries={} \
+             prewarm timeouts={} requeued={} degraded windows={} lost={}",
+            self.worker_deaths,
+            self.redispatched_slots,
+            self.retries,
+            self.prewarm_timeouts,
+            self.requeued_seqs,
+            self.degraded_samples,
+            self.lost_seqs,
+        )
     }
 }
 
@@ -343,6 +401,20 @@ impl ServeReport {
         mean_forecast_l1(self.rounds.iter().map(|r| (r.forecast_l1, r.forecast_layers)))
     }
 
+    /// Run-level robustness aggregates (ADR 008). Prefill rounds have no
+    /// requeue path, so `lost_seqs` is always 0 here.
+    pub fn fault_summary(&self) -> FaultSummary {
+        FaultSummary {
+            worker_deaths: self.rounds.iter().map(|r| r.worker_deaths).sum(),
+            redispatched_slots: self.rounds.iter().map(|r| r.redispatched_slots).sum(),
+            retries: self.rounds.iter().map(|r| r.retry_count).sum(),
+            prewarm_timeouts: self.rounds.iter().map(|r| r.prewarm_timeouts).sum(),
+            requeued_seqs: self.rounds.iter().map(|r| r.requeued_seqs).sum(),
+            degraded_samples: self.rounds.iter().filter(|r| r.degraded).count(),
+            lost_seqs: 0,
+        }
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema: run meta +
     /// aggregates + per-round calibration samples + the fitted measured
     /// constants + the fit-vs-holdout check + the controller trace — the
@@ -355,6 +427,7 @@ impl ServeReport {
             self.throughput(),
             self.total_tokens(),
             self.mean_forecast_l1(),
+            &self.fault_summary(),
             &samples,
             self.controller.as_ref(),
         )
@@ -404,6 +477,7 @@ impl ServeReport {
                 c.final_strategy
             ));
         }
+        s.push_str(&self.fault_summary().summary_suffix());
         s.push_str(&self.meta.runtime_suffix());
         s
     }
@@ -476,6 +550,19 @@ pub struct DecodeStepMetrics {
     pub forecast_l1: f64,
     /// (layer, forecast) pairs that matured and were scored this step.
     pub forecast_layers: usize,
+    /// Workers newly detected dead this step (ADR 008).
+    pub worker_deaths: u64,
+    /// Slots re-sent to a surviving replica after their owner died or
+    /// their reply was lost.
+    pub redispatched_slots: usize,
+    /// Reply-deadline timeouts waited through (straggler retries).
+    pub retry_count: u64,
+    /// Prewarm acks abandoned (deadline exhausted or owner died).
+    pub prewarm_timeouts: u64,
+    /// Sequences evicted back to the waiting queue (requeued, not lost).
+    pub requeued_seqs: usize,
+    /// The step ran on a degraded fleet (see [`RoundMetrics::degraded`]).
+    pub degraded: bool,
 }
 
 impl DecodeStepMetrics {
@@ -506,6 +593,11 @@ pub struct DecodeReport {
     /// run (ADR 005).
     pub controller: Option<ControllerReport>,
     pub meta: ReportMeta,
+    /// Admitted sequences unaccounted for at the end of the run (ADR
+    /// 008): admitted ∖ (finished ∪ waiting ∪ active) over unique ids.
+    /// The chaos gate requires 0 — every sequence finishes or is
+    /// explicitly requeued, never silently dropped.
+    pub lost_seqs: u64,
 }
 
 impl DecodeReport {
@@ -676,6 +768,19 @@ impl DecodeReport {
         mean_forecast_l1(self.steps.iter().map(|s| (s.forecast_l1, s.forecast_layers)))
     }
 
+    /// Run-level robustness aggregates (ADR 008).
+    pub fn fault_summary(&self) -> FaultSummary {
+        FaultSummary {
+            worker_deaths: self.steps.iter().map(|s| s.worker_deaths).sum(),
+            redispatched_slots: self.steps.iter().map(|s| s.redispatched_slots).sum(),
+            retries: self.steps.iter().map(|s| s.retry_count).sum(),
+            prewarm_timeouts: self.steps.iter().map(|s| s.prewarm_timeouts).sum(),
+            requeued_seqs: self.steps.iter().map(|s| s.requeued_seqs).sum(),
+            degraded_samples: self.steps.iter().filter(|s| s.degraded).count(),
+            lost_seqs: self.lost_seqs,
+        }
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema (see
     /// [`ServeReport::to_json`]).
     pub fn to_json(&self) -> Value {
@@ -686,6 +791,7 @@ impl DecodeReport {
             self.decode_tokens_per_s(),
             self.total_decode_tokens(),
             self.mean_forecast_l1(),
+            &self.fault_summary(),
             &samples,
             self.controller.as_ref(),
         )
@@ -736,6 +842,7 @@ impl DecodeReport {
                 c.final_strategy
             ));
         }
+        s.push_str(&self.fault_summary().summary_suffix());
         s.push_str(&self.meta.runtime_suffix());
         s
     }
@@ -769,6 +876,7 @@ fn report_json(
     tokens_per_s: f64,
     tokens: usize,
     forecast_l1: Option<f64>,
+    faults: &FaultSummary,
     samples: &[WindowSample],
     controller: Option<&ControllerReport>,
 ) -> Value {
@@ -789,6 +897,24 @@ fn report_json(
                 None => Value::Null,
             },
         )
+        // Robustness aggregates (ADR 008): root-level additive keys, all
+        // zero on healthy runs; pre-ADR-008 readers ignore them.
+        .set("worker_deaths", Value::Num(faults.worker_deaths as f64))
+        .set(
+            "redispatched_slots",
+            Value::Num(faults.redispatched_slots as f64),
+        )
+        .set("retries", Value::Num(faults.retries as f64))
+        .set(
+            "prewarm_timeouts",
+            Value::Num(faults.prewarm_timeouts as f64),
+        )
+        .set("requeued_seqs", Value::Num(faults.requeued_seqs as f64))
+        .set(
+            "degraded_samples",
+            Value::Num(faults.degraded_samples as f64),
+        )
+        .set("lost_seqs", Value::Num(faults.lost_seqs as f64))
         .set(
             "measured",
             match cal.constants() {
@@ -1070,5 +1196,67 @@ mod tests {
         assert_eq!(decode.total_refetch_upload_bytes(), 10);
         assert_eq!(decode.resident_high_water_bytes(), 350);
         assert!(decode.summary().contains("evictions=1"));
+    }
+
+    #[test]
+    fn fault_summary_aggregates_and_gates_the_summary_line() {
+        // Healthy run: no fault aggregates, no fault line in the summary,
+        // but the JSON still carries the zeroed root keys (additive
+        // schema — ADR 008).
+        let healthy = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![DecodeStepMetrics::default()],
+            ..Default::default()
+        };
+        assert!(!healthy.fault_summary().any());
+        assert!(!healthy.summary().contains("faults:"));
+        let json = healthy.to_json().to_string_compact();
+        assert!(json.contains("\"worker_deaths\""));
+        assert!(json.contains("\"lost_seqs\""));
+
+        let degraded = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![
+                DecodeStepMetrics {
+                    worker_deaths: 1,
+                    redispatched_slots: 12,
+                    retry_count: 3,
+                    prewarm_timeouts: 2,
+                    requeued_seqs: 1,
+                    degraded: true,
+                    ..Default::default()
+                },
+                DecodeStepMetrics {
+                    degraded: true,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let f = degraded.fault_summary();
+        assert_eq!(f.worker_deaths, 1);
+        assert_eq!(f.redispatched_slots, 12);
+        assert_eq!(f.retries, 3);
+        assert_eq!(f.prewarm_timeouts, 2);
+        assert_eq!(f.requeued_seqs, 1);
+        assert_eq!(f.degraded_samples, 2);
+        assert_eq!(f.lost_seqs, 0);
+        let s = degraded.summary();
+        assert!(s.contains("faults: deaths=1"));
+        assert!(s.contains("degraded windows=2"));
+        assert!(s.contains("lost=0"));
+
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![RoundMetrics {
+                worker_deaths: 2,
+                degraded: true,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert_eq!(serve.fault_summary().worker_deaths, 2);
+        assert_eq!(serve.fault_summary().degraded_samples, 1);
+        assert!(serve.summary().contains("faults: deaths=2"));
     }
 }

@@ -24,6 +24,7 @@
 
 pub mod batcher;
 pub mod controller;
+pub mod faults;
 pub mod metrics;
 pub mod pipeline;
 pub mod placement_mgr;
@@ -40,6 +41,7 @@ pub use batcher::Batcher;
 pub use controller::{
     ControllerConfig, ControllerReport, Decision, DecisionRecord, StrategyController,
 };
+pub use faults::{FaultPlan, WorkerHealth};
 pub use metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 pub use request::Request;
 pub use residency::ResidencyManager;

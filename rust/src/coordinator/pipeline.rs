@@ -79,12 +79,13 @@
 //! arrival order, dispatch grouping, prediction strategy, lookahead, and
 //! speculation — the property `tests/pipeline_parity.rs` pins down.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::faults::{all_workers_dead_err, sequence_fault_err, WorkerHealth, MAX_TIMEOUT_WAITS};
 use super::metrics::{DecodeStepMetrics, RoundMetrics};
 use super::placement_mgr::LayerPlan;
 use super::residency::ResidencyManager;
@@ -92,6 +93,7 @@ use super::router::{expert_counts, route_sequence, Slot};
 use super::server::{Coordinator, SeqSession, ServeStrategy, StepSeq};
 use super::worker::{WorkerHandle, WorkerMsg, WorkerResult};
 use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
+use crate::duplication::Placement;
 use crate::runtime::bucket::split_into_buckets;
 use crate::runtime::{HostTensor, In};
 use crate::util::stats;
@@ -162,6 +164,17 @@ pub struct StageMetrics {
     pub pred_share_l1: f64,
     /// Layers that carried predicted counts (0 for NoPrediction).
     pub pred_share_layers: usize,
+    /// Workers newly detected dead during this stage (ADR 008).
+    pub worker_deaths: u64,
+    /// Slots re-sent to a surviving replica after their owner died.
+    pub redispatched_slots: usize,
+    /// Reply-deadline timeouts waited through (straggler retries).
+    pub retry_count: u64,
+    /// Prewarm acks abandoned (deadline exhausted or owner died).
+    pub prewarm_timeouts: u64,
+    /// The stage ran on a degraded fleet (a death occurred, or fewer
+    /// workers than configured were alive).
+    pub degraded: bool,
     skews: Vec<f64>,
     share_l1s: Vec<f64>,
 }
@@ -194,6 +207,11 @@ impl StageMetrics {
             pred_top1_hits: 0,
             pred_share_l1: 0.0,
             pred_share_layers: 0,
+            worker_deaths: 0,
+            redispatched_slots: 0,
+            retry_count: 0,
+            prewarm_timeouts: 0,
+            degraded: false,
             skews: Vec::new(),
             share_l1s: Vec::new(),
         }
@@ -237,6 +255,11 @@ impl StageMetrics {
         pred_top1_hits: &mut usize,
         pred_share_l1: &mut f64,
         pred_share_layers: &mut usize,
+        worker_deaths: &mut u64,
+        redispatched_slots: &mut usize,
+        retry_count: &mut u64,
+        prewarm_timeouts: &mut u64,
+        degraded: &mut bool,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -277,6 +300,13 @@ impl StageMetrics {
                 / total_layers as f64;
         }
         *pred_share_layers = total_layers;
+        *worker_deaths += self.worker_deaths;
+        *redispatched_slots += self.redispatched_slots;
+        *retry_count += self.retry_count;
+        *prewarm_timeouts += self.prewarm_timeouts;
+        // Degraded is a latch, not a flow: once any stage of the window
+        // ran degraded, the whole window is degraded.
+        *degraded |= self.degraded;
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -306,6 +336,11 @@ impl StageMetrics {
             &mut m.pred_top1_hits,
             &mut m.pred_share_l1,
             &mut m.pred_share_layers,
+            &mut m.worker_deaths,
+            &mut m.redispatched_slots,
+            &mut m.retry_count,
+            &mut m.prewarm_timeouts,
+            &mut m.degraded,
         );
     }
 
@@ -336,6 +371,11 @@ impl StageMetrics {
             &mut m.pred_top1_hits,
             &mut m.pred_share_l1,
             &mut m.pred_share_layers,
+            &mut m.worker_deaths,
+            &mut m.redispatched_slots,
+            &mut m.retry_count,
+            &mut m.prewarm_timeouts,
+            &mut m.degraded,
         );
     }
 }
@@ -522,6 +562,7 @@ impl Coordinator {
                         pw,
                         &self.workers,
                         &mut self.residency,
+                        &self.health,
                         plans,
                         layer..=window_end,
                         self.prewarm_budget_bytes,
@@ -531,8 +572,11 @@ impl Coordinator {
 
             // Stage: attention.
             let t0 = Instant::now();
-            self.attention_stage(mode, layer, hidden)?;
-            metrics.attention_s += t0.elapsed().as_secs_f64();
+            let attn_s = {
+                self.attention_stage(mode, layer, hidden, metrics)?;
+                t0.elapsed().as_secs_f64()
+            };
+            metrics.attention_s += attn_s;
 
             // Parallel-attention mode: prewarm the window only now, so
             // transfers queue behind attention, not ahead.
@@ -542,6 +586,7 @@ impl Coordinator {
                         pw,
                         &self.workers,
                         &mut self.residency,
+                        &self.health,
                         plans,
                         layer..=window_end,
                         self.prewarm_budget_bytes,
@@ -637,7 +682,7 @@ impl Coordinator {
         }
         // Drain stragglers so every transferred byte is accounted.
         if let Some(pw) = prewarmer.as_mut() {
-            pw.finish(metrics)?;
+            pw.finish(&mut self.residency, &self.health, metrics)?;
         }
         // The forward is over: release the pin window so plan-time shrink
         // eviction (and the next round's LRU pressure) can touch any layer,
@@ -660,6 +705,7 @@ impl Coordinator {
         mode: &mut AttentionMode<'_>,
         layer: usize,
         hidden: &mut [HostTensor],
+        metrics: &mut StageMetrics,
     ) -> Result<()> {
         let attn_names = attn_weight_names(layer);
         match mode {
@@ -686,27 +732,7 @@ impl Coordinator {
                         *h = out;
                     }
                 } else {
-                    let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
-                    for (seq_idx, h) in hidden.iter().enumerate() {
-                        let worker = seq_idx % self.workers.len();
-                        self.workers[worker].send(WorkerMsg::Attention {
-                            tag: seq_idx as u64,
-                            layer,
-                            x: h.clone(),
-                            reply: attn_tx.clone(),
-                        });
-                    }
-                    drop(attn_tx);
-                    for _ in 0..hidden.len() {
-                        let r = attn_rx
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("attention worker channel closed"))?;
-                        if let Some(err) = &r.error {
-                            anyhow::bail!("attention on worker {} failed: {err}", r.worker);
-                        }
-                        let shape = hidden[r.tag as usize].shape.clone();
-                        hidden[r.tag as usize] = HostTensor::new(r.out, shape);
-                    }
+                    self.parallel_attention_stage(layer, hidden, metrics)?;
                 }
             }
             AttentionMode::Cached { sessions, workload } => {
@@ -715,7 +741,13 @@ impl Coordinator {
                 // attention stays on the leader: single-row matvecs cost
                 // less than a worker round-trip (§Perf iteration 2).
                 for (i, ws) in workload.iter().enumerate() {
-                    let sess = sessions.get_mut(&ws.id).expect("session exists");
+                    // Per-sequence faults (ADR 008): a missing session or
+                    // KV cache condemns that sequence, not the whole run —
+                    // the sentinel error lets `decode_step`'s caller evict
+                    // just the offending sequence.
+                    let Some(sess) = sessions.get_mut(&ws.id) else {
+                        return Err(sequence_fault_err(ws.id, "session missing"));
+                    };
                     if ws.prefill {
                         let mut out = self.leader.call(
                             "attention_prefill",
@@ -733,8 +765,9 @@ impl Coordinator {
                         hidden[i] = out.remove(0);
                         sess.kv[layer] = Some((k, v));
                     } else {
-                        let (k_cache, v_cache) =
-                            sess.kv[layer].as_ref().expect("decode sequence has KV");
+                        let Some((k_cache, v_cache)) = sess.kv[layer].as_ref() else {
+                            return Err(sequence_fault_err(ws.id, "decode KV cache missing"));
+                        };
                         let mut out = self.leader.call(
                             "attention_step",
                             &[
@@ -751,11 +784,110 @@ impl Coordinator {
                         let v_new = out.remove(2);
                         let k_new = out.remove(1);
                         hidden[i] = out.remove(0);
-                        let (k_cache, v_cache) =
-                            sess.kv[layer].as_mut().expect("decode sequence has KV");
+                        let Some((k_cache, v_cache)) = sess.kv[layer].as_mut() else {
+                            return Err(sequence_fault_err(ws.id, "decode KV cache missing"));
+                        };
                         k_cache.append_rows(&k_new);
                         v_cache.append_rows(&v_new);
                     }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parallel prefill attention with failover (ADR 008): sequences fan
+    /// out round-robin over the *alive* workers, the coordinator holds
+    /// its reply sender and collects under an escalating reply deadline.
+    /// After `MAX_TIMEOUT_WAITS` consecutive timeouts every worker still
+    /// owing a reply is declared dead and its rows are re-sent to
+    /// survivors. Attention is a pure function of the row and the shared
+    /// weights, so a redispatched row is bitwise identical to the
+    /// original — late straggler duplicates are deduplicated per tag
+    /// (first reply wins; both carry the same value).
+    fn parallel_attention_stage(
+        &mut self,
+        layer: usize,
+        hidden: &mut [HostTensor],
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        let alive: Vec<usize> = (0..self.workers.len())
+            .filter(|&w| self.health.is_alive(w))
+            .collect();
+        if alive.is_empty() {
+            return Err(all_workers_dead_err());
+        }
+        let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
+        let mut owner: Vec<usize> = Vec::with_capacity(hidden.len());
+        for (seq_idx, h) in hidden.iter().enumerate() {
+            let worker = alive[seq_idx % alive.len()];
+            owner.push(worker);
+            self.workers[worker].send(WorkerMsg::Attention {
+                tag: seq_idx as u64,
+                layer,
+                x: h.clone(),
+                reply: attn_tx.clone(),
+            });
+        }
+        // The coordinator keeps `attn_tx` alive: failure detection is
+        // reply-deadline-driven, never disconnect-driven (ADR 008).
+        let mut done = vec![false; hidden.len()];
+        let mut received = 0usize;
+        let mut waits = 0u32;
+        while received < hidden.len() {
+            match attn_rx.recv_timeout(self.health.deadline() * (1u32 << waits)) {
+                Ok(r) => {
+                    let tag = r.tag as usize;
+                    if done[tag] {
+                        continue; // straggler duplicate of a redispatched row
+                    }
+                    if let Some(err) = &r.error {
+                        anyhow::bail!("attention on worker {} failed: {err}", r.worker);
+                    }
+                    done[tag] = true;
+                    received += 1;
+                    waits = 0;
+                    self.health.observe_op(r.exec_s);
+                    let shape = hidden[tag].shape.clone();
+                    hidden[tag] = HostTensor::new(r.out, shape);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    metrics.retry_count += 1;
+                    waits += 1;
+                    if waits < MAX_TIMEOUT_WAITS {
+                        continue;
+                    }
+                    // Deadline exhausted: every worker still owing a
+                    // reply is unresponsive. Declare them dead and
+                    // redispatch their rows to survivors.
+                    waits = 0;
+                    let stale: Vec<usize> =
+                        (0..hidden.len()).filter(|&t| !done[t]).collect();
+                    let dead: std::collections::BTreeSet<usize> =
+                        stale.iter().map(|&t| owner[t]).collect();
+                    for w in dead {
+                        self.note_worker_death(w, metrics);
+                    }
+                    let alive: Vec<usize> = (0..self.workers.len())
+                        .filter(|&w| self.health.is_alive(w))
+                        .collect();
+                    if alive.is_empty() {
+                        return Err(all_workers_dead_err());
+                    }
+                    for (i, &tag) in stale.iter().enumerate() {
+                        let worker = alive[i % alive.len()];
+                        owner[tag] = worker;
+                        metrics.redispatched_slots += 1;
+                        self.workers[worker].send(WorkerMsg::Attention {
+                            tag: tag as u64,
+                            layer,
+                            x: hidden[tag].clone(),
+                            reply: attn_tx.clone(),
+                        });
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("attention worker channel closed");
                 }
             }
         }
@@ -807,6 +939,7 @@ impl Coordinator {
         reply_tx: &mpsc::Sender<WorkerResult>,
         msg_tag: &mut u64,
         group_slots: &mut BTreeMap<u64, Vec<usize>>,
+        inflight: &mut BTreeMap<u64, (usize, usize)>,
         outstanding: &mut usize,
         metrics: &mut StageMetrics,
     ) {
@@ -837,6 +970,7 @@ impl Coordinator {
             buf.resize(bucket * d, 0.0);
             *msg_tag += 1;
             group_slots.insert(*msg_tag, slot_indices[offset..offset + chunk].to_vec());
+            inflight.insert(*msg_tag, (worker, expert));
             self.workers[worker].send(WorkerMsg::Run {
                 tag: *msg_tag,
                 layer,
@@ -921,15 +1055,19 @@ impl Coordinator {
 
         let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
         let mut outstanding = 0usize;
-        // Slot-order metadata for scattering results back.
+        // Slot-order metadata for scattering results back, plus the
+        // (worker, expert) each in-flight tag was sent to — the failover
+        // table the timeout path redispatches from (ADR 008).
         let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut inflight: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
         let mut msg_tag = 0u64;
 
         // Speculative fast path first: settle only these pairs' prewarms
         // and ship the confirmed tiles immediately.
+        let spec_groups = self.remap_dead_targets(spec_groups, &plan.placement)?;
         if !spec_groups.is_empty() {
             if let Some(pw) = prewarmer.as_deref_mut() {
-                pw.settle_for(layer, &spec_groups, metrics)?;
+                pw.settle_for(layer, &spec_groups, &mut self.residency, &self.health, metrics)?;
             }
             for ((worker, expert), slot_indices) in &spec_groups {
                 self.send_ffn_group(
@@ -942,6 +1080,7 @@ impl Coordinator {
                     &reply_tx,
                     &mut msg_tag,
                     &mut group_slots,
+                    &mut inflight,
                     &mut outstanding,
                     metrics,
                 );
@@ -973,11 +1112,12 @@ impl Coordinator {
             }
             let placed =
                 lpt_place_seeded(groups, plan, self.workers.len(), &self.buckets, &seed_load);
+            let placed = self.remap_dead_targets(placed, &plan.placement)?;
 
             // Settle the prewarm acks this dispatch depends on (hidden vs
             // exposed); unneeded prewarms keep streaming in the background.
             if let Some(pw) = prewarmer.as_deref_mut() {
-                pw.settle_for(layer, &placed, metrics)?;
+                pw.settle_for(layer, &placed, &mut self.residency, &self.health, metrics)?;
             }
             for ((worker, expert), slot_indices) in &placed {
                 self.send_ffn_group(
@@ -990,12 +1130,15 @@ impl Coordinator {
                     &reply_tx,
                     &mut msg_tag,
                     &mut group_slots,
+                    &mut inflight,
                     &mut outstanding,
                     metrics,
                 );
             }
         }
-        drop(reply_tx);
+        // `reply_tx` stays alive for the whole collect loop: failure is
+        // detected by reply deadline, never channel disconnect (ADR 008) —
+        // the loop counts replies, so the healthy path is unchanged.
 
         // The workers are now busy with this layer's tiles — exactly the
         // window in which the lookahead window's speculative targets are
@@ -1010,28 +1153,98 @@ impl Coordinator {
         let mut slot_out = self.tiles.take(slots.len() * d);
         slot_out.resize(slots.len() * d, 0.0);
         let mut received = 0usize;
+        let mut abandoned: HashSet<u64> = HashSet::new();
+        let mut waits = 0u32;
         while received < outstanding {
-            let mut result = reply_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-            received += 1;
-            if let Some(err) = &result.error {
-                anyhow::bail!("worker {} failed: {err}", result.worker);
+            match reply_rx.recv_timeout(self.health.deadline() * (1u32 << waits)) {
+                Ok(mut result) => {
+                    if abandoned.remove(&result.tag) {
+                        // Late straggler reply for a redispatched group:
+                        // the redispatched copy owns these slots (the
+                        // values are identical either way) — just recycle
+                        // the buffers.
+                        self.tiles.put(std::mem::take(&mut result.tile));
+                        self.tiles.put(std::mem::take(&mut result.out));
+                        continue;
+                    }
+                    received += 1;
+                    // Any progress resets the straggler clock.
+                    waits = 0;
+                    if let Some(err) = &result.error {
+                        anyhow::bail!("worker {} failed: {err}", result.worker);
+                    }
+                    self.health.observe_op(result.exec_s);
+                    metrics.worker_busy_s[result.worker] += result.exec_s;
+                    // Cold uploads at Run time stall the FFN call: exposed.
+                    metrics.upload_bytes += result.upload_bytes;
+                    metrics.exposed_upload_bytes += result.upload_bytes;
+                    let slot_indices = &group_slots[&result.tag];
+                    debug_assert_eq!(result.n_real, slot_indices.len());
+                    for (row, &si) in slot_indices.iter().enumerate() {
+                        slot_out[si * d..(si + 1) * d]
+                            .copy_from_slice(&result.out[row * d..(row + 1) * d]);
+                    }
+                    inflight.remove(&result.tag);
+                    // Zero-alloc recycling: the padded input tile and the
+                    // FFN output buffer both return to the pool.
+                    self.tiles.put(std::mem::take(&mut result.tile));
+                    self.tiles.put(std::mem::take(&mut result.out));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    metrics.retry_count += 1;
+                    waits += 1;
+                    if waits < MAX_TIMEOUT_WAITS {
+                        continue; // straggler grace: back off and re-wait
+                    }
+                    waits = 0;
+                    // Deadline exhausted with zero progress: every worker
+                    // still owing a reply is unresponsive. Declare them
+                    // dead and redispatch each lost group to a surviving
+                    // replica of its expert — the duplication plan is the
+                    // failover table (ADR 008).
+                    let stale: Vec<(u64, usize, usize)> = inflight
+                        .iter()
+                        .map(|(&tag, &(w, e))| (tag, w, e))
+                        .collect();
+                    let dead: std::collections::BTreeSet<usize> =
+                        stale.iter().map(|&(_, w, _)| w).collect();
+                    for w in dead {
+                        self.note_worker_death(w, metrics);
+                        if let Some(pw) = prewarmer.as_deref_mut() {
+                            metrics.prewarm_timeouts += pw.purge_worker(w) as u64;
+                        }
+                    }
+                    for (tag, _, expert) in stale {
+                        // The tile shipped to the dead worker died with
+                        // its thread; redispatch re-gathers from `normed`
+                        // into a fresh pooled tile.
+                        abandoned.insert(tag);
+                        inflight.remove(&tag);
+                        outstanding -= 1;
+                        self.tiles.lost += 1;
+                        let slot_indices = group_slots.remove(&tag).unwrap_or_default();
+                        let target = self.failover_for(&plan.placement, expert)?;
+                        metrics.redispatched_slots += slot_indices.len();
+                        self.send_ffn_group(
+                            layer,
+                            target,
+                            expert,
+                            &slot_indices,
+                            slots,
+                            normed,
+                            &reply_tx,
+                            &mut msg_tag,
+                            &mut group_slots,
+                            &mut inflight,
+                            &mut outstanding,
+                            metrics,
+                        );
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("worker channel closed");
+                }
             }
-            metrics.worker_busy_s[result.worker] += result.exec_s;
-            // Cold uploads at Run time stall the FFN call: exposed.
-            metrics.upload_bytes += result.upload_bytes;
-            metrics.exposed_upload_bytes += result.upload_bytes;
-            let slot_indices = &group_slots[&result.tag];
-            debug_assert_eq!(result.n_real, slot_indices.len());
-            for (row, &si) in slot_indices.iter().enumerate() {
-                slot_out[si * d..(si + 1) * d]
-                    .copy_from_slice(&result.out[row * d..(row + 1) * d]);
-            }
-            // Zero-alloc recycling: the padded input tile and the FFN
-            // output buffer both return to the pool for the next layer.
-            self.tiles.put(std::mem::take(&mut result.tile));
-            self.tiles.put(std::mem::take(&mut result.out));
         }
         // … then combine h += gate · out in global slot order, so numerics
         // are independent of arrival order, grouping and strategy.
@@ -1050,6 +1263,49 @@ impl Coordinator {
         Ok(())
     }
 
+    /// The surviving host an expert's lost group fails over to (ADR 008):
+    /// the lowest-indexed *alive* replica under the layer's duplication
+    /// plan — the plan is the redundancy table — falling back to the
+    /// lowest-indexed alive worker (the weights upload cold on demand
+    /// there; weights are identical on every worker, so a fallback host
+    /// changes transfer bytes, never values). `Err(all workers dead)`
+    /// when no worker survives.
+    fn failover_for(&self, placement: &Placement, expert: usize) -> Result<usize> {
+        if let Some(w) = placement
+            .gpus_of(expert)
+            .into_iter()
+            .find(|&g| self.health.is_alive(g))
+        {
+            return Ok(w);
+        }
+        (0..self.workers.len())
+            .find(|&w| self.health.is_alive(w))
+            .ok_or_else(all_workers_dead_err)
+    }
+
+    /// Re-home dispatch groups that target a dead worker before sending
+    /// (the plan can lag a death until the degraded replan lands). A
+    /// no-op returning the groups untouched while the fleet is whole, so
+    /// the healthy dispatch path is byte-for-byte the pre-ADR-008 one.
+    fn remap_dead_targets(
+        &self,
+        groups: BTreeMap<(usize, usize), Vec<usize>>,
+        placement: &Placement,
+    ) -> Result<BTreeMap<(usize, usize), Vec<usize>>> {
+        if self.health.alive_count() == self.workers.len() {
+            return Ok(groups);
+        }
+        let mut out: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for ((worker, expert), slot_indices) in groups {
+            let w = if self.health.is_alive(worker) {
+                worker
+            } else {
+                self.failover_for(placement, expert)?
+            };
+            out.entry((w, expert)).or_default().extend(slot_indices);
+        }
+        Ok(out)
+    }
 }
 
 /// Per-token speculative dispatch targets for one layer: token
@@ -1162,13 +1418,14 @@ fn issue_prewarm_window(
     pw: &mut Prewarmer,
     workers: &[WorkerHandle],
     residency: &mut ResidencyManager,
+    health: &WorkerHealth,
     plans: &[LayerPlan],
     window: std::ops::RangeInclusive<usize>,
     budget_init: Option<u64>,
 ) {
     let mut budget = budget_init;
     for target in window {
-        if pw.issue(workers, residency, target, &plans[target], &mut budget) {
+        if pw.issue(workers, residency, health, target, &plans[target], &mut budget) {
             break; // budget exhausted at this depth
         }
     }
@@ -1190,11 +1447,13 @@ struct Prewarmer {
 }
 
 /// The Prewarmer keeps its own `tx` alive (it clones it per message), so
-/// — unlike the FFN reply channel, which drops its sender before the recv
-/// loop — a dead worker cannot surface as a channel disconnect here.
-/// Blocking waits therefore use a generous timeout instead of `recv()`,
-/// turning a lost ack (worker thread died, message dropped on a closed
-/// queue) into an error rather than a permanent hang.
+/// a dead worker cannot surface as a channel disconnect here. Blocking
+/// waits use the cost-model reply deadline with the same escalation as
+/// the FFN collector, capped at this ceiling; when even that expires the
+/// still-pending prewarms are *abandoned* — counted as
+/// `prewarm_timeouts` and marked residency-unknown so the next dispatch
+/// re-uploads cold — rather than erroring the round (ADR 008: a lost
+/// prewarm ack must never pin residency, or stall serving, forever).
 const PREWARM_ACK_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl Prewarmer {
@@ -1207,16 +1466,41 @@ impl Prewarmer {
         }
     }
 
-    fn recv_ack(&self) -> Result<WorkerResult> {
-        self.rx.recv_timeout(PREWARM_ACK_TIMEOUT).map_err(|e| match e {
-            mpsc::RecvTimeoutError::Timeout => anyhow::anyhow!(
-                "prewarm ack timed out after {PREWARM_ACK_TIMEOUT:?} \
-                 (worker dead?)"
-            ),
-            mpsc::RecvTimeoutError::Disconnected => {
-                anyhow::anyhow!("prewarm channel closed")
-            }
-        })
+    fn ack_deadline(health: &WorkerHealth, waits: u32) -> Duration {
+        (health.deadline() * (1u32 << waits)).min(PREWARM_ACK_TIMEOUT)
+    }
+
+    /// Drop pending prewarms owned by a worker just declared dead; its
+    /// residency was already reclaimed wholesale, so only the ack
+    /// bookkeeping needs clearing. Returns how many were purged (each is
+    /// a `prewarm_timeouts` tick at the caller).
+    fn purge_worker(&mut self, worker: usize) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|&(w, _, _)| w != worker);
+        before - self.pending.len()
+    }
+
+    /// Drop pending prewarms owned by any dead worker (deaths detected
+    /// outside the FFN path — e.g. during attention — reach the
+    /// Prewarmer here, at the next settle point).
+    fn purge_dead(&mut self, health: &WorkerHealth, metrics: &mut StageMetrics) {
+        let before = self.pending.len();
+        self.pending.retain(|&(w, _, _)| health.is_alive(w));
+        metrics.prewarm_timeouts += (before - self.pending.len()) as u64;
+    }
+
+    /// Abandon every still-pending prewarm after the ack deadline
+    /// exhausted: count each, and mark it residency-unknown so a later
+    /// dispatch re-uploads cold instead of trusting the phantom replica.
+    fn abandon_pending(
+        &mut self,
+        residency: &mut ResidencyManager,
+        metrics: &mut StageMetrics,
+    ) {
+        for (w, l, e) in std::mem::take(&mut self.pending) {
+            residency.invalidate(w, l, e);
+            metrics.prewarm_timeouts += 1;
+        }
     }
 
     /// Fire non-blocking prewarms for every (expert, worker) of the plan
@@ -1224,18 +1508,23 @@ impl Prewarmer {
     /// [`ResidencyManager`] gates re-sends, admits each new replica into
     /// the LRU (emitting capacity evictions ahead of the prewarm on the
     /// same FIFO queue) and `budget` bounds the bytes issued at this
-    /// layer step. Returns true when the budget ran out — the caller
-    /// stops descending into deeper lookahead layers (ADR 004).
+    /// layer step. Dead workers are skipped (ADR 008). Returns true when
+    /// the budget ran out — the caller stops descending into deeper
+    /// lookahead layers (ADR 004).
     fn issue(
         &mut self,
         workers: &[WorkerHandle],
         residency: &mut ResidencyManager,
+        health: &WorkerHealth,
         layer: usize,
         plan: &LayerPlan,
         budget: &mut Option<u64>,
     ) -> bool {
         let replica_bytes = residency.replica_bytes();
         for &(expert, gpu) in plan.placement.pairs() {
+            if !health.is_alive(gpu) {
+                continue;
+            }
             if residency.contains(gpu, layer, expert) {
                 continue;
             }
@@ -1267,31 +1556,54 @@ impl Prewarmer {
     /// Account acks before the FFN phase dispatches: everything already in
     /// the channel was fully overlapped (hidden); acks for pairs this
     /// layer's dispatch *needs* are blocked on (exposed bytes + stall
-    /// time), while unneeded in-flight prewarms are left streaming.
+    /// time), while unneeded in-flight prewarms are left streaming. Acks
+    /// that never arrive (worker died, message lost) are abandoned after
+    /// the escalated deadline rather than erroring the round.
     fn settle_for(
         &mut self,
         layer: usize,
         needed: &BTreeMap<(usize, usize), Vec<usize>>,
+        residency: &mut ResidencyManager,
+        health: &WorkerHealth,
         metrics: &mut StageMetrics,
     ) -> Result<()> {
         while let Ok(ack) = self.rx.try_recv() {
             self.absorb(ack, true, metrics)?;
         }
+        self.purge_dead(health, metrics);
         let still_needed = |pending: &std::collections::HashSet<(usize, usize, usize)>| {
             needed
                 .keys()
                 .any(|&(worker, expert)| pending.contains(&(worker, layer, expert)))
         };
+        let mut waits = 0u32;
         while still_needed(&self.pending) {
             let t0 = Instant::now();
-            let ack = self.recv_ack()?;
-            metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
-            // Only the transfers this dispatch had to have are exposed;
-            // anything else that lands during the stall still beat its own
-            // point of use.
-            let hidden = ack.layer != layer
-                || !needed.contains_key(&(ack.worker, ack.expert));
-            self.absorb(ack, hidden, metrics)?;
+            match self.rx.recv_timeout(Self::ack_deadline(health, waits)) {
+                Ok(ack) => {
+                    waits = 0;
+                    metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
+                    // Only the transfers this dispatch had to have are
+                    // exposed; anything else that lands during the stall
+                    // still beat its own point of use.
+                    let hidden = ack.layer != layer
+                        || !needed.contains_key(&(ack.worker, ack.expert));
+                    self.absorb(ack, hidden, metrics)?;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    waits += 1;
+                    if waits < MAX_TIMEOUT_WAITS {
+                        continue;
+                    }
+                    // Deadline exhausted: a prewarm is not worth a death
+                    // verdict (the FFN path decides those) — abandon the
+                    // laggards and let dispatch re-upload cold.
+                    self.abandon_pending(residency, metrics);
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("prewarm channel closed");
+                }
+            }
         }
         Ok(())
     }
@@ -1300,12 +1612,35 @@ impl Prewarmer {
     /// transferred byte escapes the accounting. These prewarms were never
     /// waited on by any dispatch — their bytes are hidden — but the drain
     /// itself delays the round tail, so its wall time is charged exposed.
-    fn finish(&mut self, metrics: &mut StageMetrics) -> Result<()> {
+    /// Like [`Prewarmer::settle_for`], lost acks are abandoned after the
+    /// escalated deadline instead of hanging or erroring the round.
+    fn finish(
+        &mut self,
+        residency: &mut ResidencyManager,
+        health: &WorkerHealth,
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        self.purge_dead(health, metrics);
+        let mut waits = 0u32;
         while !self.pending.is_empty() {
             let t0 = Instant::now();
-            let ack = self.recv_ack()?;
-            metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
-            self.absorb(ack, true, metrics)?;
+            match self.rx.recv_timeout(Self::ack_deadline(health, waits)) {
+                Ok(ack) => {
+                    waits = 0;
+                    metrics.exposed_transfer_s += t0.elapsed().as_secs_f64();
+                    self.absorb(ack, true, metrics)?;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    waits += 1;
+                    if waits < MAX_TIMEOUT_WAITS {
+                        continue;
+                    }
+                    self.abandon_pending(residency, metrics);
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("prewarm channel closed");
+                }
+            }
         }
         Ok(())
     }
@@ -1378,11 +1713,14 @@ pub fn merge_runt_groups(groups: &mut BTreeMap<(usize, usize), Vec<usize>>, min_
             continue;
         }
         keys.sort_by_key(|k| groups[k].len());
-        let biggest = *keys.last().unwrap();
+        let Some(&biggest) = keys.last() else {
+            continue;
+        };
         for key in &keys[..keys.len() - 1] {
-            if groups[key].len() < min_group {
-                let moved = groups.remove(key).unwrap();
-                groups.get_mut(&biggest).unwrap().extend(moved);
+            if groups.get(key).map_or(usize::MAX, Vec::len) < min_group {
+                if let Some(moved) = groups.remove(key) {
+                    groups.entry(biggest).or_default().extend(moved);
+                }
             }
         }
     }
@@ -1554,6 +1892,11 @@ mod tests {
         s.share_l1s.push(0.2);
         s.share_l1s.push(0.4);
         s.skews.push(1.5);
+        s.worker_deaths = 1;
+        s.redispatched_slots = 3;
+        s.retry_count = 2;
+        s.prewarm_timeouts = 1;
+        s.degraded = true;
         s.finish();
         assert_eq!(s.pred_share_layers, 2);
         assert!((s.pred_share_l1 - 0.3).abs() < 1e-12);
@@ -1580,6 +1923,11 @@ mod tests {
         assert_eq!(round.pred_top1_hits, 5);
         assert_eq!(round.pred_share_layers, 2);
         assert!((round.pred_share_l1 - 0.3).abs() < 1e-12);
+        assert_eq!(round.worker_deaths, 1);
+        assert_eq!(round.redispatched_slots, 3);
+        assert_eq!(round.retry_count, 2);
+        assert_eq!(round.prewarm_timeouts, 1);
+        assert!(round.degraded);
         // High-water is max-assigned, not summed: a second application
         // with a lower peak must not move it.
         let mut lower = StageMetrics::new(2);
@@ -1587,6 +1935,8 @@ mod tests {
         lower.finish();
         lower.apply_to_round(&mut round);
         assert_eq!(round.resident_high_water_bytes, 900);
+        // Degraded is a latch: a healthy stage must not clear it.
+        assert!(round.degraded);
         assert!((round.routing_skew - 1.5).abs() < 1e-12);
         // A second stage with no share samples must not clobber the
         // layer-weighted share error (latent-aggregation guard).
@@ -1621,6 +1971,11 @@ mod tests {
         assert_eq!(step.pred_top1_hits, 5);
         assert_eq!(step.pred_share_layers, 2);
         assert!((step.pred_share_l1 - 0.3).abs() < 1e-12);
+        assert_eq!(step.worker_deaths, 1);
+        assert_eq!(step.redispatched_slots, 3);
+        assert_eq!(step.retry_count, 2);
+        assert_eq!(step.prewarm_timeouts, 1);
+        assert!(step.degraded);
     }
 
     #[test]

@@ -251,6 +251,22 @@ impl PlacementManager {
         }
     }
 
+    /// A worker died (ADR 008): remove it from the host set every future
+    /// plan is balanced from — its capacity drops to zero so no replica
+    /// is ever placed there again, and experts it sole-hosted are
+    /// re-homed onto survivors (their canonical copy uploads cold on
+    /// first use). Cached decode plans are dropped so the very next step
+    /// replans out-of-cadence, re-replicating orphaned hot experts onto
+    /// the surviving workers, and the plan-diff baseline is reset so the
+    /// degraded plans are not diffed against pre-death placements.
+    /// Returns the re-homed `(expert, gpu)` pairs.
+    pub fn note_worker_death(&mut self, worker: usize) -> Vec<(usize, usize)> {
+        let rehomed = self.static_placement.fail_gpu(worker);
+        self.cached_decode_plans = None;
+        self.reset_plan_baseline();
+        rehomed
+    }
+
     /// Record the placement a layer is about to serve under and return the
     /// `(expert, gpu)` replicas the *previous* plan hosted that this one no
     /// longer does — the plan-shrink eviction set (ADR 004). Only called
@@ -392,6 +408,29 @@ mod tests {
         assert!(m.note_plan(1, &lean.placement).is_empty());
         // Other layers are independent.
         assert!(m.note_plan(0, &lean.placement).is_empty());
+    }
+
+    #[test]
+    fn worker_death_excludes_gpu_and_forces_replan() {
+        let mut m = mgr();
+        m.replan_interval = 100;
+        for layer in 0..4 {
+            m.observe(layer, &[300, 10, 10, 10, 10, 10, 10, 10]);
+        }
+        m.decode_plans(0, 64);
+        assert!(!m.replans_at(1), "cadence would normally hold the plans");
+        m.note_worker_death(1);
+        assert!(m.replans_at(1), "death replans out of cadence");
+        let plans = m.decode_plans(1, 64);
+        for plan in &plans {
+            assert!(
+                plan.placement.experts_on(1).is_empty(),
+                "degraded plans must not place on the dead worker"
+            );
+            plan.placement.check_invariants().unwrap();
+        }
+        // The static baseline also excludes the dead worker.
+        assert!(m.static_plan().placement.experts_on(1).is_empty());
     }
 
     #[test]

@@ -209,6 +209,43 @@ impl ResidencyManager {
         }
     }
 
+    /// Mark a replica resident-unknown (ADR 008): a prewarm ack never
+    /// arrived, so the coordinator no longer trusts that the weights are
+    /// on the device. Unlike [`Self::remove`] this ignores pins (the
+    /// entry may be in the active window — trusting a phantom residency
+    /// is worse than re-uploading), counts no eviction (nothing was
+    /// displaced by policy) and does not mark `ever_evicted` (a later
+    /// upload is a cold transfer, not a refetch of something the cap
+    /// pushed out). Returns whether the entry was tracked.
+    pub fn invalidate(&mut self, worker: usize, layer: usize, expert: usize) -> bool {
+        let Some(w) = self.workers.get_mut(worker) else {
+            return false;
+        };
+        if w.last_used.remove(&(layer, expert)).is_some() {
+            w.resident_bytes = w.resident_bytes.saturating_sub(self.replica_bytes);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A worker died (ADR 008): clear its entire coordinator-side view.
+    /// No `WorkerMsg::Evict` is owed (the engine is gone with the
+    /// thread), no evictions are counted, and `ever_evicted` history is
+    /// dropped — the worker will never serve again, so refetch
+    /// classification for it is meaningless. Returns the bytes
+    /// reclaimed.
+    pub fn reclaim_worker(&mut self, worker: usize) -> u64 {
+        let Some(w) = self.workers.get_mut(worker) else {
+            return 0;
+        };
+        let freed = w.resident_bytes;
+        w.last_used.clear();
+        w.ever_evicted.clear();
+        w.resident_bytes = 0;
+        freed
+    }
+
     /// Resident experts of one worker for one layer (sorted).
     pub fn layer_experts(&self, worker: usize, layer: usize) -> Vec<usize> {
         let mut v: Vec<usize> = self.workers[worker]
@@ -321,6 +358,39 @@ mod tests {
         assert_eq!(r.refetches, 1);
         assert_eq!(r.refetch_bytes, 100);
         assert_eq!(r.evictions, 2);
+    }
+
+    #[test]
+    fn invalidate_is_not_an_eviction() {
+        let mut r = ResidencyManager::new(1, 100);
+        r.admit(0, 0, 0);
+        r.pin_layers([0]);
+        // Pins don't protect phantom residency: invalidate still clears.
+        assert!(r.invalidate(0, 0, 0));
+        assert!(!r.contains(0, 0, 0));
+        assert_eq!(r.resident_bytes(0), 0);
+        assert_eq!(r.evictions, 0, "no policy eviction happened");
+        assert!(!r.invalidate(0, 0, 0), "second invalidate is a no-op");
+        r.clear_pins();
+        // Re-admission after invalidation is a cold upload, not a refetch.
+        assert!(r.admit(0, 0, 0).newly_resident);
+        assert_eq!(r.refetches, 0);
+        assert!(!r.invalidate(9, 0, 0), "out-of-range worker tolerated");
+    }
+
+    #[test]
+    fn reclaim_worker_clears_everything_without_evictions() {
+        let mut r = ResidencyManager::new(2, 100);
+        r.admit(0, 0, 0);
+        r.admit(0, 1, 2);
+        r.admit(1, 0, 0);
+        assert_eq!(r.reclaim_worker(0), 200);
+        assert_eq!(r.resident_replicas(0), 0);
+        assert_eq!(r.resident_bytes(0), 0);
+        assert_eq!(r.evictions, 0);
+        assert!(r.contains(1, 0, 0), "other workers untouched");
+        assert_eq!(r.reclaim_worker(0), 0, "already empty");
+        assert_eq!(r.reclaim_worker(9), 0, "out-of-range worker tolerated");
     }
 
     #[test]

@@ -138,6 +138,33 @@ impl Scheduler {
         evicted
     }
 
+    /// Requeue an active sequence (ADR 008): its step could not be
+    /// served — the workers hosting its expert groups are gone — so it
+    /// leaves the active set and rejoins the *front* of the waiting
+    /// queue (it already waited its turn once). The caller rebuilds the
+    /// request from its session state; the sequence is requeued, not
+    /// lost.
+    pub fn requeue(&mut self, req: Request) {
+        self.active.retain(|s| s.id != req.id);
+        self.waiting.push_front(req);
+    }
+
+    /// Drop an active sequence without requeueing (per-sequence fault:
+    /// its session state is unrecoverable). Returns whether it was
+    /// active.
+    pub fn drop_active(&mut self, id: u64) -> bool {
+        let before = self.active.len();
+        self.active.retain(|s| s.id != id);
+        self.active.len() != before
+    }
+
+    /// Ids currently waiting (admission order). Used for end-of-run
+    /// lost-sequence accounting: admitted ∖ (finished ∪ waiting ∪
+    /// active) must be empty.
+    pub fn waiting_ids(&self) -> Vec<u64> {
+        self.waiting.iter().map(|r| r.id).collect()
+    }
+
     pub fn admitted_order(&self) -> &[u64] {
         &self.admitted_order
     }
@@ -225,6 +252,39 @@ mod tests {
         s.push(req(1, 4, 0));
         s.admit(0);
         assert!(s.record_token(1), "prefill-only request finishes immediately");
+    }
+
+    #[test]
+    fn requeue_rejoins_front_of_queue() {
+        let mut s = Scheduler::new(2);
+        for i in 0..3 {
+            s.push(req(i, 4, 3));
+        }
+        s.admit(0);
+        s.record_token(0);
+        s.record_token(1);
+        // Sequence 1 becomes unplaceable: back to the front of waiting.
+        s.requeue(req(1, 4, 2));
+        assert_eq!(s.active_len(), 1);
+        assert_eq!(s.waiting_ids(), vec![1, 2]);
+        // Next admission re-admits it before the never-served request.
+        let readmitted = s.admit(1);
+        assert_eq!(readmitted.len(), 1, "only one slot was free");
+        assert_eq!(readmitted[0].id, 1);
+        // Re-admission appears twice in admitted order; lost-sequence
+        // accounting therefore works over unique ids.
+        assert_eq!(s.admitted_order(), &[0, 1, 1]);
+    }
+
+    #[test]
+    fn drop_active_removes_without_finishing() {
+        let mut s = Scheduler::new(2);
+        s.push(req(0, 4, 2));
+        s.admit(0);
+        assert!(s.drop_active(0));
+        assert!(!s.drop_active(0));
+        assert_eq!(s.active_len(), 0);
+        assert!(s.finished_order().is_empty());
     }
 
     #[test]

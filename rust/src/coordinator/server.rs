@@ -32,6 +32,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::controller::{Decision, StrategyController};
+use super::faults::{
+    is_all_workers_dead, sequence_fault_err, sequence_fault_id, FaultPlan, WorkerHealth,
+};
 use super::metrics::{
     DecodeReport, DecodeStepMetrics, ReportMeta, RoundMetrics, ServeReport,
 };
@@ -42,7 +45,7 @@ use super::request::Request;
 use super::residency::ResidencyManager;
 use super::scheduler::{Scheduler, SeqPhase};
 use super::tile_pool::TilePool;
-use super::worker::WorkerHandle;
+use super::worker::{WorkerHandle, WorkerMsg};
 use crate::gps::select::Regime;
 use crate::runtime::tensor::IntTensor;
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
@@ -185,6 +188,12 @@ pub struct Coordinator {
     /// speculative scatter and adjust lookahead depth from measured
     /// metrics. `None` = fixed-strategy serving (the default).
     pub controller: Option<StrategyController>,
+    /// ADR 008: per-worker liveness + the cost-model reply deadline. The
+    /// pipeline's collect loops consult it to detect dead workers and the
+    /// failover path routes around them; crate-private because every
+    /// `mark_dead` must pair with residency reclaim + placement re-homing
+    /// (see [`Coordinator::note_worker_death`]).
+    pub(crate) health: WorkerHealth,
 }
 
 impl Coordinator {
@@ -264,7 +273,7 @@ impl Coordinator {
         );
 
         let tep = TepHead::new(dims.n_layers, dims.n_experts, dims.top_k);
-        Ok(Coordinator {
+        let mut coord = Coordinator {
             leader,
             workers,
             placement,
@@ -280,7 +289,60 @@ impl Coordinator {
             tiles: TilePool::new(),
             tep,
             controller: None,
-        })
+            health: WorkerHealth::new(n_workers),
+        };
+        // `MOE_GPS_FAULTS` injects faults in contexts that don't thread the
+        // CLI flag (tests, CI chaos jobs); the flag takes precedence when
+        // both are set because `set_fault_plan` re-sends (ADR 008).
+        if let Some(plan) = FaultPlan::from_env()? {
+            coord.set_fault_plan(&plan);
+        }
+        Ok(coord)
+    }
+
+    /// Install a deterministic fault-injection plan (ADR 008): each
+    /// worker receives its own script over the FIFO command queue, so the
+    /// faults are in place before any serving op. An empty plan is a
+    /// no-op; with injection disabled serving output is bitwise identical
+    /// to a build without the fault machinery.
+    pub fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        if plan.is_empty() {
+            return;
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            w.send(WorkerMsg::Faults(plan.for_worker(i)));
+        }
+    }
+
+    /// Override the reply deadline (`serve --worker-timeout SECONDS`);
+    /// `None` returns to the cost-model EWMA deadline (ADR 008).
+    pub fn set_worker_timeout(&mut self, seconds: Option<f64>) {
+        self.health.set_timeout_override(seconds);
+    }
+
+    /// Declare a worker dead (ADR 008): flip liveness, then repair every
+    /// structure that assumed it alive — reclaim its residency wholesale
+    /// (no Evict messages; nobody is listening) and re-home experts it
+    /// solely hosted onto survivors. Idempotent per worker; counts into
+    /// the current stage's fault metrics and latches `degraded`.
+    pub(crate) fn note_worker_death(&mut self, worker: usize, metrics: &mut StageMetrics) {
+        if !self.health.mark_dead(worker) {
+            return;
+        }
+        metrics.worker_deaths += 1;
+        metrics.degraded = true;
+        crate::util::logging::log(
+            crate::util::logging::Level::Warn,
+            "coordinator::server",
+            format_args!(
+                "worker {worker} declared dead (reply deadline exhausted); \
+                 {} of {} workers remain",
+                self.health.alive_count(),
+                self.health.n_workers(),
+            ),
+        );
+        self.residency.reclaim_worker(worker);
+        self.placement.note_worker_death(worker);
     }
 
     /// Set (or clear) the per-worker byte cap for expert replica weights
@@ -357,6 +419,9 @@ impl Coordinator {
 
         // ---- 3. unified per-layer pipeline ------------------------------
         let mut stage = StageMetrics::new(self.workers.len());
+        // A window that *starts* short-handed is degraded even if no new
+        // death lands inside it (ADR 008).
+        stage.degraded |= self.health.alive_count() < self.workers.len();
         let mut mode = AttentionMode::Full {
             parallel: self.parallel_attention,
         };
@@ -402,6 +467,9 @@ impl Coordinator {
             let (metrics, _) = self.serve_round(&round)?;
             if let Some(ctrl) = self.controller.as_mut() {
                 ctrl.observe_round(&metrics);
+            }
+            if metrics.worker_deaths > 0 {
+                self.consult_on_worker_loss(round_idx);
             }
             report.rounds.push(metrics);
         }
@@ -520,9 +588,16 @@ impl Coordinator {
         }
         let mut sessions: BTreeMap<u64, SeqSession> = BTreeMap::new();
         let mut rng = Rng::new(opts.seed ^ 0x00DE_C0DE);
+        // Sequences evicted on an unrecoverable per-sequence fault: they
+        // are neither finished nor requeued, but they were *explicitly*
+        // handled, so end-of-run lost accounting excludes them (ADR 008).
+        let mut faulted: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
         self.placement.reset_decode_plans();
 
         for step in 0..opts.max_steps {
+            if self.health.alive_count() == 0 {
+                break; // every worker dead: nothing can serve (ADR 008)
+            }
             if opts.arrival_interval > 0 && step % opts.arrival_interval == 0 {
                 if let Some(r) = pending.pop_front() {
                     sched.push(r);
@@ -547,20 +622,124 @@ impl Coordinator {
             if step > 0 && step % cadence == 0 {
                 self.consult_controller(step);
             }
-            let metrics =
-                self.decode_step(step, admitted, &mut sched, &mut sessions, opts, &mut rng)?;
-            if let Some(ctrl) = self.controller.as_mut() {
-                ctrl.observe_step(&metrics);
-            }
-            report.steps.push(metrics);
-            for id in sched.evict_finished() {
-                sessions.remove(&id);
+            let deaths_before = self.health.total_deaths;
+            match self.decode_step(step, admitted, &mut sched, &mut sessions, opts, &mut rng) {
+                Ok(metrics) => {
+                    if let Some(ctrl) = self.controller.as_mut() {
+                        ctrl.observe_step(&metrics);
+                    }
+                    // A worker died inside this step: give the controller
+                    // an out-of-cadence boundary to shed optimism
+                    // (speculation, deep lookahead) for the smaller
+                    // cluster (ADR 008).
+                    if metrics.worker_deaths > 0 {
+                        self.consult_on_worker_loss(step);
+                    }
+                    report.steps.push(metrics);
+                    for id in sched.evict_finished() {
+                        sessions.remove(&id);
+                    }
+                }
+                Err(err) if is_all_workers_dead(&err) => {
+                    // No survivor can host any expert group: requeue every
+                    // active sequence (full token history becomes the new
+                    // prompt, remaining budget carries over) so nothing is
+                    // lost, record the step as degraded, and stop serving.
+                    let mut stub = DecodeStepMetrics {
+                        step,
+                        worker_deaths: self.health.total_deaths - deaths_before,
+                        degraded: true,
+                        worker_busy_s: vec![0.0; self.workers.len()],
+                        worker_slots: vec![0; self.workers.len()],
+                        ..Default::default()
+                    };
+                    let active: Vec<(u64, usize, usize)> = sched
+                        .active()
+                        .iter()
+                        .map(|s| (s.id, s.max_new_tokens, s.generated))
+                        .collect();
+                    for (id, max_new, generated) in active {
+                        let Some(sess) = sessions.remove(&id) else {
+                            sched.drop_active(id);
+                            faulted.insert(id);
+                            continue;
+                        };
+                        let mut tokens = sess.tokens;
+                        tokens.truncate(self.dims.seq_len.max(1));
+                        sched.requeue(
+                            Request::new(id, tokens)
+                                .with_max_new_tokens(max_new.saturating_sub(generated).max(1)),
+                        );
+                        stub.requeued_seqs += 1;
+                    }
+                    report.steps.push(stub);
+                    break;
+                }
+                Err(err) => match sequence_fault_id(&err) {
+                    Some(id) => {
+                        // Unrecoverable per-sequence state: evict the one
+                        // sequence, keep serving the rest (ADR 008).
+                        sessions.remove(&id);
+                        sched.drop_active(id);
+                        faulted.insert(id);
+                        report.steps.push(DecodeStepMetrics {
+                            step,
+                            worker_deaths: self.health.total_deaths - deaths_before,
+                            degraded: true,
+                            worker_busy_s: vec![0.0; self.workers.len()],
+                            worker_slots: vec![0; self.workers.len()],
+                            ..Default::default()
+                        });
+                    }
+                    None => return Err(err),
+                },
             }
         }
+        // Lost-sequence accounting over unique ids: everything admitted
+        // must be finished, still waiting (requeued), still active (step
+        // budget ran out), or explicitly evicted on a fault. Anything
+        // else silently vanished — the invariant the chaos CI job pins
+        // at zero (ADR 008).
+        let mut outstanding: std::collections::BTreeSet<u64> =
+            sched.admitted_order().iter().copied().collect();
+        for id in sched.finished_order() {
+            outstanding.remove(id);
+        }
+        for id in sched.waiting_ids() {
+            outstanding.remove(&id);
+        }
+        for s in sched.active() {
+            outstanding.remove(&s.id);
+        }
+        for id in &faulted {
+            outstanding.remove(id);
+        }
+        report.lost_seqs = outstanding.len() as u64;
         report.strategy = self.strategy.name().to_string();
         report.controller = self.controller.as_ref().map(|c| c.report(self.strategy));
         report.meta = self.report_meta("decode");
         Ok(report)
+    }
+
+    /// Out-of-cadence controller consultation after a worker death: the
+    /// step boundary is a legal layer-0 boundary, and the controller's
+    /// `note_worker_lost` may shed speculation/lookahead for the smaller
+    /// cluster (ADR 008).
+    fn consult_on_worker_loss(&mut self, boundary: usize) {
+        let Some(mut ctrl) = self.controller.take() else {
+            return;
+        };
+        let regime = self.current_regime();
+        if let Some(d) = ctrl.note_worker_lost(
+            boundary,
+            self.strategy,
+            self.speculative,
+            self.lookahead,
+            regime,
+        ) {
+            self.apply_decision(&d);
+        }
+        self.controller = Some(ctrl);
     }
 
     /// One continuous-batching step (see module docs for the pipeline).
@@ -592,22 +771,25 @@ impl Coordinator {
         }
 
         // Step workload in admission order: whole prompt for prefill
-        // sequences, one row for decoding sequences.
-        let workload: Vec<StepSeq> = sched
-            .active()
-            .iter()
-            .map(|s| {
-                let rows = match s.phase {
-                    SeqPhase::Prefill => sessions[&s.id].tokens.len(),
-                    _ => 1,
-                };
-                StepSeq {
-                    id: s.id,
-                    rows,
-                    prefill: s.phase == SeqPhase::Prefill,
+        // sequences, one row for decoding sequences. A missing session is
+        // a per-sequence fault (evict it), not a panic (ADR 008).
+        let mut workload: Vec<StepSeq> = Vec::with_capacity(sched.active().len());
+        for s in sched.active() {
+            let rows = match s.phase {
+                SeqPhase::Prefill => {
+                    let Some(sess) = sessions.get(&s.id) else {
+                        return Err(sequence_fault_err(s.id, "session missing"));
+                    };
+                    sess.tokens.len()
                 }
-            })
-            .collect();
+                _ => 1,
+            };
+            workload.push(StepSeq {
+                id: s.id,
+                rows,
+                prefill: s.phase == SeqPhase::Prefill,
+            });
+        }
 
         let mut metrics = DecodeStepMetrics {
             step,
@@ -621,11 +803,16 @@ impl Coordinator {
         let t0 = Instant::now();
         let mut hidden: Vec<HostTensor> = Vec::with_capacity(workload.len());
         for ws in &workload {
-            let sess = &sessions[&ws.id];
+            let Some(sess) = sessions.get(&ws.id) else {
+                return Err(sequence_fault_err(ws.id, "session missing"));
+            };
             let ids: Vec<i32> = if ws.prefill {
                 sess.tokens.iter().map(|&t| t as i32).collect()
             } else {
-                vec![*sess.tokens.last().expect("non-empty session") as i32]
+                let Some(&last) = sess.tokens.last() else {
+                    return Err(sequence_fault_err(ws.id, "empty session"));
+                };
+                vec![last as i32]
             };
             let n = ids.len();
             let ids = IntTensor::new(ids, vec![1, n]);
@@ -656,6 +843,7 @@ impl Coordinator {
 
         // ---- 3. unified per-layer pipeline ------------------------------
         let mut stage = StageMetrics::new(self.workers.len());
+        stage.degraded |= self.health.alive_count() < self.workers.len();
         {
             // Reborrow `sessions` so the lm-head stage below can use it
             // again after the pipeline releases the mode.
@@ -688,11 +876,10 @@ impl Coordinator {
                 .call("lm_head", &[In::T(&last), In::W("final.ln"), In::W("embed")])?
                 .remove(0);
             let token = sample_token(&logits.data, opts.temperature, rng);
-            sessions
-                .get_mut(&ws.id)
-                .expect("session exists")
-                .tokens
-                .push(token);
+            let Some(sess) = sessions.get_mut(&ws.id) else {
+                return Err(sequence_fault_err(ws.id, "session missing"));
+            };
+            sess.tokens.push(token);
             sched.record_token(ws.id);
         }
         metrics.lm_head_s = t0.elapsed().as_secs_f64();

@@ -51,6 +51,9 @@ pub struct TilePool {
     pub reuses: u64,
     /// Free buffers dropped by aging (idle > [`MAX_FREE_AGE`] ticks).
     pub aged_out: u64,
+    /// Buffers abandoned with a dead worker (ADR 008): shipped in a
+    /// dispatch whose reply never came back, so they can't be recycled.
+    pub lost: u64,
 }
 
 impl TilePool {

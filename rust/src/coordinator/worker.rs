@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::faults::{FaultAction, WorkerFaults};
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
 
 /// Work sent to a worker.
@@ -56,6 +57,10 @@ pub enum WorkerMsg {
     /// `Run`/`Prewarm` of the same expert is applied first and the replica
     /// re-uploads cold (the refetch the coordinator accounts).
     Evict { layer: usize, expert: usize },
+    /// Install a fault-injection script (ADR 008). Sent before any work
+    /// when `--inject-faults` / `MOE_GPS_FAULTS` is active; never sent
+    /// otherwise, so uninjected runs take the exact pre-ADR-008 path.
+    Faults(WorkerFaults),
     Shutdown,
 }
 
@@ -104,7 +109,9 @@ impl WorkerHandle {
     }
 
     pub fn send(&self, msg: WorkerMsg) {
-        // A dead worker surfaces as a recv error on the reply channel.
+        // A dead worker surfaces as a reply-deadline timeout in the
+        // pipeline's collectors (ADR 008), which mark it dead in the
+        // WorkerHealth registry and redispatch; sends to it are dropped.
         let _ = self.sender.send(msg);
     }
 }
@@ -163,6 +170,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                         });
                     }
                     WorkerMsg::Evict { .. } => {}
+                    WorkerMsg::Faults(_) => {}
                     WorkerMsg::Shutdown => break,
                 }
             }
@@ -170,8 +178,27 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
         }
     };
     let buckets = engine.manifest().ffn_buckets();
+    let mut faults = WorkerFaults::default();
 
     for msg in rx {
+        // Injected faults (ADR 008) trigger on countable ops — Run /
+        // Attention / Prewarm — before the op is processed: a killed
+        // worker exits without replying (its queue dies with it), a
+        // delayed worker stalls like a straggler, a dropped op is
+        // consumed without ever producing a reply.
+        if matches!(
+            msg,
+            WorkerMsg::Run { .. } | WorkerMsg::Attention { .. } | WorkerMsg::Prewarm { .. }
+        ) {
+            match faults.on_op() {
+                Some(FaultAction::Kill) => return,
+                Some(FaultAction::Delay(ms)) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                Some(FaultAction::Drop) => continue,
+                None => {}
+            }
+        }
         match msg {
             WorkerMsg::Run {
                 tag,
@@ -295,6 +322,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     engine.evict_weight(n);
                 }
             }
+            WorkerMsg::Faults(f) => faults = f,
             WorkerMsg::Shutdown => break,
         }
     }

@@ -130,6 +130,43 @@ impl Placement {
             .collect()
     }
 
+    /// Remove a failed GPU from the host set (ADR 008): its capacity
+    /// drops to zero so no rebalance ever places a replica there again,
+    /// its pairs are dropped, and any expert it was the *sole* host of is
+    /// re-homed onto the least-loaded surviving GPU (lowest index on
+    /// ties) so the every-expert-hosted invariant survives the death.
+    /// Returns the re-homed `(expert, gpu)` pairs — those replicas are
+    /// cold on their new host and upload on first use.
+    pub fn fail_gpu(&mut self, gpu: usize) -> Vec<(usize, usize)> {
+        if gpu >= self.n_gpus {
+            return Vec::new();
+        }
+        self.capacity[gpu] = 0;
+        let dropped: Vec<(usize, usize)> = self
+            .pairs
+            .iter()
+            .filter(|&&(_, g)| g == gpu)
+            .copied()
+            .collect();
+        for pair in &dropped {
+            self.pairs.remove(pair);
+        }
+        let mut rehomed = Vec::new();
+        for &(e, _) in &dropped {
+            if self.copies(e) > 0 {
+                continue;
+            }
+            let target = (0..self.n_gpus)
+                .filter(|&g| self.used_slots(g) < self.capacity[g])
+                .min_by_key(|&g| (self.used_slots(g), g));
+            if let Some(g) = target {
+                self.pairs.insert((e, g));
+                rehomed.push((e, g));
+            }
+        }
+        rehomed
+    }
+
     /// Every expert has ≥1 replica and every GPU is within capacity —
     /// the invariant property tests assert.
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -208,6 +245,36 @@ mod tests {
         after.add(3, 0);
         let moved = before.added_replicas(&after);
         assert_eq!(moved, vec![(0, 1), (3, 0)]);
+    }
+
+    #[test]
+    fn fail_gpu_rehomes_sole_hosted_experts() {
+        // experts 0,1 on gpu 0; 2,3 on 1; 4,5 on 2; 6,7 on 3.
+        let mut p = Placement::initial(8, 4, 4, 4);
+        p.add(0, 1); // expert 0 gains a replica elsewhere
+        let rehomed = p.fail_gpu(0);
+        assert_eq!(p.capacity(0), 0);
+        assert!(p.experts_on(0).is_empty());
+        // Expert 0 survived on its replica; expert 1 was sole-hosted and
+        // must be re-homed onto a survivor.
+        assert_eq!(p.copies(0), 1);
+        assert!(p.hosts(0, 1));
+        assert_eq!(rehomed.len(), 1);
+        assert_eq!(rehomed[0].0, 1);
+        assert!(rehomed[0].1 != 0);
+        p.check_invariants().unwrap();
+        // No rebalance can place on the dead gpu again.
+        assert!(!p.can_add(5, 0));
+    }
+
+    #[test]
+    fn fail_gpu_is_idempotent_and_bounds_checked() {
+        let mut p = Placement::initial(4, 2, 4, 2);
+        let first = p.fail_gpu(1);
+        assert!(!first.is_empty());
+        assert!(p.fail_gpu(1).is_empty(), "second failure is a no-op");
+        assert!(p.fail_gpu(99).is_empty(), "out of range tolerated");
+        p.check_invariants().unwrap();
     }
 
     #[test]

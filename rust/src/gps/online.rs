@@ -584,6 +584,11 @@ pub struct ServedReport {
     pub pinned: bool,
     /// SIMD dispatch tier the kernels ran under (None for old reports).
     pub simd_tier: Option<String>,
+    /// Worker deaths over the run (ADR 008; None for old reports).
+    pub worker_deaths: Option<u64>,
+    /// Rounds/steps served degraded — short-handed or mid-failover
+    /// (ADR 008; None for old reports).
+    pub degraded_samples: Option<u64>,
 }
 
 /// Parse a serve-report JSON file (see `ServeReport::to_json`). Fails
@@ -666,6 +671,13 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
             .and_then(Value::as_str)
             .filter(|s| !s.is_empty())
             .map(str::to_string),
+        // Fault-tolerance fields (ADR 008), equally lenient: pre-ADR-008
+        // reports lack them, which is distinct from a clean zero.
+        worker_deaths: v.get("worker_deaths").and_then(Value::as_f64).map(|x| x as u64),
+        degraded_samples: v
+            .get("degraded_samples")
+            .and_then(Value::as_f64)
+            .map(|x| x as u64),
     })
 }
 

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use moe_gps::coordinator::request::RequestGen;
 use moe_gps::coordinator::{
-    ControllerConfig, Coordinator, DecodeOptions, ServeStrategy, StrategyController,
+    ControllerConfig, Coordinator, DecodeOptions, FaultPlan, ServeStrategy, StrategyController,
 };
 use moe_gps::gps::select::recommend;
 use moe_gps::gps::{self, calibrate, CalibrationOptions, ServePhase};
@@ -122,6 +122,18 @@ USAGE: moe-gps <subcommand> [options]
                                 tune with --hysteresis N --margin F
                                 --window N --min-window N, price on
                                 --model/--system)
+                --inject-faults SPEC (ADR 008: deterministic fault
+                                injection — comma-separated
+                                kind[:worker]@op[xMS] scripts, kinds
+                                kill|delay|drop, e.g. `kill:1@3` or
+                                `delay@5x250`; MOE_GPS_FAULTS sets the
+                                same spec via the environment. Disabled =
+                                bitwise-identical serving)
+                --worker-timeout S (override the cost-model reply deadline
+                                with a fixed S seconds; lost replies past
+                                it retry with backoff, then the worker is
+                                declared dead and its groups fail over to
+                                surviving replicas)
                 --report F.json (write the serve report: measured
                                 constants, calibration check, controller
                                 decision trace — advise --from-serve input)]
@@ -134,7 +146,7 @@ USAGE: moe-gps <subcommand> [options]
   bench-validate [BENCH_serve.json] [--require-results
                 --forecast-report F.json --max-forecast-l1 B
                 --min-kernel-speedup X --baseline OLD.json
-                --max-regression F]
+                --max-regression F --chaos-report F.json]
                validate a serve-bench trajectory file against the
                moe-gps/serve-bench/v1 schema (the CI bench-smoke gate);
                with --forecast-report, additionally gate the realized
@@ -144,7 +156,10 @@ USAGE: moe-gps <subcommand> [options]
                forced-scalar file is reported, never silently passed);
                with --baseline, fail when serve_hotpath throughput
                regressed more than --max-regression (default 0.2) vs
-               the stored records
+               the stored records;
+               with --chaos-report, gate a fault-injected serve report
+               (ADR 008): at least one worker death must have been
+               injected AND zero sequences lost
 ",
         moe_gps::VERSION
     );
@@ -451,6 +466,17 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             served.pinned,
         );
     }
+    if served.worker_deaths.unwrap_or(0) > 0 || served.degraded_samples.unwrap_or(0) > 0 {
+        // ADR 008: the constants blend healthy and failover windows —
+        // timeouts, redispatch and re-uploads inflate transfer/compute
+        // terms, so the rendered map is pessimistic for a healthy fleet.
+        println!(
+            "  note: degraded run — {} worker death(s), {} degraded \
+             sample(s); prefer a fault-free report for capacity planning",
+            served.worker_deaths.unwrap_or(0),
+            served.degraded_samples.unwrap_or(0),
+        );
+    }
 
     // The guideline map under the measured constants, priced under the
     // regime the run actually served (overlap/speculative/memory-cap).
@@ -620,6 +646,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
              (no prewarm stream to budget)"
         );
     }
+    // ADR 008: deterministic fault injection (chaos testing) + the reply
+    // deadline override. With neither flag nor MOE_GPS_FAULTS set, serving
+    // output is bitwise identical to a fault-free build.
+    if let Some(spec) = args.opt("inject-faults") {
+        coord.set_fault_plan(&FaultPlan::parse(spec)?);
+    }
+    let worker_timeout = match args.opt("worker-timeout") {
+        Some(s) => Some(
+            s.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad --worker-timeout `{s}`: {e}"))?,
+        ),
+        None => None,
+    };
+    coord.set_worker_timeout(worker_timeout);
     // ADR 005: `--adaptive` installs the online strategy controller — at
     // replan boundaries it re-prices DOP/TEP/speculative on constants
     // calibrated from the measured serving metrics (rolling window) and
@@ -827,6 +867,17 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
         })?;
         let (_, msg) = moe_gps::bench::emit::validate_kernel_speedups(&path, bound)?;
         println!("{}: {msg}", path.display());
+    }
+    // ADR 008: chaos gate — a fault-injected serve report must record at
+    // least one worker death and zero lost sequences.
+    if let Some(report) = args.opt("chaos-report") {
+        let (deaths, _) = moe_gps::bench::emit::validate_chaos_report(
+            std::path::Path::new(report),
+        )?;
+        println!(
+            "{report}: chaos gate passed — {deaths} worker death(s), \
+             0 sequences lost"
+        );
     }
     // ADR 007: stored-baseline regression gate for serve_hotpath.
     if let Some(baseline) = args.opt("baseline") {
