@@ -1,0 +1,143 @@
+//! Bench: **zero-copy data plane** (ADR 009) — what the dispatch/combine
+//! path actually moves. Micro legs price the two mechanisms against the
+//! per-group plane they replaced (`Arc` share vs deep clone for the
+//! attention fan-out, pooled `gather_rows_into` vs fresh-alloc gather for
+//! the slab build); the E2E legs serve real rounds and report copied
+//! GB/s and dispatch messages per token from the ADR 009 counters.
+//! Results append to `BENCH_serve.json` (schema `moe-gps/serve-bench/v1`)
+//! and the CI bench-smoke copy gate validates the fraction the serve
+//! report records.
+
+use std::sync::Arc;
+
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, ServeStrategy};
+use moe_gps::runtime::HostTensor;
+use moe_gps::util::rng::Rng;
+
+/// The serving hot-path acceptance config (ISSUE 3): 8 virtual GPUs.
+const E2E_WORKERS: usize = 8;
+
+fn main() {
+    group("fan-out: Arc share vs deep clone (8 workers, 256×256 f32)");
+    let b = Bencher::default();
+    let mut rng = Rng::new(9);
+    let hidden = HostTensor::new(
+        (0..256 * 256).map(|_| rng.normal() as f32).collect(),
+        vec![256, 256],
+    );
+    let batch_bytes = (hidden.data.len() * 4) as f64;
+    let shared = Arc::new(hidden.clone());
+    let s = b.run("share_arc_x8", || {
+        let fans: Vec<Arc<HostTensor>> = (0..8).map(|_| shared.clone()).collect();
+        black_box(fans.len())
+    });
+    let share_s = s.median_s;
+    let s = b.run("deep_clone_x8", || {
+        let fans: Vec<HostTensor> = (0..8).map(|_| hidden.clone()).collect();
+        black_box(fans.len())
+    });
+    if s.median_s > 0.0 && share_s > 0.0 {
+        println!(
+            "    sharing beats copying {:.0}× ({:.2} GB/s of clone traffic avoided)",
+            s.median_s / share_s,
+            8.0 * batch_bytes / s.median_s / 1e9
+        );
+    }
+
+    group("slab build: pooled gather_rows_into vs fresh-alloc gather");
+    let rows: Vec<usize> = (0..200).map(|i| (i * 7) % 256).collect();
+    let gather_bytes = (rows.len() * 256 * 4) as f64;
+    let mut slab: Vec<f32> = Vec::with_capacity(rows.len() * 256);
+    let s = b.run("gather_into_slab_200_rows_d256", || {
+        slab.clear();
+        hidden.gather_rows_into(black_box(&rows), &mut slab);
+        slab.len()
+    });
+    if s.median_s > 0.0 {
+        println!("    gather bandwidth: {:.2} GB/s", gather_bytes / s.median_s / 1e9);
+    }
+    b.run("gather_fresh_alloc_200_rows_d256", || {
+        hidden.gather_rows(black_box(&rows)).rows()
+    });
+
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\nno AOT artifacts — E2E rounds run the synthetic tiny model");
+    }
+
+    group(&format!(
+        "E2E data plane ({E2E_WORKERS} virtual GPUs, 2 seqs/round)"
+    ));
+    let quick = Bencher::quick();
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
+    // (bench key, strategy, parallel attention fan-out)
+    let legs = [
+        ("dispatch_plane/round", ServeStrategy::NoPrediction, false),
+        ("dispatch_plane/round", ServeStrategy::DistributionOnly, false),
+        ("dispatch_plane/fanout", ServeStrategy::DistributionOnly, true),
+    ];
+    for (bench, strategy, fan_out) in legs {
+        let mut coord = Coordinator::new(&artifacts, E2E_WORKERS, strategy).unwrap();
+        coord.parallel_attention = fan_out;
+        let mut gen = RequestGen::new(11, coord.vocab());
+        let max_len = coord.seq_len();
+        // Warmup: compile + teach estimators + warm the tile pool.
+        let warm: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
+        coord.serve_round(&warm).unwrap();
+        let reqs: Vec<_> = (0..2).map(|_| gen.request_varlen(64, max_len)).collect();
+        let label = format!(
+            "{}_{}{}",
+            bench.rsplit('/').next().unwrap(),
+            strategy.name(),
+            if fan_out { "_fanout" } else { "" }
+        );
+        let summary = quick.bench(&label, || {
+            coord.serve_round(black_box(&reqs)).unwrap().0.n_tokens
+        });
+        summary.print();
+        // Data-plane stats from one measured round.
+        let (m, _) = coord.serve_round(&reqs).unwrap();
+        let tokens_per_s = if summary.median_s > 0.0 {
+            m.n_tokens as f64 / summary.median_s
+        } else {
+            0.0
+        };
+        let copied_gbs = if summary.median_s > 0.0 {
+            m.bytes_copied as f64 / summary.median_s / 1e9
+        } else {
+            0.0
+        };
+        let msgs_per_token = if m.n_tokens > 0 {
+            m.ffn_messages as f64 / m.n_tokens as f64
+        } else {
+            0.0
+        };
+        println!(
+            "    data plane: {:.1} tok/s | copied {} ({copied_gbs:.2} GB/s) | shared {} \
+             | {} RunBatch msgs ({msgs_per_token:.3}/token, {} slots)",
+            tokens_per_s,
+            moe_gps::util::human_bytes(m.bytes_copied as f64),
+            moe_gps::util::human_bytes(m.bytes_shared as f64),
+            m.ffn_messages,
+            m.n_slots,
+        );
+        records.push(ServeBenchRecord {
+            bench: bench.into(),
+            strategy: strategy.name().into(),
+            lookahead: false,
+            tokens_per_s,
+            gbs: Some(copied_gbs),
+            msgs_per_token: Some(msgs_per_token),
+            ..Default::default()
+        });
+    }
+
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("\nWARN: could not write {}: {err}", path.display()),
+    }
+}

@@ -166,6 +166,10 @@ pub mod emit {
         pub gflops: Option<f64>,
         /// Memory-traffic rate for kernel records (ADR 007).
         pub gbs: Option<f64>,
+        /// Leader→worker dispatch messages per served token (ADR 009) —
+        /// the coalescing figure the zero-copy data plane optimises;
+        /// absent on kernel records and pre-ADR-009 files.
+        pub msgs_per_token: Option<f64>,
     }
 
     impl ServeBenchRecord {
@@ -189,6 +193,9 @@ pub mod emit {
             if let Some(g) = self.gbs {
                 v.set("gbs", Value::Num(g));
             }
+            if let Some(m) = self.msgs_per_token {
+                v.set("msgs_per_token", Value::Num(m));
+            }
             v
         }
 
@@ -206,6 +213,8 @@ pub mod emit {
                 // simply lack them.
                 gflops: v.get("gflops").and_then(Value::as_f64),
                 gbs: v.get("gbs").and_then(Value::as_f64),
+                // Absent on kernel records and pre-ADR-009 files.
+                msgs_per_token: v.get("msgs_per_token").and_then(Value::as_f64),
             })
         }
     }
@@ -350,6 +359,44 @@ pub mod emit {
             path.display()
         );
         Ok((deaths, lost))
+    }
+
+    /// Copy-accounting gate (ADR 009): reads a serve report and asserts
+    /// the data plane's deep-copied fraction — bytes_copied /
+    /// (bytes_copied + bytes_shared) — is at most `max_frac`. Missing
+    /// keys mean a pre-ADR-009 report and are an error (the gate must
+    /// measure something); a plane that moved zero bytes passes with
+    /// fraction 0. Returns the measured fraction.
+    pub fn validate_copied_frac(path: &Path, max_frac: f64) -> anyhow::Result<f64> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        let field = |name: &str| -> anyhow::Result<f64> {
+            v.get(name).and_then(Value::as_f64).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: `{name}` missing — not a copy-accounting serve \
+                     report (serve with --report on this build)",
+                    path.display()
+                )
+            })
+        };
+        let copied = field("bytes_copied")?;
+        let shared = field("bytes_shared")?;
+        anyhow::ensure!(
+            copied.is_finite() && copied >= 0.0 && shared.is_finite() && shared >= 0.0,
+            "{}: invalid copy accounting (copied={copied}, shared={shared})",
+            path.display()
+        );
+        let total = copied + shared;
+        let frac = if total > 0.0 { copied / total } else { 0.0 };
+        anyhow::ensure!(
+            frac <= max_frac,
+            "{}: data plane copied fraction {frac:.4} exceeds bound {max_frac} \
+             — a zero-copy path regressed to deep copies (ADR 009)",
+            path.display()
+        );
+        Ok(frac)
     }
 
     /// Kernel-speedup gate (ADR 007): for every `kernels/…dot…` or
@@ -690,6 +737,36 @@ pub mod emit {
             assert!(validate_forecast_error(&path, 0.5).is_err());
             std::fs::write(&path, "{\"tokens_per_s\": 9.0}").unwrap();
             assert!(validate_forecast_error(&path, 0.5).is_err());
+            let _ = std::fs::remove_file(&path);
+        }
+
+        #[test]
+        fn copy_gate_bounds_copied_fraction() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_copy_gate_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            assert!(validate_copied_frac(&path, 0.5).is_err(), "missing file");
+
+            // copied/(copied+shared) = 0.25: inside 0.5, outside 0.1.
+            std::fs::write(&path, "{\"bytes_copied\": 256, \"bytes_shared\": 768}")
+                .unwrap();
+            let frac = validate_copied_frac(&path, 0.5).unwrap();
+            assert!((frac - 0.25).abs() < 1e-15);
+            assert!(validate_copied_frac(&path, 0.1).is_err(), "over bound");
+
+            // An idle plane (nothing moved) passes at fraction 0.
+            std::fs::write(&path, "{\"bytes_copied\": 0, \"bytes_shared\": 0}")
+                .unwrap();
+            assert_eq!(validate_copied_frac(&path, 0.0).unwrap(), 0.0);
+
+            // Pre-ADR-009 report (keys absent): the gate must fail rather
+            // than silently pass a report that measured nothing.
+            std::fs::write(&path, "{\"tokens_per_s\": 9.0}").unwrap();
+            assert!(validate_copied_frac(&path, 0.5).is_err());
+            std::fs::write(&path, "{\"bytes_copied\": 10}").unwrap();
+            assert!(validate_copied_frac(&path, 0.5).is_err(), "half-missing");
             let _ = std::fs::remove_file(&path);
         }
     }

@@ -332,7 +332,7 @@ impl StrategyController {
                 new_lookahead.clamp(self.cfg.min_lookahead, self.cfg.max_lookahead);
             // `upload_bytes > 0` rather than a measured bandwidth: a
             // no-lookahead window moves bytes only as cold uploads inside
-            // `Run`, which carry no transfer-stall seconds — exactly the
+            // `RunBatch`, which carry no transfer-stall seconds — exactly the
             // case where deepening helps most.
             if measured.upload_bytes > 0.0
                 && measured.hidden_frac < 0.5

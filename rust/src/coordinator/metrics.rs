@@ -100,7 +100,8 @@ pub struct RoundMetrics {
     /// weights — ADR 002).
     pub hidden_upload_bytes: u64,
     /// Transfer bytes that landed on the critical path: prewarm acks the
-    /// FFN phase had to block on, plus cold uploads inside `WorkerMsg::Run`.
+    /// FFN phase had to block on, plus cold uploads inside
+    /// `WorkerMsg::RunBatch`.
     pub exposed_upload_bytes: u64,
     /// Worker seconds spent on transfers that were overlapped (hidden).
     pub hidden_transfer_s: f64,
@@ -170,6 +171,17 @@ pub struct RoundMetrics {
     /// The round ran on a degraded fleet: a worker died during it, or
     /// fewer workers than configured were alive when it started.
     pub degraded: bool,
+    /// Host bytes deep-copied on the coordinator↔worker data plane
+    /// (ADR 009): only the FFN gather packing routed rows into arena
+    /// slabs — steady state is exactly Σ n_slots × d_model × 4.
+    pub bytes_copied: u64,
+    /// Host bytes moved by reference instead of copied (ADR 009): the
+    /// `Arc`-shared attention fan-out batches, counted once per
+    /// receiving worker.
+    pub bytes_shared: u64,
+    /// Coalesced `WorkerMsg::RunBatch` messages sent — one per
+    /// (layer wave, worker with assigned groups) under ADR 009.
+    pub ffn_messages: u64,
 }
 
 impl RoundMetrics {
@@ -235,6 +247,42 @@ impl FaultSummary {
             self.requeued_seqs,
             self.degraded_samples,
             self.lost_seqs,
+        )
+    }
+}
+
+/// Data-plane copy accounting rolled up over a run (ADR 009): the
+/// numbers the serve report exposes for sim transfer pricing, `advise
+/// --from-serve`, and the `bench-validate --max-copied-frac` gate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CopyStats {
+    /// Host bytes deep-copied (FFN slab gather only in steady state).
+    pub bytes_copied: u64,
+    /// Host bytes moved by `Arc` reference (attention fan-out).
+    pub bytes_shared: u64,
+    /// Coalesced `WorkerMsg::RunBatch` messages sent.
+    pub ffn_messages: u64,
+}
+
+impl CopyStats {
+    /// Fraction of data-plane bytes that were deep copies — the gated
+    /// number; 0.0 when the plane moved nothing.
+    pub fn copied_frac(&self) -> f64 {
+        let total = self.bytes_copied + self.bytes_shared;
+        if total == 0 {
+            0.0
+        } else {
+            self.bytes_copied as f64 / total as f64
+        }
+    }
+
+    fn summary_suffix(&self) -> String {
+        format!(
+            "  copied={} shared={} (copied frac={:.3}) ffn msgs={}",
+            crate::util::human_bytes(self.bytes_copied as f64),
+            crate::util::human_bytes(self.bytes_shared as f64),
+            self.copied_frac(),
+            self.ffn_messages,
         )
     }
 }
@@ -415,6 +463,15 @@ impl ServeReport {
         }
     }
 
+    /// Run-level data-plane copy accounting (ADR 009).
+    pub fn copy_stats(&self) -> CopyStats {
+        CopyStats {
+            bytes_copied: self.rounds.iter().map(|r| r.bytes_copied).sum(),
+            bytes_shared: self.rounds.iter().map(|r| r.bytes_shared).sum(),
+            ffn_messages: self.rounds.iter().map(|r| r.ffn_messages).sum(),
+        }
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema: run meta +
     /// aggregates + per-round calibration samples + the fitted measured
     /// constants + the fit-vs-holdout check + the controller trace — the
@@ -428,6 +485,7 @@ impl ServeReport {
             self.total_tokens(),
             self.mean_forecast_l1(),
             &self.fault_summary(),
+            &self.copy_stats(),
             &samples,
             self.controller.as_ref(),
         )
@@ -460,6 +518,7 @@ impl ServeReport {
             crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         );
+        s.push_str(&self.copy_stats().summary_suffix());
         if let Some(hit) = self.realized_topk_hit_rate() {
             s.push_str(&format!("  pred top-k hit={:.3}", hit));
         }
@@ -508,7 +567,7 @@ pub struct DecodeStepMetrics {
     /// Transfer bytes overlapped by the lookahead prewarm (ADR 002).
     pub hidden_upload_bytes: u64,
     /// Transfer bytes on the critical path (blocked-on prewarms + cold
-    /// uploads inside `WorkerMsg::Run`).
+    /// uploads inside `WorkerMsg::RunBatch`).
     pub exposed_upload_bytes: u64,
     /// Worker seconds spent on overlapped transfers.
     pub hidden_transfer_s: f64,
@@ -563,6 +622,13 @@ pub struct DecodeStepMetrics {
     pub requeued_seqs: usize,
     /// The step ran on a degraded fleet (see [`RoundMetrics::degraded`]).
     pub degraded: bool,
+    /// Host bytes deep-copied on the data plane (ADR 009 — see
+    /// [`RoundMetrics::bytes_copied`]).
+    pub bytes_copied: u64,
+    /// Host bytes moved by `Arc` reference instead of copied (ADR 009).
+    pub bytes_shared: u64,
+    /// Coalesced `WorkerMsg::RunBatch` messages sent this step.
+    pub ffn_messages: u64,
 }
 
 impl DecodeStepMetrics {
@@ -781,6 +847,15 @@ impl DecodeReport {
         }
     }
 
+    /// Run-level data-plane copy accounting (ADR 009).
+    pub fn copy_stats(&self) -> CopyStats {
+        CopyStats {
+            bytes_copied: self.steps.iter().map(|s| s.bytes_copied).sum(),
+            bytes_shared: self.steps.iter().map(|s| s.bytes_shared).sum(),
+            ffn_messages: self.steps.iter().map(|s| s.ffn_messages).sum(),
+        }
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema (see
     /// [`ServeReport::to_json`]).
     pub fn to_json(&self) -> Value {
@@ -792,6 +867,7 @@ impl DecodeReport {
             self.total_decode_tokens(),
             self.mean_forecast_l1(),
             &self.fault_summary(),
+            &self.copy_stats(),
             &samples,
             self.controller.as_ref(),
         )
@@ -825,6 +901,7 @@ impl DecodeReport {
             crate::util::human_bytes(self.total_refetch_upload_bytes() as f64),
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         );
+        s.push_str(&self.copy_stats().summary_suffix());
         if let Some(hit) = self.realized_topk_hit_rate() {
             s.push_str(&format!("  pred top-k hit={:.3}", hit));
         }
@@ -870,6 +947,7 @@ fn mean_forecast_l1(per_window: impl Iterator<Item = (f64, usize)>) -> Option<f6
 /// the measured constants, and the first-half-fit / second-half-holdout
 /// check quantifies how well the fitted cost model predicts throughput it
 /// did not see (the CI drift gate's number).
+#[allow(clippy::too_many_arguments)]
 fn report_json(
     meta: &ReportMeta,
     strategy: &str,
@@ -877,6 +955,7 @@ fn report_json(
     tokens: usize,
     forecast_l1: Option<f64>,
     faults: &FaultSummary,
+    copy: &CopyStats,
     samples: &[WindowSample],
     controller: Option<&ControllerReport>,
 ) -> Value {
@@ -915,6 +994,12 @@ fn report_json(
             Value::Num(faults.degraded_samples as f64),
         )
         .set("lost_seqs", Value::Num(faults.lost_seqs as f64))
+        // Data-plane copy accounting (ADR 009): root-level additive keys
+        // the sim's transfer pricing, `advise --from-serve`, and the
+        // `bench-validate --max-copied-frac` gate read.
+        .set("bytes_copied", Value::Num(copy.bytes_copied as f64))
+        .set("bytes_shared", Value::Num(copy.bytes_shared as f64))
+        .set("ffn_messages", Value::Num(copy.ffn_messages as f64))
         .set(
             "measured",
             match cal.constants() {
@@ -1258,5 +1343,57 @@ mod tests {
         assert_eq!(serve.fault_summary().worker_deaths, 2);
         assert_eq!(serve.fault_summary().degraded_samples, 1);
         assert!(serve.summary().contains("faults: deaths=2"));
+    }
+
+    #[test]
+    fn copy_stats_aggregate_and_reach_the_report_json() {
+        // ADR 009: bytes_copied / bytes_shared / ffn_messages sum over
+        // rounds (steps), surface in the summary line, and land as
+        // root-level keys of the serve-report JSON.
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![
+                RoundMetrics {
+                    bytes_copied: 256,
+                    bytes_shared: 768,
+                    ffn_messages: 4,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    bytes_copied: 0,
+                    bytes_shared: 1024,
+                    ffn_messages: 2,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let c = serve.copy_stats();
+        assert_eq!(c.bytes_copied, 256);
+        assert_eq!(c.bytes_shared, 1792);
+        assert_eq!(c.ffn_messages, 6);
+        assert!((c.copied_frac() - 256.0 / 2048.0).abs() < 1e-12);
+        assert!(serve.summary().contains("ffn msgs=6"));
+        let json = serve.to_json().to_string_compact();
+        assert!(json.contains("\"bytes_copied\""));
+        assert!(json.contains("\"bytes_shared\""));
+        assert!(json.contains("\"ffn_messages\""));
+
+        // An idle plane divides to zero, not NaN.
+        assert_eq!(CopyStats::default().copied_frac(), 0.0);
+
+        let decode = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![DecodeStepMetrics {
+                bytes_copied: 64,
+                bytes_shared: 192,
+                ffn_messages: 3,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert_eq!(decode.copy_stats().bytes_copied, 64);
+        assert!((decode.copy_stats().copied_frac() - 0.25).abs() < 1e-12);
+        assert!(decode.summary().contains("ffn msgs=3"));
     }
 }

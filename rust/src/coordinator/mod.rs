@@ -42,7 +42,7 @@ pub use controller::{
     ControllerConfig, ControllerReport, Decision, DecisionRecord, StrategyController,
 };
 pub use faults::{FaultPlan, WorkerHealth};
-pub use metrics::{DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
+pub use metrics::{CopyStats, DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
 pub use request::Request;
 pub use residency::ResidencyManager;
 pub use scheduler::Scheduler;

@@ -32,7 +32,7 @@
 //! actually routed work to — warming the rest of the placement never
 //! barriers the pipeline — and every transferred byte is accounted as
 //! *hidden* (ack arrived before any dispatch needed it) or *exposed* (the
-//! FFN phase had to block, or the worker uploaded cold inside `Run`) —
+//! FFN phase had to block, or the worker uploaded cold inside `RunBatch`) —
 //! the split `metrics.rs` reports and `sim/` prices (`lookahead_overlap`).
 //! With `parallel_attention` on, prewarms are issued *after* the
 //! attention fan-out instead, so transfers queue behind attention work on
@@ -64,23 +64,31 @@
 //! (LPT seeded with the speculative load so repair work avoids the busy
 //! hosts).
 //!
-//! **Zero-alloc dispatch** (ADR 003): gather → pad → send → scatter run
-//! on pooled tile buffers ([`super::tile_pool::TilePool`]); the worker
-//! reply path returns both the input tile and the FFN output buffer, so
-//! steady-state serving performs no per-layer tile allocation
-//! (`metrics.rs` counts allocs vs reuses; `tests/zero_alloc_dispatch.rs`
-//! pins the invariant).
+//! **Zero-copy data plane** (ADR 009, extending the zero-alloc dispatch
+//! of ADR 003): the attention fan-out ships one `Arc`'d hidden batch to
+//! every worker instead of per-worker deep copies; each layer wave's FFN
+//! groups coalesce into a single [`WorkerMsg::RunBatch`] per assigned
+//! worker, backed by one contiguous [`super::tile_pool::TilePool`] arena
+//! slab with bucket-padded per-group row offsets — O(alive workers)
+//! messages per layer, not O(groups); and the combine stage reads each
+//! slot's output row straight out of the reply buffers (no intermediate
+//! scatter copy). The reply returns the slab and the per-group output
+//! buffers for pool recycling, so steady-state serving performs no
+//! per-layer tile allocation (`metrics.rs` counts allocs vs reuses plus
+//! `bytes_copied`/`bytes_shared`; `tests/zero_alloc_dispatch.rs` and
+//! `tests/data_plane.rs` pin the invariants).
 //!
-//! **Determinism contract**: the combine stage buffers every expert-FFN
-//! output row and accumulates `gate · out` in *global slot order*. Each
-//! slot's FFN row depends only on its own activation row (the reference
-//! backend's matmuls are row-independent, and bucket padding rows are
-//! zero), so the final hidden states are bitwise independent of reply
-//! arrival order, dispatch grouping, prediction strategy, lookahead, and
-//! speculation — the property `tests/pipeline_parity.rs` pins down.
+//! **Determinism contract**: the combine stage accumulates `gate · out`
+//! in *global slot order*, reading each slot's row from its batch reply.
+//! Each slot's FFN row depends only on its own activation row (the
+//! reference backend's matmuls are row-independent, and bucket padding
+//! rows are zero), so the final hidden states are bitwise independent of
+//! reply arrival order, dispatch grouping, batching, prediction strategy,
+//! lookahead, and speculation — the property `tests/pipeline_parity.rs`
+//! pins down.
 
 use std::collections::{BTreeMap, HashSet};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -91,7 +99,7 @@ use super::placement_mgr::LayerPlan;
 use super::residency::ResidencyManager;
 use super::router::{expert_counts, route_sequence, Slot};
 use super::server::{Coordinator, SeqSession, ServeStrategy, StepSeq};
-use super::worker::{WorkerHandle, WorkerMsg, WorkerResult};
+use super::worker::{BatchGroup, WorkerHandle, WorkerMsg, WorkerResult};
 use crate::duplication::dispatch::{dispatch_tokens, dispatch_with_quota};
 use crate::duplication::Placement;
 use crate::runtime::bucket::split_into_buckets;
@@ -119,7 +127,7 @@ pub struct StageMetrics {
     /// Bytes whose transfer completed under the lookahead window.
     pub hidden_upload_bytes: u64,
     /// Bytes transferred on the critical path (blocked-on prewarms plus
-    /// cold uploads inside `WorkerMsg::Run`).
+    /// cold uploads inside `WorkerMsg::RunBatch`).
     pub exposed_upload_bytes: u64,
     /// Worker seconds spent on overlapped transfers.
     pub hidden_transfer_s: f64,
@@ -175,6 +183,20 @@ pub struct StageMetrics {
     /// The stage ran on a degraded fleet (a death occurred, or fewer
     /// workers than configured were alive).
     pub degraded: bool,
+    /// Host bytes deep-copied on the coordinator↔worker data plane
+    /// (ADR 009): today only the FFN gather that packs routed rows into
+    /// arena slabs — the attention fan-out and the combine read-back are
+    /// copy-free, so in steady state this is exactly
+    /// `n_slots × d_model × 4`.
+    pub bytes_copied: u64,
+    /// Host bytes moved by reference instead of copied (ADR 009): the
+    /// `Arc`-shared hidden batches of the attention fan-out, counted once
+    /// per receiving worker (what the pre-ADR-009 plane deep-copied).
+    pub bytes_shared: u64,
+    /// Coalesced `RunBatch` messages sent (ADR 009): exactly one per
+    /// (layer wave, worker with assigned groups) — O(alive workers) per
+    /// layer, not O(groups).
+    pub ffn_messages: u64,
     skews: Vec<f64>,
     share_l1s: Vec<f64>,
 }
@@ -212,6 +234,9 @@ impl StageMetrics {
             retry_count: 0,
             prewarm_timeouts: 0,
             degraded: false,
+            bytes_copied: 0,
+            bytes_shared: 0,
+            ffn_messages: 0,
             skews: Vec::new(),
             share_l1s: Vec::new(),
         }
@@ -260,6 +285,9 @@ impl StageMetrics {
         retry_count: &mut u64,
         prewarm_timeouts: &mut u64,
         degraded: &mut bool,
+        bytes_copied: &mut u64,
+        bytes_shared: &mut u64,
+        ffn_messages: &mut u64,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -307,6 +335,9 @@ impl StageMetrics {
         // Degraded is a latch, not a flow: once any stage of the window
         // ran degraded, the whole window is degraded.
         *degraded |= self.degraded;
+        *bytes_copied += self.bytes_copied;
+        *bytes_shared += self.bytes_shared;
+        *ffn_messages += self.ffn_messages;
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -341,6 +372,9 @@ impl StageMetrics {
             &mut m.retry_count,
             &mut m.prewarm_timeouts,
             &mut m.degraded,
+            &mut m.bytes_copied,
+            &mut m.bytes_shared,
+            &mut m.ffn_messages,
         );
     }
 
@@ -376,6 +410,9 @@ impl StageMetrics {
             &mut m.retry_count,
             &mut m.prewarm_timeouts,
             &mut m.degraded,
+            &mut m.bytes_copied,
+            &mut m.bytes_shared,
+            &mut m.ffn_messages,
         );
     }
 }
@@ -818,14 +855,23 @@ impl Coordinator {
             return Err(all_workers_dead_err());
         }
         let (attn_tx, attn_rx) = mpsc::channel::<WorkerResult>();
+        // Read-shared fan-out (ADR 009): each hidden batch moves into an
+        // `Arc` once — every send (including straggler resends) clones the
+        // pointer, never the rows. `hidden[i]` holds an allocation-free
+        // placeholder until its reply rebuilds it from the worker output.
+        let xs: Vec<Arc<HostTensor>> = hidden
+            .iter_mut()
+            .map(|h| Arc::new(std::mem::replace(h, HostTensor::empty())))
+            .collect();
         let mut owner: Vec<usize> = Vec::with_capacity(hidden.len());
-        for (seq_idx, h) in hidden.iter().enumerate() {
+        for (seq_idx, x) in xs.iter().enumerate() {
             let worker = alive[seq_idx % alive.len()];
             owner.push(worker);
+            metrics.bytes_shared += (x.data.len() * 4) as u64;
             self.workers[worker].send(WorkerMsg::Attention {
                 tag: seq_idx as u64,
                 layer,
-                x: h.clone(),
+                x: x.clone(),
                 reply: attn_tx.clone(),
             });
         }
@@ -848,8 +894,7 @@ impl Coordinator {
                     received += 1;
                     waits = 0;
                     self.health.observe_op(r.exec_s);
-                    let shape = hidden[tag].shape.clone();
-                    hidden[tag] = HostTensor::new(r.out, shape);
+                    hidden[tag] = HostTensor::new(r.out, xs[tag].shape.clone());
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     metrics.retry_count += 1;
@@ -878,10 +923,13 @@ impl Coordinator {
                         let worker = alive[i % alive.len()];
                         owner[tag] = worker;
                         metrics.redispatched_slots += 1;
+                        // The resend shares the same `Arc` — `hidden[tag]`
+                        // is still the placeholder until the reply lands.
+                        metrics.bytes_shared += (xs[tag].data.len() * 4) as u64;
                         self.workers[worker].send(WorkerMsg::Attention {
                             tag: tag as u64,
                             layer,
-                            x: hidden[tag].clone(),
+                            x: xs[tag].clone(),
                             reply: attn_tx.clone(),
                         });
                     }
@@ -925,63 +973,102 @@ impl Coordinator {
         Ok((normed, slots))
     }
 
-    /// Gather one (worker, expert) group's slots into bucket-padded tiles
-    /// (pooled buffers — zero steady-state allocation, ADR 003) and ship
-    /// them as `WorkerMsg::Run`.
-    fn send_ffn_group(
+    /// Coalesce every (worker, expert) group of one dispatch wave into a
+    /// single [`WorkerMsg::RunBatch`] per worker (ADR 009): each group's
+    /// slots gather into bucket-padded tiles laid back-to-back in one
+    /// contiguous pooled arena slab, so the wave costs one channel send
+    /// and one worker wakeup per *assigned worker* instead of one per
+    /// group. `slot_src[si]` records (tag, group index, row) for every
+    /// dispatched slot — the combine stage reads output rows through it,
+    /// and a redispatch after a death simply overwrites it.
+    #[allow(clippy::too_many_arguments)]
+    fn send_ffn_batches(
         &mut self,
         layer: usize,
-        worker: usize,
-        expert: usize,
-        slot_indices: &[usize],
+        groups: &BTreeMap<(usize, usize), Vec<usize>>,
         slots: &[Slot],
         normed: &[HostTensor],
         reply_tx: &mpsc::Sender<WorkerResult>,
         msg_tag: &mut u64,
-        group_slots: &mut BTreeMap<u64, Vec<usize>>,
-        inflight: &mut BTreeMap<u64, (usize, usize)>,
+        slot_src: &mut [(u64, usize, usize)],
+        inflight: &mut BTreeMap<u64, (usize, Vec<(usize, Vec<usize>)>)>,
         outstanding: &mut usize,
         metrics: &mut StageMetrics,
     ) {
         let d = self.dims.d_model;
-        // Residency (ADR 004): dispatching to this (worker, layer, expert)
-        // makes (or keeps) its replica resident — touch the LRU stamp, and
-        // if the pair is cold the admission may evict LRU replicas of
-        // unpinned layers to hold the cap. Evict messages are enqueued
-        // before this group's Run, so the FIFO worker frees memory first.
-        let admission = self.residency.admit(worker, layer, expert);
-        for (victim_layer, victim_expert) in admission.evicted {
-            self.workers[worker].send(WorkerMsg::Evict {
-                layer: victim_layer,
-                expert: victim_expert,
-            });
+        // Regroup the (worker, expert)-keyed map per worker. BTreeMap
+        // iteration keeps expert order deterministic within each batch.
+        let mut by_worker: BTreeMap<usize, Vec<(usize, &[usize])>> = BTreeMap::new();
+        for ((worker, expert), slot_indices) in groups {
+            by_worker
+                .entry(*worker)
+                .or_default()
+                .push((*expert, slot_indices.as_slice()));
         }
-        // Oversized groups split across bucket-sized chunks; each chunk
-        // gathers straight into a pooled tile (no intermediate group
-        // tensor), with the padding rows zero-filled explicitly so the
-        // pooled path is bitwise identical to fresh allocation.
-        let mut offset = 0usize;
-        for (chunk, bucket) in split_into_buckets(&self.buckets, slot_indices.len()) {
-            let mut buf = self.tiles.take(bucket * d);
-            for &si in &slot_indices[offset..offset + chunk] {
-                let slot = &slots[si];
-                buf.extend_from_slice(&normed[slot.seq_idx].row(slot.token_idx));
+        for (worker, expert_groups) in by_worker {
+            // Residency (ADR 004): dispatching makes (or keeps) every
+            // batched (worker, layer, expert) replica resident — touch the
+            // LRU stamps first, and enqueue any capacity evictions before
+            // the batch so the FIFO worker frees memory before the cold
+            // uploads the batch triggers.
+            for &(expert, _) in &expert_groups {
+                let admission = self.residency.admit(worker, layer, expert);
+                for (victim_layer, victim_expert) in admission.evicted {
+                    self.workers[worker].send(WorkerMsg::Evict {
+                        layer: victim_layer,
+                        expert: victim_expert,
+                    });
+                }
             }
-            buf.resize(bucket * d, 0.0);
+            // Lay the batch out: oversized groups split across
+            // bucket-sized chunks exactly as before coalescing, each chunk
+            // becoming one bucket-padded tile at a fixed slab row offset.
+            let mut batch_groups: Vec<BatchGroup> = Vec::new();
+            let mut meta_groups: Vec<(usize, Vec<usize>)> = Vec::new();
+            let mut total_rows = 0usize;
+            for &(expert, slot_indices) in &expert_groups {
+                let mut offset = 0usize;
+                for (chunk, bucket) in split_into_buckets(&self.buckets, slot_indices.len()) {
+                    batch_groups.push(BatchGroup {
+                        expert,
+                        row_offset: total_rows,
+                        rows: bucket,
+                        n_real: chunk,
+                    });
+                    meta_groups.push((expert, slot_indices[offset..offset + chunk].to_vec()));
+                    total_rows += bucket;
+                    offset += chunk;
+                }
+            }
             *msg_tag += 1;
-            group_slots.insert(*msg_tag, slot_indices[offset..offset + chunk].to_vec());
-            inflight.insert(*msg_tag, (worker, expert));
-            self.workers[worker].send(WorkerMsg::Run {
-                tag: *msg_tag,
+            let tag = *msg_tag;
+            // Gather each group's real rows into the slab, then zero-fill
+            // its padding up to the bucket boundary — bitwise identical to
+            // per-group fresh tiles (pooled buffers, ADR 003). This gather
+            // is the data plane's only remaining deep copy (ADR 009).
+            let mut slab = self.tiles.take(total_rows * d);
+            for (gi, (bg, (_, chunk_slots))) in
+                batch_groups.iter().zip(&meta_groups).enumerate()
+            {
+                for (row, &si) in chunk_slots.iter().enumerate() {
+                    let slot = &slots[si];
+                    slab.extend_from_slice(normed[slot.seq_idx].row(slot.token_idx));
+                    slot_src[si] = (tag, gi, row);
+                }
+                slab.resize((bg.row_offset + bg.rows) * d, 0.0);
+                metrics.bytes_copied += (bg.n_real * d * 4) as u64;
+                metrics.worker_slots[worker] += bg.n_real;
+            }
+            inflight.insert(tag, (worker, meta_groups));
+            metrics.ffn_messages += 1;
+            self.workers[worker].send(WorkerMsg::RunBatch {
+                tag,
                 layer,
-                expert,
-                xn: HostTensor::new(buf, vec![bucket, d]),
-                n_real: chunk,
+                xn: HostTensor::new(slab, vec![total_rows, d]),
+                groups: batch_groups,
                 reply: reply_tx.clone(),
             });
             *outstanding += 1;
-            metrics.worker_slots[worker] += chunk;
-            offset += chunk;
         }
     }
 
@@ -1055,36 +1142,37 @@ impl Coordinator {
 
         let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
         let mut outstanding = 0usize;
-        // Slot-order metadata for scattering results back, plus the
-        // (worker, expert) each in-flight tag was sent to — the failover
-        // table the timeout path redispatches from (ADR 008).
-        let mut group_slots: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-        let mut inflight: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+        // Per-slot reply coordinates — `slot_src[si]` = (batch tag, group
+        // index within the batch, row within the group) — written at send
+        // time and overwritten by redispatch; the combine stage reads each
+        // slot's output row through it (ADR 009). `inflight` maps each
+        // outstanding batch tag to its worker and per-group slot lists —
+        // the failover table the timeout path redispatches from (ADR 008).
+        let mut slot_src: Vec<(u64, usize, usize)> = vec![(0, 0, 0); slots.len()];
+        let mut inflight: BTreeMap<u64, (usize, Vec<(usize, Vec<usize>)>)> = BTreeMap::new();
         let mut msg_tag = 0u64;
 
         // Speculative fast path first: settle only these pairs' prewarms
-        // and ship the confirmed tiles immediately.
+        // and ship the confirmed tiles immediately (one coalesced batch
+        // per assigned worker — the wave may be followed by a second,
+        // repair-pass batch to the same worker below).
         let spec_groups = self.remap_dead_targets(spec_groups, &plan.placement)?;
         if !spec_groups.is_empty() {
             if let Some(pw) = prewarmer.as_deref_mut() {
                 pw.settle_for(layer, &spec_groups, &mut self.residency, &self.health, metrics)?;
             }
-            for ((worker, expert), slot_indices) in &spec_groups {
-                self.send_ffn_group(
-                    layer,
-                    *worker,
-                    *expert,
-                    slot_indices,
-                    slots,
-                    normed,
-                    &reply_tx,
-                    &mut msg_tag,
-                    &mut group_slots,
-                    &mut inflight,
-                    &mut outstanding,
-                    metrics,
-                );
-            }
+            self.send_ffn_batches(
+                layer,
+                &spec_groups,
+                slots,
+                normed,
+                &reply_tx,
+                &mut msg_tag,
+                &mut slot_src,
+                &mut inflight,
+                &mut outstanding,
+                metrics,
+            );
         }
 
         // Repair pass (the whole batch when speculation is off): quota
@@ -1119,22 +1207,18 @@ impl Coordinator {
             if let Some(pw) = prewarmer.as_deref_mut() {
                 pw.settle_for(layer, &placed, &mut self.residency, &self.health, metrics)?;
             }
-            for ((worker, expert), slot_indices) in &placed {
-                self.send_ffn_group(
-                    layer,
-                    *worker,
-                    *expert,
-                    slot_indices,
-                    slots,
-                    normed,
-                    &reply_tx,
-                    &mut msg_tag,
-                    &mut group_slots,
-                    &mut inflight,
-                    &mut outstanding,
-                    metrics,
-                );
-            }
+            self.send_ffn_batches(
+                layer,
+                &placed,
+                slots,
+                normed,
+                &reply_tx,
+                &mut msg_tag,
+                &mut slot_src,
+                &mut inflight,
+                &mut outstanding,
+                metrics,
+            );
         }
         // `reply_tx` stays alive for the whole collect loop: failure is
         // detected by reply deadline, never channel disconnect (ADR 008) —
@@ -1149,9 +1233,8 @@ impl Coordinator {
             spec_out.push((l, SpecTargets::build(preds_next, plan_next)));
         }
 
-        // Collect every tile's rows into a per-slot buffer first …
-        let mut slot_out = self.tiles.take(slots.len() * d);
-        slot_out.resize(slots.len() * d, 0.0);
+        // Collect every batch's per-group output buffers (keyed by tag) …
+        let mut replies: BTreeMap<u64, Vec<Vec<f32>>> = BTreeMap::new();
         let mut received = 0usize;
         let mut abandoned: HashSet<u64> = HashSet::new();
         let mut waits = 0u32;
@@ -1159,12 +1242,14 @@ impl Coordinator {
             match reply_rx.recv_timeout(self.health.deadline() * (1u32 << waits)) {
                 Ok(mut result) => {
                     if abandoned.remove(&result.tag) {
-                        // Late straggler reply for a redispatched group:
+                        // Late straggler reply for a redispatched batch:
                         // the redispatched copy owns these slots (the
                         // values are identical either way) — just recycle
                         // the buffers.
                         self.tiles.put(std::mem::take(&mut result.tile));
-                        self.tiles.put(std::mem::take(&mut result.out));
+                        for out in result.outs.drain(..) {
+                            self.tiles.put(out);
+                        }
                         continue;
                     }
                     received += 1;
@@ -1175,20 +1260,22 @@ impl Coordinator {
                     }
                     self.health.observe_op(result.exec_s);
                     metrics.worker_busy_s[result.worker] += result.exec_s;
-                    // Cold uploads at Run time stall the FFN call: exposed.
+                    // Cold uploads at RunBatch time stall the FFN calls:
+                    // exposed.
                     metrics.upload_bytes += result.upload_bytes;
                     metrics.exposed_upload_bytes += result.upload_bytes;
-                    let slot_indices = &group_slots[&result.tag];
-                    debug_assert_eq!(result.n_real, slot_indices.len());
-                    for (row, &si) in slot_indices.iter().enumerate() {
-                        slot_out[si * d..(si + 1) * d]
-                            .copy_from_slice(&result.out[row * d..(row + 1) * d]);
+                    if let Some((_, meta_groups)) = inflight.remove(&result.tag) {
+                        debug_assert_eq!(result.outs.len(), meta_groups.len());
+                        debug_assert_eq!(
+                            result.n_real,
+                            meta_groups.iter().map(|(_, v)| v.len()).sum::<usize>()
+                        );
                     }
-                    inflight.remove(&result.tag);
-                    // Zero-alloc recycling: the padded input tile and the
-                    // FFN output buffer both return to the pool.
+                    // The input slab is done travelling: recycle it now.
+                    // The output buffers stay alive until the combine
+                    // reads their rows, then recycle too.
                     self.tiles.put(std::mem::take(&mut result.tile));
-                    self.tiles.put(std::mem::take(&mut result.out));
+                    replies.insert(result.tag, std::mem::take(&mut result.outs));
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     metrics.retry_count += 1;
@@ -1199,42 +1286,46 @@ impl Coordinator {
                     waits = 0;
                     // Deadline exhausted with zero progress: every worker
                     // still owing a reply is unresponsive. Declare them
-                    // dead and redispatch each lost group to a surviving
-                    // replica of its expert — the duplication plan is the
-                    // failover table (ADR 008).
-                    let stale: Vec<(u64, usize, usize)> = inflight
-                        .iter()
-                        .map(|(&tag, &(w, e))| (tag, w, e))
-                        .collect();
+                    // dead and redispatch each lost batch's groups to
+                    // surviving replicas of their experts — the
+                    // duplication plan is the failover table (ADR 008).
+                    let stale: Vec<u64> = inflight.keys().copied().collect();
                     let dead: std::collections::BTreeSet<usize> =
-                        stale.iter().map(|&(_, w, _)| w).collect();
+                        inflight.values().map(|&(w, _)| w).collect();
                     for w in dead {
                         self.note_worker_death(w, metrics);
                         if let Some(pw) = prewarmer.as_deref_mut() {
                             metrics.prewarm_timeouts += pw.purge_worker(w) as u64;
                         }
                     }
-                    for (tag, _, expert) in stale {
-                        // The tile shipped to the dead worker died with
+                    for tag in stale {
+                        // The slab shipped to the dead worker died with
                         // its thread; redispatch re-gathers from `normed`
-                        // into a fresh pooled tile.
+                        // into fresh pooled slabs (one per failover
+                        // target), overwriting the slots' `slot_src`.
                         abandoned.insert(tag);
-                        inflight.remove(&tag);
+                        let (_, meta_groups) =
+                            inflight.remove(&tag).expect("stale tag is inflight");
                         outstanding -= 1;
                         self.tiles.lost += 1;
-                        let slot_indices = group_slots.remove(&tag).unwrap_or_default();
-                        let target = self.failover_for(&plan.placement, expert)?;
-                        metrics.redispatched_slots += slot_indices.len();
-                        self.send_ffn_group(
+                        let mut regrouped: BTreeMap<(usize, usize), Vec<usize>> =
+                            BTreeMap::new();
+                        for (expert, slot_indices) in meta_groups {
+                            metrics.redispatched_slots += slot_indices.len();
+                            let target = self.failover_for(&plan.placement, expert)?;
+                            regrouped
+                                .entry((target, expert))
+                                .or_default()
+                                .extend(slot_indices);
+                        }
+                        self.send_ffn_batches(
                             layer,
-                            target,
-                            expert,
-                            &slot_indices,
+                            &regrouped,
                             slots,
                             normed,
                             &reply_tx,
                             &mut msg_tag,
-                            &mut group_slots,
+                            &mut slot_src,
                             &mut inflight,
                             &mut outstanding,
                             metrics,
@@ -1246,17 +1337,27 @@ impl Coordinator {
                 }
             }
         }
-        // … then combine h += gate · out in global slot order, so numerics
-        // are independent of arrival order, grouping and strategy.
+        // … then combine h += gate · out in global slot order, reading
+        // each slot's row view straight out of its batch reply (no
+        // intermediate scatter buffer, ADR 009) — numerics stay
+        // independent of arrival order, grouping and strategy.
         for (si, slot) in slots.iter().enumerate() {
-            let out_row = &slot_out[si * d..(si + 1) * d];
+            let (tag, gi, row) = slot_src[si];
+            let out = &replies[&tag][gi];
+            let out_row = &out[row * d..(row + 1) * d];
             let h = &mut hidden[slot.seq_idx];
             let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
             for (a, &b) in dst.iter_mut().zip(out_row) {
                 *a += slot.gate * b;
             }
         }
-        self.tiles.put(slot_out);
+        // Zero-alloc recycling: every group's FFN output buffer returns
+        // to the pool (the input slabs went back at reply time).
+        for (_, outs) in replies {
+            for out in outs {
+                self.tiles.put(out);
+            }
+        }
         metrics.tile_allocs += self.tiles.allocs - alloc0;
         metrics.tile_reuses += self.tiles.reuses - reuse0;
         metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
@@ -1897,6 +1998,9 @@ mod tests {
         s.retry_count = 2;
         s.prewarm_timeouts = 1;
         s.degraded = true;
+        s.bytes_copied = 640;
+        s.bytes_shared = 4096;
+        s.ffn_messages = 7;
         s.finish();
         assert_eq!(s.pred_share_layers, 2);
         assert!((s.pred_share_l1 - 0.3).abs() < 1e-12);
@@ -1928,6 +2032,9 @@ mod tests {
         assert_eq!(round.retry_count, 2);
         assert_eq!(round.prewarm_timeouts, 1);
         assert!(round.degraded);
+        assert_eq!(round.bytes_copied, 640);
+        assert_eq!(round.bytes_shared, 4096);
+        assert_eq!(round.ffn_messages, 7);
         // High-water is max-assigned, not summed: a second application
         // with a lower peak must not move it.
         let mut lower = StageMetrics::new(2);
@@ -1976,6 +2083,9 @@ mod tests {
         assert_eq!(step.retry_count, 2);
         assert_eq!(step.prewarm_timeouts, 1);
         assert!(step.degraded);
+        assert_eq!(step.bytes_copied, 640);
+        assert_eq!(step.bytes_shared, 4096);
+        assert_eq!(step.ffn_messages, 7);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! that keep each engine inside its `--memory-cap` budget.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -20,25 +21,47 @@ use anyhow::Result;
 use super::faults::{FaultAction, WorkerFaults};
 use crate::runtime::{Engine, EngineSource, HostTensor, In};
 
+/// One expert group inside a coalesced [`WorkerMsg::RunBatch`]: a
+/// bucket-padded tile living at a row offset of the batch's shared arena
+/// slab (ADR 009).
+#[derive(Clone, Debug)]
+pub struct BatchGroup {
+    pub expert: usize,
+    /// First slab row of this group's tile.
+    pub row_offset: usize,
+    /// Tile rows (padded to a compiled FFN bucket).
+    pub rows: usize,
+    /// Leading rows that carry real tokens; the rest are zero padding.
+    pub n_real: usize,
+}
+
 /// Work sent to a worker.
 pub enum WorkerMsg {
-    /// Run one expert's FFN over a padded token tile.
-    Run {
+    /// Run every expert-FFN group this worker owns for one layer wave in
+    /// a single message (ADR 009): the groups' bucket-padded tiles are
+    /// packed back-to-back into one contiguous `TilePool` slab, and the
+    /// worker executes them group by group through borrowed slab views —
+    /// one channel send + one wakeup per (layer wave, worker) instead of
+    /// one per group. The reply returns the slab for recycling and one
+    /// output buffer per group.
+    RunBatch {
         tag: u64,
         layer: usize,
-        expert: usize,
-        /// Padded to a compiled bucket; first `n_real` rows are real.
+        /// Arena slab `[total_rows, d]`; group `g` occupies rows
+        /// `groups[g].row_offset .. + groups[g].rows`.
         xn: HostTensor,
-        n_real: usize,
+        groups: Vec<BatchGroup>,
         reply: mpsc::Sender<WorkerResult>,
     },
     /// Run one sequence's attention block for a layer (the serving
     /// analogue of Tensor-Parallel attention: sequences of a round spread
-    /// across the virtual GPUs — §Perf iteration 2).
+    /// across the virtual GPUs — §Perf iteration 2). The hidden batch is
+    /// read-shared: every worker of the fan-out sees the same `Arc`'d
+    /// buffer instead of a per-worker deep copy (ADR 009).
     Attention {
         tag: u64,
         layer: usize,
-        x: HostTensor,
+        x: Arc<HostTensor>,
         reply: mpsc::Sender<WorkerResult>,
     },
     /// Pre-warm an expert's weights ahead of the FFN phase — the
@@ -54,7 +77,7 @@ pub enum WorkerMsg {
     /// Evict an expert's weights and free the engine-side residency (LRU
     /// capacity eviction or placement shrink — ADR 004). Workers process
     /// their queue in FIFO order, so an eviction enqueued before a later
-    /// `Run`/`Prewarm` of the same expert is applied first and the replica
+    /// `RunBatch`/`Prewarm` of the same expert is applied first and the replica
     /// re-uploads cold (the refetch the coordinator accounts).
     Evict { layer: usize, expert: usize },
     /// Install a fault-injection script (ADR 008). Sent before any work
@@ -70,12 +93,18 @@ pub struct WorkerResult {
     pub worker: usize,
     pub layer: usize,
     pub expert: usize,
-    /// FFN output rows (only the first `n_real` are meaningful); empty for
-    /// prefetch replies.
+    /// Attention output rows; empty for prewarm and batch replies.
     pub out: Vec<f32>,
-    /// The input tile's buffer, returned so the coordinator's
+    /// Per-group FFN outputs of a `RunBatch` (group order matches the
+    /// batch's `groups`; only each group's first `n_real` rows are
+    /// meaningful). The combine stage reads slot rows straight out of
+    /// these buffers — no intermediate scatter copy (ADR 009) — then
+    /// recycles them through the tile pool. Empty for non-batch replies.
+    pub outs: Vec<Vec<f32>>,
+    /// The input slab's buffer, returned so the coordinator's
     /// [`crate::coordinator::tile_pool::TilePool`] can recycle it (the
-    /// zero-alloc dispatch path, ADR 003). Empty for non-Run replies.
+    /// zero-alloc dispatch path, ADR 003 — extended to arena slabs by
+    /// ADR 009). Empty for non-batch replies.
     pub tile: Vec<f32>,
     pub n_real: usize,
     /// Wall time the worker spent executing (busy time).
@@ -145,10 +174,12 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
             // Drain messages, replying with errors, until shutdown.
             for msg in rx {
                 match msg {
-                    WorkerMsg::Run { tag, layer, expert, xn, n_real, reply } => {
+                    WorkerMsg::RunBatch { tag, layer, xn, groups, reply } => {
+                        let n_real = groups.iter().map(|g| g.n_real).sum();
                         let _ = reply.send(WorkerResult {
-                            tag, worker: index, layer, expert,
-                            out: Vec::new(), tile: xn.data, n_real,
+                            tag, worker: index, layer, expert: 0,
+                            out: Vec::new(), outs: Vec::new(),
+                            tile: xn.data, n_real,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -156,7 +187,8 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     WorkerMsg::Prewarm { tag, layer, expert, reply } => {
                         let _ = reply.send(WorkerResult {
                             tag, worker: index, layer, expert,
-                            out: Vec::new(), tile: Vec::new(), n_real: 0,
+                            out: Vec::new(), outs: Vec::new(),
+                            tile: Vec::new(), n_real: 0,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -164,7 +196,8 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     WorkerMsg::Attention { tag, layer, reply, .. } => {
                         let _ = reply.send(WorkerResult {
                             tag, worker: index, layer, expert: 0,
-                            out: Vec::new(), tile: Vec::new(), n_real: 0,
+                            out: Vec::new(), outs: Vec::new(),
+                            tile: Vec::new(), n_real: 0,
                             exec_s: 0.0, upload_bytes: 0,
                             error: Some("engine init failed".into()),
                         });
@@ -181,14 +214,16 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
     let mut faults = WorkerFaults::default();
 
     for msg in rx {
-        // Injected faults (ADR 008) trigger on countable ops — Run /
+        // Injected faults (ADR 008) trigger on countable ops — RunBatch /
         // Attention / Prewarm — before the op is processed: a killed
         // worker exits without replying (its queue dies with it), a
         // delayed worker stalls like a straggler, a dropped op is
-        // consumed without ever producing a reply.
+        // consumed without ever producing a reply. A coalesced batch
+        // counts as ONE op: it is one message, and a fault loses/delays
+        // it atomically (ADR 009).
         if matches!(
             msg,
-            WorkerMsg::Run { .. } | WorkerMsg::Attention { .. } | WorkerMsg::Prewarm { .. }
+            WorkerMsg::RunBatch { .. } | WorkerMsg::Attention { .. } | WorkerMsg::Prewarm { .. }
         ) {
             match faults.on_op() {
                 Some(FaultAction::Kill) => return,
@@ -200,45 +235,61 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
             }
         }
         match msg {
-            WorkerMsg::Run {
+            WorkerMsg::RunBatch {
                 tag,
                 layer,
-                expert,
                 xn,
-                n_real,
+                groups,
                 reply,
             } => {
                 let t0 = Instant::now();
-                let names = expert_weight_names(layer, expert);
+                let d = xn.row_len();
                 let mut upload_bytes = 0u64;
-                let mut error = None;
-                let mut out = Vec::new();
-                // Ensure this expert's weights are resident (duplication
-                // transfer if they weren't).
-                for n in &names {
-                    match engine.upload_weight(n) {
-                        Ok(b) => upload_bytes += b,
-                        Err(e) => error = Some(format!("{e:#}")),
+                let mut error: Option<String> = None;
+                let mut outs: Vec<Vec<f32>> = Vec::with_capacity(groups.len());
+                for g in &groups {
+                    // Ensure this expert's weights are resident
+                    // (duplication transfer if they weren't).
+                    let names = expert_weight_names(layer, g.expert);
+                    for n in &names {
+                        match engine.upload_weight(n) {
+                            Ok(b) => upload_bytes += b,
+                            Err(e) => error = Some(format!("{e:#}")),
+                        }
                     }
-                }
-                if error.is_none() {
-                    debug_assert!(buckets.contains(&xn.rows()), "xn must be padded");
-                    let artifact = format!("expert_ffn_b{}", xn.rows());
+                    if error.is_some() {
+                        break;
+                    }
+                    debug_assert!(buckets.contains(&g.rows), "group must be bucket-padded");
+                    debug_assert!((g.row_offset + g.rows) * d <= xn.data.len());
+                    // Borrowed slab view — the group's tile travels and
+                    // executes with zero per-group copies (ADR 009).
+                    let view = In::View {
+                        data: &xn.data[g.row_offset * d..(g.row_offset + g.rows) * d],
+                        rows: g.rows,
+                        cols: d,
+                    };
+                    let artifact = format!("expert_ffn_b{}", g.rows);
                     match engine.call(
                         &artifact,
-                        &[In::T(&xn), In::W(&names[0]), In::W(&names[1]), In::W(&names[2])],
+                        &[view, In::W(&names[0]), In::W(&names[1]), In::W(&names[2])],
                     ) {
-                        Ok(mut tensors) => out = tensors.remove(0).data,
-                        Err(e) => error = Some(format!("{e:#}")),
+                        Ok(mut tensors) => outs.push(tensors.remove(0).data),
+                        Err(e) => {
+                            error = Some(format!("{e:#}"));
+                            break;
+                        }
                     }
                 }
+                let n_real = groups.iter().map(|g| g.n_real).sum();
                 let _ = reply.send(WorkerResult {
                     tag,
                     worker: index,
                     layer,
-                    expert,
-                    out,
-                    // Hand the input tile's buffer back for pool reuse.
+                    expert: 0,
+                    out: Vec::new(),
+                    outs,
+                    // Hand the input slab's buffer back for pool reuse.
                     tile: xn.data,
                     n_real,
                     exec_s: t0.elapsed().as_secs_f64(),
@@ -269,7 +320,9 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     match engine.call(
                         "attention",
                         &[
-                            In::T(&x),
+                            // Read-shared fan-out batch (ADR 009): borrow
+                            // through the Arc, never copy it.
+                            In::T(x.as_ref()),
                             In::W(&names[0]),
                             In::W(&names[1]),
                             In::W(&names[2]),
@@ -287,6 +340,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     layer,
                     expert: 0,
                     out,
+                    outs: Vec::new(),
                     tile: Vec::new(),
                     n_real,
                     exec_s: t0.elapsed().as_secs_f64(),
@@ -310,6 +364,7 @@ fn worker_main(index: usize, source: &EngineSource, rx: mpsc::Receiver<WorkerMsg
                     layer,
                     expert,
                     out: Vec::new(),
+                    outs: Vec::new(),
                     tile: Vec::new(),
                     n_real: 0,
                     exec_s: t0.elapsed().as_secs_f64(),

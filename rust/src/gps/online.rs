@@ -69,6 +69,10 @@ pub struct WindowSample {
     pub forecast_l1: f64,
     /// Matured (layer, forecast) pairs this window (0 at horizon 0).
     pub forecast_layers: f64,
+    /// Host bytes deep-copied on the data plane this window (ADR 009).
+    pub bytes_copied: f64,
+    /// Host bytes moved by `Arc` reference instead of copied (ADR 009).
+    pub bytes_shared: f64,
 }
 
 impl From<&crate::coordinator::metrics::RoundMetrics> for WindowSample {
@@ -93,6 +97,8 @@ impl From<&crate::coordinator::metrics::RoundMetrics> for WindowSample {
             pred_share_layers: m.pred_share_layers as f64,
             forecast_l1: m.forecast_l1,
             forecast_layers: m.forecast_layers as f64,
+            bytes_copied: m.bytes_copied as f64,
+            bytes_shared: m.bytes_shared as f64,
         }
     }
 }
@@ -119,6 +125,8 @@ impl From<&crate::coordinator::metrics::DecodeStepMetrics> for WindowSample {
             pred_share_layers: m.pred_share_layers as f64,
             forecast_l1: m.forecast_l1,
             forecast_layers: m.forecast_layers as f64,
+            bytes_copied: m.bytes_copied as f64,
+            bytes_shared: m.bytes_shared as f64,
         }
     }
 }
@@ -150,7 +158,9 @@ impl WindowSample {
             .set("pred_share_l1", Value::Num(self.pred_share_l1))
             .set("pred_share_layers", Value::Num(self.pred_share_layers))
             .set("forecast_l1", Value::Num(self.forecast_l1))
-            .set("forecast_layers", Value::Num(self.forecast_layers));
+            .set("forecast_layers", Value::Num(self.forecast_layers))
+            .set("bytes_copied", Value::Num(self.bytes_copied))
+            .set("bytes_shared", Value::Num(self.bytes_shared));
         v
     }
 
@@ -179,6 +189,9 @@ impl WindowSample {
                 .get("forecast_layers")
                 .and_then(Value::as_f64)
                 .unwrap_or(0.0),
+            // Absent in pre-ADR-009 reports: default to "not measured".
+            bytes_copied: v.get("bytes_copied").and_then(Value::as_f64).unwrap_or(0.0),
+            bytes_shared: v.get("bytes_shared").and_then(Value::as_f64).unwrap_or(0.0),
         })
     }
 }
@@ -203,7 +216,7 @@ pub struct MeasuredConstants {
     /// Effective duplication-transfer bandwidth: moved bytes over
     /// (hidden + exposed) transfer seconds. `None` when the window moved
     /// no replica bytes (static placement, warm cache) — or moved them
-    /// only as cold uploads inside `Run`, which carry no transfer-stall
+    /// only as cold uploads inside `RunBatch`, which carry no transfer-stall
     /// seconds (check `upload_bytes` for that case).
     pub effective_bandwidth_gbs: Option<f64>,
     /// Live Table-1 share error (predicted vs routed shares, layer-
@@ -589,6 +602,12 @@ pub struct ServedReport {
     /// Rounds/steps served degraded — short-handed or mid-failover
     /// (ADR 008; None for old reports).
     pub degraded_samples: Option<u64>,
+    /// Host bytes deep-copied on the data plane (ADR 009; None for old
+    /// reports).
+    pub bytes_copied: Option<f64>,
+    /// Host bytes moved by `Arc` reference (ADR 009; None for old
+    /// reports).
+    pub bytes_shared: Option<f64>,
 }
 
 /// Parse a serve-report JSON file (see `ServeReport::to_json`). Fails
@@ -678,6 +697,9 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
             .get("degraded_samples")
             .and_then(Value::as_f64)
             .map(|x| x as u64),
+        // Data-plane copy accounting (ADR 009), same lenient contract.
+        bytes_copied: v.get("bytes_copied").and_then(Value::as_f64),
+        bytes_shared: v.get("bytes_shared").and_then(Value::as_f64),
     })
 }
 
@@ -839,6 +861,8 @@ mod tests {
         s.pred_top1_hits = 7.0;
         s.pred_share_l1 = 0.2;
         s.pred_share_layers = 2.0;
+        s.bytes_copied = 4096.0;
+        s.bytes_shared = 8192.0;
         cal.push(s.clone());
         let c = cal.constants().unwrap();
         let rt = MeasuredConstants::from_json(&c.to_json()).unwrap();

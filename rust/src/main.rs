@@ -103,6 +103,10 @@ USAGE: moe-gps <subcommand> [options]
                 --memory-cap B (per-worker byte cap for expert replica
                                 weights: LRU eviction + refetch, ADR 004)
                 --speculative  (TEP speculative scatter; implies lookahead)
+                --parallel-attention (ADR 009: fan prefill attention out
+                                to the workers as Arc-shared read views;
+                                bitwise identical, traffic accounted as
+                                bytes_shared instead of bytes_copied)
                 --horizon H    (ADR 006: plan for the forecast distribution
                                 H replan windows ahead; predicted-hot
                                 replicas prewarm before the spike; 0 =
@@ -146,7 +150,8 @@ USAGE: moe-gps <subcommand> [options]
   bench-validate [BENCH_serve.json] [--require-results
                 --forecast-report F.json --max-forecast-l1 B
                 --min-kernel-speedup X --baseline OLD.json
-                --max-regression F --chaos-report F.json]
+                --max-regression F --chaos-report F.json
+                --copy-report F.json --max-copied-frac F]
                validate a serve-bench trajectory file against the
                moe-gps/serve-bench/v1 schema (the CI bench-smoke gate);
                with --forecast-report, additionally gate the realized
@@ -159,7 +164,11 @@ USAGE: moe-gps <subcommand> [options]
                the stored records;
                with --chaos-report, gate a fault-injected serve report
                (ADR 008): at least one worker death must have been
-               injected AND zero sequences lost
+               injected AND zero sequences lost;
+               with --copy-report, gate a serve report's data-plane copy
+               accounting (ADR 009): fail when bytes_copied /
+               (bytes_copied + bytes_shared) exceeds --max-copied-frac
+               (default 0.5)
 ",
         moe_gps::VERSION
     );
@@ -466,6 +475,19 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             served.pinned,
         );
     }
+    if let (Some(copied), Some(shared)) = (served.bytes_copied, served.bytes_shared) {
+        // ADR 009: how much of the coordinator↔worker data plane moved by
+        // reference — high copied fractions mean host-copy overhead is
+        // inflating the measured per-token cost.
+        let total = copied + shared;
+        let frac = if total > 0.0 { copied / total } else { 0.0 };
+        println!(
+            "  data plane: copied {} / shared {} (copied frac {:.3})",
+            moe_gps::util::human_bytes(copied),
+            moe_gps::util::human_bytes(shared),
+            frac,
+        );
+    }
     if served.worker_deaths.unwrap_or(0) > 0 || served.degraded_samples.unwrap_or(0) > 0 {
         // ADR 008: the constants blend healthy and failover windows —
         // timeouts, redispatch and re-uploads inflate transfer/compute
@@ -630,6 +652,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // ADR 004: per-worker cap on resident expert replica bytes — real LRU
     // eviction via WorkerMsg::Evict; bitwise-identical outputs.
     coord.set_memory_cap(args.opt_bytes("memory-cap")?);
+    // ADR 009: fan per-sequence prefill attention out to the workers as
+    // Arc-shared read views (decode attention always runs on the leader).
+    // Bitwise identical either way; the copy counters show the traffic
+    // moving from `bytes_copied` to `bytes_shared`.
+    coord.parallel_attention = args.flag("parallel-attention");
     // ADR 003: speculative TEP scatter rides the lookahead pipeline.
     coord.speculative = args.flag("speculative");
     if coord.speculative {
@@ -878,6 +905,17 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
             "{report}: chaos gate passed — {deaths} worker death(s), \
              0 sequences lost"
         );
+    }
+    // ADR 009: copy-accounting gate — fail when the serve report's
+    // data plane deep-copied more than the allowed fraction of the bytes
+    // it moved (bytes_copied / (bytes_copied + bytes_shared)).
+    if let Some(report) = args.opt("copy-report") {
+        let bound = args.opt_f64("max-copied-frac", 0.5)?;
+        let frac = moe_gps::bench::emit::validate_copied_frac(
+            std::path::Path::new(report),
+            bound,
+        )?;
+        println!("{report}: copied fraction {frac:.4} within bound {bound}");
     }
     // ADR 007: stored-baseline regression gate for serve_hotpath.
     if let Some(baseline) = args.opt("baseline") {

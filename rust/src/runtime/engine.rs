@@ -55,6 +55,14 @@ pub enum In<'a> {
     T(&'a HostTensor),
     /// Host int32 tensor (uploaded per call).
     I(&'a IntTensor),
+    /// Borrowed row-major `[rows, cols]` activation view — a sub-range of
+    /// a larger slab (one group of a coalesced `WorkerMsg::RunBatch`), so
+    /// batched FFN calls need no per-group tensor copy (ADR 009).
+    View {
+        data: &'a [f32],
+        rows: usize,
+        cols: usize,
+    },
 }
 
 /// Where an engine's model comes from. Cheap to clone and `Send`, so the

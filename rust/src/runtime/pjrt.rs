@@ -92,6 +92,11 @@ impl PjrtBackend {
                 In::I(t) => self
                     .client
                     .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)?,
+                // A slab sub-range view (ADR 009): the device transfer is
+                // the upload itself — no extra host-side staging copy.
+                In::View { data, rows, cols } => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, &[*rows, *cols], None)?,
             };
             owned.push((i, buf));
         }

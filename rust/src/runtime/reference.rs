@@ -404,15 +404,16 @@ impl ReferenceBackend {
     }
 
     fn op_expert_ffn(&self, weights: &WeightStore, inputs: &[In<'_>]) -> Result<Vec<HostTensor>> {
-        let xn = tensor_arg(inputs, 0, "expert_ffn.xn")?;
+        // Accepts an owned tensor or a borrowed slab view (a batched
+        // group's sub-range — ADR 009); the kernel only needs rows+data.
+        let (xn, t) = rows_arg(inputs, 0, self.dims.d_model, "expert_ffn.xn")?;
         let wg = weight_arg(weights, inputs, 1, "expert_ffn.w_gate")?;
         let wu = weight_arg(weights, inputs, 2, "expert_ffn.w_up")?;
         let wd = weight_arg(weights, inputs, 3, "expert_ffn.w_down")?;
-        let t = xn.rows();
         let d = self.dims.d_model;
         let ff = wg.shape[1];
-        let mut gate = matmul(&xn.data, t, d, &wg.data, ff);
-        let up = matmul(&xn.data, t, d, &wu.data, ff);
+        let mut gate = matmul(xn, t, d, &wg.data, ff);
+        let up = matmul(xn, t, d, &wu.data, ff);
         for (g, &u) in gate.iter_mut().zip(&up) {
             *g = silu(*g) * u;
         }
@@ -505,6 +506,30 @@ fn tensor_arg<'a>(inputs: &'a [In<'_>], i: usize, what: &str) -> Result<&'a Host
     match inputs.get(i) {
         Some(In::T(t)) => Ok(t),
         _ => anyhow::bail!("reference backend: input {i} ({what}) must be a host tensor"),
+    }
+}
+
+/// Row-major activation data + row count from either an owned tensor or
+/// a borrowed `In::View` slab sub-range (ADR 009). The view's column
+/// width must match the expected width.
+fn rows_arg<'a>(
+    inputs: &'a [In<'_>],
+    i: usize,
+    want_cols: usize,
+    what: &str,
+) -> Result<(&'a [f32], usize)> {
+    match inputs.get(i) {
+        Some(In::T(t)) => Ok((&t.data, t.rows())),
+        Some(In::View { data, rows, cols }) => {
+            anyhow::ensure!(
+                *cols == want_cols && data.len() == rows * cols,
+                "reference backend: input {i} ({what}) view shape mismatch \
+                 ({rows}x{cols}, {} elems, want width {want_cols})",
+                data.len()
+            );
+            Ok((data, *rows))
+        }
+        _ => anyhow::bail!("reference backend: input {i} ({what}) must be an activation"),
     }
 }
 

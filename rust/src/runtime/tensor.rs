@@ -27,6 +27,16 @@ impl HostTensor {
         }
     }
 
+    /// A zero-row placeholder (`[0, 0]`) — what `mem::replace` leaves
+    /// behind when a tensor is moved into an `Arc` for read-shared
+    /// fan-out (ADR 009). Allocates nothing.
+    pub fn empty() -> HostTensor {
+        HostTensor {
+            data: Vec::new(),
+            shape: vec![0, 0],
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.shape.first().copied().unwrap_or(0)
     }
@@ -43,21 +53,32 @@ impl HostTensor {
 
     /// Gather a sub-tensor of the given first-axis rows.
     pub fn gather_rows(&self, rows: &[usize]) -> HostTensor {
-        let w = self.row_len();
-        let mut data = Vec::with_capacity(rows.len() * w);
-        for &r in rows {
-            data.extend_from_slice(self.row(r));
-        }
+        let mut data = Vec::with_capacity(rows.len() * self.row_len());
+        self.gather_rows_into(rows, &mut data);
         let mut shape = self.shape.clone();
         shape[0] = rows.len();
         HostTensor::new(data, shape)
+    }
+
+    /// Gather the given first-axis rows straight into a caller-owned
+    /// buffer (appended) — the slab-filling variant `gather_rows`
+    /// delegates to, so FFN dispatch can pack pooled arena slabs without
+    /// an intermediate tensor (ADR 009).
+    pub fn gather_rows_into(&self, rows: &[usize], out: &mut Vec<f32>) {
+        out.reserve(rows.len() * self.row_len());
+        for &r in rows {
+            out.extend_from_slice(self.row(r));
+        }
     }
 
     /// Pad the first axis with zero rows up to `n` (bucket padding).
     pub fn pad_rows_to(&self, n: usize) -> HostTensor {
         assert!(n >= self.rows());
         let w = self.row_len();
-        let mut data = self.data.clone();
+        // One pre-sized allocation: clone-then-resize would allocate for
+        // the clone and may reallocate again growing to `n * w`.
+        let mut data = Vec::with_capacity(n * w);
+        data.extend_from_slice(&self.data);
         data.resize(n * w, 0.0);
         let mut shape = self.shape.clone();
         shape[0] = n;
@@ -128,6 +149,47 @@ mod tests {
         let p = g.pad_rows_to(4);
         assert_eq!(p.shape, vec![4, 4]);
         assert_eq!(p.row(3), &[0.0; 4]);
+    }
+
+    #[test]
+    fn gather_rows_into_appends_without_reshaping() {
+        let t = HostTensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]);
+        // Pre-existing contents stay in place: dispatch packs several
+        // groups into one slab by appending.
+        let mut slab = vec![-1.0f32; 2];
+        t.gather_rows_into(&[1, 1, 2], &mut slab);
+        assert_eq!(slab.len(), 2 + 3 * 4);
+        assert_eq!(&slab[..2], &[-1.0, -1.0]);
+        assert_eq!(&slab[2..6], t.row(1));
+        assert_eq!(&slab[6..10], t.row(1));
+        assert_eq!(&slab[10..14], t.row(2));
+        // The owned variant produces the identical bytes.
+        let owned = t.gather_rows(&[1, 1, 2]);
+        assert_eq!(&slab[2..], &owned.data[..]);
+    }
+
+    #[test]
+    fn pad_rows_to_allocates_once_and_zero_fills() {
+        let t = HostTensor::new((0..8).map(|x| x as f32).collect(), vec![2, 4]);
+        let p = t.pad_rows_to(5);
+        assert_eq!(p.shape, vec![5, 4]);
+        assert_eq!(p.row(0), t.row(0));
+        assert_eq!(p.row(1), t.row(1));
+        for r in 2..5 {
+            assert_eq!(p.row(r), &[0.0; 4]);
+        }
+        // The buffer is sized exactly once (no clone-then-grow slack).
+        assert_eq!(p.data.capacity(), 5 * 4);
+        // Padding to the current row count is an allocation-exact copy.
+        let same = t.pad_rows_to(2);
+        assert_eq!(same, t);
+    }
+
+    #[test]
+    fn empty_placeholder_is_allocation_free() {
+        let e = HostTensor::empty();
+        assert_eq!(e.rows(), 0);
+        assert_eq!(e.data.capacity(), 0);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! ADR 009 zero-copy data plane, end to end: `Arc`-shared attention
+//! fan-out, coalesced slab-backed FFN batches (`WorkerMsg::RunBatch`) and
+//! the copy-accounting counters that gate both. The acceptance claims
+//! pinned here:
+//!
+//! * steady-state FFN dispatch sends **exactly one** message per (layer,
+//!   assigned worker) — O(alive workers), not O(groups) — and every byte
+//!   it copies is the slab gather: `bytes_copied == n_slots × d_model × 4`;
+//! * the parallel-attention fan-out deep-copies **nothing**: toggling it
+//!   moves bytes into `bytes_shared` only, leaves `bytes_copied` at the
+//!   exact slab-gather figure, and the outputs stay bitwise identical;
+//! * a worker killed mid-run fails over with bitwise-identical output
+//!   while the accounting stays exact: redispatched slots re-gather once
+//!   each, so `bytes_copied == (n_slots + redispatched_slots) × d × 4`;
+//! * slab-backed decode under a total worker loss still loses no
+//!   sequences (`lost_seqs == 0` — the chaos CI gate holds under RunBatch).
+
+mod common;
+use common::{assert_bitwise_eq, decode_requests, greedy_decode_opts, mk_rounds, small_source};
+use moe_gps::coordinator::request::Request;
+use moe_gps::coordinator::{
+    Coordinator, CopyStats, DecodeReport, FaultPlan, RoundMetrics, ServeReport, ServeStrategy,
+};
+use moe_gps::runtime::{HostTensor, SyntheticSpec};
+
+/// Hidden width of the 2-layer synthetic test model — the unit every
+/// exact copy-accounting assertion below is denominated in.
+fn d_model() -> usize {
+    SyntheticSpec::small_test().d_model
+}
+
+fn n_layers() -> usize {
+    SyntheticSpec::small_test().n_layers
+}
+
+/// Drive prefill rounds with optional fault injection and the
+/// parallel-attention fan-out toggled.
+fn serve_prefill(
+    strategy: ServeStrategy,
+    workers: usize,
+    parallel_attention: bool,
+    faults: Option<&str>,
+    timeout_s: Option<f64>,
+    rounds: Vec<Vec<Request>>,
+) -> (Vec<Vec<HostTensor>>, Vec<RoundMetrics>) {
+    let mut coord = Coordinator::with_source(&small_source(), workers, strategy).unwrap();
+    coord.parallel_attention = parallel_attention;
+    if let Some(spec) = faults {
+        coord.set_fault_plan(&FaultPlan::parse(spec).unwrap());
+    }
+    coord.set_worker_timeout(timeout_s);
+    let mut outputs = Vec::new();
+    let mut metrics = Vec::new();
+    for round in rounds {
+        let (m, out) = coord.serve_round(&round).unwrap();
+        outputs.push(out);
+        metrics.push(m);
+    }
+    (outputs, metrics)
+}
+
+/// Aggregate per-round copy counters the way a serve report does.
+fn copy_stats(rounds: &[RoundMetrics]) -> CopyStats {
+    ServeReport {
+        rounds: rounds.to_vec(),
+        ..Default::default()
+    }
+    .copy_stats()
+}
+
+/// Every copied byte on the healthy prefill path is the FFN slab gather:
+/// one row per routed slot, re-read from the normed hidden state into the
+/// contiguous arena slab. Bucket padding is `resize` (zero-fill, not a
+/// copy) and attention fan-out is `Arc`-shared, so the figure is exact.
+fn exact_slab_bytes(m: &RoundMetrics) -> u64 {
+    ((m.n_slots + m.redispatched_slots) * d_model() * 4) as u64
+}
+
+#[test]
+fn steady_state_sends_one_ffn_message_per_layer_per_worker() {
+    let workers = 2;
+    let (_, metrics) = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        workers,
+        false,
+        None,
+        None,
+        mk_rounds(101, 3, 6),
+    );
+    for (i, m) in metrics.iter().enumerate() {
+        // Six variable-length sequences × top-k routing put well over a
+        // hundred slots per layer onto eight experts split across two
+        // workers, so every worker owns routed groups in every layer —
+        // the coalesced plane must send exactly one RunBatch per (layer,
+        // worker), where the per-group plane sent one message per
+        // (expert, bucket chunk).
+        assert_eq!(
+            m.ffn_messages,
+            (n_layers() * workers) as u64,
+            "round {i}: one coalesced batch per (layer, assigned worker), \
+             got {} messages for {} slots",
+            m.ffn_messages,
+            m.n_slots
+        );
+        assert_eq!(m.redispatched_slots, 0, "round {i}: healthy run");
+        assert_eq!(
+            m.bytes_copied,
+            exact_slab_bytes(m),
+            "round {i}: every copied byte must be the slab gather \
+             (n_slots={} × d={} × 4)",
+            m.n_slots,
+            d_model()
+        );
+        assert_eq!(
+            m.bytes_shared, 0,
+            "round {i}: leader attention shares nothing"
+        );
+    }
+    let s = copy_stats(&metrics);
+    assert!(
+        s.copied_frac() > 0.999,
+        "with the fan-out off, all accounted traffic is the gather: {s:?}"
+    );
+}
+
+#[test]
+fn arc_attention_fanout_is_bitwise_identical_and_copies_nothing() {
+    let leader = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        2,
+        false,
+        None,
+        None,
+        mk_rounds(7, 3, 4),
+    );
+    let fanned = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        2,
+        true,
+        None,
+        None,
+        mk_rounds(7, 3, 4),
+    );
+    assert_bitwise_eq(&leader.0, &fanned.0, "Arc-shared attention fan-out");
+    for (i, (lm, fm)) in leader.1.iter().zip(&fanned.1).enumerate() {
+        assert_eq!(lm.n_slots, fm.n_slots, "round {i}: identical routing");
+        // The fan-out ships every per-sequence hidden batch to a worker —
+        // but as a read-shared Arc view, so the bytes land in
+        // `bytes_shared` while `bytes_copied` stays at the exact FFN
+        // slab-gather figure. That equality *is* the zero-copy claim: if
+        // the attention path deep-copied even one tensor, `bytes_copied`
+        // would exceed n_slots × d × 4.
+        assert_eq!(lm.bytes_shared, 0, "round {i}: leader attention");
+        assert!(
+            fm.bytes_shared > 0,
+            "round {i}: the fan-out must account its shared batches"
+        );
+        assert_eq!(
+            lm.bytes_copied,
+            exact_slab_bytes(lm),
+            "round {i}: leader-attention copies are the gather only"
+        );
+        assert_eq!(
+            fm.bytes_copied,
+            exact_slab_bytes(fm),
+            "round {i}: fanned-out attention adds zero copied bytes"
+        );
+    }
+    let s = copy_stats(&fanned.1);
+    assert!(
+        s.copied_frac() < 1.0,
+        "shared traffic must pull the copied fraction below 1: {s:?}"
+    );
+}
+
+#[test]
+fn slab_batches_fail_over_bitwise_with_exact_accounting() {
+    let healthy = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        false,
+        None,
+        None,
+        mk_rounds(53, 4, 3),
+    );
+    // Worker 1 crashes on its first op: its coalesced batches time out as
+    // single countable ops, every slot they carried regroups onto
+    // survivors and re-gathers into fresh slabs exactly once.
+    let faulted = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        false,
+        Some("kill:1@1"),
+        Some(0.25),
+        mk_rounds(53, 4, 3),
+    );
+    assert_bitwise_eq(&healthy.0, &faulted.0, "failover with slab batches");
+    let deaths: usize = faulted.1.iter().map(|m| m.worker_deaths).sum();
+    assert_eq!(deaths, 1, "exactly one injected death");
+    let redispatched: usize = faulted.1.iter().map(|m| m.redispatched_slots).sum();
+    assert!(redispatched > 0, "the dead worker's slots must redispatch");
+    for (i, m) in faulted.1.iter().enumerate() {
+        assert_eq!(
+            m.bytes_copied,
+            exact_slab_bytes(m),
+            "round {i}: failover re-gathers each redispatched slot once \
+             (n_slots={} redispatched={})",
+            m.n_slots,
+            m.redispatched_slots
+        );
+    }
+}
+
+#[test]
+fn decode_with_slab_batches_loses_no_sequences_under_total_loss() {
+    let mut coord =
+        Coordinator::with_source(&small_source(), 1, ServeStrategy::NoPrediction).unwrap();
+    coord.set_fault_plan(&FaultPlan::parse("kill@3").unwrap());
+    coord.set_worker_timeout(Some(0.2));
+    let requests = decode_requests(19, coord.vocab(), 3, 4, 4);
+    let report: DecodeReport = coord
+        .serve_decode(requests, &greedy_decode_opts(3, 16, 19))
+        .unwrap();
+    let s = report.fault_summary();
+    assert_eq!(s.worker_deaths, 1, "the only worker died: {s:?}");
+    assert_eq!(
+        s.lost_seqs, 0,
+        "coalesced slab batches must not weaken the chaos gate — every \
+         admitted sequence finishes, requeues or is explicitly evicted: {s:?}"
+    );
+    let c = report.copy_stats();
+    assert!(
+        c.ffn_messages > 0,
+        "decode dispatch goes through RunBatch: {c:?}"
+    );
+    assert!(
+        c.bytes_copied > 0,
+        "decode gathers account their slab bytes: {c:?}"
+    );
+}
