@@ -1,0 +1,91 @@
+//! Bench: **micro-batch wavefront pipelining** (ADR 010) — tokens/sec
+//! and worker idle fraction vs the wavefront depth K on the same trace.
+//! Serial serving (K = 1) leaves the fleet idle while the leader routes
+//! and combines; the wavefront hides those stalls under in-flight FFN
+//! slabs. Each leg serves identical rounds (the combine contract makes
+//! them bitwise identical), so the tokens/sec column isolates the
+//! overlap and the idle-fraction column shows where it came from.
+//! Results append to `BENCH_serve.json` (schema `moe-gps/serve-bench/v1`)
+//! and the CI bench-smoke wavefront gate bounds the idle fraction a
+//! `--microbatch 4` serve report records.
+
+use moe_gps::bench::emit::{bench_json_path, record_serve_benches, ServeBenchRecord};
+use moe_gps::bench::{black_box, group, Bencher};
+use moe_gps::coordinator::request::RequestGen;
+use moe_gps::coordinator::{Coordinator, ServeReport, ServeStrategy};
+
+/// The serving hot-path acceptance config (ISSUE 3): 8 virtual GPUs.
+const E2E_WORKERS: usize = 8;
+
+fn main() {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("no AOT artifacts — wavefront legs run the synthetic tiny model");
+    }
+
+    group(&format!(
+        "wavefront depth sweep ({E2E_WORKERS} virtual GPUs, 4 seqs/round)"
+    ));
+    let quick = Bencher::quick();
+    let mut records: Vec<ServeBenchRecord> = Vec::new();
+    let mut serial_tps = 0.0f64;
+    for k in [1usize, 2, 4, 8] {
+        let mut coord =
+            Coordinator::new(&artifacts, E2E_WORKERS, ServeStrategy::DistributionOnly).unwrap();
+        coord.microbatch = k;
+        let mut gen = RequestGen::new(13, coord.vocab());
+        let max_len = coord.seq_len();
+        // Warmup: compile + teach estimators + warm the tile pool.
+        let warm: Vec<_> = (0..4).map(|_| gen.request_varlen(64, max_len)).collect();
+        coord.serve_round(&warm).unwrap();
+        let reqs: Vec<_> = (0..4).map(|_| gen.request_varlen(64, max_len)).collect();
+        let summary = quick.bench(&format!("wavefront_round_k{k}"), || {
+            coord.serve_round(black_box(&reqs)).unwrap().0.n_tokens
+        });
+        summary.print();
+        // Occupancy from one measured round, aggregated the way a serve
+        // report does (window-weighted idle, summed stall, peak tiles).
+        let (m, _) = coord.serve_round(&reqs).unwrap();
+        let stats = ServeReport {
+            rounds: vec![m.clone()],
+            ..Default::default()
+        }
+        .wavefront_stats();
+        let tokens_per_s = if summary.median_s > 0.0 {
+            m.n_tokens as f64 / summary.median_s
+        } else {
+            0.0
+        };
+        if k == 1 {
+            serial_tps = tokens_per_s;
+        }
+        println!(
+            "    K={k}: {:.1} tok/s{} | idle frac {:.3} | leader stall {} | \
+             tile peak {} | {} RunBatch msgs ({} slots)",
+            tokens_per_s,
+            if k > 1 && serial_tps > 0.0 {
+                format!(" ({:+.1}% vs serial)", (tokens_per_s / serial_tps - 1.0) * 100.0)
+            } else {
+                String::new()
+            },
+            stats.worker_idle_frac,
+            moe_gps::util::human_time(stats.leader_stall_s),
+            stats.tile_peak,
+            m.ffn_messages,
+            m.n_slots,
+        );
+        records.push(ServeBenchRecord {
+            bench: format!("wavefront/k{k}"),
+            strategy: "dop".into(),
+            lookahead: false,
+            tokens_per_s,
+            ..Default::default()
+        });
+    }
+
+    let path = bench_json_path();
+    match record_serve_benches(&path, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), path.display()),
+        Err(err) => println!("\nWARN: could not write {}: {err}", path.display()),
+    }
+}

@@ -399,6 +399,51 @@ pub mod emit {
         Ok(frac)
     }
 
+    /// Wavefront-occupancy gate (ADR 010): reads a serve report written
+    /// by `serve --microbatch K --report F.json` and asserts the
+    /// window-weighted worker idle fraction (`worker_idle_frac`) is at
+    /// most `max_idle_frac`. Missing keys mean a pre-ADR-010 report and
+    /// are an error (the gate must measure something); a finite fraction
+    /// outside [0, 1] is a measurement bug and fails too. Returns
+    /// (worker_idle_frac, leader_stall_s).
+    pub fn validate_wavefront_report(
+        path: &Path,
+        max_idle_frac: f64,
+    ) -> anyhow::Result<(f64, f64)> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        let field = |name: &str| -> anyhow::Result<f64> {
+            v.get(name).and_then(Value::as_f64).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: `{name}` missing — not a wavefront-aware serve \
+                     report (serve with --report on this build)",
+                    path.display()
+                )
+            })
+        };
+        let idle = field("worker_idle_frac")?;
+        let stall = field("leader_stall_s")?;
+        anyhow::ensure!(
+            idle.is_finite() && (0.0..=1.0).contains(&idle),
+            "{}: invalid worker_idle_frac {idle} (must be a fraction in [0, 1])",
+            path.display()
+        );
+        anyhow::ensure!(
+            stall.is_finite() && stall >= 0.0,
+            "{}: invalid leader_stall_s {stall}",
+            path.display()
+        );
+        anyhow::ensure!(
+            idle <= max_idle_frac,
+            "{}: worker idle fraction {idle:.4} exceeds bound {max_idle_frac} \
+             — workers are starving through router/combine stalls (ADR 010)",
+            path.display()
+        );
+        Ok((idle, stall))
+    }
+
     /// Kernel-speedup gate (ADR 007): for every `kernels/…dot…` or
     /// `kernels/…matmul…` bench that recorded BOTH a `scalar` record and a
     /// vector-tier record (`avx2+fma` / `neon`), assert the vector tier is
@@ -767,6 +812,42 @@ pub mod emit {
             assert!(validate_copied_frac(&path, 0.5).is_err());
             std::fs::write(&path, "{\"bytes_copied\": 10}").unwrap();
             assert!(validate_copied_frac(&path, 0.5).is_err(), "half-missing");
+            let _ = std::fs::remove_file(&path);
+        }
+
+        #[test]
+        fn wavefront_gate_bounds_worker_idle_fraction() {
+            let path = std::env::temp_dir().join(format!(
+                "moe_gps_wavefront_gate_test_{}.json",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            assert!(validate_wavefront_report(&path, 0.95).is_err(), "missing file");
+
+            std::fs::write(
+                &path,
+                "{\"worker_idle_frac\": 0.42, \"leader_stall_s\": 0.003}",
+            )
+            .unwrap();
+            let (idle, stall) = validate_wavefront_report(&path, 0.95).unwrap();
+            assert!((idle - 0.42).abs() < 1e-15);
+            assert!((stall - 0.003).abs() < 1e-15);
+            assert!(validate_wavefront_report(&path, 0.4).is_err(), "over bound");
+
+            // A fraction outside [0, 1] is a measurement bug, not a pass.
+            std::fs::write(
+                &path,
+                "{\"worker_idle_frac\": 1.5, \"leader_stall_s\": 0.0}",
+            )
+            .unwrap();
+            assert!(validate_wavefront_report(&path, 2.0).is_err());
+
+            // Pre-ADR-010 report (keys absent): fail loudly rather than
+            // silently pass a report that measured nothing.
+            std::fs::write(&path, "{\"tokens_per_s\": 9.0}").unwrap();
+            assert!(validate_wavefront_report(&path, 0.95).is_err());
+            std::fs::write(&path, "{\"worker_idle_frac\": 0.1}").unwrap();
+            assert!(validate_wavefront_report(&path, 0.95).is_err(), "half-missing");
             let _ = std::fs::remove_file(&path);
         }
     }

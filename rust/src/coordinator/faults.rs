@@ -16,6 +16,12 @@
 //! replies with `recv_timeout(deadline)` and escalates through
 //! [`MAX_TIMEOUT_WAITS`] exponentially backed-off retries before
 //! declaring the owners of the outstanding groups dead.
+//!
+//! ADR 010: each micro-batch's coalesced `RunBatch` slab is one countable
+//! op, so a fault script triggers at the same op index whatever the
+//! wavefront depth — and the wavefront's final collect reuses this exact
+//! escalation ladder, with chunks that were still in flight on a dead
+//! worker redispatched to survivors through the same failover path.
 
 use anyhow::{anyhow, Result};
 

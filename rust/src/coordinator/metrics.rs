@@ -36,6 +36,9 @@ pub struct ReportMeta {
     /// Resolved SIMD dispatch tier ("scalar" | "avx2+fma" | "neon") —
     /// the kernel regime the measured constants were calibrated under.
     pub simd_tier: String,
+    /// Micro-batch wavefront depth the run was served at (ADR 010;
+    /// 0 = not recorded, 1 = serial).
+    pub microbatch: usize,
 }
 
 impl ReportMeta {
@@ -56,7 +59,8 @@ impl ReportMeta {
             .set("horizon", Value::Num(self.horizon as f64))
             .set("threads", Value::Num(self.threads as f64))
             .set("pinned", Value::Bool(self.pinned))
-            .set("simd_tier", Value::Str(self.simd_tier.clone()));
+            .set("simd_tier", Value::Str(self.simd_tier.clone()))
+            .set("microbatch", Value::Num(self.microbatch as f64));
         v
     }
 
@@ -180,8 +184,23 @@ pub struct RoundMetrics {
     /// receiving worker.
     pub bytes_shared: u64,
     /// Coalesced `WorkerMsg::RunBatch` messages sent — one per
-    /// (layer wave, worker with assigned groups) under ADR 009.
+    /// (layer wave, worker with assigned groups) under ADR 009. The
+    /// wavefront dispatches per micro-batch, so this grows ~K-fold at
+    /// `--microbatch K` (and is pinned unchanged at K=1).
     pub ffn_messages: u64,
+    /// Leader wall seconds blocked inside `recv_timeout` waiting for FFN
+    /// replies (ADR 010) — the serialization the wavefront attacks.
+    pub leader_stall_s: f64,
+    /// Wall seconds covered by the per-layer router→combine windows that
+    /// `worker_idle_frac` is normalized over (ADR 010).
+    pub wavefront_window_s: f64,
+    /// Fraction of worker capacity idle inside the wavefront windows:
+    /// 1 − Σ busy / (window × workers), clamped to [0, 1]. Drops as
+    /// `--microbatch K` overlaps routing with in-flight FFN slabs.
+    pub worker_idle_frac: f64,
+    /// Peak FFN slabs checked out of the tile pool at once (ADR 010) —
+    /// bounds how far concurrent micro-batches grow the arena.
+    pub tile_peak: u64,
 }
 
 impl RoundMetrics {
@@ -285,6 +304,50 @@ impl CopyStats {
             self.ffn_messages,
         )
     }
+}
+
+/// Wavefront overlap accounting rolled up over a run (ADR 010): the
+/// numbers the serve report exposes for the `bench-validate
+/// --max-idle-frac` gate and the idle-fraction report line.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WavefrontStats {
+    /// Window-weighted mean worker idle fraction: Σ(idle × window) /
+    /// Σ window over rounds/steps that recorded a wavefront window;
+    /// 0.0 when none did (hand-built test reports).
+    pub worker_idle_frac: f64,
+    /// Total leader wall seconds blocked on FFN replies.
+    pub leader_stall_s: f64,
+    /// Peak concurrent in-flight FFN slabs across the run.
+    pub tile_peak: u64,
+}
+
+impl WavefrontStats {
+    fn summary_suffix(&self) -> String {
+        format!(
+            "  idle frac={:.3} leader stall={} tile peak={}",
+            self.worker_idle_frac,
+            crate::util::human_time(self.leader_stall_s),
+            self.tile_peak,
+        )
+    }
+}
+
+/// Window-weighted idle-fraction aggregation shared by both report kinds.
+fn wavefront_stats(per_window: impl Iterator<Item = (f64, f64, f64, u64)>) -> WavefrontStats {
+    let mut out = WavefrontStats::default();
+    let (mut idle_weighted, mut window_total) = (0.0f64, 0.0f64);
+    for (idle, window, stall, peak) in per_window {
+        if window > 0.0 {
+            idle_weighted += idle * window;
+            window_total += window;
+        }
+        out.leader_stall_s += stall;
+        out.tile_peak = out.tile_peak.max(peak);
+    }
+    if window_total > 0.0 {
+        out.worker_idle_frac = idle_weighted / window_total;
+    }
+    out
 }
 
 /// Aggregate over a whole serve run.
@@ -472,6 +535,18 @@ impl ServeReport {
         }
     }
 
+    /// Run-level wavefront overlap accounting (ADR 010).
+    pub fn wavefront_stats(&self) -> WavefrontStats {
+        wavefront_stats(self.rounds.iter().map(|r| {
+            (
+                r.worker_idle_frac,
+                r.wavefront_window_s,
+                r.leader_stall_s,
+                r.tile_peak,
+            )
+        }))
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema: run meta +
     /// aggregates + per-round calibration samples + the fitted measured
     /// constants + the fit-vs-holdout check + the controller trace — the
@@ -486,6 +561,7 @@ impl ServeReport {
             self.mean_forecast_l1(),
             &self.fault_summary(),
             &self.copy_stats(),
+            &self.wavefront_stats(),
             &samples,
             self.controller.as_ref(),
         )
@@ -519,6 +595,9 @@ impl ServeReport {
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         );
         s.push_str(&self.copy_stats().summary_suffix());
+        if self.rounds.iter().any(|r| r.wavefront_window_s > 0.0) {
+            s.push_str(&self.wavefront_stats().summary_suffix());
+        }
         if let Some(hit) = self.realized_topk_hit_rate() {
             s.push_str(&format!("  pred top-k hit={:.3}", hit));
         }
@@ -629,6 +708,15 @@ pub struct DecodeStepMetrics {
     pub bytes_shared: u64,
     /// Coalesced `WorkerMsg::RunBatch` messages sent this step.
     pub ffn_messages: u64,
+    /// Leader wall seconds blocked waiting for FFN replies (ADR 010 —
+    /// see [`RoundMetrics::leader_stall_s`]).
+    pub leader_stall_s: f64,
+    /// Wall seconds covered by the per-layer router→combine windows.
+    pub wavefront_window_s: f64,
+    /// Worker idle fraction inside the wavefront windows (ADR 010).
+    pub worker_idle_frac: f64,
+    /// Peak FFN slabs checked out of the tile pool at once (ADR 010).
+    pub tile_peak: u64,
 }
 
 impl DecodeStepMetrics {
@@ -856,6 +944,18 @@ impl DecodeReport {
         }
     }
 
+    /// Run-level wavefront overlap accounting (ADR 010).
+    pub fn wavefront_stats(&self) -> WavefrontStats {
+        wavefront_stats(self.steps.iter().map(|s| {
+            (
+                s.worker_idle_frac,
+                s.wavefront_window_s,
+                s.leader_stall_s,
+                s.tile_peak,
+            )
+        }))
+    }
+
     /// Serialize to the `moe-gps/serve-report/v1` schema (see
     /// [`ServeReport::to_json`]).
     pub fn to_json(&self) -> Value {
@@ -868,6 +968,7 @@ impl DecodeReport {
             self.mean_forecast_l1(),
             &self.fault_summary(),
             &self.copy_stats(),
+            &self.wavefront_stats(),
             &samples,
             self.controller.as_ref(),
         )
@@ -902,6 +1003,9 @@ impl DecodeReport {
             crate::util::human_bytes(self.resident_high_water_bytes() as f64),
         );
         s.push_str(&self.copy_stats().summary_suffix());
+        if self.steps.iter().any(|st| st.wavefront_window_s > 0.0) {
+            s.push_str(&self.wavefront_stats().summary_suffix());
+        }
         if let Some(hit) = self.realized_topk_hit_rate() {
             s.push_str(&format!("  pred top-k hit={:.3}", hit));
         }
@@ -956,6 +1060,7 @@ fn report_json(
     forecast_l1: Option<f64>,
     faults: &FaultSummary,
     copy: &CopyStats,
+    wavefront: &WavefrontStats,
     samples: &[WindowSample],
     controller: Option<&ControllerReport>,
 ) -> Value {
@@ -1000,6 +1105,11 @@ fn report_json(
         .set("bytes_copied", Value::Num(copy.bytes_copied as f64))
         .set("bytes_shared", Value::Num(copy.bytes_shared as f64))
         .set("ffn_messages", Value::Num(copy.ffn_messages as f64))
+        // Wavefront overlap accounting (ADR 010): root-level additive
+        // keys the `bench-validate --max-idle-frac` gate reads.
+        .set("worker_idle_frac", Value::Num(wavefront.worker_idle_frac))
+        .set("leader_stall_s", Value::Num(wavefront.leader_stall_s))
+        .set("tile_peak", Value::Num(wavefront.tile_peak as f64))
         .set(
             "measured",
             match cal.constants() {
@@ -1395,5 +1505,82 @@ mod tests {
         assert_eq!(decode.copy_stats().bytes_copied, 64);
         assert!((decode.copy_stats().copied_frac() - 0.25).abs() < 1e-12);
         assert!(decode.summary().contains("ffn msgs=3"));
+    }
+
+    #[test]
+    fn wavefront_stats_aggregate_and_reach_the_report_json() {
+        // ADR 010: idle fraction is window-weighted, leader stall sums,
+        // tile peak is a max — and all three land as root-level JSON keys.
+        let serve = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![
+                RoundMetrics {
+                    worker_idle_frac: 0.5,
+                    wavefront_window_s: 1.0,
+                    leader_stall_s: 0.2,
+                    tile_peak: 4,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    worker_idle_frac: 0.2,
+                    wavefront_window_s: 3.0,
+                    leader_stall_s: 0.1,
+                    tile_peak: 7,
+                    ..Default::default()
+                },
+                // A round with no recorded window must not dilute the mean.
+                RoundMetrics::default(),
+            ],
+            ..Default::default()
+        };
+        let w = serve.wavefront_stats();
+        // (0.5·1 + 0.2·3) / 4 = 0.275
+        assert!((w.worker_idle_frac - 0.275).abs() < 1e-12);
+        assert!((w.leader_stall_s - 0.3).abs() < 1e-12);
+        assert_eq!(w.tile_peak, 7);
+        assert!(serve.summary().contains("idle frac=0.275"));
+        assert!(serve.summary().contains("tile peak=7"));
+        let json = serve.to_json().to_string_compact();
+        assert!(json.contains("\"worker_idle_frac\""));
+        assert!(json.contains("\"leader_stall_s\""));
+        assert!(json.contains("\"tile_peak\""));
+
+        // A run that never recorded a window reports zeros and keeps the
+        // summary line clean, but the JSON keys are still present
+        // (additive schema — the gate fails loudly only on pre-ADR-010
+        // reports that lack the keys entirely).
+        let serial = ServeReport {
+            strategy: "test".into(),
+            rounds: vec![RoundMetrics::default()],
+            ..Default::default()
+        };
+        assert_eq!(serial.wavefront_stats(), WavefrontStats::default());
+        assert!(!serial.summary().contains("idle frac"));
+        assert!(serial.to_json().to_string_compact().contains("\"worker_idle_frac\""));
+
+        let decode = DecodeReport {
+            strategy: "test".into(),
+            steps: vec![DecodeStepMetrics {
+                worker_idle_frac: 0.4,
+                wavefront_window_s: 2.0,
+                leader_stall_s: 0.05,
+                tile_peak: 3,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert!((decode.wavefront_stats().worker_idle_frac - 0.4).abs() < 1e-12);
+        assert_eq!(decode.wavefront_stats().tile_peak, 3);
+        assert!(decode.summary().contains("idle frac=0.400"));
+    }
+
+    #[test]
+    fn report_meta_microbatch_reaches_the_json() {
+        let meta = ReportMeta {
+            microbatch: 4,
+            ..Default::default()
+        };
+        let json = meta.to_json().to_string_compact();
+        assert!(json.contains("\"microbatch\":4"));
     }
 }

@@ -42,7 +42,9 @@ pub use controller::{
     ControllerConfig, ControllerReport, Decision, DecisionRecord, StrategyController,
 };
 pub use faults::{FaultPlan, WorkerHealth};
-pub use metrics::{CopyStats, DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport};
+pub use metrics::{
+    CopyStats, DecodeReport, DecodeStepMetrics, RoundMetrics, ServeReport, WavefrontStats,
+};
 pub use request::Request;
 pub use residency::ResidencyManager;
 pub use scheduler::Scheduler;

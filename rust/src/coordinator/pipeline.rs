@@ -78,14 +78,30 @@
 //! `bytes_copied`/`bytes_shared`; `tests/zero_alloc_dispatch.rs` and
 //! `tests/data_plane.rs` pin the invariants).
 //!
+//! **Micro-batch wavefront** (`Coordinator::microbatch = K`, ADR 010):
+//! with K > 1 each layer's sequence set splits into K deterministic
+//! contiguous chunks ([`microbatch_ranges`]) and the layer runs as a
+//! wavefront instead of a barrier — while chunk A's FFN slabs are in
+//! flight on the workers, the leader routes and dispatches chunk B and
+//! drains/combines chunk Z's replies as they land
+//! ([`Coordinator::wavefront_layer`]). Chunks are sequence-aligned and
+//! combined strictly in chunk order, so per-chunk slot-order accumulation
+//! *is* global slot order; repair-pass LPT is seeded with the padded load
+//! every earlier chunk already committed per worker. K = 1 takes the
+//! serial path below untouched, and every K produces bitwise-identical
+//! hidden states (`tests/wavefront.rs`). The leader's blocking reply
+//! waits are accounted as `leader_stall_s` and the layer's router→combine
+//! wall time as `wavefront_window_s`, from which `worker_idle_frac` is
+//! derived.
+//!
 //! **Determinism contract**: the combine stage accumulates `gate · out`
 //! in *global slot order*, reading each slot's row from its batch reply.
 //! Each slot's FFN row depends only on its own activation row (the
 //! reference backend's matmuls are row-independent, and bucket padding
 //! rows are zero), so the final hidden states are bitwise independent of
 //! reply arrival order, dispatch grouping, batching, prediction strategy,
-//! lookahead, and speculation — the property `tests/pipeline_parity.rs`
-//! pins down.
+//! lookahead, speculation, and micro-batch depth — the property
+//! `tests/pipeline_parity.rs` and `tests/wavefront.rs` pin down.
 
 use std::collections::{BTreeMap, HashSet};
 use std::sync::{mpsc, Arc};
@@ -197,6 +213,21 @@ pub struct StageMetrics {
     /// (layer wave, worker with assigned groups) — O(alive workers) per
     /// layer, not O(groups).
     pub ffn_messages: u64,
+    /// Leader wall seconds spent blocked in FFN reply waits (ADR 010):
+    /// the stall the wavefront overlaps with routing/dispatch of later
+    /// micro-batches.
+    pub leader_stall_s: f64,
+    /// Router→combine wall seconds summed over layers — the window in
+    /// which workers *could* be busy; the `worker_idle_frac` denominator.
+    pub wavefront_window_s: f64,
+    /// Fraction of the layer windows the worker fleet sat idle:
+    /// `1 − Σ worker_busy_s / (wavefront_window_s × n_workers)`, clamped
+    /// to [0, 1]. Computed in [`StageMetrics::finish`].
+    pub worker_idle_frac: f64,
+    /// Peak tile-pool buffers outstanding at once (sampled per layer from
+    /// [`super::tile_pool::TilePool::take_peak`]) — bounds how far the
+    /// wavefront's concurrent in-flight slabs balloon the arena.
+    pub tile_peak: u64,
     skews: Vec<f64>,
     share_l1s: Vec<f64>,
 }
@@ -237,6 +268,10 @@ impl StageMetrics {
             bytes_copied: 0,
             bytes_shared: 0,
             ffn_messages: 0,
+            leader_stall_s: 0.0,
+            wavefront_window_s: 0.0,
+            worker_idle_frac: 0.0,
+            tile_peak: 0,
             skews: Vec::new(),
             share_l1s: Vec::new(),
         }
@@ -247,6 +282,15 @@ impl StageMetrics {
         self.pred_share_layers = self.share_l1s.len();
         if !self.share_l1s.is_empty() {
             self.pred_share_l1 = stats::mean(&self.share_l1s);
+        }
+        // Fleet idle fraction over the router→combine windows (ADR 010).
+        // Dead workers count as idle capacity on purpose: the configured
+        // fleet, not the surviving one, is what the operator provisioned.
+        let n_workers = self.worker_busy_s.len();
+        if self.wavefront_window_s > 0.0 && n_workers > 0 {
+            let busy: f64 = self.worker_busy_s.iter().sum();
+            self.worker_idle_frac =
+                (1.0 - busy / (self.wavefront_window_s * n_workers as f64)).clamp(0.0, 1.0);
         }
     }
 
@@ -288,6 +332,10 @@ impl StageMetrics {
         bytes_copied: &mut u64,
         bytes_shared: &mut u64,
         ffn_messages: &mut u64,
+        leader_stall_s: &mut f64,
+        wavefront_window_s: &mut f64,
+        worker_idle_frac: &mut f64,
+        tile_peak: &mut u64,
     ) {
         *attention_s += self.attention_s;
         *router_s += self.router_s;
@@ -338,6 +386,16 @@ impl StageMetrics {
         *bytes_copied += self.bytes_copied;
         *bytes_shared += self.bytes_shared;
         *ffn_messages += self.ffn_messages;
+        *leader_stall_s += self.leader_stall_s;
+        *wavefront_window_s += self.wavefront_window_s;
+        // Like routing_skew, the idle fraction is a per-stage ratio, not a
+        // flow — but only a stage that actually measured a window may
+        // overwrite it (an empty stage would zero a real reading).
+        if self.wavefront_window_s > 0.0 {
+            *worker_idle_frac = self.worker_idle_frac;
+        }
+        // A peak, not a flow: max-assign.
+        *tile_peak = (*tile_peak).max(self.tile_peak);
     }
 
     pub fn apply_to_round(&self, m: &mut RoundMetrics) {
@@ -375,6 +433,10 @@ impl StageMetrics {
             &mut m.bytes_copied,
             &mut m.bytes_shared,
             &mut m.ffn_messages,
+            &mut m.leader_stall_s,
+            &mut m.wavefront_window_s,
+            &mut m.worker_idle_frac,
+            &mut m.tile_peak,
         );
     }
 
@@ -413,6 +475,10 @@ impl StageMetrics {
             &mut m.bytes_copied,
             &mut m.bytes_shared,
             &mut m.ffn_messages,
+            &mut m.leader_stall_s,
+            &mut m.wavefront_window_s,
+            &mut m.worker_idle_frac,
+            &mut m.tile_peak,
         );
     }
 }
@@ -631,19 +697,80 @@ impl Coordinator {
                 }
             }
 
-            // Stage: router (fused RMSNorm + logits) + rust top-k.
-            let t0 = Instant::now();
-            let (normed, slots) = self.router_stage(layer, hidden, n_real)?;
-            let actual_counts = expert_counts(&slots, self.dims.n_experts);
+            // Speculative-window bookkeeping, pulled ahead of routing so
+            // the wavefront path can partition each micro-batch the moment
+            // it routes. Targets are pure functions of (predictions,
+            // plan), so the hoist moves scheduling only — never values.
+            let spec_in = spec_cache.remove(&layer);
+            let mut spec_built: Vec<(usize, SpecTargets)> = Vec::new();
+            // Depth-k build window (ADR 006): derive targets for every
+            // not-yet-cached layer of the lookahead window during this
+            // layer's FFN wait, nearest first.
+            let spec_next: Vec<(usize, &LayerPlan, &[Vec<Vec<u8>>])> = if speculate {
+                predictions
+                    .map(|p| {
+                        (layer + 1..=window_end)
+                            .filter(|l| !spec_cache.contains_key(l))
+                            .map(|l| (l, &plans[l], p[l].as_slice()))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            } else {
+                Vec::new()
+            };
+
+            // Stage: router + dispatch + expert FFN + combine. Serial
+            // (router barrier, then `ffn_stage`) at `microbatch <= 1` —
+            // literally the pre-ADR-010 path — or pipelined as a K-deep
+            // micro-batch wavefront (`wavefront_layer`, ADR 010). Both
+            // settle only the prewarms their dispatch actually needs, and
+            // under speculation confirmed-prediction slots ship first
+            // while the next layers' targets derive during the FFN waits.
+            let window_t0 = Instant::now();
+            let (slots, actual_counts) = if self.microbatch > 1 && hidden.len() > 1 {
+                self.wavefront_layer(
+                    layer,
+                    &plans[layer],
+                    hidden,
+                    n_real,
+                    prewarmer.as_mut(),
+                    spec_in,
+                    &spec_next,
+                    &mut spec_built,
+                    metrics,
+                )?
+            } else {
+                let t0 = Instant::now();
+                let (normed, slots) = self.router_stage(layer, hidden, n_real)?;
+                let actual_counts = expert_counts(&slots, self.dims.n_experts);
+                metrics.n_slots += slots.len();
+                metrics.router_s += t0.elapsed().as_secs_f64();
+                self.ffn_stage(
+                    layer,
+                    &plans[layer],
+                    &slots,
+                    &normed,
+                    hidden,
+                    prewarmer.as_mut(),
+                    spec_in,
+                    &spec_next,
+                    &mut spec_built,
+                    metrics,
+                )?;
+                (slots, actual_counts)
+            };
+            metrics.wavefront_window_s += window_t0.elapsed().as_secs_f64();
+            metrics.tile_peak = metrics.tile_peak.max(self.tiles.take_peak());
+            spec_cache.extend(spec_built);
             metrics.skews.push(stats::skewness_of_counts(&actual_counts));
-            metrics.n_slots += slots.len();
-            metrics.router_s += t0.elapsed().as_secs_f64();
 
             // Realized prediction quality (ADR 005): now that routing is
             // settled, score the plan's predicted shares (DOP + TEP) and
             // the per-token top-k sets (TEP) against what actually routed.
             // These flow into metrics and feed the online calibrator the
-            // strategy controller re-decides from.
+            // strategy controller re-decides from. (Scored after the FFN
+            // stage since ADR 010 — pure accounting over the full slot
+            // vec, identical values in either position.)
             if !plans[layer].predicted_counts.is_empty() {
                 metrics
                     .share_l1s
@@ -677,41 +804,6 @@ impl Coordinator {
                     }
                 }
             }
-
-            // Stage: dispatch + expert FFN + combine (settles only the
-            // prewarms this layer's dispatch actually needs). Under
-            // speculation, confirmed-prediction slots ship first and the
-            // next layer's targets are derived while the workers compute.
-            let spec_in = spec_cache.remove(&layer);
-            let mut spec_built: Vec<(usize, SpecTargets)> = Vec::new();
-            // Depth-k build window (ADR 006): derive targets for every
-            // not-yet-cached layer of the lookahead window during this
-            // layer's FFN wait, nearest first.
-            let spec_next: Vec<(usize, &LayerPlan, &[Vec<Vec<u8>>])> = if speculate {
-                predictions
-                    .map(|p| {
-                        (layer + 1..=window_end)
-                            .filter(|l| !spec_cache.contains_key(l))
-                            .map(|l| (l, &plans[l], p[l].as_slice()))
-                            .collect()
-                    })
-                    .unwrap_or_default()
-            } else {
-                Vec::new()
-            };
-            self.ffn_stage(
-                layer,
-                &plans[layer],
-                &slots,
-                &normed,
-                hidden,
-                prewarmer.as_mut(),
-                spec_in,
-                &spec_next,
-                &mut spec_built,
-                metrics,
-            )?;
-            spec_cache.extend(spec_built);
 
             // Stage: observe actual routing (the §3.2.1 moving average
             // keeps teaching the DOP estimators while serving).
@@ -1239,43 +1331,23 @@ impl Coordinator {
         let mut abandoned: HashSet<u64> = HashSet::new();
         let mut waits = 0u32;
         while received < outstanding {
-            match reply_rx.recv_timeout(self.health.deadline() * (1u32 << waits)) {
-                Ok(mut result) => {
-                    if abandoned.remove(&result.tag) {
-                        // Late straggler reply for a redispatched batch:
-                        // the redispatched copy owns these slots (the
-                        // values are identical either way) — just recycle
-                        // the buffers.
-                        self.tiles.put(std::mem::take(&mut result.tile));
-                        for out in result.outs.drain(..) {
-                            self.tiles.put(out);
-                        }
-                        continue;
+            let t_wait = Instant::now();
+            let recv = reply_rx.recv_timeout(self.health.deadline() * (1u32 << waits));
+            metrics.leader_stall_s += t_wait.elapsed().as_secs_f64();
+            match recv {
+                Ok(result) => {
+                    // Any progress resets the straggler clock (abandoned
+                    // straggler duplicates are recycled, not progress).
+                    if self.absorb_ffn_reply(
+                        result,
+                        &mut abandoned,
+                        &mut inflight,
+                        &mut replies,
+                        &mut received,
+                        metrics,
+                    )? {
+                        waits = 0;
                     }
-                    received += 1;
-                    // Any progress resets the straggler clock.
-                    waits = 0;
-                    if let Some(err) = &result.error {
-                        anyhow::bail!("worker {} failed: {err}", result.worker);
-                    }
-                    self.health.observe_op(result.exec_s);
-                    metrics.worker_busy_s[result.worker] += result.exec_s;
-                    // Cold uploads at RunBatch time stall the FFN calls:
-                    // exposed.
-                    metrics.upload_bytes += result.upload_bytes;
-                    metrics.exposed_upload_bytes += result.upload_bytes;
-                    if let Some((_, meta_groups)) = inflight.remove(&result.tag) {
-                        debug_assert_eq!(result.outs.len(), meta_groups.len());
-                        debug_assert_eq!(
-                            result.n_real,
-                            meta_groups.iter().map(|(_, v)| v.len()).sum::<usize>()
-                        );
-                    }
-                    // The input slab is done travelling: recycle it now.
-                    // The output buffers stay alive until the combine
-                    // reads their rows, then recycle too.
-                    self.tiles.put(std::mem::take(&mut result.tile));
-                    replies.insert(result.tag, std::mem::take(&mut result.outs));
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     metrics.retry_count += 1;
@@ -1284,53 +1356,20 @@ impl Coordinator {
                         continue; // straggler grace: back off and re-wait
                     }
                     waits = 0;
-                    // Deadline exhausted with zero progress: every worker
-                    // still owing a reply is unresponsive. Declare them
-                    // dead and redispatch each lost batch's groups to
-                    // surviving replicas of their experts — the
-                    // duplication plan is the failover table (ADR 008).
-                    let stale: Vec<u64> = inflight.keys().copied().collect();
-                    let dead: std::collections::BTreeSet<usize> =
-                        inflight.values().map(|&(w, _)| w).collect();
-                    for w in dead {
-                        self.note_worker_death(w, metrics);
-                        if let Some(pw) = prewarmer.as_deref_mut() {
-                            metrics.prewarm_timeouts += pw.purge_worker(w) as u64;
-                        }
-                    }
-                    for tag in stale {
-                        // The slab shipped to the dead worker died with
-                        // its thread; redispatch re-gathers from `normed`
-                        // into fresh pooled slabs (one per failover
-                        // target), overwriting the slots' `slot_src`.
-                        abandoned.insert(tag);
-                        let (_, meta_groups) =
-                            inflight.remove(&tag).expect("stale tag is inflight");
-                        outstanding -= 1;
-                        self.tiles.lost += 1;
-                        let mut regrouped: BTreeMap<(usize, usize), Vec<usize>> =
-                            BTreeMap::new();
-                        for (expert, slot_indices) in meta_groups {
-                            metrics.redispatched_slots += slot_indices.len();
-                            let target = self.failover_for(&plan.placement, expert)?;
-                            regrouped
-                                .entry((target, expert))
-                                .or_default()
-                                .extend(slot_indices);
-                        }
-                        self.send_ffn_batches(
-                            layer,
-                            &regrouped,
-                            slots,
-                            normed,
-                            &reply_tx,
-                            &mut msg_tag,
-                            &mut slot_src,
-                            &mut inflight,
-                            &mut outstanding,
-                            metrics,
-                        );
-                    }
+                    self.redispatch_stale_batches(
+                        layer,
+                        plan,
+                        slots,
+                        normed,
+                        &reply_tx,
+                        &mut msg_tag,
+                        &mut slot_src,
+                        &mut inflight,
+                        &mut abandoned,
+                        &mut outstanding,
+                        prewarmer.as_deref_mut(),
+                        metrics,
+                    )?;
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     anyhow::bail!("worker channel closed");
@@ -1362,6 +1401,454 @@ impl Coordinator {
         metrics.tile_reuses += self.tiles.reuses - reuse0;
         metrics.ffn_wall_s += t0.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Absorb one FFN batch reply, shared by the serial collect loop and
+    /// both wavefront drains (ADR 010): recycle straggler duplicates of
+    /// redispatched batches, account exec time / uploads / health,
+    /// recycle the input slab, and stash the output buffers for the
+    /// combine. Returns `false` for an abandoned straggler (no progress).
+    fn absorb_ffn_reply(
+        &mut self,
+        mut result: WorkerResult,
+        abandoned: &mut HashSet<u64>,
+        inflight: &mut BTreeMap<u64, (usize, Vec<(usize, Vec<usize>)>)>,
+        replies: &mut BTreeMap<u64, Vec<Vec<f32>>>,
+        received: &mut usize,
+        metrics: &mut StageMetrics,
+    ) -> Result<bool> {
+        if abandoned.remove(&result.tag) {
+            // Late straggler reply for a redispatched batch: the
+            // redispatched copy owns these slots (the values are identical
+            // either way) — just recycle the buffers. The slab's loss was
+            // already written off (`note_lost`), so it re-enters the pool
+            // via plain `put`.
+            self.tiles.put(std::mem::take(&mut result.tile));
+            for out in result.outs.drain(..) {
+                self.tiles.put(out);
+            }
+            return Ok(false);
+        }
+        *received += 1;
+        if let Some(err) = &result.error {
+            anyhow::bail!("worker {} failed: {err}", result.worker);
+        }
+        self.health.observe_op(result.exec_s);
+        metrics.worker_busy_s[result.worker] += result.exec_s;
+        // Cold uploads at RunBatch time stall the FFN calls: exposed.
+        metrics.upload_bytes += result.upload_bytes;
+        metrics.exposed_upload_bytes += result.upload_bytes;
+        if let Some((_, meta_groups)) = inflight.remove(&result.tag) {
+            debug_assert_eq!(result.outs.len(), meta_groups.len());
+            debug_assert_eq!(
+                result.n_real,
+                meta_groups.iter().map(|(_, v)| v.len()).sum::<usize>()
+            );
+        }
+        // The input slab is done travelling: recycle it now (closing its
+        // outstanding window). The output buffers stay alive until the
+        // combine reads their rows, then recycle too.
+        self.tiles.put_taken(std::mem::take(&mut result.tile));
+        replies.insert(result.tag, std::mem::take(&mut result.outs));
+        Ok(true)
+    }
+
+    /// Reply deadline exhausted with zero progress: every worker still
+    /// owing a reply is unresponsive. Declare them dead and redispatch
+    /// each lost batch's groups to surviving replicas of their experts —
+    /// the duplication plan is the failover table (ADR 008). Shared by
+    /// the serial and wavefront collect loops; each redispatched slab is
+    /// one countable op on the failover ledger, exactly like the original.
+    #[allow(clippy::too_many_arguments)]
+    fn redispatch_stale_batches(
+        &mut self,
+        layer: usize,
+        plan: &LayerPlan,
+        slots: &[Slot],
+        normed: &[HostTensor],
+        reply_tx: &mpsc::Sender<WorkerResult>,
+        msg_tag: &mut u64,
+        slot_src: &mut [(u64, usize, usize)],
+        inflight: &mut BTreeMap<u64, (usize, Vec<(usize, Vec<usize>)>)>,
+        abandoned: &mut HashSet<u64>,
+        outstanding: &mut usize,
+        mut prewarmer: Option<&mut Prewarmer>,
+        metrics: &mut StageMetrics,
+    ) -> Result<()> {
+        let stale: Vec<u64> = inflight.keys().copied().collect();
+        let dead: std::collections::BTreeSet<usize> =
+            inflight.values().map(|&(w, _)| w).collect();
+        for w in dead {
+            self.note_worker_death(w, metrics);
+            if let Some(pw) = prewarmer.as_deref_mut() {
+                metrics.prewarm_timeouts += pw.purge_worker(w) as u64;
+            }
+        }
+        for tag in stale {
+            // The slab shipped to the dead worker died with its thread;
+            // redispatch re-gathers from `normed` into fresh pooled slabs
+            // (one per failover target), overwriting the slots' `slot_src`.
+            abandoned.insert(tag);
+            let (_, meta_groups) = inflight.remove(&tag).expect("stale tag is inflight");
+            *outstanding -= 1;
+            self.tiles.note_lost();
+            let mut regrouped: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            for (expert, slot_indices) in meta_groups {
+                metrics.redispatched_slots += slot_indices.len();
+                let target = self.failover_for(&plan.placement, expert)?;
+                regrouped
+                    .entry((target, expert))
+                    .or_default()
+                    .extend(slot_indices);
+            }
+            self.send_ffn_batches(
+                layer,
+                &regrouped,
+                slots,
+                normed,
+                reply_tx,
+                msg_tag,
+                slot_src,
+                inflight,
+                outstanding,
+                metrics,
+            );
+        }
+        Ok(())
+    }
+
+    /// One layer served as a K-deep micro-batch wavefront (ADR 010).
+    ///
+    /// The round's sequences split into up to `self.microbatch`
+    /// deterministic contiguous chunks ([`microbatch_ranges`]); for each
+    /// chunk the leader routes, partitions into speculative-confirm vs
+    /// repair exactly like the serial path, settles the prewarms that
+    /// chunk's dispatch needs, and ships its slabs — then drains any
+    /// replies that already landed *without blocking* and combines every
+    /// complete prefix chunk. While a chunk's FFN slabs are in flight the
+    /// leader is routing the next chunk: the router/combine work that was
+    /// a per-layer barrier now overlaps worker compute. The repair pass's
+    /// LPT is seeded with the padded rows all earlier dispatches of the
+    /// layer committed per worker, and the final blocking collect keeps
+    /// the serial path's escalating-deadline failover (ADR 008) verbatim.
+    ///
+    /// Determinism: chunks are sequence-aligned, slots accumulate in
+    /// global order across chunks, and chunk `m` combines only after
+    /// chunks `0..m` — so the accumulation order per token row is exactly
+    /// the serial combine's, and outputs are bitwise identical at every K.
+    #[allow(clippy::too_many_arguments)]
+    fn wavefront_layer(
+        &mut self,
+        layer: usize,
+        plan: &LayerPlan,
+        hidden: &mut [HostTensor],
+        n_real: &[usize],
+        mut prewarmer: Option<&mut Prewarmer>,
+        spec_in: Option<SpecTargets>,
+        spec_next: &[(usize, &LayerPlan, &[Vec<Vec<u8>>])],
+        spec_out: &mut Vec<(usize, SpecTargets)>,
+        metrics: &mut StageMetrics,
+    ) -> Result<(Vec<Slot>, Vec<usize>)> {
+        let e = self.dims.n_experts;
+        let t_total = Instant::now();
+        let mut router_s_local = 0.0f64;
+        let (alloc0, reuse0) = (self.tiles.allocs, self.tiles.reuses);
+        let ln = format!("layers.{layer}.moe.ln");
+        let wr = format!("layers.{layer}.moe.router");
+
+        let (reply_tx, reply_rx) = mpsc::channel::<WorkerResult>();
+        // Shared across all chunks: slots/normed accumulate in global
+        // sequence order, so `send_ffn_batches` and the failover path work
+        // on global indices unchanged.
+        let mut normed: Vec<HostTensor> = Vec::with_capacity(hidden.len());
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut slot_src: Vec<(u64, usize, usize)> = Vec::new();
+        let mut inflight: BTreeMap<u64, (usize, Vec<(usize, Vec<usize>)>)> = BTreeMap::new();
+        let mut replies: BTreeMap<u64, Vec<Vec<f32>>> = BTreeMap::new();
+        let mut abandoned: HashSet<u64> = HashSet::new();
+        let mut msg_tag = 0u64;
+        let mut outstanding = 0usize;
+        let mut received = 0usize;
+        // Not-yet-combined chunks as slot ranges, oldest first.
+        let mut chunks: std::collections::VecDeque<(usize, usize)> =
+            std::collections::VecDeque::new();
+        // Padded rows committed per worker so far this layer — the LPT
+        // seed, so later chunks' repair work avoids already-busy hosts.
+        let mut layer_load = vec![0usize; self.workers.len()];
+
+        for range in microbatch_ranges(hidden.len(), self.microbatch) {
+            // Route this chunk (global sequence indices).
+            let t0 = Instant::now();
+            let chunk_start = slots.len();
+            for seq_idx in range {
+                let mut out = self.leader.call(
+                    "router",
+                    &[In::T(&hidden[seq_idx]), In::W(&ln), In::W(&wr)],
+                )?;
+                let logits = out.remove(1);
+                let xn = out.remove(0);
+                slots.extend(route_sequence(
+                    seq_idx,
+                    &logits.data,
+                    e,
+                    n_real[seq_idx],
+                    self.dims.top_k,
+                ));
+                normed.push(xn);
+            }
+            router_s_local += t0.elapsed().as_secs_f64();
+            slot_src.resize(slots.len(), (0, 0, 0));
+
+            // Partition the chunk's slots into confirmed speculative hits
+            // and the repair set (everything, when speculation is off) —
+            // the serial `ffn_stage` partition, applied chunk-wise.
+            let mut spec_groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+            let mut repair_idx: Vec<usize> = Vec::new();
+            match &spec_in {
+                Some(targets) => {
+                    for si in chunk_start..slots.len() {
+                        let slot = &slots[si];
+                        match targets.target_for(
+                            slot.seq_idx,
+                            slot.token_idx,
+                            slot.expert as usize,
+                        ) {
+                            Some(w) => {
+                                spec_groups
+                                    .entry((w, slot.expert as usize))
+                                    .or_default()
+                                    .push(si);
+                            }
+                            None => repair_idx.push(si),
+                        }
+                    }
+                    metrics.spec_dispatch_slots +=
+                        slots.len() - chunk_start - repair_idx.len();
+                    metrics.spec_repair_slots += repair_idx.len();
+                }
+                None => repair_idx.extend(chunk_start..slots.len()),
+            }
+
+            // Speculative fast path for the chunk.
+            let spec_groups = self.remap_dead_targets(spec_groups, &plan.placement)?;
+            if !spec_groups.is_empty() {
+                if let Some(pw) = prewarmer.as_deref_mut() {
+                    pw.settle_for(
+                        layer,
+                        &spec_groups,
+                        &mut self.residency,
+                        &self.health,
+                        metrics,
+                    )?;
+                }
+                for ((w, _), v) in &spec_groups {
+                    layer_load[*w] += padded_rows(&self.buckets, v.len());
+                }
+                self.send_ffn_batches(
+                    layer,
+                    &spec_groups,
+                    &slots,
+                    &normed,
+                    &reply_tx,
+                    &mut msg_tag,
+                    &mut slot_src,
+                    &mut inflight,
+                    &mut outstanding,
+                    metrics,
+                );
+            }
+
+            // Repair pass for the chunk: quota dispatch → runt merge →
+            // LPT seeded with everything already committed this layer.
+            if !repair_idx.is_empty() {
+                let experts: Vec<u8> =
+                    repair_idx.iter().map(|&si| slots[si].expert).collect();
+                let (assignment, _loads) = if plan.share.is_empty() {
+                    dispatch_tokens(&experts, &plan.placement)
+                } else {
+                    dispatch_with_quota(&experts, &plan.placement, &plan.share)
+                };
+                let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+                for (pos, &w) in assignment.iter().enumerate() {
+                    let si = repair_idx[pos];
+                    groups
+                        .entry((w as usize, slots[si].expert as usize))
+                        .or_default()
+                        .push(si);
+                }
+                merge_runt_groups(&mut groups, MIN_GROUP);
+                let placed = lpt_place_seeded(
+                    groups,
+                    plan,
+                    self.workers.len(),
+                    &self.buckets,
+                    &layer_load,
+                );
+                let placed = self.remap_dead_targets(placed, &plan.placement)?;
+                if let Some(pw) = prewarmer.as_deref_mut() {
+                    pw.settle_for(
+                        layer,
+                        &placed,
+                        &mut self.residency,
+                        &self.health,
+                        metrics,
+                    )?;
+                }
+                for ((w, _), v) in &placed {
+                    layer_load[*w] += padded_rows(&self.buckets, v.len());
+                }
+                self.send_ffn_batches(
+                    layer,
+                    &placed,
+                    &slots,
+                    &normed,
+                    &reply_tx,
+                    &mut msg_tag,
+                    &mut slot_src,
+                    &mut inflight,
+                    &mut outstanding,
+                    metrics,
+                );
+            }
+            chunks.push_back((chunk_start, slots.len()));
+
+            // Opportunistic drain: absorb whatever already landed without
+            // blocking, then combine every complete prefix chunk — the
+            // leader moves straight on to routing the next chunk.
+            loop {
+                match reply_rx.try_recv() {
+                    Ok(result) => {
+                        self.absorb_ffn_reply(
+                            result,
+                            &mut abandoned,
+                            &mut inflight,
+                            &mut replies,
+                            &mut received,
+                            metrics,
+                        )?;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        anyhow::bail!("worker channel closed")
+                    }
+                }
+            }
+            self.combine_ready_chunks(&mut chunks, &slots, &slot_src, &mut replies, hidden);
+        }
+
+        // Every chunk is dispatched; the workers are busy — the window in
+        // which the lookahead layers' speculative targets derive from
+        // predictions + plan alone (depth-k, ADR 006).
+        for &(l, plan_next, preds_next) in spec_next {
+            spec_out.push((l, SpecTargets::build(preds_next, plan_next)));
+        }
+
+        // Final blocking collect: identical straggler-grace / death /
+        // failover ladder to the serial path (ADR 008).
+        let mut waits = 0u32;
+        while received < outstanding {
+            let t_wait = Instant::now();
+            let recv = reply_rx.recv_timeout(self.health.deadline() * (1u32 << waits));
+            metrics.leader_stall_s += t_wait.elapsed().as_secs_f64();
+            match recv {
+                Ok(result) => {
+                    if self.absorb_ffn_reply(
+                        result,
+                        &mut abandoned,
+                        &mut inflight,
+                        &mut replies,
+                        &mut received,
+                        metrics,
+                    )? {
+                        waits = 0;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    metrics.retry_count += 1;
+                    waits += 1;
+                    if waits < MAX_TIMEOUT_WAITS {
+                        continue;
+                    }
+                    waits = 0;
+                    self.redispatch_stale_batches(
+                        layer,
+                        plan,
+                        &slots,
+                        &normed,
+                        &reply_tx,
+                        &mut msg_tag,
+                        &mut slot_src,
+                        &mut inflight,
+                        &mut abandoned,
+                        &mut outstanding,
+                        prewarmer.as_deref_mut(),
+                        metrics,
+                    )?;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("worker channel closed");
+                }
+            }
+        }
+        self.combine_ready_chunks(&mut chunks, &slots, &slot_src, &mut replies, hidden);
+        debug_assert!(chunks.is_empty(), "all chunks combined after collect");
+        debug_assert!(replies.is_empty(), "all reply buffers recycled");
+
+        let actual_counts = expert_counts(&slots, e);
+        metrics.n_slots += slots.len();
+        metrics.router_s += router_s_local;
+        metrics.ffn_wall_s += (t_total.elapsed().as_secs_f64() - router_s_local).max(0.0);
+        metrics.tile_allocs += self.tiles.allocs - alloc0;
+        metrics.tile_reuses += self.tiles.reuses - reuse0;
+        Ok((slots, actual_counts))
+    }
+
+    /// Combine every *ready* prefix micro-batch (ADR 010): a chunk is
+    /// ready when all its slots' batches have replied. Chunks combine
+    /// strictly oldest-first — sequence-aligned chunks make per-chunk
+    /// slot-order accumulation identical to the serial global-slot-order
+    /// combine — and a fully combined chunk recycles its reply buffers
+    /// immediately, bounding live slabs to the in-flight window.
+    fn combine_ready_chunks(
+        &mut self,
+        chunks: &mut std::collections::VecDeque<(usize, usize)>,
+        slots: &[Slot],
+        slot_src: &[(u64, usize, usize)],
+        replies: &mut BTreeMap<u64, Vec<Vec<f32>>>,
+        hidden: &mut [HostTensor],
+    ) {
+        let d = self.dims.d_model;
+        while let Some(&(s0, s1)) = chunks.front() {
+            let ready =
+                (s0..s1).all(|si| replies.contains_key(&slot_src[si].0));
+            if !ready {
+                return;
+            }
+            let mut used: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+            for si in s0..s1 {
+                let (tag, gi, row) = slot_src[si];
+                let slot = &slots[si];
+                let out = &replies[&tag][gi];
+                let out_row = &out[row * d..(row + 1) * d];
+                let h = &mut hidden[slot.seq_idx];
+                let dst = &mut h.data[slot.token_idx * d..(slot.token_idx + 1) * d];
+                for (a, &b) in dst.iter_mut().zip(out_row) {
+                    *a += slot.gate * b;
+                }
+                used.insert(tag);
+            }
+            // Batch tags never span chunks (dispatch and failover both
+            // regroup within one chunk), so the chunk's buffers recycle
+            // as soon as it combines.
+            for tag in used {
+                if let Some(outs) = replies.remove(&tag) {
+                    for out in outs {
+                        self.tiles.put(out);
+                    }
+                }
+            }
+            chunks.pop_front();
+        }
     }
 
     /// The surviving host an expert's lost group fails over to (ADR 008):
@@ -1832,6 +2319,25 @@ pub fn padded_rows(buckets: &[usize], n: usize) -> usize {
     split_into_buckets(buckets, n).iter().map(|&(_, b)| b).sum()
 }
 
+/// The ADR 010 micro-batch split rule: partition `n` sequences into at
+/// most `k` deterministic contiguous chunks, chunk `m` covering
+/// `[⌊m·n/k⌋, ⌊(m+1)·n/k⌋)`. Empty chunks are skipped, so `k > n`
+/// degenerates to one sequence per chunk and `k <= 1` to the whole set.
+/// Pure arithmetic on (n, k) — the wavefront's chunking (and therefore
+/// its dispatch schedule) never depends on timing.
+pub fn microbatch_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let k = k.max(1);
+    let mut out = Vec::with_capacity(k.min(n));
+    for m in 0..k {
+        let start = m * n / k;
+        let end = (m + 1) * n / k;
+        if end > start {
+            out.push(start..end);
+        }
+    }
+    out
+}
+
 /// §Perf iteration 3: greedy LPT placement of merged groups. The
 /// dispatcher's slot-level least-loaded choice ignores bucket padding — a
 /// 3-slot and a 14-slot group cost the same padded FFN call, and on
@@ -2001,9 +2507,15 @@ mod tests {
         s.bytes_copied = 640;
         s.bytes_shared = 4096;
         s.ffn_messages = 7;
+        s.leader_stall_s = 0.25;
+        s.wavefront_window_s = 4.0;
+        s.tile_peak = 9;
         s.finish();
         assert_eq!(s.pred_share_layers, 2);
         assert!((s.pred_share_l1 - 0.3).abs() < 1e-12);
+        // finish() derives the idle fraction from busy vs window × fleet:
+        // 1 − (1 + 2) / (4 × 2) = 0.625.
+        assert!((s.worker_idle_frac - 0.625).abs() < 1e-12);
         let mut round = RoundMetrics {
             worker_busy_s: vec![0.0; 2],
             worker_slots: vec![0; 2],
@@ -2035,13 +2547,21 @@ mod tests {
         assert_eq!(round.bytes_copied, 640);
         assert_eq!(round.bytes_shared, 4096);
         assert_eq!(round.ffn_messages, 7);
+        assert!((round.leader_stall_s - 0.25).abs() < 1e-12);
+        assert!((round.wavefront_window_s - 4.0).abs() < 1e-12);
+        assert!((round.worker_idle_frac - 0.625).abs() < 1e-12);
+        assert_eq!(round.tile_peak, 9);
         // High-water is max-assigned, not summed: a second application
-        // with a lower peak must not move it.
+        // with a lower peak must not move it — and a stage that measured
+        // no window must not clobber the idle fraction.
         let mut lower = StageMetrics::new(2);
         lower.resident_high_water_bytes = 100;
+        lower.tile_peak = 3;
         lower.finish();
         lower.apply_to_round(&mut round);
         assert_eq!(round.resident_high_water_bytes, 900);
+        assert_eq!(round.tile_peak, 9);
+        assert!((round.worker_idle_frac - 0.625).abs() < 1e-12);
         // Degraded is a latch: a healthy stage must not clear it.
         assert!(round.degraded);
         assert!((round.routing_skew - 1.5).abs() < 1e-12);
@@ -2086,6 +2606,33 @@ mod tests {
         assert_eq!(step.bytes_copied, 640);
         assert_eq!(step.bytes_shared, 4096);
         assert_eq!(step.ffn_messages, 7);
+        assert!((step.leader_stall_s - 0.25).abs() < 1e-12);
+        assert!((step.wavefront_window_s - 4.0).abs() < 1e-12);
+        assert!((step.worker_idle_frac - 0.625).abs() < 1e-12);
+        assert_eq!(step.tile_peak, 9);
+    }
+
+    #[test]
+    fn microbatch_ranges_cover_and_are_contiguous() {
+        for n in 0..12usize {
+            for k in 1..8usize {
+                let ranges = microbatch_ranges(n, k);
+                // Concatenated ranges reproduce 0..n exactly, in order.
+                let flat: Vec<usize> = ranges.iter().cloned().flatten().collect();
+                assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} k={k}");
+                assert!(ranges.len() <= k.min(n.max(1)), "n={n} k={k}");
+                // Near-equal: chunk sizes differ by at most one.
+                if let (Some(min), Some(max)) = (
+                    ranges.iter().map(|r| r.len()).min(),
+                    ranges.iter().map(|r| r.len()).max(),
+                ) {
+                    assert!(max - min <= 1, "n={n} k={k}: {min}..{max}");
+                }
+            }
+        }
+        assert_eq!(microbatch_ranges(6, 1), vec![0..6]);
+        assert_eq!(microbatch_ranges(3, 8).len(), 3, "k > n: one seq per chunk");
+        assert_eq!(microbatch_ranges(0, 4), Vec::<std::ops::Range<usize>>::new());
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //! Determinism: residency moves bytes, never values — an evicted replica
 //! re-uploads the identical weights on next use, so serving under any cap
 //! is bitwise identical to unbounded serving (`tests/residency.rs`).
+//!
+//! The micro-batch wavefront (ADR 010) keeps several micro-batches of the
+//! *same* layer in flight at once. That concurrency is invisible here by
+//! construction: the active layer and the prewarm window stay pinned for
+//! the whole wavefront window (pins are per layer, not per chunk), so a
+//! later chunk's admission can never evict a replica an earlier chunk's
+//! in-flight batch still computes against.
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 

@@ -176,6 +176,14 @@ pub struct Coordinator {
     /// speculative targets are derived during the previous layer's FFN
     /// phase. Numerics are bitwise identical either way.
     pub speculative: bool,
+    /// ADR 010: micro-batch wavefront depth (`serve --microbatch K`).
+    /// K > 1 splits every round/step's sequences into K deterministic
+    /// contiguous chunks and pipelines router → dispatch → FFN → combine
+    /// across them, so the workers stay busy through the leader's routing
+    /// and combine work. 1 (the default) is the serial per-layer barrier
+    /// path; outputs are bitwise identical at every K
+    /// (`tests/wavefront.rs`).
+    pub microbatch: usize,
     /// Reusable tile-buffer arena for the FFN dispatch path (ADR 003):
     /// steady-state serving gathers/pads/scatters with zero per-layer
     /// heap allocation; buffers recycle via the worker reply path.
@@ -286,6 +294,7 @@ impl Coordinator {
             lookahead: 0,
             prewarm_budget_bytes: None,
             speculative: false,
+            microbatch: 1,
             tiles: TilePool::new(),
             tep,
             controller: None,
@@ -492,6 +501,10 @@ impl Coordinator {
             // The sim's default drift stands in until the calibrator has a
             // measured realized forecast error to substitute (ADR 006).
             forecast_drift: None,
+            microbatch: self.microbatch,
+            // Copied-bytes pricing needs a measured report (`advise
+            // --from-serve`, ADR 009 follow-up); live the sim default is 0.
+            copied_bytes_per_token: None,
         }
     }
 
@@ -537,6 +550,7 @@ impl Coordinator {
             memory_cap_bytes: self.residency.cap_bytes(),
             adaptive: self.controller.is_some(),
             horizon: self.placement.horizon,
+            microbatch: self.microbatch,
             threads: crate::runtime::pool::threads(),
             pinned: crate::runtime::pool::pinning(),
             simd_tier: crate::runtime::simd::active_tier().name().into(),

@@ -54,6 +54,16 @@ pub struct TilePool {
     /// Buffers abandoned with a dead worker (ADR 008): shipped in a
     /// dispatch whose reply never came back, so they can't be recycled.
     pub lost: u64,
+    /// Buffers currently checked out via [`TilePool::take`] and not yet
+    /// returned ([`TilePool::put_taken`]) or written off
+    /// ([`TilePool::note_lost`]) — the live-slab gauge the wavefront's
+    /// concurrent micro-batches move (ADR 010).
+    pub outstanding: u64,
+    /// High-water mark of `outstanding` since the last
+    /// [`TilePool::take_peak`]: how many slabs were in flight at once.
+    /// Without this the wavefront could balloon the arena silently — the
+    /// pipeline samples it per layer into `tile_peak` on the metrics.
+    pub peak_outstanding: u64,
 }
 
 impl TilePool {
@@ -70,6 +80,8 @@ impl TilePool {
             .range(cap..)
             .find(|(_, list)| !list.is_empty())
             .map(|(&k, _)| k);
+        self.outstanding += 1;
+        self.peak_outstanding = self.peak_outstanding.max(self.outstanding);
         if let Some(k) = key {
             let list = self.free.get_mut(&k).expect("key just found");
             let (_, mut buf) = list.pop().expect("non-empty list");
@@ -82,6 +94,34 @@ impl TilePool {
         }
         self.allocs += 1;
         Vec::with_capacity(cap)
+    }
+
+    /// Return a buffer that was checked out via [`Self::take`]: decrements
+    /// the outstanding gauge, then pools it like [`Self::put`]. Buffers
+    /// that entered the data plane elsewhere (the workers allocate their
+    /// own FFN output buffers) go back through plain [`Self::put`], which
+    /// leaves the gauge alone.
+    pub fn put_taken(&mut self, buf: Vec<f32>) {
+        self.outstanding = self.outstanding.saturating_sub(1);
+        self.put(buf);
+    }
+
+    /// A taken buffer died with its worker (ADR 008): count the loss and
+    /// drop it from the outstanding gauge. If the straggler reply shows up
+    /// after all, its tile re-enters the pool via plain [`Self::put`] so
+    /// the write-off is never double-counted.
+    pub fn note_lost(&mut self) {
+        self.lost += 1;
+        self.outstanding = self.outstanding.saturating_sub(1);
+    }
+
+    /// Read-and-rearm the outstanding high-water mark: returns the peak
+    /// since the previous call and resets it to the *current* outstanding
+    /// count. The pipeline samples this once per layer into `tile_peak`.
+    pub fn take_peak(&mut self) -> u64 {
+        let peak = self.peak_outstanding;
+        self.peak_outstanding = self.outstanding;
+        peak
     }
 
     /// Return a buffer to the pool, keyed by its capacity and stamped with
@@ -181,6 +221,44 @@ mod tests {
         assert_eq!(pool.aged_out, 1);
         assert!(pool.take(16).capacity() >= 16, "fresh buffer still usable");
         assert_eq!(pool.reuses, 1);
+    }
+
+    #[test]
+    fn outstanding_gauge_tracks_takes_returns_and_losses() {
+        let mut pool = TilePool::new();
+        let a = pool.take(8);
+        let b = pool.take(8);
+        let c = pool.take(8);
+        assert_eq!(pool.outstanding, 3);
+        assert_eq!(pool.take_peak(), 3, "peak reports the high-water mark");
+        pool.put_taken(a);
+        assert_eq!(pool.outstanding, 2);
+        // A worker-allocated output buffer returned via plain put leaves
+        // the gauge alone — only slab takes are outstanding.
+        pool.put(Vec::with_capacity(8));
+        assert_eq!(pool.outstanding, 2);
+        pool.note_lost(); // b died with its worker
+        assert_eq!(pool.lost, 1);
+        assert_eq!(pool.outstanding, 1);
+        drop(b);
+        pool.put_taken(c);
+        assert_eq!(pool.outstanding, 0);
+        // The first take_peak re-armed the mark at the then-current 3;
+        // nothing exceeded it since, so the next read still reports 3.
+        assert_eq!(pool.take_peak(), 3);
+    }
+
+    #[test]
+    fn take_peak_rearms_to_current_outstanding() {
+        let mut pool = TilePool::new();
+        let a = pool.take(8);
+        let _b = pool.take(8);
+        pool.put_taken(a);
+        assert_eq!(pool.take_peak(), 2);
+        // One buffer still out: the re-armed peak starts there, and a
+        // single further take peaks at 2 again, not 3.
+        let _c = pool.take(8);
+        assert_eq!(pool.take_peak(), 2);
     }
 
     #[test]

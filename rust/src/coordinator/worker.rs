@@ -10,6 +10,13 @@
 //! [`super::residency::ResidencyManager`] (ADR 004), which both gates
 //! duplicate prewarm sends and emits the [`WorkerMsg::Evict`] messages
 //! that keep each engine inside its `--memory-cap` budget.
+//!
+//! Under the micro-batch wavefront (ADR 010) a worker may hold several
+//! in-flight [`WorkerMsg::RunBatch`] slabs at once — one per micro-batch
+//! chunk whose FFN work it owns. Nothing here changes: the queue is FIFO,
+//! each batch executes and replies independently, and each counts as one
+//! op on the fault clock, so an injected fault lands on the same
+//! countable op at every wavefront depth.
 
 use std::sync::mpsc;
 use std::sync::Arc;

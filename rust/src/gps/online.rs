@@ -608,6 +608,12 @@ pub struct ServedReport {
     /// Host bytes moved by `Arc` reference (ADR 009; None for old
     /// reports).
     pub bytes_shared: Option<f64>,
+    /// Window-weighted worker idle fraction under the wavefront
+    /// (ADR 010; None for old reports).
+    pub worker_idle_frac: Option<f64>,
+    /// Seconds the leader spent blocked on FFN replies with no routing
+    /// work left (ADR 010; None for old reports).
+    pub leader_stall_s: Option<f64>,
 }
 
 /// Parse a serve-report JSON file (see `ServeReport::to_json`). Fails
@@ -674,6 +680,15 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
             memory_cap_bytes,
             horizon: meta.get("horizon").and_then(Value::as_usize).unwrap_or(0),
             forecast_drift: None,
+            // Pre-ADR-010 reports lack the meta field: 0 means "not
+            // recorded", which prices identically to serial (K = 1).
+            microbatch: meta
+                .get("microbatch")
+                .and_then(Value::as_usize)
+                .unwrap_or(0),
+            // Derived by the caller from `bytes_copied` / tokens when the
+            // report measured the data plane (ADR 009 follow-up).
+            copied_bytes_per_token: None,
         },
         adaptive: meta
             .get("adaptive")
@@ -700,6 +715,9 @@ pub fn parse_serve_report(text: &str) -> Result<ServedReport> {
         // Data-plane copy accounting (ADR 009), same lenient contract.
         bytes_copied: v.get("bytes_copied").and_then(Value::as_f64),
         bytes_shared: v.get("bytes_shared").and_then(Value::as_f64),
+        // Wavefront occupancy (ADR 010), same lenient contract.
+        worker_idle_frac: v.get("worker_idle_frac").and_then(Value::as_f64),
+        leader_stall_s: v.get("leader_stall_s").and_then(Value::as_f64),
     })
 }
 

@@ -87,6 +87,15 @@ pub struct Regime {
     /// `None` = the sim's default; `advise --from-serve` substitutes the
     /// measured realized forecast error.
     pub forecast_drift: Option<f64>,
+    /// Micro-batch wavefront depth (ADR 010): leader routing for
+    /// micro-batches 2..K hides under the previous micro-batch's FFN
+    /// window. 0 or 1 = serial (no overlap priced).
+    pub microbatch: usize,
+    /// Measured data-plane copy traffic in bytes per token (ADR 009):
+    /// priced as a host-memory-bandwidth charge on every strategy.
+    /// `None` = not measured (no charge); `advise --from-serve`
+    /// substitutes the serve report's `bytes_copied / tokens`.
+    pub copied_bytes_per_token: Option<f64>,
 }
 
 /// Figure-7 row: savings of each strategy vs baseline, and their difference
@@ -142,7 +151,9 @@ pub fn strategy_savings_in(
         .with_overlap(regime.overlap)
         .with_speculative(regime.speculative && regime.overlap)
         .with_memory_cap(regime.memory_cap_bytes)
-        .with_horizon(regime.horizon, regime.forecast_drift);
+        .with_horizon(regime.horizon, regime.forecast_drift)
+        .with_microbatch(regime.microbatch.max(1))
+        .with_copied_bytes(regime.copied_bytes_per_token.unwrap_or(0.0));
     let baseline_s = sim.baseline_total(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim
@@ -196,7 +207,9 @@ pub fn decode_strategy_savings_in(
         .with_overlap(regime.overlap)
         .with_speculative(regime.speculative && regime.overlap)
         .with_memory_cap(regime.memory_cap_bytes)
-        .with_horizon(regime.horizon, regime.forecast_drift);
+        .with_horizon(regime.horizon, regime.forecast_drift)
+        .with_microbatch(regime.microbatch.max(1))
+        .with_copied_bytes(regime.copied_bytes_per_token.unwrap_or(0.0));
     let baseline_s = sim.baseline_step(skew);
     let (dop_error, overhead_fit) = interpolate_for_skew(cals, skew);
     let dop_s = sim.step_total(skew, Strategy::DistributionOnly { error_rate: dop_error });
@@ -351,6 +364,8 @@ mod tests {
         memory_cap_bytes: None,
         horizon: 0,
         forecast_drift: None,
+        microbatch: 0,
+        copied_bytes_per_token: None,
     };
     const SPECULATIVE: Regime = Regime {
         overlap: true,
@@ -358,6 +373,8 @@ mod tests {
         memory_cap_bytes: None,
         horizon: 0,
         forecast_drift: None,
+        microbatch: 0,
+        copied_bytes_per_token: None,
     };
 
     #[test]
@@ -563,6 +580,74 @@ mod tests {
         assert!(
             d_at(8, None).dop_saving_s <= d_at(1, None).dop_saving_s + 1e-15
         );
+    }
+
+    #[test]
+    fn microbatch_and_copied_bytes_regimes_price_sanely() {
+        // ADR 010: a micro-batch depth > 1 hides leader routing under the
+        // FFN window, so every strategy's total can only shrink — the
+        // baseline moves too (the wavefront is an engine regime, not a
+        // prediction strategy). Depths 0 and 1 are exact no-ops.
+        let model = ModelConfig::mixtral_8x7b();
+        let system = SystemSpec::four_a100_nvlink();
+        let c = cals(&model, &system);
+        let at = |mb: usize| {
+            strategy_savings_in(
+                &model,
+                &system,
+                &c,
+                2.0,
+                1,
+                512,
+                Regime { microbatch: mb, ..Regime::default() },
+            )
+        };
+        let plain = strategy_savings(&model, &system, &c, 2.0, 1, 512);
+        let serial = at(1);
+        assert!((serial.baseline_s - plain.baseline_s).abs() < 1e-15);
+        assert!((serial.dop_saving_s - plain.dop_saving_s).abs() < 1e-15);
+        let wave = at(4);
+        assert!(
+            wave.baseline_s <= plain.baseline_s + 1e-15,
+            "hiding routing can only shrink the baseline: {} -> {}",
+            plain.baseline_s,
+            wave.baseline_s
+        );
+        assert!(wave.baseline_s.is_finite() && wave.baseline_s > 0.0);
+        // Deeper wavefronts hide monotonically more (asymptote min(r, f)).
+        assert!(at(8).baseline_s <= wave.baseline_s + 1e-15);
+
+        // ADR 009 follow-up: measured copy traffic is a strategy-
+        // independent host-bandwidth charge — totals grow, savings don't
+        // move (every strategy moves the same activation bytes).
+        let copied = strategy_savings_in(
+            &model,
+            &system,
+            &c,
+            2.0,
+            1,
+            512,
+            Regime {
+                copied_bytes_per_token: Some(4096.0 * 4.0),
+                ..Regime::default()
+            },
+        );
+        assert!(copied.baseline_s > plain.baseline_s);
+        assert!((copied.dop_saving_s - plain.dop_saving_s).abs() < 1e-12);
+        assert!((copied.tep_best_saving_s - plain.tep_best_saving_s).abs() < 1e-12);
+
+        // Decode obeys the same orderings.
+        let d_plain = decode_strategy_savings(&model, &system, &c, 2.0, 16, 512);
+        let d_wave = decode_strategy_savings_in(
+            &model,
+            &system,
+            &c,
+            2.0,
+            16,
+            512,
+            Regime { microbatch: 4, ..Regime::default() },
+        );
+        assert!(d_wave.baseline_s <= d_plain.baseline_s + 1e-15);
     }
 
     #[test]

@@ -87,6 +87,10 @@ USAGE: moe-gps <subcommand> [options]
                 --forecast-drift F (per-window forecast L1 drift used in
                                 the staleness term; default 0.02, or pass
                                 a measured value)
+                --microbatch K (ADR 010: price the micro-batch wavefront —
+                                per-micro-batch routing compute hides
+                                under the previous micro-batch's FFN
+                                window; shows the cells the overlap flips)
                 --from-serve report.json (ADR 005: render the map from the
                                 *measured* constants a `serve --report` run
                                 recorded — measured skew/bandwidth/share
@@ -107,6 +111,11 @@ USAGE: moe-gps <subcommand> [options]
                                 to the workers as Arc-shared read views;
                                 bitwise identical, traffic accounted as
                                 bytes_shared instead of bytes_copied)
+                --microbatch K (ADR 010: split each round/step into K
+                                micro-batches and pipeline them as a
+                                wavefront — the leader routes micro-batch
+                                B while A's FFN slabs are in flight.
+                                Bitwise identical at every K; 1 = serial)
                 --horizon H    (ADR 006: plan for the forecast distribution
                                 H replan windows ahead; predicted-hot
                                 replicas prewarm before the spike; 0 =
@@ -151,7 +160,8 @@ USAGE: moe-gps <subcommand> [options]
                 --forecast-report F.json --max-forecast-l1 B
                 --min-kernel-speedup X --baseline OLD.json
                 --max-regression F --chaos-report F.json
-                --copy-report F.json --max-copied-frac F]
+                --copy-report F.json --max-copied-frac F
+                --wavefront-report F.json --max-idle-frac F]
                validate a serve-bench trajectory file against the
                moe-gps/serve-bench/v1 schema (the CI bench-smoke gate);
                with --forecast-report, additionally gate the realized
@@ -168,7 +178,10 @@ USAGE: moe-gps <subcommand> [options]
                with --copy-report, gate a serve report's data-plane copy
                accounting (ADR 009): fail when bytes_copied /
                (bytes_copied + bytes_shared) exceeds --max-copied-frac
-               (default 0.5)
+               (default 0.5);
+               with --wavefront-report, gate a serve report's wavefront
+               occupancy (ADR 010): fail when the window-weighted worker
+               idle fraction exceeds --max-idle-frac (default 0.95)
 ",
         moe_gps::VERSION
     );
@@ -314,12 +327,18 @@ fn cmd_advise(args: &Args) -> Result<()> {
         })?),
         None => None,
     };
+    // ADR 010: micro-batch wavefront depth — K > 1 hides the leader's
+    // per-micro-batch routing compute under the previous micro-batch's
+    // in-flight FFN window. 0/1 both mean serial.
+    let microbatch = args.opt_usize("microbatch", 0)?;
     let regime = gps::Regime {
         overlap,
         speculative,
         memory_cap_bytes,
         horizon,
         forecast_drift,
+        microbatch,
+        copied_bytes_per_token: None,
     };
     let skews = args.opt_f64_list("skews", &[1.0, 1.4, 2.0, 3.0, 4.0])?;
     let bandwidths = args.opt_f64_list("bandwidths", &[600.0, 300.0, 128.0, 64.0])?;
@@ -363,6 +382,9 @@ fn cmd_advise(args: &Args) -> Result<()> {
     if horizon > 0 {
         tags.push(format!("forecast horizon {horizon}"));
     }
+    if microbatch > 1 {
+        tags.push(format!("microbatch {microbatch}"));
+    }
     println!(
         "phase: {}{}",
         phase.name(),
@@ -405,6 +427,17 @@ fn cmd_advise(args: &Args) -> Result<()> {
         let base = build(gps::Regime {
             horizon: 0,
             forecast_drift: None,
+            ..regime
+        })?;
+        println!("{}", gps::guidelines::render_flips(&base, &cells));
+    }
+    if microbatch > 1 {
+        // Flips vs the same regime served serially: which cells the
+        // wavefront's hidden routing compute moves (ADR 010). The hiding
+        // is strategy-independent but shrinks with the FFN window, so
+        // cells near the DOP/TEP frontier can flip.
+        let base = build(gps::Regime {
+            microbatch: 0,
             ..regime
         })?;
         println!("{}", gps::guidelines::render_flips(&base, &cells));
@@ -475,6 +508,10 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             served.pinned,
         );
     }
+    // The regime the map is priced under starts from what the run served
+    // and gains the measured data-plane term: copied bytes per token
+    // prices the host-copy bandwidth charge (ADR 009 follow-up).
+    let mut regime = served.regime;
     if let (Some(copied), Some(shared)) = (served.bytes_copied, served.bytes_shared) {
         // ADR 009: how much of the coordinator↔worker data plane moved by
         // reference — high copied fractions mean host-copy overhead is
@@ -486,6 +523,23 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             moe_gps::util::human_bytes(copied),
             moe_gps::util::human_bytes(shared),
             frac,
+        );
+        if measured.tokens > 0.0 && copied > 0.0 {
+            regime.copied_bytes_per_token = Some(copied / measured.tokens);
+            println!(
+                "  pricing host copies at {} per token",
+                moe_gps::util::human_bytes(copied / measured.tokens),
+            );
+        }
+    }
+    if let Some(idle) = served.worker_idle_frac {
+        // ADR 010: wavefront occupancy — how much worker capacity the
+        // serve left on the table waiting for leader routing/combine.
+        println!(
+            "  wavefront: microbatch {}  worker idle frac {:.3}  leader stall {}",
+            if regime.microbatch > 0 { regime.microbatch } else { 1 },
+            idle,
+            moe_gps::util::human_time(served.leader_stall_s.unwrap_or(0.0)),
         );
     }
     if served.worker_deaths.unwrap_or(0) > 0 || served.degraded_samples.unwrap_or(0) > 0 {
@@ -510,7 +564,7 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             &bandwidths,
             1,
             512,
-            served.regime,
+            regime,
         ),
         ServePhase::Decode => decode_cells(
             &model,
@@ -519,7 +573,7 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
             &bandwidths,
             batch,
             ctx,
-            served.regime,
+            regime,
         ),
     };
     println!(
@@ -545,7 +599,7 @@ fn cmd_advise_from_serve(args: &Args, path: &str) -> Result<()> {
         &cals,
         op_batch,
         seq_or_ctx,
-        served.regime,
+        regime,
     );
     println!(
         "measured operating point (skew {:.2}, bw {}): recommend {}",
@@ -657,6 +711,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Bitwise identical either way; the copy counters show the traffic
     // moving from `bytes_copied` to `bytes_shared`.
     coord.parallel_attention = args.flag("parallel-attention");
+    // ADR 010: micro-batch wavefront depth. K > 1 splits every round's /
+    // step's slot set into K deterministic micro-batches and overlaps the
+    // leader's routing/dispatch with in-flight FFN slabs. Combine order is
+    // pinned to global slot order, so outputs are bitwise identical at
+    // every K (1 = the serial path, literally).
+    coord.microbatch = args.opt_usize("microbatch", 1)?.max(1);
     // ADR 003: speculative TEP scatter rides the lookahead pipeline.
     coord.speculative = args.flag("speculative");
     if coord.speculative {
@@ -916,6 +976,21 @@ fn cmd_bench_validate(args: &Args) -> Result<()> {
             bound,
         )?;
         println!("{report}: copied fraction {frac:.4} within bound {bound}");
+    }
+    // ADR 010: wavefront occupancy gate — fail when a serve report's
+    // window-weighted worker idle fraction exceeds the bound (workers
+    // starving through router/combine stalls).
+    if let Some(report) = args.opt("wavefront-report") {
+        let bound = args.opt_f64("max-idle-frac", 0.95)?;
+        let (idle, stall) = moe_gps::bench::emit::validate_wavefront_report(
+            std::path::Path::new(report),
+            bound,
+        )?;
+        println!(
+            "{report}: worker idle fraction {idle:.4} within bound {bound} \
+             (leader stall {})",
+            moe_gps::util::human_time(stall)
+        );
     }
     // ADR 007: stored-baseline regression gate for serve_hotpath.
     if let Some(baseline) = args.opt("baseline") {

@@ -74,6 +74,15 @@ pub struct DecodeParams {
     /// ADR 006: per-window forecast drift; `None` = use
     /// [`super::moe::DEFAULT_FORECAST_DRIFT`].
     pub forecast_drift: Option<f64>,
+    /// ADR 010: micro-batch wavefront depth (see
+    /// [`super::moe::MoeParams::microbatch`]). 1 = serial.
+    pub microbatch: usize,
+    /// ADR 010: per-step leader router compute time available for hiding
+    /// under in-flight FFN micro-batches (0 = none).
+    pub router_compute_s: f64,
+    /// ADR 009: measured data-plane copy bytes per token (see
+    /// [`super::moe::MoeParams::copied_bytes_per_token`]). 0 = unmeasured.
+    pub copied_bytes_per_token: f64,
 }
 
 impl DecodeParams {
@@ -92,6 +101,9 @@ impl DecodeParams {
             memory_cap_bytes: None,
             forecast_horizon: 0,
             forecast_drift: None,
+            microbatch: 1,
+            router_compute_s: 0.0,
+            copied_bytes_per_token: 0.0,
         }
     }
 }
@@ -234,6 +246,21 @@ pub fn decode_moe_cost(model: &ModelConfig, system: &SystemSpec, p: &DecodeParam
         p.memory_cap_bytes,
         !matches!(p.strategy, Strategy::NoPrediction),
     );
+    // ADR 010: the wavefront hides routing for micro-batches 2..K under
+    // the previous micro-batch's FFN slice, for every strategy (see
+    // `moe::moe_cost` — same split rule on the decode step's FFN window).
+    if p.microbatch > 1 && p.router_compute_s > 0.0 {
+        let k = p.microbatch as f64;
+        let hidden_per = (p.router_compute_s / k).min(cost.ffn_s / k);
+        cost.router_hidden_s = hidden_per * (k - 1.0);
+        cost.hidden_s += cost.router_hidden_s;
+    }
+    // ADR 009 follow-up: measured host copy traffic priced at HBM
+    // bandwidth — strategy-independent (one decode row per sequence).
+    if p.copied_bytes_per_token > 0.0 {
+        cost.host_copy_s =
+            p.batch as f64 * p.copied_bytes_per_token / (system.device.mem_bw_gbs * 1e9);
+    }
     cost
 }
 
@@ -327,6 +354,10 @@ pub struct DecodeSim {
     pub forecast_horizon: usize,
     /// Per-window forecast drift override (ADR 006); `None` = default.
     pub forecast_drift: Option<f64>,
+    /// Price the micro-batch wavefront at this depth (ADR 010; 1 = serial).
+    pub microbatch: usize,
+    /// Measured data-plane copy bytes per token (ADR 009; 0 = unmeasured).
+    pub copied_bytes_per_token: f64,
 }
 
 impl DecodeSim {
@@ -346,6 +377,8 @@ impl DecodeSim {
             memory_cap_bytes: None,
             forecast_horizon: 0,
             forecast_drift: None,
+            microbatch: 1,
+            copied_bytes_per_token: 0.0,
         }
     }
 
@@ -375,6 +408,19 @@ impl DecodeSim {
     pub fn with_horizon(mut self, h: usize, drift: Option<f64>) -> DecodeSim {
         self.forecast_horizon = h;
         self.forecast_drift = drift;
+        self
+    }
+
+    /// Price the micro-batch wavefront at depth `k` (ADR 010; 0/1 =
+    /// serial — no routing hides).
+    pub fn with_microbatch(mut self, k: usize) -> DecodeSim {
+        self.microbatch = k.max(1);
+        self
+    }
+
+    /// Price the measured data-plane copy traffic (ADR 009 follow-up).
+    pub fn with_copied_bytes(mut self, bytes: f64) -> DecodeSim {
+        self.copied_bytes_per_token = bytes.max(0.0);
         self
     }
 
@@ -412,6 +458,9 @@ impl DecodeSim {
         p.memory_cap_bytes = self.memory_cap_bytes;
         p.forecast_horizon = self.forecast_horizon;
         p.forecast_drift = self.forecast_drift;
+        p.microbatch = self.microbatch;
+        p.router_compute_s = self.router_time();
+        p.copied_bytes_per_token = self.copied_bytes_per_token;
         decode_moe_cost(&self.model, &self.system, &p)
     }
 
@@ -425,13 +474,15 @@ impl DecodeSim {
         LayerBreakdown {
             attention_s: attn.compute(),
             allreduce_s: attn.allreduce_s,
-            router_s: self.router_time(),
+            // ADR 010: charge only the routing the wavefront left exposed.
+            router_s: (self.router_time() - moe.router_hidden_s).max(0.0),
             ffn_s: moe.ffn_s,
             scatter_s: moe.scatter_s,
             gather_s: moe.gather_s,
             overhead_s: moe.overhead_s,
             movement_s: moe.movement_s,
             hidden_s: moe.hidden_s,
+            host_copy_s: moe.host_copy_s,
         }
     }
 
@@ -688,6 +739,31 @@ mod tests {
         let free = DecodeSim::new(m, s);
         let strategy = Strategy::DistributionOnly { error_rate: 0.02 };
         assert!(capped.step_total(2.0, strategy) > free.step_total(2.0, strategy));
+    }
+
+    #[test]
+    fn decode_microbatch_and_copied_bytes_builders_price_the_step() {
+        let (m, s) = mixtral_nvlink();
+        let strategy = Strategy::NoPrediction;
+        let serial = DecodeSim::new(m.clone(), s.clone());
+        let wave = DecodeSim::new(m.clone(), s.clone()).with_microbatch(4);
+        // K=1 is an exact no-op; K=4 hides part of the per-step routing.
+        assert_eq!(
+            serial.step_total(2.0, strategy),
+            DecodeSim::new(m.clone(), s.clone())
+                .with_microbatch(1)
+                .step_total(2.0, strategy)
+        );
+        let sb = serial.step_breakdown(2.0, strategy);
+        let wb = wave.step_breakdown(2.0, strategy);
+        assert!(wb.router_s < sb.router_s);
+        assert_eq!(wb.ffn_s, sb.ffn_s);
+        assert!(wave.step_total(2.0, strategy) < serial.step_total(2.0, strategy));
+        // Measured copy traffic adds a host term, identically per strategy.
+        let priced = DecodeSim::new(m, s).with_copied_bytes(4096.0 * 4.0);
+        let pb = priced.step_breakdown(2.0, strategy);
+        assert!(pb.host_copy_s > 0.0);
+        assert!((pb.total() - sb.total() - pb.host_copy_s).abs() < 1e-15);
     }
 
     #[test]

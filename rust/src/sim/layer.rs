@@ -29,6 +29,9 @@ pub struct LayerBreakdown {
     pub overhead_s: f64,
     pub movement_s: f64,
     pub hidden_s: f64,
+    /// Host-memory time for the measured data-plane copy traffic
+    /// (ADR 009 — [`MoeParams::copied_bytes_per_token`]).
+    pub host_copy_s: f64,
 }
 
 impl LayerBreakdown {
@@ -41,6 +44,7 @@ impl LayerBreakdown {
             + self.gather_s
             + self.overhead_s
             + self.movement_s
+            + self.host_copy_s
     }
 
     /// Total communication (all-reduce + both all-to-alls).
@@ -59,6 +63,7 @@ impl LayerBreakdown {
             .set("overhead_s", Value::Num(self.overhead_s))
             .set("movement_s", Value::Num(self.movement_s))
             .set("hidden_s", Value::Num(self.hidden_s))
+            .set("host_copy_s", Value::Num(self.host_copy_s))
             .set("total_s", Value::Num(self.total()));
         v
     }
@@ -86,6 +91,11 @@ pub struct LayerSim {
     /// ADR 006: per-window forecast drift; `None` = the default constant
     /// (see [`MoeParams::forecast_drift`]).
     pub forecast_drift: Option<f64>,
+    /// ADR 010: micro-batch wavefront depth (1 = serial). Leader routing
+    /// for micro-batches 2..K hides under the in-flight FFN window.
+    pub microbatch: usize,
+    /// ADR 009: measured data-plane copy bytes per token (0 = unmeasured).
+    pub copied_bytes_per_token: f64,
 }
 
 impl LayerSim {
@@ -103,6 +113,8 @@ impl LayerSim {
             memory_cap_bytes: None,
             forecast_horizon: 0,
             forecast_drift: None,
+            microbatch: 1,
+            copied_bytes_per_token: 0.0,
         }
     }
 
@@ -134,6 +146,20 @@ impl LayerSim {
     pub fn with_horizon(mut self, h: usize, drift: Option<f64>) -> LayerSim {
         self.forecast_horizon = h;
         self.forecast_drift = drift;
+        self
+    }
+
+    /// Price the micro-batch wavefront at depth `k` (ADR 010; 0/1 =
+    /// serial — no routing hides).
+    pub fn with_microbatch(mut self, k: usize) -> LayerSim {
+        self.microbatch = k.max(1);
+        self
+    }
+
+    /// Price the measured data-plane copy traffic (ADR 009 follow-up):
+    /// `bytes` of host copies per token, charged at HBM bandwidth.
+    pub fn with_copied_bytes(mut self, bytes: f64) -> LayerSim {
+        self.copied_bytes_per_token = bytes.max(0.0);
         self
     }
 
@@ -172,6 +198,9 @@ impl LayerSim {
         p.memory_cap_bytes = self.memory_cap_bytes;
         p.forecast_horizon = self.forecast_horizon;
         p.forecast_drift = self.forecast_drift;
+        p.microbatch = self.microbatch;
+        p.router_compute_s = self.router_time();
+        p.copied_bytes_per_token = self.copied_bytes_per_token;
         moe::moe_cost(&self.model, &self.system, &p)
     }
 
@@ -182,13 +211,16 @@ impl LayerSim {
         LayerBreakdown {
             attention_s: attn.compute(),
             allreduce_s: attn.allreduce_s,
-            router_s: self.router_time(),
+            // ADR 010: the wavefront hides part of the leader's routing
+            // under in-flight FFN micro-batches; charge only the residue.
+            router_s: (self.router_time() - moe.router_hidden_s).max(0.0),
             ffn_s: moe.ffn_s,
             scatter_s: moe.scatter_s,
             gather_s: moe.gather_s,
             overhead_s: moe.overhead_s,
             movement_s: moe.movement_s,
             hidden_s: moe.hidden_s,
+            host_copy_s: moe.host_copy_s,
         }
     }
 
@@ -315,6 +347,42 @@ mod tests {
         assert!(reactive.movement_s > proactive.movement_s);
         // …but runs on a 4-windows-stale distribution.
         assert!(proactive.ffn_s > reactive.ffn_s);
+    }
+
+    #[test]
+    fn microbatch_builder_shrinks_exposed_router_time() {
+        // ADR 010: hidden routing leaves the router_s charge, never the
+        // FFN or comm terms, and the total shrinks accordingly. K=1 is an
+        // exact no-op.
+        let serial = sim().breakdown(2.0, Strategy::NoPrediction);
+        let same = sim().with_microbatch(1).breakdown(2.0, Strategy::NoPrediction);
+        assert_eq!(serial.total(), same.total());
+        assert_eq!(serial.router_s, same.router_s);
+        let wave = sim().with_microbatch(4).breakdown(2.0, Strategy::NoPrediction);
+        assert!(wave.router_s < serial.router_s, "routing must partly hide");
+        assert!(wave.router_s >= 0.0);
+        assert_eq!(wave.ffn_s, serial.ffn_s);
+        assert_eq!(wave.scatter_s, serial.scatter_s);
+        assert!(wave.total() < serial.total());
+        // Conservation: exposed + hidden routing = the serial router time.
+        let hidden = wave.hidden_s - serial.hidden_s;
+        assert!((wave.router_s + hidden - serial.router_s).abs() < 1e-15);
+        // Deeper wavefronts hide monotonically more.
+        let deeper = sim().with_microbatch(8).breakdown(2.0, Strategy::NoPrediction);
+        assert!(deeper.router_s <= wave.router_s + 1e-18);
+    }
+
+    #[test]
+    fn copied_bytes_builder_adds_a_host_copy_term() {
+        let plain = sim().breakdown(2.0, Strategy::NoPrediction);
+        assert_eq!(plain.host_copy_s, 0.0);
+        let priced = sim()
+            .with_copied_bytes(4096.0 * 4.0)
+            .breakdown(2.0, Strategy::NoPrediction);
+        assert!(priced.host_copy_s > 0.0);
+        assert!((priced.total() - plain.total() - priced.host_copy_s).abs() < 1e-15);
+        let v = priced.to_json();
+        assert!((v.req_f64("host_copy_s").unwrap() - priced.host_copy_s).abs() < 1e-18);
     }
 
     #[test]

@@ -64,11 +64,23 @@ pub struct MoeCost {
     /// Movement + prediction time absorbed by the lookahead window
     /// (informational; never part of [`MoeCost::total`]).
     pub hidden_s: f64,
+    /// Leader routing time hidden under in-flight FFN micro-batches
+    /// (ADR 010; informational — the caller subtracts it from the
+    /// exposed router charge, so it is never part of [`MoeCost::total`]).
+    pub router_hidden_s: f64,
+    /// Host-memory time moving the measured data-plane copy traffic
+    /// (ADR 009: `copied_bytes_per_token` priced at HBM bandwidth).
+    pub host_copy_s: f64,
 }
 
 impl MoeCost {
     pub fn total(&self) -> f64 {
-        self.scatter_s + self.ffn_s + self.gather_s + self.overhead_s + self.movement_s
+        self.scatter_s
+            + self.ffn_s
+            + self.gather_s
+            + self.overhead_s
+            + self.movement_s
+            + self.host_copy_s
     }
 
     pub fn comm_s(&self) -> f64 {
@@ -139,6 +151,22 @@ pub struct MoeParams {
     /// distribution). `None` = use [`DEFAULT_FORECAST_DRIFT`]; the online
     /// calibrator substitutes the measured realized-forecast error.
     pub forecast_drift: Option<f64>,
+    /// ADR 010: micro-batch wavefront depth. With `K > 1` the layer's
+    /// slots split into K micro-batches: while micro-batch `m`'s FFN is
+    /// in flight the leader routes micro-batch `m+1`, so routing for
+    /// micro-batches 2..K hides under the FFN window — only the first
+    /// micro-batch's routing (1/K of `router_compute_s`) stays fully
+    /// exposed. 1 (default) = serial, the pre-ADR-010 model.
+    pub microbatch: usize,
+    /// ADR 010: the leader's per-layer router compute time available for
+    /// hiding (the caller passes its router model's output; 0 = none,
+    /// making `microbatch` inert).
+    pub router_compute_s: f64,
+    /// ADR 009: measured data-plane copy traffic in bytes per token
+    /// (`bytes_copied / tokens` from a serve report). Priced as a
+    /// host-memory-bandwidth charge identical for every strategy —
+    /// every strategy packs the same activation rows. 0 = not measured.
+    pub copied_bytes_per_token: f64,
 }
 
 /// ADR 006: default per-window forecast drift (L1 distance of expert-share
@@ -166,6 +194,9 @@ impl MoeParams {
             memory_cap_bytes: None,
             forecast_horizon: 0,
             forecast_drift: None,
+            microbatch: 1,
+            router_compute_s: 0.0,
+            copied_bytes_per_token: 0.0,
         }
     }
 }
@@ -331,6 +362,24 @@ pub fn moe_cost(model: &ModelConfig, system: &SystemSpec, p: &MoeParams) -> MoeC
         p.memory_cap_bytes,
         !matches!(p.strategy, Strategy::NoPrediction),
     );
+    // ADR 010: the wavefront pipelines routing against in-flight FFN
+    // micro-batches for every strategy. Each of the K−1 later micro-
+    // batches hides its routing slice (router/K) under the previous
+    // micro-batch's FFN slice (ffn/K) — the first micro-batch's routing
+    // is always exposed, and hiding is capped by the FFN window.
+    if p.microbatch > 1 && p.router_compute_s > 0.0 {
+        let k = p.microbatch as f64;
+        let hidden_per = (p.router_compute_s / k).min(cost.ffn_s / k);
+        cost.router_hidden_s = hidden_per * (k - 1.0);
+        cost.hidden_s += cost.router_hidden_s;
+    }
+    // ADR 009 follow-up: the measured host copy traffic (FFN slab gather)
+    // is the same activation bytes for every strategy — a flat host-HBM
+    // charge, so totals shift but savings differences do not.
+    if p.copied_bytes_per_token > 0.0 {
+        cost.host_copy_s =
+            tokens as f64 * p.copied_bytes_per_token / (system.device.mem_bw_gbs * 1e9);
+    }
     cost
 }
 
@@ -720,6 +769,62 @@ mod tests {
             p.forecast_drift = Some(0.1);
             assert_eq!(moe_cost(&m, &s, &p), plain, "{strategy:?}");
         }
+    }
+
+    #[test]
+    fn microbatch_hides_router_compute_under_the_ffn_window() {
+        let (m, s) = mixtral_nvlink();
+        let mut p = MoeParams::new(1, 512, 2.0, Strategy::NoPrediction);
+        p.router_compute_s = 1e-3;
+        // K = 1 (and a zero router window) are exact no-ops.
+        let serial = moe_cost(&m, &s, &p);
+        assert_eq!(serial.router_hidden_s, 0.0);
+        let mut inert = p;
+        inert.microbatch = 4;
+        inert.router_compute_s = 0.0;
+        assert_eq!(moe_cost(&m, &s, &inert).router_hidden_s, 0.0);
+        // Hiding is monotone in K with asymptote min(router, ffn):
+        // hidden(K) = (K−1)/K · min(r, f).
+        p.microbatch = 2;
+        let k2 = moe_cost(&m, &s, &p);
+        p.microbatch = 4;
+        let k4 = moe_cost(&m, &s, &p);
+        p.microbatch = 64;
+        let k64 = moe_cost(&m, &s, &p);
+        assert!(k2.router_hidden_s > 0.0);
+        assert!(k4.router_hidden_s > k2.router_hidden_s);
+        assert!(k64.router_hidden_s > k4.router_hidden_s);
+        let cap = p.router_compute_s.min(k64.ffn_s);
+        assert!(k64.router_hidden_s <= cap + 1e-15);
+        assert!((k2.router_hidden_s - 0.5 * p.router_compute_s.min(k2.ffn_s)).abs() < 1e-15);
+        // Informational: the hidden routing never enters the MoE total —
+        // the caller subtracts it from its exposed router charge.
+        assert_eq!(k4.total(), serial.total());
+        assert!((k4.hidden_s - serial.hidden_s - k4.router_hidden_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn copied_bytes_charge_host_bandwidth_uniformly() {
+        let (m, s) = mixtral_nvlink();
+        let per_token = m.d_model as f64 * 4.0;
+        let mut totals = Vec::new();
+        for strategy in [
+            Strategy::NoPrediction,
+            Strategy::DistributionOnly { error_rate: 0.02 },
+            Strategy::TokenToExpert { accuracy: 0.9, overhead_s: 1e-4 },
+        ] {
+            let mut p = MoeParams::new(1, 512, 2.0, strategy);
+            let plain = moe_cost(&m, &s, &p);
+            assert_eq!(plain.host_copy_s, 0.0, "unmeasured plane: no charge");
+            p.copied_bytes_per_token = per_token;
+            let priced = moe_cost(&m, &s, &p);
+            let expect = 512.0 * per_token / (s.device.mem_bw_gbs * 1e9);
+            assert!((priced.host_copy_s - expect).abs() < 1e-18, "{strategy:?}");
+            assert!((priced.total() - plain.total() - expect).abs() < 1e-15);
+            totals.push(priced.host_copy_s);
+        }
+        // Strategy-independent: every strategy pays the identical charge.
+        assert!(totals.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-18));
     }
 
     #[test]

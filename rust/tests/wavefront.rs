@@ -1,0 +1,279 @@
+//! ADR 010 micro-batch wavefront pipelining, end to end. The acceptance
+//! claims pinned here:
+//!
+//! * serving with `--microbatch K` is **bitwise identical** to serial
+//!   serving for K ∈ {1, 2, 4}, across prefill rounds and greedy decode —
+//!   the per-layer combine accumulates in global slot order regardless of
+//!   how the wavefront chunks the slot set;
+//! * K = 1 is literally the pre-ADR-010 path: the coalesced-dispatch and
+//!   copy-accounting pins from the data-plane suite hold unchanged
+//!   (`ffn_messages == layers × workers`, `bytes_copied == slots × d × 4`);
+//! * at K > 1 the slab-gather accounting stays exact (the wavefront adds
+//!   zero copied bytes) while dispatch grows at most K-fold;
+//! * a worker killed mid-wave fails over **bitwise identically**, each
+//!   micro-batch slab counting as one op on the fault clock;
+//! * the wavefront measurably cuts the workers' idle fraction vs serial
+//!   on the same trace — the throughput mechanism the regime exists for.
+
+mod common;
+use common::{
+    assert_bitwise_eq, decode_fingerprint, decode_requests, greedy_decode_opts, mk_rounds,
+    small_source,
+};
+use moe_gps::coordinator::pipeline::microbatch_ranges;
+use moe_gps::coordinator::request::Request;
+use moe_gps::coordinator::{
+    Coordinator, FaultPlan, RoundMetrics, ServeReport, ServeStrategy, WavefrontStats,
+};
+use moe_gps::runtime::{HostTensor, SyntheticSpec};
+
+fn d_model() -> usize {
+    SyntheticSpec::small_test().d_model
+}
+
+fn n_layers() -> usize {
+    SyntheticSpec::small_test().n_layers
+}
+
+/// Drive prefill rounds at a given wavefront depth, with optional fault
+/// injection.
+fn serve_prefill(
+    strategy: ServeStrategy,
+    workers: usize,
+    microbatch: usize,
+    faults: Option<&str>,
+    timeout_s: Option<f64>,
+    rounds: Vec<Vec<Request>>,
+) -> (Vec<Vec<HostTensor>>, Vec<RoundMetrics>) {
+    let mut coord = Coordinator::with_source(&small_source(), workers, strategy).unwrap();
+    coord.microbatch = microbatch;
+    if let Some(spec) = faults {
+        coord.set_fault_plan(&FaultPlan::parse(spec).unwrap());
+    }
+    coord.set_worker_timeout(timeout_s);
+    let mut outputs = Vec::new();
+    let mut metrics = Vec::new();
+    for round in rounds {
+        let (m, out) = coord.serve_round(&round).unwrap();
+        outputs.push(out);
+        metrics.push(m);
+    }
+    (outputs, metrics)
+}
+
+/// Aggregate per-round wavefront counters the way a serve report does.
+fn wavefront_stats(rounds: &[RoundMetrics]) -> WavefrontStats {
+    ServeReport {
+        rounds: rounds.to_vec(),
+        ..Default::default()
+    }
+    .wavefront_stats()
+}
+
+/// Every copied byte on the prefill path is the FFN slab gather — at any
+/// wavefront depth (chunk gathers partition the slot set exactly).
+fn exact_slab_bytes(m: &RoundMetrics) -> u64 {
+    ((m.n_slots + m.redispatched_slots) * d_model() * 4) as u64
+}
+
+#[test]
+fn microbatch_split_is_deterministic_and_contiguous() {
+    for n in [1usize, 2, 3, 7, 16, 33] {
+        for k in [1usize, 2, 4, 5, 64] {
+            let ranges = microbatch_ranges(n, k);
+            // Contiguous cover of 0..n in order, no empty chunks.
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} k={k}: contiguous");
+                assert!(r.end > r.start, "n={n} k={k}: no empty chunk");
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} k={k}: covers the slot set");
+            assert_eq!(ranges.len(), k.min(n).max(1), "n={n} k={k}: chunk count");
+        }
+    }
+}
+
+#[test]
+fn wavefront_prefill_is_bitwise_identical_across_depths() {
+    let serial = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        2,
+        1,
+        None,
+        None,
+        mk_rounds(71, 3, 6),
+    );
+    for k in [2usize, 4] {
+        let wave = serve_prefill(
+            ServeStrategy::DistributionOnly,
+            2,
+            k,
+            None,
+            None,
+            mk_rounds(71, 3, 6),
+        );
+        assert_bitwise_eq(&serial.0, &wave.0, &format!("wavefront K={k} vs serial"));
+        for (i, (sm, wm)) in serial.1.iter().zip(&wave.1).enumerate() {
+            assert_eq!(sm.n_slots, wm.n_slots, "K={k} round {i}: identical routing");
+            // The wavefront re-chunks dispatch but never re-copies: every
+            // copied byte is still the slab gather, exactly.
+            assert_eq!(
+                wm.bytes_copied,
+                exact_slab_bytes(wm),
+                "K={k} round {i}: chunk gathers partition the slot set"
+            );
+            assert_eq!(sm.bytes_copied, wm.bytes_copied, "K={k} round {i}");
+            // Dispatch grows at most K-fold (one batch per chunk × layer ×
+            // assigned worker) and never shrinks below the serial floor.
+            assert!(
+                wm.ffn_messages >= sm.ffn_messages
+                    && wm.ffn_messages <= sm.ffn_messages * k as u64,
+                "K={k} round {i}: {} messages vs serial {}",
+                wm.ffn_messages,
+                sm.ffn_messages
+            );
+        }
+    }
+}
+
+#[test]
+fn microbatch_one_is_the_serial_path_with_its_exact_pins() {
+    let workers = 2;
+    let (_, metrics) = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        workers,
+        1,
+        None,
+        None,
+        mk_rounds(101, 3, 6),
+    );
+    // The same pins the data-plane suite holds on the pre-ADR-010 path:
+    // K = 1 must not change a single counter.
+    for (i, m) in metrics.iter().enumerate() {
+        assert_eq!(
+            m.ffn_messages,
+            (n_layers() * workers) as u64,
+            "round {i}: K=1 keeps one coalesced batch per (layer, worker)"
+        );
+        assert_eq!(m.redispatched_slots, 0, "round {i}: healthy run");
+        assert_eq!(
+            m.bytes_copied,
+            exact_slab_bytes(m),
+            "round {i}: K=1 copies exactly the slab gather"
+        );
+    }
+}
+
+#[test]
+fn wavefront_decode_trajectory_matches_serial() {
+    let run = |k: usize| {
+        let mut coord =
+            Coordinator::with_source(&small_source(), 2, ServeStrategy::DistributionOnly)
+                .unwrap();
+        coord.microbatch = k;
+        let requests = decode_requests(23, coord.vocab(), 4, 4, 6);
+        coord.serve_decode(requests, &greedy_decode_opts(4, 24, 23)).unwrap()
+    };
+    let serial = run(1);
+    for k in [2usize, 4] {
+        let wave = run(k);
+        // Greedy decode feeds every sampled token back into later steps,
+        // so fingerprint equality pins the numerics of the whole run.
+        assert_eq!(
+            decode_fingerprint(&serial),
+            decode_fingerprint(&wave),
+            "decode wavefront K={k} must not perturb the trajectory"
+        );
+        assert_eq!(
+            serial.tokens_per_s.is_finite(),
+            wave.tokens_per_s.is_finite(),
+            "K={k}"
+        );
+    }
+}
+
+#[test]
+fn wavefront_fails_over_bitwise_under_a_mid_wave_kill() {
+    let healthy = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        1,
+        None,
+        None,
+        mk_rounds(53, 4, 4),
+    );
+    // Worker 1 dies on its third op — mid-wave at K=4, with other chunks'
+    // slabs still in flight. Each micro-batch slab is one countable op,
+    // its slots regroup onto survivors and re-gather exactly once.
+    let faulted = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        4,
+        Some("kill:1@3"),
+        Some(0.25),
+        mk_rounds(53, 4, 4),
+    );
+    assert_bitwise_eq(&healthy.0, &faulted.0, "mid-wave failover");
+    let deaths: usize = faulted.1.iter().map(|m| m.worker_deaths).sum();
+    assert_eq!(deaths, 1, "exactly one injected death");
+    let redispatched: usize = faulted.1.iter().map(|m| m.redispatched_slots).sum();
+    assert!(redispatched > 0, "the dead worker's chunk slots redispatch");
+    for (i, m) in faulted.1.iter().enumerate() {
+        assert_eq!(
+            m.bytes_copied,
+            exact_slab_bytes(m),
+            "round {i}: failover under the wavefront re-gathers each \
+             redispatched slot once (n_slots={} redispatched={})",
+            m.n_slots,
+            m.redispatched_slots
+        );
+    }
+}
+
+#[test]
+fn wavefront_cuts_the_worker_idle_fraction() {
+    // Same trace, same fleet — only the wavefront depth differs. Serial
+    // serving leaves the workers idle while the leader routes and
+    // combines; at K=4 those stalls overlap in-flight FFN slabs. This is
+    // a wall-clock claim, so it aggregates over enough rounds for the
+    // idle gap to dominate scheduler noise.
+    let serial = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        1,
+        None,
+        None,
+        mk_rounds(97, 6, 10),
+    );
+    let wave = serve_prefill(
+        ServeStrategy::DistributionOnly,
+        4,
+        4,
+        None,
+        None,
+        mk_rounds(97, 6, 10),
+    );
+    assert_bitwise_eq(&serial.0, &wave.0, "idle-fraction trace");
+    let s = wavefront_stats(&serial.1);
+    let w = wavefront_stats(&wave.1);
+    assert!(
+        serial.1.iter().all(|m| m.wavefront_window_s > 0.0),
+        "serial rounds record the router→combine window too"
+    );
+    assert!(
+        s.worker_idle_frac > 0.0,
+        "serial serving must leave idle time to reclaim: {s:?}"
+    );
+    assert!(
+        w.worker_idle_frac < s.worker_idle_frac,
+        "K=4 must keep workers busier than serial: wavefront {:.4} vs \
+         serial {:.4}",
+        w.worker_idle_frac,
+        s.worker_idle_frac
+    );
+    assert!(
+        serial.1.iter().chain(&wave.1).all(|m| m.tile_peak > 0),
+        "both regimes account their peak outstanding tiles"
+    );
+}
